@@ -1,0 +1,77 @@
+//! Capacity planner: the recommender + cost models as a downstream user
+//! would drive them (paper §4.2.1 "configuration recommender" + §3.1
+//! Cost) — for each registered model and target SLO/rate, print the top-3
+//! configurations with latency, throughput and cloud cost.
+//!
+//! Run with: `cargo run --release --example capacity_planner`
+
+use inferbench::analysis::recommend;
+use inferbench::hardware::{energy, find, roofline, Parallelism};
+use inferbench::models::catalog::{self, Task};
+use inferbench::util::render;
+
+fn parallelism(task: Task) -> Parallelism {
+    match task {
+        Task::IC | Task::OD | Task::GAN => Parallelism::cnn(28),
+        Task::NLP => Parallelism::sequence(128),
+        Task::TC => Parallelism::sequence(64),
+    }
+}
+
+fn main() {
+    // Planning scenarios: (model, latency SLO ms, expected rate rps).
+    let scenarios = [
+        ("resnet50", 50.0, 200.0),
+        ("mobilenet_v1", 20.0, 500.0),
+        ("bert_large", 100.0, 60.0),
+        ("textlstm", 30.0, 300.0),
+    ];
+
+    for (model_name, slo_ms, rate) in scenarios {
+        let model = catalog::find(model_name).unwrap();
+        let par = parallelism(model.task);
+        let rec = recommend(model, par, slo_ms / 1e3, rate, 3);
+        println!(
+            "\n=== {model_name} — SLO {slo_ms} ms, {rate:.0} rps ({} configs considered) ===",
+            rec.considered
+        );
+        if rec.top.is_empty() {
+            println!("  no configuration meets this SLO at this rate — scale out or relax");
+            continue;
+        }
+        let rows: Vec<Vec<String>> = rec
+            .top
+            .iter()
+            .map(|c| {
+                let est = roofline::estimate(c.platform, &model.profile, par, c.batch, model.request_bytes);
+                let e = energy::energy(c.platform, &est, c.batch);
+                vec![
+                    c.platform.id.to_string(),
+                    c.software.id.to_string(),
+                    c.batch.to_string(),
+                    render::fmt_duration(c.latency_s),
+                    format!("{:.0}", c.throughput_rps),
+                    c.cost_per_1k_usd.map(|v| format!("${v:.4}")).unwrap_or("-".into()),
+                    format!("{:.2} J", e.joules_per_request),
+                    format!("{:.2} mg", e.co2_g_per_request * 1e3),
+                ]
+            })
+            .collect();
+        print!(
+            "{}",
+            render::table(
+                &["Platform", "Software", "Batch", "Latency", "Max RPS", "$/1k", "Energy/req", "CO2/req"],
+                &rows
+            )
+        );
+    }
+
+    // Sanity panel: what the SLO check protects against — batch-128 V100.
+    let rn = catalog::find("resnet50").unwrap();
+    let v100 = find("G1").unwrap();
+    let big = roofline::estimate(v100, &rn.profile, Parallelism::cnn(28), 128, rn.request_bytes);
+    println!(
+        "\n(For contrast: resnet50 batch-128 on V100 = {} per batch — great throughput, dead SLO.)",
+        render::fmt_duration(big.total_s)
+    );
+}

@@ -1,0 +1,78 @@
+//! End-to-end validation driver (DESIGN.md §6, EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real workload: the Pallas kernels
+//! (L1) lowered inside the JAX models (L2) are AOT-compiled to HLO text,
+//! loaded by the rust PJRT runtime, and served by the live engine (L3) —
+//! request generator -> dynamic batcher -> real XLA execution on CPU —
+//! under Poisson load, reporting latency percentiles and throughput.
+//!
+//! Requires artifacts: `make artifacts` first. Run:
+//!   `cargo run --release --example e2e_serving`
+
+use inferbench::serving::live::{run_load, LiveConfig, LiveServer};
+use inferbench::serving::Policy;
+use inferbench::util::render;
+
+fn serve_one(stem: &str, rate: f64, duration: f64, max_batch: usize) -> anyhow::Result<Vec<String>> {
+    eprintln!("== {stem}: loading artifacts (XLA compile + param upload)...");
+    let server = LiveServer::start(LiveConfig {
+        artifact_dir: "artifacts".into(),
+        model_stem: stem.into(),
+        policy: Policy::Dynamic { max_size: max_batch, max_wait_s: 0.004 },
+        seed: 0,
+    })?;
+    let coldstart: f64 = server.info.variants.iter().map(|(_, t)| t).sum();
+    eprintln!(
+        "   cold start (compile all variants): {}",
+        render::fmt_duration(coldstart)
+    );
+    // Warm the executor, then measure under load.
+    let _ = run_load(&server, rate.min(10.0), 1.0, 1)?;
+    let mut report = run_load(&server, rate, duration, 42)?;
+    let row = vec![
+        stem.to_string(),
+        format!("{rate:.0}"),
+        report.completed.to_string(),
+        format!("{:.1}", report.throughput_rps()),
+        render::fmt_duration(report.e2e.percentile(50.0)),
+        render::fmt_duration(report.e2e.percentile(95.0)),
+        render::fmt_duration(report.e2e.percentile(99.0)),
+        format!("{:.2}", report.batch_sizes.mean()),
+        render::fmt_duration(coldstart),
+    ];
+    server.shutdown()?;
+    Ok(row)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("InferBench e2e: live CPU serving of AOT-compiled Pallas/JAX models\n");
+    let mut rows = Vec::new();
+    // (model stem, offered rate rps, duration s, max dynamic batch)
+    // Rates chosen near each model's measured single-core capacity so the
+    // dynamic batcher actually forms batches.
+    for (stem, rate, dur, mb) in [
+        ("mlp_d8_w512", 60.0, 15.0, 8),
+        ("resnet_mini", 8.0, 15.0, 4),
+        ("bert_mini", 8.0, 15.0, 4),
+        ("cnn_d4_c32", 12.0, 15.0, 4),
+        ("lstm_mini", 15.0, 15.0, 8),
+    ] {
+        match serve_one(stem, rate, dur, mb) {
+            Ok(row) => rows.push(row),
+            Err(e) => {
+                eprintln!("   {stem} FAILED: {e:#}");
+                rows.push(vec![stem.into(), "-".into(), "FAILED".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            }
+        }
+    }
+    println!("\nE2E serving results (real XLA execution, Poisson open-loop load):");
+    print!(
+        "{}",
+        render::table(
+            &["Model", "Rate", "Done", "RPS", "p50", "p95", "p99", "Mean batch", "Coldstart"],
+            &rows
+        )
+    );
+    println!("\nRecord these rows in EXPERIMENTS.md §E2E.");
+    Ok(())
+}

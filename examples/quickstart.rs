@@ -1,0 +1,84 @@
+//! Quickstart: submit a small benchmark campaign to an in-process
+//! InferBench cluster and read the results back — the "configuration
+//! file with a few lines of code" workflow from the paper's abstract.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use inferbench::coordinator::{JobSpec, Leader, LeaderConfig, SchedulerPolicy};
+use inferbench::perfdb::Query;
+use inferbench::util::render;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A benchmark submission is a few lines of YAML.
+    let submission = r#"
+name: resnet50-on-v100
+task: serving_sim
+model: resnet50
+platform: G1
+software: tfs
+workload:
+  rate: 60.0        # Poisson arrivals, requests/second
+  duration_s: 30
+batching:
+  max_size: 8
+  max_wait_ms: 5
+"#;
+
+    // 2. Start a leader with four follower workers (threads standing in
+    //    for the paper's follower servers) and the two-tier scheduler.
+    let leader = Leader::start(LeaderConfig {
+        workers: 4,
+        policy: SchedulerPolicy::qa_sjf(),
+        time_scale: 1.0,
+        seed: 7,
+    });
+
+    // 3. Submit the job plus a comparison grid over serving software.
+    let mut n = 0;
+    leader.submit(JobSpec::parse_yaml(submission)?)?;
+    n += 1;
+    for software in ["tris", "onnx", "torchscript"] {
+        let spec = submission
+            .replace("software: tfs", &format!("software: {software}"))
+            .replace("name: resnet50-on-v100", &format!("name: resnet50-{software}"));
+        leader.submit(JobSpec::parse_yaml(&spec)?)?;
+        n += 1;
+    }
+
+    // 4. Wait and report.
+    let done = leader.wait_for(n, std::time::Duration::from_secs(120))?;
+    println!("completed {} benchmark jobs:", done.len());
+    for c in &done {
+        println!(
+            "  {} on worker {}: waited {} ran {}",
+            c.name,
+            c.worker,
+            render::fmt_duration(c.waited_s),
+            render::fmt_duration(c.ran_s)
+        );
+    }
+
+    // 5. Query the PerfDB: which serving software wins on tail latency?
+    let db = leader.perfdb.lock().unwrap();
+    let rows: Vec<Vec<String>> = db
+        .leaderboard(&Query::default().task("serving_sim"), "p99_ms")
+        .iter()
+        .map(|r| {
+            vec![
+                r.software.clone(),
+                format!("{:.1}", r.metric("p50_ms").unwrap()),
+                format!("{:.1}", r.metric("p99_ms").unwrap()),
+                format!("{:.1}", r.metric("throughput_rps").unwrap()),
+                format!("{:.2}", r.metric("mean_batch").unwrap()),
+            ]
+        })
+        .collect();
+    println!("\nresnet50 @ 60 rps on V100 — serving software leaderboard (by p99):");
+    print!(
+        "{}",
+        render::table(&["Software", "p50 ms", "p99 ms", "Throughput", "Mean batch"], &rows)
+    );
+    drop(db);
+    leader.shutdown();
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""Analytic FLOPs / parameter / memory-traffic model for every family.
+
+These formulas are the single source of truth for the compute profile of
+the canonical models (paper §4.2.2). They are embedded into
+``artifacts/manifest.json`` by aot.py, and the rust side
+(``rust/src/models/analytic.rs``) mirrors them exactly — a pytest and a
+cargo test each assert the two implementations agree on the same configs.
+
+Conventions (all per *one* sample, f32):
+  * a matmul (K x N) costs ``2*K*N`` FLOPs;
+  * elementwise/bias/activation terms are included where they are not
+    negligible (LSTM gates, softmax);
+  * ``weight_bytes`` is read once per *batch*; ``act_bytes`` is the
+    activation read+write traffic per sample. Arithmetic intensity at
+    batch b is therefore ``flops*b / (weight_bytes + act_bytes*b)`` —
+    which is what makes batch sweep move models from memory- to
+    compute-bound on the Roofline (paper Fig 10b).
+"""
+
+from __future__ import annotations
+
+
+def mlp_profile(depth: int, width: int, in_dim: int = 256, classes: int = 16) -> dict:
+    flops = 2 * in_dim * width + depth * 2 * width * width + 2 * width * classes
+    params = (
+        in_dim * width + width
+        + depth * (width * width + width)
+        + width * classes + classes
+    )
+    # activations: input + hidden after each layer + logits, read+write.
+    act_elems = in_dim + (depth + 1) * width + classes
+    return {
+        "flops": flops,
+        "params": params,
+        "weight_bytes": params * 4,
+        "act_bytes": 2 * act_elems * 4,
+    }
+
+
+def cnn_profile(depth: int, channels: int, hw: int = 32, cin: int = 3, classes: int = 16) -> dict:
+    px = hw * hw
+    flops = (
+        2 * 9 * cin * channels * px               # stem conv
+        + depth * 2 * 9 * channels * channels * px  # residual blocks
+        + 2 * channels * classes                   # head
+    )
+    params = (
+        9 * cin * channels + channels
+        + depth * (9 * channels * channels + channels)
+        + channels * classes + classes
+    )
+    act_elems = px * cin + (depth + 1) * px * channels + channels + classes
+    return {
+        "flops": flops,
+        "params": params,
+        "weight_bytes": params * 4,
+        "act_bytes": 2 * act_elems * 4,
+    }
+
+
+def rnn_profile(depth: int, hidden: int, seq: int = 16, in_dim: int = 64, classes: int = 16) -> dict:
+    gates = 2 * (hidden * 4 * hidden) * 2  # x@Wx + h@Wh per step
+    flops = (
+        2 * in_dim * hidden * seq      # input projection per step
+        + depth * seq * gates          # LSTM cells
+        + depth * seq * 10 * hidden    # gate nonlinearities + state update
+        + 2 * hidden * classes         # head
+    )
+    params = (
+        in_dim * hidden + hidden
+        + depth * (hidden * 4 * hidden * 2 + 4 * hidden)
+        + hidden * classes + classes
+    )
+    act_elems = seq * in_dim + (depth + 1) * seq * hidden + classes
+    return {
+        "flops": flops,
+        "params": params,
+        "weight_bytes": params * 4,
+        "act_bytes": 2 * act_elems * 4,
+    }
+
+
+def transformer_profile(depth: int, d_model: int, heads: int, seq: int = 64, classes: int = 16) -> dict:
+    d = d_model
+    per_layer = (
+        8 * seq * d * d        # q,k,v,o projections
+        + 4 * seq * seq * d    # QK^T and PV contractions
+        + 5 * seq * seq        # softmax (exp, sum, div, max, sub)
+        + 16 * seq * d * d     # FFN (d -> 4d -> d)
+    )
+    flops = depth * per_layer + 2 * d * classes
+    params = depth * (4 * d * d + d * 4 * d + 4 * d + 4 * d * d + d + 4 * d) + d * classes + classes
+    act_elems = seq * d * (4 * depth + 1) + depth * heads * seq * seq + classes
+    return {
+        "flops": flops,
+        "params": params,
+        "weight_bytes": params * 4,
+        "act_bytes": 2 * act_elems * 4,
+    }
+
+
+def profile_for(family: str, hp: dict) -> dict:
+    """Dispatch on family name; hp holds the hyper-parameters."""
+    if family == "mlp":
+        return mlp_profile(hp["depth"], hp["width"], hp.get("in_dim", 256), hp.get("classes", 16))
+    if family == "cnn":
+        return cnn_profile(hp["depth"], hp["channels"], hp.get("hw", 32), hp.get("cin", 3), hp.get("classes", 16))
+    if family == "rnn":
+        return rnn_profile(hp["depth"], hp["hidden"], hp.get("seq", 16), hp.get("in_dim", 64), hp.get("classes", 16))
+    if family == "transformer":
+        return transformer_profile(hp["depth"], hp["d_model"], hp["heads"], hp.get("seq", 64), hp.get("classes", 16))
+    raise ValueError(f"unknown family {family!r}")

@@ -1,0 +1,123 @@
+"""AOT lowering: JAX models -> artifacts/*.hlo.txt + manifest.json.
+
+This is the only place python runs — once, at build time (`make
+artifacts`). Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+The manifest records, for every artifact: the family + hyper-parameters,
+the exact ordered input specs (params then x) the rust runtime must feed,
+the output shape, and the analytic compute profile (FLOPs / params /
+weight & activation bytes) that drives the hardware roofline models.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import analytic, model
+
+DTYPES = {"f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(family: str, hp: dict) -> tuple[str, dict]:
+    """Lower one (family, hyper-params) config; returns (hlo_text, manifest entry)."""
+    fn, param_specs, x_spec = model.build(family, hp)
+    specs = [jax.ShapeDtypeStruct(s.shape, DTYPES[s.dtype]) for s in param_specs]
+    x = jax.ShapeDtypeStruct(x_spec.shape, DTYPES[x_spec.dtype])
+    lowered = jax.jit(fn).lower(tuple(specs), x)
+    hlo = to_hlo_text(lowered)
+
+    profile = analytic.profile_for(family, hp)
+    classes = hp.get("classes", 16)
+    entry = {
+        "family": family,
+        "hyperparams": hp,
+        "inputs": [
+            {"name": s.name, "shape": list(s.shape), "dtype": s.dtype}
+            for s in (*param_specs, x_spec)
+        ],
+        "output": {"shape": [hp["batch"], classes], "dtype": "f32"},
+        "flops_per_sample": profile["flops"],
+        "params": profile["params"],
+        "weight_bytes": profile["weight_bytes"],
+        "act_bytes_per_sample": profile["act_bytes"],
+    }
+    return hlo, entry
+
+
+def variant_name(family: str, hp: dict) -> str:
+    keys = [k for k in ("depth", "width", "channels", "hidden", "d_model", "heads", "seq") if k in hp]
+    parts = [family] + [f"{k[0]}{hp[k]}" for k in keys] + [f"b{hp['batch']}"]
+    return "_".join(parts)
+
+
+def default_variants() -> list[tuple[str, str, dict]]:
+    """(artifact name, family, hyper-params) for the default `make artifacts` set.
+
+    Kept modest (compile time): the serving benches execute the real-world
+    stand-ins on CPU at a few batch sizes; GPU-platform curves come from
+    the calibrated roofline model, which needs only the manifest profiles.
+    """
+    out = []
+    for name, (family, hp0) in model.REAL_WORLD.items():
+        for batch in (1, 4, 8):
+            hp = dict(hp0, batch=batch)
+            out.append((f"{name}_b{batch}", family, hp))
+    # One canonical per family for runtime integration tests + Fig 9 anchors.
+    canon = [
+        ("mlp", {"depth": 8, "width": 512}),
+        ("cnn", {"depth": 4, "channels": 32, "hw": 16}),
+        ("rnn", {"depth": 2, "hidden": 128, "seq": 16}),
+        ("transformer", {"depth": 2, "d_model": 128, "heads": 4, "seq": 64}),
+    ]
+    for family, hp0 in canon:
+        for batch in (1, 8):
+            hp = dict(hp0, batch=batch)
+            out.append((variant_name(family, hp), family, hp))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, family, hp in default_variants():
+        if args.only and args.only not in name:
+            continue
+        hlo, entry = lower_variant(family, hp)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        entry["hlo_file"] = f"{name}.hlo.txt"
+        manifest[name] = entry
+        print(f"  lowered {name}: {len(hlo)} chars, {entry['params']} params")
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the InferBench canonical model families.
+
+One kernel per canonical block from the paper (§4.2.2 Canonical Model
+Generator): FC -> matmul_block, Transformer -> attention, RNN -> lstm_cell,
+CNN residual block -> conv_block. All lowered with interpret=True so the
+HLO runs on the CPU PJRT client that the rust runtime drives.
+"""
+
+from .attention import attention
+from .conv_block import conv_block, conv_in, im2col
+from .lstm_cell import lstm_cell
+from .matmul_block import linear
+
+__all__ = ["attention", "conv_block", "conv_in", "im2col", "linear", "lstm_cell"]

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: fused multi-head self-attention (Transformer block).
+
+The paper's Transformer canonical family stacks attention blocks; this
+kernel fuses QK^T, the numerically-stable softmax, and the PV contraction
+for one (batch, head) pair per grid step, so the S x S score matrix lives
+only in VMEM and never round-trips to HBM — the TPU re-thinking of what a
+CUDA flash-attention kernel does with shared-memory tiles per threadblock.
+
+Sequence lengths in the canonical families are small enough (<= 512) that a
+whole head fits in VMEM; `common.block_bytes` asserts that at trace time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import VMEM_BUDGET, block_bytes
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool):
+    # Block is (1, 1, S, Dh): one head of one batch element.
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        seq = q.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+        s = jnp.where(col <= row, s, -1e30)
+    # Numerically stable softmax over the key axis.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def attention(q, k, v, *, causal: bool = False, interpret: bool = True):
+    """Fused softmax(q k^T / sqrt(d)) v per head.
+
+    Args:
+      q, k, v: ``(B, H, S, Dh)`` f32.
+      causal: apply a causal mask (decoder-style families).
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``(B, H, S, Dh)`` f32 attention output.
+    """
+    b, h, s, dh = q.shape
+    assert k.shape == (b, h, s, dh) and v.shape == (b, h, s, dh)
+    assert (
+        block_bytes((s, dh), (s, dh), (s, dh), (s, s), (s, dh)) < VMEM_BUDGET
+    ), "attention head does not fit in VMEM; shrink seq or head dim"
+    scale = 1.0 / float(dh) ** 0.5
+
+    kernel = functools.partial(_attention_kernel, scale=scale, causal=causal)
+    spec = pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint(s: int, dh: int) -> dict:
+    """Static VMEM/MXU profile per grid step — used by EXPERIMENTS.md §Perf."""
+    return {
+        "block": (s, dh),
+        "vmem_bytes": block_bytes((s, dh), (s, dh), (s, dh), (s, s), (s, dh)),
+        # Two contractions: (S,Dh)x(Dh,S) and (S,S)x(S,Dh).
+        "mxu_utilization": min(s, 128) * min(dh, 128) / (128.0 * 128.0),
+    }

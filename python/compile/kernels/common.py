@@ -1,0 +1,70 @@
+"""Shared helpers for the Pallas kernels (Layer 1).
+
+All kernels in this package are written for the TPU programming model —
+blocks tiled for VMEM, inner products shaped for the 128x128 MXU — but are
+lowered with ``interpret=True`` so the resulting HLO runs on any PJRT
+backend (including the rust CPU client on the request path). See
+DESIGN.md §3 (Hardware adaptation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# The MXU systolic array is 128x128; VMEM is ~16 MiB per core. Tiles are
+# chosen as the largest power-of-two divisor of the dimension capped at
+# the MXU edge, which keeps every kernel correct for the small model
+# shapes used in tests while remaining MXU-aligned for production shapes.
+MXU_EDGE = 128
+# VMEM budget (bytes) we allow a single kernel invocation to use; the
+# kernels assert their per-step block footprint stays under this.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def tile(dim: int, cap: int = MXU_EDGE) -> int:
+    """Largest power-of-two divisor of ``dim`` that is <= ``cap``.
+
+    Falls back to ``dim`` itself when ``dim`` has no power-of-two factor
+    <= cap (e.g. odd dims), which keeps the kernel correct at the cost of
+    a single large block.
+    """
+    if dim <= cap:
+        return dim
+    t = cap
+    while t > 1:
+        if dim % t == 0:
+            return t
+        t //= 2
+    return dim
+
+
+def block_bytes(*shapes: tuple[int, ...], dtype_bytes: int = 4) -> int:
+    """Total bytes of the given block shapes (f32 by default)."""
+    total = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        total += n * dtype_bytes
+    return total
+
+
+def apply_activation(x, activation: str | None):
+    """Epilogue activations fused into the kernels."""
+    if activation is None or activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        # tanh-approximation GELU: cheap on the VPU, matches jax.nn.gelu
+        # (approximate=True) which ref.py uses as the oracle.
+        c = 0.7978845608028654  # sqrt(2/pi)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+VALID_ACTIVATIONS = ("none", "relu", "gelu", "tanh", "sigmoid")

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel path: residual conv block (the CNN canonical block).
+
+The paper's CNN family stacks residual blocks. On TPU a 3x3 conv is
+executed as an im2col matmul on the MXU (that is literally what XLA:TPU
+does); we make that explicit: patch extraction is a build-time jnp
+reshape (`conv_general_dilated_patches`), and the hot compute — the
+(B*H*W, 9C) x (9C, C) contraction with the bias + ReLU + skip-connection
+epilogue — is the fused Pallas matmul kernel from `matmul_block`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul_block import linear
+
+
+def im2col(x):
+    """Extract 3x3 SAME patches: ``(B, H, W, C)`` -> ``(B*H*W, 9*C)``.
+
+    Channel-major patch layout (C chunks of 9 spatial taps) to match
+    ``conv_general_dilated_patches``'s depthwise ordering; ref.py and the
+    weight layout in `conv_weights` use the same convention.
+    """
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(3, 3),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return patches.reshape(b * h * w, 9 * c)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv_block(x, w, b, *, interpret: bool = True):
+    """Residual block: ``relu(conv3x3(x) + b) + x`` fused via the matmul kernel.
+
+    Args:
+      x: ``(B, H, W, C)`` f32 feature map.
+      w: ``(9*C, C)`` conv weights in im2col layout.
+      b: ``(C,)`` bias.
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``(B, H, W, C)`` f32.
+    """
+    bsz, h, ww, c = x.shape
+    assert w.shape == (9 * c, c), f"bad conv weight shape {w.shape} for C={c}"
+    cols = im2col(x)
+    flat_residual = x.reshape(bsz * h * ww, c)
+    out = linear(
+        cols, w, b, residual=flat_residual, activation="relu", interpret=interpret
+    )
+    return out.reshape(bsz, h, ww, c)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv_in(x, w, b, *, interpret: bool = True):
+    """Stem conv: ``relu(conv3x3(x) + b)`` mapping C_in -> C_out channels.
+
+    Args:
+      x: ``(B, H, W, C_in)``; w: ``(9*C_in, C_out)``; b: ``(C_out,)``.
+    """
+    bsz, h, ww, cin = x.shape
+    cout = w.shape[1]
+    assert w.shape[0] == 9 * cin
+    cols = im2col(x)
+    out = linear(cols, w, b, activation="relu", interpret=interpret)
+    return out.reshape(bsz, h, ww, cout)

@@ -1,0 +1,105 @@
+"""Layer-1 Pallas kernel: fused LSTM cell (the RNN canonical block).
+
+One grid step processes a batch tile: both gate matmuls (x Wx and h Wh),
+the bias add, all four gate nonlinearities, and the cell/hidden state
+updates are fused into a single VMEM-resident kernel. On CUDA this is the
+classic "fused LSTM cell" persistent kernel; on TPU the gate matmuls map
+to the MXU and the elementwise tail to the VPU without leaving VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import VMEM_BUDGET, block_bytes, tile
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h2_ref, c2_ref, *, hidden: int):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # (bm, 4H) gate pre-activations: two MXU contractions + bias.
+    gates = (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    i = _sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    f = _sigmoid(gates[:, 1 * hidden : 2 * hidden] + 1.0)  # forget-gate bias init
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = _sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c2 = f * c + i * g
+    h2_ref[...] = o * jnp.tanh(c2)
+    c2_ref[...] = c2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_cell(x, h, c, wx, wh, b, *, interpret: bool = True):
+    """One fused LSTM step.
+
+    Args:
+      x: ``(B, D)`` input at this timestep.
+      h: ``(B, H)`` previous hidden state.
+      c: ``(B, H)`` previous cell state.
+      wx: ``(D, 4H)`` input->gates weights (gate order: i, f, g, o).
+      wh: ``(H, 4H)`` hidden->gates weights.
+      b: ``(4H,)`` gate bias.
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``(h', c')`` each ``(B, H)``.
+    """
+    bsz, d = x.shape
+    hidden = h.shape[1]
+    assert h.shape == (bsz, hidden) and c.shape == (bsz, hidden)
+    assert wx.shape == (d, 4 * hidden) and wh.shape == (hidden, 4 * hidden)
+    assert b.shape == (4 * hidden,)
+
+    bm = tile(bsz)
+    assert (
+        block_bytes((bm, d), (bm, hidden), (bm, hidden), (d, 4 * hidden), (hidden, 4 * hidden), (bm, 4 * hidden))
+        < VMEM_BUDGET
+    ), "LSTM cell block exceeds VMEM budget; shrink hidden size"
+
+    kernel = functools.partial(_lstm_kernel, hidden=hidden)
+    b2 = b.reshape(1, 4 * hidden)
+    out_shape = (
+        jax.ShapeDtypeStruct((bsz, hidden), x.dtype),
+        jax.ShapeDtypeStruct((bsz, hidden), x.dtype),
+    )
+    state_spec = pl.BlockSpec((bm, hidden), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            state_spec,
+            state_spec,
+            pl.BlockSpec((d, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4 * hidden), lambda i: (0, 0)),
+        ],
+        out_specs=(state_spec, state_spec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, c, wx, wh, b2)
+
+
+def vmem_footprint(bsz: int, d: int, hidden: int) -> dict:
+    """Static VMEM/MXU profile per grid step — used by EXPERIMENTS.md §Perf."""
+    bm = tile(bsz)
+    return {
+        "block": (bm, d, hidden),
+        "vmem_bytes": block_bytes(
+            (bm, d), (bm, hidden), (bm, hidden), (d, 4 * hidden), (hidden, 4 * hidden), (bm, 4 * hidden)
+        ),
+        "mxu_utilization": min(bm, 128) * min(4 * hidden, 128) / (128.0 * 128.0),
+    }

@@ -1,0 +1,137 @@
+"""Layer-1 Pallas kernel: tiled matmul with fused epilogue (the FC block).
+
+This is the compute hot-spot of the paper's FC/MLP canonical family and the
+projection matmuls of every other family. The CUDA analogue would stage
+tiles through shared memory per threadblock; here the HBM->VMEM schedule is
+expressed with a 3-D grid over (M/bm, N/bn, K/bk) and BlockSpec index maps,
+accumulating partial products into the output block (revisited across the
+k-steps of the grid) and applying the epilogue — bias + activation +
+optional residual — on the final k-step, so the block never round-trips to
+HBM between accumulation and epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import VMEM_BUDGET, apply_activation, block_bytes, tile
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, r_ref, o_ref, *, nk: int, activation, has_bias, has_residual):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j], epilogue at k=nk-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction in f32 accumulation.
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...]
+        acc = apply_activation(acc, activation)
+        if has_residual:
+            acc = acc + r_ref[...]
+        o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def linear(
+    x,
+    w,
+    b=None,
+    residual=None,
+    *,
+    activation: str | None = None,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool = True,
+):
+    """``act(x @ w + b) + residual`` as a single fused Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` f32 input activations.
+      w: ``(K, N)`` f32 weights.
+      b: optional ``(N,)`` bias, fused into the epilogue.
+      residual: optional ``(M, N)`` tensor added after the activation
+        (the skip connection of the paper's residual CNN block).
+      activation: one of ``common.VALID_ACTIVATIONS``.
+      bm/bn/bk: tile overrides; default MXU-aligned power-of-two tiles.
+      interpret: must stay True for CPU-PJRT execution (see DESIGN.md §3).
+
+    Returns:
+      ``(M, N)`` f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    # Default tiles: as large as VMEM comfortably allows (fewer grid steps
+    # means fewer HBM<->VMEM round-trips on TPU and, under interpret=True,
+    # fewer XLA while-loop iterations on the CPU serving path — the §Perf
+    # L1 fix that took resnet_mini from ~336ms to tens of ms per b1
+    # inference). Still multiples of the 128 MXU edge whenever the dims
+    # have pow2 factors; the VMEM assert below is the safety net.
+    bm = bm or tile(m, 1024)
+    bn = bn or tile(n, 512)
+    bk = bk or tile(k, 1024)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    assert (
+        block_bytes((bm, bk), (bk, bn), (bm, bn), (bm, bn)) < VMEM_BUDGET
+    ), "block footprint exceeds VMEM budget"
+
+    has_bias = b is not None
+    has_residual = residual is not None
+    # Pallas wants every ref present; feed zero-size dummies when absent so
+    # the kernel signature stays fixed.
+    b2 = (b if has_bias else jnp.zeros((n,), x.dtype)).reshape(1, n)
+    r2 = residual if has_residual else jnp.zeros((1, 1), x.dtype)
+
+    grid = (m // bm, n // bn, nk)
+    kernel = functools.partial(
+        _matmul_kernel,
+        nk=nk,
+        activation=activation,
+        has_bias=has_bias,
+        has_residual=has_residual,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            (
+                pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+                if has_residual
+                else pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+            ),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b2, r2)
+
+
+def vmem_footprint(m: int, n: int, k: int) -> dict:
+    """Static VMEM/MXU profile of one grid step — used by EXPERIMENTS.md §Perf."""
+    bm, bn, bk = tile(m), tile(n), tile(k)
+    return {
+        "block": (bm, bn, bk),
+        "vmem_bytes": block_bytes((bm, bk), (bk, bn), (bm, bn), (bm, bn)),
+        "mxu_tiles": ((bm + 127) // 128) * ((bn + 127) // 128) * ((bk + 127) // 128),
+        # Fraction of the 128x128 systolic array covered by the block edges.
+        "mxu_utilization": min(bm, 128) * min(bn, 128) / (128.0 * 128.0),
+    }

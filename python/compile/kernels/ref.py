@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the CORE correctness signal: pytest (python/tests/) sweeps
+shapes/dtypes with hypothesis and asserts the Pallas kernels match these
+references to tight tolerances. Keep them boring and obviously correct —
+no pallas, no tiling, no fusion.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_activation_ref(x, activation):
+    if activation is None or activation == "none":
+        return x
+    if activation == "relu":
+        return jax.nn.relu(x)
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(activation)
+
+
+def linear_ref(x, w, b=None, residual=None, *, activation=None):
+    """Oracle for matmul_block.linear."""
+    out = x @ w
+    if b is not None:
+        out = out + b
+    out = apply_activation_ref(out, activation)
+    if residual is not None:
+        out = out + residual
+    return out
+
+
+def attention_ref(q, k, v, *, causal=False):
+    """Oracle for attention.attention. q/k/v: (B, H, S, Dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        seq = q.shape[2]
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Oracle for lstm_cell.lstm_cell (gate order i, f, g, o; +1 forget bias)."""
+    hidden = h.shape[1]
+    gates = x @ wx + h @ wh + b
+    i = jax.nn.sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden : 2 * hidden] + 1.0)
+    g = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c2 = f * c + i * g
+    return o * jnp.tanh(c2), c2
+
+
+def conv_block_ref(x, w, b):
+    """Oracle for conv_block.conv_block: relu(conv3x3(x)+b) + x, SAME padding.
+
+    Weights arrive in im2col layout (9*C, C) with channel-major patch
+    ordering (matching conv_general_dilated_patches); convert back to HWIO
+    for the reference convolution.
+    """
+    c = x.shape[-1]
+    whwio = w.reshape(c, 3, 3, c).transpose(1, 2, 0, 3)  # (3,3,Cin,Cout)
+    out = jax.lax.conv_general_dilated(
+        x, whwio, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return jax.nn.relu(out + b) + x
+
+
+def conv_in_ref(x, w, b):
+    """Oracle for conv_block.conv_in: relu(conv3x3(x)+b), C_in -> C_out."""
+    cin = x.shape[-1]
+    cout = w.shape[1]
+    whwio = w.reshape(cin, 3, 3, cout).transpose(1, 2, 0, 3)
+    out = jax.lax.conv_general_dilated(
+        x, whwio, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return jax.nn.relu(out + b)

@@ -1,0 +1,250 @@
+"""Layer-2: the canonical model generator (paper §4.2.2), in JAX.
+
+Four families built by stacking the paper's four blocks — FC, residual
+CNN, LSTM, Transformer-attention — each parameterized by depth / width /
+batch, plus small "real-world" stand-ins (resnet_mini, bert_mini,
+mobilenet_mini). Every block's hot compute is a Layer-1 Pallas kernel, so
+the kernels lower into the same HLO module that the rust runtime executes.
+
+Parameters are *runtime inputs* (not baked constants): per-layer weights
+are stacked along a leading ``depth`` axis and the layer loop is a
+``lax.scan``, which keeps the lowered HLO small and depth-independent.
+``param_specs`` gives the exact input order the rust side must feed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, conv_block, conv_in, linear, lstm_cell
+
+
+class ParamSpec(NamedTuple):
+    name: str
+    shape: tuple
+    dtype: str = "f32"
+
+
+# ---------------------------------------------------------------------------
+# MLP family (FC blocks)
+# ---------------------------------------------------------------------------
+
+def mlp_param_specs(depth, width, in_dim=256, classes=16):
+    return [
+        ParamSpec("w_in", (in_dim, width)),
+        ParamSpec("b_in", (width,)),
+        ParamSpec("ws", (depth, width, width)),
+        ParamSpec("bs", (depth, width)),
+        ParamSpec("w_out", (width, classes)),
+        ParamSpec("b_out", (classes,)),
+    ]
+
+
+def mlp_apply(params, x):
+    """x: (B, in_dim) -> logits (B, classes)."""
+    w_in, b_in, ws, bs, w_out, b_out = params
+    h = linear(x, w_in, b_in, activation="relu")
+
+    def block(h, wb):
+        w, b = wb
+        return linear(h, w, b, activation="relu"), None
+
+    h, _ = jax.lax.scan(block, h, (ws, bs))
+    return linear(h, w_out, b_out)
+
+
+# ---------------------------------------------------------------------------
+# CNN family (residual blocks)
+# ---------------------------------------------------------------------------
+
+def cnn_param_specs(depth, channels, hw=32, cin=3, classes=16):
+    return [
+        ParamSpec("w_stem", (9 * cin, channels)),
+        ParamSpec("b_stem", (channels,)),
+        ParamSpec("ws", (depth, 9 * channels, channels)),
+        ParamSpec("bs", (depth, channels)),
+        ParamSpec("w_head", (channels, classes)),
+        ParamSpec("b_head", (classes,)),
+    ]
+
+
+def cnn_apply(params, x):
+    """x: (B, H, W, cin) -> logits (B, classes)."""
+    w_stem, b_stem, ws, bs, w_head, b_head = params
+    h = conv_in(x, w_stem, b_stem)
+
+    def block(h, wb):
+        w, b = wb
+        return conv_block(h, w, b), None
+
+    h, _ = jax.lax.scan(block, h, (ws, bs))
+    pooled = jnp.mean(h, axis=(1, 2))  # global average pool
+    return linear(pooled, w_head, b_head)
+
+
+# ---------------------------------------------------------------------------
+# RNN family (LSTM blocks)
+# ---------------------------------------------------------------------------
+
+def rnn_param_specs(depth, hidden, seq=16, in_dim=64, classes=16):
+    del seq  # static shape of x, not of params
+    return [
+        ParamSpec("w_in", (in_dim, hidden)),
+        ParamSpec("b_in", (hidden,)),
+        ParamSpec("wx", (depth, hidden, 4 * hidden)),
+        ParamSpec("wh", (depth, hidden, 4 * hidden)),
+        ParamSpec("b", (depth, 4 * hidden)),
+        ParamSpec("w_head", (hidden, classes)),
+        ParamSpec("b_head", (classes,)),
+    ]
+
+
+def rnn_apply(params, x):
+    """x: (B, S, in_dim) -> logits (B, classes)."""
+    w_in, b_in, wx, wh, b, w_head, b_head = params
+    bsz, seq, in_dim = x.shape
+    hidden = w_in.shape[1]
+    h = linear(x.reshape(bsz * seq, in_dim), w_in, b_in, activation="relu")
+    seq_h = h.reshape(bsz, seq, hidden)
+
+    def layer(seq_h, layer_params):
+        lwx, lwh, lb = layer_params
+        h0 = jnp.zeros((bsz, hidden), x.dtype)
+        c0 = jnp.zeros((bsz, hidden), x.dtype)
+
+        def step(carry, xt):
+            h, c = carry
+            h2, c2 = lstm_cell(xt, h, c, lwx, lwh, lb)
+            return (h2, c2), h2
+
+        (_, _), ys = jax.lax.scan(step, (h0, c0), seq_h.transpose(1, 0, 2))
+        return ys.transpose(1, 0, 2), None
+
+    seq_h, _ = jax.lax.scan(layer, seq_h, (wx, wh, b))
+    return linear(seq_h[:, -1, :], w_head, b_head)
+
+
+# ---------------------------------------------------------------------------
+# Transformer family (attention blocks)
+# ---------------------------------------------------------------------------
+
+def transformer_param_specs(depth, d_model, heads, seq=64, classes=16):
+    del heads, seq
+    d = d_model
+    return [
+        ParamSpec("wq", (depth, d, d)),
+        ParamSpec("wk", (depth, d, d)),
+        ParamSpec("wv", (depth, d, d)),
+        ParamSpec("wo", (depth, d, d)),
+        ParamSpec("w1", (depth, d, 4 * d)),
+        ParamSpec("b1", (depth, 4 * d)),
+        ParamSpec("w2", (depth, 4 * d, d)),
+        ParamSpec("b2", (depth, d)),
+        ParamSpec("ln1_g", (depth, d)),
+        ParamSpec("ln1_b", (depth, d)),
+        ParamSpec("ln2_g", (depth, d)),
+        ParamSpec("ln2_b", (depth, d)),
+        ParamSpec("w_head", (d, classes)),
+        ParamSpec("b_head", (classes,)),
+    ]
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def transformer_apply(params, x, *, heads):
+    """x: (B, S, d_model) pre-embedded tokens -> logits (B, classes)."""
+    (wq, wk, wv, wo, w1, b1, w2, b2, ln1_g, ln1_b, ln2_g, ln2_b, w_head, b_head) = params
+    bsz, seq, d = x.shape
+    dh = d // heads
+
+    def split_heads(t):  # (B*S, D) -> (B, H, S, Dh)
+        return t.reshape(bsz, seq, heads, dh).transpose(0, 2, 1, 3)
+
+    def block(h, lp):
+        lwq, lwk, lwv, lwo, lw1, lb1, lw2, lb2, g1, bb1, g2, bb2 = lp
+        hn = _layer_norm(h, g1, bb1)
+        flat = hn.reshape(bsz * seq, d)
+        q = split_heads(linear(flat, lwq))
+        k = split_heads(linear(flat, lwk))
+        v = split_heads(linear(flat, lwv))
+        att = attention(q, k, v)
+        att = att.transpose(0, 2, 1, 3).reshape(bsz * seq, d)
+        h = h + linear(att, lwo).reshape(bsz, seq, d)
+        hn = _layer_norm(h, g2, bb2)
+        ff = linear(hn.reshape(bsz * seq, d), lw1, lb1, activation="gelu")
+        h = h + linear(ff, lw2, lb2).reshape(bsz, seq, d)
+        return h, None
+
+    h, _ = jax.lax.scan(
+        block, x, (wq, wk, wv, wo, w1, b1, w2, b2, ln1_g, ln1_b, ln2_g, ln2_b)
+    )
+    pooled = jnp.mean(h, axis=1)
+    return linear(pooled, w_head, b_head)
+
+
+# ---------------------------------------------------------------------------
+# Family registry + real-world stand-ins
+# ---------------------------------------------------------------------------
+
+def build(family: str, hp: dict):
+    """Return (apply_fn(params, x), param_specs, input_spec) for a config.
+
+    ``apply_fn`` returns a 1-tuple ``(logits,)`` so the lowered HLO has the
+    tuple root the rust loader expects (``to_tuple1``).
+    """
+    classes = hp.get("classes", 16)
+    batch = hp["batch"]
+    if family == "mlp":
+        in_dim = hp.get("in_dim", 256)
+        specs = mlp_param_specs(hp["depth"], hp["width"], in_dim, classes)
+        fn = lambda params, x: (mlp_apply(params, x),)
+        x_spec = ParamSpec("x", (batch, in_dim))
+    elif family == "cnn":
+        hw, cin = hp.get("hw", 32), hp.get("cin", 3)
+        specs = cnn_param_specs(hp["depth"], hp["channels"], hw, cin, classes)
+        fn = lambda params, x: (cnn_apply(params, x),)
+        x_spec = ParamSpec("x", (batch, hw, hw, cin))
+    elif family == "rnn":
+        seq, in_dim = hp.get("seq", 16), hp.get("in_dim", 64)
+        specs = rnn_param_specs(hp["depth"], hp["hidden"], seq, in_dim, classes)
+        fn = lambda params, x: (rnn_apply(params, x),)
+        x_spec = ParamSpec("x", (batch, seq, in_dim))
+    elif family == "transformer":
+        seq, heads = hp.get("seq", 64), hp["heads"]
+        specs = transformer_param_specs(hp["depth"], hp["d_model"], heads, seq, classes)
+        apply = functools.partial(transformer_apply, heads=heads)
+        fn = lambda params, x: (apply(params, x),)
+        x_spec = ParamSpec("x", (batch, seq, hp["d_model"]))
+    else:
+        raise ValueError(f"unknown family {family!r}")
+    return fn, specs, x_spec
+
+
+# Small "real-world" stand-ins for the paper's registered models (§5.1).
+# Keys are the names the rust catalog and EXPERIMENTS.md refer to.
+REAL_WORLD = {
+    "resnet_mini": ("cnn", {"depth": 8, "channels": 64, "hw": 32}),
+    "mobilenet_mini": ("cnn", {"depth": 4, "channels": 32, "hw": 32}),
+    "bert_mini": ("transformer", {"depth": 4, "d_model": 256, "heads": 4, "seq": 128}),
+    "lstm_mini": ("rnn", {"depth": 2, "hidden": 256, "seq": 32}),
+}
+
+
+def init_params(specs, seed=0):
+    """Deterministic param values for tests (the rust side generates its own)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for spec in specs:
+        key, sub = jax.random.split(key)
+        fan_in = spec.shape[0] if len(spec.shape) == 1 else spec.shape[-2]
+        scale = 1.0 / max(1.0, float(fan_in)) ** 0.5
+        out.append(jax.random.normal(sub, spec.shape, jnp.float32) * scale)
+    return tuple(out)

@@ -1,0 +1,256 @@
+"""Kernel-vs-ref correctness: the CORE signal (pallas interpret vs pure jnp).
+
+hypothesis sweeps shapes (and the activation/causal configuration space);
+assert_allclose against ref.py at tight f32 tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, conv_block, conv_in, linear, lstm_cell
+from compile.kernels import ref
+from compile.kernels.common import VALID_ACTIVATIONS, tile
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# matmul_block.linear
+# ---------------------------------------------------------------------------
+
+class TestLinear:
+    @pytest.mark.parametrize("activation", VALID_ACTIVATIONS)
+    def test_activations(self, activation):
+        k = keys(4)
+        x, w = rand(k[0], (16, 96)), rand(k[1], (96, 48), 0.1)
+        b, r = rand(k[2], (48,)), rand(k[3], (16, 48))
+        got = linear(x, w, b, r, activation=activation)
+        want = ref.linear_ref(x, w, b, r, activation=activation)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_no_bias_no_residual(self):
+        k = keys(2)
+        x, w = rand(k[0], (8, 32)), rand(k[1], (32, 24), 0.1)
+        np.testing.assert_allclose(linear(x, w), ref.linear_ref(x, w), rtol=RTOL, atol=ATOL)
+
+    def test_bias_only(self):
+        k = keys(3)
+        x, w, b = rand(k[0], (8, 32)), rand(k[1], (32, 24), 0.1), rand(k[2], (24,))
+        np.testing.assert_allclose(linear(x, w, b), ref.linear_ref(x, w, b), rtol=RTOL, atol=ATOL)
+
+    def test_multi_k_step_accumulation(self):
+        # K > 128 forces multiple k grid steps through the accumulator path.
+        k = keys(2)
+        x, w = rand(k[0], (4, 512)), rand(k[1], (512, 32), 0.05)
+        np.testing.assert_allclose(
+            linear(x, w, bk=128), ref.linear_ref(x, w), rtol=5e-5, atol=5e-5
+        )
+
+    def test_large_mxu_aligned(self):
+        k = keys(2)
+        x, w = rand(k[0], (256, 256)), rand(k[1], (256, 256), 0.05)
+        np.testing.assert_allclose(linear(x, w), ref.linear_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_batch_one(self):
+        # Serving hot case: single-row matmul.
+        k = keys(3)
+        x, w, b = rand(k[0], (1, 64)), rand(k[1], (64, 64), 0.1), rand(k[2], (64,))
+        np.testing.assert_allclose(
+            linear(x, w, b, activation="relu"),
+            ref.linear_ref(x, w, b, activation="relu"),
+            rtol=RTOL, atol=ATOL,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 3, 5, 8, 16, 31, 64]),
+        kdim=st.sampled_from([8, 16, 32, 96, 256]),
+        n=st.sampled_from([8, 24, 48, 128]),
+        act=st.sampled_from(VALID_ACTIVATIONS),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, kdim, n, act, seed):
+        k = keys(3, seed)
+        x, w, b = rand(k[0], (m, kdim)), rand(k[1], (kdim, n), 0.1), rand(k[2], (n,))
+        got = linear(x, w, b, activation=act)
+        want = ref.linear_ref(x, w, b, activation=act)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_contraction(self):
+        k = keys(2)
+        with pytest.raises(AssertionError):
+            linear(rand(k[0], (4, 8)), rand(k[1], (16, 4)))
+
+    def test_tile_helper(self):
+        assert tile(256) == 128
+        assert tile(100) == 100  # fits under the cap -> whole dim
+        assert tile(160) == 32  # largest pow2 divisor <= 128
+        assert tile(64) == 64
+        assert tile(7) == 7  # odd dims fall back to the full dim
+        assert tile(258) == 2
+        assert tile(255) == 255  # no pow2 factor -> single large block
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_basic(self, causal):
+        k = keys(3)
+        q, kk, v = (rand(k[i], (2, 4, 16, 32)) for i in range(3))
+        got = attention(q, kk, v, causal=causal)
+        want = ref.attention_ref(q, kk, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_single_head_single_batch(self):
+        k = keys(3)
+        q, kk, v = (rand(k[i], (1, 1, 8, 16)) for i in range(3))
+        np.testing.assert_allclose(
+            attention(q, kk, v), ref.attention_ref(q, kk, v), rtol=RTOL, atol=ATOL
+        )
+
+    def test_softmax_stability_large_logits(self):
+        # Large-magnitude q/k would overflow a naive softmax.
+        k = keys(3)
+        q, kk, v = (rand(k[i], (1, 2, 8, 16), 30.0) for i in range(3))
+        got = attention(q, kk, v)
+        want = ref.attention_ref(q, kk, v)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_causal_first_position_sees_only_itself(self):
+        k = keys(3)
+        q, kk, v = (rand(k[i], (1, 1, 8, 4)) for i in range(3))
+        out = attention(q, kk, v, causal=True)
+        # Row 0 attends only to key 0 -> output equals v[0].
+        np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([4, 8, 32, 64]),
+        dh=st.sampled_from([8, 16, 64]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, b, h, s, dh, causal, seed):
+        k = keys(3, seed)
+        q, kk, v = (rand(k[i], (b, h, s, dh)) for i in range(3))
+        got = attention(q, kk, v, causal=causal)
+        want = ref.attention_ref(q, kk, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+class TestLstmCell:
+    def test_basic(self):
+        k = keys(6)
+        x, h, c = rand(k[0], (4, 32)), rand(k[1], (4, 64)), rand(k[2], (4, 64))
+        wx, wh = rand(k[3], (32, 256), 0.1), rand(k[4], (64, 256), 0.1)
+        b = rand(k[5], (256,), 0.1)
+        (h2, c2) = lstm_cell(x, h, c, wx, wh, b)
+        h2r, c2r = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+        np.testing.assert_allclose(h2, h2r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(c2, c2r, rtol=RTOL, atol=ATOL)
+
+    def test_zero_state(self):
+        k = keys(3)
+        bsz, d, hid = 2, 16, 32
+        x = rand(k[0], (bsz, d))
+        h = jnp.zeros((bsz, hid))
+        c = jnp.zeros((bsz, hid))
+        wx, wh = rand(k[1], (d, 4 * hid), 0.1), rand(k[2], (hid, 4 * hid), 0.1)
+        b = jnp.zeros((4 * hid,))
+        h2, c2 = lstm_cell(x, h, c, wx, wh, b)
+        h2r, c2r = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+        np.testing.assert_allclose(h2, h2r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(c2, c2r, rtol=RTOL, atol=ATOL)
+
+    def test_state_bounded(self):
+        # tanh-bounded hidden state stays in [-1, 1].
+        k = keys(6)
+        x = rand(k[0], (4, 16), 10.0)
+        h, c = rand(k[1], (4, 32), 10.0), rand(k[2], (4, 32), 10.0)
+        wx, wh = rand(k[3], (16, 128)), rand(k[4], (32, 128))
+        b = rand(k[5], (128,))
+        h2, _ = lstm_cell(x, h, c, wx, wh, b)
+        assert np.all(np.abs(np.asarray(h2)) <= 1.0 + 1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bsz=st.sampled_from([1, 2, 4, 8, 17]),
+        d=st.sampled_from([8, 32, 64]),
+        hid=st.sampled_from([16, 32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, bsz, d, hid, seed):
+        k = keys(6, seed)
+        x, h, c = rand(k[0], (bsz, d)), rand(k[1], (bsz, hid)), rand(k[2], (bsz, hid))
+        wx, wh = rand(k[3], (d, 4 * hid), 0.1), rand(k[4], (hid, 4 * hid), 0.1)
+        b = rand(k[5], (4 * hid,), 0.1)
+        h2, c2 = lstm_cell(x, h, c, wx, wh, b)
+        h2r, c2r = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+        np.testing.assert_allclose(h2, h2r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(c2, c2r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv_block
+# ---------------------------------------------------------------------------
+
+class TestConvBlock:
+    def test_residual_block(self):
+        k = keys(3)
+        x = rand(k[0], (2, 8, 8, 16))
+        w, b = rand(k[1], (144, 16), 0.1), rand(k[2], (16,))
+        np.testing.assert_allclose(
+            conv_block(x, w, b), ref.conv_block_ref(x, w, b), rtol=RTOL, atol=ATOL
+        )
+
+    def test_stem(self):
+        k = keys(3)
+        x = rand(k[0], (2, 8, 8, 3))
+        w, b = rand(k[1], (27, 16), 0.1), rand(k[2], (16,))
+        np.testing.assert_allclose(
+            conv_in(x, w, b), ref.conv_in_ref(x, w, b), rtol=RTOL, atol=ATOL
+        )
+
+    def test_identity_weights_residual_passthrough(self):
+        # Zero conv weights + zero bias -> relu(0) + x == x.
+        x = rand(keys(1)[0], (1, 4, 4, 8))
+        w = jnp.zeros((72, 8))
+        b = jnp.zeros((8,))
+        np.testing.assert_allclose(conv_block(x, w, b), x, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bsz=st.integers(1, 3),
+        hw=st.sampled_from([4, 8, 16]),
+        c=st.sampled_from([4, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, bsz, hw, c, seed):
+        k = keys(3, seed)
+        x = rand(k[0], (bsz, hw, hw, c))
+        w, b = rand(k[1], (9 * c, c), 0.1), rand(k[2], (c,))
+        np.testing.assert_allclose(
+            conv_block(x, w, b), ref.conv_block_ref(x, w, b), rtol=1e-4, atol=1e-4
+        )

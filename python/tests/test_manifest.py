@@ -1,0 +1,60 @@
+"""Manifest consistency: what aot.py wrote matches the live analytic
+formulas and the actual lowered HLO files (requires `make artifacts`)."""
+
+import json
+import os
+
+import pytest
+
+from compile import analytic, aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_default_variants():
+    manifest = load()
+    expected = {name for name, _, _ in aot.default_variants()}
+    assert set(manifest) == expected
+
+
+def test_profiles_match_analytic():
+    for name, entry in load().items():
+        prof = analytic.profile_for(entry["family"], entry["hyperparams"])
+        assert entry["flops_per_sample"] == prof["flops"], name
+        assert entry["params"] == prof["params"], name
+        assert entry["weight_bytes"] == prof["weight_bytes"], name
+        assert entry["act_bytes_per_sample"] == prof["act_bytes"], name
+
+
+def test_hlo_files_exist_and_nontrivial():
+    for name, entry in load().items():
+        path = os.path.join(ART, entry["hlo_file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 10_000, name
+
+
+def test_input_specs_match_model_builder():
+    for name, entry in load().items():
+        _, specs, x_spec = model.build(entry["family"], entry["hyperparams"])
+        want = [(s.name, list(s.shape)) for s in (*specs, x_spec)]
+        got = [(i["name"], i["shape"]) for i in entry["inputs"]]
+        assert got == want, name
+
+
+def test_param_count_matches_input_shapes():
+    import numpy as np
+    for name, entry in load().items():
+        total = sum(
+            int(np.prod(i["shape"])) for i in entry["inputs"][:-1]
+        )
+        assert total == entry["params"], name

@@ -1,0 +1,113 @@
+"""Layer-2 model tests: shapes, determinism, numerics, spec consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import analytic, model
+
+FAMILY_CONFIGS = [
+    ("mlp", {"depth": 2, "width": 64, "batch": 3}),
+    ("cnn", {"depth": 2, "channels": 8, "hw": 8, "batch": 3}),
+    ("rnn", {"depth": 2, "hidden": 32, "seq": 4, "batch": 3}),
+    ("transformer", {"depth": 2, "d_model": 32, "heads": 2, "seq": 8, "batch": 3}),
+]
+
+
+@pytest.mark.parametrize("family,hp", FAMILY_CONFIGS)
+class TestFamilies:
+    def test_output_shape(self, family, hp):
+        fn, specs, xs = model.build(family, hp)
+        params = model.init_params(specs)
+        x = jax.random.normal(jax.random.PRNGKey(0), xs.shape)
+        (out,) = fn(params, x)
+        assert out.shape == (hp["batch"], hp.get("classes", 16))
+
+    def test_finite_outputs(self, family, hp):
+        fn, specs, xs = model.build(family, hp)
+        params = model.init_params(specs)
+        x = jax.random.normal(jax.random.PRNGKey(1), xs.shape) * 3.0
+        (out,) = fn(params, x)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_deterministic(self, family, hp):
+        fn, specs, xs = model.build(family, hp)
+        params = model.init_params(specs)
+        x = jax.random.normal(jax.random.PRNGKey(2), xs.shape)
+        (a,) = fn(params, x)
+        (b,) = fn(params, x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batch_independence(self, family, hp):
+        # Row i of a batched run must equal a single-sample run of row i —
+        # the invariant dynamic batching relies on (paper §5.3).
+        fn, specs, xs = model.build(family, hp)
+        params = model.init_params(specs)
+        x = jax.random.normal(jax.random.PRNGKey(3), xs.shape)
+        (batched,) = fn(params, x)
+        hp1 = dict(hp, batch=1)
+        fn1, _, _ = model.build(family, hp1)
+        (single,) = fn1(params, x[:1])
+        np.testing.assert_allclose(
+            np.asarray(batched)[0], np.asarray(single)[0], rtol=3e-5, atol=3e-5
+        )
+
+    def test_param_specs_match_init(self, family, hp):
+        _, specs, _ = model.build(family, hp)
+        params = model.init_params(specs)
+        assert len(params) == len(specs)
+        for p, s in zip(params, specs):
+            assert p.shape == s.shape, s.name
+
+    def test_analytic_params_match_actual(self, family, hp):
+        # The manifest's analytic param count equals the true tensor count.
+        _, specs, _ = model.build(family, hp)
+        actual = sum(int(np.prod(s.shape)) for s in specs)
+        prof = analytic.profile_for(family, hp)
+        assert prof["params"] == actual
+
+
+class TestRealWorldCatalog:
+    def test_all_entries_build(self):
+        for name, (family, hp0) in model.REAL_WORLD.items():
+            hp = dict(hp0, batch=1)
+            fn, specs, xs = model.build(family, hp)
+            assert len(specs) > 0, name
+
+    def test_resnet_mini_heavier_than_mobilenet_mini(self):
+        # Preserves the paper's Fig 10a relationship.
+        rn = model.REAL_WORLD["resnet_mini"]
+        mb = model.REAL_WORLD["mobilenet_mini"]
+        prn = analytic.profile_for(rn[0], dict(rn[1], batch=1))
+        pmb = analytic.profile_for(mb[0], dict(mb[1], batch=1))
+        assert prn["flops"] > 4 * pmb["flops"]
+
+    def test_arithmetic_intensity_grows_with_batch(self):
+        # The Roofline driver (Fig 10b): batch raises intensity.
+        prof = analytic.mlp_profile(8, 512)
+        def intensity(b):
+            return prof["flops"] * b / (prof["weight_bytes"] + prof["act_bytes"] * b)
+        assert intensity(32) > intensity(8) > intensity(1)
+
+
+class TestAnalytic:
+    def test_mlp_flops_formula(self):
+        p = analytic.mlp_profile(depth=4, width=128, in_dim=256, classes=16)
+        assert p["flops"] == 2 * 256 * 128 + 4 * 2 * 128 * 128 + 2 * 128 * 16
+
+    def test_deeper_costs_more(self):
+        for fam, base in [
+            ("mlp", {"width": 128}),
+            ("cnn", {"channels": 16}),
+            ("rnn", {"hidden": 64}),
+            ("transformer", {"d_model": 64, "heads": 2}),
+        ]:
+            shallow = analytic.profile_for(fam, dict(base, depth=2))
+            deep = analytic.profile_for(fam, dict(base, depth=8))
+            assert deep["flops"] > shallow["flops"]
+            assert deep["params"] > shallow["params"]
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(ValueError):
+            analytic.profile_for("gan", {"depth": 1})

@@ -1,0 +1,112 @@
+//! Fig 11: tail latency of serving systems under varied workloads
+//! (TFS + ResNet50 on V100 unless stated; Poisson arrivals; CDFs).
+//!
+//!  (a) CDF across fixed batch sizes at 100 rps
+//!  (b) p99 vs arrival rate
+//!  (c) spike load: base 50 rps with a 5x burst
+//!  (d) CDF across the four serving platforms at 100 rps
+
+use inferbench::coordinator::job::service_model_for;
+use inferbench::models::catalog;
+use inferbench::pipeline::{Processors, RequestPath, LAN};
+use inferbench::serving::{backends, run, Policy, SimConfig};
+use inferbench::util::render;
+use inferbench::workload::{generate, Pattern};
+
+const DURATION: f64 = 120.0;
+
+fn base_config(rate: f64) -> SimConfig {
+    let rn = catalog::find("resnet50").unwrap();
+    SimConfig {
+        arrivals: generate(&Pattern::Poisson { rate }, DURATION, 1234),
+        closed_loop: None,
+        duration_s: DURATION,
+        policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.005 },
+        software: &backends::TFS,
+        service: service_model_for("resnet50", "G1").unwrap(),
+        path: RequestPath { processors: Processors::image(), network: LAN, payload_bytes: rn.request_bytes },
+        max_queue: 8192,
+        seed: 99,
+    }
+}
+
+fn main() {
+    println!("=== Fig 11a: tail latency CDF vs batch size (TFS, ResNet50, 100 rps) ===\n");
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for batch in [1usize, 4, 8, 16] {
+        let mut cfg = base_config(100.0);
+        cfg.policy = Policy::Fixed { size: batch, timeout_s: 0.05 };
+        let r = run(&cfg);
+        let mut c = r.collector;
+        rows.push(vec![
+            format!("batch {batch}"),
+            format!("{:.1}", c.e2e.percentile(50.0) * 1e3),
+            format!("{:.1}", c.e2e.percentile(95.0) * 1e3),
+            format!("{:.1}", c.e2e.percentile(99.0) * 1e3),
+        ]);
+        series.push((format!("b{batch}"), c.e2e.cdf(60)));
+    }
+    print!("{}", render::table(&["Policy", "p50 ms", "p95 ms", "p99 ms"], &rows));
+    print!("{}", render::cdf_plot("\nlatency CDF (x: seconds)", &series, 60, 12));
+
+    println!("\n=== Fig 11b: p99 vs arrival rate (TFS, batch 1; capacity ~170 rps) ===\n");
+    let mut items = Vec::new();
+    for rate in [25.0, 50.0, 100.0, 140.0, 160.0, 175.0] {
+        let mut cfg = base_config(rate);
+        cfg.policy = Policy::Single; // paper serves b=1; queueing sets the tail
+        let r = run(&cfg);
+        let mut c = r.collector;
+        items.push((format!("{rate:>3.0} rps"), c.e2e.percentile(99.0) * 1e3));
+    }
+    print!("{}", render::bar_chart("p99 latency (ms) vs arrival rate", &items, 40));
+    println!("(tail blows up approaching capacity — the paper's 11b shape)");
+
+    println!("\n=== Fig 11c: spike load (base 50 rps, burst 300 rps for 20s, batch 1) ===\n");
+    let mut cfg = base_config(50.0);
+    cfg.policy = Policy::Single;
+    cfg.arrivals = generate(
+        &Pattern::Spike { base_rate: 50.0, burst_rate: 300.0, start_s: 40.0, duration_s: 20.0 },
+        DURATION,
+        77,
+    );
+    let r = run(&cfg);
+    let mut c = r.collector;
+    println!(
+        "completed {} dropped {}; p50 {:.1} ms p99 {:.1} ms max {:.1} ms",
+        c.completed,
+        r.dropped,
+        c.e2e.percentile(50.0) * 1e3,
+        c.e2e.percentile(99.0) * 1e3,
+        c.e2e.max() * 1e3,
+    );
+    let mut steady_cfg = base_config(50.0);
+    steady_cfg.policy = Policy::Single;
+    let steady = run(&steady_cfg).collector.e2e.percentile(99.0);
+    println!(
+        "steady-state p99 at 50 rps: {:.1} ms -> spike inflates p99 by {:.1}x (paper: TFS cannot absorb spikes)",
+        steady * 1e3,
+        c.e2e.percentile(99.0) / steady
+    );
+
+    println!("\n=== Fig 11d: four serving platforms (ResNet50, V100, 100 rps) ===\n");
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for sw in backends::ALL {
+        let mut cfg = base_config(100.0);
+        cfg.software = sw;
+        let r = run(&cfg);
+        let mut c = r.collector;
+        rows.push(vec![
+            sw.name.to_string(),
+            format!("{:.1}", c.e2e.percentile(50.0) * 1e3),
+            format!("{:.1}", c.e2e.percentile(95.0) * 1e3),
+            format!("{:.1}", c.e2e.percentile(99.0) * 1e3),
+            format!("{:.1}", c.throughput_rps()),
+        ]);
+        series.push((sw.id.to_string(), c.e2e.cdf(60)));
+    }
+    print!("{}", render::table(&["Software", "p50 ms", "p95 ms", "p99 ms", "rps"], &rows));
+    print!("{}", render::cdf_plot("\nlatency CDF by software (x: seconds)", &series, 60, 12));
+    println!("\nPaper shape check: larger batch -> longer tail; rate -> tail blow-up near capacity; TrIS best, then ONNX-RT, TFS, TorchScript.");
+}

@@ -1,0 +1,74 @@
+//! Fig 12: dynamic-batching throughput, TFS vs TrIS, vs client
+//! concurrency (closed-loop clients, ResNet50 on V100).
+//!
+//! Paper reading: TrIS exploits the feature and scales throughput
+//! steadily; TFS's naive scheduler can perform *worse than no batching*
+//! at small concurrency.
+
+use inferbench::coordinator::job::service_model_for;
+use inferbench::models::catalog;
+use inferbench::pipeline::{Processors, RequestPath, LAN};
+use inferbench::serving::{backends, run, Policy, SimConfig, Software};
+use inferbench::util::render;
+
+const DURATION: f64 = 60.0;
+
+fn throughput(software: &'static Software, concurrency: usize, dynamic: bool) -> (f64, f64) {
+    let rn = catalog::find("resnet50").unwrap();
+    let config = SimConfig {
+        arrivals: vec![],
+        closed_loop: Some(concurrency),
+        duration_s: DURATION,
+        policy: if dynamic {
+            Policy::Dynamic { max_size: 32, max_wait_s: 0.002 }
+        } else {
+            Policy::Single
+        },
+        software,
+        service: service_model_for("resnet50", "G1").unwrap(),
+        path: RequestPath { processors: Processors::image(), network: LAN, payload_bytes: rn.request_bytes },
+        max_queue: 8192,
+        seed: 31,
+    };
+    let r = run(&config);
+    (r.throughput_rps(), r.mean_batch())
+}
+
+fn main() {
+    println!("=== Fig 12: dynamic batching throughput vs concurrency (ResNet50, V100) ===\n");
+    let mut rows = Vec::new();
+    for concurrency in [1usize, 2, 4, 8, 16, 32, 64] {
+        let (tfs_dyn, tfs_b) = throughput(&backends::TFS, concurrency, true);
+        let (tfs_off, _) = throughput(&backends::TFS, concurrency, false);
+        let (tris_dyn, tris_b) = throughput(&backends::TRIS, concurrency, true);
+        let (tris_off, _) = throughput(&backends::TRIS, concurrency, false);
+        rows.push(vec![
+            concurrency.to_string(),
+            format!("{tfs_off:.0}"),
+            format!("{tfs_dyn:.0} (b={tfs_b:.1})"),
+            format!("{tris_off:.0}"),
+            format!("{tris_dyn:.0} (b={tris_b:.1})"),
+        ]);
+    }
+    print!(
+        "{}",
+        render::table(
+            &["Concurrency", "TFS no-batch", "TFS dynamic", "TrIS no-batch", "TrIS dynamic"],
+            &rows
+        )
+    );
+    let (tfs_dyn_small, _) = throughput(&backends::TFS, 2, true);
+    let (tfs_off_small, _) = throughput(&backends::TFS, 2, false);
+    let (tris_dyn_big, _) = throughput(&backends::TRIS, 64, true);
+    let (tris_off_big, _) = throughput(&backends::TRIS, 64, false);
+    println!(
+        "\nPaper shape checks: TFS dynamic < TFS no-batch at concurrency 2: {} ({:.0} vs {:.0} rps); \
+         TrIS dynamic >> no-batch at concurrency 64: {} ({:.0} vs {:.0} rps).",
+        tfs_dyn_small < tfs_off_small,
+        tfs_dyn_small,
+        tfs_off_small,
+        tris_dyn_big > 1.5 * tris_off_big,
+        tris_dyn_big,
+        tris_off_big,
+    );
+}

@@ -1,0 +1,98 @@
+//! Fig 14: inference-pipeline decomposition (ResNet50 + TFS).
+//!
+//!  (a) per-stage latency vs batch size (LAN): transmission comparable to
+//!      inference at small batch; inference dominates at large batch
+//!  (b) end-to-end latency by network technology: LAN < WiFi < 4G LTE
+//!  (c) cold-start latency of models under TFS vs TrIS (anchored by the
+//!      real measured XLA compile time of the mini artifacts when present)
+
+use inferbench::coordinator::job::service_model_for;
+use inferbench::metrics::STAGES;
+use inferbench::models::catalog;
+use inferbench::pipeline::{Network, Processors, RequestPath, LAN, LTE_4G, WIFI};
+use inferbench::runtime::Engine;
+use inferbench::serving::{backends, run, Policy, SimConfig};
+use inferbench::util::render;
+use inferbench::workload::{generate, Pattern};
+
+const DURATION: f64 = 60.0;
+
+fn sim(batch: usize, network: Network) -> SimConfig {
+    let rn = catalog::find("resnet50").unwrap();
+    SimConfig {
+        arrivals: generate(&Pattern::Poisson { rate: 60.0 }, DURATION, 2020),
+        closed_loop: None,
+        duration_s: DURATION,
+        policy: if batch == 1 {
+            Policy::Single
+        } else {
+            Policy::Fixed { size: batch, timeout_s: 0.05 }
+        },
+        software: &backends::TFS,
+        service: service_model_for("resnet50", "G1").unwrap(),
+        path: RequestPath { processors: Processors::image(), network, payload_bytes: rn.request_bytes },
+        max_queue: 8192,
+        seed: 4,
+    }
+}
+
+fn main() {
+    println!("=== Fig 14a: latency per stage vs batch (LAN, ResNet50+TFS) ===\n");
+    let mut rows = Vec::new();
+    for batch in [1usize, 4, 8, 16] {
+        let r = run(&sim(batch, LAN));
+        let means = r.collector.stage_means();
+        let mut row = vec![format!("b{batch}")];
+        for s in STAGES {
+            row.push(format!("{:.2}", means[&s] * 1e3));
+        }
+        let total: f64 = STAGES.iter().map(|s| means[s]).sum();
+        row.push(format!("{:.2}", total * 1e3));
+        rows.push(row);
+    }
+    print!(
+        "{}",
+        render::table(
+            &["Batch", "pre ms", "transmit ms", "batch-wait ms", "infer ms", "post ms", "total ms"],
+            &rows
+        )
+    );
+    println!("\nCheck: at b1 transmission ~ inference; at b16 inference+wait dominate.");
+
+    println!("\n=== Fig 14b: end-to-end latency by network technology (b1) ===\n");
+    let mut items = Vec::new();
+    for net in [LAN, WIFI, LTE_4G] {
+        let r = run(&sim(1, net));
+        let mut c = r.collector;
+        items.push((net.name.to_string(), c.e2e.percentile(50.0) * 1e3));
+    }
+    print!("{}", render::bar_chart("median e2e latency (ms) by network", &items, 40));
+    println!("Check: 4G LTE slowest — cloud DL from mobile pays heavy transmission cost.");
+
+    println!("\n=== Fig 14c: cold-start latency, models x software ===\n");
+    // Software model component (load + init) plus, when artifacts exist,
+    // the real measured XLA compile time of the matching mini model.
+    let engine = Engine::cpu("artifacts").ok();
+    let mut rows = Vec::new();
+    for m in ["mobilenet_v1", "resnet50", "bert_large"] {
+        let model = catalog::find(m).unwrap();
+        let measured = engine.as_ref().and_then(|e| {
+            let stem = model.artifact_stem?;
+            e.load(&format!("{stem}_b1"), 0).ok().map(|l| l.compile_time.as_secs_f64())
+        });
+        let mut row = vec![m.to_string()];
+        for sw in [&backends::TFS, &backends::TRIS] {
+            let t = sw.coldstart_s(model.profile.weight_bytes) + measured.unwrap_or(0.0);
+            row.push(format!("{:.1}s", t));
+        }
+        row.push(
+            measured.map(|t| format!("{:.2}s", t)).unwrap_or_else(|| "-".into()),
+        );
+        rows.push(row);
+    }
+    print!(
+        "{}",
+        render::table(&["Model", "TFS coldstart", "TrIS coldstart", "measured XLA compile (mini)"], &rows)
+    );
+    println!("\nCheck: TrIS slowest to start (>10s even for a small IC model); cold start grows with model size.");
+}

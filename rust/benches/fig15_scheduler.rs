@@ -1,0 +1,96 @@
+//! Fig 15: the scheduler case study — average benchmark-job completion
+//! time under RR+FCFS (baseline 1), RR+SJF (baseline 2), and the paper's
+//! QA+SJF two-tier scheduler.
+//!
+//! Paper headline: QA+SJF reduces average JCT by 1.43x (~30%) vs RR+FCFS.
+//! The bench sweeps workload seeds and reports the distribution of the
+//! improvement factor, plus a sensitivity sweep over worker count and
+//! load, and Algorithm-1 batch mode.
+
+use inferbench::coordinator::scheduler::{
+    schedule_batch, simulate_online, synthetic_jobs, SchedulerPolicy,
+};
+use inferbench::util::render;
+use inferbench::util::stats::Summary;
+
+fn main() {
+    let policies =
+        [SchedulerPolicy::rr_fcfs(), SchedulerPolicy::rr_sjf(), SchedulerPolicy::qa_sjf()];
+
+    println!("=== Fig 15: scheduler comparison (online DES, 200 jobs, 4 workers) ===\n");
+    // Distribution of improvement across 40 workload seeds.
+    let mut speedup_rr_sjf = Summary::new();
+    let mut speedup_qa_sjf = Summary::new();
+    let mut mean_jct = [Summary::new(), Summary::new(), Summary::new()];
+    for seed in 0..40u64 {
+        let jobs = synthetic_jobs(200, 20.0, seed);
+        let jcts: Vec<f64> =
+            policies.iter().map(|p| simulate_online(&jobs, 4, *p).mean_jct_s()).collect();
+        for (i, j) in jcts.iter().enumerate() {
+            mean_jct[i].record(*j);
+        }
+        speedup_rr_sjf.record(jcts[0] / jcts[1]);
+        speedup_qa_sjf.record(jcts[0] / jcts[2]);
+    }
+    let items: Vec<(String, f64)> = policies
+        .iter()
+        .zip(&mut mean_jct)
+        .map(|(p, s)| (p.label().to_string(), s.mean()))
+        .collect();
+    print!("{}", render::bar_chart("average JCT (s) over 40 workloads", &items, 40));
+    println!(
+        "\nimprovement vs RR+FCFS: RR+SJF {:.2}x (p5 {:.2} p95 {:.2}) | QA+SJF {:.2}x (p5 {:.2} p95 {:.2})",
+        speedup_rr_sjf.mean(),
+        speedup_rr_sjf.percentile(5.0),
+        speedup_rr_sjf.percentile(95.0),
+        speedup_qa_sjf.mean(),
+        speedup_qa_sjf.percentile(5.0),
+        speedup_qa_sjf.percentile(95.0),
+    );
+    println!("paper: QA+SJF = 1.43x (30% reduction)");
+
+    println!("\n--- sensitivity: workers x load (QA+SJF speedup vs RR+FCFS) ---\n");
+    let mut rows = Vec::new();
+    for workers in [2usize, 4, 8] {
+        let mut row = vec![format!("{workers} workers")];
+        for gap in [10.0, 20.0, 40.0] {
+            let mut s = Summary::new();
+            for seed in 0..10u64 {
+                let jobs = synthetic_jobs(150, gap, 100 + seed);
+                let base = simulate_online(&jobs, workers, SchedulerPolicy::rr_fcfs()).mean_jct_s();
+                let ours = simulate_online(&jobs, workers, SchedulerPolicy::qa_sjf()).mean_jct_s();
+                s.record(base / ours);
+            }
+            row.push(format!("{:.2}x", s.mean()));
+        }
+        rows.push(row);
+    }
+    print!(
+        "{}",
+        render::table(
+            &["", "heavy load (gap 10s)", "medium (gap 20s)", "light (gap 40s)"],
+            &rows
+        )
+    );
+
+    println!("\n--- Algorithm 1 batch mode (all jobs at t=0, 100 jobs, 4 workers) ---\n");
+    let mut rows = Vec::new();
+    let jobs: Vec<_> = synthetic_jobs(100, 0.0001, 7)
+        .into_iter()
+        .map(|mut j| {
+            j.submit_s = 0.0;
+            j
+        })
+        .collect();
+    let base = schedule_batch(&jobs, 4, SchedulerPolicy::rr_fcfs()).mean_jct_s();
+    for p in policies {
+        let out = schedule_batch(&jobs, 4, p);
+        rows.push(vec![
+            p.label().to_string(),
+            format!("{:.1}s", out.mean_jct_s()),
+            format!("{:.2}x", base / out.mean_jct_s()),
+            format!("{:.1}s", out.makespan_s()),
+        ]);
+    }
+    print!("{}", render::table(&["Policy", "Mean JCT", "vs RR+FCFS", "Makespan"], &rows));
+}

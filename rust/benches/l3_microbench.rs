@@ -1,0 +1,154 @@
+//! L3 hot-path microbenchmarks (the §Perf harness): batcher decisions,
+//! DES event throughput, PerfDB insert/query, JSON codec, RNG draw rate,
+//! and the live-runtime single-inference latency when artifacts exist.
+//!
+//! Hand-rolled timing harness (no criterion offline): median-of-N wall
+//! time with warmup, reported as ns/op and ops/s.
+
+use inferbench::coordinator::job::service_model_for;
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::{run, backends, Batcher, Policy, SimConfig};
+use inferbench::util::json;
+use inferbench::util::rng::Pcg64;
+use inferbench::workload::{generate, Pattern};
+use std::time::Instant;
+
+/// Time `f` over `iters` inner ops, repeated `reps` times; report median.
+fn bench(name: &str, iters: u64, reps: usize, mut f: impl FnMut() -> u64) {
+    // Warmup.
+    let mut sink = 0u64;
+    sink = sink.wrapping_add(f());
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            sink = sink.wrapping_add(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[reps / 2];
+    let ns_per_op = median / iters as f64 * 1e9;
+    println!(
+        "{name:<42} {:>12.1} ns/op {:>14.0} ops/s   (sink {sink})",
+        ns_per_op,
+        iters as f64 / median
+    );
+}
+
+fn main() {
+    println!("=== L3 microbenchmarks (median of 7) ===\n");
+
+    bench("rng: Pcg64 next_u64", 1_000_000, 7, || {
+        let mut rng = Pcg64::seeded(1);
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    });
+
+    bench("rng: exponential sample", 1_000_000, 7, || {
+        let mut rng = Pcg64::seeded(2);
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += rng.exponential(100.0);
+        }
+        acc as u64
+    });
+
+    bench("batcher: on_arrival+dispatch (dyn b8)", 100_000, 7, || {
+        let mut b = Batcher::new(Policy::Dynamic { max_size: 8, max_wait_s: 0.005 });
+        let mut n = 0u64;
+        for i in 0..100_000u64 {
+            if let inferbench::serving::Decision::Dispatch(batch) =
+                b.on_arrival(i, i as f64 * 1e-5)
+            {
+                n += batch.len() as u64;
+            }
+        }
+        n
+    });
+
+    let arrivals = generate(&Pattern::Poisson { rate: 2000.0 }, 30.0, 3);
+    let n_arrivals = arrivals.len() as u64;
+    bench(
+        &format!("DES: full sim, {n_arrivals} requests"),
+        n_arrivals,
+        7,
+        || {
+            let config = SimConfig {
+                arrivals: arrivals.clone(),
+                closed_loop: None,
+                duration_s: 30.0,
+                policy: Policy::Dynamic { max_size: 16, max_wait_s: 0.002 },
+                software: &backends::TRIS,
+                service: service_model_for("resnet50", "G1").unwrap(),
+                path: RequestPath::local(Processors::image()),
+                max_queue: 100_000,
+                seed: 7,
+            };
+            run(&config).collector.completed
+        },
+    );
+
+    bench("perfdb: insert+metric", 100_000, 7, || {
+        let mut db = inferbench::perfdb::PerfDb::new();
+        for i in 0..100_000 {
+            db.insert(
+                inferbench::perfdb::Record::new("t", "m", "p", "s")
+                    .with_metric("v", i as f64),
+            );
+        }
+        db.len() as u64
+    });
+
+    let doc = r#"{"task":"serving_sim","model":"resnet50","platform":"G1","software":"tfs","metrics":{"p50_ms":12.5,"p99_ms":48.2,"throughput_rps":312.0}}"#;
+    bench("json: parse PerfDB record", 10_000, 7, || {
+        let mut n = 0u64;
+        for _ in 0..10_000 {
+            n += json::parse(doc).unwrap().as_obj().unwrap().len() as u64;
+        }
+        n
+    });
+
+    bench("stats: summary record+p99 (10k samples)", 10_000, 7, || {
+        let mut s = inferbench::util::stats::Summary::new();
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..10_000 {
+            s.record(rng.lognormal(0.0, 1.0));
+        }
+        s.percentile(99.0) as u64
+    });
+
+    // Runtime hot path: real XLA inference (needs artifacts).
+    match inferbench::runtime::Engine::cpu("artifacts") {
+        Ok(engine) => {
+            let model = engine.load("mlp_d8_w512_b1", 0).unwrap();
+            let x = model.make_input(1);
+            // Warmup.
+            for _ in 0..3 {
+                model.infer(&x).unwrap();
+            }
+            bench("runtime: mlp_d8_w512 b1 real inference", 20, 7, || {
+                let mut n = 0u64;
+                for _ in 0..20 {
+                    n += model.infer(&x).unwrap().len() as u64;
+                }
+                n
+            });
+            let model8 = engine.load("mlp_d8_w512_b8", 0).unwrap();
+            let x8 = model8.make_input(1);
+            for _ in 0..3 {
+                model8.infer(&x8).unwrap();
+            }
+            bench("runtime: mlp_d8_w512 b8 real inference", 20, 7, || {
+                let mut n = 0u64;
+                for _ in 0..20 {
+                    n += model8.infer(&x8).unwrap().len() as u64;
+                }
+                n
+            });
+        }
+        Err(_) => println!("(runtime benches skipped: run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,57 @@
+//! Table 1: the five hardware platforms, with model-derived ridge points
+//! and the cloud instances that carry them. Regenerates the paper's
+//! platform table plus the derived roofline parameters every other bench
+//! relies on.
+
+use inferbench::hardware::{cloud, PLATFORMS};
+use inferbench::util::render;
+
+fn main() {
+    println!("=== Table 1: hardware platforms ===\n");
+    let rows: Vec<Vec<String>> = PLATFORMS
+        .iter()
+        .map(|p| {
+            let instances = cloud::instances_for(p);
+            let offers = if instances.is_empty() {
+                "-".to_string()
+            } else {
+                instances
+                    .iter()
+                    .map(|i| format!("{}/{} ${:.2}h", i.provider, i.instance, i.hourly_usd))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            };
+            vec![
+                p.id.to_string(),
+                p.name.to_string(),
+                format!("{:?}", p.arch),
+                format!("{}", p.memory_gb),
+                if p.is_gpu() {
+                    format!("{:.2} ({:.1})", p.peak_fp32_tflops, p.peak_fp16_tflops)
+                } else {
+                    format!("{:.2} sustained", p.peak_fp32_tflops)
+                },
+                format!("{:.0}", p.mem_bw_gbs),
+                if p.is_gpu() { format!("{:.1}", p.ridge_point()) } else { "-".into() },
+                offers,
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render::table(
+            &[
+                "ID",
+                "Platform",
+                "Arch",
+                "Mem GB",
+                "TFLOPS (FP32/FP16)",
+                "BW GB/s",
+                "Ridge FLOP/B",
+                "Cloud offers"
+            ],
+            &rows
+        )
+    );
+    println!("\nPaper check: V100 > 2080Ti > T4 > P4 in peak and bandwidth; V100 on 2 providers.");
+}

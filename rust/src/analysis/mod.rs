@@ -1,0 +1,11 @@
+//! Stage-4 analysis models (paper §4.2.5, §4.3.1): Roofline, speedup/SLO,
+//! the configuration recommender, and the leaderboard-style aggregation
+//! helpers the benches print figures from.
+
+pub mod recommender;
+pub mod roofline;
+pub mod speedup;
+
+pub use recommender::{recommend, Candidate, Recommendation};
+pub use roofline::{roofline_point, RooflinePoint};
+pub use speedup::{speedup_under_slo, SpeedupRow};

@@ -1,0 +1,144 @@
+//! Configuration recommender (paper §4.2.1 Utility Functions): "Users
+//! need to input an SLO (e.g., latency), and the system will return the
+//! top 3 configurations."
+//!
+//! Candidates are (platform, software, batch) triples scored by cost per
+//! request, filtered by the latency SLO at the expected arrival rate.
+
+use crate::hardware::{cloud, roofline, Parallelism, Platform, PLATFORMS};
+use crate::models::catalog::CatalogModel;
+use crate::serving::backends::{self, Software};
+
+/// One serving configuration the recommender considers.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub platform: &'static Platform,
+    pub software: &'static Software,
+    pub batch: usize,
+    /// Modeled per-request end-to-end latency at the operating point
+    /// (batch fill wait at the arrival rate + service), seconds.
+    pub latency_s: f64,
+    /// Max sustainable throughput, requests/second.
+    pub throughput_rps: f64,
+    /// Cheapest cloud cost per 1k requests (USD), if purchasable.
+    pub cost_per_1k_usd: Option<f64>,
+}
+
+/// A recommendation: the top candidates under the SLO, cheapest first.
+#[derive(Debug, Clone)]
+pub struct Recommendation {
+    pub slo_s: f64,
+    pub rate_rps: f64,
+    pub top: Vec<Candidate>,
+    /// Candidates evaluated in total (for reporting).
+    pub considered: usize,
+}
+
+/// Score all (GPU platform x software x batch) configs for a model and
+/// return the top-k meeting `slo_s` at `rate_rps`, cheapest first.
+pub fn recommend(
+    model: &CatalogModel,
+    par: Parallelism,
+    slo_s: f64,
+    rate_rps: f64,
+    k: usize,
+) -> Recommendation {
+    let batches = [1usize, 2, 4, 8, 16, 32, 64];
+    let mut candidates = Vec::new();
+    let mut considered = 0;
+    for platform in PLATFORMS.iter().filter(|p| p.is_gpu()) {
+        for software in backends::ALL {
+            for &batch in &batches {
+                considered += 1;
+                let est =
+                    roofline::estimate(platform, &model.profile, par, batch, model.request_bytes);
+                let service_s = est.total_s * software.runtime_factor
+                    + software.batch_overhead_s
+                    + software.request_overhead_s;
+                // Expected wait to fill the batch at the arrival rate
+                // (mean: (b-1)/2 inter-arrival gaps).
+                let fill_wait_s = if batch > 1 { (batch as f64 - 1.0) / (2.0 * rate_rps) } else { 0.0 };
+                let latency_s = service_s + fill_wait_s;
+                let throughput = batch as f64 / service_s;
+                if latency_s > slo_s || throughput < rate_rps {
+                    continue;
+                }
+                let cost = cloud::instances_for(platform)
+                    .iter()
+                    .map(|i| i.hourly_usd / (throughput.min(rate_rps.max(1.0)) * 3.6))
+                    .fold(f64::INFINITY, f64::min);
+                candidates.push(Candidate {
+                    platform,
+                    software,
+                    batch,
+                    latency_s,
+                    throughput_rps: throughput,
+                    cost_per_1k_usd: if cost.is_finite() { Some(cost) } else { None },
+                });
+            }
+        }
+    }
+    // Cheapest first; configs without cloud pricing sort last.
+    candidates.sort_by(|a, b| {
+        let ca = a.cost_per_1k_usd.unwrap_or(f64::INFINITY);
+        let cb = b.cost_per_1k_usd.unwrap_or(f64::INFINITY);
+        ca.partial_cmp(&cb).unwrap().then(a.latency_s.partial_cmp(&b.latency_s).unwrap())
+    });
+    candidates.truncate(k);
+    Recommendation { slo_s, rate_rps, top: candidates, considered }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::catalog;
+
+    #[test]
+    fn returns_top_3_meeting_slo() {
+        let m = catalog::find("resnet50").unwrap();
+        let rec = recommend(m, Parallelism::cnn(224), 0.100, 50.0, 3);
+        assert!(rec.top.len() <= 3);
+        assert!(!rec.top.is_empty(), "100ms SLO at 50rps should be satisfiable");
+        for c in &rec.top {
+            assert!(c.latency_s <= 0.100);
+            assert!(c.throughput_rps >= 50.0);
+        }
+        assert!(rec.considered > 50);
+    }
+
+    #[test]
+    fn sorted_cheapest_first() {
+        let m = catalog::find("resnet50").unwrap();
+        let rec = recommend(m, Parallelism::cnn(224), 0.2, 20.0, 5);
+        let costs: Vec<f64> =
+            rec.top.iter().filter_map(|c| c.cost_per_1k_usd).collect();
+        for w in costs.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn tight_slo_prefers_fast_config() {
+        let m = catalog::find("bert_large").unwrap();
+        let tight = recommend(m, Parallelism::sequence(128), 0.020, 10.0, 3);
+        for c in &tight.top {
+            assert!(c.latency_s <= 0.020, "{:?}", c.latency_s);
+        }
+    }
+
+    #[test]
+    fn impossible_slo_returns_empty() {
+        let m = catalog::find("cyclegan").unwrap();
+        let rec = recommend(m, Parallelism::cnn(224), 1e-6, 1000.0, 3);
+        assert!(rec.top.is_empty());
+    }
+
+    #[test]
+    fn higher_rate_requires_higher_throughput() {
+        let m = catalog::find("resnet50").unwrap();
+        let rec = recommend(m, Parallelism::cnn(224), 0.2, 400.0, 10);
+        for c in &rec.top {
+            assert!(c.throughput_rps >= 400.0);
+        }
+    }
+}

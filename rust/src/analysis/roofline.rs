@@ -1,0 +1,110 @@
+//! Roofline analysis model (paper §4.3.1, Fig 10; Williams et al. 2009).
+//!
+//! Places a (model, batch) point at (arithmetic intensity, achieved
+//! ops/second) against a platform's ceilings: the bandwidth roof
+//! `bw * intensity` and the compute roof `peak`.
+
+use crate::hardware::{roofline as hw, Parallelism, Platform};
+use crate::models::Profile;
+
+/// One point on the Roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// FLOPs per HBM byte.
+    pub intensity: f64,
+    /// Achieved FLOP/s.
+    pub achieved_flops: f64,
+    /// Attainable roof at this intensity: min(peak, bw * intensity).
+    pub roof_flops: f64,
+    pub memory_bound: bool,
+}
+
+impl RooflinePoint {
+    /// Achieved fraction of the attainable roof (quality of attained
+    /// performance — what the paper argues Roofline adds over
+    /// percent-of-peak).
+    pub fn attainment(&self) -> f64 {
+        self.achieved_flops / self.roof_flops
+    }
+}
+
+/// Compute the Roofline point for a model at a batch on a platform.
+pub fn roofline_point(
+    label: &str,
+    platform: &Platform,
+    profile: &Profile,
+    par: Parallelism,
+    batch: usize,
+) -> RooflinePoint {
+    let est = hw::estimate(platform, profile, par, batch, 0);
+    let intensity = profile.arithmetic_intensity(batch);
+    let achieved = profile.batch_flops(batch) / est.total_s;
+    let peak = platform.peak_fp32_tflops * 1e12;
+    let bw_roof = platform.mem_bw_gbs * 1e9 * intensity;
+    RooflinePoint {
+        label: label.to_string(),
+        intensity,
+        achieved_flops: achieved,
+        roof_flops: peak.min(bw_roof),
+        memory_bound: est.memory_bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::find;
+    use crate::models::{analytic, catalog};
+
+    #[test]
+    fn achieved_below_roof() {
+        let v100 = find("G1").unwrap();
+        for m in catalog::CATALOG {
+            for b in [1, 8, 32] {
+                let p = roofline_point(m.name, v100, &m.profile, Parallelism::cnn(224), b);
+                assert!(
+                    p.achieved_flops <= p.roof_flops * 1.0001,
+                    "{} b{b}: {} > {}",
+                    m.name,
+                    p.achieved_flops,
+                    p.roof_flops
+                );
+                assert!(p.attainment() > 0.0 && p.attainment() <= 1.0001);
+            }
+        }
+    }
+
+    #[test]
+    fn fig10a_mobilenet_memory_bound_resnet_compute_bound() {
+        let v100 = find("G1").unwrap();
+        let rn = catalog::find("resnet50").unwrap();
+        let mb = catalog::find("mobilenet_v1").unwrap();
+        let ridge = v100.ridge_point();
+        let prn = roofline_point("rn", v100, &rn.profile, Parallelism::cnn(224), 32);
+        let pmb = roofline_point("mb", v100, &mb.profile, Parallelism::cnn(224), 32);
+        assert!(prn.intensity > ridge, "resnet right of ridge");
+        assert!(pmb.intensity < ridge, "mobilenet left of ridge");
+        assert!(pmb.memory_bound && !prn.memory_bound);
+    }
+
+    #[test]
+    fn fig10b_batch_moves_generated_models_right_and_up() {
+        let v100 = find("G1").unwrap();
+        let mlp = analytic::mlp(8, 1024, 256, 16);
+        let p1 = roofline_point("b1", v100, &mlp, Parallelism::mlp(), 1);
+        let p64 = roofline_point("b64", v100, &mlp, Parallelism::mlp(), 64);
+        assert!(p64.intensity > p1.intensity);
+        assert!(p64.achieved_flops > p1.achieved_flops);
+    }
+
+    #[test]
+    fn roof_is_min_of_ceilings() {
+        let v100 = find("G1").unwrap();
+        let mlp = analytic::mlp(4, 256, 256, 16);
+        let p = roofline_point("x", v100, &mlp, Parallelism::mlp(), 1);
+        let peak = v100.peak_fp32_tflops * 1e12;
+        let bw = v100.mem_bw_gbs * 1e9 * p.intensity;
+        assert!((p.roof_flops - peak.min(bw)).abs() < 1.0);
+    }
+}

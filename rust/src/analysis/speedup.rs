@@ -1,0 +1,139 @@
+//! GPU/CPU speedup under an SLO (paper Fig 7c).
+//!
+//! The paper's method: use each service's CPU latency as its SLO, then
+//! find the best batch size whose *per-request* GPU latency still meets
+//! the SLO, and report the throughput speedup at that operating point.
+
+use crate::hardware::{roofline, Parallelism, Platform};
+use crate::models::Profile;
+
+/// One row of the Fig 7c study.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub model: String,
+    /// The SLO used (the CPU latency), seconds.
+    pub slo_s: f64,
+    /// Best batch size meeting the SLO on the GPU.
+    pub best_batch: usize,
+    /// GPU per-request latency at that batch.
+    pub gpu_latency_s: f64,
+    /// Throughput speedup over the CPU at batch 1.
+    pub speedup: f64,
+}
+
+/// Compute the speedup row for one model. `cpu_latency_s` is the measured
+/// or modeled CPU (C1) latency at batch 1 — it doubles as the SLO.
+pub fn speedup_under_slo(
+    model: &str,
+    gpu: &Platform,
+    profile: &Profile,
+    par: Parallelism,
+    request_bytes: u64,
+    cpu_latency_s: f64,
+    candidate_batches: &[usize],
+) -> SpeedupRow {
+    let cpu_throughput = 1.0 / cpu_latency_s;
+    let mut best_batch = 1;
+    let mut best_throughput = 0.0;
+    let mut best_latency = f64::INFINITY;
+    for &b in candidate_batches {
+        let est = roofline::estimate(gpu, profile, par, b, request_bytes);
+        // SLO check on the full batch latency: a request admitted into a
+        // batch waits for the whole batch to return.
+        if est.total_s <= cpu_latency_s {
+            let tput = b as f64 / est.total_s;
+            if tput > best_throughput {
+                best_throughput = tput;
+                best_batch = b;
+                best_latency = est.total_s;
+            }
+        }
+    }
+    if best_throughput == 0.0 {
+        // Even batch 1 misses the SLO; report batch 1 as the paper would.
+        let est = roofline::estimate(gpu, profile, par, 1, request_bytes);
+        best_batch = 1;
+        best_latency = est.total_s;
+        best_throughput = 1.0 / est.total_s;
+    }
+    SpeedupRow {
+        model: model.to_string(),
+        slo_s: cpu_latency_s,
+        best_batch,
+        gpu_latency_s: best_latency,
+        speedup: best_throughput / cpu_throughput,
+    }
+}
+
+/// Model the CPU (C1) latency of a profile (used when no measured value
+/// is available — e.g. full-scale catalog models too big to run here).
+pub fn modeled_cpu_latency(cpu: &Platform, profile: &Profile, par: Parallelism) -> f64 {
+    roofline::estimate(cpu, profile, par, 1, 0).total_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::find;
+    use crate::models::catalog;
+
+    const BATCHES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128];
+
+    #[test]
+    fn speedups_in_paper_range() {
+        // Paper Fig 7c: 3.6x .. 47.4x across OD/GAN/TC/IC on V100.
+        let v100 = find("G1").unwrap();
+        let cpu = find("C1").unwrap();
+        for m in catalog::speedup_study_models() {
+            let par = Parallelism::cnn(28);
+            let cpu_lat = modeled_cpu_latency(cpu, &m.profile, par);
+            let row =
+                speedup_under_slo(m.name, v100, &m.profile, par, m.request_bytes, cpu_lat, BATCHES);
+            assert!(
+                row.speedup > 2.0 && row.speedup < 100.0,
+                "{}: speedup {} out of plausible range",
+                m.name,
+                row.speedup
+            );
+        }
+    }
+
+    #[test]
+    fn heavier_models_speed_up_more() {
+        // GPU advantage grows with compute intensity: CycleGAN >> TextCNN.
+        let v100 = find("G1").unwrap();
+        let cpu = find("C1").unwrap();
+        let gan = catalog::find("cyclegan").unwrap();
+        let tc = catalog::find("textlstm").unwrap();
+        let par = Parallelism::cnn(224);
+        let row_gan = speedup_under_slo(
+            "gan", v100, &gan.profile, par, gan.request_bytes,
+            modeled_cpu_latency(cpu, &gan.profile, par), BATCHES,
+        );
+        let row_tc = speedup_under_slo(
+            "tc", v100, &tc.profile, par, tc.request_bytes,
+            modeled_cpu_latency(cpu, &tc.profile, par), BATCHES,
+        );
+        assert!(row_gan.speedup > row_tc.speedup);
+    }
+
+    #[test]
+    fn chosen_batch_meets_slo() {
+        let v100 = find("G1").unwrap();
+        let m = catalog::find("resnet50").unwrap();
+        let par = Parallelism::cnn(224);
+        let slo = 0.050; // 50 ms
+        let row = speedup_under_slo("rn", v100, &m.profile, par, m.request_bytes, slo, BATCHES);
+        assert!(row.gpu_latency_s <= slo + 1e-9);
+        assert!(row.best_batch >= 1);
+    }
+
+    #[test]
+    fn impossible_slo_falls_back_to_batch_1() {
+        let v100 = find("G1").unwrap();
+        let m = catalog::find("cyclegan").unwrap();
+        let par = Parallelism::cnn(224);
+        let row = speedup_under_slo("gan", v100, &m.profile, par, 0, 1e-6, BATCHES);
+        assert_eq!(row.best_batch, 1);
+    }
+}

@@ -1,0 +1,307 @@
+//! Benchmark-job specifications (paper §4.2.2: "From their submission
+//! (a YAML file), the system first chooses ...") and their execution.
+//!
+//! A submission parses into a [`JobSpec`]; a follower worker executes it
+//! with [`execute`], producing PerfDB records. Job kinds cover the tasks
+//! the paper's system automates: serving-tier simulations, hardware-tier
+//! sweeps, and (for scheduler studies / tests) calibrated sleeps.
+
+use crate::hardware::{self, Parallelism};
+use crate::models::catalog;
+use crate::perfdb::Record;
+use crate::pipeline::{Processors, RequestPath, LAN};
+use crate::serving::{self, backends, Policy, ServiceModel, SimConfig};
+use crate::util::json::Json;
+use crate::util::yamlish;
+use crate::workload::{generate, Pattern};
+use anyhow::{anyhow, bail, Result};
+
+/// What a worker should run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobKind {
+    /// Simulate a serving pipeline (software/pipeline tiers).
+    ServingSim {
+        model: String,
+        platform: String,
+        software: String,
+        rate_rps: f64,
+        duration_s: f64,
+        max_batch: usize,
+        max_wait_s: f64,
+    },
+    /// Roofline sweep of a model across batch sizes (hardware tier).
+    HardwareSweep { model: String, platform: String, batches: Vec<usize> },
+    /// Do nothing for a fixed time (scheduler studies; time is scaled by
+    /// the leader's `time_scale`).
+    Sleep { seconds: f64 },
+}
+
+/// A parsed benchmark submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    pub kind: JobKind,
+    /// Scheduler's duration estimate (paper: processing times are known).
+    pub est_duration_s: f64,
+}
+
+impl JobSpec {
+    /// Parse a YAML submission (see `examples/submissions/` for samples).
+    pub fn parse_yaml(text: &str) -> Result<JobSpec> {
+        let doc = yamlish::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<JobSpec> {
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unnamed")
+            .to_string();
+        let task = doc
+            .get("task")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("submission missing 'task'"))?;
+        let kind = match task {
+            "serving_sim" => {
+                let wl = doc.get("workload");
+                JobKind::ServingSim {
+                    model: str_or(doc, "model", "resnet50"),
+                    platform: str_or(doc, "platform", "G1"),
+                    software: str_or(doc, "software", "tfs"),
+                    rate_rps: wl.and_then(|w| w.get("rate")).and_then(|v| v.as_f64()).unwrap_or(30.0),
+                    duration_s: wl
+                        .and_then(|w| w.get("duration_s"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(60.0),
+                    max_batch: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_size"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(8) as usize,
+                    max_wait_s: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_wait_ms"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(5.0)
+                        / 1e3,
+                }
+            }
+            "hardware_sweep" => JobKind::HardwareSweep {
+                model: str_or(doc, "model", "resnet50"),
+                platform: str_or(doc, "platform", "G1"),
+                batches: doc
+                    .get("batches")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|i| i as usize).collect())
+                    .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]),
+            },
+            "sleep" => JobKind::Sleep {
+                seconds: doc.get("seconds").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            },
+            other => bail!("unknown task kind {other:?}"),
+        };
+        let est = doc
+            .get("est_duration_s")
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| default_estimate(&kind));
+        Ok(JobSpec { name, kind, est_duration_s: est })
+    }
+}
+
+fn str_or(doc: &Json, key: &str, default: &str) -> String {
+    doc.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+}
+
+/// Duration estimate used by the scheduler when the submission omits one.
+fn default_estimate(kind: &JobKind) -> f64 {
+    match kind {
+        JobKind::ServingSim { duration_s, .. } => duration_s * 0.05 + 2.0, // sim runs much faster than simulated time
+        JobKind::HardwareSweep { batches, .. } => 0.5 + batches.len() as f64 * 0.1,
+        JobKind::Sleep { seconds } => *seconds,
+    }
+}
+
+/// Family parallelism for a catalog model (the roofline occupancy input).
+fn parallelism_for(model: &catalog::CatalogModel) -> Parallelism {
+    match model.task {
+        // Conv nets: per-sample row parallelism is bounded by the
+        // mid/late feature maps (~28x28), not the input resolution —
+        // this is what produces the paper's flat small-batch latency.
+        catalog::Task::IC | catalog::Task::OD | catalog::Task::GAN => Parallelism::cnn(28),
+        catalog::Task::NLP => Parallelism::sequence(128),
+        catalog::Task::TC => Parallelism::sequence(64),
+    }
+}
+
+/// Build the serving-sim service model for (model, platform).
+pub fn service_model_for(model_name: &str, platform_id: &str) -> Result<ServiceModel> {
+    let model = catalog::find(model_name)
+        .ok_or_else(|| anyhow!("model {model_name:?} not in catalog"))?;
+    let platform = hardware::find(platform_id)
+        .ok_or_else(|| anyhow!("platform {platform_id:?} not in Table 1"))?;
+    Ok(ServiceModel::Analytic {
+        platform,
+        profile: model.profile,
+        parallelism: parallelism_for(model),
+        request_bytes: model.request_bytes,
+    })
+}
+
+/// Execute a job, producing PerfDB records. `time_scale` divides sleep
+/// durations (scheduler studies run faster than real time).
+pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>> {
+    match &spec.kind {
+        JobKind::ServingSim { model, platform, software, rate_rps, duration_s, max_batch, max_wait_s } => {
+            let sw = backends::find(software)
+                .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
+            let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
+            let config = SimConfig {
+                arrivals: generate(&Pattern::Poisson { rate: *rate_rps }, *duration_s, seed),
+                closed_loop: None,
+                duration_s: *duration_s,
+                policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: *max_wait_s },
+                software: sw,
+                service: service_model_for(model, platform)?,
+                path: RequestPath {
+                    processors: Processors::image(),
+                    network: LAN,
+                    payload_bytes: m.request_bytes,
+                },
+                max_queue: 4096,
+                seed,
+            };
+            let result = serving::run(&config);
+            let mut collector = result.collector;
+            let record = Record::new("serving_sim", model, platform, software)
+                .with_metric("rate_rps", *rate_rps)
+                .with_metric("p50_ms", collector.e2e.percentile(50.0) * 1e3)
+                .with_metric("p95_ms", collector.e2e.percentile(95.0) * 1e3)
+                .with_metric("p99_ms", collector.e2e.percentile(99.0) * 1e3)
+                .with_metric("throughput_rps", collector.throughput_rps())
+                .with_metric("mean_batch", result.batch_sizes.iter().sum::<usize>() as f64 / result.batch_sizes.len().max(1) as f64)
+                .with_metric("utilization", result.timeline.mean())
+                .with_metric("dropped", result.dropped as f64);
+            Ok(vec![record])
+        }
+        JobKind::HardwareSweep { model, platform, batches } => {
+            let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
+            let p = hardware::find(platform)
+                .ok_or_else(|| anyhow!("platform {platform:?} unknown"))?;
+            let par = parallelism_for(m);
+            let mut out = Vec::new();
+            for &b in batches {
+                let est = hardware::estimate(p, &m.profile, par, b, m.request_bytes);
+                out.push(
+                    Record::new("hardware_sweep", model, platform, "-")
+                        .with_metric("batch", b as f64)
+                        .with_metric("latency_ms", est.total_s * 1e3)
+                        .with_metric("latency_per_sample_ms", est.total_s / b as f64 * 1e3)
+                        .with_metric("throughput_rps", b as f64 / est.total_s)
+                        .with_metric("utilization", est.utilization)
+                        .with_metric("memory_bound", if est.memory_bound { 1.0 } else { 0.0 }),
+                );
+            }
+            Ok(out)
+        }
+        JobKind::Sleep { seconds } => {
+            std::thread::sleep(std::time::Duration::from_secs_f64(seconds / time_scale.max(1e-9)));
+            Ok(vec![Record::new("sleep", "-", "-", "-").with_metric("seconds", *seconds)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SUBMISSION: &str = r#"
+name: resnet-tail-latency
+task: serving_sim
+model: resnet50
+platform: G1
+software: tris
+workload:
+  rate: 80.0
+  duration_s: 10
+batching:
+  max_size: 16
+  max_wait_ms: 2
+"#;
+
+    #[test]
+    fn parses_serving_submission() {
+        let spec = JobSpec::parse_yaml(SUBMISSION).unwrap();
+        assert_eq!(spec.name, "resnet-tail-latency");
+        match &spec.kind {
+            JobKind::ServingSim { model, software, rate_rps, max_batch, max_wait_s, .. } => {
+                assert_eq!(model, "resnet50");
+                assert_eq!(software, "tris");
+                assert_eq!(*rate_rps, 80.0);
+                assert_eq!(*max_batch, 16);
+                assert!((max_wait_s - 0.002).abs() < 1e-12);
+            }
+            k => panic!("{k:?}"),
+        }
+        assert!(spec.est_duration_s > 0.0);
+    }
+
+    #[test]
+    fn parses_hardware_sweep() {
+        let spec =
+            JobSpec::parse_yaml("task: hardware_sweep\nmodel: bert_large\nplatform: G3\nbatches: [1, 8]\n")
+                .unwrap();
+        match &spec.kind {
+            JobKind::HardwareSweep { batches, platform, .. } => {
+                assert_eq!(batches, &vec![1, 8]);
+                assert_eq!(platform, "G3");
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_task() {
+        assert!(JobSpec::parse_yaml("task: mine_bitcoin\n").is_err());
+        assert!(JobSpec::parse_yaml("name: x\n").is_err());
+    }
+
+    #[test]
+    fn executes_serving_sim() {
+        let spec = JobSpec::parse_yaml(SUBMISSION).unwrap();
+        let records = execute(&spec, 7, 1.0).unwrap();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        assert!(r.metric("p99_ms").unwrap() >= r.metric("p50_ms").unwrap());
+        assert!(r.metric("throughput_rps").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn executes_hardware_sweep() {
+        let spec = JobSpec::parse_yaml(
+            "task: hardware_sweep\nmodel: resnet50\nplatform: G1\nbatches: [1, 4, 16]\n",
+        )
+        .unwrap();
+        let records = execute(&spec, 0, 1.0).unwrap();
+        assert_eq!(records.len(), 3);
+        // Per-sample latency should fall with batch.
+        let l1 = records[0].metric("latency_per_sample_ms").unwrap();
+        let l16 = records[2].metric("latency_per_sample_ms").unwrap();
+        assert!(l16 < l1);
+    }
+
+    #[test]
+    fn execute_rejects_unknown_model() {
+        let spec =
+            JobSpec::parse_yaml("task: hardware_sweep\nmodel: alexnet9000\nplatform: G1\n").unwrap();
+        assert!(execute(&spec, 0, 1.0).is_err());
+    }
+
+    #[test]
+    fn sleep_respects_time_scale() {
+        let spec = JobSpec::parse_yaml("task: sleep\nseconds: 0.2\n").unwrap();
+        let t0 = std::time::Instant::now();
+        execute(&spec, 0, 100.0).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.1);
+    }
+}

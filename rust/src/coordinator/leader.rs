@@ -1,0 +1,425 @@
+//! The leader/follower benchmark cluster (paper §4.1, Fig 1/Fig 5).
+//!
+//! The leader accepts submissions (task manager), places them on follower
+//! workers via the two-tier scheduler (queue-aware LB at the leader, SJF
+//! at each worker), monitors worker status, and aggregates results into
+//! the PerfDB. Followers are worker threads here instead of cluster nodes
+//! (DESIGN.md §2) — the scheduling dynamics are identical; only the
+//! transport differs.
+
+use super::job::{self, JobSpec};
+use super::scheduler::{LoadBalance, LocalOrder, SchedulerPolicy};
+use crate::perfdb::{PerfDb, Record};
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// A submitted job tracked by the task manager.
+#[derive(Debug, Clone)]
+struct Pending {
+    id: u64,
+    spec: JobSpec,
+    submitted: Instant,
+}
+
+/// Completion log entry (the task manager's record, paper §4.2.1).
+#[derive(Debug, Clone)]
+pub struct Completed {
+    pub id: u64,
+    pub name: String,
+    pub worker: usize,
+    /// Queue wait, seconds.
+    pub waited_s: f64,
+    /// Execution time, seconds.
+    pub ran_s: f64,
+    pub ok: bool,
+}
+
+impl Completed {
+    pub fn jct_s(&self) -> f64 {
+        self.waited_s + self.ran_s
+    }
+}
+
+/// Monitor snapshot of one worker (paper §4.2.1 Monitor).
+#[derive(Debug, Clone)]
+pub struct WorkerStatus {
+    pub worker: usize,
+    pub queued: usize,
+    /// Estimated seconds of queued work (published queue length,
+    /// Algorithm 1).
+    pub backlog_s: f64,
+    pub busy: bool,
+    pub completed: u64,
+}
+
+struct WorkerShared {
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    backlog_s: Mutex<f64>,
+    busy: AtomicBool,
+    completed: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// Leader configuration.
+#[derive(Debug, Clone)]
+pub struct LeaderConfig {
+    pub workers: usize,
+    pub policy: SchedulerPolicy,
+    /// Divides Sleep-job durations (scheduler studies run scaled).
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for LeaderConfig {
+    fn default() -> Self {
+        LeaderConfig { workers: 4, policy: SchedulerPolicy::qa_sjf(), time_scale: 1.0, seed: 0 }
+    }
+}
+
+/// The running cluster.
+pub struct Leader {
+    config: LeaderConfig,
+    shared: Vec<Arc<WorkerShared>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub perfdb: Arc<Mutex<PerfDb>>,
+    completions: Arc<Mutex<Vec<Completed>>>,
+    next_id: AtomicU64,
+    rr: AtomicU64,
+}
+
+impl Leader {
+    /// Start the cluster: spawns follower worker threads.
+    pub fn start(config: LeaderConfig) -> Leader {
+        let perfdb = Arc::new(Mutex::new(PerfDb::new()));
+        let completions = Arc::new(Mutex::new(Vec::new()));
+        let mut shared = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..config.workers {
+            let ws = Arc::new(WorkerShared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                backlog_s: Mutex::new(0.0),
+                busy: AtomicBool::new(false),
+                completed: AtomicU64::new(0),
+                stop: AtomicBool::new(false),
+            });
+            shared.push(ws.clone());
+            let db = perfdb.clone();
+            let done = completions.clone();
+            let cfg = config.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("inferbench-worker-{w}"))
+                    .spawn(move || worker_loop(w, ws, db, done, cfg))
+                    .expect("spawn worker"),
+            );
+        }
+        Leader {
+            config,
+            shared,
+            handles,
+            perfdb,
+            completions,
+            next_id: AtomicU64::new(0),
+            rr: AtomicU64::new(0),
+        }
+    }
+
+    /// Tier-1 placement: submit a job; returns (job id, chosen worker).
+    pub fn submit(&self, spec: JobSpec) -> Result<(u64, usize)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let w = match self.config.policy.lb {
+            LoadBalance::RoundRobin => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % self.shared.len()
+            }
+            LoadBalance::QueueAware => {
+                // Workers publish queue length (backlog seconds); pick min.
+                let mut best = 0;
+                let mut best_backlog = f64::INFINITY;
+                for (i, ws) in self.shared.iter().enumerate() {
+                    let b = *ws.backlog_s.lock().unwrap()
+                        + if ws.busy.load(Ordering::Relaxed) { 1.0 } else { 0.0 };
+                    if b < best_backlog {
+                        best_backlog = b;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        let ws = &self.shared[w];
+        {
+            let mut q = ws.queue.lock().unwrap();
+            q.push_back(Pending { id, spec: spec.clone(), submitted: Instant::now() });
+            *ws.backlog_s.lock().unwrap() += spec.est_duration_s;
+        }
+        ws.cv.notify_one();
+        Ok((id, w))
+    }
+
+    /// Parse + submit a YAML submission.
+    pub fn submit_yaml(&self, text: &str) -> Result<(u64, usize)> {
+        self.submit(JobSpec::parse_yaml(text)?)
+    }
+
+    /// Monitor: current status of every worker.
+    pub fn status(&self) -> Vec<WorkerStatus> {
+        self.shared
+            .iter()
+            .enumerate()
+            .map(|(i, ws)| WorkerStatus {
+                worker: i,
+                queued: ws.queue.lock().unwrap().len(),
+                backlog_s: *ws.backlog_s.lock().unwrap(),
+                busy: ws.busy.load(Ordering::Relaxed),
+                completed: ws.completed.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Block until `n` jobs have completed (or timeout).
+    pub fn wait_for(&self, n: usize, timeout: std::time::Duration) -> Result<Vec<Completed>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let done = self.completions.lock().unwrap();
+                if done.len() >= n {
+                    return Ok(done.clone());
+                }
+            }
+            if Instant::now() > deadline {
+                return Err(anyhow!(
+                    "timeout: {} of {n} jobs completed",
+                    self.completions.lock().unwrap().len()
+                ));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
+    /// All completions so far.
+    pub fn completions(&self) -> Vec<Completed> {
+        self.completions.lock().unwrap().clone()
+    }
+
+    /// Stop workers (drains nothing; call after wait_for).
+    pub fn shutdown(mut self) {
+        for ws in &self.shared {
+            ws.stop.store(true, Ordering::Relaxed);
+            ws.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    ws: Arc<WorkerShared>,
+    db: Arc<Mutex<PerfDb>>,
+    done: Arc<Mutex<Vec<Completed>>>,
+    cfg: LeaderConfig,
+) {
+    loop {
+        // Tier-2 ordering: pick the next job from the local queue.
+        let pending = {
+            let mut q = ws.queue.lock().unwrap();
+            loop {
+                if let Some(job) = pick(&mut q, cfg.policy.order) {
+                    break Some(job);
+                }
+                if ws.stop.load(Ordering::Relaxed) {
+                    break None;
+                }
+                let (guard, _) =
+                    ws.cv.wait_timeout(q, std::time::Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+        };
+        let Some(pending) = pending else { return };
+
+        ws.busy.store(true, Ordering::Relaxed);
+        let waited_s = pending.submitted.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let result = job::execute(&pending.spec, cfg.seed ^ pending.id, cfg.time_scale);
+        let ran_s = t0.elapsed().as_secs_f64();
+        ws.busy.store(false, Ordering::Relaxed);
+        {
+            let mut b = ws.backlog_s.lock().unwrap();
+            *b = (*b - pending.spec.est_duration_s).max(0.0);
+        }
+        ws.completed.fetch_add(1, Ordering::Relaxed);
+
+        let ok = match result {
+            Ok(records) => {
+                let mut db = db.lock().unwrap();
+                for r in records {
+                    db.insert(r);
+                }
+                true
+            }
+            Err(e) => {
+                // Failure visibility: record the error in the PerfDB too.
+                let mut db = db.lock().unwrap();
+                db.insert(
+                    Record::new("job_error", &pending.spec.name, "-", "-")
+                        .with_metric("error", 1.0),
+                );
+                eprintln!("worker {wid}: job {} failed: {e:#}", pending.spec.name);
+                false
+            }
+        };
+        done.lock().unwrap().push(Completed {
+            id: pending.id,
+            name: pending.spec.name.clone(),
+            worker: wid,
+            waited_s,
+            ran_s,
+            ok,
+        });
+    }
+}
+
+/// Tier-2 pick: FCFS = front; SJF = shortest estimate.
+fn pick(q: &mut VecDeque<Pending>, order: LocalOrder) -> Option<Pending> {
+    if q.is_empty() {
+        return None;
+    }
+    let idx = match order {
+        LocalOrder::Fcfs => 0,
+        LocalOrder::Sjf => q
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                a.1.spec
+                    .est_duration_s
+                    .partial_cmp(&b.1.spec.est_duration_s)
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap(),
+    };
+    q.remove(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::Query;
+
+    fn sleep_spec(name: &str, secs: f64) -> JobSpec {
+        JobSpec::parse_yaml(&format!("name: {name}\ntask: sleep\nseconds: {secs}\n")).unwrap()
+    }
+
+    #[test]
+    fn jobs_run_and_complete() {
+        let leader = Leader::start(LeaderConfig { workers: 2, time_scale: 100.0, ..Default::default() });
+        for i in 0..6 {
+            leader.submit(sleep_spec(&format!("job{i}"), 0.5)).unwrap();
+        }
+        let done = leader.wait_for(6, std::time::Duration::from_secs(10)).unwrap();
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|c| c.ok));
+        // Both workers participated.
+        let workers: std::collections::BTreeSet<usize> = done.iter().map(|c| c.worker).collect();
+        assert!(workers.len() >= 2);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn results_land_in_perfdb() {
+        let leader = Leader::start(LeaderConfig { workers: 1, ..Default::default() });
+        leader
+            .submit_yaml(
+                "name: sweep\ntask: hardware_sweep\nmodel: resnet50\nplatform: G1\nbatches: [1, 8]\n",
+            )
+            .unwrap();
+        leader.wait_for(1, std::time::Duration::from_secs(10)).unwrap();
+        let db = leader.perfdb.lock().unwrap();
+        assert_eq!(db.query(&Query::default().task("hardware_sweep")).len(), 2);
+        drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn queue_aware_avoids_busy_worker() {
+        // One long job on worker A; following shorts should go elsewhere.
+        let leader = Leader::start(LeaderConfig {
+            workers: 2,
+            policy: SchedulerPolicy::qa_sjf(),
+            time_scale: 10.0,
+            seed: 0,
+        });
+        leader.submit(sleep_spec("long", 5.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut placements = Vec::new();
+        for i in 0..4 {
+            placements.push(leader.submit(sleep_spec(&format!("s{i}"), 0.1)).unwrap().1);
+        }
+        leader.wait_for(5, std::time::Duration::from_secs(10)).unwrap();
+        // All four short jobs placed on the other worker.
+        let long_worker = leader
+            .completions()
+            .iter()
+            .find(|c| c.name == "long")
+            .unwrap()
+            .worker;
+        assert!(placements.iter().all(|&w| w != long_worker), "{placements:?} vs {long_worker}");
+        leader.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_reported_not_fatal() {
+        let leader = Leader::start(LeaderConfig { workers: 1, ..Default::default() });
+        leader
+            .submit_yaml("name: bad\ntask: hardware_sweep\nmodel: notamodel\nplatform: G1\n")
+            .unwrap();
+        let done = leader.wait_for(1, std::time::Duration::from_secs(10)).unwrap();
+        assert!(!done[0].ok);
+        let db = leader.perfdb.lock().unwrap();
+        assert_eq!(db.query(&Query::default().task("job_error")).len(), 1);
+        drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn monitor_reports_queue_state() {
+        let leader = Leader::start(LeaderConfig { workers: 1, time_scale: 10.0, ..Default::default() });
+        leader.submit(sleep_spec("a", 2.0)).unwrap();
+        leader.submit(sleep_spec("b", 2.0)).unwrap();
+        leader.submit(sleep_spec("c", 2.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let status = leader.status();
+        assert_eq!(status.len(), 1);
+        assert!(status[0].busy || status[0].queued > 0);
+        leader.wait_for(3, std::time::Duration::from_secs(10)).unwrap();
+        let status = leader.status();
+        assert_eq!(status[0].completed, 3);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn sjf_runs_short_job_first() {
+        // Single worker; stuff queue while busy, then observe order.
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            policy: SchedulerPolicy::qa_sjf(),
+            time_scale: 20.0,
+            seed: 0,
+        });
+        leader.submit(sleep_spec("blocker", 2.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        leader.submit(sleep_spec("long", 4.0)).unwrap();
+        leader.submit(sleep_spec("short", 0.2)).unwrap();
+        let done = leader.wait_for(3, std::time::Duration::from_secs(10)).unwrap();
+        let order: Vec<&str> = done.iter().map(|c| c.name.as_str()).collect();
+        let pos = |n: &str| order.iter().position(|x| *x == n).unwrap();
+        assert!(pos("short") < pos("long"), "{order:?}");
+        leader.shutdown();
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's system contribution: the leader/follower benchmark
+//! coordinator with its two-tier scheduler (paper §4.1, §4.2.1, §4.3.2).
+//!
+//! * [`scheduler`] — Algorithm 1 (batch mode) + the online DES used by
+//!   the Fig 15 study.
+//! * [`job`] — YAML submission parsing and job execution on followers.
+//! * [`leader`] — the live threaded cluster: task manager, queue-aware
+//!   load balancer, SJF workers, monitor, PerfDB aggregation.
+
+pub mod job;
+pub mod leader;
+pub mod scheduler;
+
+pub use job::{JobKind, JobSpec};
+pub use leader::{Leader, LeaderConfig};
+pub use scheduler::{schedule_batch, simulate_online, Job, SchedulerPolicy};

@@ -1,0 +1,90 @@
+//! Cloud pricing model (paper §3.1 Cost, Fig 8b).
+//!
+//! Hourly rates for GPU instances across two anonymized providers, matching
+//! the paper's convention: providers are [C1, C2], instances [I1, I2, I3].
+//! Rates reflect 2020 list prices (AWS p3/g4dn, GCP V100/P4/T4 attach).
+//! Cost per request = hourly rate / requests per hour at the achieved
+//! throughput.
+
+use super::platforms::Platform;
+use super::roofline::Estimate;
+
+/// A purchasable GPU instance at a provider.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// Anonymized provider label (paper: C1 = AWS, C2 = Google Cloud).
+    pub provider: &'static str,
+    /// Anonymized instance label (I1 = V100, I2 = P4, I3 = T4).
+    pub instance: &'static str,
+    /// Platform id from Table 1 this instance carries.
+    pub platform_id: &'static str,
+    pub hourly_usd: f64,
+}
+
+/// The instance offerings the paper compares (Fig 8b).
+pub const INSTANCES: &[Instance] = &[
+    Instance { provider: "C1", instance: "I1", platform_id: "G1", hourly_usd: 3.06 }, // AWS p3.2xlarge
+    Instance { provider: "C2", instance: "I1", platform_id: "G1", hourly_usd: 2.48 }, // GCP V100
+    Instance { provider: "C2", instance: "I2", platform_id: "G4", hourly_usd: 0.60 }, // GCP P4
+    Instance { provider: "C1", instance: "I3", platform_id: "G3", hourly_usd: 0.526 }, // AWS g4dn
+    Instance { provider: "C2", instance: "I3", platform_id: "G3", hourly_usd: 0.35 }, // GCP T4
+];
+
+/// Cost per request at the achieved throughput of `est`.
+pub fn cost_per_request_usd(inst: &Instance, est: &Estimate, batch: usize) -> f64 {
+    let throughput = batch.max(1) as f64 / est.total_s; // requests/s
+    inst.hourly_usd / (throughput * 3600.0)
+}
+
+/// All instances carrying a given platform.
+pub fn instances_for(platform: &Platform) -> Vec<&'static Instance> {
+    INSTANCES.iter().filter(|i| i.platform_id == platform.id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::platforms::find;
+    use crate::hardware::roofline::{estimate, Parallelism};
+    use crate::models::catalog;
+
+    #[test]
+    fn same_device_different_providers_differ() {
+        // Paper observation 1 (Fig 8b): V100 hourly rate differs across
+        // providers.
+        let v100_offers: Vec<_> = INSTANCES.iter().filter(|i| i.platform_id == "G1").collect();
+        assert_eq!(v100_offers.len(), 2);
+        assert_ne!(v100_offers[0].hourly_usd, v100_offers[1].hourly_usd);
+    }
+
+    #[test]
+    fn t4_cheaper_than_p4_despite_more_powerful() {
+        // Paper observation 2 (Fig 8b).
+        let t4 = find("G3").unwrap();
+        let p4 = find("G4").unwrap();
+        assert!(t4.peak_fp32_tflops > p4.peak_fp32_tflops);
+        let t4_price = INSTANCES.iter().filter(|i| i.platform_id == "G3").map(|i| i.hourly_usd).fold(f64::MAX, f64::min);
+        let p4_price = INSTANCES.iter().filter(|i| i.platform_id == "G4").map(|i| i.hourly_usd).fold(f64::MAX, f64::min);
+        assert!(t4_price < p4_price);
+    }
+
+    #[test]
+    fn cost_per_request_decreases_with_batch() {
+        // Paper observation 3 (Fig 8b).
+        let v100 = find("G1").unwrap();
+        let rn = catalog::find("resnet50").unwrap();
+        let inst = &INSTANCES[0];
+        let par = Parallelism::cnn(224);
+        let c1 = cost_per_request_usd(inst, &estimate(v100, &rn.profile, par, 1, 0), 1);
+        let c32 = cost_per_request_usd(inst, &estimate(v100, &rn.profile, par, 32, 0), 32);
+        assert!(c32 < c1);
+    }
+
+    #[test]
+    fn instances_for_lookup() {
+        let v100 = find("G1").unwrap();
+        assert_eq!(instances_for(v100).len(), 2);
+        let cpu = find("C1").unwrap();
+        assert!(instances_for(cpu).is_empty());
+    }
+}

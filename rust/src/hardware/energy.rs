@@ -1,0 +1,91 @@
+//! Energy and CO2 cost model (paper §3.1 Cost, Fig 8a).
+//!
+//! Board power is modeled as idle + (peak-idle) * utilization; energy per
+//! request integrates that power over the batch latency and divides by
+//! batch. CO2 follows the carbontracker approach the paper cites: energy x
+//! grid carbon intensity.
+
+use super::platforms::Platform;
+use super::roofline::Estimate;
+
+/// Global-average grid carbon intensity, gCO2eq per kWh (carbontracker's
+/// default; the paper cites Anthony et al. 2020).
+pub const CARBON_INTENSITY_G_PER_KWH: f64 = 475.0;
+
+/// Energy/CO2 for one batched inference.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyCost {
+    /// Average board power during the inference, watts.
+    pub power_w: f64,
+    /// Energy per *request* (batch amortized), joules.
+    pub joules_per_request: f64,
+    /// CO2 per request, grams.
+    pub co2_g_per_request: f64,
+}
+
+/// Compute the energy cost of an inference estimate at a given batch.
+pub fn energy(platform: &Platform, est: &Estimate, batch: usize) -> EnergyCost {
+    let b = batch.max(1) as f64;
+    let power_w = platform.idle_w + (platform.peak_w - platform.idle_w) * est.utilization.min(1.0);
+    let joules_batch = power_w * est.total_s;
+    let joules_per_request = joules_batch / b;
+    let kwh_per_request = joules_per_request / 3.6e6;
+    EnergyCost {
+        power_w,
+        joules_per_request,
+        co2_g_per_request: kwh_per_request * CARBON_INTENSITY_G_PER_KWH,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::platforms::find;
+    use crate::hardware::roofline::{estimate, Parallelism};
+    use crate::models::catalog;
+
+    #[test]
+    fn batch_one_costs_most_energy_per_request() {
+        // Paper Fig 8a: "most energy is consumed with the batch size one"
+        // (fixed overhead amortizes with batch).
+        let v100 = find("G1").unwrap();
+        let rn = catalog::find("resnet50").unwrap();
+        let par = Parallelism::cnn(224);
+        let e1 = energy(v100, &estimate(v100, &rn.profile, par, 1, 0), 1);
+        let e16 = energy(v100, &estimate(v100, &rn.profile, par, 16, 0), 16);
+        assert!(e1.joules_per_request > e16.joules_per_request);
+    }
+
+    #[test]
+    fn more_powerful_gpu_consumes_more() {
+        // Paper Fig 8a: V100 > T4 energy per request for the same work.
+        let rn = catalog::find("resnet50").unwrap();
+        let par = Parallelism::cnn(224);
+        let v100 = find("G1").unwrap();
+        let t4 = find("G3").unwrap();
+        let ev = energy(v100, &estimate(v100, &rn.profile, par, 8, 0), 8);
+        let et = energy(t4, &estimate(t4, &rn.profile, par, 8, 0), 8);
+        assert!(ev.power_w > et.power_w);
+    }
+
+    #[test]
+    fn co2_proportional_to_energy() {
+        let v100 = find("G1").unwrap();
+        let rn = catalog::find("resnet50").unwrap();
+        let e = energy(v100, &estimate(v100, &rn.profile, Parallelism::cnn(224), 4, 0), 4);
+        let expect = e.joules_per_request / 3.6e6 * CARBON_INTENSITY_G_PER_KWH;
+        assert!((e.co2_g_per_request - expect).abs() < 1e-12);
+        assert!(e.co2_g_per_request > 0.0);
+    }
+
+    #[test]
+    fn power_bounded_by_peak() {
+        let v100 = find("G1").unwrap();
+        let rn = catalog::find("resnet50").unwrap();
+        for b in [1, 8, 64, 256] {
+            let e = energy(v100, &estimate(v100, &rn.profile, Parallelism::cnn(224), b, 0), b);
+            assert!(e.power_w >= v100.idle_w - 1e-9);
+            assert!(e.power_w <= v100.peak_w + 1e-9);
+        }
+    }
+}

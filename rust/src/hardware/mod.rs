@@ -1,0 +1,13 @@
+//! Tier-1 hardware models: Table-1 platforms, the calibrated roofline
+//! latency/utilization estimator, and the energy/CO2/cloud cost models
+//! (paper §3.1, §5.2). See DESIGN.md §2 for the GPU-simulation
+//! substitution rationale.
+
+pub mod cloud;
+pub mod energy;
+pub mod platforms;
+pub mod roofline;
+pub mod sharing;
+
+pub use platforms::{find, Arch, Platform, PLATFORMS};
+pub use roofline::{estimate, Estimate, Parallelism};

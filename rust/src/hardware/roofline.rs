@@ -1,0 +1,190 @@
+//! Calibrated roofline latency/utilization model for the GPU platforms.
+//!
+//! This is the substitution for the GPUs this testbed does not have
+//! (DESIGN.md §2): every Tier-1 number in the paper is a function of
+//! (model compute profile x device roofline x batch), and this module
+//! computes exactly that function:
+//!
+//! ```text
+//! rows      = parallel matmul rows the model exposes at batch b
+//! occupancy = clamp(rows / rows_saturation, floor, 1)  (idle SMs at small b)
+//! t_compute = flops(b) / (peak * occupancy)
+//! t_memory  = bytes(b) / mem_bw
+//! t_pcie    = request_bytes(b) / pcie_bw              (host->device)
+//! t_infer   = max(t_compute, t_memory) + t_pcie + overhead
+//! ```
+//!
+//! Utilization (Fig 9/13) falls out as achieved-FLOPs / peak, which rises
+//! with batch (occupancy + overhead amortization) and depth (work vs fixed
+//! overhead) — the paper's observed sensitivity directions.
+
+use super::platforms::Platform;
+use crate::models::Profile;
+
+/// How many parallel matmul rows a model family exposes per sample.
+/// CNNs expose hw*hw pixel rows; sequence models expose seq rows; MLPs one.
+#[derive(Debug, Clone, Copy)]
+pub struct Parallelism {
+    pub rows_per_sample: f64,
+}
+
+impl Parallelism {
+    pub fn mlp() -> Self {
+        Parallelism { rows_per_sample: 1.0 }
+    }
+
+    pub fn cnn(hw: u64) -> Self {
+        Parallelism { rows_per_sample: (hw * hw) as f64 }
+    }
+
+    pub fn sequence(seq: u64) -> Self {
+        Parallelism { rows_per_sample: seq as f64 }
+    }
+}
+
+/// One model-on-platform latency estimate, decomposed.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    /// End-to-end device latency for the whole batch, seconds.
+    pub total_s: f64,
+    pub compute_s: f64,
+    pub memory_s: f64,
+    pub pcie_s: f64,
+    pub overhead_s: f64,
+    /// Achieved fraction of peak FP32 (0..1) — the "GPU utilization"
+    /// metric of Fig 9 and Fig 13.
+    pub utilization: f64,
+    /// True if memory traffic, not compute, bounds the kernel.
+    pub memory_bound: bool,
+}
+
+/// Estimate batched-inference latency of `profile` on `platform`.
+///
+/// `request_bytes` is the per-sample host->device payload; `par` the
+/// family's row parallelism.
+pub fn estimate(
+    platform: &Platform,
+    profile: &Profile,
+    par: Parallelism,
+    batch: usize,
+    request_bytes: u64,
+) -> Estimate {
+    let b = batch.max(1) as f64;
+    let flops = profile.flops as f64 * b;
+    let bytes = profile.weight_bytes as f64 + profile.act_bytes as f64 * b;
+
+    let rows = par.rows_per_sample * b;
+    let occupancy = (rows / platform.rows_saturation).clamp(platform.occupancy_floor, 1.0);
+    let peak = platform.peak_fp32_tflops * 1e12;
+
+    let compute_s = flops / (peak * occupancy);
+    let memory_s = bytes / (platform.mem_bw_gbs * 1e9);
+    let pcie_s = (request_bytes as f64 * b) / (platform.pcie_gbs * 1e9);
+    let work_s = compute_s.max(memory_s);
+    let total_s = work_s + pcie_s + platform.overhead_s;
+
+    Estimate {
+        total_s,
+        compute_s,
+        memory_s,
+        pcie_s,
+        overhead_s: platform.overhead_s,
+        utilization: (flops / peak) / total_s,
+        memory_bound: memory_s > compute_s,
+    }
+}
+
+/// Per-sample latency (batch latency / batch) — the cost metric.
+pub fn latency_per_sample(e: &Estimate, batch: usize) -> f64 {
+    e.total_s / batch.max(1) as f64
+}
+
+/// Throughput in samples/second at a given batch.
+pub fn throughput(e: &Estimate, batch: usize) -> f64 {
+    batch.max(1) as f64 / e.total_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::platforms::find;
+    use crate::models::catalog;
+
+    fn v100() -> &'static Platform {
+        find("G1").unwrap()
+    }
+
+    #[test]
+    fn latency_flat_then_growing_with_batch() {
+        // Paper Fig 7b: GPU latency ~flat below saturation, grows beyond.
+        let rn = catalog::find("resnet50").unwrap();
+        let par = Parallelism::cnn(224);
+        let l1 = estimate(v100(), &rn.profile, par, 1, rn.request_bytes).total_s;
+        let l4 = estimate(v100(), &rn.profile, par, 4, rn.request_bytes).total_s;
+        let l64 = estimate(v100(), &rn.profile, par, 64, rn.request_bytes).total_s;
+        assert!(l4 < 2.0 * l1, "batch 4 should not cost 4x batch 1: {l1} -> {l4}");
+        assert!(l64 > 6.0 * l1, "batch 64 should be near-linear: {l1} -> {l64}");
+    }
+
+    #[test]
+    fn throughput_improves_with_batch() {
+        let rn = catalog::find("resnet50").unwrap();
+        let par = Parallelism::cnn(224);
+        let t1 = throughput(&estimate(v100(), &rn.profile, par, 1, 0), 1);
+        let t32 = throughput(&estimate(v100(), &rn.profile, par, 32, 0), 32);
+        assert!(t32 > 2.0 * t1);
+    }
+
+    #[test]
+    fn v100_faster_than_p4() {
+        let rn = catalog::find("resnet50").unwrap();
+        let par = Parallelism::cnn(224);
+        let p4 = find("G4").unwrap();
+        for b in [1, 8, 32] {
+            let lv = estimate(v100(), &rn.profile, par, b, 0).total_s;
+            let lp = estimate(p4, &rn.profile, par, b, 0).total_s;
+            assert!(lv < lp, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn mobilenet_memory_bound_resnet_compute_bound() {
+        // Paper Fig 10a at large batch on V100.
+        let rn = catalog::find("resnet50").unwrap();
+        let mb = catalog::find("mobilenet_v1").unwrap();
+        let par = Parallelism::cnn(224);
+        assert!(!estimate(v100(), &rn.profile, par, 32, 0).memory_bound);
+        assert!(estimate(v100(), &mb.profile, par, 32, 0).memory_bound);
+    }
+
+    #[test]
+    fn utilization_rises_with_batch() {
+        let bert = catalog::find("bert_large").unwrap();
+        let par = Parallelism::sequence(128);
+        let u1 = estimate(v100(), &bert.profile, par, 1, 0).utilization;
+        let u16 = estimate(v100(), &bert.profile, par, 16, 0).utilization;
+        assert!(u16 > u1);
+        assert!(u16 <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn utilization_rises_with_depth() {
+        // Fig 9: deeper generated models use the device more.
+        use crate::models::analytic::transformer;
+        let par = Parallelism::sequence(64);
+        let shallow = transformer(2, 256, 4, 64, 16);
+        let deep = transformer(12, 256, 4, 64, 16);
+        let us = estimate(v100(), &shallow, par, 4, 0).utilization;
+        let ud = estimate(v100(), &deep, par, 4, 0).utilization;
+        assert!(ud > us, "depth should raise utilization: {us} -> {ud}");
+    }
+
+    #[test]
+    fn estimate_decomposition_sums() {
+        let rn = catalog::find("resnet50").unwrap();
+        let e = estimate(v100(), &rn.profile, Parallelism::cnn(224), 8, rn.request_bytes);
+        let expect = e.compute_s.max(e.memory_s) + e.pcie_s + e.overhead_s;
+        assert!((e.total_s - expect).abs() < 1e-12);
+        assert!(e.pcie_s > 0.0);
+    }
+}

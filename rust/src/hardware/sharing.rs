@@ -1,0 +1,180 @@
+//! GPU sharing manager (paper §4.2.1 Utility Functions: "The sharing
+//! manager helps users configure MPS ... to support a sharing benchmark";
+//! §3.3 "Sharing versus Dedicate" trade-off; §2.2 motivation via MPS and
+//! Salus).
+//!
+//! Models N inference services colocated on one GPU under MPS-style
+//! spatial sharing: each service gets a compute fraction, kernels from
+//! different services overlap, and contention adds latency. The model:
+//!
+//! ```text
+//! demand_i   = rate_i * t_exclusive_i          (busy fraction alone)
+//! total      = sum(demand_i)
+//! slowdown   = 1                         if total <= mps_efficiency
+//!            = total / mps_efficiency    otherwise (compute contention)
+//! t_shared_i = t_exclusive_i * slowdown + mps_overhead
+//! ```
+//!
+//! `mps_efficiency` (< 1) captures MPS's scheduling loss vs a perfectly
+//! partitionable device; `mps_overhead` the per-kernel context cost.
+
+use super::platforms::Platform;
+use super::roofline::{estimate, Estimate, Parallelism};
+use crate::models::Profile;
+
+/// One service colocated on the shared device.
+#[derive(Debug, Clone)]
+pub struct SharedService {
+    pub name: String,
+    pub profile: Profile,
+    pub parallelism: Parallelism,
+    pub batch: usize,
+    /// Offered request rate (batches/second = rate/batch).
+    pub rate_rps: f64,
+}
+
+/// Result for one service under sharing.
+#[derive(Debug, Clone)]
+pub struct SharingOutcome {
+    pub name: String,
+    /// Latency when the service owns the device.
+    pub exclusive_s: f64,
+    /// Latency under MPS sharing with the co-tenants.
+    pub shared_s: f64,
+    /// exclusive-device busy fraction this service needs.
+    pub demand: f64,
+}
+
+/// Whole-device sharing report.
+#[derive(Debug, Clone)]
+pub struct SharingReport {
+    pub outcomes: Vec<SharingOutcome>,
+    /// Sum of busy fractions (>1 means overcommitted even before MPS loss).
+    pub total_demand: f64,
+    /// Applied latency multiplier.
+    pub slowdown: f64,
+    /// GPUs needed to run each service dedicated (for the cost trade-off).
+    pub dedicated_gpus: usize,
+}
+
+/// MPS scheduling efficiency: fraction of the device that N co-tenants
+/// can actually use concurrently (empirically ~0.85 for inference mixes).
+pub const MPS_EFFICIENCY: f64 = 0.85;
+/// Added per-inference overhead from MPS context switching.
+pub const MPS_OVERHEAD_S: f64 = 0.15e-3;
+
+/// Evaluate colocating `services` on `platform` under MPS.
+pub fn share(platform: &Platform, services: &[SharedService]) -> SharingReport {
+    assert!(!services.is_empty());
+    let estimates: Vec<Estimate> = services
+        .iter()
+        .map(|s| estimate(platform, &s.profile, s.parallelism, s.batch, 0))
+        .collect();
+    let demands: Vec<f64> = services
+        .iter()
+        .zip(&estimates)
+        .map(|(s, e)| (s.rate_rps / s.batch.max(1) as f64) * e.total_s)
+        .collect();
+    let total_demand: f64 = demands.iter().sum();
+    let slowdown = if total_demand <= MPS_EFFICIENCY {
+        1.0
+    } else {
+        total_demand / MPS_EFFICIENCY
+    };
+    let outcomes = services
+        .iter()
+        .zip(&estimates)
+        .zip(&demands)
+        .map(|((s, e), &demand)| SharingOutcome {
+            name: s.name.clone(),
+            exclusive_s: e.total_s,
+            shared_s: e.total_s * slowdown + MPS_OVERHEAD_S,
+            demand,
+        })
+        .collect();
+    SharingReport { outcomes, total_demand, slowdown, dedicated_gpus: services.len() }
+}
+
+/// The §3.3 trade-off: sharing saves `dedicated_gpus - gpus_needed`
+/// devices when demand packs; returns (gpus under sharing, saved).
+pub fn consolidation(report: &SharingReport) -> (usize, usize) {
+    let needed = (report.total_demand / MPS_EFFICIENCY).ceil().max(1.0) as usize;
+    (needed, report.dedicated_gpus.saturating_sub(needed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::platforms::find;
+    use crate::models::catalog;
+
+    fn service(name: &str, model: &str, rate: f64) -> SharedService {
+        let m = catalog::find(model).unwrap();
+        SharedService {
+            name: name.into(),
+            profile: m.profile,
+            parallelism: Parallelism::cnn(28),
+            batch: 1,
+            rate_rps: rate,
+        }
+    }
+
+    #[test]
+    fn light_colocation_is_nearly_free() {
+        // Fig 13 motivation: two under-utilized services share one GPU
+        // with negligible interference.
+        let v100 = find("G1").unwrap();
+        let r = share(v100, &[service("a", "resnet50", 20.0), service("b", "mobilenet_v1", 30.0)]);
+        assert!(r.total_demand < 0.5, "demand {}", r.total_demand);
+        assert_eq!(r.slowdown, 1.0);
+        for o in &r.outcomes {
+            assert!(o.shared_s < o.exclusive_s * 1.2);
+        }
+    }
+
+    #[test]
+    fn overcommit_slows_everyone() {
+        let v100 = find("G1").unwrap();
+        let r = share(
+            v100,
+            &[service("a", "cyclegan", 40.0), service("b", "cyclegan", 40.0)],
+        );
+        assert!(r.total_demand > 1.0, "demand {}", r.total_demand);
+        assert!(r.slowdown > 1.0);
+        for o in &r.outcomes {
+            assert!(o.shared_s > o.exclusive_s);
+        }
+    }
+
+    #[test]
+    fn consolidation_saves_gpus_when_light() {
+        let v100 = find("G1").unwrap();
+        let services: Vec<SharedService> =
+            (0..4).map(|i| service(&format!("s{i}"), "mobilenet_v1", 40.0)).collect();
+        let r = share(v100, &services);
+        let (needed, saved) = consolidation(&r);
+        assert!(needed < 4, "4 light services should pack: need {needed}");
+        assert_eq!(needed + saved, 4);
+    }
+
+    #[test]
+    fn consolidation_never_below_one_gpu() {
+        let v100 = find("G1").unwrap();
+        let r = share(v100, &[service("tiny", "mobilenet_v1", 1.0)]);
+        let (needed, saved) = consolidation(&r);
+        assert_eq!(needed, 1);
+        assert_eq!(saved, 0);
+    }
+
+    #[test]
+    fn slowdown_proportional_beyond_capacity() {
+        let v100 = find("G1").unwrap();
+        let one = share(v100, &[service("a", "cyclegan", 40.0)]);
+        let two = share(
+            v100,
+            &[service("a", "cyclegan", 40.0), service("b", "cyclegan", 40.0)],
+        );
+        assert!(two.slowdown > one.slowdown);
+        assert!((two.total_demand / one.total_demand - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! InferBench: an automatic, distributed benchmark system for deep-learning
+//! inference serving — a reproduction of "InferBench / No More 996" (2020)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! regenerated paper results.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod hardware;
+pub mod metrics;
+pub mod models;
+pub mod perfdb;
+pub mod pipeline;
+pub mod runtime;
+pub mod serving;
+pub mod testing;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,264 @@
+//! InferBench CLI — the leader entrypoint (paper Fig 1).
+//!
+//! Subcommands:
+//!   table1                      print the hardware platform table
+//!   submit <spec.yaml>...       run submissions on a follower cluster
+//!   serve                       live CPU serving of an AOT artifact (e2e)
+//!   recommend                   top-3 config recommendation under an SLO
+//!   leaderboard                 sort a PerfDB JSONL by a metric
+//!   status-demo                 run jobs while printing monitor snapshots
+
+use anyhow::{anyhow, Result};
+use inferbench::analysis::recommend;
+use inferbench::coordinator::{JobSpec, Leader, LeaderConfig, SchedulerPolicy};
+use inferbench::hardware::{Parallelism, PLATFORMS};
+use inferbench::models::catalog;
+use inferbench::perfdb::{PerfDb, Query};
+use inferbench::serving::live::{run_load, LiveConfig, LiveServer};
+use inferbench::serving::Policy;
+use inferbench::util::cli::Args;
+use inferbench::util::render;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "table1" => table1(),
+        "submit" => submit(&args),
+        "serve" => serve(&args),
+        "recommend" => recommend_cmd(&args),
+        "leaderboard" => leaderboard(&args),
+        "status-demo" => status_demo(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+inferbench — automatic DL inference serving benchmark system
+
+USAGE:
+  inferbench table1
+  inferbench submit <spec.yaml>... [--workers N] [--policy qa_sjf|rr_fcfs|rr_sjf] [--db out.jsonl]
+  inferbench serve [--model resnet_mini] [--rate 20] [--duration 10] [--max-batch 8] [--artifacts artifacts]
+  inferbench recommend [--model resnet50] [--slo-ms 100] [--rate 50]
+  inferbench leaderboard --db perf.jsonl [--metric p99_ms] [--task serving_sim]
+  inferbench status-demo [--workers 4]
+";
+
+fn table1() -> Result<()> {
+    let rows: Vec<Vec<String>> = PLATFORMS
+        .iter()
+        .map(|p| {
+            vec![
+                p.id.to_string(),
+                p.name.to_string(),
+                format!("{:?}", p.arch),
+                format!("{} GB", p.memory_gb),
+                if p.is_gpu() {
+                    format!("{:.1} ({:.1})", p.peak_fp32_tflops, p.peak_fp16_tflops)
+                } else {
+                    "-".into()
+                },
+                if p.is_gpu() { format!("{:.0}", p.mem_bw_gbs) } else { "-".into() },
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render::table(
+            &["ID", "Platform", "Arch", "Memory", "Peak TFLOPS (FP32/FP16)", "Mem BW (GB/s)"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<SchedulerPolicy> {
+    match s {
+        "qa_sjf" => Ok(SchedulerPolicy::qa_sjf()),
+        "rr_fcfs" => Ok(SchedulerPolicy::rr_fcfs()),
+        "rr_sjf" => Ok(SchedulerPolicy::rr_sjf()),
+        other => Err(anyhow!("unknown policy {other:?}")),
+    }
+}
+
+fn submit(args: &Args) -> Result<()> {
+    let files = &args.positional[1..];
+    if files.is_empty() {
+        return Err(anyhow!("submit: need at least one spec file"));
+    }
+    let policy = parse_policy(args.get_or("policy", "qa_sjf"))?;
+    let leader = Leader::start(LeaderConfig {
+        workers: args.get_usize("workers", 4),
+        policy,
+        time_scale: args.get_f64("time-scale", 1.0),
+        seed: args.get_u64("seed", 0),
+    });
+    let mut n = 0;
+    for f in files {
+        let text = std::fs::read_to_string(f)?;
+        let spec = JobSpec::parse_yaml(&text)?;
+        let (id, worker) = leader.submit(spec.clone())?;
+        println!("submitted job {id} ({}) -> worker {worker}", spec.name);
+        n += 1;
+    }
+    let done = leader.wait_for(n, std::time::Duration::from_secs(600))?;
+    for c in &done {
+        println!(
+            "  job {} ({}) on worker {}: waited {} ran {} [{}]",
+            c.id,
+            c.name,
+            c.worker,
+            render::fmt_duration(c.waited_s),
+            render::fmt_duration(c.ran_s),
+            if c.ok { "ok" } else { "FAILED" }
+        );
+    }
+    let db = leader.perfdb.lock().unwrap();
+    println!("\nPerfDB: {} records", db.len());
+    for r in db.query(&Query::default()) {
+        println!("  {} {} {} {} {}", r.task, r.model, r.platform, r.software, r.metrics);
+    }
+    if let Some(path) = args.get("db") {
+        db.save_jsonl(path)?;
+        println!("saved PerfDB to {path}");
+    }
+    drop(db);
+    leader.shutdown();
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet_mini");
+    let rate = args.get_f64("rate", 20.0);
+    let duration = args.get_f64("duration", 10.0);
+    let max_batch = args.get_usize("max-batch", 8);
+    println!("loading {model} artifacts (XLA compile)...");
+    let server = LiveServer::start(LiveConfig {
+        artifact_dir: args.get_or("artifacts", "artifacts").into(),
+        model_stem: model.to_string(),
+        policy: Policy::Dynamic { max_size: max_batch, max_wait_s: 0.005 },
+        seed: args.get_u64("seed", 0),
+    })?;
+    for (b, t) in &server.info.variants {
+        println!("  variant b{b}: compiled in {}", render::fmt_duration(*t));
+    }
+    println!("serving at {rate} rps for {duration}s...");
+    let mut report = run_load(&server, rate, duration, 7)?;
+    println!(
+        "completed {} requests in {:.1}s ({:.1} rps)",
+        report.completed,
+        report.wall_s,
+        report.throughput_rps()
+    );
+    println!(
+        "e2e latency: p50 {} p95 {} p99 {} max {}",
+        render::fmt_duration(report.e2e.percentile(50.0)),
+        render::fmt_duration(report.e2e.percentile(95.0)),
+        render::fmt_duration(report.e2e.percentile(99.0)),
+        render::fmt_duration(report.e2e.max()),
+    );
+    println!(
+        "infer time: p50 {}; mean batch {:.2}",
+        render::fmt_duration(report.infer.percentile(50.0)),
+        report.batch_sizes.mean()
+    );
+    server.shutdown()?;
+    Ok(())
+}
+
+fn recommend_cmd(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "resnet50");
+    let model =
+        catalog::find(model_name).ok_or_else(|| anyhow!("model {model_name:?} not in catalog"))?;
+    let slo_s = args.get_f64("slo-ms", 100.0) / 1e3;
+    let rate = args.get_f64("rate", 50.0);
+    let rec = recommend(model, Parallelism::cnn(28), slo_s, rate, 3);
+    println!(
+        "top {} of {} configs for {model_name} under SLO {} at {rate} rps:",
+        rec.top.len(),
+        rec.considered,
+        render::fmt_duration(slo_s)
+    );
+    let rows: Vec<Vec<String>> = rec
+        .top
+        .iter()
+        .map(|c| {
+            vec![
+                c.platform.id.to_string(),
+                c.software.id.to_string(),
+                c.batch.to_string(),
+                render::fmt_duration(c.latency_s),
+                format!("{:.0}", c.throughput_rps),
+                c.cost_per_1k_usd.map(|v| format!("${v:.4}")).unwrap_or("-".into()),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render::table(&["Platform", "Software", "Batch", "Latency", "Max RPS", "$/1k req"], &rows)
+    );
+    Ok(())
+}
+
+fn leaderboard(args: &Args) -> Result<()> {
+    let db_path = args.get("db").ok_or_else(|| anyhow!("leaderboard: need --db"))?;
+    let metric = args.get_or("metric", "p99_ms");
+    let db = PerfDb::load_jsonl(db_path)?;
+    let mut q = Query::default();
+    if let Some(t) = args.get("task") {
+        q = q.task(t);
+    }
+    let rows: Vec<Vec<String>> = db
+        .leaderboard(&q, metric)
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.platform.clone(),
+                r.software.clone(),
+                r.metric(metric).map(|v| format!("{v:.3}")).unwrap_or("-".into()),
+            ]
+        })
+        .collect();
+    print!("{}", render::table(&["Model", "Platform", "Software", metric], &rows));
+    Ok(())
+}
+
+fn status_demo(args: &Args) -> Result<()> {
+    let leader = Leader::start(LeaderConfig {
+        workers: args.get_usize("workers", 4),
+        policy: SchedulerPolicy::qa_sjf(),
+        time_scale: 20.0,
+        seed: 1,
+    });
+    let mut rng = inferbench::util::rng::Pcg64::seeded(3);
+    for i in 0..12 {
+        let secs = rng.lognormal(1.0, 0.8).clamp(0.5, 20.0);
+        leader.submit(JobSpec::parse_yaml(&format!(
+            "name: demo{i}\ntask: sleep\nseconds: {secs:.2}\n"
+        ))?)?;
+    }
+    for _ in 0..6 {
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        let status = leader.status();
+        let line: Vec<String> = status
+            .iter()
+            .map(|s| {
+                format!("w{}[q={} {}]", s.worker, s.queued, if s.busy { "busy" } else { "idle" })
+            })
+            .collect();
+        println!("{}", line.join(" "));
+    }
+    let done = leader.wait_for(12, std::time::Duration::from_secs(60))?;
+    println!(
+        "completed {} jobs; mean JCT {:.2}s",
+        done.len(),
+        done.iter().map(|c| c.jct_s()).sum::<f64>() / done.len() as f64
+    );
+    leader.shutdown();
+    Ok(())
+}

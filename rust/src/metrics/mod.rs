@@ -1,0 +1,238 @@
+//! Metric collector + prober (paper §4.2.4 Stage 3 — Collect).
+//!
+//! The prober timestamps every request at each pipeline-stage boundary
+//! (pre-process / transmission / batch-queue / inference / post-process);
+//! the collector aggregates per-stage and end-to-end latency, throughput,
+//! and a utilization timeline (Fig 13).
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+/// The five pipeline stages of Fig 4, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    PreProcess,
+    Transmission,
+    Batching,
+    Inference,
+    PostProcess,
+}
+
+pub const STAGES: [Stage; 5] = [
+    Stage::PreProcess,
+    Stage::Transmission,
+    Stage::Batching,
+    Stage::Inference,
+    Stage::PostProcess,
+];
+
+impl Stage {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::PreProcess => "pre-process",
+            Stage::Transmission => "transmission",
+            Stage::Batching => "batching",
+            Stage::Inference => "inference",
+            Stage::PostProcess => "post-process",
+        }
+    }
+}
+
+/// Per-request probe record: arrival + per-stage durations (seconds).
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub stage_s: BTreeMap<Stage, f64>,
+    pub completed_s: f64,
+    /// Set when the request was rejected/dropped (overload).
+    pub dropped: bool,
+}
+
+impl RequestTrace {
+    pub fn new(id: u64, arrival_s: f64) -> Self {
+        RequestTrace { id, arrival_s, stage_s: BTreeMap::new(), completed_s: arrival_s, dropped: false }
+    }
+
+    pub fn record_stage(&mut self, stage: Stage, seconds: f64) {
+        *self.stage_s.entry(stage).or_insert(0.0) += seconds;
+        self.completed_s += seconds;
+    }
+
+    /// End-to-end latency (arrival -> completion).
+    pub fn e2e_s(&self) -> f64 {
+        self.completed_s - self.arrival_s
+    }
+}
+
+/// Aggregated metrics over a benchmark run.
+#[derive(Debug, Default)]
+pub struct Collector {
+    pub e2e: Summary,
+    pub per_stage: BTreeMap<Stage, Summary>,
+    pub completed: u64,
+    pub dropped: u64,
+    pub first_arrival_s: f64,
+    pub last_completion_s: f64,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Collector { first_arrival_s: f64::INFINITY, ..Default::default() }
+    }
+
+    pub fn ingest(&mut self, trace: &RequestTrace) {
+        if trace.dropped {
+            self.dropped += 1;
+            return;
+        }
+        self.completed += 1;
+        self.e2e.record(trace.e2e_s());
+        for (stage, s) in &trace.stage_s {
+            self.per_stage.entry(*stage).or_default().record(*s);
+        }
+        self.first_arrival_s = self.first_arrival_s.min(trace.arrival_s);
+        self.last_completion_s = self.last_completion_s.max(trace.completed_s);
+    }
+
+    /// Completed requests per second over the active window.
+    pub fn throughput_rps(&self) -> f64 {
+        let window = self.last_completion_s - self.first_arrival_s;
+        if window <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / window
+    }
+
+    /// Mean seconds spent in each stage (0 when never probed).
+    pub fn stage_means(&self) -> BTreeMap<Stage, f64> {
+        STAGES
+            .iter()
+            .map(|s| (*s, self.per_stage.get(s).map(|x| x.mean()).unwrap_or(0.0)))
+            .collect()
+    }
+}
+
+/// Time-bucketed utilization timeline (Fig 13): each bucket records the
+/// fraction of the bucket the device spent busy, weighted by utilization.
+#[derive(Debug, Clone)]
+pub struct UtilizationTimeline {
+    bucket_s: f64,
+    busy_weighted: Vec<f64>,
+}
+
+impl UtilizationTimeline {
+    pub fn new(duration_s: f64, bucket_s: f64) -> Self {
+        let n = (duration_s / bucket_s).ceil() as usize + 1;
+        UtilizationTimeline { bucket_s, busy_weighted: vec![0.0; n] }
+    }
+
+    /// Record a busy interval [start, start+len) at the given utilization.
+    pub fn record_busy(&mut self, start_s: f64, len_s: f64, utilization: f64) {
+        let mut t = start_s;
+        let end = start_s + len_s;
+        while t < end {
+            let idx = (t / self.bucket_s) as usize;
+            if idx >= self.busy_weighted.len() {
+                break;
+            }
+            let bucket_end = (idx as f64 + 1.0) * self.bucket_s;
+            let seg = (end.min(bucket_end)) - t;
+            self.busy_weighted[idx] += seg * utilization;
+            t = bucket_end;
+        }
+    }
+
+    /// Utilization per bucket in [0, 1].
+    pub fn series(&self) -> Vec<f64> {
+        self.busy_weighted.iter().map(|w| (w / self.bucket_s).min(1.0)).collect()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let s = self.series();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().sum::<f64>() / s.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accumulates_stages() {
+        let mut t = RequestTrace::new(1, 10.0);
+        t.record_stage(Stage::PreProcess, 0.001);
+        t.record_stage(Stage::Inference, 0.02);
+        t.record_stage(Stage::PostProcess, 0.002);
+        assert!((t.e2e_s() - 0.023).abs() < 1e-12);
+        assert_eq!(t.stage_s.len(), 3);
+    }
+
+    #[test]
+    fn repeated_stage_adds() {
+        let mut t = RequestTrace::new(1, 0.0);
+        t.record_stage(Stage::Batching, 0.01);
+        t.record_stage(Stage::Batching, 0.02);
+        assert!((t.stage_s[&Stage::Batching] - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collector_aggregates() {
+        let mut c = Collector::new();
+        for i in 0..10 {
+            let mut t = RequestTrace::new(i, i as f64);
+            t.record_stage(Stage::Inference, 0.5);
+            c.ingest(&t);
+        }
+        assert_eq!(c.completed, 10);
+        assert!((c.e2e.mean() - 0.5).abs() < 1e-12);
+        // 10 requests over [0, 9.5] window.
+        assert!((c.throughput_rps() - 10.0 / 9.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dropped_not_counted_in_latency() {
+        let mut c = Collector::new();
+        let mut t = RequestTrace::new(0, 0.0);
+        t.dropped = true;
+        c.ingest(&t);
+        assert_eq!(c.dropped, 1);
+        assert_eq!(c.completed, 0);
+        assert!(c.e2e.is_empty());
+    }
+
+    #[test]
+    fn stage_means_cover_all_stages() {
+        let c = Collector::new();
+        assert_eq!(c.stage_means().len(), 5);
+    }
+
+    #[test]
+    fn utilization_timeline_buckets() {
+        let mut u = UtilizationTimeline::new(10.0, 1.0);
+        u.record_busy(0.5, 1.0, 1.0); // spans buckets 0 and 1
+        let s = u.series();
+        assert!((s[0] - 0.5).abs() < 1e-9);
+        assert!((s[1] - 0.5).abs() < 1e-9);
+        assert_eq!(s[2], 0.0);
+    }
+
+    #[test]
+    fn utilization_clamped_to_one() {
+        let mut u = UtilizationTimeline::new(2.0, 1.0);
+        u.record_busy(0.0, 1.0, 1.0);
+        u.record_busy(0.0, 1.0, 1.0); // double-booked
+        assert_eq!(u.series()[0], 1.0);
+    }
+
+    #[test]
+    fn utilization_weighted_by_level() {
+        let mut u = UtilizationTimeline::new(1.0, 1.0);
+        u.record_busy(0.0, 1.0, 0.3);
+        assert!((u.series()[0] - 0.3).abs() < 1e-9);
+        assert!((u.mean() - 0.15).abs() < 0.16); // 2 buckets incl. tail
+    }
+}

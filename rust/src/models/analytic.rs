@@ -1,0 +1,195 @@
+//! Analytic FLOPs / parameter / memory-traffic model — the exact rust
+//! mirror of `python/compile/analytic.py`.
+//!
+//! Both sides compute the same formulas from the same hyper-parameters;
+//! `rust/tests/manifest_consistency.rs` asserts this module reproduces the
+//! values aot.py wrote into `artifacts/manifest.json`, so the GPU roofline
+//! models and the Python-lowered artifacts can never drift apart.
+
+/// Per-sample compute profile of a model configuration (f32).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Profile {
+    /// Forward FLOPs per sample.
+    pub flops: u64,
+    /// Parameter count.
+    pub params: u64,
+    /// Bytes of weights read once per batch.
+    pub weight_bytes: u64,
+    /// Activation read+write bytes per sample.
+    pub act_bytes: u64,
+}
+
+impl Profile {
+    /// FLOPs per HBM byte at batch `b` — x-axis of the Roofline (Fig 10).
+    pub fn arithmetic_intensity(&self, batch: usize) -> f64 {
+        let b = batch as f64;
+        (self.flops as f64 * b) / (self.weight_bytes as f64 + self.act_bytes as f64 * b)
+    }
+
+    /// Total FLOPs for a batch.
+    pub fn batch_flops(&self, batch: usize) -> f64 {
+        self.flops as f64 * batch as f64
+    }
+
+    /// Total HBM bytes for a batch.
+    pub fn batch_bytes(&self, batch: usize) -> f64 {
+        self.weight_bytes as f64 + self.act_bytes as f64 * batch as f64
+    }
+}
+
+/// MLP family: `depth` FC blocks of `width`, mirroring `mlp_profile`.
+pub fn mlp(depth: u64, width: u64, in_dim: u64, classes: u64) -> Profile {
+    let flops = 2 * in_dim * width + depth * 2 * width * width + 2 * width * classes;
+    let params =
+        in_dim * width + width + depth * (width * width + width) + width * classes + classes;
+    let act_elems = in_dim + (depth + 1) * width + classes;
+    Profile { flops, params, weight_bytes: params * 4, act_bytes: 2 * act_elems * 4 }
+}
+
+/// CNN family: residual blocks at `hw` x `hw`, mirroring `cnn_profile`.
+pub fn cnn(depth: u64, channels: u64, hw: u64, cin: u64, classes: u64) -> Profile {
+    let px = hw * hw;
+    let flops = 2 * 9 * cin * channels * px
+        + depth * 2 * 9 * channels * channels * px
+        + 2 * channels * classes;
+    let params = 9 * cin * channels
+        + channels
+        + depth * (9 * channels * channels + channels)
+        + channels * classes
+        + classes;
+    let act_elems = px * cin + (depth + 1) * px * channels + channels + classes;
+    Profile { flops, params, weight_bytes: params * 4, act_bytes: 2 * act_elems * 4 }
+}
+
+/// RNN family: stacked LSTM layers, mirroring `rnn_profile`.
+pub fn rnn(depth: u64, hidden: u64, seq: u64, in_dim: u64, classes: u64) -> Profile {
+    let gates = 2 * (hidden * 4 * hidden) * 2;
+    let flops = 2 * in_dim * hidden * seq
+        + depth * seq * gates
+        + depth * seq * 10 * hidden
+        + 2 * hidden * classes;
+    let params = in_dim * hidden
+        + hidden
+        + depth * (hidden * 4 * hidden * 2 + 4 * hidden)
+        + hidden * classes
+        + classes;
+    let act_elems = seq * in_dim + (depth + 1) * seq * hidden + classes;
+    Profile { flops, params, weight_bytes: params * 4, act_bytes: 2 * act_elems * 4 }
+}
+
+/// Transformer family: attention blocks, mirroring `transformer_profile`.
+pub fn transformer(depth: u64, d_model: u64, heads: u64, seq: u64, classes: u64) -> Profile {
+    let d = d_model;
+    let per_layer = 8 * seq * d * d + 4 * seq * seq * d + 5 * seq * seq + 16 * seq * d * d;
+    let flops = depth * per_layer + 2 * d * classes;
+    let params =
+        depth * (4 * d * d + d * 4 * d + 4 * d + 4 * d * d + d + 4 * d) + d * classes + classes;
+    let act_elems = seq * d * (4 * depth + 1) + depth * heads * seq * seq + classes;
+    Profile { flops, params, weight_bytes: params * 4, act_bytes: 2 * act_elems * 4 }
+}
+
+/// Hyper-parameters for any family (unused fields ignored per family).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HyperParams {
+    pub depth: u64,
+    pub width: u64,
+    pub channels: u64,
+    pub hidden: u64,
+    pub d_model: u64,
+    pub heads: u64,
+    pub seq: u64,
+    pub hw: u64,
+    pub in_dim: u64,
+    pub cin: u64,
+    pub classes: u64,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        // Defaults mirror python/compile/analytic.py signature defaults.
+        HyperParams {
+            depth: 2,
+            width: 256,
+            channels: 32,
+            hidden: 128,
+            d_model: 128,
+            heads: 4,
+            seq: 0, // per-family default applied in profile_for
+            hw: 32,
+            in_dim: 0, // per-family default applied in profile_for
+            cin: 3,
+            classes: 16,
+        }
+    }
+}
+
+/// Dispatch matching `analytic.profile_for`.
+pub fn profile_for(family: &str, hp: &HyperParams) -> Profile {
+    match family {
+        "mlp" => mlp(hp.depth, hp.width, default(hp.in_dim, 256), hp.classes),
+        "cnn" => cnn(hp.depth, hp.channels, hp.hw, hp.cin, hp.classes),
+        "rnn" => rnn(hp.depth, hp.hidden, default(hp.seq, 16), default(hp.in_dim, 64), hp.classes),
+        "transformer" => {
+            transformer(hp.depth, hp.d_model, hp.heads, default(hp.seq, 64), hp.classes)
+        }
+        other => panic!("unknown family {other:?}"),
+    }
+}
+
+fn default(v: u64, d: u64) -> u64 {
+    if v == 0 {
+        d
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_formula_matches_python() {
+        // Same case as python test_analytic: depth=4, width=128.
+        let p = mlp(4, 128, 256, 16);
+        assert_eq!(p.flops, 2 * 256 * 128 + 4 * 2 * 128 * 128 + 2 * 128 * 16);
+    }
+
+    #[test]
+    fn deeper_costs_more_all_families() {
+        let base = HyperParams::default();
+        for fam in ["mlp", "cnn", "rnn", "transformer"] {
+            let shallow = profile_for(fam, &HyperParams { depth: 2, ..base });
+            let deep = profile_for(fam, &HyperParams { depth: 8, ..base });
+            assert!(deep.flops > shallow.flops, "{fam}");
+            assert!(deep.params > shallow.params, "{fam}");
+        }
+    }
+
+    #[test]
+    fn intensity_monotone_in_batch() {
+        let p = mlp(8, 512, 256, 16);
+        assert!(p.arithmetic_intensity(32) > p.arithmetic_intensity(8));
+        assert!(p.arithmetic_intensity(8) > p.arithmetic_intensity(1));
+    }
+
+    #[test]
+    fn width_does_not_raise_intensity() {
+        // Paper Fig 10b: more neurons/layers leave a model memory-bound at
+        // small batch — FLOPs and weight bytes both scale ~W^2, so
+        // arithmetic intensity stays ~flat in width; only batch (weight
+        // reuse) moves a model towards the compute-bound region.
+        let narrow = mlp(8, 128, 256, 16);
+        let wide = mlp(8, 2048, 256, 16);
+        let ratio = wide.arithmetic_intensity(1) / narrow.arithmetic_intensity(1);
+        assert!(ratio < 1.15, "intensity should be ~flat in width, got {ratio}");
+        // While batch raises it several-fold.
+        assert!(wide.arithmetic_intensity(16) > 5.0 * wide.arithmetic_intensity(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown family")]
+    fn unknown_family_panics() {
+        profile_for("gan", &HyperParams::default());
+    }
+}

@@ -1,0 +1,185 @@
+//! Real-world model catalog (paper §5.1 "registered many real-world models").
+//!
+//! Each entry carries the published compute profile of the full-scale model
+//! (used by the calibrated GPU roofline models to regenerate the paper's
+//! hardware-tier curves) plus, where available, the `artifact_stem` of the
+//! small AOT-compiled stand-in that the CPU platform executes for real
+//! (resnet_mini, bert_mini, ...). DESIGN.md §2 documents this substitution.
+
+use super::analytic::Profile;
+
+/// Inference task class — the paper's Fig 7c categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Image classification.
+    IC,
+    /// Text classification.
+    TC,
+    /// Object detection.
+    OD,
+    /// Image generation (CycleGAN).
+    GAN,
+    /// Language model (BERT).
+    NLP,
+}
+
+impl Task {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Task::IC => "IC",
+            Task::TC => "TC",
+            Task::OD => "OD",
+            Task::GAN => "GAN",
+            Task::NLP => "NLP",
+        }
+    }
+}
+
+/// A catalog model: full-scale published profile + optional mini artifact.
+#[derive(Debug, Clone)]
+pub struct CatalogModel {
+    pub name: &'static str,
+    pub task: Task,
+    /// Full-scale per-sample profile (published FLOPs/params, estimated
+    /// activation traffic) used by the GPU roofline models.
+    pub profile: Profile,
+    /// Request payload in bytes (e.g. a JPEG or token ids) — drives the
+    /// transmission stage of the pipeline tier.
+    pub request_bytes: u64,
+    /// Artifact name stem of the runnable mini stand-in, if one exists.
+    pub artifact_stem: Option<&'static str>,
+}
+
+/// The registered real-world models. FLOPs are forward-pass per sample
+/// (2 x MACs), params from the original papers; activation bytes are
+/// order-of-magnitude estimates consistent with framework memory profiles.
+pub const CATALOG: &[CatalogModel] = &[
+    CatalogModel {
+        name: "resnet50",
+        task: Task::IC,
+        profile: Profile {
+            flops: 8_200_000_000, // 4.1 GMACs @ 224x224
+            params: 25_600_000,
+            weight_bytes: 25_600_000 * 4,
+            act_bytes: 128_000_000, // ~16M activation elems, read+write
+        },
+        request_bytes: 150_000, // typical JPEG
+        artifact_stem: Some("resnet_mini"),
+    },
+    CatalogModel {
+        name: "mobilenet_v1",
+        task: Task::IC,
+        profile: Profile {
+            flops: 1_140_000_000, // 0.57 GMACs
+            params: 4_200_000,
+            weight_bytes: 4_200_000 * 4,
+            act_bytes: 80_000_000, // activation-heavy: depthwise stages
+        },
+        request_bytes: 150_000,
+        artifact_stem: Some("mobilenet_mini"),
+    },
+    CatalogModel {
+        name: "bert_large",
+        task: Task::NLP,
+        profile: Profile {
+            flops: 87_000_000_000, // ~2 * 340M params * 128 tokens
+            params: 340_000_000,
+            weight_bytes: 340_000_000 * 4,
+            act_bytes: 50_000_000,
+        },
+        request_bytes: 4_000, // 128 token ids + metadata
+        artifact_stem: Some("bert_mini"),
+    },
+    CatalogModel {
+        name: "ssd_mobilenet",
+        task: Task::OD,
+        profile: Profile {
+            flops: 30_000_000_000,
+            params: 35_000_000,
+            weight_bytes: 35_000_000 * 4,
+            act_bytes: 200_000_000,
+        },
+        request_bytes: 250_000,
+        artifact_stem: None,
+    },
+    CatalogModel {
+        name: "cyclegan",
+        task: Task::GAN,
+        profile: Profile {
+            flops: 54_000_000_000, // 256x256 generator
+            params: 11_400_000,
+            weight_bytes: 11_400_000 * 4,
+            act_bytes: 450_000_000,
+        },
+        request_bytes: 200_000,
+        artifact_stem: None,
+    },
+    CatalogModel {
+        name: "textlstm",
+        task: Task::TC,
+        profile: Profile {
+            // Bi-LSTM text classifier, seq 64 x hidden 512.
+            flops: 2_400_000_000,
+            params: 10_000_000,
+            weight_bytes: 10_000_000 * 4,
+            act_bytes: 30_000_000,
+        },
+        request_bytes: 2_000,
+        artifact_stem: Some("lstm_mini"),
+    },
+];
+
+/// Look up a catalog model by name.
+pub fn find(name: &str) -> Option<&'static CatalogModel> {
+    CATALOG.iter().find(|m| m.name == name)
+}
+
+/// Models for the Fig 7c speedup study (OD, GAN, TC, IC).
+pub fn speedup_study_models() -> Vec<&'static CatalogModel> {
+    ["ssd_mobilenet", "cyclegan", "textlstm", "resnet50"]
+        .iter()
+        .map(|n| find(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert!(find("resnet50").is_some());
+        assert!(find("nonexistent").is_none());
+        assert_eq!(find("bert_large").unwrap().task, Task::NLP);
+    }
+
+    #[test]
+    fn resnet_is_compute_heavier_than_mobilenet() {
+        let rn = find("resnet50").unwrap();
+        let mb = find("mobilenet_v1").unwrap();
+        assert!(rn.profile.flops > 4 * mb.profile.flops);
+        // Paper Fig 10a: MobileNet has lower arithmetic intensity (more
+        // memory-bound) than ResNet50.
+        assert!(mb.profile.arithmetic_intensity(1) < rn.profile.arithmetic_intensity(1));
+    }
+
+    #[test]
+    fn speedup_study_has_all_four_tasks() {
+        let models = speedup_study_models();
+        assert_eq!(models.len(), 4);
+        let tasks: Vec<Task> = models.iter().map(|m| m.task).collect();
+        assert!(tasks.contains(&Task::OD));
+        assert!(tasks.contains(&Task::GAN));
+        assert!(tasks.contains(&Task::TC));
+        assert!(tasks.contains(&Task::IC));
+    }
+
+    #[test]
+    fn all_entries_have_positive_profiles() {
+        for m in CATALOG {
+            assert!(m.profile.flops > 0, "{}", m.name);
+            assert!(m.profile.params > 0, "{}", m.name);
+            assert!(m.request_bytes > 0, "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Model descriptors: canonical-family analytics + the real-world catalog.
+//!
+//! `analytic` mirrors python/compile/analytic.py (cross-checked against the
+//! manifest); `catalog` lists the registered real-world models the paper's
+//! evaluation uses (§5.1), with published full-scale compute profiles and
+//! pointers to the runnable mini stand-ins.
+
+pub mod analytic;
+pub mod catalog;
+
+pub use analytic::{profile_for, HyperParams, Profile};
+pub use catalog::{CatalogModel, Task, CATALOG};

@@ -1,0 +1,262 @@
+//! PerfDB: the performance database (paper §4.2.5).
+//!
+//! The paper backs this with MongoDB; here it is an in-memory store with
+//! JSON-Lines persistence (one record per line, append-only — the same
+//! write pattern the leader's daemon uses). Records are schemaless JSON
+//! objects with a few indexed envelope fields (task, model, platform,
+//! software), supporting the query/aggregate operations the analysis
+//! stage needs, plus the leaderboard sort.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// One benchmark result record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// Envelope: what was benchmarked.
+    pub task: String,
+    pub model: String,
+    pub platform: String,
+    pub software: String,
+    /// Free-form metrics payload (latency percentiles, throughput, ...).
+    pub metrics: Json,
+}
+
+impl Record {
+    pub fn new(task: &str, model: &str, platform: &str, software: &str) -> Record {
+        Record {
+            task: task.into(),
+            model: model.into(),
+            platform: platform.into(),
+            software: software.into(),
+            metrics: Json::obj(),
+        }
+    }
+
+    pub fn with_metric(mut self, key: &str, value: f64) -> Record {
+        self.metrics.set(key, Json::Num(value));
+        self
+    }
+
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.get(key).and_then(|v| v.as_f64())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("task", Json::Str(self.task.clone()))
+            .set("model", Json::Str(self.model.clone()))
+            .set("platform", Json::Str(self.platform.clone()))
+            .set("software", Json::Str(self.software.clone()))
+            .set("metrics", self.metrics.clone());
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<Record> {
+        let s = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("record missing {k}"))?
+                .to_string())
+        };
+        Ok(Record {
+            task: s("task")?,
+            model: s("model")?,
+            platform: s("platform")?,
+            software: s("software")?,
+            metrics: v.get("metrics").cloned().unwrap_or_else(Json::obj),
+        })
+    }
+}
+
+/// Query filter: None = match-all per field.
+#[derive(Debug, Default, Clone)]
+pub struct Query {
+    pub task: Option<String>,
+    pub model: Option<String>,
+    pub platform: Option<String>,
+    pub software: Option<String>,
+}
+
+impl Query {
+    pub fn task(mut self, t: &str) -> Self {
+        self.task = Some(t.into());
+        self
+    }
+
+    pub fn model(mut self, m: &str) -> Self {
+        self.model = Some(m.into());
+        self
+    }
+
+    pub fn platform(mut self, p: &str) -> Self {
+        self.platform = Some(p.into());
+        self
+    }
+
+    pub fn software(mut self, s: &str) -> Self {
+        self.software = Some(s.into());
+        self
+    }
+
+    fn matches(&self, r: &Record) -> bool {
+        fn ok(f: &Option<String>, v: &str) -> bool {
+            f.as_deref().map_or(true, |x| x == v)
+        }
+        ok(&self.task, &r.task)
+            && ok(&self.model, &r.model)
+            && ok(&self.platform, &r.platform)
+            && ok(&self.software, &r.software)
+    }
+}
+
+/// The database.
+#[derive(Debug, Default)]
+pub struct PerfDb {
+    records: Vec<Record>,
+}
+
+impl PerfDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn query(&self, q: &Query) -> Vec<&Record> {
+        self.records.iter().filter(|r| q.matches(r)).collect()
+    }
+
+    /// Mean of a metric over matching records.
+    pub fn aggregate_mean(&self, q: &Query, metric: &str) -> Option<f64> {
+        let vals: Vec<f64> = self.query(q).iter().filter_map(|r| r.metric(metric)).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    /// Leaderboard: matching records sorted ascending by a metric
+    /// (missing metric sorts last). Paper §4.2.5.
+    pub fn leaderboard(&self, q: &Query, metric: &str) -> Vec<&Record> {
+        let mut rows = self.query(q);
+        rows.sort_by(|a, b| {
+            let av = a.metric(metric).unwrap_or(f64::INFINITY);
+            let bv = b.metric(metric).unwrap_or(f64::INFINITY);
+            av.partial_cmp(&bv).unwrap()
+        });
+        rows
+    }
+
+    /// Append all records to a JSONL file (creates parents).
+    pub fn save_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        for r in &self.records {
+            writeln!(f, "{}", r.to_json().to_string_compact())?;
+        }
+        Ok(())
+    }
+
+    /// Load a JSONL file written by `save_jsonl`.
+    pub fn load_jsonl(path: impl AsRef<Path>) -> Result<PerfDb> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut db = PerfDb::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = json::parse(line).map_err(|e| anyhow!("line {}: {e}", i + 1))?;
+            db.insert(Record::from_json(&v)?);
+        }
+        Ok(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_db() -> PerfDb {
+        let mut db = PerfDb::new();
+        db.insert(Record::new("serve", "resnet50", "G1", "tfs").with_metric("p99_ms", 25.0));
+        db.insert(Record::new("serve", "resnet50", "G1", "tris").with_metric("p99_ms", 12.0));
+        db.insert(Record::new("serve", "resnet50", "G3", "tfs").with_metric("p99_ms", 40.0));
+        db.insert(Record::new("serve", "bert_large", "G1", "tfs").with_metric("p99_ms", 80.0));
+        db
+    }
+
+    #[test]
+    fn query_filters_compose() {
+        let db = sample_db();
+        assert_eq!(db.query(&Query::default()).len(), 4);
+        assert_eq!(db.query(&Query::default().model("resnet50")).len(), 3);
+        assert_eq!(db.query(&Query::default().model("resnet50").platform("G1")).len(), 2);
+        assert_eq!(db.query(&Query::default().software("tris")).len(), 1);
+    }
+
+    #[test]
+    fn aggregate_mean() {
+        let db = sample_db();
+        let m = db.aggregate_mean(&Query::default().model("resnet50").software("tfs"), "p99_ms");
+        assert!((m.unwrap() - 32.5).abs() < 1e-12);
+        assert!(db.aggregate_mean(&Query::default().model("nope"), "p99_ms").is_none());
+    }
+
+    #[test]
+    fn leaderboard_sorted_ascending() {
+        let db = sample_db();
+        let rows = db.leaderboard(&Query::default().model("resnet50"), "p99_ms");
+        let vals: Vec<f64> = rows.iter().map(|r| r.metric("p99_ms").unwrap()).collect();
+        assert_eq!(vals, vec![12.0, 25.0, 40.0]);
+        assert_eq!(rows[0].software, "tris");
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let db = sample_db();
+        let dir = std::env::temp_dir().join("inferbench_test_perfdb");
+        let path = dir.join("perf.jsonl");
+        db.save_jsonl(&path).unwrap();
+        let loaded = PerfDb::load_jsonl(&path).unwrap();
+        assert_eq!(loaded.len(), 4);
+        assert_eq!(loaded.records[1], db.records[1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_lines() {
+        let dir = std::env::temp_dir().join("inferbench_test_perfdb_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"task\":\"t\",\"model\":\"m\",\"platform\":\"p\",\"software\":\"s\",\"metrics\":{}}\nnot json\n").unwrap();
+        assert!(PerfDb::load_jsonl(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_metric_sorts_last() {
+        let mut db = sample_db();
+        db.insert(Record::new("serve", "resnet50", "G4", "torchscript"));
+        let rows = db.leaderboard(&Query::default().model("resnet50"), "p99_ms");
+        assert_eq!(rows.last().unwrap().software, "torchscript");
+    }
+}

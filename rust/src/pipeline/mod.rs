@@ -1,0 +1,165 @@
+//! Tier-3 pipeline models (paper §2.3, Fig 4, §5.4): the stages a request
+//! passes through around the inference itself — client pre-processing,
+//! network transmission, and post-processing — plus the three network
+//! technologies the paper tests (LAN, 4G LTE, campus WiFi).
+
+use crate::util::rng::Pcg64;
+
+/// A network technology: latency floor + bandwidth + jitter (paper §5.1
+/// "three network scenarios").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Network {
+    pub name: &'static str,
+    /// One-way base latency, seconds.
+    pub base_latency_s: f64,
+    /// Effective application-layer bandwidth, BYTES per second.
+    pub bandwidth_bps: f64,
+    /// Lognormal jitter sigma (multiplies the base latency).
+    pub jitter_sigma: f64,
+}
+
+/// Datacenter 1GbE including gRPC/TCP framing overhead.
+pub const LAN: Network = Network {
+    name: "LAN",
+    base_latency_s: 1.2e-3,
+    bandwidth_bps: 110.0e6, // ~1 Gbps effective
+    jitter_sigma: 0.10,
+};
+
+/// Campus 802.11ac (contended).
+pub const WIFI: Network = Network {
+    name: "Campus WiFi",
+    base_latency_s: 4.0e-3,
+    bandwidth_bps: 6.0e6, // ~48 Mbps effective
+    jitter_sigma: 0.35,
+};
+
+/// Cellular uplink: high RTT, modest bandwidth, heavy jitter.
+pub const LTE_4G: Network = Network {
+    name: "4G LTE",
+    base_latency_s: 45.0e-3,
+    bandwidth_bps: 1.5e6, // ~12 Mbps uplink
+    jitter_sigma: 0.5,
+};
+
+pub const NETWORKS: &[Network] = &[LAN, WIFI, LTE_4G];
+
+impl Network {
+    /// Sample one request's transmission time for a payload.
+    pub fn sample_s(&self, payload_bytes: u64, rng: &mut Pcg64) -> f64 {
+        let jitter = rng.lognormal(0.0, self.jitter_sigma);
+        self.base_latency_s * jitter + payload_bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Deterministic mean transmission time (for tables).
+    pub fn mean_s(&self, payload_bytes: u64) -> f64 {
+        // E[lognormal(0, s)] = exp(s^2/2).
+        let mean_jitter = (self.jitter_sigma * self.jitter_sigma / 2.0).exp();
+        self.base_latency_s * mean_jitter + payload_bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Pre-/post-processing cost model (paper §4.2.3): per-request CPU work
+/// like image resize + tensor conversion, and class-id -> label lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Processors {
+    /// Pre-processing seconds per request (e.g. decode + resize ~ 2-4 ms
+    /// for images, ~0.2 ms for tokenized text).
+    pub pre_s: f64,
+    /// Post-processing seconds per request.
+    pub post_s: f64,
+}
+
+impl Processors {
+    /// Typical image-classification processors (decode + resize + argmax).
+    pub fn image() -> Processors {
+        Processors { pre_s: 2.5e-3, post_s: 0.3e-3 }
+    }
+
+    /// Text pipelines (tokenize + label lookup).
+    pub fn text() -> Processors {
+        Processors { pre_s: 0.4e-3, post_s: 0.1e-3 }
+    }
+
+    pub fn none() -> Processors {
+        Processors { pre_s: 0.0, post_s: 0.0 }
+    }
+}
+
+/// Full request-path model around the server: processors + network +
+/// payload size. Used by the serving simulator to draw per-request stage
+/// durations.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestPath {
+    pub processors: Processors,
+    pub network: Network,
+    pub payload_bytes: u64,
+}
+
+impl RequestPath {
+    pub fn local(processors: Processors) -> RequestPath {
+        RequestPath { processors, network: LAN, payload_bytes: 1_000 }
+    }
+
+    /// Sample (pre, transmission, post) durations for one request.
+    pub fn sample(&self, rng: &mut Pcg64) -> (f64, f64, f64) {
+        (
+            self.processors.pre_s,
+            self.network.sample_s(self.payload_bytes, rng),
+            self.processors.post_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lte_slowest_lan_fastest() {
+        // Paper Fig 14b: 4G LTE has the longest end-to-end latency.
+        let payload = 150_000;
+        assert!(LAN.mean_s(payload) < WIFI.mean_s(payload));
+        assert!(WIFI.mean_s(payload) < LTE_4G.mean_s(payload));
+    }
+
+    #[test]
+    fn sample_mean_close_to_analytic() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| WIFI.sample_s(150_000, &mut rng)).sum::<f64>() / n as f64;
+        let expect = WIFI.mean_s(150_000);
+        assert!((mean / expect - 1.0).abs() < 0.05, "mean {mean} expect {expect}");
+    }
+
+    #[test]
+    fn transmission_grows_with_payload() {
+        assert!(LTE_4G.mean_s(1_000_000) > LTE_4G.mean_s(10_000) + 0.05);
+    }
+
+    #[test]
+    fn samples_positive_and_jittered() {
+        let mut rng = Pcg64::seeded(5);
+        let a: Vec<f64> = (0..100).map(|_| LTE_4G.sample_s(1000, &mut rng)).collect();
+        assert!(a.iter().all(|&x| x > 0.0));
+        let distinct = a.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(distinct > 90);
+    }
+
+    #[test]
+    fn request_path_sample_components() {
+        let mut rng = Pcg64::seeded(1);
+        let p = RequestPath { processors: Processors::image(), network: LAN, payload_bytes: 150_000 };
+        let (pre, tx, post) = p.sample(&mut rng);
+        assert_eq!(pre, 2.5e-3);
+        assert_eq!(post, 0.3e-3);
+        assert!(tx > 0.0);
+    }
+
+    #[test]
+    fn processors_presets() {
+        assert!(Processors::image().pre_s > Processors::text().pre_s);
+        assert_eq!(Processors::none().pre_s, 0.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `artifacts/manifest.json` lists, per lowered model variant, the HLO file,
+//! the ordered input tensor specs (params first, then `x`), the output
+//! shape, and the analytic compute profile (FLOPs / params / weight &
+//! activation bytes) that drives the hardware roofline models.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named tensor the executable expects (or produces).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        // Only f32 is emitted today; keep the map explicit for extension.
+        let elem = match self.dtype.as_str() {
+            "f32" => 4,
+            "bf16" | "f16" => 2,
+            other => panic!("unsupported dtype {other}"),
+        };
+        self.element_count() * elem
+    }
+}
+
+/// Manifest entry for one AOT-compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub family: String,
+    pub hyperparams: BTreeMap<String, f64>,
+    /// Ordered inputs: model params first, then the data tensor `x` (last).
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    pub flops_per_sample: u64,
+    pub params: u64,
+    pub weight_bytes: u64,
+    pub act_bytes_per_sample: u64,
+    pub hlo_file: String,
+}
+
+impl ArtifactEntry {
+    /// The data input (by convention the last entry).
+    pub fn x_spec(&self) -> &TensorSpec {
+        self.inputs.last().expect("manifest entry has no inputs")
+    }
+
+    /// Batch size = leading dim of the data input.
+    pub fn batch(&self) -> usize {
+        self.x_spec().shape.first().copied().unwrap_or(1)
+    }
+
+    /// Arithmetic intensity (FLOPs per HBM byte) at this artifact's batch —
+    /// the x-axis of the Roofline analysis (paper Fig 10).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let b = self.batch() as f64;
+        (self.flops_per_sample as f64 * b)
+            / (self.weight_bytes as f64 + self.act_bytes_per_sample as f64 * b)
+    }
+}
+
+/// The parsed manifest plus its base directory (for resolving HLO paths).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (dir used for HLO path resolution).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest root must be an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in obj {
+            entries.insert(name.clone(), parse_entry(name, v)?);
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (available: {:?})",
+                self.entries.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.hlo_file)
+    }
+
+    /// Artifact names for a (model stem, any batch) — e.g. "resnet_mini".
+    pub fn variants_of(&self, stem: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|(k, _)| k.starts_with(stem))
+            .map(|(_, e)| e)
+            .collect();
+        v.sort_by_key(|e| e.batch());
+        v
+    }
+}
+
+fn parse_entry(name: &str, v: &Json) -> Result<ArtifactEntry> {
+    let get = |k: &str| -> Result<&Json> {
+        v.get(k).ok_or_else(|| anyhow!("artifact {name}: missing field {k:?}"))
+    };
+    let str_field = |k: &str| -> Result<String> {
+        Ok(get(k)?.as_str().ok_or_else(|| anyhow!("artifact {name}: {k} not a string"))?.to_string())
+    };
+    let u64_field = |k: &str| -> Result<u64> {
+        get(k)?.as_i64().map(|i| i as u64).ok_or_else(|| anyhow!("artifact {name}: {k} not an int"))
+    };
+
+    let mut hyperparams = BTreeMap::new();
+    if let Some(hp) = get("hyperparams")?.as_obj() {
+        for (k, val) in hp {
+            if let Some(f) = val.as_f64() {
+                hyperparams.insert(k.clone(), f);
+            }
+        }
+    }
+
+    let inputs = get("inputs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("artifact {name}: inputs not an array"))?
+        .iter()
+        .map(|t| parse_tensor(name, t))
+        .collect::<Result<Vec<_>>>()?;
+    if inputs.is_empty() {
+        bail!("artifact {name}: empty inputs");
+    }
+    let output = parse_tensor(name, get("output")?)?;
+
+    Ok(ArtifactEntry {
+        name: name.to_string(),
+        family: str_field("family")?,
+        hyperparams,
+        inputs,
+        output,
+        flops_per_sample: u64_field("flops_per_sample")?,
+        params: u64_field("params")?,
+        weight_bytes: u64_field("weight_bytes")?,
+        act_bytes_per_sample: u64_field("act_bytes_per_sample")?,
+        hlo_file: str_field("hlo_file")?,
+    })
+}
+
+fn parse_tensor(artifact: &str, v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("artifact {artifact}: tensor missing shape"))?
+        .iter()
+        .map(|d| d.as_i64().map(|i| i as usize).ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec {
+        name: v.get("name").and_then(|n| n.as_str()).unwrap_or("out").to_string(),
+        shape,
+        dtype: v.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32").to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "mlp_d2_w64_b4": {
+        "family": "mlp",
+        "hyperparams": {"depth": 2, "width": 64, "batch": 4},
+        "inputs": [
+          {"name": "w_in", "shape": [256, 64], "dtype": "f32"},
+          {"name": "x", "shape": [4, 256], "dtype": "f32"}
+        ],
+        "output": {"shape": [4, 16], "dtype": "f32"},
+        "flops_per_sample": 49152,
+        "params": 16448,
+        "weight_bytes": 65792,
+        "act_bytes_per_sample": 2688,
+        "hlo_file": "mlp_d2_w64_b4.hlo.txt"
+      }
+    }"#;
+
+    #[test]
+    fn parses_entry() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let e = m.get("mlp_d2_w64_b4").unwrap();
+        assert_eq!(e.family, "mlp");
+        assert_eq!(e.batch(), 4);
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.x_spec().name, "x");
+        assert_eq!(e.hyperparams["width"], 64.0);
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/mlp_d2_w64_b4.hlo.txt"));
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec { name: "x".into(), shape: vec![4, 256], dtype: "f32".into() };
+        assert_eq!(t.element_count(), 1024);
+        assert_eq!(t.byte_size(), 4096);
+    }
+
+    #[test]
+    fn arithmetic_intensity_monotone_in_batch() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let e = m.get("mlp_d2_w64_b4").unwrap();
+        let mut e1 = e.clone();
+        e1.inputs.last_mut().unwrap().shape[0] = 1;
+        let mut e32 = e.clone();
+        e32.inputs.last_mut().unwrap().shape[0] = 32;
+        assert!(e32.arithmetic_intensity() > e.arithmetic_intensity());
+        assert!(e.arithmetic_intensity() > e1.arithmetic_intensity());
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let bad = r#"{"m": {"family": "mlp"}}"#;
+        assert!(Manifest::parse(bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_lists_available() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("mlp_d2_w64_b4"));
+    }
+
+    #[test]
+    fn variants_sorted_by_batch() {
+        let mut doc = String::from("{");
+        for (i, b) in [8, 1, 4].iter().enumerate() {
+            if i > 0 {
+                doc.push(',');
+            }
+            doc.push_str(&format!(
+                r#""m_b{b}": {{"family":"mlp","hyperparams":{{}},
+                "inputs":[{{"name":"x","shape":[{b},8],"dtype":"f32"}}],
+                "output":{{"shape":[{b},16],"dtype":"f32"}},
+                "flops_per_sample":1,"params":1,"weight_bytes":4,
+                "act_bytes_per_sample":4,"hlo_file":"m_b{b}.hlo.txt"}}"#
+            ));
+        }
+        doc.push('}');
+        let m = Manifest::parse(&doc, PathBuf::from("/tmp")).unwrap();
+        let batches: Vec<usize> = m.variants_of("m_b").iter().map(|e| e.batch()).collect();
+        assert_eq!(batches, vec![1, 4, 8]);
+    }
+}

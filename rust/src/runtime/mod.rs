@@ -1,0 +1,158 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` -> `HloModuleProto::
+//! from_text_file` -> `client.compile` -> `execute_b`. Model parameters are
+//! generated once (seeded, shapes from the manifest) and uploaded to device
+//! buffers at load; the request hot path only uploads the data tensor `x`.
+//!
+//! PJRT handles are not `Send`: the serving engine owns an [`Engine`] on a
+//! dedicated executor thread and feeds it through channels (see
+//! `serving::live`).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// A PJRT client plus the manifest it loads artifacts from.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// CPU PJRT client over the given artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact and upload seeded parameters; returns the
+    /// ready-to-serve model. `seed` makes param contents reproducible
+    /// (they affect numerics, not benchmark timing).
+    pub fn load(&self, name: &str, seed: u64) -> Result<LoadedModel> {
+        let entry = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let compile_time = t0.elapsed();
+
+        // Upload every param tensor once; x (last input) is uploaded per call.
+        let t1 = Instant::now();
+        let mut rng = Pcg64::seeded(seed);
+        let mut param_buffers = Vec::with_capacity(entry.inputs.len() - 1);
+        for spec in &entry.inputs[..entry.inputs.len() - 1] {
+            if spec.dtype != "f32" {
+                bail!("artifact {name}: unsupported param dtype {}", spec.dtype);
+            }
+            let fan_in = if spec.shape.len() >= 2 {
+                spec.shape[spec.shape.len() - 2]
+            } else {
+                spec.shape.first().copied().unwrap_or(1)
+            };
+            let scale = 1.0 / (fan_in.max(1) as f32).sqrt();
+            let data = rng.f32_vec(spec.element_count(), scale);
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&data, &spec.shape, None)
+                .with_context(|| format!("uploading param {}", spec.name))?;
+            param_buffers.push(buf);
+        }
+        let upload_time = t1.elapsed();
+
+        Ok(LoadedModel { entry, exe, param_buffers, compile_time, upload_time })
+    }
+}
+
+/// A compiled executable with its parameters resident on device.
+pub struct LoadedModel {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    param_buffers: Vec<xla::PjRtBuffer>,
+    /// HLO-parse + XLA-compile time (the dominant part of cold start).
+    pub compile_time: std::time::Duration,
+    /// Param generation + host->device transfer time.
+    pub upload_time: std::time::Duration,
+}
+
+impl LoadedModel {
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+
+    pub fn batch(&self) -> usize {
+        self.entry.batch()
+    }
+
+    /// Element count of one request's data tensor.
+    pub fn x_elements(&self) -> usize {
+        self.entry.x_spec().element_count()
+    }
+
+    /// Run one inference. `x` must have exactly `x_elements()` values.
+    /// Returns the flattened logits.
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.entry.x_spec();
+        if x.len() != spec.element_count() {
+            bail!(
+                "model {}: x has {} elements, expected {} {:?}",
+                self.entry.name,
+                x.len(),
+                spec.element_count(),
+                spec.shape
+            );
+        }
+        let xbuf = self
+            .exe
+            .client()
+            .buffer_from_host_buffer(x, &spec.shape, None)
+            .context("uploading x")?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_buffers.iter().collect();
+        args.push(&xbuf);
+        let result = self.exe.execute_b(&args).context("execute")?;
+        let literal = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(literal.to_vec::<f32>()?)
+    }
+
+    /// Timed inference: returns (logits, wall time). The measurement the
+    /// CPU-platform (C1) latency numbers in every bench come from.
+    pub fn infer_timed(&self, x: &[f32]) -> Result<(Vec<f32>, std::time::Duration)> {
+        let t0 = Instant::now();
+        let out = self.infer(x)?;
+        Ok((out, t0.elapsed()))
+    }
+
+    /// Deterministic input tensor for benchmarking.
+    pub fn make_input(&self, seed: u64) -> Vec<f32> {
+        Pcg64::seeded(seed).f32_vec(self.x_elements(), 1.0)
+    }
+
+    /// Run a few inferences to absorb first-call overhead; returns the
+    /// steady-state mean latency over `iters` timed runs.
+    pub fn warmup_and_measure(&self, warmup: usize, iters: usize) -> Result<f64> {
+        let x = self.make_input(7);
+        for _ in 0..warmup {
+            self.infer(&x)?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            self.infer(&x)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / iters.max(1) as f64)
+    }
+}
+
+// Engine tests that need real artifacts live in
+// rust/tests/runtime_integration.rs (they require `make artifacts`).
+// Manifest parsing is unit-tested in manifest.rs.

@@ -1,0 +1,161 @@
+//! Serving-software profiles (paper §3.2 Tier 2, Fig 6).
+//!
+//! The paper benchmarks four serving infrastructures: TensorFlow-Serving
+//! (TFS), Triton Inference Server (TrIS), ONNX Runtime behind FastAPI, and
+//! TorchScript behind FastAPI. This testbed cannot run the real binaries
+//! (DESIGN.md §2); what differs between them — and what Fig 11d/12/14c
+//! measure — is queueing + overhead behaviour, which these profiles model:
+//! per-request RPC overhead, per-batch dispatch overhead, runtime
+//! optimization quality, dynamic-batching implementation quality, and the
+//! cold-start profile. Values are calibrated to reproduce the paper's
+//! qualitative ordering (TrIS < ONNX-RT < TFS < TorchScript on tail
+//! latency; TrIS >> TFS on dynamic batching; TrIS slowest to cold-start).
+
+/// How well a platform's dynamic batching works (Fig 12).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DynamicBatching {
+    /// No server-side batching (plain web-framework wrappers).
+    None,
+    /// Forms batches but adds `penalty_s` scheduling delay per formed
+    /// batch and caps effective batch at `effective_cap` under light
+    /// concurrency — TFS's observed "worse than no batching at small
+    /// concurrency" behaviour.
+    Naive { penalty_s: f64, effective_cap: usize },
+    /// Well-implemented (TrIS): negligible added delay, full batch use.
+    Optimized,
+}
+
+/// One serving-software profile.
+#[derive(Debug, Clone)]
+pub struct Software {
+    pub id: &'static str,
+    pub name: &'static str,
+    /// Per-request fixed overhead: RPC deserialize, tensor conversion,
+    /// framework glue (python web frameworks pay more).
+    pub request_overhead_s: f64,
+    /// Per-batch dispatch overhead into the runtime.
+    pub batch_overhead_s: f64,
+    /// Multiplier on device inference time (<1 = optimized runtime, e.g.
+    /// TensorRT kernels under TrIS; >1 = interpreter overhead).
+    pub runtime_factor: f64,
+    pub dynamic_batching: DynamicBatching,
+    /// Cold start: fixed initialization plus per-GB-of-weights load time
+    /// (Fig 14c).
+    pub coldstart_base_s: f64,
+    pub coldstart_per_gb_s: f64,
+}
+
+pub const TFS: Software = Software {
+    id: "tfs",
+    name: "TensorFlow-Serving",
+    request_overhead_s: 1.2e-3,
+    batch_overhead_s: 0.5e-3,
+    runtime_factor: 1.0,
+    dynamic_batching: DynamicBatching::Naive { penalty_s: 4.0e-3, effective_cap: 8 },
+    coldstart_base_s: 2.0,
+    coldstart_per_gb_s: 2.0,
+};
+
+pub const TRIS: Software = Software {
+    id: "tris",
+    name: "Triton Inference Server",
+    request_overhead_s: 0.4e-3,
+    batch_overhead_s: 0.2e-3,
+    runtime_factor: 0.8, // TensorRT-optimized kernels
+    dynamic_batching: DynamicBatching::Optimized,
+    coldstart_base_s: 9.0, // paper: >10s even for a small IC model
+    coldstart_per_gb_s: 4.0,
+};
+
+pub const ONNX_FASTAPI: Software = Software {
+    id: "onnx",
+    name: "ONNX Runtime + FastAPI",
+    request_overhead_s: 0.8e-3,
+    batch_overhead_s: 0.4e-3,
+    runtime_factor: 0.92, // graph-level optimizations
+    dynamic_batching: DynamicBatching::None,
+    coldstart_base_s: 1.2,
+    coldstart_per_gb_s: 1.5,
+};
+
+pub const TORCHSCRIPT_FASTAPI: Software = Software {
+    id: "torchscript",
+    name: "TorchScript + FastAPI",
+    request_overhead_s: 1.5e-3,
+    batch_overhead_s: 0.6e-3,
+    runtime_factor: 1.1, // jit interpreter overhead
+    dynamic_batching: DynamicBatching::None,
+    coldstart_base_s: 1.8,
+    coldstart_per_gb_s: 2.5,
+};
+
+pub const ALL: &[&Software] = &[&TFS, &TRIS, &ONNX_FASTAPI, &TORCHSCRIPT_FASTAPI];
+
+pub fn find(id: &str) -> Option<&'static Software> {
+    ALL.iter().copied().find(|s| s.id == id)
+}
+
+impl Software {
+    /// Cold-start time for a model with the given weight footprint
+    /// (Fig 14c). On the real CPU path the XLA compile time measured by
+    /// the runtime is added by the caller.
+    pub fn coldstart_s(&self, weight_bytes: u64) -> f64 {
+        self.coldstart_base_s + (weight_bytes as f64 / 1e9) * self.coldstart_per_gb_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_platforms_registered() {
+        assert_eq!(ALL.len(), 4);
+        for id in ["tfs", "tris", "onnx", "torchscript"] {
+            assert!(find(id).is_some(), "{id}");
+        }
+        assert!(find("clipper").is_none());
+    }
+
+    #[test]
+    fn paper_overhead_ordering() {
+        // Fig 11d: TrIS < ONNX-RT < TFS < TorchScript on per-request cost.
+        let total = |s: &Software| s.request_overhead_s + s.batch_overhead_s;
+        assert!(total(&TRIS) < total(&ONNX_FASTAPI));
+        assert!(total(&ONNX_FASTAPI) < total(&TFS));
+        assert!(total(&TFS) < total(&TORCHSCRIPT_FASTAPI));
+    }
+
+    #[test]
+    fn tris_runtime_fastest() {
+        assert!(TRIS.runtime_factor < ONNX_FASTAPI.runtime_factor);
+        assert!(ONNX_FASTAPI.runtime_factor < TFS.runtime_factor);
+        assert!(TFS.runtime_factor < TORCHSCRIPT_FASTAPI.runtime_factor);
+    }
+
+    #[test]
+    fn tris_coldstart_longest() {
+        // Fig 14c: TrIS takes >10s to start even a small model.
+        let small_model = 100_000_000; // 100 MB of weights
+        let tris = TRIS.coldstart_s(small_model);
+        assert!(tris > 9.0);
+        for s in [&TFS, &ONNX_FASTAPI, &TORCHSCRIPT_FASTAPI] {
+            assert!(s.coldstart_s(small_model) < tris, "{}", s.id);
+        }
+    }
+
+    #[test]
+    fn coldstart_scales_with_weights() {
+        let small = TFS.coldstart_s(10_000_000);
+        let large = TFS.coldstart_s(1_400_000_000); // BERT-Large f32
+        assert!(large > small + 2.0);
+    }
+
+    #[test]
+    fn web_frameworks_have_no_dynamic_batching() {
+        assert_eq!(ONNX_FASTAPI.dynamic_batching, DynamicBatching::None);
+        assert_eq!(TORCHSCRIPT_FASTAPI.dynamic_batching, DynamicBatching::None);
+        assert_ne!(TFS.dynamic_batching, DynamicBatching::None);
+        assert_eq!(TRIS.dynamic_batching, DynamicBatching::Optimized);
+    }
+}

@@ -1,0 +1,408 @@
+//! Live serving engine: the real thing, on the CPU platform (C1).
+//!
+//! Three threads — clients -> batcher -> executor — wired with channels.
+//! The batcher runs the same [`Batcher`] policy logic the simulator uses,
+//! but against the wall clock; the executor owns the PJRT engine (PJRT
+//! handles are not Send, so all XLA objects live on that one thread) and
+//! executes real AOT-compiled artifacts. Used by the e2e example and by
+//! the benches that anchor the CPU columns with measured latencies.
+//!
+//! Batch-size handling: artifacts are compiled at fixed batch shapes
+//! (b1/b4/b8); a formed batch of size n runs on the smallest variant with
+//! batch >= n, zero-padded — exactly what TFS does with its
+//! `allowed_batch_sizes`.
+
+use super::batcher::{Batcher, Decision, Policy};
+use crate::runtime::{Engine, LoadedModel};
+use crate::util::stats::Summary;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Configuration for a live server.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub artifact_dir: PathBuf,
+    /// Model stem, e.g. "resnet_mini" — all `<stem>_b*` variants load.
+    pub model_stem: String,
+    pub policy: Policy,
+    /// Seed for the generated model parameters.
+    pub seed: u64,
+}
+
+/// One in-flight request.
+struct LiveRequest {
+    id: u64,
+    x: Vec<f32>,
+    submitted: Instant,
+    reply: mpsc::Sender<LiveResponse>,
+}
+
+/// Completed-request report.
+#[derive(Debug, Clone)]
+pub struct LiveResponse {
+    pub id: u64,
+    /// argmax of the logits (the "prediction").
+    pub predicted_class: usize,
+    /// Requests in the executed batch.
+    pub batch_size: usize,
+    /// Time from submit to batch formation.
+    pub queue_s: f64,
+    /// XLA execution time of the batch.
+    pub infer_s: f64,
+    /// Submit -> reply.
+    pub e2e_s: f64,
+}
+
+/// Info reported once the executor has loaded all variants.
+#[derive(Debug, Clone)]
+pub struct ServerInfo {
+    /// (batch size, XLA compile seconds) per loaded variant — the measured
+    /// cold-start component (Fig 14c).
+    pub variants: Vec<(usize, f64)>,
+    /// Elements per request input.
+    pub x_elements: usize,
+}
+
+enum BatcherMsg {
+    Request(LiveRequest),
+    Shutdown,
+}
+
+struct BatchJob {
+    requests: Vec<(LiveRequest, f64)>, // (request, queue seconds)
+}
+
+/// A running live server.
+pub struct LiveServer {
+    tx: mpsc::Sender<BatcherMsg>,
+    batcher_handle: Option<std::thread::JoinHandle<()>>,
+    exec_handle: Option<std::thread::JoinHandle<Result<()>>>,
+    pub info: ServerInfo,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl LiveServer {
+    /// Start the server: loads every `<stem>_b*` artifact on the executor
+    /// thread and blocks until ready.
+    pub fn start(config: LiveConfig) -> Result<LiveServer> {
+        let (req_tx, req_rx) = mpsc::channel::<BatcherMsg>();
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Option<BatchJob>>(64);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<ServerInfo>>();
+
+        let cfg = config.clone();
+        let exec_handle = std::thread::Builder::new()
+            .name("inferbench-executor".into())
+            .spawn(move || executor_thread(cfg, batch_rx, ready_tx))
+            .context("spawning executor")?;
+
+        let info = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+
+        let policy = config.policy;
+        let batcher_handle = std::thread::Builder::new()
+            .name("inferbench-batcher".into())
+            .spawn(move || batcher_thread(policy, req_rx, batch_tx))
+            .context("spawning batcher")?;
+
+        Ok(LiveServer {
+            tx: req_tx,
+            batcher_handle: Some(batcher_handle),
+            exec_handle: Some(exec_handle),
+            info,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Submit a request; the response arrives on `reply`.
+    pub fn submit(&self, x: Vec<f32>, reply: mpsc::Sender<LiveResponse>) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(BatcherMsg::Request(LiveRequest { id, x, submitted: Instant::now(), reply }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(id)
+    }
+
+    /// Graceful shutdown: drains queues, joins threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(BatcherMsg::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            h.join().map_err(|_| anyhow!("batcher panicked"))?;
+        }
+        if let Some(h) = self.exec_handle.take() {
+            h.join().map_err(|_| anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for LiveServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(BatcherMsg::Shutdown);
+    }
+}
+
+fn batcher_thread(
+    policy: Policy,
+    rx: mpsc::Receiver<BatcherMsg>,
+    batch_tx: mpsc::SyncSender<Option<BatchJob>>,
+) {
+    let start = Instant::now();
+    let now_s = || start.elapsed().as_secs_f64();
+    let mut batcher = Batcher::new(policy);
+    let mut pending: std::collections::HashMap<u64, LiveRequest> = Default::default();
+    let mut wake_at: Option<f64> = None;
+
+    let dispatch = |batch: Vec<super::batcher::Queued>,
+                    pending: &mut std::collections::HashMap<u64, LiveRequest>,
+                    t: f64| {
+        let requests: Vec<(LiveRequest, f64)> = batch
+            .into_iter()
+            .filter_map(|q| pending.remove(&q.id).map(|r| (r, t - q.enqueue_s)))
+            .collect();
+        if !requests.is_empty() {
+            let _ = batch_tx.send(Some(BatchJob { requests }));
+        }
+    };
+
+    loop {
+        let timeout = match wake_at {
+            Some(t) => Duration::from_secs_f64((t - now_s()).max(0.0)),
+            None => Duration::from_millis(200),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(BatcherMsg::Request(req)) => {
+                let t = now_s();
+                let id = req.id;
+                pending.insert(id, req);
+                match batcher.on_arrival(id, t) {
+                    Decision::Dispatch(b) => {
+                        wake_at = None;
+                        dispatch(b, &mut pending, now_s());
+                    }
+                    Decision::WakeAt(t) => wake_at = Some(t),
+                    Decision::Wait => {}
+                }
+            }
+            Ok(BatcherMsg::Shutdown) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if wake_at.map_or(false, |t| now_s() >= t) {
+                    wake_at = None;
+                    if let Decision::Dispatch(b) = batcher.on_wake(now_s()) {
+                        dispatch(b, &mut pending, now_s());
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Drain what's left as one final flush.
+    if let Decision::Dispatch(b) = batcher.on_wake(now_s() + 1e9) {
+        dispatch(b, &mut pending, now_s());
+    }
+    let _ = batch_tx.send(None); // executor shutdown signal
+}
+
+fn executor_thread(
+    config: LiveConfig,
+    batch_rx: mpsc::Receiver<Option<BatchJob>>,
+    ready_tx: mpsc::Sender<Result<ServerInfo>>,
+) -> Result<()> {
+    // Load everything; report readiness (or the error) to the caller.
+    let setup = (|| -> Result<(Vec<LoadedModel>, ServerInfo)> {
+        let engine = Engine::cpu(&config.artifact_dir)?;
+        let names: Vec<String> = engine
+            .manifest
+            .variants_of(&format!("{}_b", config.model_stem))
+            .iter()
+            .map(|e| e.name.clone())
+            .collect();
+        if names.is_empty() {
+            bail!("no artifacts match stem {:?}", config.model_stem);
+        }
+        let mut variants = Vec::new();
+        for n in &names {
+            variants.push(engine.load(n, config.seed)?);
+        }
+        variants.sort_by_key(|m| m.batch());
+        let info = ServerInfo {
+            variants: variants
+                .iter()
+                .map(|m| (m.batch(), m.compile_time.as_secs_f64()))
+                .collect(),
+            x_elements: variants[0].x_elements() / variants[0].batch(),
+        };
+        Ok((variants, info))
+    })();
+
+    let (variants, info) = match setup {
+        Ok(ok) => ok,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Ok(());
+        }
+    };
+    let per_sample = info.x_elements;
+
+    // Warm every variant (first execution pays allocator/pool setup that
+    // would otherwise land in a request's tail) and measure its steady
+    // cost; then precompute, for every batch size n, the cost-minimal
+    // decomposition into variant runs (a batch of 2 on a 4x-cost b4
+    // artifact is often worse than two b1 runs). Warmup happens BEFORE
+    // the ready signal so no request ever queues behind it. §Perf.
+    let mut costs = Vec::with_capacity(variants.len());
+    for m in &variants {
+        let x = vec![0f32; m.batch() * per_sample];
+        let _ = m.infer(&x);
+        let t0 = Instant::now();
+        let _ = m.infer(&x);
+        costs.push(t0.elapsed().as_secs_f64());
+    }
+    let _ = ready_tx.send(Ok(info.clone()));
+    let max_n = variants.last().map(|m| m.batch()).unwrap_or(1).max(
+        variants.iter().map(|m| m.batch()).max().unwrap_or(1),
+    );
+    // plan[n] = sequence of variant indices covering n requests at min cost.
+    let mut best_cost = vec![0.0f64; max_n + 1];
+    let mut best_choice = vec![usize::MAX; max_n + 1];
+    for n in 1..=max_n {
+        best_cost[n] = f64::INFINITY;
+        for (vi, m) in variants.iter().enumerate() {
+            let covered = m.batch().min(n);
+            let c = costs[vi] + best_cost[n - covered];
+            if c < best_cost[n] {
+                best_cost[n] = c;
+                best_choice[n] = vi;
+            }
+        }
+    }
+    let plan_for = |mut n: usize| -> Vec<usize> {
+        let mut plan = Vec::new();
+        while n > 0 {
+            let vi = best_choice[n.min(max_n)];
+            plan.push(vi);
+            n -= variants[vi].batch().min(n);
+        }
+        plan
+    };
+
+    while let Ok(Some(job)) = batch_rx.recv() {
+        let n = job.requests.len();
+        let plan = plan_for(n);
+        let mut offset = 0usize;
+        for vi in plan {
+            let model = &variants[vi];
+            let cap = model.batch();
+            let chunk = &job.requests[offset..(offset + cap).min(n)];
+            offset += chunk.len();
+            let mut x = vec![0f32; cap * per_sample];
+            for (i, (req, _)) in chunk.iter().enumerate() {
+                let len = req.x.len().min(per_sample);
+                x[i * per_sample..i * per_sample + len].copy_from_slice(&req.x[..len]);
+            }
+            let t0 = Instant::now();
+            let out = model.infer(&x);
+            let infer_s = t0.elapsed().as_secs_f64();
+            match out {
+                Ok(logits) => {
+                    let classes = logits.len() / cap;
+                    for (i, (req, queue_s)) in chunk.iter().enumerate() {
+                        let row = &logits[i * classes..(i + 1) * classes];
+                        let predicted_class = row
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        let _ = req.reply.send(LiveResponse {
+                            id: req.id,
+                            predicted_class,
+                            batch_size: chunk.len(),
+                            queue_s: *queue_s,
+                            infer_s,
+                            e2e_s: req.submitted.elapsed().as_secs_f64(),
+                        });
+                    }
+                }
+                Err(e) => {
+                    // Report failure by dropping reply senders (clients see
+                    // a disconnect); log to stderr for diagnosis.
+                    eprintln!("executor: inference failed: {e:#}");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load-test summary from [`run_load`].
+#[derive(Debug)]
+pub struct LoadReport {
+    pub e2e: Summary,
+    pub queue: Summary,
+    pub infer: Summary,
+    pub batch_sizes: Summary,
+    pub completed: u64,
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall_s
+    }
+}
+
+/// Drive a live server with Poisson-ish open-loop load from this thread,
+/// collecting every response. Inter-arrival gaps are exponential; sleeps
+/// are wall-clock so measured latencies are real.
+pub fn run_load(server: &LiveServer, rate_rps: f64, duration_s: f64, seed: u64) -> Result<LoadReport> {
+    use crate::util::rng::Pcg64;
+    let mut rng = Pcg64::seeded(seed);
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let start = Instant::now();
+    let mut sent = 0u64;
+    let mut t_next = rng.exponential(rate_rps);
+    while start.elapsed().as_secs_f64() < duration_s {
+        let now = start.elapsed().as_secs_f64();
+        if now < t_next {
+            std::thread::sleep(Duration::from_secs_f64((t_next - now).min(0.05)));
+            continue;
+        }
+        let x = rng.f32_vec(server.info.x_elements, 1.0);
+        server.submit(x, reply_tx.clone())?;
+        sent += 1;
+        t_next += rng.exponential(rate_rps);
+    }
+    drop(reply_tx);
+
+    let mut report = LoadReport {
+        e2e: Summary::new(),
+        queue: Summary::new(),
+        infer: Summary::new(),
+        batch_sizes: Summary::new(),
+        completed: 0,
+        wall_s: 0.0,
+    };
+    // Collect replies (executor may still be draining).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while report.completed < sent && Instant::now() < deadline {
+        match reply_rx.recv_timeout(Duration::from_millis(500)) {
+            Ok(r) => {
+                report.completed += 1;
+                report.e2e.record(r.e2e_s);
+                report.queue.record(r.queue_s);
+                report.infer.record(r.infer_s);
+                report.batch_sizes.record(r.batch_size as f64);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    report.wall_s = start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+// Integration tests for the live engine live in rust/tests/ (they need
+// real artifacts from `make artifacts`).

@@ -1,0 +1,18 @@
+//! Tier-2 serving layer: software profiles, batching policies, service-time
+//! models, the discrete-event pipeline simulator, and the live CPU engine.
+//!
+//! The *control flow* (batcher decisions, queueing) is shared between the
+//! simulator (`sim`, used for the GPU platforms and long workloads) and
+//! the live engine (`live`, real XLA execution on the CPU platform), so
+//! simulated results exercise the same code the real server runs.
+
+pub mod backends;
+pub mod batcher;
+pub mod service;
+pub mod live;
+pub mod sim;
+
+pub use backends::{DynamicBatching, Software};
+pub use batcher::{Batcher, Decision, Policy};
+pub use service::ServiceModel;
+pub use sim::{run, SimConfig, SimResult};

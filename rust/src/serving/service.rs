@@ -1,0 +1,162 @@
+//! Service-time model: how long one batched inference occupies the device.
+//!
+//! Two sources, matching DESIGN.md §2:
+//!  * `Analytic` — the calibrated roofline model (GPU platforms G1..G4);
+//!  * `Measured` — a per-batch latency table measured on the real CPU PJRT
+//!    path by the runtime (platform C1), linearly interpolated.
+//!
+//! The serving-software multipliers (runtime factor, batch overhead) are
+//! applied on top by [`service_s`] so one model serves all four platforms.
+
+use super::backends::Software;
+use crate::hardware::{roofline, Parallelism, Platform};
+use crate::models::Profile;
+
+/// Where raw device time comes from.
+#[derive(Debug, Clone)]
+pub enum ServiceModel {
+    /// Roofline estimate for a platform from Table 1.
+    Analytic {
+        platform: &'static Platform,
+        profile: Profile,
+        parallelism: Parallelism,
+        request_bytes: u64,
+    },
+    /// Measured (batch, seconds) pairs from the real CPU runtime, sorted
+    /// by batch. `utilization` is the measured average core utilization.
+    Measured { per_batch: Vec<(usize, f64)>, utilization: f64 },
+}
+
+impl ServiceModel {
+    /// Raw device time for a batch, before software overheads.
+    pub fn device_s(&self, batch: usize) -> f64 {
+        match self {
+            ServiceModel::Analytic { platform, profile, parallelism, request_bytes } => {
+                roofline::estimate(platform, profile, *parallelism, batch, *request_bytes).total_s
+            }
+            ServiceModel::Measured { per_batch, .. } => interpolate(per_batch, batch),
+        }
+    }
+
+    /// Device utilization while serving a batch (Fig 9/13 metric).
+    pub fn utilization(&self, batch: usize) -> f64 {
+        match self {
+            ServiceModel::Analytic { platform, profile, parallelism, request_bytes } => {
+                roofline::estimate(platform, profile, *parallelism, batch, *request_bytes)
+                    .utilization
+            }
+            ServiceModel::Measured { utilization, .. } => *utilization,
+        }
+    }
+
+    /// Full server-side occupancy of one batch under a given software.
+    pub fn service_s(&self, batch: usize, software: &Software) -> f64 {
+        self.device_s(batch) * software.runtime_factor + software.batch_overhead_s
+    }
+}
+
+/// Piecewise-linear interpolation over measured (batch, secs) points;
+/// extrapolates linearly from the last segment.
+fn interpolate(points: &[(usize, f64)], batch: usize) -> f64 {
+    assert!(!points.is_empty(), "measured service model has no points");
+    let b = batch as f64;
+    if points.len() == 1 {
+        // Single point: scale per-sample beyond it.
+        let (b0, t0) = points[0];
+        return t0 * (b / b0 as f64).max(1.0);
+    }
+    let first = points[0];
+    if b <= first.0 as f64 {
+        return first.1;
+    }
+    for w in points.windows(2) {
+        let (b0, t0) = w[0];
+        let (b1, t1) = w[1];
+        if b <= b1 as f64 {
+            let f = (b - b0 as f64) / (b1 as f64 - b0 as f64);
+            return t0 + f * (t1 - t0);
+        }
+    }
+    // Extrapolate from the last segment's slope.
+    let (b0, t0) = points[points.len() - 2];
+    let (b1, t1) = points[points.len() - 1];
+    let slope = (t1 - t0) / (b1 as f64 - b0 as f64);
+    t1 + slope * (b - b1 as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::platforms::find;
+    use crate::models::catalog;
+    use crate::serving::backends;
+
+    fn measured() -> ServiceModel {
+        ServiceModel::Measured {
+            per_batch: vec![(1, 0.010), (4, 0.022), (8, 0.040)],
+            utilization: 0.5,
+        }
+    }
+
+    #[test]
+    fn interpolation_exact_at_points() {
+        let m = measured();
+        assert!((m.device_s(1) - 0.010).abs() < 1e-12);
+        assert!((m.device_s(4) - 0.022).abs() < 1e-12);
+        assert!((m.device_s(8) - 0.040).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interpolation_between_points() {
+        let m = measured();
+        let t2 = m.device_s(2);
+        assert!(t2 > 0.010 && t2 < 0.022, "{t2}");
+        // batch 6 midway between 4 and 8.
+        assert!((m.device_s(6) - 0.031).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extrapolation_beyond_last() {
+        let m = measured();
+        // slope (0.040-0.022)/4 = 0.0045/unit -> batch 16: 0.040 + 8*0.0045
+        assert!((m.device_s(16) - 0.076).abs() < 1e-9);
+    }
+
+    #[test]
+    fn below_first_point_clamps() {
+        let m = ServiceModel::Measured { per_batch: vec![(4, 0.02), (8, 0.03)], utilization: 0.4 };
+        assert!((m.device_s(1) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn software_factors_applied() {
+        let m = measured();
+        let tfs = m.service_s(1, &backends::TFS);
+        let tris = m.service_s(1, &backends::TRIS);
+        assert!(tris < tfs, "TrIS runtime should be faster: {tris} vs {tfs}");
+        assert!((tfs - (0.010 * 1.0 + 0.5e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_matches_roofline() {
+        let rn = catalog::find("resnet50").unwrap();
+        let platform = find("G1").unwrap();
+        let m = ServiceModel::Analytic {
+            platform,
+            profile: rn.profile,
+            parallelism: Parallelism::cnn(224),
+            request_bytes: rn.request_bytes,
+        };
+        let direct =
+            roofline::estimate(platform, &rn.profile, Parallelism::cnn(224), 8, rn.request_bytes);
+        assert_eq!(m.device_s(8), direct.total_s);
+        assert_eq!(m.utilization(8), direct.utilization);
+    }
+
+    #[test]
+    fn single_point_scales_per_sample() {
+        let m = ServiceModel::Measured { per_batch: vec![(1, 0.01)], utilization: 0.3 };
+        assert!((m.device_s(4) - 0.04).abs() < 1e-12);
+        assert!((m.device_s(1) - 0.01).abs() < 1e-12);
+    }
+}

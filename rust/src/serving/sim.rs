@@ -1,0 +1,443 @@
+//! Discrete-event simulation of one serving pipeline (paper Fig 4):
+//! arrivals -> pre-process -> transmission -> batch queue -> inference ->
+//! post-process, on a single accelerator behind one serving software.
+//!
+//! This is the engine behind the software- and pipeline-tier figures
+//! (Fig 11 tail latency, Fig 12 dynamic batching, Fig 13 utilization
+//! timeline, Fig 14 stage decomposition): sub-millisecond event resolution
+//! over minutes of simulated traffic in milliseconds of wall time. The
+//! same `Batcher`/`ServiceModel`/`Software` types also drive the live CPU
+//! engine (`serving::live`), so the simulated control flow is the real
+//! control flow.
+
+use super::backends::{DynamicBatching, Software};
+use super::batcher::{Batcher, Decision, Policy};
+use super::service::ServiceModel;
+use crate::metrics::{Collector, RequestTrace, Stage, UtilizationTimeline};
+use crate::pipeline::RequestPath;
+use crate::util::rng::Pcg64;
+use crate::workload::Arrival;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Open-loop arrivals (ignored when `closed_loop` is set).
+    pub arrivals: Vec<Arrival>,
+    /// Closed-loop client count (Fig 12): each client issues its next
+    /// request when the previous completes.
+    pub closed_loop: Option<usize>,
+    /// Simulated duration; no new requests issued past this.
+    pub duration_s: f64,
+    pub policy: Policy,
+    pub software: &'static Software,
+    pub service: ServiceModel,
+    pub path: RequestPath,
+    /// Server queue capacity; arrivals beyond it are dropped (overload).
+    pub max_queue: usize,
+    pub seed: u64,
+}
+
+/// Simulation output.
+#[derive(Debug)]
+pub struct SimResult {
+    pub collector: Collector,
+    /// FLOPs-efficiency-weighted utilization (achieved/peak; Fig 9 metric).
+    pub timeline: UtilizationTimeline,
+    /// Busy-fraction utilization — what DCGM/nvidia-smi report (Fig 13
+    /// metric): fraction of each bucket a kernel was resident.
+    pub busy_timeline: UtilizationTimeline,
+    /// Completed batch sizes (dynamic batching effectiveness, Fig 12).
+    pub batch_sizes: Vec<usize>,
+    /// Requests dropped at the queue.
+    pub dropped: u64,
+}
+
+impl SimResult {
+    /// Completed requests per simulated second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.collector.throughput_rps()
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+}
+
+#[derive(Debug, PartialEq)]
+enum Event {
+    /// Request reaches the server queue (pre-processing + transmission done).
+    Enqueue { id: u64 },
+    /// Batcher timeout.
+    Wake { scheduled_for: f64 },
+    /// Server finishes the in-flight batch.
+    ServerFree,
+}
+
+/// f64 ordered key for the event heap.
+#[derive(Debug, PartialEq, PartialOrd)]
+struct Key(f64, u64);
+
+impl Eq for Key {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("NaN event time")
+    }
+}
+
+/// Effective policy/overhead after applying the software's dynamic-batching
+/// quality (paper §5.3: TFS's naive scheduler hurts at low concurrency;
+/// web frameworks cannot batch server-side at all).
+fn effective(policy: Policy, software: &Software) -> (Policy, f64) {
+    match (policy, software.dynamic_batching) {
+        (Policy::Dynamic { .. }, DynamicBatching::None) => (Policy::Single, 0.0),
+        (Policy::Dynamic { max_size, max_wait_s }, DynamicBatching::Naive { penalty_s, effective_cap }) => {
+            (Policy::Dynamic { max_size: max_size.min(effective_cap), max_wait_s }, penalty_s)
+        }
+        (p, _) => (p, 0.0),
+    }
+}
+
+/// Run the simulation.
+pub fn run(config: &SimConfig) -> SimResult {
+    let mut rng = Pcg64::seeded(config.seed);
+    let (policy, batch_penalty_s) = effective(config.policy, config.software);
+    let mut batcher = Batcher::new(policy);
+
+    let mut heap: BinaryHeap<Reverse<(Key, EventBox)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Reverse<(Key, EventBox)>>, t: f64, e: Event, seq: &mut u64| {
+        heap.push(Reverse((Key(t, *seq), EventBox(e))));
+        *seq += 1;
+    };
+
+    // Preallocate: rehashing the trace map mid-run showed up in the DES
+    // profile (§Perf).
+    let expected = config.arrivals.len() + config.closed_loop.unwrap_or(0) * 4;
+    let mut traces: HashMap<u64, RequestTrace> = HashMap::with_capacity(expected.max(64));
+    let mut next_id = 0u64;
+
+    // Issue one request: samples its pipeline stages and schedules Enqueue.
+    let mut issue = |arrival_s: f64,
+                     heap: &mut BinaryHeap<Reverse<(Key, EventBox)>>,
+                     traces: &mut HashMap<u64, RequestTrace>,
+                     rng: &mut Pcg64,
+                     seq: &mut u64|
+     -> u64 {
+        let id = next_id;
+        next_id += 1;
+        let (pre, tx, _post) = config.path.sample(rng);
+        let mut trace = RequestTrace::new(id, arrival_s);
+        trace.record_stage(Stage::PreProcess, pre);
+        trace.record_stage(Stage::Transmission, tx);
+        let enqueue_at = trace.completed_s;
+        traces.insert(id, trace);
+        push(heap, enqueue_at, Event::Enqueue { id }, seq);
+        id
+    };
+
+    // Seed initial arrivals.
+    if let Some(clients) = config.closed_loop {
+        for _ in 0..clients {
+            issue(0.0, &mut heap, &mut traces, &mut rng, &mut seq);
+        }
+    } else {
+        for a in &config.arrivals {
+            if a.time_s < config.duration_s {
+                issue(a.time_s, &mut heap, &mut traces, &mut rng, &mut seq);
+            }
+        }
+    }
+
+    let mut collector = Collector::new();
+    let mut timeline = UtilizationTimeline::new(config.duration_s.max(1.0) * 1.5, 0.5);
+    let mut busy_timeline = UtilizationTimeline::new(config.duration_s.max(1.0) * 1.5, 0.5);
+    let mut batch_sizes = Vec::new();
+    let mut dropped = 0u64;
+    let mut server_busy = false;
+    let mut in_flight: Vec<(u64, f64)> = Vec::new(); // (id, service start)
+    let mut queued_now = 0usize;
+
+    // Start a batch: record wait, occupy server.
+    #[allow(clippy::too_many_arguments)]
+    fn start_batch(
+        batch: Vec<super::batcher::Queued>,
+        now: f64,
+        config: &SimConfig,
+        batch_penalty_s: f64,
+        server_busy: &mut bool,
+        in_flight: &mut Vec<(u64, f64)>,
+        heap: &mut BinaryHeap<Reverse<(Key, EventBox)>>,
+        seq: &mut u64,
+        traces: &mut HashMap<u64, RequestTrace>,
+        timeline: &mut UtilizationTimeline,
+        busy_timeline: &mut UtilizationTimeline,
+        batch_sizes: &mut Vec<usize>,
+        queued_now: &mut usize,
+    ) {
+        let b = batch.len();
+        *queued_now -= b;
+        let service = config.service.service_s(b, config.software) + batch_penalty_s;
+        let util = config.service.utilization(b);
+        timeline.record_busy(now, service, util);
+        busy_timeline.record_busy(now, service, 1.0);
+        batch_sizes.push(b);
+        for q in &batch {
+            let trace = traces.get_mut(&q.id).expect("trace");
+            // Batching stage: enqueue -> service start.
+            trace.record_stage(Stage::Batching, now - q.enqueue_s);
+            in_flight.push((q.id, now));
+        }
+        *server_busy = true;
+        heap.push(Reverse((Key(now + service, *seq), EventBox(Event::ServerFree))));
+        *seq += 1;
+    }
+
+    while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
+        match event {
+            Event::Enqueue { id } => {
+                if queued_now >= config.max_queue {
+                    // Overloaded: reject.
+                    if let Some(t) = traces.get_mut(&id) {
+                        t.dropped = true;
+                    }
+                    dropped += 1;
+                    collector.ingest(&traces[&id]);
+                    continue;
+                }
+                batcher.enqueue(id, now);
+                queued_now += 1;
+                if !server_busy {
+                    match batcher.poll(now) {
+                        Decision::Dispatch(batch) => start_batch(
+                            batch, now, config, batch_penalty_s, &mut server_busy,
+                            &mut in_flight, &mut heap, &mut seq, &mut traces,
+                            &mut timeline, &mut busy_timeline, &mut batch_sizes, &mut queued_now,
+                        ),
+                        Decision::WakeAt(t) => {
+                            push(&mut heap, t, Event::Wake { scheduled_for: t }, &mut seq)
+                        }
+                        Decision::Wait => {}
+                    }
+                }
+            }
+            Event::Wake { scheduled_for } => {
+                if server_busy || scheduled_for < now - 1e-12 {
+                    continue; // stale or server occupied; ServerFree will poll
+                }
+                if let Decision::Dispatch(batch) = batcher.on_wake(now) {
+                    start_batch(
+                        batch, now, config, batch_penalty_s, &mut server_busy,
+                        &mut in_flight, &mut heap, &mut seq, &mut traces,
+                        &mut timeline, &mut busy_timeline, &mut batch_sizes, &mut queued_now,
+                    );
+                }
+            }
+            Event::ServerFree => {
+                server_busy = false;
+                // Complete in-flight requests: inference + request overhead
+                // + post-processing, then collect.
+                let finished: Vec<(u64, f64)> = in_flight.drain(..).collect();
+                for (id, started) in finished {
+                    let mut trace = traces.remove(&id).expect("trace");
+                    trace.record_stage(Stage::Inference, now - started + config.software.request_overhead_s);
+                    let (_, _, post) = config.path.sample(&mut rng);
+                    trace.record_stage(Stage::PostProcess, post);
+                    collector.ingest(&trace);
+                    // Closed loop: this client's next request enters now.
+                    if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
+                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
+                    }
+                }
+                // Drain backlog.
+                match batcher.poll(now) {
+                    Decision::Dispatch(batch) => start_batch(
+                        batch, now, config, batch_penalty_s, &mut server_busy,
+                        &mut in_flight, &mut heap, &mut seq, &mut traces,
+                        &mut timeline, &mut busy_timeline, &mut batch_sizes, &mut queued_now,
+                    ),
+                    Decision::WakeAt(t) => push(&mut heap, t, Event::Wake { scheduled_for: t }, &mut seq),
+                    Decision::Wait => {}
+                }
+            }
+        }
+    }
+
+    collector.dropped = dropped;
+    SimResult { collector, timeline, busy_timeline, batch_sizes, dropped }
+}
+
+/// Newtype so Event participates in the heap tuple without Ord on Event.
+#[derive(Debug, PartialEq)]
+struct EventBox(Event);
+
+impl Eq for EventBox {}
+
+impl PartialOrd for EventBox {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventBox {
+    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal // ordering handled entirely by Key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Processors, RequestPath};
+    use crate::serving::backends;
+    use crate::workload::{generate, Pattern};
+
+    fn fast_service() -> ServiceModel {
+        ServiceModel::Measured { per_batch: vec![(1, 0.005), (8, 0.012)], utilization: 0.6 }
+    }
+
+    fn base_config(rate: f64, duration: f64) -> SimConfig {
+        SimConfig {
+            arrivals: generate(&Pattern::Poisson { rate }, duration, 11),
+            closed_loop: None,
+            duration_s: duration,
+            policy: Policy::Single,
+            software: &backends::TFS,
+            service: fast_service(),
+            path: RequestPath::local(Processors::none()),
+            max_queue: 10_000,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn conservation_all_requests_accounted() {
+        let cfg = base_config(50.0, 20.0);
+        let n = cfg.arrivals.len() as u64;
+        let r = run(&cfg);
+        assert_eq!(r.collector.completed + r.dropped, n);
+        assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn latency_at_least_service_time() {
+        let cfg = base_config(10.0, 10.0);
+        let mut r = run(&cfg);
+        // Every completed request took >= device time + request overhead.
+        let min = r.collector.e2e.percentile(0.1);
+        assert!(min >= 0.005 + backends::TFS.request_overhead_s - 1e-9, "{min}");
+    }
+
+    #[test]
+    fn overload_grows_tail_latency() {
+        // Service 5ms => capacity 200 rps. 150 rps loaded vs 30 rps light.
+        let light = run(&base_config(30.0, 30.0)).collector;
+        let loaded = run(&base_config(150.0, 30.0)).collector;
+        let mut l = light;
+        let mut h = loaded;
+        assert!(h.e2e.percentile(99.0) > l.e2e.percentile(99.0), "queueing should raise p99");
+    }
+
+    #[test]
+    fn queue_cap_drops_under_overload() {
+        let mut cfg = base_config(1000.0, 10.0); // 5x capacity
+        cfg.max_queue = 32;
+        let r = run(&cfg);
+        assert!(r.dropped > 0, "overload must drop");
+        assert!(r.collector.completed > 0);
+    }
+
+    #[test]
+    fn dynamic_batching_forms_batches_under_load() {
+        let mut cfg = base_config(400.0, 10.0);
+        cfg.policy = Policy::Dynamic { max_size: 8, max_wait_s: 0.002 };
+        cfg.software = &backends::TRIS;
+        let r = run(&cfg);
+        assert!(r.mean_batch() > 1.5, "mean batch {}", r.mean_batch());
+        assert!(r.batch_sizes.iter().all(|&b| b <= 8));
+    }
+
+    #[test]
+    fn web_framework_cannot_batch() {
+        let mut cfg = base_config(200.0, 10.0);
+        cfg.policy = Policy::Dynamic { max_size: 8, max_wait_s: 0.002 };
+        cfg.software = &backends::ONNX_FASTAPI;
+        let r = run(&cfg);
+        assert!(r.batch_sizes.iter().all(|&b| b == 1), "FastAPI wrapper must serve singly");
+    }
+
+    #[test]
+    fn tfs_naive_batching_caps_batch() {
+        let mut cfg = base_config(600.0, 10.0);
+        cfg.policy = Policy::Dynamic { max_size: 32, max_wait_s: 0.005 };
+        cfg.software = &backends::TFS; // Naive cap = 8
+        let r = run(&cfg);
+        assert!(r.batch_sizes.iter().all(|&b| b <= 8), "TFS effective cap is 8");
+    }
+
+    #[test]
+    fn closed_loop_sustains_concurrency() {
+        let mut cfg = base_config(1.0, 10.0);
+        cfg.arrivals = vec![];
+        cfg.closed_loop = Some(4);
+        cfg.policy = Policy::Dynamic { max_size: 8, max_wait_s: 0.001 };
+        cfg.software = &backends::TRIS;
+        let r = run(&cfg);
+        // ~10s / (5..12ms) per round with 4 clients -> hundreds of completions.
+        assert!(r.collector.completed > 400, "completed {}", r.collector.completed);
+    }
+
+    #[test]
+    fn timeline_reflects_busy_fraction() {
+        let cfg = base_config(100.0, 20.0); // ~50% utilized (5ms x 100rps)
+        let r = run(&cfg);
+        let mean_busy = r.timeline.mean();
+        assert!(mean_busy > 0.05 && mean_busy < 0.9, "mean busy {mean_busy}");
+    }
+
+    #[test]
+    fn stage_decomposition_present() {
+        let mut cfg = base_config(20.0, 10.0);
+        cfg.path = RequestPath::local(Processors::image());
+        let r = run(&cfg);
+        let means = r.collector.stage_means();
+        assert!(means[&Stage::PreProcess] > 0.0);
+        assert!(means[&Stage::Transmission] > 0.0);
+        assert!(means[&Stage::Inference] > 0.0);
+        assert!(means[&Stage::PostProcess] > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = base_config(80.0, 10.0);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.collector.completed, b.collector.completed);
+        assert_eq!(a.batch_sizes, b.batch_sizes);
+        let (mut ca, mut cb) = (a.collector, b.collector);
+        assert_eq!(ca.e2e.percentile(99.0), cb.e2e.percentile(99.0));
+    }
+
+    #[test]
+    fn fixed_batch_increases_wait_at_low_rate() {
+        // Paper Fig 11a: larger fixed batch -> longer tail at a given rate.
+        let mut small = base_config(40.0, 20.0);
+        small.policy = Policy::Fixed { size: 1, timeout_s: 0.1 };
+        let mut large = base_config(40.0, 20.0);
+        large.policy = Policy::Fixed { size: 16, timeout_s: 0.1 };
+        let mut rs = run(&small).collector;
+        let mut rl = run(&large).collector;
+        assert!(
+            rl.e2e.percentile(95.0) > rs.e2e.percentile(95.0),
+            "batch 16 p95 {} should exceed batch 1 p95 {}",
+            rl.e2e.percentile(95.0),
+            rs.e2e.percentile(95.0)
+        );
+    }
+}

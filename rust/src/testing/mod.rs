@@ -1,0 +1,162 @@
+//! Mini property-based-testing framework (substrate: no proptest offline).
+//!
+//! `forall` runs a property over N generated cases from a seeded [`Pcg64`];
+//! on failure it re-runs with binary "size shrinking" — the generator is
+//! re-invoked with progressively smaller size budgets to find a small
+//! counterexample — and panics with the seed + case so failures reproduce.
+//!
+//! Used by the coordinator/serving invariants tests (routing conservation,
+//! batch-size bounds, scheduler ordering).
+
+use crate::util::rng::Pcg64;
+
+/// Generation context: RNG + size budget (shrinks towards 0).
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// usize in [lo, hi], biased smaller as `size` shrinks.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = (hi - lo) as u64;
+        let scaled = span.min((self.size as u64).max(1));
+        lo + self.rng.next_below(scaled + 1) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'t, T>(&mut self, xs: &'t [T]) -> &'t T {
+        self.rng.choose(xs)
+    }
+
+    /// Vec with length in [0, max_len.min(size)].
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len)
+            .map(|_| {
+                let mut g = Gen { rng: self.rng, size: self.size };
+                f(&mut g)
+            })
+            .collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, seed: 0x1f2e3d4c, max_size: 64 }
+    }
+}
+
+/// Run `prop` over generated inputs; panic with a reproducible report on failure.
+///
+/// `gen` draws a case from the [`Gen`]; `prop` returns `Err(reason)` to fail.
+pub fn forall<T: std::fmt::Debug + Clone>(
+    name: &str,
+    config: Config,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case_idx in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case_idx as u64);
+        let mut rng = Pcg64::seeded(case_seed);
+        // Sizes ramp up across cases so early cases are small.
+        let size = 1 + (config.max_size * (case_idx + 1)) / config.cases;
+        let mut g = Gen { rng: &mut rng, size };
+        let value = gen(&mut g);
+        if let Err(reason) = prop(&value) {
+            // Shrink: retry the same seed at smaller sizes, keep the
+            // smallest failing case.
+            let mut smallest = (value.clone(), reason.clone());
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut rng2 = Pcg64::seeded(case_seed);
+                let mut g2 = Gen { rng: &mut rng2, size: s };
+                let v2 = gen(&mut g2);
+                if let Err(r2) = prop(&v2) {
+                    smallest = (v2, r2);
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={case_seed:#x}, case {case_idx}):\n  \
+                 counterexample: {:?}\n  reason: {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "sum-commutes",
+            Config { cases: 50, ..Default::default() },
+            |g| (g.usize_in(0, 100), g.usize_in(0, 100)),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert!(count >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            "always-fails",
+            Config { cases: 5, ..Default::default() },
+            |g| g.usize_in(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinking_reports_small_case() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(
+                "fails-when-nonempty",
+                Config { cases: 30, seed: 7, max_size: 64 },
+                |g| g.vec_of(64, |g| g.usize_in(0, 9)),
+                |v| if v.is_empty() { Ok(()) } else { Err(format!("len={}", v.len())) },
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // Shrink phase should have reduced towards a small vector.
+        assert!(msg.contains("counterexample"), "{msg}");
+    }
+
+    #[test]
+    fn gen_bounds_respected() {
+        let mut rng = Pcg64::seeded(1);
+        let mut g = Gen { rng: &mut rng, size: 64 };
+        for _ in 0..1000 {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (substrate: no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]); `flag_names` lists value-less options.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = iter.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        out.options.insert(rest.to_string(), iter.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--batch", "8", "--model=resnet", "extra"], &[]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("model"), Some("resnet"));
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse(&["--verbose", "--rate", "2.5"], &["verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--debug"], &[]);
+        assert!(a.has_flag("debug"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["--dry-run", "--out", "x.json"], &[]);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn typed_getters_fall_back() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_usize("missing", 3), 3);
+    }
+}

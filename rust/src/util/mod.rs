@@ -1,0 +1,11 @@
+//! Substrate utilities: JSON/YAML codecs, PRNG, statistics, CLI, rendering.
+//!
+//! The offline vendor set has no serde/rand/clap, so InferBench carries its
+//! own implementations of exactly the pieces it needs.
+
+pub mod cli;
+pub mod json;
+pub mod render;
+pub mod rng;
+pub mod stats;
+pub mod yamlish;

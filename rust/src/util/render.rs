@@ -1,0 +1,198 @@
+//! ASCII rendering of the paper's "figures": tables, bar charts, CDF plots,
+//! and heat maps (paper §4.3.1 Analysis Models / "Other Plots").
+//!
+//! Every bench binary prints its table/figure through these helpers so the
+//! regenerated results are diffable text.
+
+/// Render an aligned table with a header row.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$}", c, w = widths[i]));
+            line.push_str(" | ");
+        }
+        line.trim_end().to_string()
+    };
+    let header_cells: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(&sep, &widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Horizontal bar chart: one labelled bar per (label, value).
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::EPSILON, f64::max);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!("  {:<lw$} | {:<w$} {:.4}\n", label, "█".repeat(n), v, lw = label_w, w = width));
+    }
+    out
+}
+
+/// CDF plot: x-axis latency, y-axis cumulative probability, multiple series.
+pub fn cdf_plot(title: &str, series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let mut out = format!("{title}\n");
+    let xmax = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|p| p.0))
+        .fold(f64::EPSILON, f64::max);
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (x, p) in pts {
+            let col = ((x / xmax) * (width - 1) as f64).round() as usize;
+            let row = ((1.0 - p) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let p = 1.0 - i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{p:>5.2} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("       0{:>w$.3}\n", xmax, w = width - 1));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+/// Heat map over a (rows x cols) grid of values in [0, max]; darker = higher.
+pub fn heat_map(
+    title: &str,
+    row_labels: &[String],
+    col_labels: &[String],
+    values: &[Vec<f64>],
+) -> String {
+    let shades = [' ', '░', '▒', '▓', '█'];
+    let max = values
+        .iter()
+        .flat_map(|r| r.iter().copied())
+        .fold(f64::EPSILON, f64::max);
+    let label_w = row_labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let cell_w = col_labels.iter().map(|l| l.len()).max().unwrap_or(3).max(5);
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("  {:<label_w$} ", ""));
+    for c in col_labels {
+        out.push_str(&format!("{c:>cell_w$} "));
+    }
+    out.push('\n');
+    for (i, r) in row_labels.iter().enumerate() {
+        out.push_str(&format!("  {r:<label_w$} "));
+        for v in &values[i] {
+            let idx = ((v / max) * (shades.len() - 1) as f64).round() as usize;
+            let shade: String =
+                std::iter::repeat(shades[idx.min(shades.len() - 1)]).take(3).collect();
+            out.push_str(&format!("{:>cell_w$} ", format!("{shade}{v:.0}")));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds as an adaptive human unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+/// Format a count with SI suffix (1.2K, 3.4M, ...).
+pub fn fmt_si(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e12 {
+        (x / 1e12, "T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "K")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2}{suffix}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines same display width.
+        let w = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w), "{t}");
+        assert!(t.contains("longer"));
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let c = bar_chart("t", &[("a".into(), 1.0), ("b".into(), 2.0)], 10);
+        let bars: Vec<usize> = c
+            .lines()
+            .skip(1)
+            .map(|l| l.chars().filter(|&ch| ch == '█').count())
+            .collect();
+        assert_eq!(bars, vec![5, 10]);
+    }
+
+    #[test]
+    fn cdf_plot_has_axes_and_legend() {
+        let pts = vec![(1.0, 0.5), (2.0, 1.0)];
+        let p = cdf_plot("cdf", &[("tfs".into(), pts)], 20, 5);
+        assert!(p.contains("tfs"));
+        assert!(p.contains(" 1.00 |"));
+    }
+
+    #[test]
+    fn heat_map_renders_all_cells() {
+        let hm = heat_map(
+            "h",
+            &["r1".into(), "r2".into()],
+            &["c1".into(), "c2".into()],
+            &[vec![0.0, 50.0], vec![75.0, 100.0]],
+        );
+        assert_eq!(hm.lines().count(), 4);
+        assert!(hm.contains("100"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_duration(0.0000005), "0.5us");
+        assert_eq!(fmt_duration(0.0123), "12.30ms");
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_si(1234.0), "1.23K");
+        assert_eq!(fmt_si(2.5e9), "2.50G");
+        assert_eq!(fmt_si(12.0), "12.00");
+    }
+}

@@ -1,0 +1,369 @@
+//! Streaming statistics: summaries, percentiles, CDFs, log-bucket histograms.
+//!
+//! The metric collector (paper §4.2.4) records every request's latency;
+//! the analysis stage (§4.3.1) needs exact tail percentiles (p95/p99) and
+//! CDF plots. `Summary` keeps raw samples (exact quantiles, fine at
+//! benchmark scale); `LogHistogram` is the O(1)-memory recorder used on
+//! the serving hot path.
+
+/// Exact-sample summary. Percentiles use the nearest-rank method.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Nearest-rank percentile, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples[rank.min(n) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Empirical CDF evaluated at `points` many evenly spaced sample
+    /// quantiles; returns (value, cumulative probability) pairs.
+    pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
+        if self.samples.is_empty() {
+            return Vec::new();
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        (1..=points)
+            .map(|i| {
+                let p = i as f64 / points as f64;
+                let idx = ((p * n as f64).ceil() as usize).clamp(1, n) - 1;
+                (self.samples[idx], p)
+            })
+            .collect()
+    }
+
+    /// Fraction of samples <= threshold (SLO attainment).
+    pub fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().filter(|&&x| x <= threshold).count() as f64
+            / self.samples.len() as f64
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Logarithmic-bucket histogram: fixed memory, ~1% relative error.
+/// Buckets are half-open `[lo * g^i, lo * g^(i+1))` with growth g.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    lo: f64,
+    growth_ln: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+    sum: f64,
+    max_seen: f64,
+}
+
+impl LogHistogram {
+    /// `lo`: smallest resolvable value; `hi`: largest; `per_decade`: buckets
+    /// per 10x range (e.g. 100 -> ~2.3% bucket width).
+    pub fn new(lo: f64, hi: f64, per_decade: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && per_decade > 0);
+        let growth_ln = std::f64::consts::LN_10 / per_decade as f64;
+        let buckets = ((hi / lo).ln() / growth_ln).ceil() as usize + 1;
+        LogHistogram {
+            lo,
+            growth_ln,
+            counts: vec![0; buckets],
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+            max_seen: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        self.sum += x;
+        self.max_seen = self.max_seen.max(x);
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.lo).ln() / self.growth_ln) as usize;
+        let idx = idx.min(self.counts.len() - 1); // clamp overflow into last bucket
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.total as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_seen
+    }
+
+    /// Percentile via bucket upper bounds (conservative for tails).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.lo;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.lo * ((i as f64 + 1.0) * self.growth_ln).exp();
+            }
+        }
+        self.max_seen
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram shape mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+}
+
+/// Welford online mean/variance — used by the utilization sampler.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.len(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s = Summary::new();
+        s.extend(&(1..=100).map(f64::from).collect::<Vec<_>>());
+        assert_eq!(s.percentile(95.0), 95.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(50.0), 50.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = Summary::new();
+        s.extend(&[5.0, 1.0, 3.0, 2.0, 4.0, 9.0, 0.5]);
+        let cdf = s.cdf(10);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fraction_below() {
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.fraction_below(2.5), 0.5);
+        assert_eq!(s.fraction_below(0.0), 0.0);
+        assert_eq!(s.fraction_below(10.0), 1.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let mut s = Summary::new();
+        s.extend(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_close_to_exact() {
+        let mut h = LogHistogram::new(0.001, 100.0, 100);
+        let mut s = Summary::new();
+        let mut rng = crate::util::rng::Pcg64::seeded(21);
+        for _ in 0..50_000 {
+            let x = rng.lognormal(0.0, 1.0);
+            h.record(x);
+            s.record(x);
+        }
+        for q in [50.0, 95.0, 99.0] {
+            let exact = s.percentile(q);
+            let approx = h.percentile(q);
+            assert!(
+                (approx / exact - 1.0).abs() < 0.05,
+                "q{q}: approx {approx} exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge() {
+        let mut a = LogHistogram::new(0.1, 10.0, 10);
+        let mut b = LogHistogram::new(0.1, 10.0, 10);
+        a.record(1.0);
+        b.record(2.0);
+        b.record(5.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean() - 8.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_under_overflow() {
+        let mut h = LogHistogram::new(1.0, 10.0, 10);
+        h.record(0.5); // underflow
+        h.record(100.0); // overflow clamps to last bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(10.0), 1.0);
+        assert!(h.percentile(99.0) >= 10.0);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.record(x);
+        }
+        assert!((w.mean() - 3.5).abs() < 1e-12);
+        assert!((w.variance() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summaries_are_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.fraction_below(1.0).is_nan());
+    }
+}

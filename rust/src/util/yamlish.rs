@@ -1,0 +1,324 @@
+//! YAML-subset parser for benchmark submissions (paper §4.2.2: "From their
+//! submission (a YAML file), the system first chooses ...").
+//!
+//! Substrate module: no serde/yaml crates offline, so InferBench parses the
+//! subset real submissions use — nested maps via 2-space indentation, block
+//! lists (`- item` / `- key: val`), inline scalars (str/int/float/bool),
+//! quoted strings, comments (`#`), and flow lists (`[1, 2, 3]`). Documents
+//! parse into [`Json`] values so the rest of the stack speaks one type.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct YamlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+/// Parse a YAML-subset document into a Json value (top level must be a map).
+pub fn parse(input: &str) -> Result<Json, YamlError> {
+    let lines: Vec<Line> = input
+        .lines()
+        .enumerate()
+        .filter_map(|(i, raw)| Line::lex(i + 1, raw))
+        .collect();
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, 0)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            line: lines[pos].no,
+            message: "unexpected dedent/indent structure".into(),
+        });
+    }
+    Ok(v)
+}
+
+#[derive(Debug)]
+struct Line {
+    no: usize,
+    indent: usize,
+    content: String,
+}
+
+impl Line {
+    fn lex(no: usize, raw: &str) -> Option<Line> {
+        let without_comment = strip_comment(raw);
+        let trimmed = without_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            return None;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        Some(Line { no, indent, content: trimmed.trim_start().to_string() })
+    }
+}
+
+fn strip_comment(s: &str) -> String {
+    let mut out = String::new();
+    let mut in_quote: Option<char> = None;
+    for c in s.chars() {
+        match (c, in_quote) {
+            ('#', None) => break,
+            ('"', None) => in_quote = Some('"'),
+            ('\'', None) => in_quote = Some('\''),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_quote = None,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Json::obj());
+    }
+    if lines[*pos].content.starts_with("- ") || lines[*pos].content == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { line: line.no, message: "unexpected indent".into() });
+        }
+        let (key, rest) = split_key(line).ok_or_else(|| YamlError {
+            line: line.no,
+            message: "expected 'key: value'".into(),
+        })?;
+        *pos += 1;
+        let value = if rest.is_empty() {
+            // Nested block (map or list) or empty map.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                parse_block(lines, pos, child_indent)?
+            } else {
+                Json::Null
+            }
+        } else {
+            scalar(rest, line.no)?
+        };
+        map.insert(key, value);
+    }
+    Ok(Json::Obj(map))
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !(line.content.starts_with("- ") || line.content == "-") {
+            if line.indent >= indent {
+                return Err(YamlError { line: line.no, message: "expected '- item'".into() });
+            }
+            break;
+        }
+        let body = line.content[1.min(line.content.len())..].trim_start().to_string();
+        if body.is_empty() {
+            // "-" alone: nested block item.
+            *pos += 1;
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if let Some((key, rest)) = split_key_str(&body) {
+            // "- key: val" starts an inline map item; following deeper lines
+            // continue that map.
+            let mut map = BTreeMap::new();
+            let item_no = line.no;
+            let first = if rest.is_empty() { Json::Null } else { scalar(rest, item_no)? };
+            map.insert(key, first);
+            *pos += 1;
+            // Continuation keys are indented past the dash.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child = lines[*pos].indent;
+                if let Json::Obj(more) = parse_map(lines, pos, child)? {
+                    map.extend(more);
+                }
+            }
+            items.push(Json::Obj(map));
+        } else {
+            items.push(scalar(&body, line.no)?);
+            *pos += 1;
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn split_key(line: &Line) -> Option<(String, &str)> {
+    split_key_str(&line.content)
+}
+
+/// Split "key: rest" respecting quotes; key may be bare or quoted.
+fn split_key_str(s: &str) -> Option<(String, &str)> {
+    let mut in_quote: Option<char> = None;
+    for (i, c) in s.char_indices() {
+        match (c, in_quote) {
+            ('"', None) => in_quote = Some('"'),
+            ('\'', None) => in_quote = Some('\''),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_quote = None,
+            (':', None) => {
+                let after = &s[i + 1..];
+                if after.is_empty() || after.starts_with(' ') {
+                    let key = s[..i].trim().trim_matches(|q| q == '"' || q == '\'');
+                    if key.is_empty() {
+                        return None;
+                    }
+                    return Some((key.to_string(), after.trim_start()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn scalar(s: &str, line: usize) -> Result<Json, YamlError> {
+    let t = s.trim();
+    if t.starts_with('[') {
+        return flow_list(t, line);
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Ok(Json::Str(t[1..t.len() - 1].to_string()));
+    }
+    match t {
+        "null" | "~" => return Ok(Json::Null),
+        "true" | "yes" => return Ok(Json::Bool(true)),
+        "false" | "no" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Json::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Json::Num(f));
+    }
+    Ok(Json::Str(t.to_string()))
+}
+
+fn flow_list(s: &str, line: usize) -> Result<Json, YamlError> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| YamlError { line, message: "unterminated flow list".into() })?;
+    if inner.trim().is_empty() {
+        return Ok(Json::Arr(vec![]));
+    }
+    inner
+        .split(',')
+        .map(|item| scalar(item, line))
+        .collect::<Result<Vec<_>, _>>()
+        .map(Json::Arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_map() {
+        let v = parse("name: resnet50\nbatch: 8\nrate: 2.5\nlive: true\n").unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("resnet50"));
+        assert_eq!(v.get("batch").unwrap().as_i64(), Some(8));
+        assert_eq!(v.get("rate").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("live").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_nested_maps() {
+        let doc = "model:\n  family: cnn\n  hp:\n    depth: 4\nworkload:\n  mode: poisson\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(
+            v.get("model").unwrap().get("hp").unwrap().get("depth").unwrap().as_i64(),
+            Some(4)
+        );
+        assert_eq!(v.get("workload").unwrap().get("mode").unwrap().as_str(), Some("poisson"));
+    }
+
+    #[test]
+    fn parses_block_lists() {
+        let doc = "batches:\n  - 1\n  - 8\n  - 32\n";
+        let v = parse(doc).unwrap();
+        let arr = v.get("batches").unwrap().as_arr().unwrap();
+        assert_eq!(arr.iter().map(|x| x.as_i64().unwrap()).collect::<Vec<_>>(), vec![1, 8, 32]);
+    }
+
+    #[test]
+    fn parses_list_of_maps() {
+        let doc = "jobs:\n  - model: a\n    batch: 1\n  - model: b\n    batch: 2\n";
+        let v = parse(doc).unwrap();
+        let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("model").unwrap().as_str(), Some("a"));
+        assert_eq!(jobs[1].get("batch").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn parses_flow_lists_and_comments() {
+        let doc = "batches: [1, 2, 4] # sweep\nname: \"x # not comment\"\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("batches").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("name").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn quoted_strings_preserve_types() {
+        let v = parse("a: \"42\"\nb: 42\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("42"));
+        assert_eq!(v.get("b").unwrap().as_i64(), Some(42));
+    }
+
+    #[test]
+    fn empty_value_is_null() {
+        let v = parse("a:\nb: 1\n").unwrap();
+        assert_eq!(v.get("a"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn rejects_bad_indent() {
+        assert!(parse("a: 1\n   b: 2\n").is_err());
+    }
+
+    #[test]
+    fn full_submission_example() {
+        let doc = r#"
+# InferBench submission
+task: serving_benchmark
+model:
+  name: resnet_mini
+  batch_sizes: [1, 8, 32]
+hardware: [C1, G1, G3]
+software: tfs
+workload:
+  mode: poisson
+  rate: 30.0
+  duration_s: 60
+slo_ms: 100
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("task").unwrap().as_str(), Some("serving_benchmark"));
+        assert_eq!(v.get("hardware").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("workload").unwrap().get("rate").unwrap().as_f64(), Some(30.0));
+        assert_eq!(v.get("slo_ms").unwrap().as_i64(), Some(100));
+    }
+}

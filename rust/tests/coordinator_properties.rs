@@ -1,0 +1,277 @@
+//! Property-based tests on the coordinator invariants (routing, batching,
+//! scheduling) using the in-repo mini property framework
+//! (`inferbench::testing`) — the proptest substitute for this offline
+//! environment.
+
+use inferbench::coordinator::scheduler::{
+    schedule_batch, simulate_online, Job, LoadBalance, LocalOrder, SchedulerPolicy,
+};
+use inferbench::serving::{Batcher, Decision, Policy};
+use inferbench::testing::{forall, Config, Gen};
+
+fn gen_jobs(g: &mut Gen) -> Vec<Job> {
+    let n = g.usize_in(1, 40);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += g.f64_in(0.0, 30.0);
+            Job { id: i as u64, submit_s: t, duration_s: g.f64_in(1.0, 600.0) }
+        })
+        .collect()
+}
+
+const POLICIES: [SchedulerPolicy; 4] = [
+    SchedulerPolicy { lb: LoadBalance::RoundRobin, order: LocalOrder::Fcfs },
+    SchedulerPolicy { lb: LoadBalance::RoundRobin, order: LocalOrder::Sjf },
+    SchedulerPolicy { lb: LoadBalance::QueueAware, order: LocalOrder::Fcfs },
+    SchedulerPolicy { lb: LoadBalance::QueueAware, order: LocalOrder::Sjf },
+];
+
+#[test]
+fn prop_scheduler_conserves_jobs() {
+    forall(
+        "scheduler-conserves-jobs",
+        Config::default(),
+        |g| (gen_jobs(g), g.usize_in(1, 8)),
+        |(jobs, workers)| {
+            for policy in POLICIES {
+                for out in [
+                    simulate_online(jobs, *workers, policy),
+                    schedule_batch(jobs, *workers, policy),
+                ] {
+                    if out.placements.len() != jobs.len() {
+                        return Err(format!(
+                            "{}: {} placed of {}",
+                            policy.label(),
+                            out.placements.len(),
+                            jobs.len()
+                        ));
+                    }
+                    let mut ids: Vec<u64> = out.placements.iter().map(|p| p.job.id).collect();
+                    ids.sort_unstable();
+                    ids.dedup();
+                    if ids.len() != jobs.len() {
+                        return Err(format!("{}: duplicate placement", policy.label()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_no_worker_runs_two_jobs_at_once() {
+    forall(
+        "no-worker-overlap",
+        Config::default(),
+        |g| (gen_jobs(g), g.usize_in(1, 6)),
+        |(jobs, workers)| {
+            for policy in POLICIES {
+                let out = simulate_online(jobs, *workers, policy);
+                for w in 0..*workers {
+                    let mut spans: Vec<(f64, f64)> = out
+                        .placements
+                        .iter()
+                        .filter(|p| p.worker == w)
+                        .map(|p| (p.start_s, p.finish_s))
+                        .collect();
+                    spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    for pair in spans.windows(2) {
+                        if pair[1].0 < pair[0].1 - 1e-9 {
+                            return Err(format!(
+                                "{} worker {w}: overlap {pair:?}",
+                                policy.label()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_jobs_start_after_submit_and_run_exact_duration() {
+    forall(
+        "start-after-submit",
+        Config::default(),
+        |g| (gen_jobs(g), g.usize_in(1, 6)),
+        |(jobs, workers)| {
+            let out = simulate_online(jobs, *workers, SchedulerPolicy::qa_sjf());
+            for p in &out.placements {
+                if p.start_s < p.job.submit_s - 1e-9 {
+                    return Err(format!("job {} started before submit", p.job.id));
+                }
+                if (p.finish_s - p.start_s - p.job.duration_s).abs() > 1e-9 {
+                    return Err(format!("job {} duration distorted", p.job.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sjf_statistically_beats_fcfs() {
+    // Averaged over the generated cases, QA+SJF must improve mean JCT vs
+    // RR+FCFS (the paper's Fig 15 direction). Pointwise it can tie (e.g.
+    // one job), so assert over the aggregate.
+    let mut total_base = 0.0;
+    let mut total_ours = 0.0;
+    forall(
+        "qa-sjf-aggregate-improvement",
+        Config { cases: 60, ..Config::default() },
+        |g| (gen_jobs(g), g.usize_in(2, 6)),
+        |(jobs, workers)| {
+            total_base += simulate_online(jobs, *workers, SchedulerPolicy::rr_fcfs()).mean_jct_s();
+            total_ours += simulate_online(jobs, *workers, SchedulerPolicy::qa_sjf()).mean_jct_s();
+            Ok(())
+        },
+    );
+    assert!(
+        total_ours < total_base,
+        "QA+SJF {total_ours} should beat RR+FCFS {total_base} in aggregate"
+    );
+}
+
+fn gen_arrival_times(g: &mut Gen) -> Vec<f64> {
+    let n = g.usize_in(1, 60);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += g.f64_in(0.0, 0.05);
+            t
+        })
+        .collect()
+}
+
+#[test]
+fn prop_batcher_conserves_and_bounds() {
+    forall(
+        "batcher-conserves-requests",
+        Config::default(),
+        |g| {
+            let max_size = g.usize_in(1, 16);
+            let max_wait = g.f64_in(0.001, 0.1);
+            (gen_arrival_times(g), max_size, max_wait)
+        },
+        |(times, max_size, max_wait)| {
+            let mut b = Batcher::new(Policy::Dynamic { max_size: *max_size, max_wait_s: *max_wait });
+            let mut dispatched: Vec<u64> = Vec::new();
+            for (i, &t) in times.iter().enumerate() {
+                match b.on_arrival(i as u64, t) {
+                    Decision::Dispatch(batch) => {
+                        if batch.len() > *max_size {
+                            return Err(format!("batch {} > max {}", batch.len(), max_size));
+                        }
+                        dispatched.extend(batch.iter().map(|q| q.id));
+                    }
+                    Decision::WakeAt(w) => {
+                        if w < t - 1e-12 {
+                            return Err(format!("wake {w} in the past (now {t})"));
+                        }
+                    }
+                    Decision::Wait => return Err("non-empty queue must not Wait".into()),
+                }
+            }
+            // Final flush.
+            let end = times.last().copied().unwrap_or(0.0) + 1e6;
+            loop {
+                match b.on_wake(end) {
+                    Decision::Dispatch(batch) => dispatched.extend(batch.iter().map(|q| q.id)),
+                    _ => break,
+                }
+            }
+            if dispatched.len() != times.len() {
+                return Err(format!("{} dispatched of {}", dispatched.len(), times.len()));
+            }
+            let mut sorted = dispatched.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != times.len() {
+                return Err("duplicate dispatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_fifo_across_batches() {
+    // With monotone arrival times, dispatch order must be globally FIFO.
+    forall(
+        "batcher-fifo",
+        Config::default(),
+        |g| (gen_arrival_times(g), g.usize_in(1, 8)),
+        |(times, max_size)| {
+            let mut b = Batcher::new(Policy::Dynamic { max_size: *max_size, max_wait_s: 0.01 });
+            let mut order = Vec::new();
+            for (i, &t) in times.iter().enumerate() {
+                if let Decision::Dispatch(batch) = b.on_arrival(i as u64, t) {
+                    order.extend(batch.iter().map(|q| q.id));
+                }
+            }
+            loop {
+                match b.on_wake(1e9) {
+                    Decision::Dispatch(batch) => order.extend(batch.iter().map(|q| q.id)),
+                    _ => break,
+                }
+            }
+            if !order.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("non-FIFO dispatch: {order:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_conservation_under_random_configs() {
+    use inferbench::pipeline::{Processors, RequestPath};
+    use inferbench::serving::{backends, run, ServiceModel, SimConfig};
+    use inferbench::workload::{generate, Pattern};
+
+    forall(
+        "sim-conserves-requests",
+        Config { cases: 40, ..Config::default() },
+        |g| {
+            let rate = g.f64_in(5.0, 300.0);
+            let max_size = g.usize_in(1, 16);
+            let service_ms = g.f64_in(1.0, 20.0);
+            let sw = *g.pick(&[0usize, 1, 2, 3]);
+            (rate, max_size, service_ms, sw)
+        },
+        |&(rate, max_size, service_ms, sw)| {
+            let software = backends::ALL[sw];
+            let config = SimConfig {
+                arrivals: generate(&Pattern::Poisson { rate }, 10.0, 77),
+                closed_loop: None,
+                duration_s: 10.0,
+                policy: Policy::Dynamic { max_size, max_wait_s: 0.005 },
+                software,
+                service: ServiceModel::Measured {
+                    per_batch: vec![(1, service_ms / 1e3), (16, service_ms * 3.0 / 1e3)],
+                    utilization: 0.5,
+                },
+                path: RequestPath::local(Processors::none()),
+                max_queue: 100_000,
+                seed: 5,
+            };
+            let n = config.arrivals.len() as u64;
+            let r = run(&config);
+            if r.collector.completed + r.dropped != n {
+                return Err(format!(
+                    "{} completed + {} dropped != {n}",
+                    r.collector.completed, r.dropped
+                ));
+            }
+            // All executed batch sizes within policy bounds.
+            if r.batch_sizes.iter().any(|&b| b == 0 || b > max_size) {
+                return Err("batch size out of bounds".into());
+            }
+            Ok(())
+        },
+    );
+}

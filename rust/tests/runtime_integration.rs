@@ -1,0 +1,156 @@
+//! Integration tests over the real AOT -> PJRT path. These need
+//! `make artifacts` to have produced `artifacts/`; they panic with a
+//! clear message if it hasn't (CI runs `make test` which orders this).
+
+use inferbench::models::analytic::{self, HyperParams};
+use inferbench::runtime::{Engine, Manifest};
+use inferbench::serving::live::{run_load, LiveConfig, LiveServer};
+use inferbench::serving::Policy;
+
+fn artifact_dir() -> std::path::PathBuf {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` first"
+    );
+    dir
+}
+
+#[test]
+fn manifest_loads_and_lists_variants() {
+    let m = Manifest::load(artifact_dir()).unwrap();
+    assert!(m.entries.len() >= 12, "expected full default artifact set");
+    for stem in ["resnet_mini", "bert_mini", "mobilenet_mini", "lstm_mini"] {
+        let variants = m.variants_of(&format!("{stem}_b"));
+        assert_eq!(variants.len(), 3, "{stem} should have b1/b4/b8");
+        assert_eq!(variants[0].batch(), 1);
+    }
+}
+
+#[test]
+fn manifest_profiles_match_rust_analytic_mirror() {
+    // python/compile/analytic.py and rust models::analytic must agree —
+    // the contract that keeps the GPU roofline models and the lowered
+    // artifacts consistent.
+    let m = Manifest::load(artifact_dir()).unwrap();
+    for entry in m.entries.values() {
+        let hp = &entry.hyperparams;
+        let get = |k: &str| hp.get(k).copied().unwrap_or(0.0) as u64;
+        let params = HyperParams {
+            depth: get("depth"),
+            width: get("width"),
+            channels: get("channels"),
+            hidden: get("hidden"),
+            d_model: get("d_model"),
+            heads: get("heads"),
+            seq: get("seq"),
+            hw: if get("hw") == 0 { 32 } else { get("hw") },
+            in_dim: get("in_dim"),
+            cin: if get("cin") == 0 { 3 } else { get("cin") },
+            classes: if get("classes") == 0 { 16 } else { get("classes") },
+        };
+        let profile = analytic::profile_for(&entry.family, &params);
+        assert_eq!(profile.flops, entry.flops_per_sample, "{} flops", entry.name);
+        assert_eq!(profile.params, entry.params, "{} params", entry.name);
+        assert_eq!(profile.weight_bytes, entry.weight_bytes, "{} weight bytes", entry.name);
+        assert_eq!(profile.act_bytes, entry.act_bytes_per_sample, "{} act bytes", entry.name);
+    }
+}
+
+#[test]
+fn engine_loads_and_infers() {
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    assert_eq!(engine.platform_name(), "cpu");
+    let model = engine.load("mlp_d8_w512_b1", 0).unwrap();
+    assert!(model.compile_time.as_secs_f64() > 0.0);
+    let x = model.make_input(1);
+    let out = model.infer(&x).unwrap();
+    assert_eq!(out.len(), 16); // classes
+    assert!(out.iter().all(|v| v.is_finite()), "logits must be finite");
+}
+
+#[test]
+fn wrong_input_size_is_error_not_crash() {
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let model = engine.load("mlp_d8_w512_b1", 0).unwrap();
+    let err = model.infer(&[1.0f32; 7]).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+}
+
+#[test]
+fn batch_variant_consistency() {
+    // Core AOT-correctness check: the b8 artifact with row 0 = the b1
+    // input (and the same param seed) must produce the same row-0 logits.
+    // Exercises the whole python-lower -> HLO-text -> rust-execute path
+    // and the batch-independence invariant dynamic batching relies on.
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let m1 = engine.load("mlp_d8_w512_b1", 42).unwrap();
+    let m8 = engine.load("mlp_d8_w512_b8", 42).unwrap();
+    let x1 = m1.make_input(3);
+    let mut x8 = vec![0f32; m8.x_elements()];
+    x8[..x1.len()].copy_from_slice(&x1);
+    let o1 = m1.infer(&x1).unwrap();
+    let o8 = m8.infer(&x8).unwrap();
+    for (a, b) in o1.iter().zip(&o8[..16]) {
+        assert!((a - b).abs() < 1e-4, "batch inconsistency: {a} vs {b}");
+    }
+}
+
+#[test]
+fn inference_deterministic() {
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let model = engine.load("transformer_d2_d128_h4_s64_b1", 9).unwrap();
+    let x = model.make_input(5);
+    let a = model.infer(&x).unwrap();
+    let b = model.infer(&x).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn all_family_artifacts_execute() {
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    for name in ["cnn_d4_c32_b1", "rnn_d2_h128_s16_b1", "transformer_d2_d128_h4_s64_b1", "mlp_d8_w512_b1"] {
+        let model = engine.load(name, 1).unwrap();
+        let out = model.infer(&model.make_input(2)).unwrap();
+        assert_eq!(out.len(), 16, "{name}");
+        assert!(out.iter().all(|v| v.is_finite()), "{name}");
+    }
+}
+
+#[test]
+fn live_server_serves_real_requests() {
+    let server = LiveServer::start(LiveConfig {
+        artifact_dir: artifact_dir(),
+        model_stem: "mlp_d8_w512".into(),
+        policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.003 },
+        seed: 0,
+    })
+    .unwrap();
+    assert_eq!(server.info.variants.len(), 2); // b1, b8
+    let report = run_load(&server, 40.0, 2.0, 3).unwrap();
+    assert!(report.completed > 30, "completed {}", report.completed);
+    let mut e2e = report.e2e;
+    assert!(e2e.percentile(50.0) > 0.0);
+    assert!(e2e.percentile(99.0) < 5.0, "p99 {}s is pathological", e2e.percentile(99.0));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn live_server_unknown_stem_fails_cleanly() {
+    let err = LiveServer::start(LiveConfig {
+        artifact_dir: artifact_dir(),
+        model_stem: "nonexistent_model".into(),
+        policy: Policy::Single,
+        seed: 0,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn coldstart_components_measured() {
+    // Fig 14c anchor: XLA compile dominates; parameters upload is fast.
+    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let model = engine.load("bert_mini_b1", 0).unwrap();
+    assert!(model.compile_time.as_secs_f64() > 0.05);
+    assert!(model.upload_time.as_secs_f64() < model.compile_time.as_secs_f64());
+}
