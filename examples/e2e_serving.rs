@@ -9,9 +9,13 @@
 //! Requires artifacts: `make artifacts` first. Run:
 //!   `cargo run --release --example e2e_serving`
 
+use inferbench::coordinator::job::service_model_for;
+use inferbench::pipeline::{Processors, RequestPath, LAN};
+use inferbench::serving::cluster::{run as run_cluster, ClusterConfig, ReplicaConfig};
 use inferbench::serving::live::{run_load, LiveConfig, LiveServer};
-use inferbench::serving::Policy;
+use inferbench::serving::{backends, Policy, RouterPolicy};
 use inferbench::util::render;
+use inferbench::workload::{generate, Pattern};
 
 fn serve_one(stem: &str, rate: f64, duration: f64, max_batch: usize) -> anyhow::Result<Vec<String>> {
     eprintln!("== {stem}: loading artifacts (XLA compile + param upload)...");
@@ -74,5 +78,65 @@ fn main() -> anyhow::Result<()> {
         )
     );
     println!("\nRecord these rows in EXPERIMENTS.md §E2E.");
+
+    cluster_scaleout_section()?;
+    Ok(())
+}
+
+/// Simulated cluster tier on top of the same serving stack: scale the
+/// ResNet50-on-V100 pipeline from 1 to 4 replicas under each router
+/// policy. Runs without artifacts (it uses the analytic service model),
+/// so this section always produces numbers even when the live rows above
+/// failed for lack of `make artifacts`.
+fn cluster_scaleout_section() -> anyhow::Result<()> {
+    println!("\nCluster scale-out (simulated, ResNet50 on G1, TFS, 120 rps per replica):\n");
+    let duration = 30.0;
+    let mut rows = Vec::new();
+    for n in [1usize, 2, 4] {
+        for router in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 99 },
+        ] {
+            let rn = inferbench::models::catalog::find("resnet50").unwrap();
+            let cfg = ClusterConfig {
+                arrivals: generate(&Pattern::Poisson { rate: 120.0 * n as f64 }, duration, 1234),
+                closed_loop: None,
+                duration_s: duration,
+                replicas: (0..n)
+                    .map(|_| -> anyhow::Result<ReplicaConfig> {
+                        Ok(ReplicaConfig {
+                            software: &backends::TFS,
+                            service: service_model_for("resnet50", "G1")?,
+                            policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.005 },
+                            max_queue: 8192,
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                router,
+                path: RequestPath {
+                    processors: Processors::image(),
+                    network: LAN,
+                    payload_bytes: rn.request_bytes,
+                },
+                seed: 99,
+            };
+            let r = run_cluster(&cfg);
+            let mut c = r.collector;
+            rows.push(vec![
+                n.to_string(),
+                router.label().to_string(),
+                format!("{:.0}", c.throughput_rps()),
+                format!("{:.1}", c.e2e.percentile(50.0) * 1e3),
+                format!("{:.1}", c.e2e.percentile(99.0) * 1e3),
+                format!("{:.2}", r.mean_batch()),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        render::table(&["Replicas", "Router", "rps", "p50 ms", "p99 ms", "mean batch"], &rows)
+    );
+    println!("\n(run `cargo bench --bench fig16_scaleout` for the full scale-out figure)");
     Ok(())
 }

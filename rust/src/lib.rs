@@ -2,6 +2,16 @@
 //! inference serving — a reproduction of "InferBench / No More 996" (2020)
 //! as a three-layer Rust + JAX + Pallas stack.
 //!
+//! Serving tiers: [`serving::sim`] simulates one accelerator behind one
+//! serving software (the paper's Fig 4 pipeline); [`serving::cluster`]
+//! generalizes it to an N-replica cluster — per-replica batchers and
+//! service models (heterogeneous mixes allowed) behind a pluggable
+//! [`serving::router`] (round-robin, least-outstanding, seeded
+//! power-of-two-choices) — with per-replica [`metrics::ReplicaMetrics`]
+//! merged into a cluster-level [`metrics::Collector`]. The scale-out
+//! figure (`benches/fig16_scaleout.rs`) reports throughput and tail
+//! latency vs replica count × router policy.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! regenerated paper results.
 

@@ -111,6 +111,55 @@ impl Collector {
             .map(|s| (*s, self.per_stage.get(s).map(|x| x.mean()).unwrap_or(0.0)))
             .collect()
     }
+
+    /// Fold another collector into this one — the cluster-level merge of
+    /// per-replica collectors. Exact, not approximate: raw samples are
+    /// concatenated, so percentiles of the merged collector equal
+    /// percentiles over the union of the inputs.
+    pub fn merge(&mut self, other: &Collector) {
+        self.e2e.extend(other.e2e.samples());
+        for (stage, summary) in &other.per_stage {
+            self.per_stage.entry(*stage).or_default().extend(summary.samples());
+        }
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
+        self.last_completion_s = self.last_completion_s.max(other.last_completion_s);
+    }
+}
+
+/// Everything the cluster serving engine measures about one replica: its
+/// own collector (merged cluster-wide by [`Collector::merge`]; local queue
+/// drops live in `collector.dropped`), the two utilization timelines the
+/// single-server simulator reports (Fig 9 / 13 metrics), and completed
+/// batch sizes.
+#[derive(Debug)]
+pub struct ReplicaMetrics {
+    pub collector: Collector,
+    /// FLOPs-efficiency-weighted utilization (achieved/peak).
+    pub timeline: UtilizationTimeline,
+    /// Busy-fraction utilization — what DCGM/nvidia-smi report.
+    pub busy_timeline: UtilizationTimeline,
+    /// Completed batch sizes on this replica.
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ReplicaMetrics {
+    pub fn new(horizon_s: f64, bucket_s: f64) -> Self {
+        ReplicaMetrics {
+            collector: Collector::new(),
+            timeline: UtilizationTimeline::new(horizon_s, bucket_s),
+            busy_timeline: UtilizationTimeline::new(horizon_s, bucket_s),
+            batch_sizes: Vec::new(),
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
 }
 
 /// Time-bucketed utilization timeline (Fig 13): each bucket records the
@@ -208,6 +257,55 @@ mod tests {
     fn stage_means_cover_all_stages() {
         let c = Collector::new();
         assert_eq!(c.stage_means().len(), 5);
+    }
+
+    #[test]
+    fn merge_is_exact_union() {
+        let mut a = Collector::new();
+        let mut b = Collector::new();
+        for i in 0..4u64 {
+            let mut t = RequestTrace::new(i, i as f64);
+            t.record_stage(Stage::Inference, 0.010 + i as f64 * 0.010);
+            if i < 2 {
+                a.ingest(&t);
+            } else {
+                b.ingest(&t);
+            }
+        }
+        let mut dropped = RequestTrace::new(9, 0.5);
+        dropped.dropped = true;
+        b.ingest(&dropped);
+
+        let mut all = Collector::new();
+        all.merge(&a);
+        all.merge(&b);
+        assert_eq!(all.completed, 4);
+        assert_eq!(all.dropped, 1);
+        assert_eq!(all.first_arrival_s, 0.0);
+        assert!((all.last_completion_s - 3.040).abs() < 1e-12);
+        // Percentiles over the union, not an average-of-averages.
+        assert!((all.e2e.percentile(100.0) - 0.040).abs() < 1e-12);
+        assert!((all.e2e.mean() - 0.025).abs() < 1e-12);
+        assert_eq!(all.per_stage[&Stage::Inference].len(), 4);
+    }
+
+    #[test]
+    fn merge_into_empty_preserves_window() {
+        let mut src = Collector::new();
+        let mut t = RequestTrace::new(0, 2.0);
+        t.record_stage(Stage::Inference, 1.0);
+        src.ingest(&t);
+        let mut dst = Collector::new();
+        dst.merge(&src);
+        assert!((dst.throughput_rps() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replica_metrics_mean_batch() {
+        let mut m = ReplicaMetrics::new(10.0, 1.0);
+        assert_eq!(m.mean_batch(), 0.0);
+        m.batch_sizes.extend([2, 4]);
+        assert!((m.mean_batch() - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -82,17 +82,16 @@ impl Batcher {
     }
 
     /// A previously requested wake-up fired at `now`.
-    pub fn on_wake(&mut self, _now: f64) -> Decision {
-        if self.queue.is_empty() {
-            return Decision::Wait;
-        }
-        match self.policy {
-            Policy::Single => self.dispatch_up_to(1),
-            // Timeout fired: flush whatever is queued (partial batch).
-            Policy::Fixed { size, .. } | Policy::Dynamic { max_size: size, .. } => {
-                self.dispatch_up_to(size)
-            }
-        }
+    ///
+    /// The wake may be stale: it was scheduled for a batch that has since
+    /// dispatched (it filled up, or a server-free poll flushed it), and the
+    /// queue now holds younger requests whose deadline has not expired.
+    /// Flushing unconditionally here dispatched those partial batches early
+    /// (the stale-wake bug), so the decision is re-derived from the current
+    /// queue: dispatch only if the oldest queued request's deadline has
+    /// actually passed, otherwise hand back the corrected wake time.
+    pub fn on_wake(&mut self, now: f64) -> Decision {
+        self.decide(now)
     }
 
     /// The server became free at `now` — opportunity to dispatch more.
@@ -219,6 +218,39 @@ mod tests {
             Decision::Dispatch(batch) => {
                 assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![11, 12, 10]);
             }
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_wake_reschedules_instead_of_flushing_young_queue() {
+        // Regression: requests 1+2 form a full batch, leaving their wake
+        // (scheduled for t=0.01) stale in the driver's event queue. When it
+        // fires, only the younger request 3 (deadline 0.018) is queued — the
+        // batcher must push the wake forward, not flush 3 early.
+        let mut b = Batcher::new(Policy::Dynamic { max_size: 2, max_wait_s: 0.01 });
+        assert!(matches!(b.on_arrival(1, 0.0), Decision::WakeAt(_)));
+        assert!(matches!(b.on_arrival(2, 0.001), Decision::Dispatch(_)));
+        b.enqueue(3, 0.008);
+        match b.on_wake(0.01) {
+            Decision::WakeAt(t) => assert!((t - 0.018).abs() < 1e-12, "{t}"),
+            d => panic!("stale wake must not flush a young partial batch: {d:?}"),
+        }
+        match b.on_wake(0.018) {
+            Decision::Dispatch(batch) => assert_eq!(batch.len(), 1),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn wake_at_true_deadline_flushes_partial() {
+        let mut b = Batcher::new(Policy::Fixed { size: 4, timeout_s: 0.5 });
+        b.on_arrival(1, 0.0);
+        b.on_arrival(2, 0.1);
+        // Before the oldest deadline: reschedule; at it: flush both.
+        assert!(matches!(b.on_wake(0.3), Decision::WakeAt(t) if (t - 0.5).abs() < 1e-12));
+        match b.on_wake(0.5) {
+            Decision::Dispatch(batch) => assert_eq!(batch.len(), 2),
             d => panic!("{d:?}"),
         }
     }

@@ -1,0 +1,503 @@
+//! Discrete-event simulation of an N-replica serving cluster: a routing
+//! tier in front of N independent accelerator+software replicas, each
+//! owning its own [`Batcher`] and [`ServiceModel`] (heterogeneous replicas
+//! allowed — mixed hardware generations are the common production case).
+//!
+//! Request flow per Fig 4, generalized: arrivals -> pre-process ->
+//! transmission -> **router** -> per-replica batch queue -> inference ->
+//! post-process. The single-server engine (`sim::run`) is the N=1 special
+//! case and delegates here, so every policy/overhead behaviour the
+//! software-tier figures measure carries over replica-for-replica.
+//!
+//! Metrics: each replica records its own [`ReplicaMetrics`] (collector,
+//! utilization timelines, batch sizes, local drops); the cluster-level
+//! [`Collector`] is the exact merge of the per-replica collectors.
+
+use super::backends::{DynamicBatching, Software};
+use super::batcher::{Batcher, Decision, Policy, Queued};
+use super::router::{Router, RouterPolicy};
+use super::service::ServiceModel;
+use crate::metrics::{Collector, ReplicaMetrics, RequestTrace, Stage};
+use crate::pipeline::RequestPath;
+use crate::util::rng::Pcg64;
+use crate::workload::Arrival;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Closed-loop client retry delay after a queue rejection: the client
+/// observes the rejection and re-issues. A strictly positive backoff also
+/// guarantees event-time progress for degenerate zero-latency request
+/// paths (otherwise reissue + re-reject could loop at one instant).
+pub const REJECT_RETRY_BACKOFF_S: f64 = 1e-4;
+
+/// One replica's static configuration. Replicas may differ in software,
+/// service model, batching policy, and queue capacity.
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    pub software: &'static Software,
+    pub service: ServiceModel,
+    pub policy: Policy,
+    /// Replica-local queue capacity; arrivals routed here beyond it are
+    /// rejected (overload).
+    pub max_queue: usize,
+}
+
+/// Cluster simulation configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Open-loop arrivals (ignored when `closed_loop` is set).
+    pub arrivals: Vec<Arrival>,
+    /// Closed-loop client count: each client issues its next request when
+    /// the previous completes — or is rejected (see
+    /// [`REJECT_RETRY_BACKOFF_S`]).
+    pub closed_loop: Option<usize>,
+    /// Simulated duration; no new requests issued past this.
+    pub duration_s: f64,
+    pub replicas: Vec<ReplicaConfig>,
+    pub router: RouterPolicy,
+    pub path: RequestPath,
+    pub seed: u64,
+}
+
+/// Cluster simulation output.
+#[derive(Debug)]
+pub struct ClusterResult {
+    /// Cluster-level collector: exact merge of the per-replica collectors.
+    pub collector: Collector,
+    /// Per-replica metrics, indexed like `ClusterConfig::replicas`.
+    pub replicas: Vec<ReplicaMetrics>,
+    /// Requests rejected across all replica queues.
+    pub dropped: u64,
+    /// Requests issued in total (completed + dropped == issued).
+    pub issued: u64,
+}
+
+impl ClusterResult {
+    /// Completed requests per simulated second, cluster-wide.
+    pub fn throughput_rps(&self) -> f64 {
+        self.collector.throughput_rps()
+    }
+
+    /// Mean completed batch size across all replicas.
+    pub fn mean_batch(&self) -> f64 {
+        let n: usize = self.replicas.iter().map(|r| r.batch_sizes.len()).sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let total: usize = self.replicas.iter().map(|r| r.batch_sizes.iter().sum::<usize>()).sum();
+        total as f64 / n as f64
+    }
+}
+
+/// Effective policy/overhead after applying the software's dynamic-batching
+/// quality (paper §5.3: TFS's naive scheduler hurts at low concurrency;
+/// web frameworks cannot batch server-side at all).
+pub(super) fn effective(policy: Policy, software: &Software) -> (Policy, f64) {
+    match (policy, software.dynamic_batching) {
+        (Policy::Dynamic { .. }, DynamicBatching::None) => (Policy::Single, 0.0),
+        (
+            Policy::Dynamic { max_size, max_wait_s },
+            DynamicBatching::Naive { penalty_s, effective_cap },
+        ) => (Policy::Dynamic { max_size: max_size.min(effective_cap), max_wait_s }, penalty_s),
+        (p, _) => (p, 0.0),
+    }
+}
+
+/// One replica's live state during the run.
+struct Replica {
+    batcher: Batcher,
+    penalty_s: f64,
+    software: &'static Software,
+    service: ServiceModel,
+    max_queue: usize,
+    busy: bool,
+    queued: usize,
+    in_flight: Vec<(u64, f64)>, // (request id, service start)
+    metrics: ReplicaMetrics,
+}
+
+impl Replica {
+    /// Requests this replica is responsible for right now (the router's
+    /// load signal): queued + in service.
+    fn outstanding(&self) -> usize {
+        self.queued + self.in_flight.len()
+    }
+}
+
+#[derive(Debug, PartialEq)]
+enum Event {
+    /// Request reaches the routing tier (pre-processing + transmission done).
+    Enqueue { id: u64 },
+    /// Batcher timeout on one replica.
+    Wake { replica: usize, scheduled_for: f64 },
+    /// One replica finishes its in-flight batch.
+    ServerFree { replica: usize },
+}
+
+/// f64 ordered key for the event heap; the sequence number breaks ties
+/// deterministically (FIFO among simultaneous events).
+#[derive(Debug, PartialEq, PartialOrd)]
+struct Key(f64, u64);
+
+impl Eq for Key {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("NaN event time")
+    }
+}
+
+/// Newtype so Event participates in the heap tuple without Ord on Event.
+#[derive(Debug, PartialEq)]
+struct EventBox(Event);
+
+impl Eq for EventBox {}
+
+impl PartialOrd for EventBox {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventBox {
+    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal // ordering handled entirely by Key
+    }
+}
+
+type Heap = BinaryHeap<Reverse<(Key, EventBox)>>;
+
+fn push(heap: &mut Heap, t: f64, e: Event, seq: &mut u64) {
+    heap.push(Reverse((Key(t, *seq), EventBox(e))));
+    *seq += 1;
+}
+
+/// Start a batch on replica `ri`: record waits, occupy the replica.
+fn start_batch(
+    ri: usize,
+    r: &mut Replica,
+    batch: Vec<Queued>,
+    now: f64,
+    heap: &mut Heap,
+    seq: &mut u64,
+    traces: &mut HashMap<u64, RequestTrace>,
+) {
+    let b = batch.len();
+    r.queued -= b;
+    let service = r.service.service_s(b, r.software) + r.penalty_s;
+    let util = r.service.utilization(b);
+    r.metrics.timeline.record_busy(now, service, util);
+    r.metrics.busy_timeline.record_busy(now, service, 1.0);
+    r.metrics.batch_sizes.push(b);
+    for q in &batch {
+        let trace = traces.get_mut(&q.id).expect("trace");
+        // Batching stage: enqueue -> service start.
+        trace.record_stage(Stage::Batching, now - q.enqueue_s);
+        r.in_flight.push((q.id, now));
+    }
+    r.busy = true;
+    push(heap, now + service, Event::ServerFree { replica: ri }, seq);
+}
+
+/// Run the cluster simulation.
+pub fn run(config: &ClusterConfig) -> ClusterResult {
+    assert!(!config.replicas.is_empty(), "cluster needs at least one replica");
+    let mut rng = Pcg64::seeded(config.seed);
+    let mut router = Router::new(config.router);
+    let horizon_s = config.duration_s.max(1.0) * 1.5;
+    let mut replicas: Vec<Replica> = config
+        .replicas
+        .iter()
+        .map(|rc| {
+            let (policy, penalty_s) = effective(rc.policy, rc.software);
+            Replica {
+                batcher: Batcher::new(policy),
+                penalty_s,
+                software: rc.software,
+                service: rc.service.clone(),
+                max_queue: rc.max_queue,
+                busy: false,
+                queued: 0,
+                in_flight: Vec::new(),
+                metrics: ReplicaMetrics::new(horizon_s, 0.5),
+            }
+        })
+        .collect();
+
+    let mut heap: Heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    // Preallocate: rehashing the trace map mid-run showed up in the DES
+    // profile (§Perf).
+    let expected = config.arrivals.len() + config.closed_loop.unwrap_or(0) * 4;
+    let mut traces: HashMap<u64, RequestTrace> = HashMap::with_capacity(expected.max(64));
+    let mut next_id = 0u64;
+
+    // Issue one request: samples its pipeline stages and schedules Enqueue.
+    let mut issue = |arrival_s: f64,
+                     heap: &mut Heap,
+                     traces: &mut HashMap<u64, RequestTrace>,
+                     rng: &mut Pcg64,
+                     seq: &mut u64| {
+        let id = next_id;
+        next_id += 1;
+        let (pre, tx, _post) = config.path.sample(rng);
+        let mut trace = RequestTrace::new(id, arrival_s);
+        trace.record_stage(Stage::PreProcess, pre);
+        trace.record_stage(Stage::Transmission, tx);
+        let enqueue_at = trace.completed_s;
+        traces.insert(id, trace);
+        push(heap, enqueue_at, Event::Enqueue { id }, seq);
+    };
+
+    // Seed initial arrivals.
+    if let Some(clients) = config.closed_loop {
+        for _ in 0..clients {
+            issue(0.0, &mut heap, &mut traces, &mut rng, &mut seq);
+        }
+    } else {
+        for a in &config.arrivals {
+            if a.time_s < config.duration_s {
+                issue(a.time_s, &mut heap, &mut traces, &mut rng, &mut seq);
+            }
+        }
+    }
+
+    // Scratch load vector, reused across events (one allocation per run,
+    // not per request — this sits on the DES hot path).
+    let mut outstanding: Vec<usize> = Vec::with_capacity(replicas.len());
+
+    while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
+        match event {
+            Event::Enqueue { id } => {
+                outstanding.clear();
+                outstanding.extend(replicas.iter().map(|r| r.outstanding()));
+                let ri = router.route(&outstanding);
+                let r = &mut replicas[ri];
+                if r.queued >= r.max_queue {
+                    // Overloaded replica: reject. The trace leaves the map
+                    // (no leak) and a closed-loop client re-issues after a
+                    // short retry backoff instead of silently dying.
+                    let mut trace = traces.remove(&id).expect("trace");
+                    trace.dropped = true;
+                    r.metrics.collector.ingest(&trace);
+                    if config.closed_loop.is_some() && now < config.duration_s {
+                        issue(
+                            now + REJECT_RETRY_BACKOFF_S,
+                            &mut heap,
+                            &mut traces,
+                            &mut rng,
+                            &mut seq,
+                        );
+                    }
+                    continue;
+                }
+                r.batcher.enqueue(id, now);
+                r.queued += 1;
+                if !r.busy {
+                    match r.batcher.poll(now) {
+                        Decision::Dispatch(batch) => {
+                            start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                        }
+                        Decision::WakeAt(t) => {
+                            push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                        }
+                        Decision::Wait => {}
+                    }
+                }
+            }
+            Event::Wake { replica: ri, scheduled_for } => {
+                if replicas[ri].busy || scheduled_for < now - 1e-12 {
+                    continue; // busy replica polls again at ServerFree
+                }
+                match replicas[ri].batcher.on_wake(now) {
+                    Decision::Dispatch(batch) => {
+                        let r = &mut replicas[ri];
+                        start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                    }
+                    // Stale wake (its batch already dispatched): re-arm for
+                    // the oldest queued request's true deadline.
+                    Decision::WakeAt(t) => {
+                        push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                    }
+                    Decision::Wait => {}
+                }
+            }
+            Event::ServerFree { replica: ri } => {
+                replicas[ri].busy = false;
+                // Complete in-flight requests: inference + request overhead
+                // + post-processing, then collect on this replica.
+                let finished: Vec<(u64, f64)> = replicas[ri].in_flight.drain(..).collect();
+                let overhead = replicas[ri].software.request_overhead_s;
+                for (id, started) in finished {
+                    let mut trace = traces.remove(&id).expect("trace");
+                    trace.record_stage(Stage::Inference, now - started + overhead);
+                    let (_, _, post) = config.path.sample(&mut rng);
+                    trace.record_stage(Stage::PostProcess, post);
+                    replicas[ri].metrics.collector.ingest(&trace);
+                    // Closed loop: this client's next request enters now
+                    // (and is routed fresh at its enqueue time).
+                    if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
+                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
+                    }
+                }
+                // Drain this replica's backlog.
+                match replicas[ri].batcher.poll(now) {
+                    Decision::Dispatch(batch) => {
+                        let r = &mut replicas[ri];
+                        start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                    }
+                    Decision::WakeAt(t) => {
+                        push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                    }
+                    Decision::Wait => {}
+                }
+            }
+        }
+    }
+
+    let mut collector = Collector::new();
+    for r in &replicas {
+        collector.merge(&r.metrics.collector);
+    }
+    // Single source of truth for drops: the collectors (every rejected
+    // trace was ingested by exactly one replica collector).
+    let dropped = collector.dropped;
+    ClusterResult {
+        collector,
+        replicas: replicas.into_iter().map(|r| r.metrics).collect(),
+        dropped,
+        issued: next_id,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Processors, RequestPath};
+    use crate::serving::backends;
+    use crate::workload::{generate, Pattern};
+
+    fn replica(per_req_ms: f64) -> ReplicaConfig {
+        ReplicaConfig {
+            software: &backends::TRIS,
+            service: ServiceModel::Measured {
+                per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+                utilization: 0.6,
+            },
+            policy: Policy::Single,
+            max_queue: 100_000,
+        }
+    }
+
+    fn base(n: usize, rate: f64, duration: f64, router: RouterPolicy) -> ClusterConfig {
+        ClusterConfig {
+            arrivals: generate(&Pattern::Poisson { rate }, duration, 11),
+            closed_loop: None,
+            duration_s: duration,
+            replicas: (0..n).map(|_| replica(5.0)).collect(),
+            router,
+            path: RequestPath::local(Processors::none()),
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn conservation_across_replicas() {
+        let cfg = base(4, 200.0, 20.0, RouterPolicy::RoundRobin);
+        let n = cfg.arrivals.len() as u64;
+        let r = run(&cfg);
+        assert_eq!(r.collector.completed + r.dropped, n);
+        assert_eq!(r.issued, n);
+        // The cluster merge agrees with the per-replica sums.
+        let completed: u64 = r.replicas.iter().map(|m| m.collector.completed).sum();
+        assert_eq!(completed, r.collector.completed);
+        let dropped: u64 = r.replicas.iter().map(|m| m.collector.dropped).sum();
+        assert_eq!(dropped, r.dropped);
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let r = run(&base(4, 200.0, 20.0, RouterPolicy::RoundRobin));
+        let per: Vec<u64> = r.replicas.iter().map(|m| m.collector.completed).collect();
+        let max = *per.iter().max().unwrap() as f64;
+        let min = *per.iter().min().unwrap() as f64;
+        assert!(min > 0.0, "{per:?}");
+        assert!(max / min < 1.05, "round-robin should balance: {per:?}");
+    }
+
+    #[test]
+    fn all_routers_deterministic_per_seed() {
+        for router in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 17 },
+        ] {
+            let (a, b) = (run(&base(3, 150.0, 10.0, router)), run(&base(3, 150.0, 10.0, router)));
+            assert_eq!(a.collector.completed, b.collector.completed, "{}", router.label());
+            assert_eq!(a.dropped, b.dropped);
+            for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(ra.batch_sizes, rb.batch_sizes, "{}", router.label());
+            }
+            let (mut ca, mut cb) = (a.collector, b.collector);
+            assert_eq!(ca.e2e.percentile(99.0), cb.e2e.percentile(99.0));
+        }
+    }
+
+    #[test]
+    fn scale_out_absorbs_overload() {
+        // 600 rps against 5 ms replicas (200 rps capacity each): one
+        // replica drowns, four absorb it.
+        let mut one = base(1, 600.0, 15.0, RouterPolicy::LeastOutstanding);
+        let mut four = base(4, 600.0, 15.0, RouterPolicy::LeastOutstanding);
+        for cfg in [&mut one, &mut four] {
+            for rc in &mut cfg.replicas {
+                rc.max_queue = 64;
+            }
+        }
+        let (r1, r4) = (run(&one), run(&four));
+        assert!(r1.dropped > 0, "single replica must overflow");
+        assert!(
+            r4.collector.completed > 2 * r1.collector.completed,
+            "4 replicas: {} vs 1: {}",
+            r4.collector.completed,
+            r1.collector.completed
+        );
+        let (mut c1, mut c4) = (r1.collector, r4.collector);
+        assert!(c4.e2e.percentile(99.0) < c1.e2e.percentile(99.0));
+    }
+
+    #[test]
+    fn heterogeneous_replicas_keep_own_service_models() {
+        // Fast replica finishes far more work than the slow one under
+        // least-outstanding routing.
+        let mut cfg = base(2, 150.0, 20.0, RouterPolicy::LeastOutstanding);
+        cfg.replicas = vec![replica(2.0), replica(20.0)];
+        let r = run(&cfg);
+        let fast = r.replicas[0].collector.completed;
+        let slow = r.replicas[1].collector.completed;
+        assert!(fast > slow * 2, "fast {fast} vs slow {slow}");
+        assert_eq!(fast + slow, r.collector.completed);
+    }
+
+    #[test]
+    fn closed_loop_cluster_sustains_concurrency() {
+        let mut cfg = base(2, 1.0, 10.0, RouterPolicy::LeastOutstanding);
+        cfg.arrivals = vec![];
+        cfg.closed_loop = Some(8);
+        let r = run(&cfg);
+        // 8 clients over 2 replicas at ~4.2 ms effective service: thousands
+        // of completions; every client's chain stays alive to the horizon.
+        assert!(r.collector.completed > 2000, "completed {}", r.collector.completed);
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
+    }
+
+    #[test]
+    fn per_replica_timelines_active() {
+        let r = run(&base(2, 100.0, 20.0, RouterPolicy::RoundRobin));
+        for (i, m) in r.replicas.iter().enumerate() {
+            assert!(m.busy_timeline.mean() > 0.01, "replica {i} idle timeline");
+            assert!(m.mean_batch() >= 1.0, "replica {i}");
+        }
+    }
+}

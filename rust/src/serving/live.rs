@@ -190,8 +190,12 @@ fn batcher_thread(
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if wake_at.map_or(false, |t| now_s() >= t) {
                     wake_at = None;
-                    if let Decision::Dispatch(b) = batcher.on_wake(now_s()) {
-                        dispatch(b, &mut pending, now_s());
+                    match batcher.on_wake(now_s()) {
+                        Decision::Dispatch(b) => dispatch(b, &mut pending, now_s()),
+                        // Stale wake: the batch it was armed for already
+                        // dispatched; re-arm for the corrected deadline.
+                        Decision::WakeAt(t) => wake_at = Some(t),
+                        Decision::Wait => {}
                     }
                 }
             }

@@ -1,18 +1,29 @@
 //! Tier-2 serving layer: software profiles, batching policies, service-time
-//! models, the discrete-event pipeline simulator, and the live CPU engine.
+//! models, the discrete-event pipeline simulator, the N-replica cluster
+//! engine with pluggable request routing, and the live CPU engine.
 //!
 //! The *control flow* (batcher decisions, queueing) is shared between the
 //! simulator (`sim`, used for the GPU platforms and long workloads) and
 //! the live engine (`live`, real XLA execution on the CPU platform), so
 //! simulated results exercise the same code the real server runs.
+//!
+//! Scale-out structure: `cluster` simulates N replicas — each with its own
+//! [`Batcher`] + [`ServiceModel`] + [`Software`], heterogeneous mixes
+//! allowed — behind a `router` (round-robin, least-outstanding, or seeded
+//! power-of-two-choices). `sim::run` is the N=1 special case and delegates
+//! to it.
 
 pub mod backends;
 pub mod batcher;
-pub mod service;
+pub mod cluster;
 pub mod live;
+pub mod router;
+pub mod service;
 pub mod sim;
 
 pub use backends::{DynamicBatching, Software};
 pub use batcher::{Batcher, Decision, Policy};
+pub use cluster::{ClusterConfig, ClusterResult, ReplicaConfig};
+pub use router::{Router, RouterPolicy};
 pub use service::ServiceModel;
 pub use sim::{run, SimConfig, SimResult};

@@ -1,0 +1,160 @@
+//! Request routing across serving replicas (cluster tier).
+//!
+//! The router is pure decision logic, like [`super::batcher`]: given the
+//! per-replica outstanding-request counts (queued + in service), pick the
+//! replica for the next request. Three classic policies:
+//!
+//!  * `RoundRobin` — oblivious cycling; the baseline every load balancer
+//!    ships with. Suffers on heterogeneous replicas: a slow replica gets
+//!    the same share as a fast one and its queue diverges.
+//!  * `LeastOutstanding` — join-the-shortest-queue; needs global queue
+//!    state but adapts to heterogeneity and bursts.
+//!  * `PowerOfTwoChoices` — sample two distinct replicas (seeded, so runs
+//!    are reproducible), send to the less loaded; most of JSQ's benefit at
+//!    O(1) state probes (Mitzenmacher's classic result).
+
+use crate::util::rng::Pcg64;
+
+/// Which routing policy a [`Router`] applies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouterPolicy {
+    /// Cycle replicas in index order, ignoring load.
+    RoundRobin,
+    /// Send to the replica with the fewest outstanding requests
+    /// (ties break to the lowest index, keeping runs deterministic).
+    LeastOutstanding,
+    /// Sample two distinct replicas with a PRNG seeded at `seed`; send to
+    /// the less loaded of the pair (ties to the first sampled).
+    PowerOfTwoChoices { seed: u64 },
+}
+
+impl RouterPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastOutstanding => "least-outstanding",
+            RouterPolicy::PowerOfTwoChoices { .. } => "power-of-two",
+        }
+    }
+}
+
+/// Routing state machine: policy + round-robin cursor + sampling PRNG.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RouterPolicy,
+    next: usize,
+    rng: Pcg64,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy) -> Router {
+        let seed = match policy {
+            RouterPolicy::PowerOfTwoChoices { seed } => seed,
+            _ => 0,
+        };
+        // Dedicated stream: routing draws never perturb workload sampling.
+        Router { policy, next: 0, rng: Pcg64::new(seed, 0x9e3779b97f4a7c15) }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick the replica for the next request. `outstanding[i]` is replica
+    /// i's queued + in-service request count.
+    pub fn route(&mut self, outstanding: &[usize]) -> usize {
+        let n = outstanding.len();
+        assert!(n > 0, "router needs at least one replica");
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let i = self.next % n;
+                self.next = (self.next + 1) % n;
+                i
+            }
+            RouterPolicy::LeastOutstanding => outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &load)| (load, i))
+                .map(|(i, _)| i)
+                .expect("non-empty"),
+            RouterPolicy::PowerOfTwoChoices { .. } => {
+                if n == 1 {
+                    return 0;
+                }
+                let a = self.rng.next_below(n as u64) as usize;
+                let mut b = self.rng.next_below(n as u64 - 1) as usize;
+                if b >= a {
+                    b += 1; // distinct second choice
+                }
+                if outstanding[b] < outstanding[a] {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_regardless_of_load() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let load = [100, 0, 0];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&load)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_picks_argmin_ties_to_lowest_index() {
+        let mut r = Router::new(RouterPolicy::LeastOutstanding);
+        assert_eq!(r.route(&[3, 1, 2]), 1);
+        assert_eq!(r.route(&[2, 2, 2]), 0);
+        assert_eq!(r.route(&[5, 4, 4]), 1);
+    }
+
+    #[test]
+    fn power_of_two_prefers_less_loaded_of_pair() {
+        // One replica is massively loaded: p2c must route there strictly
+        // less often than uniform-random would (it only lands there when
+        // both samples hit it, i.e. never, since samples are distinct).
+        let mut r = Router::new(RouterPolicy::PowerOfTwoChoices { seed: 7 });
+        let load = [1000, 0, 0, 0];
+        let hits = (0..200).filter(|_| r.route(&load) == 0).count();
+        assert_eq!(hits, 0, "p2c must never pick the hot replica with distinct samples");
+    }
+
+    #[test]
+    fn power_of_two_deterministic_per_seed() {
+        let mut a = Router::new(RouterPolicy::PowerOfTwoChoices { seed: 42 });
+        let mut b = Router::new(RouterPolicy::PowerOfTwoChoices { seed: 42 });
+        let load = [1, 2, 3, 4, 5];
+        for _ in 0..100 {
+            assert_eq!(a.route(&load), b.route(&load));
+        }
+    }
+
+    #[test]
+    fn power_of_two_single_replica() {
+        let mut r = Router::new(RouterPolicy::PowerOfTwoChoices { seed: 0 });
+        assert_eq!(r.route(&[9]), 0);
+    }
+
+    #[test]
+    fn routes_always_in_bounds() {
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 3 },
+        ] {
+            let mut r = Router::new(policy);
+            let load = [4, 0, 7];
+            for _ in 0..50 {
+                assert!(r.route(&load) < 3, "{}", policy.label());
+            }
+        }
+    }
+}

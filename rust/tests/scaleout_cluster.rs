@@ -1,0 +1,143 @@
+//! Integration tests for the cluster serving tier: N=1 equivalence with
+//! the single-server simulator, determinism per seed across router
+//! policies, and the heterogeneous-replica routing result the fig16
+//! bench reports (least-outstanding p99 <= round-robin p99).
+
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::cluster::{run as run_cluster, ClusterConfig, ReplicaConfig};
+use inferbench::serving::{backends, run as run_sim, Policy, RouterPolicy, ServiceModel, SimConfig};
+use inferbench::workload::{generate, Pattern};
+
+fn service(per_req_ms: f64) -> ServiceModel {
+    ServiceModel::Measured {
+        per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.4 / 1e3)],
+        utilization: 0.6,
+    }
+}
+
+fn replica(per_req_ms: f64, policy: Policy) -> ReplicaConfig {
+    ReplicaConfig {
+        software: &backends::TRIS,
+        service: service(per_req_ms),
+        policy,
+        max_queue: 100_000,
+    }
+}
+
+fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
+    // 2 fast (3.4 ms effective => ~294 rps) + 2 slow (13 ms => ~78 rps)
+    // at 380 rps offered: round-robin hands each slow replica 95 rps,
+    // beyond its capacity, so its queue diverges; load-aware routing
+    // keeps the cluster stable.
+    ClusterConfig {
+        arrivals: generate(&Pattern::Poisson { rate: 380.0 }, duration, 7),
+        closed_loop: None,
+        duration_s: duration,
+        replicas: vec![
+            replica(4.0, Policy::Single),
+            replica(4.0, Policy::Single),
+            replica(16.0, Policy::Single),
+            replica(16.0, Policy::Single),
+        ],
+        router,
+        path: RequestPath::local(Processors::none()),
+        seed: 7,
+    }
+}
+
+#[test]
+fn n1_cluster_matches_single_server_sim() {
+    let sim_cfg = SimConfig {
+        arrivals: generate(&Pattern::Poisson { rate: 120.0 }, 15.0, 3),
+        closed_loop: None,
+        duration_s: 15.0,
+        policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.004 },
+        software: &backends::TFS,
+        service: service(5.0),
+        path: RequestPath::local(Processors::image()),
+        max_queue: 512,
+        seed: 3,
+    };
+    let cluster_cfg = ClusterConfig {
+        arrivals: sim_cfg.arrivals.clone(),
+        closed_loop: None,
+        duration_s: sim_cfg.duration_s,
+        replicas: vec![ReplicaConfig {
+            software: sim_cfg.software,
+            service: sim_cfg.service.clone(),
+            policy: sim_cfg.policy,
+            max_queue: sim_cfg.max_queue,
+        }],
+        router: RouterPolicy::RoundRobin,
+        path: sim_cfg.path,
+        seed: sim_cfg.seed,
+    };
+    let s = run_sim(&sim_cfg);
+    let c = run_cluster(&cluster_cfg);
+    assert_eq!(s.collector.completed, c.collector.completed);
+    assert_eq!(s.dropped, c.dropped);
+    assert_eq!(s.issued, c.issued);
+    assert_eq!(s.batch_sizes, c.replicas[0].batch_sizes);
+    let (mut cs, mut cc) = (s.collector, c.collector);
+    assert_eq!(cs.e2e.percentile(99.0), cc.e2e.percentile(99.0));
+    assert_eq!(cs.e2e.percentile(50.0), cc.e2e.percentile(50.0));
+}
+
+#[test]
+fn cluster_deterministic_per_seed_for_every_router() {
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstanding,
+        RouterPolicy::PowerOfTwoChoices { seed: 21 },
+    ] {
+        let a = run_cluster(&hetero_cluster(router, 8.0));
+        let b = run_cluster(&hetero_cluster(router, 8.0));
+        assert_eq!(a.collector.completed, b.collector.completed, "{}", router.label());
+        assert_eq!(a.dropped, b.dropped, "{}", router.label());
+        for (i, (ra, rb)) in a.replicas.iter().zip(&b.replicas).enumerate() {
+            assert_eq!(ra.batch_sizes, rb.batch_sizes, "{} replica {i}", router.label());
+            assert_eq!(ra.collector.completed, rb.collector.completed);
+        }
+        let (mut ca, mut cb) = (a.collector, b.collector);
+        assert_eq!(ca.e2e.percentile(99.0), cb.e2e.percentile(99.0), "{}", router.label());
+    }
+}
+
+#[test]
+fn least_outstanding_beats_round_robin_on_heterogeneous_replicas() {
+    // The fig16b acceptance scenario at a fixed seed.
+    let rr = run_cluster(&hetero_cluster(RouterPolicy::RoundRobin, 15.0));
+    let lo = run_cluster(&hetero_cluster(RouterPolicy::LeastOutstanding, 15.0));
+    // Conservation holds under both routers.
+    let n = hetero_cluster(RouterPolicy::RoundRobin, 15.0).arrivals.len() as u64;
+    assert_eq!(rr.collector.completed + rr.dropped, n);
+    assert_eq!(lo.collector.completed + lo.dropped, n);
+    let (mut crr, mut clo) = (rr.collector, lo.collector);
+    let (p99_rr, p99_lo) = (crr.e2e.percentile(99.0), clo.e2e.percentile(99.0));
+    assert!(
+        p99_lo <= p99_rr,
+        "least-outstanding p99 {p99_lo}s must not exceed round-robin p99 {p99_rr}s"
+    );
+    // The gap is structural (diverging slow-replica queues), not noise.
+    assert!(p99_rr > 2.0 * p99_lo, "rr {p99_rr} lo {p99_lo}");
+}
+
+#[test]
+fn least_outstanding_shifts_load_to_fast_replicas() {
+    let r = run_cluster(&hetero_cluster(RouterPolicy::LeastOutstanding, 15.0));
+    let fast: u64 = r.replicas[..2].iter().map(|m| m.collector.completed).sum();
+    let slow: u64 = r.replicas[2..].iter().map(|m| m.collector.completed).sum();
+    assert!(fast > slow, "fast pair {fast} should out-serve slow pair {slow}");
+    // Everyone still participates: no replica is starved outright.
+    assert!(r.replicas.iter().all(|m| m.collector.completed > 0));
+}
+
+#[test]
+fn power_of_two_tail_between_rr_and_lo_or_better() {
+    // p2c needs only two load probes per request yet should land far
+    // closer to least-outstanding than to round-robin here.
+    let rr = run_cluster(&hetero_cluster(RouterPolicy::RoundRobin, 15.0));
+    let p2c = run_cluster(&hetero_cluster(RouterPolicy::PowerOfTwoChoices { seed: 5 }, 15.0));
+    let (mut crr, mut cp) = (rr.collector, p2c.collector);
+    assert!(cp.e2e.percentile(99.0) < crr.e2e.percentile(99.0));
+}

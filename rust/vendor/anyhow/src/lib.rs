@@ -1,0 +1,196 @@
+//! Offline stand-in for the `anyhow` crate (vendored substrate: the build
+//! environment has no crates.io access).
+//!
+//! Implements the API subset InferBench uses — [`Error`], [`Result`],
+//! [`anyhow!`], [`bail!`], and the [`Context`] extension trait — with the
+//! same observable behaviour: `Display` prints the outermost message,
+//! `{:#}` prints the whole `context: cause: root` chain, and any
+//! `std::error::Error` converts via `?`. Like the real crate, [`Error`]
+//! deliberately does **not** implement `std::error::Error`, which is what
+//! makes the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias, with the same defaulted error
+/// parameter as the real crate so `Result<T, E>` spellings also work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error: `chain[0]` is the outermost context, the last
+/// entry the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a layer of context (used by the [`Context`] methods).
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (original) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to a fallible value; mirrors `anyhow::Context`. The `E`
+/// parameter keeps the `Result` and `Option` impls coherent (`Option` uses
+/// `Infallible`), exactly as the real crate does.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_prints_outermost_alternate_prints_chain() {
+        let e: Error = io_err().into();
+        let e = e.wrap("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening db").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening db: file missing");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing field {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field x");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        let name = "resnet50";
+        let e = anyhow!("model {name:?} not in catalog");
+        assert!(e.to_string().contains("resnet50"));
+
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad input {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "bad input 7");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
