@@ -47,6 +47,7 @@ fn cluster(replicas: Vec<ReplicaConfig>, rate: f64, router: RouterPolicy) -> Clu
         duration_s: DURATION,
         replicas,
         router,
+        autoscale: None,
         path: RequestPath::local(Processors::none()),
         seed: SEED,
     }

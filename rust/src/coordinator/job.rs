@@ -3,14 +3,49 @@
 //!
 //! A submission parses into a [`JobSpec`]; a follower worker executes it
 //! with [`execute`], producing PerfDB records. Job kinds cover the tasks
-//! the paper's system automates: serving-tier simulations, hardware-tier
-//! sweeps, and (for scheduler studies / tests) calibrated sleeps.
+//! the paper's system automates: serving-tier simulations, N-replica
+//! cluster simulations with optional autoscaling, hardware-tier sweeps,
+//! and (for scheduler studies / tests) calibrated sleeps.
+//!
+//! A `cluster_sim` submission requesting an autoscaled spike study
+//! (Fig 11c burst against a cold-starting fleet) looks like:
+//!
+//! ```yaml
+//! name: resnet-spike-autoscale
+//! task: cluster_sim
+//! model: resnet50
+//! platform: G1
+//! software: tris
+//! replicas: 2                  # initial fleet
+//! router: least-outstanding    # or round-robin / power-of-two / latency-ewma
+//! workload:
+//!   rate: 120.0
+//!   duration_s: 60
+//!   burst:                     # optional spike window
+//!     rate: 600.0
+//!     start_s: 20
+//!     duration_s: 10
+//! batching:
+//!   max_size: 8
+//!   max_wait_ms: 2
+//! autoscale:                   # optional; fixed fleet when omitted
+//!   policy: queue-depth        # or utilization
+//!   min_replicas: 2
+//!   max_replicas: 8
+//!   up: 8.0                    # outstanding/replica (or busy fraction)
+//!   down: 1.0
+//!   cooldown_s: 2.0
+//!   eval_interval_s: 0.5
+//! ```
 
 use crate::hardware::{self, Parallelism};
 use crate::models::catalog;
 use crate::perfdb::Record;
 use crate::pipeline::{Processors, RequestPath, LAN};
-use crate::serving::{self, backends, Policy, ServiceModel, SimConfig};
+use crate::serving::cluster::{self, ClusterConfig, ReplicaConfig};
+use crate::serving::{
+    self, backends, AutoscaleConfig, Policy, RouterPolicy, ScalePolicy, ServiceModel, SimConfig,
+};
 use crate::util::json::Json;
 use crate::util::yamlish;
 use crate::workload::{generate, Pattern};
@@ -29,11 +64,55 @@ pub enum JobKind {
         max_batch: usize,
         max_wait_s: f64,
     },
+    /// Simulate an N-replica serving cluster, optionally autoscaled —
+    /// scale-out and spike studies submitted through the leader.
+    ClusterSim {
+        model: String,
+        platform: String,
+        software: String,
+        /// Initial fleet size.
+        replicas: usize,
+        /// Router policy name: round-robin, least-outstanding,
+        /// power-of-two, or latency-ewma.
+        router: String,
+        rate_rps: f64,
+        duration_s: f64,
+        /// Optional spike window on top of the base rate (Fig 11c).
+        burst: Option<BurstSpec>,
+        max_batch: usize,
+        max_wait_s: f64,
+        /// Optional elasticity; fixed fleet when absent.
+        autoscale: Option<AutoscaleSpec>,
+    },
     /// Roofline sweep of a model across batch sizes (hardware tier).
     HardwareSweep { model: String, platform: String, batches: Vec<usize> },
     /// Do nothing for a fixed time (scheduler studies; time is scaled by
     /// the leader's `time_scale`).
     Sleep { seconds: f64 },
+}
+
+/// Burst window of a `cluster_sim` workload (spike load, Fig 11c).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurstSpec {
+    pub rate_rps: f64,
+    pub start_s: f64,
+    pub duration_s: f64,
+}
+
+/// Autoscaling parameters of a `cluster_sim` submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    /// "queue-depth" or "utilization".
+    pub policy: String,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Scale-up threshold: outstanding per replica (queue-depth) or busy
+    /// fraction in [0,1] (utilization).
+    pub up: f64,
+    /// Scale-down threshold, same units as `up`.
+    pub down: f64,
+    pub cooldown_s: f64,
+    pub eval_interval_s: f64,
 }
 
 /// A parsed benchmark submission.
@@ -87,6 +166,71 @@ impl JobSpec {
                         / 1e3,
                 }
             }
+            "cluster_sim" => {
+                let wl = doc.get("workload");
+                let burst = wl.and_then(|w| w.get("burst")).map(|b| BurstSpec {
+                    rate_rps: b.get("rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    start_s: b.get("start_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    duration_s: b.get("duration_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                });
+                if let Some(b) = &burst {
+                    if b.rate_rps <= 0.0 || b.duration_s <= 0.0 {
+                        bail!("cluster_sim burst needs positive rate and duration_s");
+                    }
+                }
+                let autoscale = doc.get("autoscale").map(|a| AutoscaleSpec {
+                    policy: str_or(a, "policy", "queue-depth"),
+                    min_replicas: a
+                        .get("min_replicas")
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(1)
+                        .max(1) as usize,
+                    max_replicas: a
+                        .get("max_replicas")
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(8)
+                        .max(1) as usize,
+                    up: a.get("up").and_then(|v| v.as_f64()).unwrap_or(8.0),
+                    down: a.get("down").and_then(|v| v.as_f64()).unwrap_or(1.0),
+                    cooldown_s: a.get("cooldown_s").and_then(|v| v.as_f64()).unwrap_or(2.0),
+                    eval_interval_s: a
+                        .get("eval_interval_s")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.5),
+                });
+                JobKind::ClusterSim {
+                    model: str_or(doc, "model", "resnet50"),
+                    platform: str_or(doc, "platform", "G1"),
+                    software: str_or(doc, "software", "tfs"),
+                    replicas: doc
+                        .get("replicas")
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(2)
+                        .max(1) as usize,
+                    router: str_or(doc, "router", "least-outstanding"),
+                    rate_rps: wl
+                        .and_then(|w| w.get("rate"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(60.0),
+                    duration_s: wl
+                        .and_then(|w| w.get("duration_s"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(60.0),
+                    burst,
+                    max_batch: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_size"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(8) as usize,
+                    max_wait_s: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_wait_ms"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(5.0)
+                        / 1e3,
+                    autoscale,
+                }
+            }
             "hardware_sweep" => JobKind::HardwareSweep {
                 model: str_or(doc, "model", "resnet50"),
                 platform: str_or(doc, "platform", "G1"),
@@ -117,9 +261,23 @@ fn str_or(doc: &Json, key: &str, default: &str) -> String {
 fn default_estimate(kind: &JobKind) -> f64 {
     match kind {
         JobKind::ServingSim { duration_s, .. } => duration_s * 0.05 + 2.0, // sim runs much faster than simulated time
+        JobKind::ClusterSim { duration_s, replicas, .. } => {
+            duration_s * 0.05 * (*replicas as f64).max(1.0) + 2.0
+        }
         JobKind::HardwareSweep { batches, .. } => 0.5 + batches.len() as f64 * 0.1,
         JobKind::Sleep { seconds } => *seconds,
     }
+}
+
+/// Resolve a `cluster_sim` router name.
+fn router_policy(name: &str, seed: u64) -> Result<RouterPolicy> {
+    Ok(match name {
+        "round-robin" | "rr" => RouterPolicy::RoundRobin,
+        "least-outstanding" | "lo" => RouterPolicy::LeastOutstanding,
+        "power-of-two" | "p2c" => RouterPolicy::PowerOfTwoChoices { seed },
+        "latency-ewma" | "ewma" => RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.1 },
+        other => bail!("unknown router {other:?}"),
+    })
 }
 
 /// Family parallelism for a catalog model (the roofline occupancy input).
@@ -184,6 +342,131 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>
                 .with_metric("dropped", result.dropped as f64);
             Ok(vec![record])
         }
+        JobKind::ClusterSim {
+            model,
+            platform,
+            software,
+            replicas,
+            router,
+            rate_rps,
+            duration_s,
+            burst,
+            max_batch,
+            max_wait_s,
+            autoscale,
+        } => {
+            let sw = backends::find(software)
+                .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
+            let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
+            let template = ReplicaConfig {
+                software: sw,
+                service: service_model_for(model, platform)?,
+                policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: *max_wait_s },
+                max_queue: 4096,
+            };
+            let pattern = match burst {
+                Some(b) => Pattern::Spike {
+                    base_rate: *rate_rps,
+                    burst_rate: b.rate_rps,
+                    start_s: b.start_s,
+                    duration_s: b.duration_s,
+                },
+                None => Pattern::Poisson { rate: *rate_rps },
+            };
+            let autoscale_cfg = autoscale
+                .as_ref()
+                .map(|a| -> Result<AutoscaleConfig> {
+                    let policy = match a.policy.as_str() {
+                        "queue-depth" => ScalePolicy::QueueDepth {
+                            up_per_replica: a.up,
+                            down_per_replica: a.down,
+                            cooldown_s: a.cooldown_s,
+                        },
+                        "utilization" => ScalePolicy::Utilization {
+                            up: a.up,
+                            down: a.down,
+                            cooldown_s: a.cooldown_s,
+                        },
+                        other => bail!("unknown autoscale policy {other:?}"),
+                    };
+                    // Initial fleet must sit inside [min, max]: below min
+                    // the engine refuses to start; above max the declared
+                    // capacity bound would be silently violated.
+                    if a.max_replicas < a.min_replicas
+                        || *replicas < a.min_replicas
+                        || *replicas > a.max_replicas
+                    {
+                        bail!(
+                            "autoscale bounds invalid: initial {} vs min {} / max {}",
+                            replicas,
+                            a.min_replicas,
+                            a.max_replicas
+                        );
+                    }
+                    if a.eval_interval_s <= 0.0 {
+                        bail!("autoscale eval_interval_s must be positive");
+                    }
+                    Ok(AutoscaleConfig {
+                        policy,
+                        min_replicas: a.min_replicas,
+                        max_replicas: a.max_replicas,
+                        template: template.clone(),
+                        weight_bytes: m.profile.weight_bytes,
+                        eval_interval_s: a.eval_interval_s,
+                    })
+                })
+                .transpose()?;
+            let config = ClusterConfig {
+                arrivals: generate(&pattern, *duration_s, seed),
+                closed_loop: None,
+                duration_s: *duration_s,
+                replicas: (0..*replicas).map(|_| template.clone()).collect(),
+                router: router_policy(router, seed)?,
+                autoscale: autoscale_cfg,
+                path: RequestPath {
+                    processors: Processors::image(),
+                    network: LAN,
+                    payload_bytes: m.request_bytes,
+                },
+                seed,
+            };
+            let result = cluster::run(&config);
+            // Conservation is part of the contract: drain-on-remove must
+            // complete every accepted request across scale events.
+            if result.collector.completed + result.dropped != result.issued {
+                bail!(
+                    "cluster_sim conservation violated: {} completed + {} dropped != {} issued",
+                    result.collector.completed,
+                    result.dropped,
+                    result.issued
+                );
+            }
+            let mut collector = result.collector;
+            let mut record = Record::new("cluster_sim", model, platform, software)
+                .with_metric("rate_rps", *rate_rps)
+                .with_metric("replicas_initial", *replicas as f64)
+                .with_metric("replicas_max", result.scale.max_active() as f64)
+                .with_metric(
+                    "scale_ups",
+                    result.scale.count(crate::metrics::ScaleEventKind::AddRequested) as f64,
+                )
+                .with_metric(
+                    "scale_retires",
+                    result.scale.count(crate::metrics::ScaleEventKind::Retired) as f64,
+                )
+                .with_metric("p50_ms", collector.e2e.percentile(50.0) * 1e3)
+                .with_metric("p99_ms", collector.e2e.percentile(99.0) * 1e3)
+                .with_metric("throughput_rps", collector.throughput_rps())
+                .with_metric("dropped", result.dropped as f64)
+                .with_metric("issued", result.issued as f64);
+            if let Some(b) = burst {
+                let mut w = collector.e2e_in_window(b.start_s, b.start_s + b.duration_s);
+                if !w.is_empty() {
+                    record = record.with_metric("burst_p99_ms", w.percentile(99.0) * 1e3);
+                }
+            }
+            Ok(vec![record])
+        }
         JobKind::HardwareSweep { model, platform, batches } => {
             let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
             let p = hardware::find(platform)
@@ -244,6 +527,96 @@ batching:
             k => panic!("{k:?}"),
         }
         assert!(spec.est_duration_s > 0.0);
+    }
+
+    const CLUSTER_SUBMISSION: &str = r#"
+name: spike-autoscale
+task: cluster_sim
+model: resnet50
+platform: G1
+software: tfs
+replicas: 2
+router: least-outstanding
+workload:
+  rate: 120.0
+  duration_s: 30
+  burst:
+    rate: 2000.0
+    start_s: 8
+    duration_s: 6
+batching:
+  max_size: 8
+  max_wait_ms: 2
+autoscale:
+  policy: queue-depth
+  min_replicas: 2
+  max_replicas: 6
+  up: 8.0
+  down: 1.0
+  cooldown_s: 1.0
+  eval_interval_s: 0.5
+"#;
+
+    #[test]
+    fn parses_cluster_submission() {
+        let spec = JobSpec::parse_yaml(CLUSTER_SUBMISSION).unwrap();
+        match &spec.kind {
+            JobKind::ClusterSim { replicas, router, burst, autoscale, rate_rps, .. } => {
+                assert_eq!(*replicas, 2);
+                assert_eq!(router, "least-outstanding");
+                assert_eq!(*rate_rps, 120.0);
+                let b = burst.as_ref().unwrap();
+                assert_eq!(b.rate_rps, 2000.0);
+                assert_eq!(b.start_s, 8.0);
+                let a = autoscale.as_ref().unwrap();
+                assert_eq!(a.policy, "queue-depth");
+                assert_eq!(a.max_replicas, 6);
+                assert_eq!(a.eval_interval_s, 0.5);
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn executes_cluster_sim_with_autoscale() {
+        let spec = JobSpec::parse_yaml(CLUSTER_SUBMISSION).unwrap();
+        let records = execute(&spec, 3, 1.0).unwrap();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        // Conservation checked inside execute; the record carries the
+        // autoscaling outcome.
+        assert!(r.metric("replicas_max").unwrap() > 2.0, "no scale-up recorded");
+        assert!(r.metric("scale_ups").unwrap() >= 1.0);
+        assert!(r.metric("burst_p99_ms").unwrap() >= r.metric("p50_ms").unwrap());
+        assert!(r.metric("throughput_rps").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cluster_sim_fixed_fleet_without_autoscale_block() {
+        let spec = JobSpec::parse_yaml(
+            "task: cluster_sim\nmodel: resnet50\nplatform: G1\nsoftware: tris\nreplicas: 3\n\
+             workload:\n  rate: 90.0\n  duration_s: 10\n",
+        )
+        .unwrap();
+        let records = execute(&spec, 0, 1.0).unwrap();
+        let r = &records[0];
+        assert_eq!(r.metric("replicas_initial").unwrap(), 3.0);
+        assert_eq!(r.metric("replicas_max").unwrap(), 3.0);
+        assert_eq!(r.metric("scale_ups").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn cluster_sim_rejects_unknown_router_and_policy() {
+        let bad_router = JobSpec::parse_yaml(
+            "task: cluster_sim\nmodel: resnet50\nplatform: G1\nrouter: teleport\n",
+        )
+        .unwrap();
+        assert!(execute(&bad_router, 0, 1.0).is_err());
+        let bad_policy = JobSpec::parse_yaml(
+            "task: cluster_sim\nmodel: resnet50\nplatform: G1\nautoscale:\n  policy: vibes\n",
+        )
+        .unwrap();
+        assert!(execute(&bad_policy, 0, 1.0).is_err());
     }
 
     #[test]

@@ -48,20 +48,56 @@ impl Completed {
 pub struct WorkerStatus {
     pub worker: usize,
     pub queued: usize,
-    /// Estimated seconds of queued work (published queue length,
-    /// Algorithm 1).
+    /// Estimated seconds of queued (not yet started) work — the published
+    /// queue length of Algorithm 1.
     pub backlog_s: f64,
+    /// Remaining estimate of the job currently executing, in submitted
+    /// (unscaled) seconds; 0 when idle.
+    pub running_remaining_s: f64,
     pub busy: bool,
     pub completed: u64,
+}
+
+/// The job a worker is currently executing: its scheduler estimate and
+/// when it started, so the leader can charge the *remaining* estimate in
+/// queue-aware placement instead of a flat busy penalty.
+#[derive(Debug, Clone)]
+struct RunningJob {
+    est_s: f64,
+    started: Instant,
+    /// Whether this job executes at `1/time_scale` real time (only Sleep
+    /// jobs do; sims and sweeps run in real time regardless of the
+    /// leader's scale).
+    time_scaled: bool,
 }
 
 struct WorkerShared {
     queue: Mutex<VecDeque<Pending>>,
     cv: Condvar,
     backlog_s: Mutex<f64>,
+    running: Mutex<Option<RunningJob>>,
     busy: AtomicBool,
     completed: AtomicU64,
     stop: AtomicBool,
+}
+
+impl WorkerShared {
+    /// Remaining estimate of the running job in submitted (unscaled)
+    /// seconds. Wall-clock elapsed is mapped back to job seconds via
+    /// `time_scale` only for jobs that execute scaled (Sleep runs at
+    /// `seconds / time_scale` real time; everything else runs in real
+    /// time), and clamped at 0 for jobs running past their estimate.
+    fn running_remaining_s(&self, time_scale: f64) -> f64 {
+        self.running
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|r| {
+                let scale = if r.time_scaled { time_scale } else { 1.0 };
+                (r.est_s - r.started.elapsed().as_secs_f64() * scale).max(0.0)
+            })
+            .unwrap_or(0.0)
+    }
 }
 
 /// Leader configuration.
@@ -103,6 +139,7 @@ impl Leader {
                 queue: Mutex::new(VecDeque::new()),
                 cv: Condvar::new(),
                 backlog_s: Mutex::new(0.0),
+                running: Mutex::new(None),
                 busy: AtomicBool::new(false),
                 completed: AtomicU64::new(0),
                 stop: AtomicBool::new(false),
@@ -137,12 +174,16 @@ impl Leader {
                 (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % self.shared.len()
             }
             LoadBalance::QueueAware => {
-                // Workers publish queue length (backlog seconds); pick min.
+                // Workers publish queue length (backlog seconds) plus the
+                // remaining estimate of the job they are executing; pick
+                // min. A flat busy penalty here (the old `+1.0`) made a
+                // worker finishing a 0.1 s job tie with one mid-way
+                // through a 20-minute sweep.
                 let mut best = 0;
                 let mut best_backlog = f64::INFINITY;
                 for (i, ws) in self.shared.iter().enumerate() {
                     let b = *ws.backlog_s.lock().unwrap()
-                        + if ws.busy.load(Ordering::Relaxed) { 1.0 } else { 0.0 };
+                        + ws.running_remaining_s(self.config.time_scale);
                     if b < best_backlog {
                         best_backlog = b;
                         best = i;
@@ -175,6 +216,7 @@ impl Leader {
                 worker: i,
                 queued: ws.queue.lock().unwrap().len(),
                 backlog_s: *ws.backlog_s.lock().unwrap(),
+                running_remaining_s: ws.running_remaining_s(self.config.time_scale),
                 busy: ws.busy.load(Ordering::Relaxed),
                 completed: ws.completed.load(Ordering::Relaxed),
             })
@@ -243,16 +285,25 @@ fn worker_loop(
         };
         let Some(pending) = pending else { return };
 
+        // The job leaves the queue now: move its estimate out of the
+        // published backlog and into the running-job slot, so placement
+        // charges remaining work, never a double-count of both.
+        {
+            let mut b = ws.backlog_s.lock().unwrap();
+            *b = (*b - pending.spec.est_duration_s).max(0.0);
+        }
+        *ws.running.lock().unwrap() = Some(RunningJob {
+            est_s: pending.spec.est_duration_s,
+            started: Instant::now(),
+            time_scaled: matches!(pending.spec.kind, job::JobKind::Sleep { .. }),
+        });
         ws.busy.store(true, Ordering::Relaxed);
         let waited_s = pending.submitted.elapsed().as_secs_f64();
         let t0 = Instant::now();
         let result = job::execute(&pending.spec, cfg.seed ^ pending.id, cfg.time_scale);
         let ran_s = t0.elapsed().as_secs_f64();
         ws.busy.store(false, Ordering::Relaxed);
-        {
-            let mut b = ws.backlog_s.lock().unwrap();
-            *b = (*b - pending.spec.est_duration_s).max(0.0);
-        }
+        *ws.running.lock().unwrap() = None;
         ws.completed.fetch_add(1, Ordering::Relaxed);
 
         let ok = match result {
@@ -370,6 +421,51 @@ mod tests {
             .unwrap()
             .worker;
         assert!(placements.iter().all(|&w| w != long_worker), "{placements:?} vs {long_worker}");
+        leader.shutdown();
+    }
+
+    #[test]
+    fn queue_aware_uses_remaining_estimate_not_flat_busy_penalty() {
+        // Regression: placement added a constant +1.0 for any busy worker,
+        // so a worker mid-way through a long job tied with one about to
+        // finish a short one. With remaining-estimate tracking, a short
+        // job submitted while w_long runs a 5 s job (~4.5 s remaining) and
+        // w_med runs a 1 s job (~0.5 s remaining) must land on w_med.
+        let leader = Leader::start(LeaderConfig {
+            workers: 2,
+            policy: SchedulerPolicy::qa_sjf(),
+            time_scale: 10.0,
+            seed: 0,
+        });
+        leader.submit(sleep_spec("long", 5.0)).unwrap(); // -> idle worker (both 0): w0
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let (_, med_worker) = leader.submit(sleep_spec("med", 1.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let (_, short_worker) = leader.submit(sleep_spec("short", 0.1)).unwrap();
+        let done = leader.wait_for(3, std::time::Duration::from_secs(10)).unwrap();
+        let long_worker = done.iter().find(|c| c.name == "long").unwrap().worker;
+        assert_ne!(med_worker, long_worker, "med must avoid the long job's worker");
+        assert_eq!(
+            short_worker, med_worker,
+            "short must go behind ~0.5 s remaining, not behind ~4.5 s"
+        );
+        leader.shutdown();
+    }
+
+    #[test]
+    fn monitor_exposes_running_remaining_estimate() {
+        let leader =
+            Leader::start(LeaderConfig { workers: 1, time_scale: 10.0, ..Default::default() });
+        leader.submit(sleep_spec("r", 4.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let status = leader.status();
+        // ~0.06 s real elapsed at scale 10 => ~0.6 job-seconds consumed.
+        assert!(status[0].busy);
+        let rem = status[0].running_remaining_s;
+        assert!(rem > 0.0 && rem < 4.0, "remaining {rem}");
+        leader.wait_for(1, std::time::Duration::from_secs(10)).unwrap();
+        let status = leader.status();
+        assert_eq!(status[0].running_remaining_s, 0.0);
         leader.shutdown();
     }
 

@@ -94,6 +94,11 @@ impl Placement {
 #[derive(Debug, Clone)]
 pub struct Outcome {
     pub placements: Vec<Placement>,
+    /// Minimum instantaneous queued-backlog (seconds) observed on any
+    /// worker during the run — diagnostic for the backlog-accounting
+    /// invariant: it must never drift negative (float error across many
+    /// add/remove pairs is clamped at 0 where it would).
+    pub min_backlog_s: f64,
 }
 
 impl Outcome {
@@ -158,7 +163,7 @@ pub fn schedule_batch(jobs: &[Job], workers: usize, policy: SchedulerPolicy) -> 
         }
     }
     placements.sort_by_key(|p| p.job.id);
-    Outcome { placements }
+    Outcome { placements, min_backlog_s: 0.0 }
 }
 
 /// Online DES: jobs arrive over time; the LB places on arrival using the
@@ -182,7 +187,16 @@ pub fn simulate_online(jobs: &[Job], workers: usize, policy: SchedulerPolicy) ->
     let mut placements: Vec<Placement> = Vec::with_capacity(jobs.len());
 
     // Start as many queued jobs as possible on worker w up to time `now`.
-    fn drain(w: &mut Worker, wid: usize, now: f64, order: LocalOrder, placements: &mut Vec<Placement>) {
+    // `min_backlog` records the lowest backlog value reached before the
+    // non-negativity clamp — the invariant probe the tests assert on.
+    fn drain(
+        w: &mut Worker,
+        wid: usize,
+        now: f64,
+        order: LocalOrder,
+        placements: &mut Vec<Placement>,
+        min_backlog: &mut f64,
+    ) {
         while w.free_at <= now && !w.queue.is_empty() {
             let idx = match order {
                 LocalOrder::Fcfs => 0,
@@ -198,16 +212,22 @@ pub fn simulate_online(jobs: &[Job], workers: usize, policy: SchedulerPolicy) ->
             let start = w.free_at.max(job.submit_s);
             let finish = start + job.duration_s;
             w.free_at = finish;
-            w.backlog_s -= job.duration_s;
+            // Backlog must never drift negative: float error accumulated
+            // over many add/remove pairs is clamped at exactly 0 so
+            // queue-aware comparisons never see phantom negative work.
+            let raw = w.backlog_s - job.duration_s;
+            *min_backlog = min_backlog.min(raw);
+            w.backlog_s = raw.max(0.0);
             placements.push(Placement { job, worker: wid, start_s: start, finish_s: finish });
         }
     }
 
+    let mut min_backlog_s = 0.0f64;
     for job in jobs {
         let now = job.submit_s;
         // Advance every worker to `now` (they keep running queued work).
         for (wid, w) in ws.iter_mut().enumerate() {
-            drain(w, wid, now, policy.order, &mut placements);
+            drain(w, wid, now, policy.order, &mut placements, &mut min_backlog_s);
         }
         let w = match policy.lb {
             LoadBalance::RoundRobin => {
@@ -225,14 +245,14 @@ pub fn simulate_online(jobs: &[Job], workers: usize, policy: SchedulerPolicy) ->
         };
         ws[w].backlog_s += job.duration_s;
         ws[w].queue.push(job);
-        drain(&mut ws[w], w, now, policy.order, &mut placements);
+        drain(&mut ws[w], w, now, policy.order, &mut placements, &mut min_backlog_s);
     }
     // Flush all remaining work.
     for (wid, w) in ws.iter_mut().enumerate() {
-        drain(w, wid, f64::INFINITY, policy.order, &mut placements);
+        drain(w, wid, f64::INFINITY, policy.order, &mut placements, &mut min_backlog_s);
     }
     placements.sort_by_key(|p| p.job.id);
-    Outcome { placements }
+    Outcome { placements, min_backlog_s }
 }
 
 /// The paper's benchmark-job workload for the Fig 15 study: a mix of
@@ -350,6 +370,28 @@ mod tests {
         let a = schedule_batch(&jobs, 1, SchedulerPolicy::rr_fcfs());
         let b = schedule_batch(&jobs, 1, SchedulerPolicy::rr_sjf());
         assert!((a.makespan_s() - b.makespan_s()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_backlog_never_drifts_negative_under_long_runs() {
+        // Thousands of heavy-tailed jobs over few overloaded workers:
+        // deep queues and thousands of interleaved backlog add/remove
+        // pairs per worker. The published backlog must never drift
+        // negative — anything below numerical noise would leak into
+        // queue-aware placement as phantom idle capacity.
+        for (workers, seed) in [(2usize, 5u64), (4, 17), (8, 91)] {
+            let jobs = synthetic_jobs(2_000, 0.2, seed);
+            for policy in [SchedulerPolicy::rr_fcfs(), SchedulerPolicy::qa_sjf()] {
+                let out = simulate_online(&jobs, workers, policy);
+                assert_eq!(out.placements.len(), jobs.len());
+                assert!(
+                    out.min_backlog_s >= -1e-9,
+                    "{} workers={workers}: backlog drifted to {}",
+                    policy.label(),
+                    out.min_backlog_s
+                );
+            }
+        }
     }
 
     #[test]

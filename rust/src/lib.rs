@@ -7,10 +7,17 @@
 //! generalizes it to an N-replica cluster — per-replica batchers and
 //! service models (heterogeneous mixes allowed) behind a pluggable
 //! [`serving::router`] (round-robin, least-outstanding, seeded
-//! power-of-two-choices) — with per-replica [`metrics::ReplicaMetrics`]
-//! merged into a cluster-level [`metrics::Collector`]. The scale-out
-//! figure (`benches/fig16_scaleout.rs`) reports throughput and tail
-//! latency vs replica count × router policy.
+//! power-of-two-choices, latency-aware EWMA) — with per-replica
+//! [`metrics::ReplicaMetrics`] merged into a cluster-level
+//! [`metrics::Collector`]. [`serving::autoscale`] makes the fleet
+//! elastic: replicas added under load pay their software's cold start
+//! before taking traffic, and removal drains in-flight + queued work
+//! before retiring (`issued == completed + dropped` exactly across scale
+//! events; [`metrics::ScaleTimeline`] records the replica-count
+//! timeline). The scale-out figure (`benches/fig16_scaleout.rs`) reports
+//! throughput and tail latency vs replica count × router policy; the
+//! autoscale figure (`benches/fig17_autoscale.rs`) reports burst-vs-
+//! recovery p99 for scale policies × cold-start profiles.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! regenerated paper results.

@@ -70,6 +70,9 @@ impl RequestTrace {
 pub struct Collector {
     pub e2e: Summary,
     pub per_stage: BTreeMap<Stage, Summary>,
+    /// (arrival_s, e2e_s) per completed request, in ingest order — feeds
+    /// windowed tail analysis (burst-window p99, recovery curves).
+    pub arrival_e2e: Vec<(f64, f64)>,
     pub completed: u64,
     pub dropped: u64,
     pub first_arrival_s: f64,
@@ -88,11 +91,25 @@ impl Collector {
         }
         self.completed += 1;
         self.e2e.record(trace.e2e_s());
+        self.arrival_e2e.push((trace.arrival_s, trace.e2e_s()));
         for (stage, s) in &trace.stage_s {
             self.per_stage.entry(*stage).or_default().record(*s);
         }
         self.first_arrival_s = self.first_arrival_s.min(trace.arrival_s);
         self.last_completion_s = self.last_completion_s.max(trace.completed_s);
+    }
+
+    /// End-to-end latency summary restricted to requests that *arrived*
+    /// within [lo_s, hi_s) — the burst-window / recovery-window view the
+    /// autoscaling figures report.
+    pub fn e2e_in_window(&self, lo_s: f64, hi_s: f64) -> Summary {
+        let mut s = Summary::new();
+        for &(arrival, e2e) in &self.arrival_e2e {
+            if arrival >= lo_s && arrival < hi_s {
+                s.record(e2e);
+            }
+        }
+        s
     }
 
     /// Completed requests per second over the active window.
@@ -121,6 +138,7 @@ impl Collector {
         for (stage, summary) in &other.per_stage {
             self.per_stage.entry(*stage).or_default().extend(summary.samples());
         }
+        self.arrival_e2e.extend_from_slice(&other.arrival_e2e);
         self.completed += other.completed;
         self.dropped += other.dropped;
         self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
@@ -159,6 +177,85 @@ impl ReplicaMetrics {
             return 0.0;
         }
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+}
+
+/// One replica-lifecycle transition recorded by the autoscaling cluster
+/// engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    pub time_s: f64,
+    pub kind: ScaleEventKind,
+    /// Replica index. Indices are stable for the whole run; retired
+    /// replicas keep theirs (the metrics vector is append-only).
+    pub replica: usize,
+    /// Routable (active) replica count immediately after this event.
+    pub active_after: usize,
+}
+
+/// What happened to a replica at a [`ScaleEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleEventKind {
+    /// Scale-up decided: the replica starts paying its cold start.
+    AddRequested,
+    /// Cold start finished: the replica becomes routable.
+    Ready,
+    /// Scale-down decided: routing stops; in-flight + queued work drains.
+    DrainStarted,
+    /// Drain finished: the replica retired with zero outstanding work.
+    Retired,
+}
+
+impl ScaleEventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleEventKind::AddRequested => "add-requested",
+            ScaleEventKind::Ready => "ready",
+            ScaleEventKind::DrainStarted => "drain-started",
+            ScaleEventKind::Retired => "retired",
+        }
+    }
+}
+
+/// Per-event replica-count timeline for autoscaling runs: every lifecycle
+/// transition, with the routable-replica count after it. Empty (no events)
+/// when the cluster runs without an autoscaler.
+#[derive(Debug, Clone, Default)]
+pub struct ScaleTimeline {
+    /// Routable replicas at t = 0.
+    pub initial: usize,
+    pub events: Vec<ScaleEvent>,
+}
+
+impl ScaleTimeline {
+    pub fn new(initial: usize) -> Self {
+        ScaleTimeline { initial, events: Vec::new() }
+    }
+
+    pub fn record(&mut self, time_s: f64, kind: ScaleEventKind, replica: usize, active_after: usize) {
+        self.events.push(ScaleEvent { time_s, kind, replica, active_after });
+    }
+
+    /// Step function of the routable replica count over time: starts at
+    /// (0, initial); one point per event that changed the count.
+    pub fn active_series(&self) -> Vec<(f64, usize)> {
+        let mut series = vec![(0.0, self.initial)];
+        for e in &self.events {
+            if e.active_after != series.last().expect("non-empty").1 {
+                series.push((e.time_s, e.active_after));
+            }
+        }
+        series
+    }
+
+    /// Peak routable replica count over the run.
+    pub fn max_active(&self) -> usize {
+        self.active_series().iter().map(|&(_, n)| n).max().unwrap_or(self.initial)
+    }
+
+    /// Number of events of one kind (e.g. scale-ups, completed drains).
+    pub fn count(&self, kind: ScaleEventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
     }
 }
 
@@ -298,6 +395,52 @@ mod tests {
         let mut dst = Collector::new();
         dst.merge(&src);
         assert!((dst.throughput_rps() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_e2e_filters_by_arrival() {
+        let mut c = Collector::new();
+        for i in 0..10 {
+            let mut t = RequestTrace::new(i, i as f64);
+            t.record_stage(Stage::Inference, 0.1 * (i as f64 + 1.0));
+            c.ingest(&t);
+        }
+        let mut w = c.e2e_in_window(3.0, 6.0); // arrivals 3, 4, 5
+        assert_eq!(w.len(), 3);
+        assert!((w.percentile(100.0) - 0.6).abs() < 1e-12);
+        assert!((w.percentile(1.0) - 0.4).abs() < 1e-12);
+        assert_eq!(c.e2e_in_window(100.0, 200.0).len(), 0);
+    }
+
+    #[test]
+    fn windowed_e2e_survives_merge() {
+        let mut a = Collector::new();
+        let mut b = Collector::new();
+        for (col, arrival) in [(&mut a, 1.0), (&mut b, 2.0)] {
+            let mut t = RequestTrace::new(0, arrival);
+            t.record_stage(Stage::Inference, 0.5);
+            col.ingest(&t);
+        }
+        let mut all = Collector::new();
+        all.merge(&a);
+        all.merge(&b);
+        assert_eq!(all.arrival_e2e.len(), 2);
+        assert_eq!(all.e2e_in_window(0.0, 10.0).len(), 2);
+        assert_eq!(all.e2e_in_window(1.5, 10.0).len(), 1);
+    }
+
+    #[test]
+    fn scale_timeline_series_and_counts() {
+        let mut s = ScaleTimeline::new(2);
+        s.record(1.0, ScaleEventKind::AddRequested, 2, 2); // warming, active unchanged
+        s.record(3.5, ScaleEventKind::Ready, 2, 3);
+        s.record(8.0, ScaleEventKind::DrainStarted, 0, 2);
+        s.record(9.0, ScaleEventKind::Retired, 0, 2);
+        assert_eq!(s.active_series(), vec![(0.0, 2), (3.5, 3), (8.0, 2)]);
+        assert_eq!(s.max_active(), 3);
+        assert_eq!(s.count(ScaleEventKind::AddRequested), 1);
+        assert_eq!(s.count(ScaleEventKind::Retired), 1);
+        assert_eq!(ScaleTimeline::new(4).active_series(), vec![(0.0, 4)]);
     }
 
     #[test]

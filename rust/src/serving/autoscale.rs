@@ -1,0 +1,252 @@
+//! Autoscaling policies for the cluster serving tier (paper §5 spike
+//! loads, Fig 11c; "Scalable AI Inference" replica scale-up lag).
+//!
+//! Pure decision logic, like [`super::batcher`] and [`super::router`]: the
+//! cluster engine evaluates the policy on a fixed interval with a
+//! [`ScaleSignal`] (active/warming counts, outstanding work, utilization)
+//! and gets back a [`ScaleDecision`]. The *mechanics* live in the engine:
+//!
+//!  * **Scale-up** appends a replica from the template which pays
+//!    [`Software::coldstart_s`] for the configured weight footprint before
+//!    it becomes routable — the paper's ">10 s even for a small IC model"
+//!    cold start is exactly what makes spike response hard.
+//!  * **Scale-down** is drain-on-remove: the chosen replica stops
+//!    receiving traffic, finishes its queued + in-flight requests, then
+//!    retires — so `issued == completed + dropped` holds exactly across
+//!    every scale event (no request is lost at retirement).
+//!
+//! Submissions reach this through the coordinator's `cluster_sim` job kind
+//! (see [`crate::coordinator::job`] for a YAML example).
+
+use super::cluster::ReplicaConfig;
+
+/// When to add or remove replicas.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalePolicy {
+    /// Threshold on outstanding requests (queued + in service) per
+    /// provisioned replica: scale up above `up_per_replica`, down below
+    /// `down_per_replica`. Warming replicas count as provisioned so a
+    /// burst does not trigger one add per evaluation while the first
+    /// cold start is still in progress beyond what the queue justifies.
+    QueueDepth { up_per_replica: f64, down_per_replica: f64, cooldown_s: f64 },
+    /// Threshold on the busy fraction of active replicas since the last
+    /// evaluation: scale up above `up`, down below `down` (both in [0,1]).
+    Utilization { up: f64, down: f64, cooldown_s: f64 },
+}
+
+impl ScalePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScalePolicy::QueueDepth { .. } => "queue-depth",
+            ScalePolicy::Utilization { .. } => "utilization",
+        }
+    }
+
+    pub fn cooldown_s(&self) -> f64 {
+        match *self {
+            ScalePolicy::QueueDepth { cooldown_s, .. } => cooldown_s,
+            ScalePolicy::Utilization { cooldown_s, .. } => cooldown_s,
+        }
+    }
+}
+
+/// Full autoscaler configuration for a cluster run.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    pub policy: ScalePolicy,
+    /// Never drain below this many active replicas (>= 1).
+    pub min_replicas: usize,
+    /// Never provision (active + warming) beyond this.
+    pub max_replicas: usize,
+    /// Configuration for replicas added by scale-up.
+    pub template: ReplicaConfig,
+    /// Model weight footprint: sets the cold start via
+    /// [`Software::coldstart_s`](super::backends::Software::coldstart_s).
+    pub weight_bytes: u64,
+    /// How often the policy is evaluated.
+    pub eval_interval_s: f64,
+}
+
+/// What the cluster looked like at an evaluation instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSignal {
+    /// Routable replicas.
+    pub active: usize,
+    /// Replicas still paying their cold start.
+    pub warming: usize,
+    /// Replicas draining toward retirement.
+    pub draining: usize,
+    /// Outstanding requests (queued + in service) across active replicas.
+    pub outstanding: usize,
+    /// Busy fraction of active replicas since the last evaluation, [0,1].
+    pub utilization: f64,
+}
+
+/// The policy's verdict for one evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Add one replica (it will warm up before taking traffic).
+    Add,
+    /// Drain-on-remove one active replica.
+    Remove,
+}
+
+/// Policy state machine: thresholds + cooldown bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    config: AutoscaleConfig,
+    last_scale_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(config: AutoscaleConfig) -> Autoscaler {
+        assert!(config.min_replicas >= 1, "autoscaler needs min_replicas >= 1");
+        assert!(
+            config.max_replicas >= config.min_replicas,
+            "max_replicas must be >= min_replicas"
+        );
+        assert!(config.eval_interval_s > 0.0, "eval interval must be positive");
+        Autoscaler { config, last_scale_s: f64::NEG_INFINITY }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.config
+    }
+
+    /// Evaluate the policy at `now`. At most one replica is added or
+    /// removed per call, and never within the cooldown of the previous
+    /// scale action (evaluations during cooldown hold).
+    pub fn decide(&mut self, now: f64, s: ScaleSignal) -> ScaleDecision {
+        if now - self.last_scale_s < self.config.policy.cooldown_s() {
+            return ScaleDecision::Hold;
+        }
+        let provisioned = s.active + s.warming;
+        let (want_up, want_down) = match self.config.policy {
+            ScalePolicy::QueueDepth { up_per_replica, down_per_replica, .. } => {
+                let per = s.outstanding as f64 / provisioned.max(1) as f64;
+                (per > up_per_replica, per < down_per_replica)
+            }
+            ScalePolicy::Utilization { up, down, .. } => (s.utilization > up, s.utilization < down),
+        };
+        if want_up && provisioned < self.config.max_replicas {
+            self.last_scale_s = now;
+            ScaleDecision::Add
+        } else if want_down && s.active > self.config.min_replicas && s.warming == 0 {
+            // Never drain while capacity is still warming: the add that is
+            // in flight was justified by recent load.
+            self.last_scale_s = now;
+            ScaleDecision::Remove
+        } else {
+            ScaleDecision::Hold
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::backends;
+    use crate::serving::batcher::Policy;
+    use crate::serving::service::ServiceModel;
+
+    fn template() -> ReplicaConfig {
+        ReplicaConfig {
+            software: &backends::TFS,
+            service: ServiceModel::Measured { per_batch: vec![(1, 0.005)], utilization: 0.5 },
+            policy: Policy::Single,
+            max_queue: 1024,
+        }
+    }
+
+    fn scaler(policy: ScalePolicy, min: usize, max: usize) -> Autoscaler {
+        Autoscaler::new(AutoscaleConfig {
+            policy,
+            min_replicas: min,
+            max_replicas: max,
+            template: template(),
+            weight_bytes: 100_000_000,
+            eval_interval_s: 0.5,
+        })
+    }
+
+    fn signal(active: usize, warming: usize, outstanding: usize, util: f64) -> ScaleSignal {
+        ScaleSignal { active, warming, draining: 0, outstanding, utilization: util }
+    }
+
+    #[test]
+    fn queue_depth_scales_up_above_threshold() {
+        let mut a = scaler(
+            ScalePolicy::QueueDepth { up_per_replica: 4.0, down_per_replica: 0.5, cooldown_s: 1.0 },
+            1,
+            8,
+        );
+        assert_eq!(a.decide(0.0, signal(2, 0, 20, 0.9)), ScaleDecision::Add);
+        // Cooldown: immediate re-evaluation holds even though still hot.
+        assert_eq!(a.decide(0.5, signal(2, 1, 30, 0.9)), ScaleDecision::Hold);
+        assert_eq!(a.decide(1.5, signal(2, 1, 30, 0.9)), ScaleDecision::Add);
+    }
+
+    #[test]
+    fn queue_depth_counts_warming_toward_provisioned() {
+        let mut a = scaler(
+            ScalePolicy::QueueDepth { up_per_replica: 4.0, down_per_replica: 0.5, cooldown_s: 0.0 },
+            1,
+            8,
+        );
+        // 12 outstanding over 2 active + 2 warming = 3 per replica < 4.
+        assert_eq!(a.decide(0.0, signal(2, 2, 12, 1.0)), ScaleDecision::Hold);
+        // Same queue with no warming capacity: 6 per replica -> add.
+        assert_eq!(a.decide(1.0, signal(2, 0, 12, 1.0)), ScaleDecision::Add);
+    }
+
+    #[test]
+    fn queue_depth_scales_down_when_idle() {
+        let mut a = scaler(
+            ScalePolicy::QueueDepth { up_per_replica: 4.0, down_per_replica: 0.5, cooldown_s: 0.0 },
+            2,
+            8,
+        );
+        assert_eq!(a.decide(0.0, signal(4, 0, 0, 0.02)), ScaleDecision::Remove);
+        // But never below min_replicas.
+        assert_eq!(a.decide(1.0, signal(2, 0, 0, 0.0)), ScaleDecision::Hold);
+        // And never while a replica is warming.
+        assert_eq!(a.decide(2.0, signal(4, 1, 0, 0.0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn respects_max_replicas() {
+        let mut a = scaler(
+            ScalePolicy::QueueDepth { up_per_replica: 1.0, down_per_replica: 0.1, cooldown_s: 0.0 },
+            1,
+            3,
+        );
+        assert_eq!(a.decide(0.0, signal(3, 0, 100, 1.0)), ScaleDecision::Hold);
+        assert_eq!(a.decide(1.0, signal(2, 1, 100, 1.0)), ScaleDecision::Hold);
+        assert_eq!(a.decide(2.0, signal(2, 0, 100, 1.0)), ScaleDecision::Add);
+    }
+
+    #[test]
+    fn utilization_policy_thresholds() {
+        let mut a = scaler(ScalePolicy::Utilization { up: 0.8, down: 0.3, cooldown_s: 0.0 }, 1, 4);
+        assert_eq!(a.decide(0.0, signal(2, 0, 5, 0.95)), ScaleDecision::Add);
+        assert_eq!(a.decide(1.0, signal(3, 0, 2, 0.5)), ScaleDecision::Hold);
+        assert_eq!(a.decide(2.0, signal(3, 0, 0, 0.1)), ScaleDecision::Remove);
+    }
+
+    #[test]
+    fn cooldown_applies_across_directions() {
+        let mut a = scaler(ScalePolicy::Utilization { up: 0.8, down: 0.3, cooldown_s: 5.0 }, 1, 4);
+        assert_eq!(a.decide(0.0, signal(2, 0, 5, 0.95)), ScaleDecision::Add);
+        // A crash in load right after the add does not whipsaw into a
+        // remove until the cooldown passes.
+        assert_eq!(a.decide(2.0, signal(3, 0, 0, 0.05)), ScaleDecision::Hold);
+        assert_eq!(a.decide(6.0, signal(3, 0, 0, 0.05)), ScaleDecision::Remove);
+    }
+
+    #[test]
+    #[should_panic(expected = "min_replicas")]
+    fn rejects_zero_min() {
+        let _ = scaler(ScalePolicy::Utilization { up: 0.8, down: 0.3, cooldown_s: 0.0 }, 0, 4);
+    }
+}

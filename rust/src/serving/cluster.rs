@@ -9,20 +9,34 @@
 //! case and delegates here, so every policy/overhead behaviour the
 //! software-tier figures measure carries over replica-for-replica.
 //!
+//! With an [`AutoscaleConfig`] the fleet is elastic: a [`ScalePolicy`] is
+//! evaluated on a fixed interval; scale-up appends a replica that pays
+//! [`Software::coldstart_s`] before it becomes routable (the paper's
+//! ">10 s even for a small IC model" spike-response problem), and
+//! scale-down drains-on-remove — the chosen replica stops receiving
+//! traffic, finishes queued + in-flight work, then retires — so
+//! `issued == completed + dropped` holds exactly across scale events.
+//!
 //! Metrics: each replica records its own [`ReplicaMetrics`] (collector,
 //! utilization timelines, batch sizes, local drops); the cluster-level
-//! [`Collector`] is the exact merge of the per-replica collectors.
+//! [`Collector`] is the exact merge of the per-replica collectors, and the
+//! [`ScaleTimeline`] records every replica-lifecycle transition.
 
+use super::autoscale::{Autoscaler, ScaleDecision, ScaleSignal};
 use super::backends::{DynamicBatching, Software};
 use super::batcher::{Batcher, Decision, Policy, Queued};
 use super::router::{Router, RouterPolicy};
 use super::service::ServiceModel;
-use crate::metrics::{Collector, ReplicaMetrics, RequestTrace, Stage};
+use crate::metrics::{
+    Collector, ReplicaMetrics, RequestTrace, ScaleEventKind, ScaleTimeline, Stage,
+};
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
 use crate::workload::Arrival;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+
+pub use super::autoscale::AutoscaleConfig;
 
 /// Closed-loop client retry delay after a queue rejection: the client
 /// observes the rejection and re-issues. A strictly positive backoff also
@@ -53,8 +67,11 @@ pub struct ClusterConfig {
     pub closed_loop: Option<usize>,
     /// Simulated duration; no new requests issued past this.
     pub duration_s: f64,
+    /// The initial fleet (all routable at t = 0).
     pub replicas: Vec<ReplicaConfig>,
     pub router: RouterPolicy,
+    /// Elastic-fleet policy; `None` keeps the fleet fixed.
+    pub autoscale: Option<AutoscaleConfig>,
     pub path: RequestPath,
     pub seed: u64,
 }
@@ -64,8 +81,12 @@ pub struct ClusterConfig {
 pub struct ClusterResult {
     /// Cluster-level collector: exact merge of the per-replica collectors.
     pub collector: Collector,
-    /// Per-replica metrics, indexed like `ClusterConfig::replicas`.
+    /// Per-replica metrics. The first `ClusterConfig::replicas.len()`
+    /// entries are the initial fleet; replicas added by the autoscaler
+    /// append after them in add order (indices are stable for the run).
     pub replicas: Vec<ReplicaMetrics>,
+    /// Every replica-lifecycle transition (empty without an autoscaler).
+    pub scale: ScaleTimeline,
     /// Requests rejected across all replica queues.
     pub dropped: u64,
     /// Requests issued in total (completed + dropped == issued).
@@ -103,6 +124,19 @@ pub(super) fn effective(policy: Policy, software: &Software) -> (Policy, f64) {
     }
 }
 
+/// Replica lifecycle under autoscaling. A fixed fleet is always `Active`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    /// Paying its cold start; not routable yet.
+    Warming,
+    /// Routable.
+    Active,
+    /// Drain-on-remove in progress: not routable, finishing its backlog.
+    Draining,
+    /// Drained and gone; receives no further events.
+    Retired,
+}
+
 /// One replica's live state during the run.
 struct Replica {
     batcher: Batcher,
@@ -110,13 +144,35 @@ struct Replica {
     software: &'static Software,
     service: ServiceModel,
     max_queue: usize,
+    state: ReplicaState,
     busy: bool,
     queued: usize,
-    in_flight: Vec<(u64, f64)>, // (request id, service start)
+    in_flight: Vec<(u64, f64, f64)>, // (request id, service start, enqueue time)
+    /// Busy seconds accrued since the last autoscaler evaluation (batches
+    /// are charged at dispatch; one spanning an evaluation boundary counts
+    /// toward the interval it started in).
+    busy_s_since_eval: f64,
     metrics: ReplicaMetrics,
 }
 
 impl Replica {
+    fn new(rc: &ReplicaConfig, state: ReplicaState, horizon_s: f64) -> Replica {
+        let (policy, penalty_s) = effective(rc.policy, rc.software);
+        Replica {
+            batcher: Batcher::new(policy),
+            penalty_s,
+            software: rc.software,
+            service: rc.service.clone(),
+            max_queue: rc.max_queue,
+            state,
+            busy: false,
+            queued: 0,
+            in_flight: Vec::new(),
+            busy_s_since_eval: 0.0,
+            metrics: ReplicaMetrics::new(horizon_s, 0.5),
+        }
+    }
+
     /// Requests this replica is responsible for right now (the router's
     /// load signal): queued + in service.
     fn outstanding(&self) -> usize {
@@ -132,6 +188,10 @@ enum Event {
     Wake { replica: usize, scheduled_for: f64 },
     /// One replica finishes its in-flight batch.
     ServerFree { replica: usize },
+    /// A warming replica finished its cold start and becomes routable.
+    ReplicaReady { replica: usize },
+    /// Periodic autoscaler evaluation.
+    ScaleEval,
 }
 
 /// f64 ordered key for the event heap; the sequence number breaks ties
@@ -190,14 +250,19 @@ fn start_batch(
     r.metrics.timeline.record_busy(now, service, util);
     r.metrics.busy_timeline.record_busy(now, service, 1.0);
     r.metrics.batch_sizes.push(b);
+    r.busy_s_since_eval += service;
     for q in &batch {
         let trace = traces.get_mut(&q.id).expect("trace");
         // Batching stage: enqueue -> service start.
         trace.record_stage(Stage::Batching, now - q.enqueue_s);
-        r.in_flight.push((q.id, now));
+        r.in_flight.push((q.id, now, q.enqueue_s));
     }
     r.busy = true;
     push(heap, now + service, Event::ServerFree { replica: ri }, seq);
+}
+
+fn count_state(replicas: &[Replica], state: ReplicaState) -> usize {
+    replicas.iter().filter(|r| r.state == state).count()
 }
 
 /// Run the cluster simulation.
@@ -209,21 +274,16 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     let mut replicas: Vec<Replica> = config
         .replicas
         .iter()
-        .map(|rc| {
-            let (policy, penalty_s) = effective(rc.policy, rc.software);
-            Replica {
-                batcher: Batcher::new(policy),
-                penalty_s,
-                software: rc.software,
-                service: rc.service.clone(),
-                max_queue: rc.max_queue,
-                busy: false,
-                queued: 0,
-                in_flight: Vec::new(),
-                metrics: ReplicaMetrics::new(horizon_s, 0.5),
-            }
-        })
+        .map(|rc| Replica::new(rc, ReplicaState::Active, horizon_s))
         .collect();
+    let mut scaler = config.autoscale.clone().map(Autoscaler::new);
+    if let Some(s) = &scaler {
+        assert!(
+            config.replicas.len() >= s.config().min_replicas,
+            "initial fleet below min_replicas"
+        );
+    }
+    let mut scale = ScaleTimeline::new(replicas.len());
 
     let mut heap: Heap = BinaryHeap::new();
     let mut seq = 0u64;
@@ -263,16 +323,33 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         }
     }
 
-    // Scratch load vector, reused across events (one allocation per run,
-    // not per request — this sits on the DES hot path).
+    // First autoscaler evaluation one interval in.
+    if let Some(s) = &scaler {
+        let interval = s.config().eval_interval_s;
+        if interval < config.duration_s {
+            push(&mut heap, interval, Event::ScaleEval, &mut seq);
+        }
+    }
+
+    // Scratch load/candidate vectors, reused across events (one allocation
+    // per run, not per request — this sits on the DES hot path).
     let mut outstanding: Vec<usize> = Vec::with_capacity(replicas.len());
+    let mut candidates: Vec<usize> = Vec::with_capacity(replicas.len());
 
     while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
         match event {
             Event::Enqueue { id } => {
                 outstanding.clear();
                 outstanding.extend(replicas.iter().map(|r| r.outstanding()));
-                let ri = router.route(&outstanding);
+                candidates.clear();
+                candidates.extend(
+                    replicas
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.state == ReplicaState::Active)
+                        .map(|(i, _)| i),
+                );
+                let ri = router.route_among(now, &candidates, &outstanding);
                 let r = &mut replicas[ri];
                 if r.queued >= r.max_queue {
                     // Overloaded replica: reject. The trace leaves the map
@@ -307,7 +384,10 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 }
             }
             Event::Wake { replica: ri, scheduled_for } => {
-                if replicas[ri].busy || scheduled_for < now - 1e-12 {
+                if replicas[ri].state == ReplicaState::Retired
+                    || replicas[ri].busy
+                    || scheduled_for < now - 1e-12
+                {
                     continue; // busy replica polls again at ServerFree
                 }
                 match replicas[ri].batcher.on_wake(now) {
@@ -327,13 +407,17 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 replicas[ri].busy = false;
                 // Complete in-flight requests: inference + request overhead
                 // + post-processing, then collect on this replica.
-                let finished: Vec<(u64, f64)> = replicas[ri].in_flight.drain(..).collect();
+                let finished: Vec<(u64, f64, f64)> = replicas[ri].in_flight.drain(..).collect();
                 let overhead = replicas[ri].software.request_overhead_s;
-                for (id, started) in finished {
+                for (id, started, enqueued) in finished {
                     let mut trace = traces.remove(&id).expect("trace");
                     trace.record_stage(Stage::Inference, now - started + overhead);
                     let (_, _, post) = config.path.sample(&mut rng);
                     trace.record_stage(Stage::PostProcess, post);
+                    // Latency-aware routing signal: replica residence time
+                    // (queue wait + service + overhead), what a
+                    // response-time probe at the routing tier would see.
+                    router.observe(ri, now - enqueued + overhead);
                     replicas[ri].metrics.collector.ingest(&trace);
                     // Closed loop: this client's next request enters now
                     // (and is routed fresh at its enqueue time).
@@ -352,6 +436,91 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     }
                     Decision::Wait => {}
                 }
+                // Drain-on-remove completes: a draining replica with no
+                // queued or in-flight work retires here, after every
+                // accepted request finished (conservation holds exactly).
+                if replicas[ri].state == ReplicaState::Draining
+                    && !replicas[ri].busy
+                    && replicas[ri].outstanding() == 0
+                {
+                    replicas[ri].state = ReplicaState::Retired;
+                    let active = count_state(&replicas, ReplicaState::Active);
+                    scale.record(now, ScaleEventKind::Retired, ri, active);
+                }
+            }
+            Event::ReplicaReady { replica: ri } => {
+                debug_assert_eq!(replicas[ri].state, ReplicaState::Warming);
+                replicas[ri].state = ReplicaState::Active;
+                let active = count_state(&replicas, ReplicaState::Active);
+                scale.record(now, ScaleEventKind::Ready, ri, active);
+            }
+            Event::ScaleEval => {
+                let Some(scaler) = scaler.as_mut() else { continue };
+                let interval = scaler.config().eval_interval_s;
+                let active = count_state(&replicas, ReplicaState::Active);
+                let warming = count_state(&replicas, ReplicaState::Warming);
+                let draining = count_state(&replicas, ReplicaState::Draining);
+                let mut queued_total = 0usize;
+                let mut busy_total = 0.0f64;
+                for r in replicas.iter_mut() {
+                    if r.state == ReplicaState::Active {
+                        queued_total += r.outstanding();
+                        busy_total += r.busy_s_since_eval.min(interval);
+                    }
+                    // Busy seconds beyond this interval carry over: a batch
+                    // longer than the eval interval keeps its replica
+                    // reported busy across the evaluations it spans,
+                    // instead of one saturated reading followed by phantom
+                    // idleness (which would drain a busy replica mid-burst
+                    // under the utilization policy).
+                    r.busy_s_since_eval = (r.busy_s_since_eval - interval).max(0.0);
+                }
+                let utilization = if active == 0 {
+                    0.0
+                } else {
+                    (busy_total / (interval * active as f64)).min(1.0)
+                };
+                let signal = ScaleSignal {
+                    active,
+                    warming,
+                    draining,
+                    outstanding: queued_total,
+                    utilization,
+                };
+                match scaler.decide(now, signal) {
+                    ScaleDecision::Add => {
+                        let cfg = scaler.config();
+                        let coldstart = cfg.template.software.coldstart_s(cfg.weight_bytes);
+                        let ri = replicas.len();
+                        replicas.push(Replica::new(&cfg.template, ReplicaState::Warming, horizon_s));
+                        scale.record(now, ScaleEventKind::AddRequested, ri, active);
+                        push(&mut heap, now + coldstart, Event::ReplicaReady { replica: ri }, &mut seq);
+                    }
+                    ScaleDecision::Remove => {
+                        // Drain the least-loaded active replica (cheapest
+                        // drain); prefer the highest index so the initial
+                        // fleet survives symmetric-load scale-downs.
+                        let victim = replicas
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, r)| r.state == ReplicaState::Active)
+                            .min_by_key(|(i, r)| (r.outstanding(), Reverse(*i)))
+                            .map(|(i, _)| i)
+                            .expect("decide() returned Remove with no active replica");
+                        replicas[victim].state = ReplicaState::Draining;
+                        scale.record(now, ScaleEventKind::DrainStarted, victim, active - 1);
+                        // Already idle and empty: retire on the spot.
+                        if !replicas[victim].busy && replicas[victim].outstanding() == 0 {
+                            replicas[victim].state = ReplicaState::Retired;
+                            scale.record(now, ScaleEventKind::Retired, victim, active - 1);
+                        }
+                    }
+                    ScaleDecision::Hold => {}
+                }
+                let next = now + interval;
+                if next < config.duration_s {
+                    push(&mut heap, next, Event::ScaleEval, &mut seq);
+                }
             }
         }
     }
@@ -366,6 +535,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     ClusterResult {
         collector,
         replicas: replicas.into_iter().map(|r| r.metrics).collect(),
+        scale,
         dropped,
         issued: next_id,
     }
@@ -375,6 +545,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
 mod tests {
     use super::*;
     use crate::pipeline::{Processors, RequestPath};
+    use crate::serving::autoscale::ScalePolicy;
     use crate::serving::backends;
     use crate::workload::{generate, Pattern};
 
@@ -397,6 +568,7 @@ mod tests {
             duration_s: duration,
             replicas: (0..n).map(|_| replica(5.0)).collect(),
             router,
+            autoscale: None,
             path: RequestPath::local(Processors::none()),
             seed: 5,
         }
@@ -432,6 +604,7 @@ mod tests {
             RouterPolicy::RoundRobin,
             RouterPolicy::LeastOutstanding,
             RouterPolicy::PowerOfTwoChoices { seed: 17 },
+            RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.25 },
         ] {
             let (a, b) = (run(&base(3, 150.0, 10.0, router)), run(&base(3, 150.0, 10.0, router)));
             assert_eq!(a.collector.completed, b.collector.completed, "{}", router.label());
@@ -481,6 +654,27 @@ mod tests {
     }
 
     #[test]
+    fn ewma_router_shifts_load_off_slow_replica() {
+        // Same heterogeneous pair: the latency-aware router should finish
+        // clearly more work on the fast replica than oblivious cycling.
+        let mut rr = base(2, 150.0, 20.0, RouterPolicy::RoundRobin);
+        let mut ewma = base(2, 150.0, 20.0, RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.1 });
+        for cfg in [&mut rr, &mut ewma] {
+            cfg.replicas = vec![replica(2.0), replica(20.0)];
+        }
+        let (r_rr, r_ew) = (run(&rr), run(&ewma));
+        let fast_share = |r: &ClusterResult| {
+            r.replicas[0].collector.completed as f64 / r.collector.completed.max(1) as f64
+        };
+        assert!(
+            fast_share(&r_ew) > fast_share(&r_rr) + 0.1,
+            "ewma fast share {} vs rr {}",
+            fast_share(&r_ew),
+            fast_share(&r_rr)
+        );
+    }
+
+    #[test]
     fn closed_loop_cluster_sustains_concurrency() {
         let mut cfg = base(2, 1.0, 10.0, RouterPolicy::LeastOutstanding);
         cfg.arrivals = vec![];
@@ -499,5 +693,51 @@ mod tests {
             assert!(m.busy_timeline.mean() > 0.01, "replica {i} idle timeline");
             assert!(m.mean_batch() >= 1.0, "replica {i}");
         }
+    }
+
+    #[test]
+    fn fixed_fleet_records_no_scale_events() {
+        let r = run(&base(3, 100.0, 10.0, RouterPolicy::RoundRobin));
+        assert_eq!(r.scale.initial, 3);
+        assert!(r.scale.events.is_empty());
+        assert_eq!(r.scale.max_active(), 3);
+    }
+
+    #[test]
+    fn autoscale_adds_capacity_under_spike_and_drains_after() {
+        // 1 replica at ~200 rps capacity; a 600 rps burst forces scale-up,
+        // and the post-burst lull forces drain-on-remove back toward min.
+        let mut cfg = base(1, 60.0, 60.0, RouterPolicy::LeastOutstanding);
+        cfg.arrivals = generate(
+            &Pattern::Spike { base_rate: 60.0, burst_rate: 600.0, start_s: 10.0, duration_s: 10.0 },
+            60.0,
+            21,
+        );
+        cfg.autoscale = Some(AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth {
+                up_per_replica: 6.0,
+                down_per_replica: 0.5,
+                cooldown_s: 1.0,
+            },
+            min_replicas: 1,
+            max_replicas: 6,
+            template: replica(5.0),
+            weight_bytes: 50_000_000,
+            eval_interval_s: 0.5,
+        });
+        let r = run(&cfg);
+        // Conservation holds exactly across every scale event.
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
+        assert!(r.scale.count(ScaleEventKind::AddRequested) >= 1, "no scale-up under burst");
+        assert!(r.scale.count(ScaleEventKind::Ready) >= 1);
+        assert!(
+            r.scale.count(ScaleEventKind::Retired) >= 1,
+            "no drain-on-remove after the burst: {:?}",
+            r.scale.events
+        );
+        assert!(r.scale.max_active() > 1);
+        // Retired replicas completed work and kept it (metrics preserved).
+        let completed: u64 = r.replicas.iter().map(|m| m.collector.completed).sum();
+        assert_eq!(completed, r.collector.completed);
     }
 }

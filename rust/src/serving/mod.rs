@@ -9,10 +9,14 @@
 //!
 //! Scale-out structure: `cluster` simulates N replicas — each with its own
 //! [`Batcher`] + [`ServiceModel`] + [`Software`], heterogeneous mixes
-//! allowed — behind a `router` (round-robin, least-outstanding, or seeded
-//! power-of-two-choices). `sim::run` is the N=1 special case and delegates
-//! to it.
+//! allowed — behind a `router` (round-robin, least-outstanding, seeded
+//! power-of-two-choices, or latency-aware EWMA over sampled signals).
+//! `sim::run` is the N=1 special case and delegates to it. The fleet is
+//! elastic when an `autoscale` policy is attached: scale-up pays the
+//! software's cold start before taking traffic; scale-down drains the
+//! replica before retiring it (no request lost at a scale event).
 
+pub mod autoscale;
 pub mod backends;
 pub mod batcher;
 pub mod cluster;
@@ -21,6 +25,7 @@ pub mod router;
 pub mod service;
 pub mod sim;
 
+pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision, ScalePolicy, ScaleSignal};
 pub use backends::{DynamicBatching, Software};
 pub use batcher::{Batcher, Decision, Policy};
 pub use cluster::{ClusterConfig, ClusterResult, ReplicaConfig};

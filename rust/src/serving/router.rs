@@ -2,7 +2,7 @@
 //!
 //! The router is pure decision logic, like [`super::batcher`]: given the
 //! per-replica outstanding-request counts (queued + in service), pick the
-//! replica for the next request. Three classic policies:
+//! replica for the next request. Four policies:
 //!
 //!  * `RoundRobin` — oblivious cycling; the baseline every load balancer
 //!    ships with. Suffers on heterogeneous replicas: a slow replica gets
@@ -12,6 +12,17 @@
 //!  * `PowerOfTwoChoices` — sample two distinct replicas (seeded, so runs
 //!    are reproducible), send to the less loaded; most of JSQ's benefit at
 //!    O(1) state probes (Mitzenmacher's classic result).
+//!  * `LatencyEwma` — latency-aware: pick the replica minimizing
+//!    `ewma_latency × (outstanding + 1)` (least expected delay), where the
+//!    per-replica latency signal is an EWMA of observed replica residence
+//!    times. The signal the routing decision sees is a *snapshot* refreshed
+//!    only every `stale_s` seconds, modelling probe cost: real load
+//!    balancers sample backend latency periodically, not per request.
+//!
+//! With autoscaling, the routable set changes over the run (warming and
+//! draining replicas take no new traffic), so routing goes through
+//! [`Router::route_among`] with an explicit candidate list;
+//! [`Router::route`] is the fixed-fleet convenience wrapper.
 
 use crate::util::rng::Pcg64;
 
@@ -26,6 +37,16 @@ pub enum RouterPolicy {
     /// Sample two distinct replicas with a PRNG seeded at `seed`; send to
     /// the less loaded of the pair (ties to the first sampled).
     PowerOfTwoChoices { seed: u64 },
+    /// Least expected delay from EWMA latency signals: score each
+    /// candidate `ewma × (outstanding + 1)` and pick the minimum (ties
+    /// break to fewer outstanding, then lowest index). `alpha` is the
+    /// EWMA smoothing factor in (0, 1]; the decision reads a signal
+    /// snapshot refreshed every `stale_s` seconds (0 = always fresh).
+    /// Replicas with no observations yet are scored at half the best
+    /// observed signal — optimistic enough that fresh (just-warmed)
+    /// replicas attract first contact, while queue growth still pushes
+    /// traffic back to the rest of the fleet.
+    LatencyEwma { alpha: f64, stale_s: f64 },
 }
 
 impl RouterPolicy {
@@ -34,16 +55,23 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "round-robin",
             RouterPolicy::LeastOutstanding => "least-outstanding",
             RouterPolicy::PowerOfTwoChoices { .. } => "power-of-two",
+            RouterPolicy::LatencyEwma { .. } => "latency-ewma",
         }
     }
 }
 
-/// Routing state machine: policy + round-robin cursor + sampling PRNG.
+/// Routing state machine: policy + round-robin cursor + sampling PRNG +
+/// per-replica EWMA latency signals (live and sampled snapshot).
 #[derive(Debug, Clone)]
 pub struct Router {
     policy: RouterPolicy,
     next: usize,
     rng: Pcg64,
+    /// Live EWMA per replica, updated on every observation.
+    live: Vec<Option<f64>>,
+    /// What routing decisions see: refreshed from `live` every `stale_s`.
+    snapshot: Vec<Option<f64>>,
+    last_refresh_s: f64,
 }
 
 impl Router {
@@ -53,44 +81,120 @@ impl Router {
             _ => 0,
         };
         // Dedicated stream: routing draws never perturb workload sampling.
-        Router { policy, next: 0, rng: Pcg64::new(seed, 0x9e3779b97f4a7c15) }
+        Router {
+            policy,
+            next: 0,
+            rng: Pcg64::new(seed, 0x9e3779b97f4a7c15),
+            live: Vec::new(),
+            snapshot: Vec::new(),
+            last_refresh_s: f64::NEG_INFINITY,
+        }
     }
 
     pub fn policy(&self) -> RouterPolicy {
         self.policy
     }
 
-    /// Pick the replica for the next request. `outstanding[i]` is replica
-    /// i's queued + in-service request count.
+    /// Feed one observed replica latency (residence time: queue wait +
+    /// service) into the live EWMA. No-op for latency-oblivious policies.
+    pub fn observe(&mut self, replica: usize, latency_s: f64) {
+        let RouterPolicy::LatencyEwma { alpha, .. } = self.policy else {
+            return;
+        };
+        if self.live.len() <= replica {
+            self.live.resize(replica + 1, None);
+        }
+        self.live[replica] = Some(match self.live[replica] {
+            Some(prev) => alpha * latency_s + (1.0 - alpha) * prev,
+            None => latency_s,
+        });
+    }
+
+    /// The EWMA snapshot routing currently sees for a replica (testing /
+    /// introspection); `None` before any refresh that included it.
+    pub fn signal(&self, replica: usize) -> Option<f64> {
+        self.snapshot.get(replica).copied().flatten()
+    }
+
+    fn maybe_refresh(&mut self, now: f64) {
+        let RouterPolicy::LatencyEwma { stale_s, .. } = self.policy else {
+            return;
+        };
+        if now - self.last_refresh_s >= stale_s {
+            self.snapshot.clear();
+            self.snapshot.extend_from_slice(&self.live);
+            self.last_refresh_s = now;
+        }
+    }
+
+    /// Pick the replica for the next request over a fixed fleet:
+    /// `outstanding[i]` is replica i's queued + in-service count and every
+    /// replica is routable.
     pub fn route(&mut self, outstanding: &[usize]) -> usize {
-        let n = outstanding.len();
-        assert!(n > 0, "router needs at least one replica");
+        let candidates: Vec<usize> = (0..outstanding.len()).collect();
+        self.route_among(0.0, &candidates, outstanding)
+    }
+
+    /// Pick the replica for the next request among `candidates` (the
+    /// routable subset, e.g. active replicas under autoscaling), reading
+    /// per-replica load from `outstanding` (indexed by global replica
+    /// index). Returns a global replica index. `now` drives the staleness
+    /// of the latency snapshot for `LatencyEwma`.
+    pub fn route_among(&mut self, now: f64, candidates: &[usize], outstanding: &[usize]) -> usize {
+        let n = candidates.len();
+        assert!(n > 0, "router needs at least one routable replica");
         match self.policy {
             RouterPolicy::RoundRobin => {
                 let i = self.next % n;
-                self.next = (self.next + 1) % n;
-                i
+                self.next = self.next.wrapping_add(1);
+                candidates[i]
             }
-            RouterPolicy::LeastOutstanding => outstanding
+            RouterPolicy::LeastOutstanding => candidates
                 .iter()
-                .enumerate()
-                .min_by_key(|&(i, &load)| (load, i))
-                .map(|(i, _)| i)
+                .copied()
+                .min_by_key(|&i| (outstanding[i], i))
                 .expect("non-empty"),
             RouterPolicy::PowerOfTwoChoices { .. } => {
                 if n == 1 {
-                    return 0;
+                    return candidates[0];
                 }
                 let a = self.rng.next_below(n as u64) as usize;
                 let mut b = self.rng.next_below(n as u64 - 1) as usize;
                 if b >= a {
                     b += 1; // distinct second choice
                 }
-                if outstanding[b] < outstanding[a] {
-                    b
+                if outstanding[candidates[b]] < outstanding[candidates[a]] {
+                    candidates[b]
                 } else {
-                    a
+                    candidates[a]
                 }
+            }
+            RouterPolicy::LatencyEwma { .. } => {
+                self.maybe_refresh(now);
+                // Unobserved replicas (e.g. just warmed) default to half
+                // the best observed signal: optimistic enough to win first
+                // contact against equally-loaded peers, but their score
+                // still grows with queue depth — a flat 0 would absorb
+                // 100% of traffic until the next snapshot refresh no
+                // matter how deep the new replica's queue grew.
+                let best = self
+                    .snapshot
+                    .iter()
+                    .flatten()
+                    .fold(f64::INFINITY, |acc, &v| acc.min(v));
+                let default = if best.is_finite() { best * 0.5 } else { 0.0 };
+                candidates
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        let score = |i: usize| {
+                            let ewma =
+                                self.snapshot.get(i).copied().flatten().unwrap_or(default);
+                            (ewma * (outstanding[i] as f64 + 1.0), outstanding[i], i)
+                        };
+                        score(a).partial_cmp(&score(b)).expect("NaN routing score")
+                    })
+                    .expect("non-empty")
             }
         }
     }
@@ -149,6 +253,7 @@ mod tests {
             RouterPolicy::RoundRobin,
             RouterPolicy::LeastOutstanding,
             RouterPolicy::PowerOfTwoChoices { seed: 3 },
+            RouterPolicy::LatencyEwma { alpha: 0.5, stale_s: 0.0 },
         ] {
             let mut r = Router::new(policy);
             let load = [4, 0, 7];
@@ -156,5 +261,74 @@ mod tests {
                 assert!(r.route(&load) < 3, "{}", policy.label());
             }
         }
+    }
+
+    #[test]
+    fn route_among_respects_candidate_set() {
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 11 },
+            RouterPolicy::LatencyEwma { alpha: 0.5, stale_s: 0.0 },
+        ] {
+            let mut r = Router::new(policy);
+            let load = [0, 9, 0, 9, 0];
+            // Only replicas 1 and 3 routable (e.g. others draining).
+            for _ in 0..20 {
+                let pick = r.route_among(0.0, &[1, 3], &load);
+                assert!(pick == 1 || pick == 3, "{}: picked {pick}", policy.label());
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_within_candidates() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let load = [0, 0, 0, 0];
+        let picks: Vec<usize> = (0..4).map(|_| r.route_among(0.0, &[1, 3], &load)).collect();
+        assert_eq!(picks, vec![1, 3, 1, 3]);
+    }
+
+    #[test]
+    fn ewma_prefers_fast_replica() {
+        let mut r = Router::new(RouterPolicy::LatencyEwma { alpha: 0.5, stale_s: 0.0 });
+        r.observe(0, 0.100); // slow
+        r.observe(1, 0.010); // fast
+        let picks: Vec<usize> = (0..5).map(|_| r.route(&[1, 1])).collect();
+        assert!(picks.iter().all(|&p| p == 1), "{picks:?}");
+        // But queue depth still matters: fast replica swamped -> slow wins.
+        // score(0) = 0.1 * 2 = 0.2 < score(1) = 0.01 * 31 = 0.31.
+        assert_eq!(r.route(&[1, 30]), 0);
+    }
+
+    #[test]
+    fn ewma_smooths_observations() {
+        let mut r = Router::new(RouterPolicy::LatencyEwma { alpha: 0.5, stale_s: 0.0 });
+        r.observe(0, 0.100);
+        r.observe(0, 0.200);
+        // Snapshot refreshes on route: ewma = 0.5*0.2 + 0.5*0.1 = 0.15.
+        let _ = r.route(&[0]);
+        assert!((r.signal(0).unwrap() - 0.150).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_stale_snapshot_ignores_fresh_observations() {
+        let mut r = Router::new(RouterPolicy::LatencyEwma { alpha: 1.0, stale_s: 100.0 });
+        // First route at t=0 refreshes an (empty) snapshot.
+        assert_eq!(r.route_among(0.0, &[0, 1], &[0, 0]), 0);
+        // Replica 0 then turns slow, but the snapshot is stale for 100 s:
+        // routing still treats both as unknown and ties to index 0.
+        r.observe(0, 10.0);
+        assert_eq!(r.route_among(1.0, &[0, 1], &[0, 0]), 0, "stale signal must lag");
+        // Past the staleness horizon the refresh lands and 0 is avoided.
+        assert_eq!(r.route_among(101.0, &[0, 1], &[0, 0]), 1);
+    }
+
+    #[test]
+    fn ewma_unobserved_replica_gets_optimistic_first_contact() {
+        let mut r = Router::new(RouterPolicy::LatencyEwma { alpha: 0.5, stale_s: 0.0 });
+        r.observe(0, 0.050);
+        // Replica 1 (fresh, e.g. just warmed) has no signal: score 0 wins.
+        assert_eq!(r.route(&[0, 0]), 1);
     }
 }

@@ -89,6 +89,7 @@ pub fn run(config: &SimConfig) -> SimResult {
             max_queue: config.max_queue,
         }],
         router: RouterPolicy::RoundRobin,
+        autoscale: None,
         path: config.path,
         seed: config.seed,
     };

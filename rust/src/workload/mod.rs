@@ -63,15 +63,25 @@ pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
         }
         Pattern::Spike { base_rate, burst_rate, start_s, duration_s: burst_len } => {
             assert!(*base_rate > 0.0 && *burst_rate > 0.0);
+            // Lewis–Shedler thinning: sample candidates from a homogeneous
+            // Poisson process at the envelope rate λ_max and accept each at
+            // probability λ(t)/λ_max. Sampling each gap at the rate in
+            // effect at the gap's *start* (the old scheme) lagged the burst
+            // onset by up to one base-rate gap and overshot past its end;
+            // thinning realizes the exact inhomogeneous process, so the
+            // rate switches at the window boundaries to the sample.
+            let lambda_max = base_rate.max(*burst_rate);
             let mut t = 0.0;
             loop {
-                let in_burst = t >= *start_s && t < start_s + burst_len;
-                let rate = if in_burst { *burst_rate } else { *base_rate };
-                t += rng.exponential(rate);
+                t += rng.exponential(lambda_max);
                 if t >= duration_s {
                     break;
                 }
-                push(t, &mut out);
+                let in_burst = t >= *start_s && t < start_s + burst_len;
+                let rate = if in_burst { *burst_rate } else { *base_rate };
+                if rng.next_f64() < rate / lambda_max {
+                    push(t, &mut out);
+                }
             }
         }
         Pattern::ClosedLoop { concurrency } => {
@@ -80,12 +90,15 @@ pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
             }
         }
         Pattern::Trace { times_s } => {
-            for &t in times_s {
-                if t < duration_s {
-                    push(t, &mut out);
-                }
+            // Sort the clipped timestamps *before* assigning ids: every
+            // other pattern emits ids monotonic in time, and downstream
+            // consumers key on that (assigning ids first, then sorting,
+            // produced id order != time order for unsorted traces).
+            let mut times: Vec<f64> = times_s.iter().copied().filter(|&t| t < duration_s).collect();
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for t in times {
+                push(t, &mut out);
             }
-            out.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
         }
     }
     out
@@ -94,6 +107,12 @@ pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
 /// Observed average rate of an arrival vector (requests/second).
 pub fn observed_rate(arrivals: &[Arrival], duration_s: f64) -> f64 {
     arrivals.len() as f64 / duration_s
+}
+
+/// Observed rate within the window [lo_s, hi_s) — burst-window checks.
+pub fn observed_rate_in(arrivals: &[Arrival], lo_s: f64, hi_s: f64) -> f64 {
+    assert!(hi_s > lo_s);
+    arrivals.iter().filter(|a| a.time_s >= lo_s && a.time_s < hi_s).count() as f64 / (hi_s - lo_s)
 }
 
 #[cfg(test)]
@@ -166,9 +185,79 @@ mod tests {
 
     #[test]
     fn ids_sequential() {
-        let a = generate(&Pattern::Poisson { rate: 50.0 }, 10.0, 3);
-        for (i, x) in a.iter().enumerate() {
-            assert_eq!(x.id, i as u64);
+        let patterns: [Pattern; 2] = [
+            Pattern::Poisson { rate: 50.0 },
+            // Regression: Trace used to assign ids before sorting, so ids
+            // were non-monotonic in time for unsorted input.
+            Pattern::Trace { times_s: vec![5.0, 1.0, 9.0, 3.0, 0.5, 7.0] },
+        ];
+        for p in &patterns {
+            let a = generate(p, 10.0, 3);
+            for (i, x) in a.iter().enumerate() {
+                assert_eq!(x.id, i as u64, "{p:?}");
+            }
+            assert!(
+                a.windows(2).all(|w| w[0].time_s <= w[1].time_s),
+                "{p:?}: ids must be monotone in time"
+            );
         }
+    }
+
+    #[test]
+    fn spike_realized_rate_exact_at_window_boundaries() {
+        // Regression (burst-onset lag): sampling each gap at the rate in
+        // effect at its start delayed the burst by up to ~1/base_rate
+        // (50 ms here) and overshot its end. Thinning realizes the target
+        // rate inside [start, start+duration) and the base rate outside.
+        let (base, burst, start, len, total) = (20.0, 200.0, 30.0, 10.0, 60.0);
+        for seed in [1u64, 7, 42, 99] {
+            let a = generate(
+                &Pattern::Spike { base_rate: base, burst_rate: burst, start_s: start, duration_s: len },
+                total,
+                seed,
+            );
+            let in_burst = observed_rate_in(&a, start, start + len);
+            let before = observed_rate_in(&a, 0.0, start);
+            let after = observed_rate_in(&a, start + len, total);
+            assert!(
+                (in_burst - burst).abs() < 0.12 * burst,
+                "seed {seed}: burst-window rate {in_burst} vs target {burst}"
+            );
+            assert!(
+                (before - base).abs() < 0.35 * base,
+                "seed {seed}: pre-burst rate {before} vs target {base}"
+            );
+            assert!(
+                (after - base).abs() < 0.35 * base,
+                "seed {seed}: post-burst rate {after} vs target {base}"
+            );
+            // Burst onset is sharp: at 200 rps the first in-window arrival
+            // lands within a few mean gaps of the boundary (the buggy
+            // generator lagged by up to a full 50 ms base-rate gap).
+            let first_in = a.iter().map(|x| x.time_s).find(|&t| t >= start).unwrap();
+            assert!(first_in < start + 0.25, "seed {seed}: burst onset at {first_in}");
+        }
+    }
+
+    #[test]
+    fn spike_reduces_to_poisson_when_rates_equal() {
+        // With burst_rate == base_rate, thinning accepts everything and the
+        // process is plain Poisson at that rate.
+        let a = generate(
+            &Pattern::Spike { base_rate: 80.0, burst_rate: 80.0, start_s: 10.0, duration_s: 5.0 },
+            60.0,
+            11,
+        );
+        let rate = observed_rate(&a, 60.0);
+        assert!((rate - 80.0).abs() < 6.0, "rate {rate}");
+    }
+
+    #[test]
+    fn trace_ids_monotone_after_sort() {
+        let a = generate(&Pattern::Trace { times_s: vec![5.0, 1.0, 99.0, 3.0] }, 10.0, 0);
+        let ids: Vec<u64> = a.iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        let times: Vec<f64> = a.iter().map(|x| x.time_s).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
     }
 }

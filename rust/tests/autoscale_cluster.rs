@@ -1,0 +1,198 @@
+//! Integration tests for the elastic cluster tier: autoscaling under
+//! spike load with cold-start costs, drain-on-remove conservation, the
+//! cold-start-profile ordering the fig17 bench asserts, and the
+//! coordinator's `cluster_sim` submission path end to end.
+
+use inferbench::coordinator::{Leader, LeaderConfig};
+use inferbench::metrics::ScaleEventKind;
+use inferbench::perfdb::Query;
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
+use inferbench::serving::cluster::{run as run_cluster, ClusterConfig, ClusterResult, ReplicaConfig};
+use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel, Software};
+use inferbench::workload::{generate, Pattern};
+
+const WEIGHT_BYTES: u64 = 100_000_000;
+
+fn replica(software: &'static Software) -> ReplicaConfig {
+    ReplicaConfig {
+        software,
+        service: ServiceModel::Measured { per_batch: vec![(1, 0.005)], utilization: 0.6 },
+        policy: Policy::Single,
+        max_queue: 200_000,
+    }
+}
+
+fn spike_config(software: &'static Software, autoscale: Option<AutoscaleConfig>) -> ClusterConfig {
+    ClusterConfig {
+        arrivals: generate(
+            &Pattern::Spike { base_rate: 120.0, burst_rate: 700.0, start_s: 15.0, duration_s: 10.0 },
+            50.0,
+            909,
+        ),
+        closed_loop: None,
+        duration_s: 50.0,
+        replicas: vec![replica(software), replica(software)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale,
+        path: RequestPath::local(Processors::none()),
+        seed: 909,
+    }
+}
+
+fn queue_depth_scaler(software: &'static Software) -> AutoscaleConfig {
+    AutoscaleConfig {
+        policy: ScalePolicy::QueueDepth {
+            up_per_replica: 6.0,
+            down_per_replica: 0.5,
+            cooldown_s: 1.0,
+        },
+        min_replicas: 2,
+        max_replicas: 8,
+        template: replica(software),
+        weight_bytes: WEIGHT_BYTES,
+        eval_interval_s: 0.5,
+    }
+}
+
+fn burst_p99(r: &ClusterResult) -> f64 {
+    r.collector.e2e_in_window(15.0, 25.0).percentile(99.0)
+}
+
+#[test]
+fn autoscale_conserves_every_request_across_scale_events() {
+    let r = run_cluster(&spike_config(&backends::TFS, Some(queue_depth_scaler(&backends::TFS))));
+    // The invariant the drain-on-remove design exists for: exact.
+    assert_eq!(r.collector.completed + r.dropped, r.issued);
+    // Nothing was dropped here (queues are deep), so every accepted
+    // request completed — including those queued on retired replicas.
+    assert_eq!(r.dropped, 0);
+    assert_eq!(r.collector.completed, r.issued);
+    // Scale events actually happened in both directions.
+    assert!(r.scale.count(ScaleEventKind::AddRequested) >= 1);
+    assert!(r.scale.count(ScaleEventKind::Ready) >= 1);
+    assert!(r.scale.count(ScaleEventKind::DrainStarted) >= 1);
+    assert!(r.scale.count(ScaleEventKind::Retired) >= 1, "{:?}", r.scale.events);
+    // Every drain completed (no replica stuck draining at shutdown).
+    assert_eq!(
+        r.scale.count(ScaleEventKind::DrainStarted),
+        r.scale.count(ScaleEventKind::Retired)
+    );
+    // Per-replica merge still exact with appended/retired replicas.
+    let completed: u64 = r.replicas.iter().map(|m| m.collector.completed).sum();
+    assert_eq!(completed, r.collector.completed);
+    // Fleet respected its bounds.
+    assert!(r.scale.max_active() <= 8);
+    assert!(r.scale.active_series().iter().all(|&(_, n)| n >= 1));
+}
+
+#[test]
+fn autoscale_beats_fixed_fleet_on_burst_tail() {
+    let fixed = run_cluster(&spike_config(&backends::TFS, None));
+    let scaled = run_cluster(&spike_config(&backends::TFS, Some(queue_depth_scaler(&backends::TFS))));
+    let (p_fixed, p_scaled) = (burst_p99(&fixed), burst_p99(&scaled));
+    assert!(
+        p_scaled < p_fixed,
+        "autoscaled burst p99 {p_scaled}s must beat the fixed 2-replica fleet {p_fixed}s"
+    );
+    assert!(scaled.scale.max_active() > 2);
+}
+
+#[test]
+fn slow_cold_start_pays_a_longer_burst_tail() {
+    // The fig17 headline at test scale: same scale policy, same (measured)
+    // device time; TrIS's ~9.4 s cold start vs TFS's ~2.2 s delays the
+    // relief capacity, so the burst-window p99 is strictly worse even
+    // though TrIS serves each request faster once warm.
+    let tfs = run_cluster(&spike_config(&backends::TFS, Some(queue_depth_scaler(&backends::TFS))));
+    let tris =
+        run_cluster(&spike_config(&backends::TRIS, Some(queue_depth_scaler(&backends::TRIS))));
+    let (p_tfs, p_tris) = (burst_p99(&tfs), burst_p99(&tris));
+    assert!(
+        p_tris > p_tfs,
+        "tris burst p99 {p_tris}s must exceed tfs {p_tfs}s (cold start {:.1}s vs {:.1}s)",
+        backends::TRIS.coldstart_s(WEIGHT_BYTES),
+        backends::TFS.coldstart_s(WEIGHT_BYTES)
+    );
+    // Both fleets conserve exactly.
+    for r in [&tfs, &tris] {
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
+    }
+}
+
+#[test]
+fn autoscaled_runs_deterministic_per_seed() {
+    let a = run_cluster(&spike_config(&backends::TRIS, Some(queue_depth_scaler(&backends::TRIS))));
+    let b = run_cluster(&spike_config(&backends::TRIS, Some(queue_depth_scaler(&backends::TRIS))));
+    assert_eq!(a.collector.completed, b.collector.completed);
+    assert_eq!(a.issued, b.issued);
+    assert_eq!(a.scale.events.len(), b.scale.events.len());
+    for (ea, eb) in a.scale.events.iter().zip(&b.scale.events) {
+        assert_eq!(ea, eb);
+    }
+}
+
+#[test]
+fn draining_replica_takes_no_new_traffic() {
+    // Force a drain by starting above min with a light load: the scaler
+    // removes one replica at the first evaluation; all later work lands
+    // on the survivors.
+    let mut cfg = spike_config(&backends::TFS, Some(queue_depth_scaler(&backends::TFS)));
+    cfg.arrivals = generate(&Pattern::Uniform { rate: 40.0 }, 30.0, 4);
+    cfg.duration_s = 30.0;
+    cfg.replicas = vec![
+        replica(&backends::TFS),
+        replica(&backends::TFS),
+        replica(&backends::TFS),
+        replica(&backends::TFS),
+    ];
+    let r = run_cluster(&cfg);
+    assert_eq!(r.collector.completed + r.dropped, r.issued);
+    let retired: Vec<usize> = r
+        .scale
+        .events
+        .iter()
+        .filter(|e| e.kind == ScaleEventKind::Retired)
+        .map(|e| e.replica)
+        .collect();
+    assert!(!retired.is_empty(), "light load on 4 replicas (min 2) must drain");
+    // A retired replica's collector stops growing: its completed count is
+    // consistent with only pre-drain traffic (it saw strictly less work
+    // than the busiest survivor).
+    let max_completed = r.replicas.iter().map(|m| m.collector.completed).max().unwrap();
+    for ri in retired {
+        assert!(
+            r.replicas[ri].collector.completed < max_completed,
+            "retired replica {ri} kept receiving traffic"
+        );
+    }
+}
+
+#[test]
+fn cluster_sim_submission_through_leader_lands_in_perfdb() {
+    // The coordinator path end to end: a YAML `cluster_sim` autoscale
+    // submission through the leader, results queryable in the PerfDB.
+    let leader = Leader::start(LeaderConfig { workers: 1, ..Default::default() });
+    leader
+        .submit_yaml(
+            "name: spike\ntask: cluster_sim\nmodel: resnet50\nplatform: G1\nsoftware: tfs\n\
+             replicas: 2\nrouter: least-outstanding\n\
+             workload:\n  rate: 100.0\n  duration_s: 25\n  burst:\n    rate: 450.0\n    start_s: 6\n    duration_s: 5\n\
+             autoscale:\n  policy: queue-depth\n  min_replicas: 2\n  max_replicas: 6\n  up: 8.0\n  down: 1.0\n  cooldown_s: 1.0\n  eval_interval_s: 0.5\n",
+        )
+        .unwrap();
+    let done = leader.wait_for(1, std::time::Duration::from_secs(60)).unwrap();
+    assert!(done[0].ok, "cluster_sim job failed");
+    let db = leader.perfdb.lock().unwrap();
+    let records = db.query(&Query::default().task("cluster_sim"));
+    assert_eq!(records.len(), 1);
+    let r = records[0];
+    assert!(r.metric("replicas_max").unwrap() >= 2.0);
+    assert!(r.metric("p99_ms").unwrap() > 0.0);
+    assert!(r.metric("burst_p99_ms").is_some());
+    // issued == completed + dropped was checked inside execute; the
+    // recorded issued count is positive and consistent.
+    assert!(r.metric("issued").unwrap() > 0.0);
+    drop(db);
+    leader.shutdown();
+}

@@ -40,6 +40,7 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
             replica(16.0, Policy::Single),
         ],
         router,
+        autoscale: None,
         path: RequestPath::local(Processors::none()),
         seed: 7,
     }
@@ -69,6 +70,7 @@ fn n1_cluster_matches_single_server_sim() {
             max_queue: sim_cfg.max_queue,
         }],
         router: RouterPolicy::RoundRobin,
+        autoscale: None,
         path: sim_cfg.path,
         seed: sim_cfg.seed,
     };
