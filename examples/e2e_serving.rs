@@ -34,7 +34,7 @@ fn serve_one(stem: &str, rate: f64, duration: f64, max_batch: usize) -> anyhow::
     );
     // Warm the executor, then measure under load.
     let _ = run_load(&server, rate.min(10.0), 1.0, 1)?;
-    let mut report = run_load(&server, rate, duration, 42)?;
+    let report = run_load(&server, rate, duration, 42)?;
     let row = vec![
         stem.to_string(),
         format!("{rate:.0}"),
@@ -118,6 +118,7 @@ fn cluster_scaleout_section() -> anyhow::Result<()> {
                     .collect::<anyhow::Result<Vec<_>>>()?,
                 router,
                 autoscale: None,
+                cold_start: None,
                 path: RequestPath {
                     processors: Processors::image(),
                     network: LAN,
@@ -126,7 +127,7 @@ fn cluster_scaleout_section() -> anyhow::Result<()> {
                 seed: 99,
             };
             let r = run_cluster(&cfg);
-            let mut c = r.collector;
+            let c = &r.collector;
             rows.push(vec![
                 n.to_string(),
                 router.label().to_string(),
@@ -192,12 +193,13 @@ fn autoscale_spike_section() -> anyhow::Result<()> {
                 weight_bytes,
                 eval_interval_s: 0.5,
             }),
+            cold_start: None,
             path: RequestPath::local(Processors::none()),
             seed: 2024,
         };
         let r = run_cluster(&cfg);
         assert_eq!(r.collector.completed + r.dropped, r.issued, "conservation across scale events");
-        let mut burst = r.collector.e2e_in_window(20.0, 32.0);
+        let burst = r.collector.e2e_in_window(20.0, 32.0);
         rows.push(vec![
             software.id.to_string(),
             format!("{:.1}", software.coldstart_s(weight_bytes)),

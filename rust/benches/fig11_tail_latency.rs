@@ -56,7 +56,7 @@ fn main() {
         let mut cfg = base_config(rate);
         cfg.policy = Policy::Single; // paper serves b=1; queueing sets the tail
         let r = run(&cfg);
-        let mut c = r.collector;
+        let c = r.collector;
         items.push((format!("{rate:>3.0} rps"), c.e2e.percentile(99.0) * 1e3));
     }
     print!("{}", render::bar_chart("p99 latency (ms) vs arrival rate", &items, 40));
@@ -71,7 +71,7 @@ fn main() {
         77,
     );
     let r = run(&cfg);
-    let mut c = r.collector;
+    let c = r.collector;
     println!(
         "completed {} dropped {}; p50 {:.1} ms p99 {:.1} ms max {:.1} ms",
         c.completed,

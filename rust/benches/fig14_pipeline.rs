@@ -63,7 +63,7 @@ fn main() {
     let mut items = Vec::new();
     for net in [LAN, WIFI, LTE_4G] {
         let r = run(&sim(1, net));
-        let mut c = r.collector;
+        let c = r.collector;
         items.push((net.name.to_string(), c.e2e.percentile(50.0) * 1e3));
     }
     print!("{}", render::bar_chart("median e2e latency (ms) by network", &items, 40));

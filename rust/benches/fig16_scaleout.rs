@@ -48,6 +48,7 @@ fn cluster(replicas: Vec<ReplicaConfig>, rate: f64, router: RouterPolicy) -> Clu
         replicas,
         router,
         autoscale: None,
+        cold_start: None,
         path: RequestPath::local(Processors::none()),
         seed: SEED,
     }
@@ -73,7 +74,7 @@ fn main() {
                 })
                 .sum::<f64>()
                 / n as f64;
-            let mut c = r.collector;
+            let c = r.collector;
             rows.push(vec![
                 n.to_string(),
                 router.label().to_string(),
@@ -99,7 +100,7 @@ fn main() {
         let r = run(&cluster(hetero(), 380.0, router));
         let per: Vec<String> =
             r.replicas.iter().map(|m| m.collector.completed.to_string()).collect();
-        let mut c = r.collector;
+        let c = r.collector;
         let p99 = c.e2e.percentile(99.0);
         p99_by_router.push((router.label(), p99));
         rows.push(vec![

@@ -80,6 +80,7 @@ fn run_one(software: &'static Software, policy: ScalePolicy) -> ClusterResult {
             weight_bytes: WEIGHT_BYTES,
             eval_interval_s: 0.5,
         }),
+        cold_start: None,
         path: RequestPath::local(Processors::none()),
         seed: SEED,
     };
@@ -113,10 +114,10 @@ fn main() {
                 "{plabel}/{}: post-burst lull must trigger drain-on-remove",
                 software.id
             );
-            let mut steady = r.collector.e2e_in_window(0.0, BURST_START);
-            let mut in_burst =
+            let steady = r.collector.e2e_in_window(0.0, BURST_START);
+            let in_burst =
                 r.collector.e2e_in_window(BURST_START, BURST_START + BURST_LEN);
-            let mut recovery =
+            let recovery =
                 r.collector.e2e_in_window(BURST_START + BURST_LEN, BURST_START + BURST_LEN + 12.0);
             burst_p99.push(((plabel, software.id), in_burst.percentile(99.0)));
             rows.push(vec![

@@ -60,10 +60,9 @@ fn main() {
         let mut b = Batcher::new(Policy::Dynamic { max_size: 8, max_wait_s: 0.005 });
         let mut n = 0u64;
         for i in 0..100_000u64 {
-            if let inferbench::serving::Decision::Dispatch(batch) =
-                b.on_arrival(i, i as f64 * 1e-5)
+            if let inferbench::serving::Decision::Dispatch(sz) = b.on_arrival(i, i as f64 * 1e-5)
             {
-                n += batch.len() as u64;
+                n += sz as u64;
             }
         }
         n

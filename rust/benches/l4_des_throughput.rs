@@ -1,0 +1,250 @@
+//! L4: DES engine throughput — simulated requests/sec and events/sec of
+//! the cluster simulator itself (PERF.md). This is the perf trajectory
+//! tracker for the engine every fig7–fig17 benchmark runs on: InferBench's
+//! value proposition is cheap day-to-day evaluation, and serving studies
+//! need million-request scales to resolve tail behavior, so the simulator
+//! is benchmarked like any other hot path.
+//!
+//! Three scenarios × three scales (10k / 100k / 1M requests):
+//!  * `fixed-fleet`  — 4 heterogeneous replicas, dynamic batching,
+//!    least-outstanding routing, Poisson open-loop arrivals;
+//!  * `autoscale`    — spike load against an elastic 2→8 fleet
+//!    (queue-depth policy, cold starts, drain-on-remove);
+//!  * `closed-loop`  — 64 closed-loop clients over 4 replicas (slot reuse:
+//!    the steady-state allocation-free path).
+//!
+//! Each cell reports wall time, simulated requests/sec, and processed
+//! events/sec, and the full matrix is written to `BENCH_des.json` at the
+//! repository root so the trajectory is tracked in-repo from this PR
+//! onward. Pass `--smoke` to run only the 10k scale (CI).
+//!
+//! Run: `cargo bench --bench l4_des_throughput [-- --smoke]`
+
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
+use inferbench::serving::cluster::{run, ClusterConfig, ClusterResult, ReplicaConfig};
+use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
+use inferbench::util::render;
+use inferbench::workload::{generate, Pattern};
+use std::path::Path;
+use std::time::Instant;
+
+fn replica(per_req_ms: f64) -> ReplicaConfig {
+    ReplicaConfig {
+        software: &backends::TRIS,
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3), (16, per_req_ms * 3.0 / 1e3)],
+            utilization: 0.6,
+        },
+        policy: Policy::Dynamic { max_size: 16, max_wait_s: 0.002 },
+        max_queue: 100_000,
+    }
+}
+
+/// Fixed 4-replica fleet; Poisson arrivals sized for ~`n` requests.
+fn fixed_fleet(n: u64) -> ClusterConfig {
+    let rate = 2000.0;
+    let duration = n as f64 / rate;
+    ClusterConfig {
+        arrivals: generate(&Pattern::Poisson { rate }, duration, 42),
+        closed_loop: None,
+        duration_s: duration,
+        replicas: vec![replica(2.0), replica(3.0), replica(5.0), replica(8.0)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed: 42,
+    }
+}
+
+/// Elastic fleet under spike load; sized for ~`n` requests.
+fn autoscale(n: u64) -> ClusterConfig {
+    // Base 1000 rps with a 4000 rps burst over the middle fifth:
+    // average offered rate ~1600 rps.
+    let duration = n as f64 / 1600.0;
+    ClusterConfig {
+        arrivals: generate(
+            &Pattern::Spike {
+                base_rate: 1000.0,
+                burst_rate: 4000.0,
+                start_s: duration * 0.4,
+                duration_s: duration * 0.2,
+            },
+            duration,
+            43,
+        ),
+        closed_loop: None,
+        duration_s: duration,
+        replicas: vec![replica(2.0), replica(2.0)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: Some(AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth {
+                up_per_replica: 8.0,
+                down_per_replica: 0.5,
+                cooldown_s: 0.5,
+            },
+            min_replicas: 2,
+            max_replicas: 8,
+            template: replica(2.0),
+            weight_bytes: 50_000_000,
+            eval_interval_s: 0.25,
+        }),
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed: 43,
+    }
+}
+
+/// 64 closed-loop clients over 4 replicas; sized for ~`n` requests.
+/// Exercises the steady-state slot-reuse path: only ~64 traces are ever
+/// live at once.
+fn closed_loop(n: u64) -> ClusterConfig {
+    // 64 clients over 4 replicas at ~2.4 ms effective -> ~2400 rps.
+    let duration = n as f64 / 2400.0;
+    ClusterConfig {
+        arrivals: vec![],
+        closed_loop: Some(64),
+        duration_s: duration,
+        replicas: vec![replica(2.0), replica(2.0), replica(2.0), replica(2.0)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed: 44,
+    }
+}
+
+struct Cell {
+    scenario: &'static str,
+    requests: u64,
+    issued: u64,
+    completed: u64,
+    events: u64,
+    wall_s: f64,
+}
+
+impl Cell {
+    fn requests_per_s(&self) -> f64 {
+        self.issued as f64 / self.wall_s
+    }
+
+    fn events_per_s(&self) -> f64 {
+        self.events as f64 / self.wall_s
+    }
+}
+
+fn measure(scenario: &'static str, requests: u64, cfg: &ClusterConfig) -> Cell {
+    // One warmup pass at small scale already happened (the smoke row);
+    // measure the best of two runs to shave scheduler noise.
+    let mut best: Option<(f64, ClusterResult)> = None;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let r = run(cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(r.collector.completed + r.dropped, r.issued, "{scenario}: conservation");
+        let better = match &best {
+            None => true,
+            Some((w, _)) => wall < *w,
+        };
+        if better {
+            best = Some((wall, r));
+        }
+    }
+    let (wall_s, r) = best.expect("measured");
+    Cell {
+        scenario,
+        requests,
+        issued: r.issued,
+        completed: r.collector.completed,
+        events: r.events,
+        wall_s,
+    }
+}
+
+fn write_json(cells: &[Cell]) -> std::io::Result<()> {
+    // The repo root is one level above the rust package.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_des.json");
+    let mut rows = Vec::new();
+    for c in cells {
+        rows.push(format!(
+            "    {{\"scenario\": \"{}\", \"requests\": {}, \"issued\": {}, \"completed\": {}, \
+             \"events\": {}, \"wall_s\": {:.4}, \"requests_per_s\": {:.0}, \"events_per_s\": {:.0}}}",
+            c.scenario,
+            c.requests,
+            c.issued,
+            c.completed,
+            c.events,
+            c.wall_s,
+            c.requests_per_s(),
+            c.events_per_s()
+        ));
+    }
+    let doc = format!(
+        "{{\n  \"bench\": \"l4_des_throughput\",\n  \"unit\": \"simulated requests (issued) and \
+         DES events per wall-clock second\",\n  \"regenerate\": \"cargo bench --bench \
+         l4_des_throughput\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write(path, doc)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scales: &[u64] = if smoke { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+
+    println!("=== L4: DES engine throughput (simulated requests/sec) ===\n");
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut rows = Vec::new();
+    for &n in scales {
+        for (scenario, cfg) in [
+            ("fixed-fleet", fixed_fleet(n)),
+            ("autoscale", autoscale(n)),
+            ("closed-loop", closed_loop(n)),
+        ] {
+            let cell = measure(scenario, n, &cfg);
+            rows.push(vec![
+                scenario.to_string(),
+                format!("{n}"),
+                format!("{}", cell.issued),
+                format!("{}", cell.events),
+                format!("{:.3}", cell.wall_s),
+                format!("{:.0}", cell.requests_per_s()),
+                format!("{:.0}", cell.events_per_s()),
+            ]);
+            println!(
+                "{scenario:<12} {n:>9} requests: {:>8.3}s wall, {:>12.0} req/s, {:>12.0} events/s",
+                cell.wall_s,
+                cell.requests_per_s(),
+                cell.events_per_s()
+            );
+            cells.push(cell);
+        }
+    }
+    println!();
+    print!(
+        "{}",
+        render::table(
+            &["Scenario", "Target", "Issued", "Events", "Wall s", "Req/s", "Events/s"],
+            &rows
+        )
+    );
+
+    // Determinism sanity at the smallest scale: identical event counts
+    // and collector output across two runs of the same config.
+    let (a, b) = (run(&fixed_fleet(10_000)), run(&fixed_fleet(10_000)));
+    assert_eq!(a.events, b.events, "event count must be deterministic");
+    assert_eq!(a.collector.completed, b.collector.completed);
+    assert_eq!(a.collector.e2e.percentile(99.0), b.collector.e2e.percentile(99.0));
+    println!("\nPASS: conservation + determinism on every scenario");
+
+    if smoke {
+        // Don't clobber the committed full matrix with 10k-only rows.
+        println!("(smoke run: BENCH_des.json left untouched)");
+    } else {
+        match write_json(&cells) {
+            Ok(()) => println!("wrote BENCH_des.json ({} cells)", cells.len()),
+            Err(e) => eprintln!("WARNING: could not write BENCH_des.json: {e}"),
+        }
+    }
+}

@@ -330,14 +330,14 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>
                 seed,
             };
             let result = serving::run(&config);
-            let mut collector = result.collector;
+            let collector = &result.collector;
             let record = Record::new("serving_sim", model, platform, software)
                 .with_metric("rate_rps", *rate_rps)
                 .with_metric("p50_ms", collector.e2e.percentile(50.0) * 1e3)
                 .with_metric("p95_ms", collector.e2e.percentile(95.0) * 1e3)
                 .with_metric("p99_ms", collector.e2e.percentile(99.0) * 1e3)
                 .with_metric("throughput_rps", collector.throughput_rps())
-                .with_metric("mean_batch", result.batch_sizes.iter().sum::<usize>() as f64 / result.batch_sizes.len().max(1) as f64)
+                .with_metric("mean_batch", result.mean_batch())
                 .with_metric("utilization", result.timeline.mean())
                 .with_metric("dropped", result.dropped as f64);
             Ok(vec![record])
@@ -423,6 +423,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>
                 replicas: (0..*replicas).map(|_| template.clone()).collect(),
                 router: router_policy(router, seed)?,
                 autoscale: autoscale_cfg,
+                cold_start: None,
                 path: RequestPath {
                     processors: Processors::image(),
                     network: LAN,
@@ -441,7 +442,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>
                     result.issued
                 );
             }
-            let mut collector = result.collector;
+            let collector = &result.collector;
             let mut record = Record::new("cluster_sim", model, platform, software)
                 .with_metric("rate_rps", *rate_rps)
                 .with_metric("replicas_initial", *replicas as f64)
@@ -460,7 +461,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>
                 .with_metric("dropped", result.dropped as f64)
                 .with_metric("issued", result.issued as f64);
             if let Some(b) = burst {
-                let mut w = collector.e2e_in_window(b.start_s, b.start_s + b.duration_s);
+                let w = collector.e2e_in_window(b.start_s, b.start_s + b.duration_s);
                 if !w.is_empty() {
                     record = record.with_metric("burst_p99_ms", w.percentile(99.0) * 1e3);
                 }

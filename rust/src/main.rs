@@ -147,7 +147,7 @@ fn serve(args: &Args) -> Result<()> {
         println!("  variant b{b}: compiled in {}", render::fmt_duration(*t));
     }
     println!("serving at {rate} rps for {duration}s...");
-    let mut report = run_load(&server, rate, duration, 7)?;
+    let report = run_load(&server, rate, duration, 7)?;
     println!(
         "completed {} requests in {:.1}s ({:.1} rps)",
         report.completed,

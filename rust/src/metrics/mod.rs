@@ -4,6 +4,12 @@
 //! (pre-process / transmission / batch-queue / inference / post-process);
 //! the collector aggregates per-stage and end-to-end latency, throughput,
 //! and a utilization timeline (Fig 13).
+//!
+//! Hot-path layout (see PERF.md): a [`RequestTrace`] is a flat `Copy`
+//! struct — per-stage seconds live in a fixed `[f64; 5]` array (indexed by
+//! `Stage as usize`) with a recorded-stage bitmask, not a `BTreeMap` — and
+//! in-flight traces live in a [`TraceStore`] slab with a free list, so the
+//! simulator's request lifecycle allocates nothing at steady state.
 
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
@@ -36,14 +42,25 @@ impl Stage {
             Stage::PostProcess => "post-process",
         }
     }
+
+    /// Dense index into per-stage arrays (declaration order, 0..5).
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
 }
 
 /// Per-request probe record: arrival + per-stage durations (seconds).
-#[derive(Debug, Clone)]
+/// Flat and `Copy` — 72 bytes, no heap — so the trace store can hold it
+/// inline and hand it around by value.
+#[derive(Debug, Clone, Copy)]
 pub struct RequestTrace {
     pub id: u64,
     pub arrival_s: f64,
-    pub stage_s: BTreeMap<Stage, f64>,
+    /// Accumulated seconds per stage, indexed by [`Stage::idx`].
+    stage_s: [f64; 5],
+    /// Bitmask of stages recorded at least once: distinguishes "probed at
+    /// 0 s" from "never probed", so per-stage sample counts stay exact.
+    recorded: u8,
     pub completed_s: f64,
     /// Set when the request was rejected/dropped (overload).
     pub dropped: bool,
@@ -51,12 +68,29 @@ pub struct RequestTrace {
 
 impl RequestTrace {
     pub fn new(id: u64, arrival_s: f64) -> Self {
-        RequestTrace { id, arrival_s, stage_s: BTreeMap::new(), completed_s: arrival_s, dropped: false }
+        RequestTrace {
+            id,
+            arrival_s,
+            stage_s: [0.0; 5],
+            recorded: 0,
+            completed_s: arrival_s,
+            dropped: false,
+        }
     }
 
     pub fn record_stage(&mut self, stage: Stage, seconds: f64) {
-        *self.stage_s.entry(stage).or_insert(0.0) += seconds;
+        self.stage_s[stage.idx()] += seconds;
+        self.recorded |= 1 << stage.idx();
         self.completed_s += seconds;
+    }
+
+    /// Accumulated seconds in `stage`; `None` if the stage was never probed.
+    pub fn stage_s(&self, stage: Stage) -> Option<f64> {
+        if self.recorded & (1 << stage.idx()) != 0 {
+            Some(self.stage_s[stage.idx()])
+        } else {
+            None
+        }
     }
 
     /// End-to-end latency (arrival -> completion).
@@ -65,11 +99,69 @@ impl RequestTrace {
     }
 }
 
+/// Slab/free-list store for in-flight [`RequestTrace`]s: O(1) insert /
+/// access / remove, with completed slots reused (LIFO), so the request
+/// lifecycle is allocation-free at steady state — a closed-loop run cycles
+/// the same few slots for its whole duration. Replaces the
+/// `HashMap<u64, RequestTrace>` trace map (hash + probe per event, resize
+/// churn mid-run; see PERF.md §Trace store).
+#[derive(Debug, Default)]
+pub struct TraceStore {
+    slots: Vec<RequestTrace>,
+    free: Vec<u32>,
+}
+
+impl TraceStore {
+    pub fn with_capacity(n: usize) -> Self {
+        TraceStore { slots: Vec::with_capacity(n), free: Vec::new() }
+    }
+
+    /// Live (inserted, not yet removed) trace count.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Store a trace, returning its slot. The slot stays valid until
+    /// [`TraceStore::remove`], after which it may be reused.
+    pub fn insert(&mut self, trace: RequestTrace) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                self.slots[slot as usize] = trace;
+                slot
+            }
+            None => {
+                self.slots.push(trace);
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    pub fn get(&self, slot: u32) -> &RequestTrace {
+        &self.slots[slot as usize]
+    }
+
+    pub fn get_mut(&mut self, slot: u32) -> &mut RequestTrace {
+        &mut self.slots[slot as usize]
+    }
+
+    /// Remove and return the trace in `slot`, releasing the slot for reuse.
+    pub fn remove(&mut self, slot: u32) -> RequestTrace {
+        self.free.push(slot);
+        self.slots[slot as usize]
+    }
+}
+
 /// Aggregated metrics over a benchmark run.
 #[derive(Debug, Default)]
 pub struct Collector {
     pub e2e: Summary,
-    pub per_stage: BTreeMap<Stage, Summary>,
+    /// Per-stage latency summaries, indexed by [`Stage::idx`]; read via
+    /// [`Collector::stage`].
+    per_stage: [Summary; 5],
     /// (arrival_s, e2e_s) per completed request, in ingest order — feeds
     /// windowed tail analysis (burst-window p99, recovery curves).
     pub arrival_e2e: Vec<(f64, f64)>,
@@ -92,11 +184,18 @@ impl Collector {
         self.completed += 1;
         self.e2e.record(trace.e2e_s());
         self.arrival_e2e.push((trace.arrival_s, trace.e2e_s()));
-        for (stage, s) in &trace.stage_s {
-            self.per_stage.entry(*stage).or_default().record(*s);
+        for (i, summary) in self.per_stage.iter_mut().enumerate() {
+            if trace.recorded & (1 << i) != 0 {
+                summary.record(trace.stage_s[i]);
+            }
         }
         self.first_arrival_s = self.first_arrival_s.min(trace.arrival_s);
         self.last_completion_s = self.last_completion_s.max(trace.completed_s);
+    }
+
+    /// Latency summary for one pipeline stage (empty if never probed).
+    pub fn stage(&self, stage: Stage) -> &Summary {
+        &self.per_stage[stage.idx()]
     }
 
     /// End-to-end latency summary restricted to requests that *arrived*
@@ -125,20 +224,41 @@ impl Collector {
     pub fn stage_means(&self) -> BTreeMap<Stage, f64> {
         STAGES
             .iter()
-            .map(|s| (*s, self.per_stage.get(s).map(|x| x.mean()).unwrap_or(0.0)))
+            .map(|s| {
+                let summary = &self.per_stage[s.idx()];
+                (*s, if summary.is_empty() { 0.0 } else { summary.mean() })
+            })
             .collect()
     }
 
-    /// Fold another collector into this one — the cluster-level merge of
-    /// per-replica collectors. Exact, not approximate: raw samples are
-    /// concatenated, so percentiles of the merged collector equal
-    /// percentiles over the union of the inputs.
+    /// Fold another collector into this one. Exact, not approximate: raw
+    /// samples are concatenated, so percentiles of the merged collector
+    /// equal percentiles over the union of the inputs.
     pub fn merge(&mut self, other: &Collector) {
         self.e2e.extend(other.e2e.samples());
-        for (stage, summary) in &other.per_stage {
-            self.per_stage.entry(*stage).or_default().extend(summary.samples());
+        for (dst, src) in self.per_stage.iter_mut().zip(&other.per_stage) {
+            dst.extend(src.samples());
         }
         self.arrival_e2e.extend_from_slice(&other.arrival_e2e);
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
+        self.last_completion_s = self.last_completion_s.max(other.last_completion_s);
+    }
+
+    /// Move-based [`Collector::merge`]: consumes `other` and appends its
+    /// sample buffers instead of copying them element by element (the
+    /// first absorb into an empty collector takes the buffers wholesale).
+    pub fn absorb(&mut self, other: Collector) {
+        self.e2e.absorb(other.e2e);
+        for (dst, src) in self.per_stage.iter_mut().zip(other.per_stage) {
+            dst.absorb(src);
+        }
+        if self.arrival_e2e.is_empty() {
+            self.arrival_e2e = other.arrival_e2e;
+        } else {
+            self.arrival_e2e.extend(other.arrival_e2e);
+        }
         self.completed += other.completed;
         self.dropped += other.dropped;
         self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
@@ -147,10 +267,10 @@ impl Collector {
 }
 
 /// Everything the cluster serving engine measures about one replica: its
-/// own collector (merged cluster-wide by [`Collector::merge`]; local queue
-/// drops live in `collector.dropped`), the two utilization timelines the
-/// single-server simulator reports (Fig 9 / 13 metrics), and completed
-/// batch sizes.
+/// own collector (the cluster-level collector is fed in parallel at
+/// completion time; local queue drops live in `collector.dropped`), the
+/// two utilization timelines the single-server simulator reports (Fig 9 /
+/// 13 metrics), and completed batch sizes.
 #[derive(Debug)]
 pub struct ReplicaMetrics {
     pub collector: Collector,
@@ -158,8 +278,11 @@ pub struct ReplicaMetrics {
     pub timeline: UtilizationTimeline,
     /// Busy-fraction utilization — what DCGM/nvidia-smi report.
     pub busy_timeline: UtilizationTimeline,
-    /// Completed batch sizes on this replica.
-    pub batch_sizes: Vec<usize>,
+    /// Completed batch sizes on this replica; private so every append
+    /// goes through [`ReplicaMetrics::record_batch`] and the running sum
+    /// stays exact. Read via [`ReplicaMetrics::batch_sizes`].
+    batch_sizes: Vec<usize>,
+    batch_sum: u64,
 }
 
 impl ReplicaMetrics {
@@ -169,14 +292,39 @@ impl ReplicaMetrics {
             timeline: UtilizationTimeline::new(horizon_s, bucket_s),
             busy_timeline: UtilizationTimeline::new(horizon_s, bucket_s),
             batch_sizes: Vec::new(),
+            batch_sum: 0,
         }
     }
 
+    /// Record one completed batch (keeps the running sum for O(1) means).
+    pub fn record_batch(&mut self, size: usize) {
+        self.batch_sizes.push(size);
+        self.batch_sum += size as u64;
+    }
+
+    /// Completed batch sizes, in dispatch order.
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// Move the batch-size vector out (resets it and the running sum) —
+    /// used by the single-server wrapper to hand ownership to SimResult.
+    pub fn take_batch_sizes(&mut self) -> Vec<usize> {
+        self.batch_sum = 0;
+        std::mem::take(&mut self.batch_sizes)
+    }
+
+    /// Sum of all completed batch sizes. O(1): maintained at record.
+    pub fn batch_sum(&self) -> u64 {
+        self.batch_sum
+    }
+
+    /// Mean completed batch size. O(1): uses the maintained sum.
     pub fn mean_batch(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             return 0.0;
         }
-        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        self.batch_sum as f64 / self.batch_sizes.len() as f64
     }
 }
 
@@ -314,7 +462,9 @@ mod tests {
         t.record_stage(Stage::Inference, 0.02);
         t.record_stage(Stage::PostProcess, 0.002);
         assert!((t.e2e_s() - 0.023).abs() < 1e-12);
-        assert_eq!(t.stage_s.len(), 3);
+        assert_eq!(t.stage_s(Stage::PreProcess), Some(0.001));
+        assert_eq!(t.stage_s(Stage::Transmission), None);
+        assert_eq!(t.stage_s(Stage::Batching), None);
     }
 
     #[test]
@@ -322,7 +472,42 @@ mod tests {
         let mut t = RequestTrace::new(1, 0.0);
         t.record_stage(Stage::Batching, 0.01);
         t.record_stage(Stage::Batching, 0.02);
-        assert!((t.stage_s[&Stage::Batching] - 0.03).abs() < 1e-12);
+        assert!((t.stage_s(Stage::Batching).unwrap() - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_second_probe_still_counts_as_recorded() {
+        // The bitmask keeps "probed at exactly 0 s" distinguishable from
+        // "never probed" — the per-stage sample counts depend on it.
+        let mut t = RequestTrace::new(1, 0.0);
+        t.record_stage(Stage::PreProcess, 0.0);
+        assert_eq!(t.stage_s(Stage::PreProcess), Some(0.0));
+        let mut c = Collector::new();
+        c.ingest(&t);
+        assert_eq!(c.stage(Stage::PreProcess).len(), 1);
+        assert_eq!(c.stage(Stage::Inference).len(), 0);
+    }
+
+    #[test]
+    fn trace_store_slab_reuses_slots() {
+        let mut store = TraceStore::with_capacity(4);
+        let a = store.insert(RequestTrace::new(0, 0.0));
+        let b = store.insert(RequestTrace::new(1, 1.0));
+        assert_eq!(store.len(), 2);
+        store.get_mut(a).record_stage(Stage::Inference, 0.5);
+        assert_eq!(store.get(a).id, 0);
+        let removed = store.remove(a);
+        assert_eq!(removed.id, 0);
+        assert!((removed.e2e_s() - 0.5).abs() < 1e-12);
+        // Freed slot is reused for the next insert.
+        let c = store.insert(RequestTrace::new(2, 2.0));
+        assert_eq!(c, a);
+        assert_eq!(store.get(b).id, 1);
+        assert_eq!(store.get(c).id, 2);
+        assert_eq!(store.len(), 2);
+        store.remove(b);
+        store.remove(c);
+        assert!(store.is_empty());
     }
 
     #[test]
@@ -383,7 +568,39 @@ mod tests {
         // Percentiles over the union, not an average-of-averages.
         assert!((all.e2e.percentile(100.0) - 0.040).abs() < 1e-12);
         assert!((all.e2e.mean() - 0.025).abs() < 1e-12);
-        assert_eq!(all.per_stage[&Stage::Inference].len(), 4);
+        assert_eq!(all.stage(Stage::Inference).len(), 4);
+    }
+
+    #[test]
+    fn absorb_matches_merge() {
+        let mut a = Collector::new();
+        let mut b = Collector::new();
+        for i in 0..4u64 {
+            let mut t = RequestTrace::new(i, i as f64);
+            t.record_stage(Stage::Inference, 0.010 + i as f64 * 0.010);
+            if i < 2 {
+                a.ingest(&t);
+            } else {
+                b.ingest(&t);
+            }
+        }
+        let mut merged = Collector::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        let mut absorbed = Collector::new();
+        absorbed.absorb(a);
+        absorbed.absorb(b);
+        assert_eq!(absorbed.completed, merged.completed);
+        assert_eq!(absorbed.e2e.len(), merged.e2e.len());
+        assert_eq!(absorbed.e2e.percentile(99.0), merged.e2e.percentile(99.0));
+        assert_eq!(absorbed.e2e.percentile(50.0), merged.e2e.percentile(50.0));
+        assert_eq!(absorbed.first_arrival_s, merged.first_arrival_s);
+        assert_eq!(absorbed.last_completion_s, merged.last_completion_s);
+        assert_eq!(absorbed.arrival_e2e, merged.arrival_e2e);
+        assert_eq!(
+            absorbed.stage(Stage::Inference).len(),
+            merged.stage(Stage::Inference).len()
+        );
     }
 
     #[test]
@@ -405,7 +622,7 @@ mod tests {
             t.record_stage(Stage::Inference, 0.1 * (i as f64 + 1.0));
             c.ingest(&t);
         }
-        let mut w = c.e2e_in_window(3.0, 6.0); // arrivals 3, 4, 5
+        let w = c.e2e_in_window(3.0, 6.0); // arrivals 3, 4, 5
         assert_eq!(w.len(), 3);
         assert!((w.percentile(100.0) - 0.6).abs() < 1e-12);
         assert!((w.percentile(1.0) - 0.4).abs() < 1e-12);
@@ -447,8 +664,10 @@ mod tests {
     fn replica_metrics_mean_batch() {
         let mut m = ReplicaMetrics::new(10.0, 1.0);
         assert_eq!(m.mean_batch(), 0.0);
-        m.batch_sizes.extend([2, 4]);
+        m.record_batch(2);
+        m.record_batch(4);
         assert!((m.mean_batch() - 3.0).abs() < 1e-12);
+        assert_eq!(m.batch_sum(), 6);
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //! Pure decision logic, independent of the clock that drives it (the DES
 //! and the live engine both use it): requests enter a queue; the policy
 //! decides when a batch leaves and how large it is.
+//!
+//! Hot-path shape (see PERF.md): a dispatch moves requests into an
+//! internal buffer that is reused across batches — [`Decision::Dispatch`]
+//! carries only the count and the caller reads the formed batch via
+//! [`Batcher::ready`] — so the decide/dispatch cycle allocates nothing at
+//! steady state. The oldest-queued deadline is tracked incrementally
+//! instead of re-scanned per decision.
 
 /// Batch formation policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,14 +32,15 @@ pub struct Queued {
 }
 
 /// What the batcher wants done next.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Decision {
     /// Nothing to do until another arrival.
     Wait,
     /// Wake the batcher at this time (timeout-based dispatch).
     WakeAt(f64),
-    /// Dispatch these requests as one batch now.
-    Dispatch(Vec<Queued>),
+    /// This many requests formed a batch and left the queue; read them
+    /// with [`Batcher::ready`] (valid until the next dispatch).
+    Dispatch(usize),
 }
 
 /// Queue + policy state machine.
@@ -40,11 +48,17 @@ pub enum Decision {
 pub struct Batcher {
     policy: Policy,
     queue: Vec<Queued>,
+    /// The most recently dispatched batch (FIFO order). Reused across
+    /// dispatches: the hot loop never allocates per batch.
+    ready: Vec<Queued>,
+    /// Earliest enqueue time currently queued (`INFINITY` when empty);
+    /// maintained incrementally so decisions don't re-scan the queue.
+    oldest_s: f64,
 }
 
 impl Batcher {
     pub fn new(policy: Policy) -> Self {
-        Batcher { policy, queue: Vec::new() }
+        Batcher { policy, queue: Vec::new(), ready: Vec::new(), oldest_s: f64::INFINITY }
     }
 
     pub fn queue_len(&self) -> usize {
@@ -64,6 +78,12 @@ impl Batcher {
         }
     }
 
+    /// The batch formed by the most recent [`Decision::Dispatch`], oldest
+    /// request first. Overwritten by the next dispatch.
+    pub fn ready(&self) -> &[Queued] {
+        &self.ready
+    }
+
     /// A request arrives at `now`; returns the action to take.
     pub fn on_arrival(&mut self, id: u64, now: f64) -> Decision {
         self.enqueue(id, now);
@@ -74,6 +94,7 @@ impl Batcher {
     /// server is busy; it polls when the server frees).
     pub fn enqueue(&mut self, id: u64, now: f64) {
         self.queue.push(Queued { id, enqueue_s: now });
+        self.oldest_s = self.oldest_s.min(now);
     }
 
     /// Re-evaluate the queue at `now` without a new arrival.
@@ -109,14 +130,14 @@ impl Batcher {
                 if self.queue.len() >= size {
                     self.dispatch_up_to(size)
                 } else {
-                    self.deadline_or_dispatch(self.oldest() + timeout_s, now, size)
+                    self.deadline_or_dispatch(self.oldest_s + timeout_s, now, size)
                 }
             }
             Policy::Dynamic { max_size, max_wait_s } => {
                 if self.queue.len() >= max_size {
                     self.dispatch_up_to(max_size)
                 } else {
-                    self.deadline_or_dispatch(self.oldest() + max_wait_s, now, max_size)
+                    self.deadline_or_dispatch(self.oldest_s + max_wait_s, now, max_size)
                 }
             }
         }
@@ -133,17 +154,17 @@ impl Batcher {
         }
     }
 
-    fn oldest(&self) -> f64 {
-        self.queue.iter().map(|q| q.enqueue_s).fold(f64::INFINITY, f64::min)
-    }
-
     fn dispatch_up_to(&mut self, n: usize) -> Decision {
         let n = n.min(self.queue.len());
-        // FIFO: oldest requests leave first. (A skip-sort-if-already-
-        // sorted fast path was tried and measured slower — §Perf.)
-        self.queue.sort_by(|a, b| a.enqueue_s.partial_cmp(&b.enqueue_s).unwrap());
-        let batch: Vec<Queued> = self.queue.drain(..n).collect();
-        Decision::Dispatch(batch)
+        // FIFO: oldest requests leave first. The sort is stable and the
+        // queue is already in enqueue order for a time-ordered driver, so
+        // this is a single presorted pass in the common case.
+        self.queue.sort_by(|a, b| a.enqueue_s.partial_cmp(&b.enqueue_s).expect("NaN enqueue time"));
+        self.ready.clear();
+        self.ready.extend(self.queue.drain(..n));
+        // The remainder is sorted, so its head is the new oldest.
+        self.oldest_s = self.queue.first().map_or(f64::INFINITY, |q| q.enqueue_s);
+        Decision::Dispatch(n)
     }
 }
 
@@ -151,13 +172,22 @@ impl Batcher {
 mod tests {
     use super::*;
 
+    /// Dispatch helper: assert the decision dispatched and return the batch.
+    fn dispatched(b: &Batcher, d: Decision) -> Vec<Queued> {
+        match d {
+            Decision::Dispatch(n) => {
+                assert_eq!(n, b.ready().len());
+                b.ready().to_vec()
+            }
+            d => panic!("expected dispatch, got {d:?}"),
+        }
+    }
+
     #[test]
     fn single_dispatches_immediately() {
         let mut b = Batcher::new(Policy::Single);
-        match b.on_arrival(1, 0.0) {
-            Decision::Dispatch(batch) => assert_eq!(batch.len(), 1),
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_arrival(1, 0.0);
+        assert_eq!(dispatched(&b, d).len(), 1);
         assert_eq!(b.queue_len(), 0);
     }
 
@@ -166,12 +196,9 @@ mod tests {
         let mut b = Batcher::new(Policy::Fixed { size: 3, timeout_s: 1.0 });
         assert!(matches!(b.on_arrival(1, 0.0), Decision::WakeAt(t) if (t - 1.0).abs() < 1e-12));
         assert!(matches!(b.on_arrival(2, 0.1), Decision::WakeAt(_)));
-        match b.on_arrival(3, 0.2) {
-            Decision::Dispatch(batch) => {
-                assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 2, 3]);
-            }
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_arrival(3, 0.2);
+        let batch = dispatched(&b, d);
+        assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 2, 3]);
     }
 
     #[test]
@@ -179,20 +206,16 @@ mod tests {
         let mut b = Batcher::new(Policy::Fixed { size: 4, timeout_s: 0.5 });
         b.on_arrival(1, 0.0);
         b.on_arrival(2, 0.1);
-        match b.on_wake(0.5) {
-            Decision::Dispatch(batch) => assert_eq!(batch.len(), 2),
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_wake(0.5);
+        assert_eq!(dispatched(&b, d).len(), 2);
     }
 
     #[test]
     fn dynamic_dispatches_at_max_size() {
         let mut b = Batcher::new(Policy::Dynamic { max_size: 2, max_wait_s: 0.01 });
         b.on_arrival(1, 0.0);
-        match b.on_arrival(2, 0.001) {
-            Decision::Dispatch(batch) => assert_eq!(batch.len(), 2),
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_arrival(2, 0.001);
+        assert_eq!(dispatched(&b, d).len(), 2);
     }
 
     #[test]
@@ -214,12 +237,24 @@ mod tests {
         let mut b = Batcher::new(Policy::Dynamic { max_size: 3, max_wait_s: 1.0 });
         b.on_arrival(10, 0.3);
         b.on_arrival(11, 0.1); // arrives out of order (racing clients)
-        match b.on_arrival(12, 0.2) {
-            Decision::Dispatch(batch) => {
-                assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![11, 12, 10]);
-            }
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_arrival(12, 0.2);
+        let batch = dispatched(&b, d);
+        assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![11, 12, 10]);
+    }
+
+    #[test]
+    fn oldest_deadline_tracks_out_of_order_arrivals() {
+        // The incrementally tracked oldest enqueue time must follow an
+        // out-of-order (older) arrival, not just the first one.
+        let mut b = Batcher::new(Policy::Dynamic { max_size: 8, max_wait_s: 0.02 });
+        assert!(matches!(b.on_arrival(1, 1.0), Decision::WakeAt(t) if (t - 1.02).abs() < 1e-12));
+        // An out-of-order older arrival pulls the deadline earlier:
+        // oldest becomes 0.5, so the wake moves to 0.52, not 1.02.
+        assert!(matches!(b.on_arrival(2, 0.5), Decision::WakeAt(t) if (t - 0.52).abs() < 1e-12));
+        let d = b.on_wake(0.52);
+        assert_eq!(dispatched(&b, d).len(), 2);
+        // After the dispatch the tracked deadline resets with the queue.
+        assert!(matches!(b.on_arrival(3, 2.0), Decision::WakeAt(t) if (t - 2.02).abs() < 1e-12));
     }
 
     #[test]
@@ -236,10 +271,8 @@ mod tests {
             Decision::WakeAt(t) => assert!((t - 0.018).abs() < 1e-12, "{t}"),
             d => panic!("stale wake must not flush a young partial batch: {d:?}"),
         }
-        match b.on_wake(0.018) {
-            Decision::Dispatch(batch) => assert_eq!(batch.len(), 1),
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_wake(0.018);
+        assert_eq!(dispatched(&b, d).len(), 1);
     }
 
     #[test]
@@ -249,10 +282,8 @@ mod tests {
         b.on_arrival(2, 0.1);
         // Before the oldest deadline: reschedule; at it: flush both.
         assert!(matches!(b.on_wake(0.3), Decision::WakeAt(t) if (t - 0.5).abs() < 1e-12));
-        match b.on_wake(0.5) {
-            Decision::Dispatch(batch) => assert_eq!(batch.len(), 2),
-            d => panic!("{d:?}"),
-        }
+        let d = b.on_wake(0.5);
+        assert_eq!(dispatched(&b, d).len(), 2);
     }
 
     #[test]
@@ -279,9 +310,21 @@ mod tests {
     fn never_exceeds_max_batch() {
         let mut b = Batcher::new(Policy::Dynamic { max_size: 4, max_wait_s: 100.0 });
         for i in 0..100 {
-            if let Decision::Dispatch(batch) = b.on_arrival(i, 0.0) {
-                assert!(batch.len() <= 4);
+            if let Decision::Dispatch(n) = b.on_arrival(i, 0.0) {
+                assert!(n <= 4);
+                assert!(b.ready().len() <= 4);
             }
         }
+    }
+
+    #[test]
+    fn ready_buffer_reused_across_dispatches() {
+        let mut b = Batcher::new(Policy::Single);
+        b.on_arrival(1, 0.0);
+        assert_eq!(b.ready()[0].id, 1);
+        b.on_arrival(2, 1.0);
+        // Previous batch is overwritten, not appended to.
+        assert_eq!(b.ready().len(), 1);
+        assert_eq!(b.ready()[0].id, 2);
     }
 }

@@ -16,25 +16,39 @@
 //! scale-down drains-on-remove — the chosen replica stops receiving
 //! traffic, finishes queued + in-flight work, then retires — so
 //! `issued == completed + dropped` holds exactly across scale events.
+//! With [`ClusterConfig::cold_start`] the *initial* fleet starts cold too;
+//! requests that arrive before any replica is routable are **held at the
+//! routing tier** (FIFO) and flushed to the router the instant the first
+//! replica becomes ready — never handed to the router as an empty
+//! candidate set.
 //!
-//! Metrics: each replica records its own [`ReplicaMetrics`] (collector,
-//! utilization timelines, batch sizes, local drops); the cluster-level
-//! [`Collector`] is the exact merge of the per-replica collectors, and the
-//! [`ScaleTimeline`] records every replica-lifecycle transition.
+//! Hot-path structure (see PERF.md): the request lifecycle is
+//! allocation-free at steady state — traces live in a [`TraceStore`] slab,
+//! batches are read out of the batcher's reusable buffer, completions
+//! drain `in_flight` in place, and the router's inputs (per-replica
+//! outstanding counts + the sorted routable-candidate list) are maintained
+//! incrementally on state transitions instead of being rebuilt per
+//! request.
+//!
+//! Metrics: each replica records its own [`ReplicaMetrics`]; the
+//! cluster-level [`Collector`] is fed the same traces at completion time
+//! (plus routing-tier rejections, which belong to no replica), so it is
+//! the exact union of everything the run observed. The [`ScaleTimeline`]
+//! records every replica-lifecycle transition.
 
 use super::autoscale::{Autoscaler, ScaleDecision, ScaleSignal};
 use super::backends::{DynamicBatching, Software};
-use super::batcher::{Batcher, Decision, Policy, Queued};
+use super::batcher::{Batcher, Decision, Policy};
 use super::router::{Router, RouterPolicy};
 use super::service::ServiceModel;
 use crate::metrics::{
-    Collector, ReplicaMetrics, RequestTrace, ScaleEventKind, ScaleTimeline, Stage,
+    Collector, ReplicaMetrics, RequestTrace, ScaleEventKind, ScaleTimeline, Stage, TraceStore,
 };
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
 use crate::workload::Arrival;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 pub use super::autoscale::AutoscaleConfig;
 
@@ -67,11 +81,16 @@ pub struct ClusterConfig {
     pub closed_loop: Option<usize>,
     /// Simulated duration; no new requests issued past this.
     pub duration_s: f64,
-    /// The initial fleet (all routable at t = 0).
+    /// The initial fleet (routable at t = 0 unless `cold_start` is set).
     pub replicas: Vec<ReplicaConfig>,
     pub router: RouterPolicy,
     /// Elastic-fleet policy; `None` keeps the fleet fixed.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Start the initial fleet cold: each replica pays its software's
+    /// cold start for this weight footprint (bytes) before it becomes
+    /// routable. Requests arriving before the first replica is ready are
+    /// held at the routing tier. `None` starts the fleet warm.
+    pub cold_start: Option<u64>,
     pub path: RequestPath,
     pub seed: u64,
 }
@@ -79,18 +98,24 @@ pub struct ClusterConfig {
 /// Cluster simulation output.
 #[derive(Debug)]
 pub struct ClusterResult {
-    /// Cluster-level collector: exact merge of the per-replica collectors.
+    /// Cluster-level collector: the exact union of every request the run
+    /// observed — per-replica completions and rejections, plus requests
+    /// rejected at the routing tier (which belong to no replica).
     pub collector: Collector,
     /// Per-replica metrics. The first `ClusterConfig::replicas.len()`
     /// entries are the initial fleet; replicas added by the autoscaler
     /// append after them in add order (indices are stable for the run).
     pub replicas: Vec<ReplicaMetrics>,
-    /// Every replica-lifecycle transition (empty without an autoscaler).
+    /// Every replica-lifecycle transition (empty without an autoscaler or
+    /// cold start).
     pub scale: ScaleTimeline,
-    /// Requests rejected across all replica queues.
+    /// Requests rejected across all replica queues and the routing tier.
     pub dropped: u64,
     /// Requests issued in total (completed + dropped == issued).
     pub issued: u64,
+    /// Discrete events processed by the simulation loop (the events/sec
+    /// numerator for the `l4_des_throughput` bench).
+    pub events: u64,
 }
 
 impl ClusterResult {
@@ -99,13 +124,14 @@ impl ClusterResult {
         self.collector.throughput_rps()
     }
 
-    /// Mean completed batch size across all replicas.
+    /// Mean completed batch size across all replicas. O(replicas): uses
+    /// the sums maintained at record time, not a rescan of every batch.
     pub fn mean_batch(&self) -> f64 {
-        let n: usize = self.replicas.iter().map(|r| r.batch_sizes.len()).sum();
+        let n: usize = self.replicas.iter().map(|r| r.batch_sizes().len()).sum();
         if n == 0 {
             return 0.0;
         }
-        let total: usize = self.replicas.iter().map(|r| r.batch_sizes.iter().sum::<usize>()).sum();
+        let total: u64 = self.replicas.iter().map(|r| r.batch_sum()).sum();
         total as f64 / n as f64
     }
 }
@@ -147,7 +173,7 @@ struct Replica {
     state: ReplicaState,
     busy: bool,
     queued: usize,
-    in_flight: Vec<(u64, f64, f64)>, // (request id, service start, enqueue time)
+    in_flight: Vec<(u32, f64, f64)>, // (trace slot, service start, enqueue time)
     /// Busy seconds accrued since the last autoscaler evaluation (batches
     /// are charged at dispatch; one spanning an evaluation boundary counts
     /// toward the interval it started in).
@@ -182,8 +208,9 @@ impl Replica {
 
 #[derive(Debug, PartialEq)]
 enum Event {
-    /// Request reaches the routing tier (pre-processing + transmission done).
-    Enqueue { id: u64 },
+    /// Request reaches the routing tier (pre-processing + transmission
+    /// done). Carries the trace's slot in the [`TraceStore`].
+    Enqueue { slot: u32 },
     /// Batcher timeout on one replica.
     Wake { replica: usize, scheduled_for: f64 },
     /// One replica finishes its in-flight batch.
@@ -233,29 +260,44 @@ fn push(heap: &mut Heap, t: f64, e: Event, seq: &mut u64) {
     *seq += 1;
 }
 
-/// Start a batch on replica `ri`: record waits, occupy the replica.
+/// Insert `ri` into the ascending candidate list (no-op if present).
+fn insert_routable(routable: &mut Vec<usize>, ri: usize) {
+    if let Err(pos) = routable.binary_search(&ri) {
+        routable.insert(pos, ri);
+    }
+}
+
+/// Remove `ri` from the ascending candidate list (no-op if absent).
+fn remove_routable(routable: &mut Vec<usize>, ri: usize) {
+    if let Ok(pos) = routable.binary_search(&ri) {
+        routable.remove(pos);
+    }
+}
+
+/// Start the batch just formed by `r.batcher` (read via
+/// [`Batcher::ready`]): record waits, occupy the replica.
 fn start_batch(
     ri: usize,
     r: &mut Replica,
-    batch: Vec<Queued>,
     now: f64,
     heap: &mut Heap,
     seq: &mut u64,
-    traces: &mut HashMap<u64, RequestTrace>,
+    traces: &mut TraceStore,
 ) {
+    let batch = r.batcher.ready();
     let b = batch.len();
     r.queued -= b;
     let service = r.service.service_s(b, r.software) + r.penalty_s;
     let util = r.service.utilization(b);
     r.metrics.timeline.record_busy(now, service, util);
     r.metrics.busy_timeline.record_busy(now, service, 1.0);
-    r.metrics.batch_sizes.push(b);
+    r.metrics.record_batch(b);
     r.busy_s_since_eval += service;
-    for q in &batch {
-        let trace = traces.get_mut(&q.id).expect("trace");
+    for q in batch {
+        let trace = traces.get_mut(q.id as u32);
         // Batching stage: enqueue -> service start.
         trace.record_stage(Stage::Batching, now - q.enqueue_s);
-        r.in_flight.push((q.id, now, q.enqueue_s));
+        r.in_flight.push((q.id as u32, now, q.enqueue_s));
     }
     r.busy = true;
     push(heap, now + service, Event::ServerFree { replica: ri }, seq);
@@ -271,10 +313,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     let mut rng = Pcg64::seeded(config.seed);
     let mut router = Router::new(config.router);
     let horizon_s = config.duration_s.max(1.0) * 1.5;
+    let cold = config.cold_start.is_some();
+    let initial_state = if cold { ReplicaState::Warming } else { ReplicaState::Active };
     let mut replicas: Vec<Replica> = config
         .replicas
         .iter()
-        .map(|rc| Replica::new(rc, ReplicaState::Active, horizon_s))
+        .map(|rc| Replica::new(rc, initial_state, horizon_s))
         .collect();
     let mut scaler = config.autoscale.clone().map(Autoscaler::new);
     if let Some(s) = &scaler {
@@ -283,20 +327,32 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
             "initial fleet below min_replicas"
         );
     }
-    let mut scale = ScaleTimeline::new(replicas.len());
+    let mut scale = ScaleTimeline::new(if cold { 0 } else { replicas.len() });
 
     let mut heap: Heap = BinaryHeap::new();
     let mut seq = 0u64;
-    // Preallocate: rehashing the trace map mid-run showed up in the DES
-    // profile (§Perf).
-    let expected = config.arrivals.len() + config.closed_loop.unwrap_or(0) * 4;
-    let mut traces: HashMap<u64, RequestTrace> = HashMap::with_capacity(expected.max(64));
+    // Slab trace store: slot indices are dense and reused after
+    // completion, so the lifecycle is allocation-free at steady state.
+    let expected = config.arrivals.len() + config.closed_loop.unwrap_or(0);
+    let mut traces = TraceStore::with_capacity(expected.max(64));
     let mut next_id = 0u64;
+    // Cluster-level collector, fed directly at completion/rejection time —
+    // the end-of-run merge that copied every raw sample is gone (§Perf,
+    // PERF.md).
+    let mut collector = Collector::new();
+
+    // Cold initial fleet: every replica schedules its readiness.
+    if let Some(weight_bytes) = config.cold_start {
+        for (i, rc) in config.replicas.iter().enumerate() {
+            let coldstart = rc.software.coldstart_s(weight_bytes);
+            push(&mut heap, coldstart, Event::ReplicaReady { replica: i }, &mut seq);
+        }
+    }
 
     // Issue one request: samples its pipeline stages and schedules Enqueue.
     let mut issue = |arrival_s: f64,
                      heap: &mut Heap,
-                     traces: &mut HashMap<u64, RequestTrace>,
+                     traces: &mut TraceStore,
                      rng: &mut Pcg64,
                      seq: &mut u64| {
         let id = next_id;
@@ -306,8 +362,8 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         trace.record_stage(Stage::PreProcess, pre);
         trace.record_stage(Stage::Transmission, tx);
         let enqueue_at = trace.completed_s;
-        traces.insert(id, trace);
-        push(heap, enqueue_at, Event::Enqueue { id }, seq);
+        let slot = traces.insert(trace);
+        push(heap, enqueue_at, Event::Enqueue { slot }, seq);
     };
 
     // Seed initial arrivals.
@@ -331,33 +387,53 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         }
     }
 
-    // Scratch load/candidate vectors, reused across events (one allocation
-    // per run, not per request — this sits on the DES hot path).
-    let mut outstanding: Vec<usize> = Vec::with_capacity(replicas.len());
-    let mut candidates: Vec<usize> = Vec::with_capacity(replicas.len());
+    // Incremental router inputs (§Perf, PERF.md: the per-Enqueue rebuild
+    // of both vectors was the top cluster hot spot): per-replica
+    // outstanding counts, updated O(1) on accept/complete, and the
+    // ascending routable-candidate list, updated on state transitions.
+    let mut outstanding: Vec<usize> = vec![0; replicas.len()];
+    let mut routable: Vec<usize> = if cold { Vec::new() } else { (0..replicas.len()).collect() };
+    // Requests held at the routing tier while nothing is routable (FIFO),
+    // flushed the instant a replica becomes ready.
+    let mut held: Vec<u32> = Vec::new();
+    let mut events = 0u64;
 
     while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
+        events += 1;
         match event {
-            Event::Enqueue { id } => {
-                outstanding.clear();
-                outstanding.extend(replicas.iter().map(|r| r.outstanding()));
-                candidates.clear();
-                candidates.extend(
-                    replicas
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, r)| r.state == ReplicaState::Active)
-                        .map(|(i, _)| i),
-                );
-                let ri = router.route_among(now, &candidates, &outstanding);
-                let r = &mut replicas[ri];
-                if r.queued >= r.max_queue {
-                    // Overloaded replica: reject. The trace leaves the map
+            Event::Enqueue { slot } => {
+                if routable.is_empty() {
+                    // Empty candidate set (cold start, or every replica
+                    // warming/draining at a scale boundary): never handed
+                    // to the router. Hold while capacity is on the way;
+                    // reject if nothing will ever become routable.
+                    if replicas.iter().any(|r| r.state == ReplicaState::Warming) {
+                        held.push(slot);
+                    } else {
+                        let mut trace = traces.remove(slot);
+                        trace.dropped = true;
+                        collector.ingest(&trace);
+                        if config.closed_loop.is_some() && now < config.duration_s {
+                            issue(
+                                now + REJECT_RETRY_BACKOFF_S,
+                                &mut heap,
+                                &mut traces,
+                                &mut rng,
+                                &mut seq,
+                            );
+                        }
+                    }
+                    continue;
+                }
+                let ri = router.route_among(now, &routable, &outstanding);
+                if replicas[ri].queued >= replicas[ri].max_queue {
+                    // Overloaded replica: reject. The trace leaves the slab
                     // (no leak) and a closed-loop client re-issues after a
                     // short retry backoff instead of silently dying.
-                    let mut trace = traces.remove(&id).expect("trace");
+                    let mut trace = traces.remove(slot);
                     trace.dropped = true;
-                    r.metrics.collector.ingest(&trace);
+                    replicas[ri].metrics.collector.ingest(&trace);
+                    collector.ingest(&trace);
                     if config.closed_loop.is_some() && now < config.duration_s {
                         issue(
                             now + REJECT_RETRY_BACKOFF_S,
@@ -369,12 +445,24 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     }
                     continue;
                 }
-                r.batcher.enqueue(id, now);
+                {
+                    // Routing-tier hold time (cold-start window): the
+                    // trace reached the router at `completed_s`; any gap
+                    // to `now` was spent held and counts as queueing.
+                    let trace = traces.get_mut(slot);
+                    if now > trace.completed_s {
+                        let hold = now - trace.completed_s;
+                        trace.record_stage(Stage::Batching, hold);
+                    }
+                }
+                let r = &mut replicas[ri];
+                r.batcher.enqueue(slot as u64, now);
                 r.queued += 1;
+                outstanding[ri] += 1;
                 if !r.busy {
                     match r.batcher.poll(now) {
-                        Decision::Dispatch(batch) => {
-                            start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                        Decision::Dispatch(_) => {
+                            start_batch(ri, r, now, &mut heap, &mut seq, &mut traces)
                         }
                         Decision::WakeAt(t) => {
                             push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
@@ -391,9 +479,8 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     continue; // busy replica polls again at ServerFree
                 }
                 match replicas[ri].batcher.on_wake(now) {
-                    Decision::Dispatch(batch) => {
-                        let r = &mut replicas[ri];
-                        start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                    Decision::Dispatch(_) => {
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
                     }
                     // Stale wake (its batch already dispatched): re-arm for
                     // the oldest queued request's true deadline.
@@ -405,12 +492,18 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
             }
             Event::ServerFree { replica: ri } => {
                 replicas[ri].busy = false;
-                // Complete in-flight requests: inference + request overhead
-                // + post-processing, then collect on this replica.
-                let finished: Vec<(u64, f64, f64)> = replicas[ri].in_flight.drain(..).collect();
+                // Complete in-flight requests in place (no drain-collect):
+                // inference + request overhead + post-processing, then
+                // collect on this replica and the cluster.
                 let overhead = replicas[ri].software.request_overhead_s;
-                for (id, started, enqueued) in finished {
-                    let mut trace = traces.remove(&id).expect("trace");
+                let n_done = replicas[ri].in_flight.len();
+                // Indexed loop (not an iterator): each body iteration needs
+                // `replicas`, `traces`, and the issue closure mutably, so no
+                // borrow of `in_flight` may live across it.
+                #[allow(clippy::needless_range_loop)]
+                for k in 0..n_done {
+                    let (slot, started, enqueued) = replicas[ri].in_flight[k];
+                    let mut trace = traces.remove(slot);
                     trace.record_stage(Stage::Inference, now - started + overhead);
                     let (_, _, post) = config.path.sample(&mut rng);
                     trace.record_stage(Stage::PostProcess, post);
@@ -419,17 +512,19 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // response-time probe at the routing tier would see.
                     router.observe(ri, now - enqueued + overhead);
                     replicas[ri].metrics.collector.ingest(&trace);
+                    collector.ingest(&trace);
                     // Closed loop: this client's next request enters now
                     // (and is routed fresh at its enqueue time).
                     if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
                         issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
                     }
                 }
+                replicas[ri].in_flight.clear();
+                outstanding[ri] -= n_done;
                 // Drain this replica's backlog.
                 match replicas[ri].batcher.poll(now) {
-                    Decision::Dispatch(batch) => {
-                        let r = &mut replicas[ri];
-                        start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                    Decision::Dispatch(_) => {
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
                     }
                     Decision::WakeAt(t) => {
                         push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
@@ -451,8 +546,14 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
             Event::ReplicaReady { replica: ri } => {
                 debug_assert_eq!(replicas[ri].state, ReplicaState::Warming);
                 replicas[ri].state = ReplicaState::Active;
+                insert_routable(&mut routable, ri);
                 let active = count_state(&replicas, ReplicaState::Active);
                 scale.record(now, ScaleEventKind::Ready, ri, active);
+                // Flush requests held at the routing tier, in arrival
+                // order (the sequence counter keeps the FIFO exact).
+                for slot in held.drain(..) {
+                    push(&mut heap, now, Event::Enqueue { slot }, &mut seq);
+                }
             }
             Event::ScaleEval => {
                 let Some(scaler) = scaler.as_mut() else { continue };
@@ -460,7 +561,9 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 let active = count_state(&replicas, ReplicaState::Active);
                 let warming = count_state(&replicas, ReplicaState::Warming);
                 let draining = count_state(&replicas, ReplicaState::Draining);
-                let mut queued_total = 0usize;
+                // Requests held at the routing tier are demand no replica
+                // has absorbed yet: they count toward outstanding work.
+                let mut queued_total = held.len();
                 let mut busy_total = 0.0f64;
                 for r in replicas.iter_mut() {
                     if r.state == ReplicaState::Active {
@@ -493,6 +596,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         let coldstart = cfg.template.software.coldstart_s(cfg.weight_bytes);
                         let ri = replicas.len();
                         replicas.push(Replica::new(&cfg.template, ReplicaState::Warming, horizon_s));
+                        outstanding.push(0);
                         scale.record(now, ScaleEventKind::AddRequested, ri, active);
                         push(&mut heap, now + coldstart, Event::ReplicaReady { replica: ri }, &mut seq);
                     }
@@ -508,6 +612,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             .map(|(i, _)| i)
                             .expect("decide() returned Remove with no active replica");
                         replicas[victim].state = ReplicaState::Draining;
+                        remove_routable(&mut routable, victim);
                         scale.record(now, ScaleEventKind::DrainStarted, victim, active - 1);
                         // Already idle and empty: retire on the spot.
                         if !replicas[victim].busy && replicas[victim].outstanding() == 0 {
@@ -525,12 +630,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         }
     }
 
-    let mut collector = Collector::new();
-    for r in &replicas {
-        collector.merge(&r.metrics.collector);
-    }
-    // Single source of truth for drops: the collectors (every rejected
-    // trace was ingested by exactly one replica collector).
+    // Every issued trace was completed or rejected; the slab must be
+    // empty or the conservation invariant is broken upstream.
+    debug_assert!(traces.is_empty(), "trace leak: {} live traces at end of run", traces.len());
+
+    // Single source of truth for drops: the cluster collector ingested
+    // every rejected trace exactly once (replica queue or routing tier).
     let dropped = collector.dropped;
     ClusterResult {
         collector,
@@ -538,6 +643,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         scale,
         dropped,
         issued: next_id,
+        events,
     }
 }
 
@@ -569,6 +675,7 @@ mod tests {
             replicas: (0..n).map(|_| replica(5.0)).collect(),
             router,
             autoscale: None,
+            cold_start: None,
             path: RequestPath::local(Processors::none()),
             seed: 5,
         }
@@ -581,11 +688,14 @@ mod tests {
         let r = run(&cfg);
         assert_eq!(r.collector.completed + r.dropped, n);
         assert_eq!(r.issued, n);
-        // The cluster merge agrees with the per-replica sums.
+        // The cluster collector agrees with the per-replica sums.
         let completed: u64 = r.replicas.iter().map(|m| m.collector.completed).sum();
         assert_eq!(completed, r.collector.completed);
         let dropped: u64 = r.replicas.iter().map(|m| m.collector.dropped).sum();
         assert_eq!(dropped, r.dropped);
+        // The event count covers at least one enqueue + one completion
+        // per request.
+        assert!(r.events >= 2 * n);
     }
 
     #[test]
@@ -609,11 +719,11 @@ mod tests {
             let (a, b) = (run(&base(3, 150.0, 10.0, router)), run(&base(3, 150.0, 10.0, router)));
             assert_eq!(a.collector.completed, b.collector.completed, "{}", router.label());
             assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.events, b.events);
             for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
-                assert_eq!(ra.batch_sizes, rb.batch_sizes, "{}", router.label());
+                assert_eq!(ra.batch_sizes(), rb.batch_sizes(), "{}", router.label());
             }
-            let (mut ca, mut cb) = (a.collector, b.collector);
-            assert_eq!(ca.e2e.percentile(99.0), cb.e2e.percentile(99.0));
+            assert_eq!(a.collector.e2e.percentile(99.0), b.collector.e2e.percentile(99.0));
         }
     }
 
@@ -636,8 +746,7 @@ mod tests {
             r4.collector.completed,
             r1.collector.completed
         );
-        let (mut c1, mut c4) = (r1.collector, r4.collector);
-        assert!(c4.e2e.percentile(99.0) < c1.e2e.percentile(99.0));
+        assert!(r4.collector.e2e.percentile(99.0) < r1.collector.e2e.percentile(99.0));
     }
 
     #[test]
@@ -701,6 +810,54 @@ mod tests {
         assert_eq!(r.scale.initial, 3);
         assert!(r.scale.events.is_empty());
         assert_eq!(r.scale.max_active(), 3);
+    }
+
+    #[test]
+    fn cold_start_holds_requests_at_routing_tier() {
+        // Regression (empty candidate set): a cold fleet has zero routable
+        // replicas while every early request arrives — these used to reach
+        // `route_among` with an empty slice. They must be held and served
+        // once the first replica warms, with exact conservation.
+        let mut cfg = base(2, 100.0, 10.0, RouterPolicy::LeastOutstanding);
+        cfg.cold_start = Some(50_000_000);
+        let coldstart = backends::TRIS.coldstart_s(50_000_000);
+        assert!(coldstart > 0.5, "scenario needs a visible cold start, got {coldstart}");
+        let n = cfg.arrivals.len() as u64;
+        let r = run(&cfg);
+        assert_eq!(r.collector.completed + r.dropped, n, "conservation across the hold");
+        assert_eq!(r.dropped, 0, "held requests must not be dropped");
+        // The fleet came up through Ready events from an initial 0.
+        assert_eq!(r.scale.initial, 0);
+        assert_eq!(r.scale.count(ScaleEventKind::Ready), 2);
+        assert_eq!(r.scale.max_active(), 2);
+        // A request that arrived at ~t=0 could not complete before the
+        // cold start elapsed, and its wait shows up as queueing time.
+        let first_e2e = r.collector.e2e.max();
+        assert!(
+            first_e2e >= coldstart * 0.9,
+            "earliest requests must pay the cold start: max e2e {first_e2e} vs {coldstart}"
+        );
+        assert!(r.collector.stage(Stage::Batching).max() >= coldstart * 0.9);
+    }
+
+    #[test]
+    fn cold_start_closed_loop_clients_survive_the_hold() {
+        // Closed-loop clients issue at t=0 into a fully cold fleet: every
+        // first request is held, the chains resume after warm-up, and
+        // accounting stays exact.
+        let mut cfg = base(2, 1.0, 15.0, RouterPolicy::LeastOutstanding);
+        cfg.arrivals = vec![];
+        cfg.closed_loop = Some(4);
+        cfg.cold_start = Some(10_000_000);
+        let r = run(&cfg);
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
+        assert!(r.collector.completed > 100, "chains must resume: {}", r.collector.completed);
+        assert_eq!(r.scale.count(ScaleEventKind::Ready), 2);
+        // Determinism across runs, including the held-flush ordering.
+        let r2 = run(&cfg);
+        assert_eq!(r.collector.completed, r2.collector.completed);
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.e2e.percentile(99.0), r2.collector.e2e.percentile(99.0));
     }
 
     #[test]

@@ -155,11 +155,13 @@ fn batcher_thread(
     let mut pending: std::collections::HashMap<u64, LiveRequest> = Default::default();
     let mut wake_at: Option<f64> = None;
 
-    let dispatch = |batch: Vec<super::batcher::Queued>,
+    // The batch slice borrows the batcher's reusable buffer (the
+    // decide/dispatch cycle allocates nothing per batch — §Perf, PERF.md).
+    let dispatch = |batch: &[super::batcher::Queued],
                     pending: &mut std::collections::HashMap<u64, LiveRequest>,
                     t: f64| {
         let requests: Vec<(LiveRequest, f64)> = batch
-            .into_iter()
+            .iter()
             .filter_map(|q| pending.remove(&q.id).map(|r| (r, t - q.enqueue_s)))
             .collect();
         if !requests.is_empty() {
@@ -178,9 +180,9 @@ fn batcher_thread(
                 let id = req.id;
                 pending.insert(id, req);
                 match batcher.on_arrival(id, t) {
-                    Decision::Dispatch(b) => {
+                    Decision::Dispatch(_) => {
                         wake_at = None;
-                        dispatch(b, &mut pending, now_s());
+                        dispatch(batcher.ready(), &mut pending, now_s());
                     }
                     Decision::WakeAt(t) => wake_at = Some(t),
                     Decision::Wait => {}
@@ -191,7 +193,7 @@ fn batcher_thread(
                 if wake_at.map_or(false, |t| now_s() >= t) {
                     wake_at = None;
                     match batcher.on_wake(now_s()) {
-                        Decision::Dispatch(b) => dispatch(b, &mut pending, now_s()),
+                        Decision::Dispatch(_) => dispatch(batcher.ready(), &mut pending, now_s()),
                         // Stale wake: the batch it was armed for already
                         // dispatched; re-arm for the corrected deadline.
                         Decision::WakeAt(t) => wake_at = Some(t),
@@ -203,8 +205,8 @@ fn batcher_thread(
         }
     }
     // Drain what's left as one final flush.
-    if let Decision::Dispatch(b) = batcher.on_wake(now_s() + 1e9) {
-        dispatch(b, &mut pending, now_s());
+    if let Decision::Dispatch(_) = batcher.on_wake(now_s() + 1e9) {
+        dispatch(batcher.ready(), &mut pending, now_s());
     }
     let _ = batch_tx.send(None); // executor shutdown signal
 }

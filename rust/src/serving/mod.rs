@@ -15,6 +15,10 @@
 //! elastic when an `autoscale` policy is attached: scale-up pays the
 //! software's cold start before taking traffic; scale-down drains the
 //! replica before retiring it (no request lost at a scale event).
+//!
+//! The DES request lifecycle is allocation-free at steady state and its
+//! throughput (simulated requests/sec) is tracked per PR — see PERF.md
+//! and `benches/l4_des_throughput.rs`.
 
 pub mod autoscale;
 pub mod backends;

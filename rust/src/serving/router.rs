@@ -72,6 +72,9 @@ pub struct Router {
     /// What routing decisions see: refreshed from `live` every `stale_s`.
     snapshot: Vec<Option<f64>>,
     last_refresh_s: f64,
+    /// Identity candidate list `[0, 1, ..., n-1]` cached for the
+    /// fixed-fleet [`Router::route`] wrapper (no per-call allocation).
+    all: Vec<usize>,
 }
 
 impl Router {
@@ -88,6 +91,7 @@ impl Router {
             live: Vec::new(),
             snapshot: Vec::new(),
             last_refresh_s: f64::NEG_INFINITY,
+            all: Vec::new(),
         }
     }
 
@@ -131,8 +135,16 @@ impl Router {
     /// `outstanding[i]` is replica i's queued + in-service count and every
     /// replica is routable.
     pub fn route(&mut self, outstanding: &[usize]) -> usize {
-        let candidates: Vec<usize> = (0..outstanding.len()).collect();
-        self.route_among(0.0, &candidates, outstanding)
+        // Reuse the cached identity list (swap it out to appease the
+        // borrow checker; steady state allocates nothing).
+        let mut all = std::mem::take(&mut self.all);
+        if all.len() != outstanding.len() {
+            all.clear();
+            all.extend(0..outstanding.len());
+        }
+        let pick = self.route_among(0.0, &all, outstanding);
+        self.all = all;
+        pick
     }
 
     /// Pick the replica for the next request among `candidates` (the

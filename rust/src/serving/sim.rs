@@ -90,16 +90,17 @@ pub fn run(config: &SimConfig) -> SimResult {
         }],
         router: RouterPolicy::RoundRobin,
         autoscale: None,
+        cold_start: None,
         path: config.path,
         seed: config.seed,
     };
     let mut result = cluster::run(&cluster_cfg);
-    let replica = result.replicas.remove(0);
+    let mut replica = result.replicas.remove(0);
     SimResult {
         collector: result.collector,
         timeline: replica.timeline,
         busy_timeline: replica.busy_timeline,
-        batch_sizes: replica.batch_sizes,
+        batch_sizes: replica.take_batch_sizes(),
         dropped: result.dropped,
         issued: result.issued,
     }
@@ -144,7 +145,7 @@ mod tests {
     #[test]
     fn latency_at_least_service_time() {
         let cfg = base_config(10.0, 10.0);
-        let mut r = run(&cfg);
+        let r = run(&cfg);
         // Every completed request took >= device time + request overhead.
         let min = r.collector.e2e.percentile(0.1);
         assert!(min >= 0.005 + backends::TFS.request_overhead_s - 1e-9, "{min}");
@@ -153,10 +154,8 @@ mod tests {
     #[test]
     fn overload_grows_tail_latency() {
         // Service 5ms => capacity 200 rps. 150 rps loaded vs 30 rps light.
-        let light = run(&base_config(30.0, 30.0)).collector;
-        let loaded = run(&base_config(150.0, 30.0)).collector;
-        let mut l = light;
-        let mut h = loaded;
+        let l = run(&base_config(30.0, 30.0)).collector;
+        let h = run(&base_config(150.0, 30.0)).collector;
         assert!(h.e2e.percentile(99.0) > l.e2e.percentile(99.0), "queueing should raise p99");
     }
 
@@ -237,8 +236,7 @@ mod tests {
         let b = run(&cfg);
         assert_eq!(a.collector.completed, b.collector.completed);
         assert_eq!(a.batch_sizes, b.batch_sizes);
-        let (mut ca, mut cb) = (a.collector, b.collector);
-        assert_eq!(ca.e2e.percentile(99.0), cb.e2e.percentile(99.0));
+        assert_eq!(a.collector.e2e.percentile(99.0), b.collector.e2e.percentile(99.0));
     }
 
     #[test]
@@ -248,8 +246,8 @@ mod tests {
         small.policy = Policy::Fixed { size: 1, timeout_s: 0.1 };
         let mut large = base_config(40.0, 20.0);
         large.policy = Policy::Fixed { size: 16, timeout_s: 0.1 };
-        let mut rs = run(&small).collector;
-        let mut rl = run(&large).collector;
+        let rs = run(&small).collector;
+        let rl = run(&large).collector;
         assert!(
             rl.e2e.percentile(95.0) > rs.e2e.percentile(95.0),
             "batch 16 p95 {} should exceed batch 1 p95 {}",
@@ -303,7 +301,7 @@ mod tests {
         assert_eq!(r.batch_sizes, vec![4, 1]);
         // E's batching wait is the longest of the run and must be the full
         // timeout (0.010 from its 0.008 enqueue), not the stale wake's 0.002.
-        let max_wait = r.collector.per_stage[&Stage::Batching].max();
+        let max_wait = r.collector.stage(Stage::Batching).max();
         assert!((max_wait - 0.010).abs() < 1e-9, "batching wait {max_wait}");
     }
 

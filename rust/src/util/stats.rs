@@ -5,12 +5,40 @@
 //! CDF plots. `Summary` keeps raw samples (exact quantiles, fine at
 //! benchmark scale); `LogHistogram` is the O(1)-memory recorder used on
 //! the serving hot path.
+//!
+//! Percentiles are exact order statistics via `select_nth_unstable` (O(n)
+//! selection, no full sort, `&self` — see PERF.md §Percentile selection);
+//! `min`/`max`/`sum` are maintained incrementally at record time so
+//! report-generation loops calling them repeatedly stay O(1) per call.
 
 /// Exact-sample summary. Percentiles use the nearest-rank method.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Summary {
     samples: Vec<f64>,
+    /// True while `samples` is known to be ascending (set by [`Self::cdf`],
+    /// cleared by every record); lets `percentile` answer by direct index.
     sorted: bool,
+    /// Selection scratch for `&self` percentiles: a lazily filled copy of
+    /// `samples` (in some permutation). Samples are append-only, so a
+    /// length match means the scratch holds exactly the current multiset
+    /// and back-to-back p50/p95/p99 calls share one fill.
+    scratch: std::cell::RefCell<Vec<f64>>,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary {
+            samples: Vec::new(),
+            sorted: true,
+            scratch: std::cell::RefCell::new(Vec::new()),
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
 }
 
 impl Summary {
@@ -21,11 +49,33 @@ impl Summary {
     pub fn record(&mut self, x: f64) {
         self.samples.push(x);
         self.sorted = false;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
     }
 
     pub fn extend(&mut self, xs: &[f64]) {
-        self.samples.extend_from_slice(xs);
+        for &x in xs {
+            self.record(x);
+        }
+    }
+
+    /// Move-based merge: appends `other`'s raw samples without going
+    /// through per-sample records, and takes the buffer wholesale when
+    /// `self` is still empty (the first merge of a fan-in copies nothing).
+    pub fn absorb(&mut self, mut other: Summary) {
+        if self.samples.is_empty() {
+            *self = other;
+            return;
+        }
+        if other.samples.is_empty() {
+            return;
+        }
+        self.samples.append(&mut other.samples);
         self.sorted = false;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 
     pub fn len(&self) -> usize {
@@ -40,7 +90,7 @@ impl Summary {
         if self.samples.is_empty() {
             return f64::NAN;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.samples.len() as f64
     }
 
     pub fn stddev(&self) -> f64 {
@@ -52,50 +102,73 @@ impl Summary {
         (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample (`INFINITY` when empty). O(1): maintained at record.
     pub fn min(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+        self.min
     }
 
+    /// Largest sample (`NEG_INFINITY` when empty). O(1): maintained at record.
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        self.max
     }
 
+    /// Sum of all samples. O(1): maintained at record.
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
     }
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
             self.sorted = true;
         }
     }
 
-    /// Nearest-rank percentile, q in [0, 100].
-    pub fn percentile(&mut self, q: f64) -> f64 {
-        if self.samples.is_empty() {
+    /// Nearest-rank percentile, q in [0, 100]. Exact order statistic via
+    /// `select_nth_unstable` over a reused scratch copy — O(n) with no
+    /// `&mut self`, no per-call allocation after the first, and identical
+    /// values to the former full-sort path.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.samples.len();
+        if n == 0 {
             return f64::NAN;
         }
-        self.ensure_sorted();
-        let n = self.samples.len();
         let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
-        self.samples[rank.min(n) - 1]
+        let idx = rank.min(n) - 1;
+        if self.sorted {
+            return self.samples[idx];
+        }
+        if idx == 0 {
+            return self.min;
+        }
+        if idx == n - 1 {
+            return self.max;
+        }
+        let mut scratch = self.scratch.borrow_mut();
+        if scratch.len() != n {
+            scratch.clone_from(&self.samples);
+        }
+        // Any permutation of the multiset selects the same order statistic.
+        let (_, nth, _) =
+            scratch.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).expect("NaN sample"));
+        *nth
     }
 
-    pub fn p50(&mut self) -> f64 {
+    pub fn p50(&self) -> f64 {
         self.percentile(50.0)
     }
 
-    pub fn p95(&mut self) -> f64 {
+    pub fn p95(&self) -> f64 {
         self.percentile(95.0)
     }
 
-    pub fn p99(&mut self) -> f64 {
+    pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
 
     /// Empirical CDF evaluated at `points` many evenly spaced sample
-    /// quantiles; returns (value, cumulative probability) pairs.
+    /// quantiles; returns (value, cumulative probability) pairs. Sorts the
+    /// sample buffer once (subsequent `percentile` calls are then O(1)).
     pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
         if self.samples.is_empty() {
             return Vec::new();
@@ -279,6 +352,44 @@ mod tests {
     }
 
     #[test]
+    fn percentile_needs_no_mut_and_preserves_sample_order() {
+        // &self percentile: callable through a shared reference, and the
+        // publicly visible sample buffer stays in insertion order.
+        let mut s = Summary::new();
+        s.extend(&[5.0, 1.0, 3.0]);
+        let view = &s;
+        assert_eq!(view.percentile(50.0), 3.0);
+        assert_eq!(view.percentile(100.0), 5.0);
+        assert_eq!(view.samples(), &[5.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn percentile_after_cdf_uses_sorted_fast_path() {
+        let mut s = Summary::new();
+        s.extend(&[9.0, 2.0, 7.0, 4.0]);
+        let _ = s.cdf(4); // sorts in place
+        assert_eq!(s.percentile(50.0), 4.0);
+        assert_eq!(s.percentile(100.0), 9.0);
+    }
+
+    #[test]
+    fn absorb_moves_samples_exactly() {
+        let mut a = Summary::new();
+        a.extend(&[1.0, 10.0]);
+        let mut b = Summary::new();
+        b.extend(&[4.0]);
+        let mut all = Summary::new();
+        all.absorb(a);
+        all.absorb(b);
+        all.absorb(Summary::new()); // empty absorb is a no-op
+        assert_eq!(all.len(), 3);
+        assert_eq!(all.min(), 1.0);
+        assert_eq!(all.max(), 10.0);
+        assert!((all.sum() - 15.0).abs() < 1e-12);
+        assert_eq!(all.percentile(50.0), 4.0);
+    }
+
+    #[test]
     fn cdf_monotone() {
         let mut s = Summary::new();
         s.extend(&[5.0, 1.0, 3.0, 2.0, 4.0, 9.0, 0.5]);
@@ -361,7 +472,7 @@ mod tests {
 
     #[test]
     fn empty_summaries_are_nan() {
-        let mut s = Summary::new();
+        let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
         assert!(s.fraction_below(1.0).is_nan());

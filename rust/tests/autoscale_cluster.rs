@@ -35,6 +35,7 @@ fn spike_config(software: &'static Software, autoscale: Option<AutoscaleConfig>)
         replicas: vec![replica(software), replica(software)],
         router: RouterPolicy::LeastOutstanding,
         autoscale,
+        cold_start: None,
         path: RequestPath::local(Processors::none()),
         seed: 909,
     }

@@ -162,11 +162,11 @@ fn prop_batcher_conserves_and_bounds() {
             let mut dispatched: Vec<u64> = Vec::new();
             for (i, &t) in times.iter().enumerate() {
                 match b.on_arrival(i as u64, t) {
-                    Decision::Dispatch(batch) => {
-                        if batch.len() > *max_size {
-                            return Err(format!("batch {} > max {}", batch.len(), max_size));
+                    Decision::Dispatch(n) => {
+                        if n > *max_size || b.ready().len() != n {
+                            return Err(format!("batch {} > max {}", n, max_size));
                         }
-                        dispatched.extend(batch.iter().map(|q| q.id));
+                        dispatched.extend(b.ready().iter().map(|q| q.id));
                     }
                     Decision::WakeAt(w) => {
                         if w < t - 1e-12 {
@@ -180,7 +180,7 @@ fn prop_batcher_conserves_and_bounds() {
             let end = times.last().copied().unwrap_or(0.0) + 1e6;
             loop {
                 match b.on_wake(end) {
-                    Decision::Dispatch(batch) => dispatched.extend(batch.iter().map(|q| q.id)),
+                    Decision::Dispatch(_) => dispatched.extend(b.ready().iter().map(|q| q.id)),
                     _ => break,
                 }
             }
@@ -209,13 +209,13 @@ fn prop_batcher_fifo_across_batches() {
             let mut b = Batcher::new(Policy::Dynamic { max_size: *max_size, max_wait_s: 0.01 });
             let mut order = Vec::new();
             for (i, &t) in times.iter().enumerate() {
-                if let Decision::Dispatch(batch) = b.on_arrival(i as u64, t) {
-                    order.extend(batch.iter().map(|q| q.id));
+                if let Decision::Dispatch(_) = b.on_arrival(i as u64, t) {
+                    order.extend(b.ready().iter().map(|q| q.id));
                 }
             }
             loop {
                 match b.on_wake(1e9) {
-                    Decision::Dispatch(batch) => order.extend(batch.iter().map(|q| q.id)),
+                    Decision::Dispatch(_) => order.extend(b.ready().iter().map(|q| q.id)),
                     _ => break,
                 }
             }

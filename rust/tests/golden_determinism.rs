@@ -1,0 +1,697 @@
+//! Golden determinism suite for the DES hot-path overhaul (PERF.md).
+//!
+//! The optimization had to be behavior-preserving, bit for bit. This
+//! suite embeds a *reference engine*: a faithful copy of the
+//! pre-refactor cluster event loop — `HashMap` trace map, per-batch
+//! `Vec`-allocating batcher dispatch, router inputs rebuilt over all
+//! replicas on every enqueue, full-sort nearest-rank percentiles — and
+//! asserts the optimized production engine reproduces its output
+//! exactly on fixed seeds:
+//!
+//!  * issued / completed / dropped counts — exact,
+//!  * per-replica completed counts and batch-size sequences — exact,
+//!  * p50 / p95 / p99 / p100 end-to-end latency — bit-identical
+//!    (percentiles are order statistics, so the sample *set* must match
+//!    to the last bit),
+//!  * first-arrival / last-completion window — bit-identical.
+//!
+//! The reference engine reuses the shared pure components (workload
+//! generation, `Router`, `Autoscaler`, `ServiceModel`, request-path
+//! sampling, the PCG RNG) so both engines see identical stochastic
+//! draws; only the bookkeeping under test differs.
+
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::autoscale::{Autoscaler, ScaleDecision, ScalePolicy, ScaleSignal};
+use inferbench::serving::cluster::{
+    run as run_production, AutoscaleConfig, ClusterConfig, REJECT_RETRY_BACKOFF_S, ReplicaConfig,
+};
+use inferbench::serving::{
+    backends, DynamicBatching, Policy, Router, RouterPolicy, ServiceModel, Software,
+};
+use inferbench::util::rng::Pcg64;
+use inferbench::workload::{generate, Pattern};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+// ---------------------------------------------------------------------
+// Reference engine: the pre-refactor implementation, preserved verbatim
+// in structure (allocating, O(R)-per-request) as the golden oracle.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct RQueued {
+    id: u64,
+    enqueue_s: f64,
+}
+
+#[derive(Debug)]
+enum RDecision {
+    Wait,
+    WakeAt(f64),
+    Dispatch(Vec<RQueued>),
+}
+
+/// The pre-refactor batcher: dispatch allocates a fresh `Vec` per batch
+/// and the oldest deadline is re-derived by a full queue scan.
+struct RefBatcher {
+    policy: Policy,
+    queue: Vec<RQueued>,
+}
+
+impl RefBatcher {
+    fn new(policy: Policy) -> Self {
+        RefBatcher { policy, queue: Vec::new() }
+    }
+
+    fn enqueue(&mut self, id: u64, now: f64) {
+        self.queue.push(RQueued { id, enqueue_s: now });
+    }
+
+    fn poll(&mut self, now: f64) -> RDecision {
+        self.decide(now)
+    }
+
+    fn on_wake(&mut self, now: f64) -> RDecision {
+        self.decide(now)
+    }
+
+    fn decide(&mut self, now: f64) -> RDecision {
+        if self.queue.is_empty() {
+            return RDecision::Wait;
+        }
+        match self.policy {
+            Policy::Single => self.dispatch_up_to(1),
+            Policy::Fixed { size, timeout_s } => {
+                if self.queue.len() >= size {
+                    self.dispatch_up_to(size)
+                } else {
+                    self.deadline_or_dispatch(self.oldest() + timeout_s, now, size)
+                }
+            }
+            Policy::Dynamic { max_size, max_wait_s } => {
+                if self.queue.len() >= max_size {
+                    self.dispatch_up_to(max_size)
+                } else {
+                    self.deadline_or_dispatch(self.oldest() + max_wait_s, now, max_size)
+                }
+            }
+        }
+    }
+
+    fn deadline_or_dispatch(&mut self, deadline: f64, now: f64, max: usize) -> RDecision {
+        if deadline <= now {
+            self.dispatch_up_to(max)
+        } else {
+            RDecision::WakeAt(deadline)
+        }
+    }
+
+    fn oldest(&self) -> f64 {
+        self.queue.iter().map(|q| q.enqueue_s).fold(f64::INFINITY, f64::min)
+    }
+
+    fn dispatch_up_to(&mut self, n: usize) -> RDecision {
+        let n = n.min(self.queue.len());
+        self.queue.sort_by(|a, b| a.enqueue_s.partial_cmp(&b.enqueue_s).unwrap());
+        let batch: Vec<RQueued> = self.queue.drain(..n).collect();
+        RDecision::Dispatch(batch)
+    }
+}
+
+/// The pre-refactor effective-policy mapping (software batching quality).
+fn ref_effective(policy: Policy, software: &Software) -> (Policy, f64) {
+    match (policy, software.dynamic_batching) {
+        (Policy::Dynamic { .. }, DynamicBatching::None) => (Policy::Single, 0.0),
+        (
+            Policy::Dynamic { max_size, max_wait_s },
+            DynamicBatching::Naive { penalty_s, effective_cap },
+        ) => (Policy::Dynamic { max_size: max_size.min(effective_cap), max_wait_s }, penalty_s),
+        (p, _) => (p, 0.0),
+    }
+}
+
+/// The pre-refactor per-request trace: only the fields the goldens need;
+/// `completed_s` accumulates stage durations in the same order and with
+/// the same floating-point operations as the production trace.
+#[derive(Debug, Clone, Copy)]
+struct RTrace {
+    arrival_s: f64,
+    completed_s: f64,
+}
+
+impl RTrace {
+    fn add(&mut self, seconds: f64) {
+        self.completed_s += seconds;
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RState {
+    Warming,
+    Active,
+    Draining,
+    Retired,
+}
+
+struct RReplica {
+    batcher: RefBatcher,
+    penalty_s: f64,
+    software: &'static Software,
+    service: ServiceModel,
+    max_queue: usize,
+    state: RState,
+    busy: bool,
+    queued: usize,
+    in_flight: Vec<(u64, f64, f64)>,
+    busy_s_since_eval: f64,
+    completed: u64,
+    dropped: u64,
+    batch_sizes: Vec<usize>,
+}
+
+impl RReplica {
+    fn new(rc: &ReplicaConfig, state: RState) -> RReplica {
+        let (policy, penalty_s) = ref_effective(rc.policy, rc.software);
+        RReplica {
+            batcher: RefBatcher::new(policy),
+            penalty_s,
+            software: rc.software,
+            service: rc.service.clone(),
+            max_queue: rc.max_queue,
+            state,
+            busy: false,
+            queued: 0,
+            in_flight: Vec::new(),
+            busy_s_since_eval: 0.0,
+            completed: 0,
+            dropped: 0,
+            batch_sizes: Vec::new(),
+        }
+    }
+
+    fn outstanding(&self) -> usize {
+        self.queued + self.in_flight.len()
+    }
+}
+
+#[derive(Debug)]
+enum REvent {
+    Enqueue { id: u64 },
+    Wake { replica: usize, scheduled_for: f64 },
+    ServerFree { replica: usize },
+    ReplicaReady { replica: usize },
+    ScaleEval,
+}
+
+#[derive(Debug, PartialEq, PartialOrd)]
+struct RKey(f64, u64);
+
+impl Eq for RKey {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for RKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("NaN event time")
+    }
+}
+
+#[derive(Debug)]
+struct REventBox(REvent);
+
+impl PartialEq for REventBox {
+    fn eq(&self, _other: &Self) -> bool {
+        true // ordering handled entirely by RKey
+    }
+}
+
+impl Eq for REventBox {}
+
+impl PartialOrd for REventBox {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for REventBox {
+    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+type RHeap = BinaryHeap<Reverse<(RKey, REventBox)>>;
+
+fn rpush(heap: &mut RHeap, t: f64, e: REvent, seq: &mut u64) {
+    heap.push(Reverse((RKey(t, *seq), REventBox(e))));
+    *seq += 1;
+}
+
+struct RefResult {
+    issued: u64,
+    completed: u64,
+    dropped: u64,
+    /// End-to-end latencies in completion order.
+    e2e: Vec<f64>,
+    first_arrival_s: f64,
+    last_completion_s: f64,
+    per_replica_completed: Vec<u64>,
+    per_replica_dropped: Vec<u64>,
+    per_replica_batches: Vec<Vec<usize>>,
+}
+
+impl RefResult {
+    /// Old Summary percentile: full sort + nearest rank.
+    fn percentile(&self, q: f64) -> f64 {
+        let mut sorted = self.e2e.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+        sorted[rank.min(n) - 1]
+    }
+}
+
+/// The pre-refactor cluster event loop, structure preserved.
+fn run_reference(config: &ClusterConfig) -> RefResult {
+    assert!(config.cold_start.is_none(), "reference engine predates cold_start");
+    let mut rng = Pcg64::seeded(config.seed);
+    let mut router = Router::new(config.router);
+    let mut replicas: Vec<RReplica> =
+        config.replicas.iter().map(|rc| RReplica::new(rc, RState::Active)).collect();
+    let mut scaler = config.autoscale.clone().map(Autoscaler::new);
+
+    let mut heap: RHeap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut traces: HashMap<u64, RTrace> = HashMap::new();
+    let mut next_id = 0u64;
+    let mut completed = 0u64;
+    let mut dropped = 0u64;
+    let mut e2e: Vec<f64> = Vec::new();
+    let mut first_arrival_s = f64::INFINITY;
+    let mut last_completion_s = 0.0f64;
+
+    let mut issue = |arrival_s: f64,
+                     heap: &mut RHeap,
+                     traces: &mut HashMap<u64, RTrace>,
+                     rng: &mut Pcg64,
+                     seq: &mut u64| {
+        let id = next_id;
+        next_id += 1;
+        let (pre, tx, _post) = config.path.sample(rng);
+        let mut trace = RTrace { arrival_s, completed_s: arrival_s };
+        trace.add(pre);
+        trace.add(tx);
+        let enqueue_at = trace.completed_s;
+        traces.insert(id, trace);
+        rpush(heap, enqueue_at, REvent::Enqueue { id }, seq);
+    };
+
+    if let Some(clients) = config.closed_loop {
+        for _ in 0..clients {
+            issue(0.0, &mut heap, &mut traces, &mut rng, &mut seq);
+        }
+    } else {
+        for a in &config.arrivals {
+            if a.time_s < config.duration_s {
+                issue(a.time_s, &mut heap, &mut traces, &mut rng, &mut seq);
+            }
+        }
+    }
+
+    if let Some(s) = &scaler {
+        let interval = s.config().eval_interval_s;
+        if interval < config.duration_s {
+            rpush(&mut heap, interval, REvent::ScaleEval, &mut seq);
+        }
+    }
+
+    // Pre-refactor routing state: both vectors rebuilt per enqueue.
+    let mut outstanding: Vec<usize> = Vec::new();
+    let mut candidates: Vec<usize> = Vec::new();
+
+    // Start a batch on replica `ri` (old Vec-consuming form).
+    fn start_batch(
+        ri: usize,
+        r: &mut RReplica,
+        batch: Vec<RQueued>,
+        now: f64,
+        heap: &mut RHeap,
+        seq: &mut u64,
+        traces: &mut HashMap<u64, RTrace>,
+    ) {
+        let b = batch.len();
+        r.queued -= b;
+        let service = r.service.service_s(b, r.software) + r.penalty_s;
+        r.batch_sizes.push(b);
+        r.busy_s_since_eval += service;
+        for q in &batch {
+            let trace = traces.get_mut(&q.id).expect("trace");
+            trace.add(now - q.enqueue_s); // batching stage
+            r.in_flight.push((q.id, now, q.enqueue_s));
+        }
+        r.busy = true;
+        rpush(heap, now + service, REvent::ServerFree { replica: ri }, seq);
+    }
+
+    fn count_state(replicas: &[RReplica], state: RState) -> usize {
+        replicas.iter().filter(|r| r.state == state).count()
+    }
+
+    while let Some(Reverse((RKey(now, _), REventBox(event)))) = heap.pop() {
+        match event {
+            REvent::Enqueue { id } => {
+                outstanding.clear();
+                outstanding.extend(replicas.iter().map(|r| r.outstanding()));
+                candidates.clear();
+                candidates.extend(
+                    replicas
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r.state == RState::Active)
+                        .map(|(i, _)| i),
+                );
+                let ri = router.route_among(now, &candidates, &outstanding);
+                let r = &mut replicas[ri];
+                if r.queued >= r.max_queue {
+                    traces.remove(&id).expect("trace");
+                    r.dropped += 1;
+                    dropped += 1;
+                    if config.closed_loop.is_some() && now < config.duration_s {
+                        issue(
+                            now + REJECT_RETRY_BACKOFF_S,
+                            &mut heap,
+                            &mut traces,
+                            &mut rng,
+                            &mut seq,
+                        );
+                    }
+                    continue;
+                }
+                r.batcher.enqueue(id, now);
+                r.queued += 1;
+                if !r.busy {
+                    match r.batcher.poll(now) {
+                        RDecision::Dispatch(batch) => {
+                            start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                        }
+                        RDecision::WakeAt(t) => {
+                            rpush(&mut heap, t, REvent::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                        }
+                        RDecision::Wait => {}
+                    }
+                }
+            }
+            REvent::Wake { replica: ri, scheduled_for } => {
+                if replicas[ri].state == RState::Retired
+                    || replicas[ri].busy
+                    || scheduled_for < now - 1e-12
+                {
+                    continue;
+                }
+                match replicas[ri].batcher.on_wake(now) {
+                    RDecision::Dispatch(batch) => {
+                        let r = &mut replicas[ri];
+                        start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                    }
+                    RDecision::WakeAt(t) => {
+                        rpush(&mut heap, t, REvent::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                    }
+                    RDecision::Wait => {}
+                }
+            }
+            REvent::ServerFree { replica: ri } => {
+                replicas[ri].busy = false;
+                let finished: Vec<(u64, f64, f64)> = replicas[ri].in_flight.drain(..).collect();
+                let overhead = replicas[ri].software.request_overhead_s;
+                for (id, started, enqueued) in finished {
+                    let mut trace = traces.remove(&id).expect("trace");
+                    trace.add(now - started + overhead); // inference stage
+                    let (_, _, post) = config.path.sample(&mut rng);
+                    trace.add(post); // post-process stage
+                    router.observe(ri, now - enqueued + overhead);
+                    replicas[ri].completed += 1;
+                    completed += 1;
+                    e2e.push(trace.completed_s - trace.arrival_s);
+                    first_arrival_s = first_arrival_s.min(trace.arrival_s);
+                    last_completion_s = last_completion_s.max(trace.completed_s);
+                    if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
+                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
+                    }
+                }
+                match replicas[ri].batcher.poll(now) {
+                    RDecision::Dispatch(batch) => {
+                        let r = &mut replicas[ri];
+                        start_batch(ri, r, batch, now, &mut heap, &mut seq, &mut traces)
+                    }
+                    RDecision::WakeAt(t) => {
+                        rpush(&mut heap, t, REvent::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                    }
+                    RDecision::Wait => {}
+                }
+                if replicas[ri].state == RState::Draining
+                    && !replicas[ri].busy
+                    && replicas[ri].outstanding() == 0
+                {
+                    replicas[ri].state = RState::Retired;
+                }
+            }
+            REvent::ReplicaReady { replica: ri } => {
+                replicas[ri].state = RState::Active;
+            }
+            REvent::ScaleEval => {
+                let Some(scaler) = scaler.as_mut() else { continue };
+                let interval = scaler.config().eval_interval_s;
+                let active = count_state(&replicas, RState::Active);
+                let warming = count_state(&replicas, RState::Warming);
+                let draining = count_state(&replicas, RState::Draining);
+                let mut queued_total = 0usize;
+                let mut busy_total = 0.0f64;
+                for r in replicas.iter_mut() {
+                    if r.state == RState::Active {
+                        queued_total += r.outstanding();
+                        busy_total += r.busy_s_since_eval.min(interval);
+                    }
+                    r.busy_s_since_eval = (r.busy_s_since_eval - interval).max(0.0);
+                }
+                let utilization = if active == 0 {
+                    0.0
+                } else {
+                    (busy_total / (interval * active as f64)).min(1.0)
+                };
+                let signal = ScaleSignal {
+                    active,
+                    warming,
+                    draining,
+                    outstanding: queued_total,
+                    utilization,
+                };
+                match scaler.decide(now, signal) {
+                    ScaleDecision::Add => {
+                        let cfg = scaler.config();
+                        let coldstart = cfg.template.software.coldstart_s(cfg.weight_bytes);
+                        let ri = replicas.len();
+                        replicas.push(RReplica::new(&cfg.template, RState::Warming));
+                        rpush(&mut heap, now + coldstart, REvent::ReplicaReady { replica: ri }, &mut seq);
+                    }
+                    ScaleDecision::Remove => {
+                        let victim = replicas
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, r)| r.state == RState::Active)
+                            .min_by_key(|(i, r)| (r.outstanding(), Reverse(*i)))
+                            .map(|(i, _)| i)
+                            .expect("Remove with no active replica");
+                        replicas[victim].state = RState::Draining;
+                        if !replicas[victim].busy && replicas[victim].outstanding() == 0 {
+                            replicas[victim].state = RState::Retired;
+                        }
+                    }
+                    ScaleDecision::Hold => {}
+                }
+                let next = now + interval;
+                if next < config.duration_s {
+                    rpush(&mut heap, next, REvent::ScaleEval, &mut seq);
+                }
+            }
+        }
+    }
+
+    RefResult {
+        issued: next_id,
+        completed,
+        dropped,
+        e2e,
+        first_arrival_s,
+        last_completion_s,
+        per_replica_completed: replicas.iter().map(|r| r.completed).collect(),
+        per_replica_dropped: replicas.iter().map(|r| r.dropped).collect(),
+        per_replica_batches: replicas.into_iter().map(|r| r.batch_sizes).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden comparisons
+// ---------------------------------------------------------------------
+
+fn assert_engines_match(config: &ClusterConfig, label: &str) {
+    let golden = run_reference(config);
+    let got = run_production(config);
+    assert_eq!(got.issued, golden.issued, "{label}: issued");
+    assert_eq!(got.collector.completed, golden.completed, "{label}: completed");
+    assert_eq!(got.dropped, golden.dropped, "{label}: dropped");
+    assert_eq!(got.collector.e2e.len() as u64, golden.completed, "{label}: sample count");
+    for q in [50.0, 95.0, 99.0, 100.0] {
+        if golden.completed > 0 {
+            assert_eq!(
+                got.collector.e2e.percentile(q),
+                golden.percentile(q),
+                "{label}: p{q} must be bit-identical"
+            );
+        }
+    }
+    if golden.completed > 0 {
+        assert_eq!(
+            got.collector.first_arrival_s, golden.first_arrival_s,
+            "{label}: first arrival"
+        );
+        assert_eq!(
+            got.collector.last_completion_s, golden.last_completion_s,
+            "{label}: last completion"
+        );
+        // Mean is order-sensitive in the last ulp (the cluster collector
+        // now ingests in completion order instead of a per-replica merge)
+        // — allow only that.
+        let golden_mean = golden.e2e.iter().sum::<f64>() / golden.e2e.len() as f64;
+        let got_mean = got.collector.e2e.mean();
+        assert!(
+            (got_mean - golden_mean).abs() <= 1e-12 * golden_mean.abs().max(1.0),
+            "{label}: mean {got_mean} vs golden {golden_mean}"
+        );
+    }
+    assert_eq!(
+        got.replicas.len(),
+        golden.per_replica_completed.len(),
+        "{label}: replica count"
+    );
+    for (i, m) in got.replicas.iter().enumerate() {
+        assert_eq!(
+            m.collector.completed, golden.per_replica_completed[i],
+            "{label}: replica {i} completed"
+        );
+        assert_eq!(
+            m.collector.dropped, golden.per_replica_dropped[i],
+            "{label}: replica {i} dropped"
+        );
+        assert_eq!(
+            m.batch_sizes(),
+            golden.per_replica_batches[i],
+            "{label}: replica {i} batch sequence"
+        );
+    }
+}
+
+fn replica(per_req_ms: f64, policy: Policy, software: &'static Software) -> ReplicaConfig {
+    ReplicaConfig {
+        software,
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+            utilization: 0.6,
+        },
+        policy,
+        max_queue: 100_000,
+    }
+}
+
+#[test]
+fn golden_fixed_fleet_every_router() {
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstanding,
+        RouterPolicy::PowerOfTwoChoices { seed: 17 },
+        RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.25 },
+    ] {
+        let dynamic = Policy::Dynamic { max_size: 8, max_wait_s: 0.003 };
+        let cfg = ClusterConfig {
+            arrivals: generate(&Pattern::Poisson { rate: 300.0 }, 20.0, 31),
+            closed_loop: None,
+            duration_s: 20.0,
+            replicas: vec![
+                replica(3.0, dynamic, &backends::TRIS),
+                replica(5.0, dynamic, &backends::TFS),
+                replica(9.0, dynamic, &backends::ONNX_FASTAPI),
+            ],
+            router,
+            autoscale: None,
+            cold_start: None,
+            path: RequestPath::local(Processors::image()),
+            seed: 31,
+        };
+        assert_engines_match(&cfg, router.label());
+    }
+}
+
+#[test]
+fn golden_autoscale_spike() {
+    let cfg = ClusterConfig {
+        arrivals: generate(
+            &Pattern::Spike { base_rate: 80.0, burst_rate: 500.0, start_s: 10.0, duration_s: 8.0 },
+            40.0,
+            77,
+        ),
+        closed_loop: None,
+        duration_s: 40.0,
+        replicas: vec![replica(5.0, Policy::Single, &backends::TFS)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: Some(AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth {
+                up_per_replica: 6.0,
+                down_per_replica: 0.5,
+                cooldown_s: 1.0,
+            },
+            min_replicas: 1,
+            max_replicas: 6,
+            template: replica(5.0, Policy::Single, &backends::TFS),
+            weight_bytes: 50_000_000,
+            eval_interval_s: 0.5,
+        }),
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed: 77,
+    };
+    assert_engines_match(&cfg, "autoscale-spike");
+}
+
+#[test]
+fn golden_closed_loop_with_rejections() {
+    let cfg = ClusterConfig {
+        arrivals: vec![],
+        closed_loop: Some(6),
+        duration_s: 8.0,
+        replicas: vec![
+            ReplicaConfig { max_queue: 2, ..replica(4.0, Policy::Single, &backends::TRIS) },
+            ReplicaConfig { max_queue: 2, ..replica(4.0, Policy::Single, &backends::TRIS) },
+        ],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed: 13,
+    };
+    let golden = run_reference(&cfg);
+    assert!(golden.dropped > 0, "scenario must exercise the rejection path");
+    assert_engines_match(&cfg, "closed-loop-rejections");
+}
+
+#[test]
+fn golden_fixed_batch_with_image_pipeline() {
+    let cfg = ClusterConfig {
+        arrivals: generate(&Pattern::Uniform { rate: 120.0 }, 15.0, 5),
+        closed_loop: None,
+        duration_s: 15.0,
+        replicas: vec![replica(6.0, Policy::Fixed { size: 4, timeout_s: 0.02 }, &backends::TFS)],
+        router: RouterPolicy::RoundRobin,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::image()),
+        seed: 9,
+    };
+    assert_engines_match(&cfg, "fixed-batch-image");
+}

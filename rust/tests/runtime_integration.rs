@@ -139,7 +139,7 @@ fn live_server_serves_real_requests() {
     assert_eq!(server.info.variants.len(), 2); // b1, b8
     let report = run_load(&server, 40.0, 2.0, 3).unwrap();
     assert!(report.completed > 30, "completed {}", report.completed);
-    let mut e2e = report.e2e;
+    let e2e = report.e2e;
     assert!(e2e.percentile(50.0) > 0.0);
     assert!(e2e.percentile(99.0) < 5.0, "p99 {}s is pathological", e2e.percentile(99.0));
     server.shutdown().unwrap();

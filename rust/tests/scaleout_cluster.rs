@@ -41,6 +41,7 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
         ],
         router,
         autoscale: None,
+        cold_start: None,
         path: RequestPath::local(Processors::none()),
         seed: 7,
     }
@@ -71,6 +72,7 @@ fn n1_cluster_matches_single_server_sim() {
         }],
         router: RouterPolicy::RoundRobin,
         autoscale: None,
+        cold_start: None,
         path: sim_cfg.path,
         seed: sim_cfg.seed,
     };
@@ -79,10 +81,9 @@ fn n1_cluster_matches_single_server_sim() {
     assert_eq!(s.collector.completed, c.collector.completed);
     assert_eq!(s.dropped, c.dropped);
     assert_eq!(s.issued, c.issued);
-    assert_eq!(s.batch_sizes, c.replicas[0].batch_sizes);
-    let (mut cs, mut cc) = (s.collector, c.collector);
-    assert_eq!(cs.e2e.percentile(99.0), cc.e2e.percentile(99.0));
-    assert_eq!(cs.e2e.percentile(50.0), cc.e2e.percentile(50.0));
+    assert_eq!(s.batch_sizes, c.replicas[0].batch_sizes());
+    assert_eq!(s.collector.e2e.percentile(99.0), c.collector.e2e.percentile(99.0));
+    assert_eq!(s.collector.e2e.percentile(50.0), c.collector.e2e.percentile(50.0));
 }
 
 #[test]
@@ -97,11 +98,15 @@ fn cluster_deterministic_per_seed_for_every_router() {
         assert_eq!(a.collector.completed, b.collector.completed, "{}", router.label());
         assert_eq!(a.dropped, b.dropped, "{}", router.label());
         for (i, (ra, rb)) in a.replicas.iter().zip(&b.replicas).enumerate() {
-            assert_eq!(ra.batch_sizes, rb.batch_sizes, "{} replica {i}", router.label());
+            assert_eq!(ra.batch_sizes(), rb.batch_sizes(), "{} replica {i}", router.label());
             assert_eq!(ra.collector.completed, rb.collector.completed);
         }
-        let (mut ca, mut cb) = (a.collector, b.collector);
-        assert_eq!(ca.e2e.percentile(99.0), cb.e2e.percentile(99.0), "{}", router.label());
+        assert_eq!(
+            a.collector.e2e.percentile(99.0),
+            b.collector.e2e.percentile(99.0),
+            "{}",
+            router.label()
+        );
     }
 }
 
@@ -114,8 +119,8 @@ fn least_outstanding_beats_round_robin_on_heterogeneous_replicas() {
     let n = hetero_cluster(RouterPolicy::RoundRobin, 15.0).arrivals.len() as u64;
     assert_eq!(rr.collector.completed + rr.dropped, n);
     assert_eq!(lo.collector.completed + lo.dropped, n);
-    let (mut crr, mut clo) = (rr.collector, lo.collector);
-    let (p99_rr, p99_lo) = (crr.e2e.percentile(99.0), clo.e2e.percentile(99.0));
+    let (p99_rr, p99_lo) =
+        (rr.collector.e2e.percentile(99.0), lo.collector.e2e.percentile(99.0));
     assert!(
         p99_lo <= p99_rr,
         "least-outstanding p99 {p99_lo}s must not exceed round-robin p99 {p99_rr}s"
@@ -140,6 +145,5 @@ fn power_of_two_tail_between_rr_and_lo_or_better() {
     // closer to least-outstanding than to round-robin here.
     let rr = run_cluster(&hetero_cluster(RouterPolicy::RoundRobin, 15.0));
     let p2c = run_cluster(&hetero_cluster(RouterPolicy::PowerOfTwoChoices { seed: 5 }, 15.0));
-    let (mut crr, mut cp) = (rr.collector, p2c.collector);
-    assert!(cp.e2e.percentile(99.0) < crr.e2e.percentile(99.0));
+    assert!(p2c.collector.e2e.percentile(99.0) < rr.collector.e2e.percentile(99.0));
 }
