@@ -30,6 +30,7 @@ batching:
         workers: 4,
         policy: SchedulerPolicy::qa_sjf(),
         time_scale: 1.0,
+        threads_per_worker: 1,
         seed: 7,
     });
 

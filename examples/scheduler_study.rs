@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             workers: 3,
             policy: p,
             time_scale: 100.0,
+            threads_per_worker: 1,
             seed: 0,
         });
         // Same job stream for every policy: a burst of mixed-length jobs.

@@ -5,11 +5,16 @@
 //!  (b) p99 vs arrival rate
 //!  (c) spike load: base 50 rps with a 5x burst
 //!  (d) CDF across the four serving platforms at 100 rps
+//!
+//! Every section is a grid of independent simulations, so each runs its
+//! cells through the parallel sweep pool (`sweep::map_indexed`); results
+//! come back in cell order and are identical at any core count.
 
 use inferbench::coordinator::job::service_model_for;
 use inferbench::models::catalog;
 use inferbench::pipeline::{Processors, RequestPath, LAN};
 use inferbench::serving::{backends, run, Policy, SimConfig};
+use inferbench::sweep;
 use inferbench::util::render;
 use inferbench::workload::{generate, Pattern};
 
@@ -31,13 +36,20 @@ fn base_config(rate: f64) -> SimConfig {
 }
 
 fn main() {
+    let threads = sweep::default_threads();
     println!("=== Fig 11a: tail latency CDF vs batch size (TFS, ResNet50, 100 rps) ===\n");
+    let batch_cfgs: Vec<(usize, SimConfig)> = [1usize, 4, 8, 16]
+        .iter()
+        .map(|&batch| {
+            let mut cfg = base_config(100.0);
+            cfg.policy = Policy::Fixed { size: batch, timeout_s: 0.05 };
+            (batch, cfg)
+        })
+        .collect();
+    let results = sweep::map_indexed(&batch_cfgs, threads, |_, (_, cfg)| run(cfg));
     let mut series = Vec::new();
     let mut rows = Vec::new();
-    for batch in [1usize, 4, 8, 16] {
-        let mut cfg = base_config(100.0);
-        cfg.policy = Policy::Fixed { size: batch, timeout_s: 0.05 };
-        let r = run(&cfg);
+    for ((batch, _), r) in batch_cfgs.iter().zip(results) {
         let mut c = r.collector;
         rows.push(vec![
             format!("batch {batch}"),
@@ -51,27 +63,39 @@ fn main() {
     print!("{}", render::cdf_plot("\nlatency CDF (x: seconds)", &series, 60, 12));
 
     println!("\n=== Fig 11b: p99 vs arrival rate (TFS, batch 1; capacity ~170 rps) ===\n");
-    let mut items = Vec::new();
-    for rate in [25.0, 50.0, 100.0, 140.0, 160.0, 175.0] {
-        let mut cfg = base_config(rate);
-        cfg.policy = Policy::Single; // paper serves b=1; queueing sets the tail
-        let r = run(&cfg);
-        let c = r.collector;
-        items.push((format!("{rate:>3.0} rps"), c.e2e.percentile(99.0) * 1e3));
-    }
+    let rate_cfgs: Vec<(f64, SimConfig)> = [25.0, 50.0, 100.0, 140.0, 160.0, 175.0]
+        .iter()
+        .map(|&rate| {
+            let mut cfg = base_config(rate);
+            cfg.policy = Policy::Single; // paper serves b=1; queueing sets the tail
+            (rate, cfg)
+        })
+        .collect();
+    let results = sweep::map_indexed(&rate_cfgs, threads, |_, (_, cfg)| run(cfg));
+    let items: Vec<(String, f64)> = rate_cfgs
+        .iter()
+        .zip(&results)
+        .map(|((rate, _), r)| {
+            (format!("{rate:>3.0} rps"), r.collector.e2e.percentile(99.0) * 1e3)
+        })
+        .collect();
     print!("{}", render::bar_chart("p99 latency (ms) vs arrival rate", &items, 40));
     println!("(tail blows up approaching capacity — the paper's 11b shape)");
 
     println!("\n=== Fig 11c: spike load (base 50 rps, burst 300 rps for 20s, batch 1) ===\n");
-    let mut cfg = base_config(50.0);
-    cfg.policy = Policy::Single;
-    cfg.arrivals = generate(
+    let mut spike_cfg = base_config(50.0);
+    spike_cfg.policy = Policy::Single;
+    spike_cfg.arrivals = generate(
         &Pattern::Spike { base_rate: 50.0, burst_rate: 300.0, start_s: 40.0, duration_s: 20.0 },
         DURATION,
         77,
     );
-    let r = run(&cfg);
-    let c = r.collector;
+    let mut steady_cfg = base_config(50.0);
+    steady_cfg.policy = Policy::Single;
+    let pair = [spike_cfg, steady_cfg];
+    let results = sweep::map_indexed(&pair, threads, |_, cfg| run(cfg));
+    let (r, steady_r) = (&results[0], &results[1]);
+    let c = &r.collector;
     println!(
         "completed {} dropped {}; p50 {:.1} ms p99 {:.1} ms max {:.1} ms",
         c.completed,
@@ -80,9 +104,7 @@ fn main() {
         c.e2e.percentile(99.0) * 1e3,
         c.e2e.max() * 1e3,
     );
-    let mut steady_cfg = base_config(50.0);
-    steady_cfg.policy = Policy::Single;
-    let steady = run(&steady_cfg).collector.e2e.percentile(99.0);
+    let steady = steady_r.collector.e2e.percentile(99.0);
     println!(
         "steady-state p99 at 50 rps: {:.1} ms -> spike inflates p99 by {:.1}x (paper: TFS cannot absorb spikes)",
         steady * 1e3,
@@ -90,12 +112,18 @@ fn main() {
     );
 
     println!("\n=== Fig 11d: four serving platforms (ResNet50, V100, 100 rps) ===\n");
+    let sw_cfgs: Vec<SimConfig> = backends::ALL
+        .iter()
+        .map(|&sw| {
+            let mut cfg = base_config(100.0);
+            cfg.software = sw;
+            cfg
+        })
+        .collect();
+    let results = sweep::map_indexed(&sw_cfgs, threads, |_, cfg| run(cfg));
     let mut series = Vec::new();
     let mut rows = Vec::new();
-    for sw in backends::ALL {
-        let mut cfg = base_config(100.0);
-        cfg.software = sw;
-        let r = run(&cfg);
+    for (&sw, r) in backends::ALL.iter().zip(results) {
         let mut c = r.collector;
         rows.push(vec![
             sw.name.to_string(),

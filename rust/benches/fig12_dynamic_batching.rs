@@ -4,14 +4,29 @@
 //! Paper reading: TrIS exploits the feature and scales throughput
 //! steadily; TFS's naive scheduler can perform *worse than no batching*
 //! at small concurrency.
+//!
+//! The concurrency × (software, batching) grid — 28 independent
+//! closed-loop simulations — runs on the parallel sweep pool
+//! (`sweep::map_indexed`); the shape checks reuse the grid cells instead
+//! of re-running them.
 
 use inferbench::coordinator::job::service_model_for;
 use inferbench::models::catalog;
 use inferbench::pipeline::{Processors, RequestPath, LAN};
 use inferbench::serving::{backends, run, Policy, SimConfig, Software};
+use inferbench::sweep;
 use inferbench::util::render;
 
 const DURATION: f64 = 60.0;
+const CONCURRENCIES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// One grid cell: a closed-loop run at some concurrency, with dynamic
+/// batching on or off.
+struct Cell {
+    concurrency: usize,
+    software: &'static Software,
+    dynamic: bool,
+}
 
 fn throughput(software: &'static Software, concurrency: usize, dynamic: bool) -> (f64, f64) {
     let rn = catalog::find("resnet50").unwrap();
@@ -35,13 +50,43 @@ fn throughput(software: &'static Software, concurrency: usize, dynamic: bool) ->
 }
 
 fn main() {
-    println!("=== Fig 12: dynamic batching throughput vs concurrency (ResNet50, V100) ===\n");
+    let threads = sweep::default_threads();
+    println!(
+        "=== Fig 12: dynamic batching throughput vs concurrency (ResNet50, V100; \
+         sweep on {threads} threads) ===\n"
+    );
+    // Row-major grid: per concurrency, the four (software, batching)
+    // variants in column order.
+    let mut cells = Vec::new();
+    for &concurrency in &CONCURRENCIES {
+        for (software, dynamic) in [
+            (&backends::TFS, false),
+            (&backends::TFS, true),
+            (&backends::TRIS, false),
+            (&backends::TRIS, true),
+        ] {
+            cells.push(Cell { concurrency, software, dynamic });
+        }
+    }
+    let results = sweep::map_indexed(&cells, threads, |_, cell| {
+        throughput(cell.software, cell.concurrency, cell.dynamic)
+    });
+    let at = |concurrency: usize, software_id: &str, dynamic: bool| -> (f64, f64) {
+        let idx = cells
+            .iter()
+            .position(|c| {
+                c.concurrency == concurrency && c.software.id == software_id && c.dynamic == dynamic
+            })
+            .expect("cell in grid");
+        results[idx]
+    };
+
     let mut rows = Vec::new();
-    for concurrency in [1usize, 2, 4, 8, 16, 32, 64] {
-        let (tfs_dyn, tfs_b) = throughput(&backends::TFS, concurrency, true);
-        let (tfs_off, _) = throughput(&backends::TFS, concurrency, false);
-        let (tris_dyn, tris_b) = throughput(&backends::TRIS, concurrency, true);
-        let (tris_off, _) = throughput(&backends::TRIS, concurrency, false);
+    for &concurrency in &CONCURRENCIES {
+        let (tfs_off, _) = at(concurrency, "tfs", false);
+        let (tfs_dyn, tfs_b) = at(concurrency, "tfs", true);
+        let (tris_off, _) = at(concurrency, "tris", false);
+        let (tris_dyn, tris_b) = at(concurrency, "tris", true);
         rows.push(vec![
             concurrency.to_string(),
             format!("{tfs_off:.0}"),
@@ -57,10 +102,10 @@ fn main() {
             &rows
         )
     );
-    let (tfs_dyn_small, _) = throughput(&backends::TFS, 2, true);
-    let (tfs_off_small, _) = throughput(&backends::TFS, 2, false);
-    let (tris_dyn_big, _) = throughput(&backends::TRIS, 64, true);
-    let (tris_off_big, _) = throughput(&backends::TRIS, 64, false);
+    let (tfs_dyn_small, _) = at(2, "tfs", true);
+    let (tfs_off_small, _) = at(2, "tfs", false);
+    let (tris_dyn_big, _) = at(64, "tris", true);
+    let (tris_off_big, _) = at(64, "tris", false);
     println!(
         "\nPaper shape checks: TFS dynamic < TFS no-batch at concurrency 2: {} ({:.0} vs {:.0} rps); \
          TrIS dynamic >> no-batch at concurrency 64: {} ({:.0} vs {:.0} rps).",

@@ -15,12 +15,18 @@
 //!      even though TrIS serves each request *faster* once warm;
 //!  (b) drain-on-remove preserves `issued == completed + dropped` exactly
 //!      across every scale event — no request is lost at retirement.
+//!
+//! The policy × software grid runs on the parallel sweep engine
+//! (`inferbench::sweep`); cells come back in plan order, bit-identical to
+//! a serial sweep, and the replica-count timeline is read straight from
+//! the grid cell instead of a fifth run.
 
 use inferbench::metrics::ScaleEventKind;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
-use inferbench::serving::cluster::{run, ClusterConfig, ClusterResult, ReplicaConfig};
+use inferbench::serving::cluster::{ClusterConfig, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel, Software};
+use inferbench::sweep::{self, SweepPlan};
 use inferbench::util::render;
 use inferbench::workload::{generate, Pattern};
 
@@ -56,8 +62,8 @@ fn policies() -> [(&'static str, ScalePolicy); 2] {
     ]
 }
 
-fn run_one(software: &'static Software, policy: ScalePolicy) -> ClusterResult {
-    let cfg = ClusterConfig {
+fn config_for(software: &'static Software, policy: ScalePolicy) -> ClusterConfig {
+    ClusterConfig {
         arrivals: generate(
             &Pattern::Spike {
                 base_rate: BASE_RATE,
@@ -83,55 +89,64 @@ fn run_one(software: &'static Software, policy: ScalePolicy) -> ClusterResult {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         seed: SEED,
-    };
-    run(&cfg)
+    }
 }
 
 fn main() {
+    let threads = sweep::default_threads();
     println!(
         "=== Fig 17: autoscale under spike load ({BASE_RATE} rps base, {BURST_RATE} rps burst \
-         [{BURST_START}, {}) s, 2 -> max 8 replicas) ===\n",
+         [{BURST_START}, {}) s, 2 -> max 8 replicas; sweep on {threads} threads) ===\n",
         BURST_START + BURST_LEN
     );
+    let mut grid = Vec::new();
+    for (plabel, policy) in policies() {
+        for software in [&backends::TFS, &backends::TRIS] {
+            grid.push((plabel, policy, software));
+        }
+    }
+    let mut plan = SweepPlan::new(SEED);
+    for &(plabel, policy, software) in &grid {
+        plan.push(format!("{plabel}/{}", software.id), move |_seed| config_for(software, policy));
+    }
+    let outcome = plan.run(threads);
+
     let mut rows = Vec::new();
     // (policy label, software id) -> burst-window p99 seconds
     let mut burst_p99 = Vec::new();
-    for (plabel, policy) in policies() {
-        for software in [&backends::TFS, &backends::TRIS] {
-            let r = run_one(software, policy);
-            // (b) conservation across every scale event, exactly.
-            assert_eq!(
-                r.collector.completed + r.dropped,
-                r.issued,
-                "{plabel}/{}: drain-on-remove lost requests",
-                software.id
-            );
-            let adds = r.scale.count(ScaleEventKind::AddRequested);
-            let retires = r.scale.count(ScaleEventKind::Retired);
-            assert!(adds >= 1, "{plabel}/{}: burst must trigger scale-up", software.id);
-            assert!(
-                retires >= 1,
-                "{plabel}/{}: post-burst lull must trigger drain-on-remove",
-                software.id
-            );
-            let steady = r.collector.e2e_in_window(0.0, BURST_START);
-            let in_burst =
-                r.collector.e2e_in_window(BURST_START, BURST_START + BURST_LEN);
-            let recovery =
-                r.collector.e2e_in_window(BURST_START + BURST_LEN, BURST_START + BURST_LEN + 12.0);
-            burst_p99.push(((plabel, software.id), in_burst.percentile(99.0)));
-            rows.push(vec![
-                plabel.to_string(),
-                software.id.to_string(),
-                format!("{:.1}", software.coldstart_s(WEIGHT_BYTES)),
-                format!("{}", r.scale.max_active()),
-                format!("{adds}/{retires}"),
-                format!("{:.1}", steady.percentile(99.0) * 1e3),
-                format!("{:.0}", in_burst.percentile(99.0) * 1e3),
-                format!("{:.1}", recovery.percentile(99.0) * 1e3),
-                r.dropped.to_string(),
-            ]);
-        }
+    for (&(plabel, _, software), cell) in grid.iter().zip(&outcome.cells) {
+        let r = &cell.result;
+        // (b) conservation across every scale event, exactly.
+        assert_eq!(
+            r.collector.completed + r.dropped,
+            r.issued,
+            "{plabel}/{}: drain-on-remove lost requests",
+            software.id
+        );
+        let adds = r.scale.count(ScaleEventKind::AddRequested);
+        let retires = r.scale.count(ScaleEventKind::Retired);
+        assert!(adds >= 1, "{plabel}/{}: burst must trigger scale-up", software.id);
+        assert!(
+            retires >= 1,
+            "{plabel}/{}: post-burst lull must trigger drain-on-remove",
+            software.id
+        );
+        let steady = r.collector.e2e_in_window(0.0, BURST_START);
+        let in_burst = r.collector.e2e_in_window(BURST_START, BURST_START + BURST_LEN);
+        let recovery =
+            r.collector.e2e_in_window(BURST_START + BURST_LEN, BURST_START + BURST_LEN + 12.0);
+        burst_p99.push(((plabel, software.id), in_burst.percentile(99.0)));
+        rows.push(vec![
+            plabel.to_string(),
+            software.id.to_string(),
+            format!("{:.1}", software.coldstart_s(WEIGHT_BYTES)),
+            format!("{}", r.scale.max_active()),
+            format!("{adds}/{retires}"),
+            format!("{:.1}", steady.percentile(99.0) * 1e3),
+            format!("{:.0}", in_burst.percentile(99.0) * 1e3),
+            format!("{:.1}", recovery.percentile(99.0) * 1e3),
+            r.dropped.to_string(),
+        ]);
     }
     print!(
         "{}",
@@ -151,10 +166,16 @@ fn main() {
         )
     );
 
-    // One replica-count timeline for the figure's narrative.
-    let r = run_one(&backends::TRIS, policies()[0].1);
+    // One replica-count timeline for the figure's narrative, read from
+    // the grid cell that already ran (queue-depth policy on TrIS).
+    let tris_qd = grid
+        .iter()
+        .zip(&outcome.cells)
+        .find(|(axis, _)| axis.0 == "queue-depth" && axis.2.id == "tris")
+        .map(|(_, cell)| &cell.result)
+        .expect("queue-depth/tris cell present");
     let series: Vec<String> =
-        r.scale.active_series().iter().map(|(t, n)| format!("{t:.1}s:{n}")).collect();
+        tris_qd.scale.active_series().iter().map(|(t, n)| format!("{t:.1}s:{n}")).collect();
     println!("\nTrIS/queue-depth active-replica timeline: {}", series.join(" -> "));
 
     // (a) same policy, slower cold start -> strictly worse burst p99.

@@ -7,11 +7,16 @@
 //! GPU curves come from the calibrated roofline model; the C1 column is
 //! the modeled full-scale CPU latency, with the *real measured* latency of
 //! the mini stand-in printed alongside for transparency (DESIGN.md §2).
+//!
+//! The batch × platform and model grids run through the parallel sweep
+//! pool (`sweep::map_indexed`): each row is an independent cell, results
+//! come back in row order, so the tables are identical at any core count.
 
 use inferbench::analysis::speedup::{modeled_cpu_latency, speedup_under_slo};
 use inferbench::hardware::{estimate, find, Parallelism};
 use inferbench::models::catalog::{self, Task};
 use inferbench::runtime::Engine;
+use inferbench::sweep;
 use inferbench::util::render;
 
 const BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
@@ -35,7 +40,7 @@ fn measured_mini_latency(engine: &Option<Engine>, model: &catalog::CatalogModel)
     loaded.warmup_and_measure(2, 5).ok()
 }
 
-fn latency_table(model: &catalog::CatalogModel, measured_mini: Option<f64>) {
+fn latency_table(model: &catalog::CatalogModel, measured_mini: Option<f64>, threads: usize) {
     let par = parallelism(model.task);
     let cpu = find("C1").unwrap();
     let cpu_s = modeled_cpu_latency(cpu, &model.profile, par);
@@ -47,8 +52,8 @@ fn latency_table(model: &catalog::CatalogModel, measured_mini: Option<f64>) {
             .map(|t| format!("; mini stand-in measured {} on this host", render::fmt_duration(t)))
             .unwrap_or_default()
     );
-    let mut rows = Vec::new();
-    for &b in &BATCHES {
+    // One cell per batch row (each covers the four GPU platforms).
+    let rows = sweep::map_indexed(&BATCHES, threads, |_, &b| {
         let mut row = vec![b.to_string()];
         for gid in ["G1", "G2", "G3", "G4"] {
             let g = find(gid).unwrap();
@@ -64,8 +69,8 @@ fn latency_table(model: &catalog::CatalogModel, measured_mini: Option<f64>) {
         } else {
             row.push("-".into());
         }
-        rows.push(row);
-    }
+        row
+    });
     print!(
         "{}",
         render::table(
@@ -76,6 +81,7 @@ fn latency_table(model: &catalog::CatalogModel, measured_mini: Option<f64>) {
 }
 
 fn main() {
+    let threads = sweep::default_threads();
     let engine = Engine::cpu("artifacts").ok();
     if engine.is_none() {
         eprintln!("(artifacts not found: CPU anchors fall back to the model — run `make artifacts`)");
@@ -85,18 +91,22 @@ fn main() {
     for name in ["bert_large", "resnet50"] {
         let m = catalog::find(name).unwrap();
         let measured = measured_mini_latency(&engine, m);
-        latency_table(m, measured);
+        latency_table(m, measured, threads);
     }
 
     println!("\n=== Fig 7c: GPU/CPU speedup under SLO (V100) ===\n");
     let v100 = find("G1").unwrap();
     let cpu = find("C1").unwrap();
-    let mut items = Vec::new();
-    let mut rows = Vec::new();
-    for m in catalog::speedup_study_models() {
+    let models = catalog::speedup_study_models();
+    // One cell per study model.
+    let cells = sweep::map_indexed(&models, threads, |_, m| {
         let par = parallelism(m.task);
         let cpu_s = modeled_cpu_latency(cpu, &m.profile, par);
-        let row = speedup_under_slo(m.name, v100, &m.profile, par, m.request_bytes, cpu_s, &BATCHES);
+        speedup_under_slo(m.name, v100, &m.profile, par, m.request_bytes, cpu_s, &BATCHES)
+    });
+    let mut items = Vec::new();
+    let mut rows = Vec::new();
+    for (m, row) in models.iter().zip(&cells) {
         items.push((format!("{} ({})", m.task.label(), m.name), row.speedup));
         rows.push(vec![
             m.task.label().to_string(),

@@ -6,38 +6,49 @@
 //!
 //! The paper's reading: CNN utilization grows with both batch and depth;
 //! Transformer utilization is driven more by depth.
+//!
+//! Each heat map is a depth × batch grid evaluated through the parallel
+//! sweep pool (`sweep::map_indexed`); cells come back in grid order, so
+//! the maps are identical at any core count.
 
 use inferbench::hardware::{estimate, find, Parallelism};
 use inferbench::models::analytic;
+use inferbench::sweep;
 use inferbench::util::render;
 
 const BATCHES: [usize; 5] = [1, 4, 8, 16, 32];
 const DEPTHS: [u64; 5] = [2, 4, 8, 12, 16];
 
+/// Evaluate `util(depth, batch)` over the whole grid in parallel and
+/// render it; values come back in (depth-major) grid order.
 fn heat(
     title: &str,
-    util: impl Fn(u64, usize) -> f64, // (depth, batch) -> utilization %
+    threads: usize,
+    util: impl Fn(u64, usize) -> f64 + Sync, // (depth, batch) -> utilization %
 ) {
+    let pairs: Vec<(u64, usize)> = DEPTHS
+        .iter()
+        .flat_map(|&d| BATCHES.iter().map(move |&b| (d, b)))
+        .collect();
+    let flat = sweep::map_indexed(&pairs, threads, |_, &(d, b)| util(d, b) * 100.0);
     let rows: Vec<String> = DEPTHS.iter().map(|d| format!("depth {d}")).collect();
     let cols: Vec<String> = BATCHES.iter().map(|b| format!("b{b}")).collect();
-    let values: Vec<Vec<f64>> = DEPTHS
-        .iter()
-        .map(|&d| BATCHES.iter().map(|&b| util(d, b) * 100.0).collect())
-        .collect();
+    let values: Vec<Vec<f64>> = flat.chunks(BATCHES.len()).map(|c| c.to_vec()).collect();
     print!("{}", render::heat_map(title, &rows, &cols, &values));
 }
 
 fn main() {
     let v100 = find("G1").unwrap();
+    let threads = sweep::default_threads();
 
     println!("=== Fig 9a: CNN generated models — GPU utilization %% (V100) ===\n");
-    heat("utilization(depth, batch), CNN c64 hw32", |d, b| {
+    heat("utilization(depth, batch), CNN c64 hw32", threads, |d, b| {
         let p = analytic::cnn(d, 64, 32, 3, 16);
         estimate(v100, &p, Parallelism::cnn(32), b, 0).utilization
     });
 
     println!("\n=== Fig 9b: Transformer generated models — GPU utilization %% (V100) ===\n");
-    heat("utilization(depth, batch), Transformer d256 h4 s64", |d, b| {
+    heat("utilization(depth, batch), Transformer d256 h4 s64", threads, |d, b| {
         let p = analytic::transformer(d, 256, 4, 64, 16);
         estimate(v100, &p, Parallelism::sequence(64), b, 0).utilization
     });

@@ -1,11 +1,14 @@
 //! L4: DES engine throughput — simulated requests/sec and events/sec of
-//! the cluster simulator itself (PERF.md). This is the perf trajectory
-//! tracker for the engine every fig7–fig17 benchmark runs on: InferBench's
-//! value proposition is cheap day-to-day evaluation, and serving studies
-//! need million-request scales to resolve tail behavior, so the simulator
-//! is benchmarked like any other hot path.
+//! the cluster simulator itself, plus cells/sec of the parallel sweep
+//! engine that runs whole benchmark grids (PERF.md). This is the perf
+//! trajectory tracker for the engine every fig7–fig17 benchmark runs on:
+//! InferBench's value proposition is cheap day-to-day evaluation, and
+//! serving studies need million-request scales to resolve tail behavior,
+//! so the simulator — and now the sweep layer above it — is benchmarked
+//! like any other hot path.
 //!
-//! Three scenarios × three scales (10k / 100k / 1M requests):
+//! Single-run matrix, three scenarios × three scales (10k / 100k / 1M
+//! requests), executed serially so each cell's wall time is unpolluted:
 //!  * `fixed-fleet`  — 4 heterogeneous replicas, dynamic batching,
 //!    least-outstanding routing, Poisson open-loop arrivals;
 //!  * `autoscale`    — spike load against an elastic 2→8 fleet
@@ -13,10 +16,15 @@
 //!  * `closed-loop`  — 64 closed-loop clients over 4 replicas (slot reuse:
 //!    the steady-state allocation-free path).
 //!
-//! Each cell reports wall time, simulated requests/sec, and processed
-//! events/sec, and the full matrix is written to `BENCH_des.json` at the
-//! repository root so the trajectory is tracked in-repo from this PR
-//! onward. Pass `--smoke` to run only the 10k scale (CI).
+//! Sweep matrix: a fig16-style grid (replicas × all four routers, load
+//! scaled per replica) run serially and then on the worker pool,
+//! reporting cells/sec and the parallel speedup — with a bit-identity
+//! assertion between the two runs (the engine's core guarantee).
+//!
+//! Everything is written to `BENCH_des.json` at the repository root so
+//! the trajectory is tracked in-repo. Pass `--smoke` for the CI variant:
+//! the 10k single-run scale plus a small 2-thread sweep grid, printed
+//! into the job summary.
 //!
 //! Run: `cargo bench --bench l4_des_throughput [-- --smoke]`
 
@@ -24,6 +32,7 @@ use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
 use inferbench::serving::cluster::{run, ClusterConfig, ClusterResult, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
+use inferbench::sweep::SweepPlan;
 use inferbench::util::render;
 use inferbench::workload::{generate, Pattern};
 use std::path::Path;
@@ -162,29 +171,146 @@ fn measure(scenario: &'static str, requests: u64, cfg: &ClusterConfig) -> Cell {
     }
 }
 
-fn write_json(cells: &[Cell]) -> std::io::Result<()> {
+/// The fig16-style sweep grid: fleet sizes × all four routers, offered
+/// load scaled per replica, per-cell seeds derived from the plan seed
+/// (the real sweep path — arrivals and engine both keyed to the cell).
+fn sweep_grid(fleets: &[usize], duration_s: f64) -> SweepPlan {
+    let mut plan = SweepPlan::new(4242);
+    for &n in fleets {
+        for router in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 4242 },
+            RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.1 },
+        ] {
+            plan.push(format!("{n}x{}", router.label()), move |seed| ClusterConfig {
+                arrivals: generate(
+                    &Pattern::Poisson { rate: 170.0 * n as f64 },
+                    duration_s,
+                    seed,
+                ),
+                closed_loop: None,
+                duration_s,
+                replicas: (0..n).map(|_| replica(5.0)).collect(),
+                router,
+                autoscale: None,
+                cold_start: None,
+                path: RequestPath::local(Processors::none()),
+                seed,
+            });
+        }
+    }
+    plan
+}
+
+struct SweepRow {
+    grid: String,
+    cells: usize,
+    threads: usize,
+    serial_wall_s: f64,
+    parallel_wall_s: f64,
+    events: u64,
+}
+
+impl SweepRow {
+    fn cells_per_s_serial(&self) -> f64 {
+        self.cells as f64 / self.serial_wall_s
+    }
+
+    fn cells_per_s_parallel(&self) -> f64 {
+        self.cells as f64 / self.parallel_wall_s
+    }
+
+    fn speedup(&self) -> f64 {
+        self.serial_wall_s / self.parallel_wall_s
+    }
+}
+
+/// Run the plan at `threads` and compare against an already-measured
+/// serial baseline (run the baseline once; reuse it for every budget).
+fn measure_sweep(
+    grid: &str,
+    plan: &SweepPlan,
+    threads: usize,
+    serial: &inferbench::sweep::SweepOutcome,
+    serial_wall_s: f64,
+) -> SweepRow {
+    let t1 = Instant::now();
+    let parallel = plan.run(threads);
+    let parallel_wall_s = t1.elapsed().as_secs_f64();
+    // The engine's core guarantee, asserted on every tracked row: the
+    // parallel run is bit-identical to the serial one, cell for cell.
+    assert_eq!(serial.cells.len(), parallel.cells.len());
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.result.events, b.result.events, "{grid}/{}: event count drift", a.label);
+        assert_eq!(
+            a.result.collector.fingerprint(),
+            b.result.collector.fingerprint(),
+            "{grid}/{}: collector output drift",
+            a.label
+        );
+    }
+    SweepRow {
+        grid: grid.to_string(),
+        cells: plan.len(),
+        threads,
+        serial_wall_s,
+        parallel_wall_s,
+        events: serial.total_events(),
+    }
+}
+
+fn json_results(cells: &[Cell]) -> Vec<String> {
+    cells
+        .iter()
+        .map(|c| {
+            format!(
+                "    {{\"scenario\": \"{}\", \"requests\": {}, \"issued\": {}, \"completed\": {}, \
+                 \"events\": {}, \"wall_s\": {:.4}, \"requests_per_s\": {:.0}, \"events_per_s\": {:.0}}}",
+                c.scenario,
+                c.requests,
+                c.issued,
+                c.completed,
+                c.events,
+                c.wall_s,
+                c.requests_per_s(),
+                c.events_per_s()
+            )
+        })
+        .collect()
+}
+
+fn json_sweeps(rows: &[SweepRow]) -> Vec<String> {
+    rows.iter()
+        .map(|s| {
+            format!(
+                "    {{\"grid\": \"{}\", \"cells\": {}, \"threads\": {}, \"serial_wall_s\": {:.4}, \
+                 \"parallel_wall_s\": {:.4}, \"cells_per_s_serial\": {:.2}, \
+                 \"cells_per_s_parallel\": {:.2}, \"speedup\": {:.2}, \"events\": {}}}",
+                s.grid,
+                s.cells,
+                s.threads,
+                s.serial_wall_s,
+                s.parallel_wall_s,
+                s.cells_per_s_serial(),
+                s.cells_per_s_parallel(),
+                s.speedup(),
+                s.events
+            )
+        })
+        .collect()
+}
+
+fn write_json(cells: &[Cell], sweeps: &[SweepRow]) -> std::io::Result<()> {
     // The repo root is one level above the rust package.
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_des.json");
-    let mut rows = Vec::new();
-    for c in cells {
-        rows.push(format!(
-            "    {{\"scenario\": \"{}\", \"requests\": {}, \"issued\": {}, \"completed\": {}, \
-             \"events\": {}, \"wall_s\": {:.4}, \"requests_per_s\": {:.0}, \"events_per_s\": {:.0}}}",
-            c.scenario,
-            c.requests,
-            c.issued,
-            c.completed,
-            c.events,
-            c.wall_s,
-            c.requests_per_s(),
-            c.events_per_s()
-        ));
-    }
     let doc = format!(
         "{{\n  \"bench\": \"l4_des_throughput\",\n  \"unit\": \"simulated requests (issued) and \
-         DES events per wall-clock second\",\n  \"regenerate\": \"cargo bench --bench \
-         l4_des_throughput\",\n  \"results\": [\n{}\n  ]\n}}\n",
-        rows.join(",\n")
+         DES events per wall-clock second; sweep rows add grid cells per second, serial vs \
+         parallel\",\n  \"regenerate\": \"cargo bench --bench l4_des_throughput\",\n  \
+         \"results\": [\n{}\n  ],\n  \"sweep\": [\n{}\n  ]\n}}\n",
+        json_results(cells).join(",\n"),
+        json_sweeps(sweeps).join(",\n")
     );
     std::fs::write(path, doc)
 }
@@ -194,32 +320,40 @@ fn main() {
     let scales: &[u64] = if smoke { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
 
     println!("=== L4: DES engine throughput (simulated requests/sec) ===\n");
+    // The scenario × scale matrix as a flat, data-driven cell list of
+    // config *builders* — each cell's config (arrival vectors included)
+    // is materialized only while it is being measured, so peak memory
+    // stays at one scale's worth. Executed serially on purpose: each
+    // cell's wall time is the metric, so cells must not compete for
+    // cores (the parallel path is measured separately below, where
+    // cells/sec is the metric).
+    let builders: [(&'static str, fn(u64) -> ClusterConfig); 3] =
+        [("fixed-fleet", fixed_fleet), ("autoscale", autoscale), ("closed-loop", closed_loop)];
+    let matrix: Vec<(&'static str, u64, fn(u64) -> ClusterConfig)> = scales
+        .iter()
+        .flat_map(|&n| builders.iter().map(move |&(scenario, build)| (scenario, n, build)))
+        .collect();
     let mut cells: Vec<Cell> = Vec::new();
     let mut rows = Vec::new();
-    for &n in scales {
-        for (scenario, cfg) in [
-            ("fixed-fleet", fixed_fleet(n)),
-            ("autoscale", autoscale(n)),
-            ("closed-loop", closed_loop(n)),
-        ] {
-            let cell = measure(scenario, n, &cfg);
-            rows.push(vec![
-                scenario.to_string(),
-                format!("{n}"),
-                format!("{}", cell.issued),
-                format!("{}", cell.events),
-                format!("{:.3}", cell.wall_s),
-                format!("{:.0}", cell.requests_per_s()),
-                format!("{:.0}", cell.events_per_s()),
-            ]);
-            println!(
-                "{scenario:<12} {n:>9} requests: {:>8.3}s wall, {:>12.0} req/s, {:>12.0} events/s",
-                cell.wall_s,
-                cell.requests_per_s(),
-                cell.events_per_s()
-            );
-            cells.push(cell);
-        }
+    for &(scenario, n, build) in &matrix {
+        let cfg = build(n);
+        let cell = measure(scenario, n, &cfg);
+        rows.push(vec![
+            scenario.to_string(),
+            format!("{n}"),
+            format!("{}", cell.issued),
+            format!("{}", cell.events),
+            format!("{:.3}", cell.wall_s),
+            format!("{:.0}", cell.requests_per_s()),
+            format!("{:.0}", cell.events_per_s()),
+        ]);
+        println!(
+            "{scenario:<12} {n:>9} requests: {:>8.3}s wall, {:>12.0} req/s, {:>12.0} events/s",
+            cell.wall_s,
+            cell.requests_per_s(),
+            cell.events_per_s()
+        );
+        cells.push(cell);
     }
     println!();
     print!(
@@ -236,14 +370,74 @@ fn main() {
     assert_eq!(a.events, b.events, "event count must be deterministic");
     assert_eq!(a.collector.completed, b.collector.completed);
     assert_eq!(a.collector.e2e.percentile(99.0), b.collector.e2e.percentile(99.0));
-    println!("\nPASS: conservation + determinism on every scenario");
+
+    // Sweep engine: cells/sec and parallel speedup on the fig16-style
+    // grid, with bit-identity between the serial and threaded runs
+    // asserted inside measure_sweep.
+    println!("\n=== Sweep engine: grid cells/sec, serial vs parallel ===\n");
+    let mut sweeps = Vec::new();
+    if smoke {
+        // CI smoke: small grid on 2 threads, one line for the summary.
+        let plan = sweep_grid(&[1, 2], 5.0);
+        let t0 = Instant::now();
+        let serial = plan.run(1);
+        let serial_wall_s = t0.elapsed().as_secs_f64();
+        let row = measure_sweep("smoke-replicas-x-routers", &plan, 2, &serial, serial_wall_s);
+        println!(
+            "sweep-smoke  {} cells on {} threads: serial {:.3}s ({:.1} cells/s), \
+             parallel {:.3}s ({:.1} cells/s), speedup {:.2}x",
+            row.cells,
+            row.threads,
+            row.serial_wall_s,
+            row.cells_per_s_serial(),
+            row.parallel_wall_s,
+            row.cells_per_s_parallel(),
+            row.speedup()
+        );
+        sweeps.push(row);
+    } else {
+        // Tracked rows: the full fig16-shaped grid at 4 threads (the
+        // acceptance point) and, when the host has more cores, at full
+        // parallelism too. The serial baseline runs once and is shared
+        // by every budget row.
+        let plan = sweep_grid(&[1, 2, 4, 8], 40.0);
+        let t0 = Instant::now();
+        let serial = plan.run(1);
+        let serial_wall_s = t0.elapsed().as_secs_f64();
+        let mut budgets = vec![4];
+        let avail = inferbench::sweep::default_threads();
+        if avail > 4 {
+            budgets.push(avail);
+        }
+        for threads in budgets {
+            let row =
+                measure_sweep("fig16-replicas-x-routers", &plan, threads, &serial, serial_wall_s);
+            println!(
+                "{:<26} {} cells on {} threads: serial {:.3}s ({:.2} cells/s), \
+                 parallel {:.3}s ({:.2} cells/s), speedup {:.2}x",
+                row.grid,
+                row.cells,
+                row.threads,
+                row.serial_wall_s,
+                row.cells_per_s_serial(),
+                row.parallel_wall_s,
+                row.cells_per_s_parallel(),
+                row.speedup()
+            );
+            sweeps.push(row);
+        }
+    }
+    println!("\nPASS: conservation + determinism on every scenario; sweep parallel == serial bit-for-bit");
 
     if smoke {
         // Don't clobber the committed full matrix with 10k-only rows.
         println!("(smoke run: BENCH_des.json left untouched)");
     } else {
-        match write_json(&cells) {
-            Ok(()) => println!("wrote BENCH_des.json ({} cells)", cells.len()),
+        match write_json(&cells, &sweeps) {
+            Ok(()) => {
+                let (nc, ns) = (cells.len(), sweeps.len());
+                println!("wrote BENCH_des.json ({nc} cells, {ns} sweep rows)");
+            }
             Err(e) => eprintln!("WARNING: could not write BENCH_des.json: {e}"),
         }
     }

@@ -5,7 +5,29 @@
 //! with [`execute`], producing PerfDB records. Job kinds cover the tasks
 //! the paper's system automates: serving-tier simulations, N-replica
 //! cluster simulations with optional autoscaling, hardware-tier sweeps,
+//! whole benchmark grids run by the parallel sweep engine (`task: sweep`),
 //! and (for scheduler studies / tests) calibrated sleeps.
+//!
+//! A `sweep` submission fans a router × fleet-size grid across the
+//! worker's `threads_per_worker` budget (one PerfDB record per cell;
+//! per-cell seeds derive from the job seed, so the records are identical
+//! at any thread budget):
+//!
+//! ```yaml
+//! name: router-replica-grid
+//! task: sweep
+//! model: resnet50
+//! platform: G1
+//! software: tris
+//! routers: [round-robin, least-outstanding, power-of-two, latency-ewma]
+//! replicas: [1, 2, 4]
+//! workload:
+//!   rate_per_replica: 120.0
+//!   duration_s: 30
+//! batching:
+//!   max_size: 8
+//!   max_wait_ms: 2
+//! ```
 //!
 //! A `cluster_sim` submission requesting an autoscaled spike study
 //! (Fig 11c burst against a cold-starting fleet) looks like:
@@ -46,6 +68,7 @@ use crate::serving::cluster::{self, ClusterConfig, ReplicaConfig};
 use crate::serving::{
     self, backends, AutoscaleConfig, Policy, RouterPolicy, ScalePolicy, ServiceModel, SimConfig,
 };
+use crate::sweep::SweepPlan;
 use crate::util::json::Json;
 use crate::util::yamlish;
 use crate::workload::{generate, Pattern};
@@ -86,6 +109,27 @@ pub enum JobKind {
     },
     /// Roofline sweep of a model across batch sizes (hardware tier).
     HardwareSweep { model: String, platform: String, batches: Vec<usize> },
+    /// A grid of independent cluster simulations — router policies ×
+    /// fleet sizes, offered load scaled per replica — executed by the
+    /// parallel sweep engine (`crate::sweep`) on the worker's
+    /// `threads_per_worker` budget. Per-cell seeds derive from the job
+    /// seed, so results are identical at any thread budget.
+    Sweep {
+        model: String,
+        platform: String,
+        software: String,
+        /// Router policy names, one grid axis (same vocabulary as
+        /// `cluster_sim`'s `router`).
+        routers: Vec<String>,
+        /// Fleet sizes, the other grid axis.
+        replicas: Vec<usize>,
+        /// Offered Poisson rate per replica (cells stay comparably
+        /// loaded as the fleet axis grows).
+        rate_per_replica: f64,
+        duration_s: f64,
+        max_batch: usize,
+        max_wait_s: f64,
+    },
     /// Do nothing for a fixed time (scheduler studies; time is scaled by
     /// the leader's `time_scale`).
     Sleep { seconds: f64 },
@@ -240,6 +284,73 @@ impl JobSpec {
                     .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|i| i as usize).collect())
                     .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]),
             },
+            "sweep" => {
+                let wl = doc.get("workload");
+                let routers: Vec<String> = match doc.get("routers").and_then(|v| v.as_arr()) {
+                    Some(a) => {
+                        // Same contract as `replicas` below: a bad entry
+                        // fails the submission instead of silently
+                        // shrinking the grid (yamlish types unquoted
+                        // scalars, so a numeric/bool-looking entry is
+                        // not a string).
+                        let mut out = Vec::with_capacity(a.len());
+                        for x in a {
+                            match x.as_str() {
+                                Some(s) => out.push(s.to_string()),
+                                None => bail!("sweep 'routers' entries must be strings"),
+                            }
+                        }
+                        out
+                    }
+                    None => vec!["round-robin".to_string(), "least-outstanding".to_string()],
+                };
+                let replicas: Vec<usize> = match doc.get("replicas").and_then(|v| v.as_arr()) {
+                    Some(a) => {
+                        // Reject bad entries loudly: silently dropping a
+                        // `0` or a typo would shrink the grid and produce
+                        // fewer PerfDB records than the submission asked
+                        // for, with no error anywhere.
+                        let mut out = Vec::with_capacity(a.len());
+                        for x in a {
+                            match x.as_i64() {
+                                Some(i) if i > 0 => out.push(i as usize),
+                                _ => bail!("sweep 'replicas' entries must be positive integers"),
+                            }
+                        }
+                        out
+                    }
+                    None => vec![1, 2, 4],
+                };
+                if routers.is_empty() || replicas.is_empty() {
+                    bail!("sweep needs non-empty 'routers' and 'replicas' lists");
+                }
+                JobKind::Sweep {
+                    model: str_or(doc, "model", "resnet50"),
+                    platform: str_or(doc, "platform", "G1"),
+                    software: str_or(doc, "software", "tris"),
+                    routers,
+                    replicas,
+                    rate_per_replica: wl
+                        .and_then(|w| w.get("rate_per_replica"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(120.0),
+                    duration_s: wl
+                        .and_then(|w| w.get("duration_s"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(30.0),
+                    max_batch: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_size"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(8) as usize,
+                    max_wait_s: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_wait_ms"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(5.0)
+                        / 1e3,
+                }
+            }
             "sleep" => JobKind::Sleep {
                 seconds: doc.get("seconds").and_then(|v| v.as_f64()).unwrap_or(1.0),
             },
@@ -265,6 +376,13 @@ fn default_estimate(kind: &JobKind) -> f64 {
             duration_s * 0.05 * (*replicas as f64).max(1.0) + 2.0
         }
         JobKind::HardwareSweep { batches, .. } => 0.5 + batches.len() as f64 * 0.1,
+        // Serial estimate: the sum of the per-cell cluster_sim estimates.
+        // The leader divides this by its workers' thread budget when
+        // charging backlog (see `LeaderConfig::charged_estimate_s`).
+        JobKind::Sweep { duration_s, replicas, routers, .. } => {
+            let total_replicas: usize = replicas.iter().sum();
+            duration_s * 0.05 * total_replicas as f64 * routers.len() as f64 + 2.0
+        }
         JobKind::Sleep { seconds } => *seconds,
     }
 }
@@ -307,8 +425,12 @@ pub fn service_model_for(model_name: &str, platform_id: &str) -> Result<ServiceM
 }
 
 /// Execute a job, producing PerfDB records. `time_scale` divides sleep
-/// durations (scheduler studies run faster than real time).
-pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>> {
+/// durations (scheduler studies run faster than real time); `threads` is
+/// the intra-job parallelism budget — sweep jobs run their grid cells on
+/// up to this many worker threads, every other kind runs single-threaded
+/// and ignores it. Results never depend on `threads` (the sweep engine is
+/// bit-identical at any thread count).
+pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Result<Vec<Record>> {
     match &spec.kind {
         JobKind::ServingSim { model, platform, software, rate_rps, duration_s, max_batch, max_wait_s } => {
             let sw = backends::find(software)
@@ -488,6 +610,87 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64) -> Result<Vec<Record>
             }
             Ok(out)
         }
+        JobKind::Sweep {
+            model,
+            platform,
+            software,
+            routers,
+            replicas,
+            rate_per_replica,
+            duration_s,
+            max_batch,
+            max_wait_s,
+        } => {
+            let sw = backends::find(software)
+                .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
+            let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
+            let service = service_model_for(model, platform)?;
+            // Resolve router names eagerly: a typo fails the whole job
+            // before any cell burns cycles.
+            let mut resolved = Vec::with_capacity(routers.len());
+            for name in routers {
+                resolved.push((name.clone(), router_policy(name, seed)?));
+            }
+            let mut plan = SweepPlan::new(seed);
+            let mut axes = Vec::new(); // (fleet size, router name, rate) per cell
+            for &n in replicas {
+                for (name, policy) in &resolved {
+                    let rate = rate_per_replica * n as f64;
+                    let template = ReplicaConfig {
+                        software: sw,
+                        service: service.clone(),
+                        policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: *max_wait_s },
+                        max_queue: 4096,
+                    };
+                    let router = *policy;
+                    let duration = *duration_s;
+                    let payload = m.request_bytes;
+                    plan.push(format!("{n}x{name}"), move |cell_seed| ClusterConfig {
+                        arrivals: generate(&Pattern::Poisson { rate }, duration, cell_seed),
+                        closed_loop: None,
+                        duration_s: duration,
+                        replicas: (0..n).map(|_| template.clone()).collect(),
+                        router,
+                        autoscale: None,
+                        cold_start: None,
+                        path: RequestPath {
+                            processors: Processors::image(),
+                            network: LAN,
+                            payload_bytes: payload,
+                        },
+                        seed: cell_seed,
+                    });
+                    axes.push((n, name.clone(), rate));
+                }
+            }
+            let outcome = plan.run(threads.max(1));
+            let mut out = Vec::with_capacity(outcome.cells.len());
+            for (cell, (n, router_name, rate)) in outcome.cells.iter().zip(&axes) {
+                let r = &cell.result;
+                if r.collector.completed + r.dropped != r.issued {
+                    bail!(
+                        "sweep cell {} conservation violated: {} completed + {} dropped != {} issued",
+                        cell.label,
+                        r.collector.completed,
+                        r.dropped,
+                        r.issued
+                    );
+                }
+                out.push(
+                    Record::new("sweep", model, platform, software)
+                        .with_label("cell", &cell.label)
+                        .with_label("router", router_name)
+                        .with_metric("replicas", *n as f64)
+                        .with_metric("rate_rps", *rate)
+                        .with_metric("p50_ms", r.collector.e2e.percentile(50.0) * 1e3)
+                        .with_metric("p99_ms", r.collector.e2e.percentile(99.0) * 1e3)
+                        .with_metric("throughput_rps", r.collector.throughput_rps())
+                        .with_metric("dropped", r.dropped as f64)
+                        .with_metric("issued", r.issued as f64),
+                );
+            }
+            Ok(out)
+        }
         JobKind::Sleep { seconds } => {
             std::thread::sleep(std::time::Duration::from_secs_f64(seconds / time_scale.max(1e-9)));
             Ok(vec![Record::new("sleep", "-", "-", "-").with_metric("seconds", *seconds)])
@@ -581,7 +784,7 @@ autoscale:
     #[test]
     fn executes_cluster_sim_with_autoscale() {
         let spec = JobSpec::parse_yaml(CLUSTER_SUBMISSION).unwrap();
-        let records = execute(&spec, 3, 1.0).unwrap();
+        let records = execute(&spec, 3, 1.0, 1).unwrap();
         assert_eq!(records.len(), 1);
         let r = &records[0];
         // Conservation checked inside execute; the record carries the
@@ -599,7 +802,7 @@ autoscale:
              workload:\n  rate: 90.0\n  duration_s: 10\n",
         )
         .unwrap();
-        let records = execute(&spec, 0, 1.0).unwrap();
+        let records = execute(&spec, 0, 1.0, 1).unwrap();
         let r = &records[0];
         assert_eq!(r.metric("replicas_initial").unwrap(), 3.0);
         assert_eq!(r.metric("replicas_max").unwrap(), 3.0);
@@ -612,12 +815,12 @@ autoscale:
             "task: cluster_sim\nmodel: resnet50\nplatform: G1\nrouter: teleport\n",
         )
         .unwrap();
-        assert!(execute(&bad_router, 0, 1.0).is_err());
+        assert!(execute(&bad_router, 0, 1.0, 1).is_err());
         let bad_policy = JobSpec::parse_yaml(
             "task: cluster_sim\nmodel: resnet50\nplatform: G1\nautoscale:\n  policy: vibes\n",
         )
         .unwrap();
-        assert!(execute(&bad_policy, 0, 1.0).is_err());
+        assert!(execute(&bad_policy, 0, 1.0, 1).is_err());
     }
 
     #[test]
@@ -643,7 +846,7 @@ autoscale:
     #[test]
     fn executes_serving_sim() {
         let spec = JobSpec::parse_yaml(SUBMISSION).unwrap();
-        let records = execute(&spec, 7, 1.0).unwrap();
+        let records = execute(&spec, 7, 1.0, 1).unwrap();
         assert_eq!(records.len(), 1);
         let r = &records[0];
         assert!(r.metric("p99_ms").unwrap() >= r.metric("p50_ms").unwrap());
@@ -656,7 +859,7 @@ autoscale:
             "task: hardware_sweep\nmodel: resnet50\nplatform: G1\nbatches: [1, 4, 16]\n",
         )
         .unwrap();
-        let records = execute(&spec, 0, 1.0).unwrap();
+        let records = execute(&spec, 0, 1.0, 1).unwrap();
         assert_eq!(records.len(), 3);
         // Per-sample latency should fall with batch.
         let l1 = records[0].metric("latency_per_sample_ms").unwrap();
@@ -668,14 +871,102 @@ autoscale:
     fn execute_rejects_unknown_model() {
         let spec =
             JobSpec::parse_yaml("task: hardware_sweep\nmodel: alexnet9000\nplatform: G1\n").unwrap();
-        assert!(execute(&spec, 0, 1.0).is_err());
+        assert!(execute(&spec, 0, 1.0, 1).is_err());
     }
 
     #[test]
     fn sleep_respects_time_scale() {
         let spec = JobSpec::parse_yaml("task: sleep\nseconds: 0.2\n").unwrap();
         let t0 = std::time::Instant::now();
-        execute(&spec, 0, 100.0).unwrap();
+        execute(&spec, 0, 100.0, 1).unwrap();
         assert!(t0.elapsed().as_secs_f64() < 0.1);
+    }
+
+    const SWEEP_SUBMISSION: &str = r#"
+name: router-replica-grid
+task: sweep
+model: resnet50
+platform: G1
+software: tris
+routers: [round-robin, least-outstanding]
+replicas: [1, 2]
+workload:
+  rate_per_replica: 60.0
+  duration_s: 4
+batching:
+  max_size: 8
+  max_wait_ms: 2
+"#;
+
+    #[test]
+    fn parses_sweep_submission() {
+        let spec = JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap();
+        match &spec.kind {
+            JobKind::Sweep { routers, replicas, rate_per_replica, duration_s, .. } => {
+                let want = vec!["round-robin".to_string(), "least-outstanding".to_string()];
+                assert_eq!(routers, &want);
+                assert_eq!(replicas, &vec![1, 2]);
+                assert_eq!(*rate_per_replica, 60.0);
+                assert_eq!(*duration_s, 4.0);
+            }
+            k => panic!("{k:?}"),
+        }
+        assert!(spec.est_duration_s > 0.0);
+    }
+
+    #[test]
+    fn executes_sweep_grid_one_record_per_cell() {
+        let spec = JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap();
+        let records = execute(&spec, 11, 1.0, 2).unwrap();
+        assert_eq!(records.len(), 4, "2 fleet sizes x 2 routers");
+        assert_eq!(records[0].label("router"), Some("round-robin"));
+        assert_eq!(records[1].label("router"), Some("least-outstanding"));
+        assert_eq!(records[0].metric("replicas"), Some(1.0));
+        assert_eq!(records[3].metric("replicas"), Some(2.0));
+        for r in &records {
+            assert!(r.metric("throughput_rps").unwrap() > 0.0, "{:?}", r.label("cell"));
+            assert!(r.metric("p99_ms").unwrap() >= r.metric("p50_ms").unwrap());
+        }
+    }
+
+    #[test]
+    fn sweep_records_identical_at_any_thread_budget() {
+        let spec = JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap();
+        let serial = execute(&spec, 11, 1.0, 1).unwrap();
+        let parallel = execute(&spec, 11, 1.0, 8).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.label("cell"), b.label("cell"));
+            for key in ["p50_ms", "p99_ms", "throughput_rps", "issued", "dropped"] {
+                assert_eq!(
+                    a.metric(key).unwrap().to_bits(),
+                    b.metric(key).unwrap().to_bits(),
+                    "{key} must be bit-identical across thread budgets"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_router() {
+        let spec = JobSpec::parse_yaml(
+            "task: sweep\nmodel: resnet50\nplatform: G1\nrouters: [teleport]\nreplicas: [1]\n",
+        )
+        .unwrap();
+        assert!(execute(&spec, 0, 1.0, 2).is_err());
+    }
+
+    #[test]
+    fn sweep_rejects_empty_or_invalid_axes() {
+        assert!(JobSpec::parse_yaml("task: sweep\nrouters: []\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nreplicas: []\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nreplicas: [0]\n").is_err());
+        // A single bad entry fails the whole submission — the grid must
+        // never silently shrink.
+        assert!(JobSpec::parse_yaml("task: sweep\nreplicas: [4, 0, 8]\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nreplicas: [4, oops]\n").is_err());
+        // Same contract on the router axis: yamlish types unquoted
+        // scalars, so a numeric entry is not a router name.
+        assert!(JobSpec::parse_yaml("task: sweep\nrouters: [round-robin, 42]\n").is_err());
     }
 }

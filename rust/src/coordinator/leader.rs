@@ -81,6 +81,13 @@ struct WorkerShared {
     stop: AtomicBool,
 }
 
+/// The task manager's completion log plus the condvar workers signal on
+/// every push — `Leader::wait_for` blocks on it instead of polling.
+struct CompletionLog {
+    entries: Mutex<Vec<Completed>>,
+    cv: Condvar,
+}
+
 impl WorkerShared {
     /// Remaining estimate of the running job in submitted (unscaled)
     /// seconds. Wall-clock elapsed is mapped back to job seconds via
@@ -107,12 +114,48 @@ pub struct LeaderConfig {
     pub policy: SchedulerPolicy,
     /// Divides Sleep-job durations (scheduler studies run scaled).
     pub time_scale: f64,
+    /// Intra-job parallelism budget per worker: a `sweep` job runs its
+    /// grid cells on up to this many threads (`crate::sweep`); every
+    /// other job kind runs single-threaded and ignores it. This extends
+    /// the paper's two-tier scheduler (queue-aware placement at the
+    /// leader, SJF at the worker) with a third tier inside the job.
+    pub threads_per_worker: usize,
     pub seed: u64,
 }
 
 impl Default for LeaderConfig {
     fn default() -> Self {
-        LeaderConfig { workers: 4, policy: SchedulerPolicy::qa_sjf(), time_scale: 1.0, seed: 0 }
+        LeaderConfig {
+            workers: 4,
+            policy: SchedulerPolicy::qa_sjf(),
+            time_scale: 1.0,
+            threads_per_worker: 1,
+            seed: 0,
+        }
+    }
+}
+
+impl LeaderConfig {
+    /// Wall-clock estimate of `spec` on one of this leader's workers:
+    /// sweep jobs divide their serial estimate across the worker's
+    /// thread budget (ideal intra-job speedup is the scheduler's model,
+    /// matching the paper's known-processing-times premise); everything
+    /// else runs serially. Backlog accounting and the running-job
+    /// remaining estimate both charge this, so queue-aware placement
+    /// sees the time the job will actually occupy the worker.
+    fn charged_estimate_s(&self, spec: &JobSpec) -> f64 {
+        match &spec.kind {
+            job::JobKind::Sweep { routers, replicas, .. } => {
+                // The pool can't use more workers than the grid has
+                // cells, so the effective speedup divisor is capped by
+                // the cell count (a 2-cell sweep on a 16-thread budget
+                // still occupies the worker for ~half its serial time).
+                let cells = (routers.len() * replicas.len()).max(1);
+                let budget = self.threads_per_worker.max(1).min(cells);
+                spec.est_duration_s / budget as f64
+            }
+            _ => spec.est_duration_s,
+        }
     }
 }
 
@@ -122,7 +165,7 @@ pub struct Leader {
     shared: Vec<Arc<WorkerShared>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub perfdb: Arc<Mutex<PerfDb>>,
-    completions: Arc<Mutex<Vec<Completed>>>,
+    completions: Arc<CompletionLog>,
     next_id: AtomicU64,
     rr: AtomicU64,
 }
@@ -131,7 +174,8 @@ impl Leader {
     /// Start the cluster: spawns follower worker threads.
     pub fn start(config: LeaderConfig) -> Leader {
         let perfdb = Arc::new(Mutex::new(PerfDb::new()));
-        let completions = Arc::new(Mutex::new(Vec::new()));
+        let completions =
+            Arc::new(CompletionLog { entries: Mutex::new(Vec::new()), cv: Condvar::new() });
         let mut shared = Vec::new();
         let mut handles = Vec::new();
         for w in 0..config.workers {
@@ -195,8 +239,9 @@ impl Leader {
         let ws = &self.shared[w];
         {
             let mut q = ws.queue.lock().unwrap();
+            let charged = self.config.charged_estimate_s(&spec);
             q.push_back(Pending { id, spec: spec.clone(), submitted: Instant::now() });
-            *ws.backlog_s.lock().unwrap() += spec.est_duration_s;
+            *ws.backlog_s.lock().unwrap() += charged;
         }
         ws.cv.notify_one();
         Ok((id, w))
@@ -223,29 +268,30 @@ impl Leader {
             .collect()
     }
 
-    /// Block until `n` jobs have completed (or timeout).
+    /// Block until `n` jobs have completed (or timeout). Workers signal
+    /// the completion condvar on every push, so this wakes exactly when
+    /// progress happens instead of polling on a sleep — no wasted
+    /// wakeups, and completion is observed the instant it lands.
     pub fn wait_for(&self, n: usize, timeout: std::time::Duration) -> Result<Vec<Completed>> {
         let deadline = Instant::now() + timeout;
+        let mut done = self.completions.entries.lock().unwrap();
         loop {
-            {
-                let done = self.completions.lock().unwrap();
-                if done.len() >= n {
-                    return Ok(done.clone());
-                }
+            if done.len() >= n {
+                return Ok(done.clone());
             }
-            if Instant::now() > deadline {
-                return Err(anyhow!(
-                    "timeout: {} of {n} jobs completed",
-                    self.completions.lock().unwrap().len()
-                ));
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(anyhow!("timeout: {} of {n} jobs completed", done.len()));
             }
-            std::thread::sleep(std::time::Duration::from_millis(5));
+            let (guard, _timed_out) =
+                self.completions.cv.wait_timeout(done, deadline - now).unwrap();
+            done = guard;
         }
     }
 
     /// All completions so far.
     pub fn completions(&self) -> Vec<Completed> {
-        self.completions.lock().unwrap().clone()
+        self.completions.entries.lock().unwrap().clone()
     }
 
     /// Stop workers (drains nothing; call after wait_for).
@@ -264,7 +310,7 @@ fn worker_loop(
     wid: usize,
     ws: Arc<WorkerShared>,
     db: Arc<Mutex<PerfDb>>,
-    done: Arc<Mutex<Vec<Completed>>>,
+    done: Arc<CompletionLog>,
     cfg: LeaderConfig,
 ) {
     loop {
@@ -272,7 +318,7 @@ fn worker_loop(
         let pending = {
             let mut q = ws.queue.lock().unwrap();
             loop {
-                if let Some(job) = pick(&mut q, cfg.policy.order) {
+                if let Some(job) = pick(&mut q, cfg.policy.order, &cfg) {
                     break Some(job);
                 }
                 if ws.stop.load(Ordering::Relaxed) {
@@ -287,20 +333,27 @@ fn worker_loop(
 
         // The job leaves the queue now: move its estimate out of the
         // published backlog and into the running-job slot, so placement
-        // charges remaining work, never a double-count of both.
+        // charges remaining work, never a double-count of both. Both
+        // sides charge the same thread-budget-adjusted estimate.
+        let charged = cfg.charged_estimate_s(&pending.spec);
         {
             let mut b = ws.backlog_s.lock().unwrap();
-            *b = (*b - pending.spec.est_duration_s).max(0.0);
+            *b = (*b - charged).max(0.0);
         }
         *ws.running.lock().unwrap() = Some(RunningJob {
-            est_s: pending.spec.est_duration_s,
+            est_s: charged,
             started: Instant::now(),
             time_scaled: matches!(pending.spec.kind, job::JobKind::Sleep { .. }),
         });
         ws.busy.store(true, Ordering::Relaxed);
         let waited_s = pending.submitted.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        let result = job::execute(&pending.spec, cfg.seed ^ pending.id, cfg.time_scale);
+        let result = job::execute(
+            &pending.spec,
+            cfg.seed ^ pending.id,
+            cfg.time_scale,
+            cfg.threads_per_worker.max(1),
+        );
         let ran_s = t0.elapsed().as_secs_f64();
         ws.busy.store(false, Ordering::Relaxed);
         *ws.running.lock().unwrap() = None;
@@ -325,19 +378,28 @@ fn worker_loop(
                 false
             }
         };
-        done.lock().unwrap().push(Completed {
-            id: pending.id,
-            name: pending.spec.name.clone(),
-            worker: wid,
-            waited_s,
-            ran_s,
-            ok,
-        });
+        {
+            let mut entries = done.entries.lock().unwrap();
+            entries.push(Completed {
+                id: pending.id,
+                name: pending.spec.name.clone(),
+                worker: wid,
+                waited_s,
+                ran_s,
+                ok,
+            });
+        }
+        // Wake every `wait_for` caller; each re-checks its own target.
+        done.cv.notify_all();
     }
 }
 
-/// Tier-2 pick: FCFS = front; SJF = shortest estimate.
-fn pick(q: &mut VecDeque<Pending>, order: LocalOrder) -> Option<Pending> {
+/// Tier-2 pick: FCFS = front; SJF = shortest estimate. SJF compares the
+/// same thread-budget-adjusted estimate that tier-1 placement charges
+/// (`LeaderConfig::charged_estimate_s`) — a sweep that parallelizes to a
+/// quarter of its serial estimate really is the shorter job, and ranking
+/// it by the serial number would invert shortest-job-first.
+fn pick(q: &mut VecDeque<Pending>, order: LocalOrder, cfg: &LeaderConfig) -> Option<Pending> {
     if q.is_empty() {
         return None;
     }
@@ -347,9 +409,8 @@ fn pick(q: &mut VecDeque<Pending>, order: LocalOrder) -> Option<Pending> {
             .iter()
             .enumerate()
             .min_by(|a, b| {
-                a.1.spec
-                    .est_duration_s
-                    .partial_cmp(&b.1.spec.est_duration_s)
+                cfg.charged_estimate_s(&a.1.spec)
+                    .partial_cmp(&cfg.charged_estimate_s(&b.1.spec))
                     .unwrap()
             })
             .map(|(i, _)| i)
@@ -398,12 +459,39 @@ mod tests {
     }
 
     #[test]
+    fn sweep_job_runs_on_worker_thread_budget() {
+        // A `sweep` grid dispatched through the leader executes on the
+        // worker's intra-job thread budget and lands one record per cell.
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            threads_per_worker: 4,
+            ..Default::default()
+        });
+        leader
+            .submit_yaml(
+                "name: grid\ntask: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+                 routers: [round-robin, least-outstanding]\nreplicas: [1, 2]\n\
+                 workload:\n  rate_per_replica: 40.0\n  duration_s: 3\n",
+            )
+            .unwrap();
+        let done = leader.wait_for(1, std::time::Duration::from_secs(60)).unwrap();
+        assert!(done[0].ok, "sweep job failed");
+        let db = leader.perfdb.lock().unwrap();
+        let recs = db.query(&Query::default().task("sweep"));
+        assert_eq!(recs.len(), 4, "2 fleet sizes x 2 routers");
+        assert!(recs.iter().any(|r| r.label("router") == Some("least-outstanding")));
+        drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
     fn queue_aware_avoids_busy_worker() {
         // One long job on worker A; following shorts should go elsewhere.
         let leader = Leader::start(LeaderConfig {
             workers: 2,
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 10.0,
+            threads_per_worker: 1,
             seed: 0,
         });
         leader.submit(sleep_spec("long", 5.0)).unwrap();
@@ -435,6 +523,7 @@ mod tests {
             workers: 2,
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 10.0,
+            threads_per_worker: 1,
             seed: 0,
         });
         leader.submit(sleep_spec("long", 5.0)).unwrap(); // -> idle worker (both 0): w0
@@ -506,6 +595,7 @@ mod tests {
             workers: 1,
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 20.0,
+            threads_per_worker: 1,
             seed: 0,
         });
         leader.submit(sleep_spec("blocker", 2.0)).unwrap();

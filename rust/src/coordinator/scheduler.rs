@@ -12,6 +12,13 @@
 //!    run sequentially.
 //!  * [`simulate_online`] — the DES generalization with online arrivals,
 //!    which the Fig 15 bench sweeps.
+//!
+//! Since the parallel sweep engine landed, the live leader adds a third
+//! tier *inside* a job: `sweep` grids run their cells across the worker's
+//! `threads_per_worker` budget, and both tiers above charge the
+//! thread-budget-adjusted estimate (`LeaderConfig::charged_estimate_s`)
+//! so queue-aware placement keeps seeing the wall-clock a job actually
+//! occupies its worker.
 
 /// A benchmark job as the scheduler sees it.
 #[derive(Debug, Clone, PartialEq)]

@@ -19,6 +19,13 @@
 //! autoscale figure (`benches/fig17_autoscale.rs`) reports burst-vs-
 //! recovery p99 for scale policies × cold-start profiles.
 //!
+//! Sweep tier: [`sweep`] executes whole benchmark grids (the fig7–fig17
+//! cell matrices) on a scoped-thread worker pool with per-cell seeds
+//! derived from the plan seed, returning results in plan order so a
+//! parallel run is bit-identical to a serial one. The coordinator
+//! dispatches grids as `task: sweep` YAML jobs executed under each
+//! worker's `threads_per_worker` budget.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! regenerated paper results.
 
@@ -31,6 +38,7 @@ pub mod perfdb;
 pub mod pipeline;
 pub mod runtime;
 pub mod serving;
+pub mod sweep;
 pub mod testing;
 pub mod util;
 pub mod workload;

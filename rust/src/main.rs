@@ -41,7 +41,7 @@ inferbench — automatic DL inference serving benchmark system
 
 USAGE:
   inferbench table1
-  inferbench submit <spec.yaml>... [--workers N] [--policy qa_sjf|rr_fcfs|rr_sjf] [--db out.jsonl]
+  inferbench submit <spec.yaml>... [--workers N] [--threads-per-worker N] [--policy qa_sjf|rr_fcfs|rr_sjf] [--db out.jsonl]
   inferbench serve [--model resnet_mini] [--rate 20] [--duration 10] [--max-batch 8] [--artifacts artifacts]
   inferbench recommend [--model resnet50] [--slo-ms 100] [--rate 50]
   inferbench leaderboard --db perf.jsonl [--metric p99_ms] [--task serving_sim]
@@ -95,6 +95,7 @@ fn submit(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 4),
         policy,
         time_scale: args.get_f64("time-scale", 1.0),
+        threads_per_worker: args.get_usize("threads-per-worker", 1),
         seed: args.get_u64("seed", 0),
     });
     let mut n = 0;
@@ -233,6 +234,7 @@ fn status_demo(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 4),
         policy: SchedulerPolicy::qa_sjf(),
         time_scale: 20.0,
+        threads_per_worker: args.get_usize("threads-per-worker", 1),
         seed: 1,
     });
     let mut rng = inferbench::util::rng::Pcg64::seeded(3);

@@ -231,6 +231,33 @@ impl Collector {
             .collect()
     }
 
+    /// Deterministic digest of everything the benches assert about a
+    /// collector: completion/drop counts, the observation window, and the
+    /// p50/p95/p99/p100 order statistics, mixed bit-for-bit (FNV-1a over
+    /// the raw `f64` bits). Two collectors with equal fingerprints agree
+    /// on every reported number, so the parallel-sweep determinism checks
+    /// (`tests/parallel_sweep.rs`, the l4 sweep bench) compare one word
+    /// per cell instead of re-asserting each statistic.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        mix(self.completed);
+        mix(self.dropped);
+        mix(self.e2e.len() as u64);
+        mix(self.first_arrival_s.to_bits());
+        mix(self.last_completion_s.to_bits());
+        for q in [50.0, 95.0, 99.0, 100.0] {
+            let p = self.e2e.percentile(q);
+            mix(if p.is_nan() { u64::MAX } else { p.to_bits() });
+        }
+        h
+    }
+
     /// Fold another collector into this one. Exact, not approximate: raw
     /// samples are concatenated, so percentiles of the merged collector
     /// equal percentiles over the union of the inputs.
@@ -601,6 +628,25 @@ mod tests {
             absorbed.stage(Stage::Inference).len(),
             merged.stage(Stage::Inference).len()
         );
+    }
+
+    #[test]
+    fn fingerprint_tracks_observable_output() {
+        let build = |latencies: &[f64]| {
+            let mut c = Collector::new();
+            for (i, &l) in latencies.iter().enumerate() {
+                let mut t = RequestTrace::new(i as u64, i as f64);
+                t.record_stage(Stage::Inference, l);
+                c.ingest(&t);
+            }
+            c
+        };
+        let a = build(&[0.010, 0.020, 0.030]);
+        let b = build(&[0.010, 0.020, 0.030]);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "identical runs must match");
+        let c = build(&[0.010, 0.020, 0.031]);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "a changed tail must show");
+        assert_eq!(Collector::new().fingerprint(), Collector::new().fingerprint());
     }
 
     #[test]

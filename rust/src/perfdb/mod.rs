@@ -40,8 +40,20 @@ impl Record {
         self
     }
 
+    /// Attach a string tag (e.g. the router policy of a sweep cell) —
+    /// dimensions that identify a grid cell but aren't numeric metrics.
+    pub fn with_label(mut self, key: &str, value: &str) -> Record {
+        self.metrics.set(key, Json::Str(value.to_string()));
+        self
+    }
+
     pub fn metric(&self, key: &str) -> Option<f64> {
         self.metrics.get(key).and_then(|v| v.as_f64())
+    }
+
+    /// String tag accessor (`None` when absent or not a string).
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.metrics.get(key).and_then(|v| v.as_str())
     }
 
     fn to_json(&self) -> Json {

@@ -52,6 +52,19 @@ use std::collections::BinaryHeap;
 
 pub use super::autoscale::AutoscaleConfig;
 
+// The parallel sweep engine (`crate::sweep`) moves cell configs into
+// scoped worker threads and their results back out. Keep both types
+// transferable: a field that is not `Send`/`Sync` (an `Rc`, a raw
+// pointer, a non-atomic shared cache) would silently serialize every
+// sweep, so the requirement is pinned at compile time here, next to the
+// type definitions.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    const fn assert_send<T: Send>() {}
+    assert_send_sync::<ClusterConfig>();
+    assert_send::<ClusterResult>();
+};
+
 /// Closed-loop client retry delay after a queue rejection: the client
 /// observes the rejection and re-issues. A strictly positive backoff also
 /// guarantees event-time progress for degenerate zero-latency request

@@ -1,0 +1,351 @@
+//! Parallel sweep-execution engine: run a grid of independent benchmark
+//! cells across all cores with **bit-identical** results at any thread
+//! count (PERF.md §Sweep-level parallelism).
+//!
+//! Every fig7–fig17 study is a grid — scenario × scale × router × policy
+//! cells, each a self-contained deterministic simulation. PR 3 made a
+//! *single* DES run allocation-free; this module makes the *sweep* layer
+//! scale: cells execute on a scoped-thread worker pool (std only) pulling
+//! indices from a shared atomic work queue, and results fan back in via
+//! the move-based [`Collector::absorb`] path, **in plan order**, so the
+//! output of a run at 8 threads is byte-for-byte the output of the same
+//! plan run serially.
+//!
+//! Determinism rests on three properties:
+//!
+//!  1. **Cell independence** — a cell owns its whole world: the factory
+//!     builds a fresh [`ClusterConfig`] (arrivals included) and
+//!     [`cluster::run`] touches nothing shared. The compile-time
+//!     assertions in `serving/cluster.rs` keep config and result
+//!     transferable across threads.
+//!  2. **Per-cell seeds** — cell `i` of a plan seeded `s` always runs
+//!     with `cell_seed(s, i)` = `Pcg64::new(s, i).next_u64()`: PCG
+//!     *streams* are indexed by the cell position, so cells are
+//!     decorrelated from each other but pinned to their plan slot —
+//!     reordering the execution schedule cannot reorder the randomness.
+//!  3. **Plan-order fan-in** — workers return `(index, result)` pairs and
+//!     the pool reassembles the result vector by index before anything
+//!     aggregates, so [`SweepOutcome::aggregate`] absorbs collectors in
+//!     the same order a serial loop would have.
+//!
+//! The coordinator tier submits sweeps as YAML jobs (`task: sweep`, see
+//! `coordinator/job.rs`): the leader places the job on a follower worker
+//! and the worker runs the plan on its `threads_per_worker` budget — the
+//! paper's two-tier scheduler extended down to intra-job parallelism.
+
+use crate::metrics::Collector;
+use crate::serving::cluster::{self, ClusterConfig, ClusterResult};
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Deterministic seed for cell `cell_index` of a plan seeded `seed`:
+/// PCG streams are selected by the cell's plan position, so every cell
+/// draws from its own sequence regardless of which worker runs it when.
+pub fn cell_seed(seed: u64, cell_index: u64) -> u64 {
+    Pcg64::new(seed, cell_index).next_u64()
+}
+
+/// Worker threads to use by default: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `work` over every item of `items` on up to `threads` scoped worker
+/// threads, returning the results **in item order**.
+///
+/// The queue is an atomic cursor over the item indices: workers claim the
+/// next unclaimed index, compute, and keep a local `(index, result)` list;
+/// the pool reassembles by index after the scope joins. Scheduling order
+/// therefore cannot leak into the output — `map_indexed(items, 8, f)` is
+/// element-for-element `items.iter().enumerate().map(f)`.
+///
+/// A panic in any cell is surfaced: remaining cells still drain (no
+/// deadlock — the queue is just a counter), and the first panic payload is
+/// re-raised on the calling thread once every worker has parked.
+pub fn map_indexed<T, R, F>(items: &[T], threads: usize, work: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        // Serial fast path: same closure, same order, no pool.
+        return items.iter().enumerate().map(|(i, t)| work(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let cursor = &cursor;
+        let work = &work;
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            handles.push(scope.spawn(move || {
+                let mut local = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, work(i, &items[i])));
+                }
+                local
+            }));
+        }
+        let mut chunks = Vec::with_capacity(threads);
+        for handle in handles {
+            match handle.join() {
+                Ok(chunk) => chunks.push(chunk),
+                // Re-raise the worker's panic on the caller. The scope
+                // guarantees every other worker is joined before this
+                // propagates, so nothing dangles.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        chunks
+    });
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for (i, r) in chunks.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "cell {i} executed twice");
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|r| r.expect("work queue covered every cell exactly once"))
+        .collect()
+}
+
+/// Factory for one cell's configuration; receives the cell's derived seed.
+pub type CellFactory = Box<dyn Fn(u64) -> ClusterConfig + Send + Sync>;
+
+/// One independent cell of a sweep: a label for reports plus an owned
+/// config factory. The factory receives [`cell_seed`]`(plan_seed, index)`
+/// and may thread it into workload generation and the engine seed (grid
+/// jobs do) or ignore it when every cell pins its own seeds (the fig
+/// benches reproduce their committed tables that way).
+pub struct SweepCell {
+    label: String,
+    build: CellFactory,
+}
+
+impl SweepCell {
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Build this cell's config for a given derived seed.
+    pub fn config_for(&self, seed: u64) -> ClusterConfig {
+        (self.build)(seed)
+    }
+}
+
+/// An ordered grid of independent cluster-simulation cells.
+pub struct SweepPlan {
+    seed: u64,
+    cells: Vec<SweepCell>,
+}
+
+impl SweepPlan {
+    pub fn new(seed: u64) -> SweepPlan {
+        SweepPlan { seed, cells: Vec::new() }
+    }
+
+    /// Append a cell. Plan order is execution-independent result order.
+    pub fn push<F>(&mut self, label: impl Into<String>, build: F)
+    where
+        F: Fn(u64) -> ClusterConfig + Send + Sync + 'static,
+    {
+        self.cells.push(SweepCell { label: label.into(), build: Box::new(build) });
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn cells(&self) -> &[SweepCell] {
+        &self.cells
+    }
+
+    /// The derived seed cell `index` will run with.
+    pub fn cell_seed(&self, index: usize) -> u64 {
+        cell_seed(self.seed, index as u64)
+    }
+
+    /// Execute every cell on up to `threads` workers. Results come back
+    /// in plan order and are bit-identical at any thread count.
+    pub fn run(&self, threads: usize) -> SweepOutcome {
+        let base = self.seed;
+        let results = map_indexed(&self.cells, threads, |i, cell| {
+            let config = (cell.build)(cell_seed(base, i as u64));
+            cluster::run(&config)
+        });
+        SweepOutcome {
+            cells: results
+                .into_iter()
+                .enumerate()
+                .map(|(i, result)| CellOutcome {
+                    label: self.cells[i].label.clone(),
+                    seed: cell_seed(base, i as u64),
+                    result,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One cell's result, tagged with its label and the seed it ran under.
+pub struct CellOutcome {
+    pub label: String,
+    pub seed: u64,
+    pub result: ClusterResult,
+}
+
+/// All cell results of one sweep run, in plan order.
+pub struct SweepOutcome {
+    pub cells: Vec<CellOutcome>,
+}
+
+impl SweepOutcome {
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// DES events processed across all cells (the sweep bench numerator).
+    pub fn total_events(&self) -> u64 {
+        self.cells.iter().map(|c| c.result.events).sum()
+    }
+
+    pub fn total_issued(&self) -> u64 {
+        self.cells.iter().map(|c| c.result.issued).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.cells.iter().map(|c| c.result.collector.completed).sum()
+    }
+
+    /// Fan the per-cell collectors into one, **in plan order**, via the
+    /// move-based [`Collector::absorb`] (no per-sample copies; the first
+    /// absorb takes the buffers wholesale). Plan-order absorption keeps
+    /// the merged sample sequence — and therefore every percentile bit —
+    /// identical to what a serial loop over the same grid produces.
+    pub fn aggregate(self) -> Collector {
+        let mut all = Collector::new();
+        for cell in self.cells {
+            all.absorb(cell.result.collector);
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Processors, RequestPath};
+    use crate::serving::batcher::Policy;
+    use crate::serving::router::RouterPolicy;
+    use crate::serving::service::ServiceModel;
+    use crate::serving::{backends, cluster::ReplicaConfig};
+    use crate::workload::{generate, Pattern};
+
+    fn replica(per_req_ms: f64) -> ReplicaConfig {
+        ReplicaConfig {
+            software: &backends::TRIS,
+            service: ServiceModel::Measured {
+                per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+                utilization: 0.6,
+            },
+            policy: Policy::Single,
+            max_queue: 100_000,
+        }
+    }
+
+    fn small_plan() -> SweepPlan {
+        let mut plan = SweepPlan::new(99);
+        for (i, router) in
+            [RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding].into_iter().enumerate()
+        {
+            plan.push(format!("cell{i}"), move |seed| ClusterConfig {
+                arrivals: generate(&Pattern::Poisson { rate: 120.0 }, 4.0, seed),
+                closed_loop: None,
+                duration_s: 4.0,
+                replicas: vec![replica(3.0), replica(6.0)],
+                router,
+                autoscale: None,
+                cold_start: None,
+                path: RequestPath::local(Processors::none()),
+                seed,
+            });
+        }
+        plan
+    }
+
+    #[test]
+    fn map_indexed_preserves_item_order() {
+        let items: Vec<usize> = (0..37).collect();
+        for threads in [1, 2, 3, 16, 64] {
+            let out = map_indexed(&items, threads, |i, &v| i * 1000 + v);
+            let expect: Vec<usize> = (0..37).map(|i| i * 1000 + i).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_empty_and_oversubscribed() {
+        let empty: [u32; 0] = [];
+        assert!(map_indexed(&empty, 8, |_, &v| v).is_empty());
+        let one = [7u32];
+        assert_eq!(map_indexed(&one, 32, |_, &v| v * 2), vec![14]);
+    }
+
+    #[test]
+    fn cell_seeds_are_stable_and_distinct() {
+        let plan = small_plan();
+        assert_eq!(plan.cell_seed(0), cell_seed(99, 0));
+        assert_eq!(plan.cell_seed(1), cell_seed(99, 1));
+        assert_ne!(plan.cell_seed(0), plan.cell_seed(1));
+        // Re-deriving never drifts.
+        assert_eq!(cell_seed(99, 1), cell_seed(99, 1));
+    }
+
+    #[test]
+    fn parallel_run_matches_serial_bit_for_bit() {
+        let serial = small_plan().run(1);
+        let parallel = small_plan().run(4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.result.issued, b.result.issued);
+            assert_eq!(a.result.events, b.result.events);
+            assert_eq!(a.result.collector.fingerprint(), b.result.collector.fingerprint());
+        }
+    }
+
+    #[test]
+    fn aggregate_absorbs_in_plan_order() {
+        let agg = small_plan().run(4).aggregate();
+        let mut manual = Collector::new();
+        for cell in small_plan().run(1).cells {
+            manual.absorb(cell.result.collector);
+        }
+        assert_eq!(agg.completed, manual.completed);
+        assert_eq!(agg.e2e.len(), manual.e2e.len());
+        assert_eq!(agg.fingerprint(), manual.fingerprint());
+    }
+}

@@ -23,6 +23,7 @@ fn full_benchmark_campaign() {
         workers: 4,
         policy: SchedulerPolicy::qa_sjf(),
         time_scale: 1.0,
+        threads_per_worker: 1,
         seed: 123,
     });
     let mut n = 0;
@@ -88,7 +89,13 @@ fn scheduler_policies_change_live_completion_order() {
     // Live (threaded) confirmation of the DES result direction: with a
     // blocked worker, SJF surfaces short jobs earlier than FCFS.
     let run_with = |policy: SchedulerPolicy| -> Vec<String> {
-        let leader = Leader::start(LeaderConfig { workers: 1, policy, time_scale: 50.0, seed: 0 });
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            policy,
+            time_scale: 50.0,
+            threads_per_worker: 1,
+            seed: 0,
+        });
         leader.submit_yaml("name: blocker\ntask: sleep\nseconds: 3\n").unwrap();
         std::thread::sleep(Duration::from_millis(20));
         leader.submit_yaml("name: long\ntask: sleep\nseconds: 6\n").unwrap();
@@ -113,6 +120,7 @@ fn monitor_safe_benchmarking_no_concurrent_jobs_per_worker() {
         workers: 2,
         policy: SchedulerPolicy::qa_sjf(),
         time_scale: 20.0,
+        threads_per_worker: 1,
         seed: 0,
     });
     for i in 0..8 {

@@ -1,0 +1,301 @@
+//! Parallel-sweep determinism suite (PERF.md §Sweep-level parallelism).
+//!
+//! The sweep engine's contract is the same one the golden-determinism
+//! suite enforced for the hot-path overhaul: going parallel must be
+//! behavior-preserving, bit for bit. A plan over the golden scenario
+//! shapes — fixed fleet × all four routers, autoscale spike with cold
+//! starts and drain-on-remove, closed loop with rejections, cold-start
+//! hold — is run at 1, 2, and 8 threads, and every cell must agree
+//! exactly: issued/completed/dropped/events counts, per-replica batch
+//! sequences, and p50/p95/p99/p100 to the last bit.
+//!
+//! Also covered: the derived per-cell seeds (stable, distinct, identical
+//! at any thread count), plan-order fan-in through `Collector::absorb`,
+//! panic surfacing from a worker without deadlock, and the coordinator
+//! path (`task: sweep` through a leader with a thread budget).
+
+use inferbench::coordinator::{Leader, LeaderConfig};
+use inferbench::metrics::Collector;
+use inferbench::perfdb::Query;
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
+use inferbench::serving::cluster::{ClusterConfig, ReplicaConfig};
+use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
+use inferbench::sweep::{self, SweepPlan};
+use inferbench::workload::{generate, Pattern};
+
+fn replica(per_req_ms: f64, policy: Policy) -> ReplicaConfig {
+    ReplicaConfig {
+        software: &backends::TRIS,
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+            utilization: 0.6,
+        },
+        policy,
+        max_queue: 100_000,
+    }
+}
+
+/// The golden-determinism scenario shapes as one sweep plan. Factories
+/// thread the derived cell seed into both workload generation and the
+/// engine, so this exercises the real grid-job path end to end.
+fn scenario_plan() -> SweepPlan {
+    let mut plan = SweepPlan::new(20260726);
+    // Fixed heterogeneous fleet × all four routers.
+    for router in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstanding,
+        RouterPolicy::PowerOfTwoChoices { seed: 7 },
+        RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.25 },
+    ] {
+        plan.push(format!("fixed/{}", router.label()), move |seed| ClusterConfig {
+            arrivals: generate(&Pattern::Poisson { rate: 180.0 }, 8.0, seed),
+            closed_loop: None,
+            duration_s: 8.0,
+            replicas: vec![
+                replica(2.0, Policy::Single),
+                replica(5.0, Policy::Dynamic { max_size: 8, max_wait_s: 0.002 }),
+                replica(8.0, Policy::Single),
+            ],
+            router,
+            autoscale: None,
+            cold_start: None,
+            path: RequestPath::local(Processors::none()),
+            seed,
+        });
+    }
+    // Autoscale spike: cold starts on scale-up, drain-on-remove after.
+    plan.push("autoscale/spike", |seed| ClusterConfig {
+        arrivals: generate(
+            &Pattern::Spike { base_rate: 60.0, burst_rate: 600.0, start_s: 8.0, duration_s: 8.0 },
+            30.0,
+            seed,
+        ),
+        closed_loop: None,
+        duration_s: 30.0,
+        replicas: vec![replica(5.0, Policy::Single)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: Some(AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth {
+                up_per_replica: 6.0,
+                down_per_replica: 0.5,
+                cooldown_s: 1.0,
+            },
+            min_replicas: 1,
+            max_replicas: 6,
+            template: replica(5.0, Policy::Single),
+            weight_bytes: 50_000_000,
+            eval_interval_s: 0.5,
+        }),
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed,
+    });
+    // Closed loop against a tiny queue: constant rejections + re-issues.
+    plan.push("closed/rejections", |seed| {
+        let mut rc = replica(5.0, Policy::Single);
+        rc.max_queue = 2;
+        ClusterConfig {
+            arrivals: vec![],
+            closed_loop: Some(8),
+            duration_s: 6.0,
+            replicas: vec![rc],
+            router: RouterPolicy::LeastOutstanding,
+            autoscale: None,
+            cold_start: None,
+            path: RequestPath::local(Processors::none()),
+            seed,
+        }
+    });
+    // Cold initial fleet: early requests held at the routing tier.
+    plan.push("cold/hold", |seed| ClusterConfig {
+        arrivals: generate(&Pattern::Poisson { rate: 100.0 }, 8.0, seed),
+        closed_loop: None,
+        duration_s: 8.0,
+        replicas: vec![replica(4.0, Policy::Single), replica(4.0, Policy::Single)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: Some(50_000_000),
+        path: RequestPath::local(Processors::none()),
+        seed,
+    });
+    plan
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial() {
+    let serial = scenario_plan().run(1);
+    assert_eq!(serial.len(), 7, "scenario grid shape");
+    for threads in [2, 8] {
+        let parallel = scenario_plan().run(threads);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.label, b.label, "plan order must survive threading");
+            assert_eq!(a.seed, b.seed, "{}: derived seed drift", a.label);
+            let (ra, rb) = (&a.result, &b.result);
+            assert_eq!(ra.issued, rb.issued, "{} @{threads}", a.label);
+            assert_eq!(ra.collector.completed, rb.collector.completed, "{}", a.label);
+            assert_eq!(ra.dropped, rb.dropped, "{}", a.label);
+            assert_eq!(ra.events, rb.events, "{} @{threads}: event count", a.label);
+            for q in [50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    ra.collector.e2e.percentile(q).to_bits(),
+                    rb.collector.e2e.percentile(q).to_bits(),
+                    "{} @{threads}: p{q} must be bit-identical",
+                    a.label
+                );
+            }
+            assert_eq!(ra.replicas.len(), rb.replicas.len(), "{}", a.label);
+            for (ma, mb) in ra.replicas.iter().zip(&rb.replicas) {
+                assert_eq!(ma.collector.completed, mb.collector.completed, "{}", a.label);
+                assert_eq!(ma.batch_sizes(), mb.batch_sizes(), "{}: batch sequence", a.label);
+            }
+            assert_eq!(
+                ra.collector.fingerprint(),
+                rb.collector.fingerprint(),
+                "{} @{threads}",
+                a.label
+            );
+        }
+    }
+}
+
+#[test]
+fn scenario_cells_exercise_their_paths() {
+    // The determinism assertions above are only meaningful if the cells
+    // actually hit the intended engine paths.
+    let outcome = scenario_plan().run(sweep::default_threads());
+    for cell in &outcome.cells {
+        let r = &cell.result;
+        assert_eq!(r.collector.completed + r.dropped, r.issued, "{}: conservation", cell.label);
+        assert!(r.collector.completed > 0, "{}: no work done", cell.label);
+    }
+    let by_label = |label: &str| {
+        outcome
+            .cells
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("{label} missing"))
+    };
+    assert!(
+        by_label("autoscale/spike").result.scale.events.len() >= 2,
+        "spike cell must scale"
+    );
+    assert!(by_label("closed/rejections").result.dropped > 0, "tiny queue must reject");
+    assert_eq!(by_label("cold/hold").result.dropped, 0, "held requests must not drop");
+}
+
+#[test]
+fn cell_seeds_are_stable_distinct_and_thread_independent() {
+    let plan = scenario_plan();
+    let expected: Vec<u64> = (0..plan.len()).map(|i| plan.cell_seed(i)).collect();
+    // Derivation is the documented function of (plan seed, index).
+    for (i, &s) in expected.iter().enumerate() {
+        assert_eq!(s, sweep::cell_seed(plan.seed(), i as u64));
+    }
+    // All distinct.
+    let mut sorted = expected.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), expected.len(), "cell seeds must be distinct");
+    // And what the run actually used, at any thread count.
+    for threads in [1, 4] {
+        let outcome = scenario_plan().run(threads);
+        let used: Vec<u64> = outcome.cells.iter().map(|c| c.seed).collect();
+        assert_eq!(used, expected);
+    }
+}
+
+#[test]
+fn aggregate_fans_in_by_plan_order() {
+    let aggregated = scenario_plan().run(4).aggregate();
+    let mut manual = Collector::new();
+    for cell in scenario_plan().run(1).cells {
+        manual.absorb(cell.result.collector);
+    }
+    assert_eq!(aggregated.completed, manual.completed);
+    assert_eq!(aggregated.dropped, manual.dropped);
+    assert_eq!(aggregated.e2e.len(), manual.e2e.len());
+    assert_eq!(aggregated.fingerprint(), manual.fingerprint());
+}
+
+#[test]
+fn panic_in_one_cell_surfaces_without_deadlocking() {
+    // Cell 2 builds a config the engine rejects (empty fleet); the pool
+    // must surface that panic to the caller — not hang, not swallow it —
+    // while the healthy cells around it still drain off the queue.
+    let mut plan = SweepPlan::new(3);
+    let healthy = |seed: u64| ClusterConfig {
+        arrivals: generate(&Pattern::Poisson { rate: 80.0 }, 2.0, seed),
+        closed_loop: None,
+        duration_s: 2.0,
+        replicas: vec![replica(3.0, Policy::Single)],
+        router: RouterPolicy::RoundRobin,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        seed,
+    };
+    for i in 0..6 {
+        if i == 2 {
+            plan.push("poison", move |seed| {
+                let mut cfg = healthy(seed);
+                cfg.replicas.clear(); // cluster::run asserts non-empty
+                cfg
+            });
+        } else {
+            plan.push(format!("ok{i}"), healthy);
+        }
+    }
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plan.run(3)));
+    let payload = result.expect_err("the poisoned cell's panic must reach the caller");
+    let message = payload
+        .downcast_ref::<String>()
+        .map(String::as_str)
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("");
+    assert!(
+        message.contains("at least one replica"),
+        "panic payload should be the engine's own message, got {message:?}"
+    );
+}
+
+#[test]
+fn leader_dispatches_sweep_grid_with_worker_thread_budget() {
+    // The two-tier scheduler story extended down into the job: a YAML
+    // sweep submission lands on a follower, runs its grid on the
+    // worker's thread budget, and the per-cell records are the same ones
+    // a single-threaded worker would produce.
+    let yaml = "name: grid\ntask: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+                routers: [round-robin, least-outstanding, power-of-two, latency-ewma]\n\
+                replicas: [1, 2]\nworkload:\n  rate_per_replica: 50.0\n  duration_s: 3\n";
+    let collect = |threads_per_worker: usize| -> Vec<(String, u64, u64)> {
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            threads_per_worker,
+            ..Default::default()
+        });
+        leader.submit_yaml(yaml).unwrap();
+        let done = leader.wait_for(1, std::time::Duration::from_secs(120)).unwrap();
+        assert!(done[0].ok, "sweep job failed at budget {threads_per_worker}");
+        let db = leader.perfdb.lock().unwrap();
+        let rows: Vec<(String, u64, u64)> = db
+            .query(&Query::default().task("sweep"))
+            .iter()
+            .map(|r| {
+                (
+                    r.label("cell").unwrap_or("?").to_string(),
+                    r.metric("p99_ms").unwrap().to_bits(),
+                    r.metric("throughput_rps").unwrap().to_bits(),
+                )
+            })
+            .collect();
+        drop(db);
+        leader.shutdown();
+        rows
+    };
+    let serial = collect(1);
+    let parallel = collect(4);
+    assert_eq!(serial.len(), 8, "2 fleet sizes x 4 routers");
+    assert_eq!(serial, parallel, "records must not depend on the thread budget");
+}
