@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
 
     cluster_scaleout_section()?;
     autoscale_spike_section()?;
+    multimodel_sharing_section()?;
     Ok(())
 }
 
@@ -221,5 +222,79 @@ fn autoscale_spike_section() -> anyhow::Result<()> {
         )
     );
     println!("\n(run `cargo bench --bench fig17_autoscale` for the full autoscale figure)");
+    Ok(())
+}
+
+/// Sharing versus Dedicate (simulated; runs without artifacts): the same
+/// two models served colocated on one MPS-shared replica versus dedicated
+/// on two. Light load shows the consolidation win (half the replicas for
+/// ~the MPS overhead); overcommitted load shows the cost — the shared
+/// tail melts while the dedicated pair stays stable.
+fn multimodel_sharing_section() -> anyhow::Result<()> {
+    use inferbench::serving::multimodel::{
+        self, ContentionModel, ModelSpec, MultiModelConfig, MultiReplicaConfig,
+    };
+    println!("\nSharing vs dedicate (simulated, 2 models x 5 ms service on TrIS):\n");
+    let model = |name: &str, rate: f64| ModelSpec {
+        name: name.into(),
+        service: inferbench::serving::ServiceModel::Measured {
+            per_batch: vec![(1, 0.005)],
+            utilization: 0.6,
+        },
+        policy: Policy::Single,
+        weight_bytes: 200_000_000,
+        max_queue: 400_000,
+        pattern: inferbench::workload::Pattern::Poisson { rate },
+    };
+    let replica = |hosted: Vec<usize>| MultiReplicaConfig {
+        software: &backends::TRIS,
+        mem_bytes: 16_000_000_000,
+        hosted,
+    };
+    let mut rows = Vec::new();
+    for (regime, rate) in [("light", 40.0), ("overcommitted", 120.0)] {
+        for (mode, fleet) in [
+            ("shared", vec![replica(vec![0, 1])]),
+            ("dedicated", vec![replica(vec![0]), replica(vec![1])]),
+        ] {
+            let cfg = MultiModelConfig {
+                models: vec![model("a", rate), model("b", rate)],
+                replicas: fleet,
+                router: RouterPolicy::LeastOutstanding,
+                duration_s: 20.0,
+                placement_ops: vec![],
+                contention: ContentionModel::default(),
+                path: RequestPath::local(Processors::none()),
+                seed: 77,
+            };
+            let r = multimodel::run(&cfg);
+            for m in &r.models {
+                assert!(m.conserved(), "stream {} ledger broken", m.name);
+            }
+            // Cost axis of §3.3: devices x cheapest G1 list price for the
+            // run window.
+            let hourly = inferbench::hardware::cloud::cheapest_hourly_usd("G1")
+                .expect("G1 offered in the price table");
+            let cost = hourly / 3600.0 * cfg.duration_s * r.replica_count() as f64;
+            rows.push(vec![
+                regime.to_string(),
+                format!("{rate:.0}"),
+                mode.to_string(),
+                r.replica_count().to_string(),
+                format!("{:.1}", r.collector.e2e.percentile(50.0) * 1e3),
+                format!("{:.1}", r.collector.e2e.percentile(99.0) * 1e3),
+                r.dropped.to_string(),
+                format!("{cost:.4}"),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        render::table(
+            &["Regime", "Rate/model", "Mode", "Replicas", "p50 ms", "p99 ms", "Dropped", "Cost $"],
+            &rows
+        )
+    );
+    println!("\n(run `cargo bench --bench fig_sharing` for the full sharing figure)");
     Ok(())
 }

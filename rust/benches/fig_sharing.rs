@@ -1,0 +1,263 @@
+//! Sharing versus Dedicate (paper §3.3; §4.2.1 sharing manager) on the
+//! multi-model DES: the same K models served colocated on one MPS-shared
+//! replica versus dedicated on K exclusive replicas, across colocation
+//! degree × per-model rate.
+//!
+//! The static analytic model (`hardware::sharing::share`) predicts the
+//! trade-off from offered rates; this figure produces it event-driven
+//! from `serving::multimodel`, where the contention multiplier reacts to
+//! *observed* per-model busy fractions. Readings:
+//!
+//!  (a) light colocation is nearly free: below `MPS_EFFICIENCY` total
+//!      demand, sharing costs ~the per-dispatch MPS overhead while using
+//!      1/K of the replicas — the consolidation win;
+//!  (b) overcommit melts the shared tail: when `total_demand >
+//!      mps_efficiency`, the colocated p99 is strictly worse than the
+//!      same models dedicated (asserted), while the shared fleet stays
+//!      strictly smaller and cheaper per wall-clock hour (asserted);
+//!  (c) conservation is exact per model stream, shared or dedicated.
+//!
+//! The grid runs through `sweep::map_indexed` (one cell per
+//! mode × degree × rate, seeds pinned to plan position via
+//! `sweep::cell_seed`), so the figure parallelizes like every other grid
+//! bench and is bit-identical at any thread count — the smoke run
+//! asserts that too.
+//!
+//! Run: `cargo bench --bench fig_sharing [-- --smoke]`
+
+use inferbench::hardware::cloud;
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::multimodel::{
+    self, ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
+};
+use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
+use inferbench::sweep;
+use inferbench::util::render;
+use inferbench::workload::Pattern;
+
+const DURATION: f64 = 25.0;
+const SEED: u64 = 3303;
+/// Measured per-request device time: 5 ms => ~238 rps capacity per model
+/// lane under TrIS factors.
+const PER_REQ_S: f64 = 0.005;
+
+/// Effective per-request service time under TrIS (runtime factor +
+/// per-batch overhead), the demand unit of the analytic model.
+fn effective_service_s() -> f64 {
+    PER_REQ_S * backends::TRIS.runtime_factor + backends::TRIS.batch_overhead_s
+}
+
+fn model(name: &str, rate: f64) -> ModelSpec {
+    ModelSpec {
+        name: name.into(),
+        service: ServiceModel::Measured { per_batch: vec![(1, PER_REQ_S)], utilization: 0.6 },
+        policy: Policy::Single,
+        weight_bytes: 200_000_000,
+        max_queue: 400_000,
+        pattern: Pattern::Poisson { rate },
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Shared,
+    Dedicated,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Shared => "shared",
+            Mode::Dedicated => "dedicated",
+        }
+    }
+}
+
+/// One grid cell: K models at `rate` each, colocated or dedicated.
+fn config_for(mode: Mode, degree: usize, rate: f64, seed: u64) -> MultiModelConfig {
+    let models: Vec<ModelSpec> =
+        (0..degree).map(|i| model(&format!("m{i}"), rate)).collect();
+    let replicas = match mode {
+        // One replica hosting every model (16 GB budget holds them all).
+        Mode::Shared => vec![MultiReplicaConfig {
+            software: &backends::TRIS,
+            mem_bytes: 16_000_000_000,
+            hosted: (0..degree).collect(),
+        }],
+        // One exclusive replica per model.
+        Mode::Dedicated => (0..degree)
+            .map(|i| MultiReplicaConfig {
+                software: &backends::TRIS,
+                mem_bytes: 16_000_000_000,
+                hosted: vec![i],
+            })
+            .collect(),
+    };
+    MultiModelConfig {
+        models,
+        replicas,
+        router: RouterPolicy::LeastOutstanding,
+        duration_s: DURATION,
+        placement_ops: vec![],
+        contention: ContentionModel::default(),
+        path: RequestPath::local(Processors::none()),
+        seed,
+    }
+}
+
+/// Fleet cost for the run window at the cheapest G1 (V100) list price —
+/// the §3.3 cost axis: dedicated pays one device per model.
+fn fleet_cost_usd(replicas: usize) -> f64 {
+    let hourly = cloud::cheapest_hourly_usd("G1").expect("G1 offered in the price table");
+    hourly / 3600.0 * DURATION * replicas as f64
+}
+
+fn assert_conserved(r: &MultiModelResult, label: &str) {
+    for m in &r.models {
+        assert!(
+            m.conserved(),
+            "{label}/{}: {} issued != {} completed + {} dropped",
+            m.name,
+            m.issued,
+            m.collector.completed,
+            m.collector.dropped
+        );
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = if smoke { 2 } else { sweep::default_threads() };
+    let degrees: &[usize] = if smoke { &[2] } else { &[2, 3] };
+    let rates: &[f64] = if smoke { &[40.0, 120.0] } else { &[40.0, 80.0, 120.0] };
+    let service = effective_service_s();
+    println!(
+        "=== Sharing vs Dedicate: colocation degree x per-model rate \
+         ({} s horizon, {:.1} ms effective service, MPS eff {:.2}, grid on {threads} threads) ===\n",
+        DURATION,
+        service * 1e3,
+        inferbench::hardware::sharing::MPS_EFFICIENCY
+    );
+
+    // Grid: every (degree, rate) in both modes; cells through
+    // map_indexed with plan-position seeds, exactly like the SweepPlan
+    // benches.
+    let mut grid: Vec<(Mode, usize, f64)> = Vec::new();
+    for &k in degrees {
+        for &rate in rates {
+            grid.push((Mode::Shared, k, rate));
+            grid.push((Mode::Dedicated, k, rate));
+        }
+    }
+    let run_grid = |threads: usize| -> Vec<MultiModelResult> {
+        sweep::map_indexed(&grid, threads, |i, &(mode, k, rate)| {
+            // Seed by *pair* (shared and dedicated cells are adjacent), so
+            // each comparison sees identical arrival streams and the p99
+            // delta isolates the sharing model, not sampling noise.
+            multimodel::run(&config_for(mode, k, rate, sweep::cell_seed(SEED, (i / 2) as u64)))
+        })
+    };
+    let results = run_grid(threads);
+    if smoke {
+        // Bit-identity of the multi-model grid, serial vs threaded.
+        let serial = run_grid(1);
+        for ((a, b), &(mode, k, rate)) in results.iter().zip(&serial).zip(&grid) {
+            assert_eq!(
+                a.collector.fingerprint(),
+                b.collector.fingerprint(),
+                "{}/{k}@{rate}: parallel grid must be bit-identical",
+                mode.label()
+            );
+            assert_eq!(a.events, b.events);
+        }
+    }
+
+    let mut rows = Vec::new();
+    for (&(mode, k, rate), r) in grid.iter().zip(&results) {
+        assert_conserved(r, mode.label());
+        let total_demand = k as f64 * rate * service;
+        let p99 = r.collector.e2e.percentile(99.0);
+        rows.push(vec![
+            k.to_string(),
+            format!("{rate:.0}"),
+            format!("{total_demand:.2}"),
+            mode.label().to_string(),
+            r.replica_count().to_string(),
+            format!("{:.1}", r.collector.e2e.percentile(50.0) * 1e3),
+            format!("{:.1}", p99 * 1e3),
+            format!("{}", r.collector.completed),
+            r.dropped.to_string(),
+            format!("{:.4}", fleet_cost_usd(r.replica_count())),
+        ]);
+    }
+    print!(
+        "{}",
+        render::table(
+            &[
+                "Models",
+                "Rate/model",
+                "Demand",
+                "Mode",
+                "Replicas",
+                "p50 ms",
+                "p99 ms",
+                "Done",
+                "Dropped",
+                "Cost $",
+            ],
+            &rows
+        )
+    );
+
+    // Pair up shared/dedicated cells (adjacent in the grid) and assert
+    // the §3.3 trade-off.
+    println!();
+    for pair in grid.chunks(2).zip(results.chunks(2)) {
+        let (&[(_, k, rate), _], [shared, dedicated]) = pair else { unreachable!() };
+        let total_demand = k as f64 * rate * service;
+        let overcommitted = total_demand > inferbench::hardware::sharing::MPS_EFFICIENCY;
+        let (p99_s, p99_d) = (
+            shared.collector.e2e.percentile(99.0),
+            dedicated.collector.e2e.percentile(99.0),
+        );
+        println!(
+            "{k} models @ {rate:.0} rps (demand {total_demand:.2}, {}): shared p99 {:.1} ms \
+             on {} replica(s) vs dedicated p99 {:.1} ms on {} — delta {:+.1} ms, \
+             cost {:.4}$ vs {:.4}$",
+            if overcommitted { "overcommitted" } else { "fits" },
+            p99_s * 1e3,
+            shared.replica_count(),
+            p99_d * 1e3,
+            dedicated.replica_count(),
+            (p99_s - p99_d) * 1e3,
+            fleet_cost_usd(shared.replica_count()),
+            fleet_cost_usd(dedicated.replica_count()),
+        );
+        // The cost side of the trade-off holds everywhere: sharing packs
+        // K models onto strictly fewer devices.
+        assert!(
+            shared.replica_count() < dedicated.replica_count(),
+            "sharing must use strictly fewer replicas"
+        );
+        assert!(fleet_cost_usd(shared.replica_count()) < fleet_cost_usd(dedicated.replica_count()));
+        if overcommitted {
+            // The latency side: overcommitted colocation is strictly
+            // worse than dedicating (the acceptance criterion).
+            assert!(
+                p99_s > p99_d,
+                "{k}@{rate}: overcommitted shared p99 ({p99_s}s) must exceed dedicated ({p99_d}s)"
+            );
+        } else {
+            // Light colocation is nearly free: within a few ms of
+            // dedicated (MPS overhead + mild queueing noise).
+            assert!(
+                p99_s < p99_d + 0.010,
+                "{k}@{rate}: light sharing should be near-free, {p99_s}s vs {p99_d}s"
+            );
+        }
+    }
+    println!(
+        "\nPASS: overcommitted colocation strictly worse on p99, strictly cheaper on replicas; \
+         per-stream conservation exact"
+    );
+}

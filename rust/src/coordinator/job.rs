@@ -8,10 +8,13 @@
 //! whole benchmark grids run by the parallel sweep engine (`task: sweep`),
 //! and (for scheduler studies / tests) calibrated sleeps.
 //!
-//! A `sweep` submission fans a router × fleet-size grid across the
-//! worker's `threads_per_worker` budget (one PerfDB record per cell;
-//! per-cell seeds derive from the job seed, so the records are identical
-//! at any thread budget):
+//! A `sweep` submission fans a router × fleet-size × batching-timeout
+//! grid across the worker's `threads_per_worker` budget (one PerfDB
+//! record per cell; per-cell seeds derive from the job seed, so the
+//! records are identical at any thread budget). `batch_timeouts_ms` is
+//! optional — when omitted the single `batching.max_wait_ms` value is
+//! used — and, like the other axes, malformed entries fail the submission
+//! loudly instead of silently shrinking the grid:
 //!
 //! ```yaml
 //! name: router-replica-grid
@@ -21,8 +24,34 @@
 //! software: tris
 //! routers: [round-robin, least-outstanding, power-of-two, latency-ewma]
 //! replicas: [1, 2, 4]
+//! batch_timeouts_ms: [1, 2, 5]   # optional batching-policy axis
 //! workload:
 //!   rate_per_replica: 120.0
+//!   duration_s: 30
+//! batching:
+//!   max_size: 8
+//!   max_wait_ms: 2
+//! ```
+//!
+//! A `multimodel` submission runs the multi-model replica engine
+//! (`serving::multimodel`) for the paper's Sharing-versus-Dedicate study:
+//! named per-model Poisson streams against either a shared fleet (every
+//! replica hosts all models under the MPS contention model and the
+//! per-replica weight-memory budget) or a dedicated fleet (one replica
+//! per model), producing one PerfDB record per model stream:
+//!
+//! ```yaml
+//! name: share-vs-dedicate
+//! task: multimodel
+//! platform: G1
+//! software: tris
+//! models: [resnet50, mobilenet_v1]
+//! rates: [120.0, 90.0]          # per-stream Poisson rates, one per model
+//! mode: shared                  # or dedicated (one replica per model)
+//! replicas: 1                   # shared fleet size (each hosts all models)
+//! mem_gb: 16.0                  # per-replica weight-memory budget
+//! router: least-outstanding     # applied per model over its hosts
+//! workload:
 //!   duration_s: 30
 //! batching:
 //!   max_size: 8
@@ -65,6 +94,9 @@ use crate::models::catalog;
 use crate::perfdb::Record;
 use crate::pipeline::{Processors, RequestPath, LAN};
 use crate::serving::cluster::{self, ClusterConfig, ReplicaConfig};
+use crate::serving::multimodel::{
+    self, ModelSpec as MmModelSpec, MultiModelConfig, MultiReplicaConfig,
+};
 use crate::serving::{
     self, backends, AutoscaleConfig, Policy, RouterPolicy, ScalePolicy, ServiceModel, SimConfig,
 };
@@ -110,10 +142,10 @@ pub enum JobKind {
     /// Roofline sweep of a model across batch sizes (hardware tier).
     HardwareSweep { model: String, platform: String, batches: Vec<usize> },
     /// A grid of independent cluster simulations — router policies ×
-    /// fleet sizes, offered load scaled per replica — executed by the
-    /// parallel sweep engine (`crate::sweep`) on the worker's
-    /// `threads_per_worker` budget. Per-cell seeds derive from the job
-    /// seed, so results are identical at any thread budget.
+    /// fleet sizes × batching timeouts, offered load scaled per replica —
+    /// executed by the parallel sweep engine (`crate::sweep`) on the
+    /// worker's `threads_per_worker` budget. Per-cell seeds derive from
+    /// the job seed, so results are identical at any thread budget.
     Sweep {
         model: String,
         platform: String,
@@ -121,11 +153,38 @@ pub enum JobKind {
         /// Router policy names, one grid axis (same vocabulary as
         /// `cluster_sim`'s `router`).
         routers: Vec<String>,
-        /// Fleet sizes, the other grid axis.
+        /// Fleet sizes, the second grid axis.
         replicas: Vec<usize>,
+        /// Dynamic-batching timeouts (seconds), the batching-policy axis;
+        /// a single-element list when the submission names no
+        /// `batch_timeouts_ms`.
+        batch_timeouts_s: Vec<f64>,
         /// Offered Poisson rate per replica (cells stay comparably
         /// loaded as the fleet axis grows).
         rate_per_replica: f64,
+        duration_s: f64,
+        max_batch: usize,
+    },
+    /// Multi-model replica serving (Sharing versus Dedicate, §3.3): one
+    /// Poisson stream per model against a shared fleet (co-located under
+    /// MPS contention and the weight-memory budget) or a dedicated fleet
+    /// (one replica per model). One PerfDB record per model stream.
+    MultiModel {
+        platform: String,
+        software: String,
+        /// Catalog model names, one stream each.
+        models: Vec<String>,
+        /// Per-stream Poisson rates, index-aligned with `models`.
+        rates: Vec<f64>,
+        /// "shared" or "dedicated".
+        mode: String,
+        /// Shared fleet size (each replica hosts every model); ignored
+        /// for `dedicated`, which always uses one replica per model.
+        replicas: usize,
+        /// Per-replica weight-memory budget (GB).
+        mem_gb: f64,
+        /// Router policy name, applied per model over its hosts.
+        router: String,
         duration_s: f64,
         max_batch: usize,
         max_wait_s: f64,
@@ -321,8 +380,35 @@ impl JobSpec {
                     }
                     None => vec![1, 2, 4],
                 };
-                if routers.is_empty() || replicas.is_empty() {
-                    bail!("sweep needs non-empty 'routers' and 'replicas' lists");
+                let default_wait_s = doc
+                    .get("batching")
+                    .and_then(|b| b.get("max_wait_ms"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(5.0)
+                    / 1e3;
+                let batch_timeouts_s: Vec<f64> =
+                    match doc.get("batch_timeouts_ms").and_then(|v| v.as_arr()) {
+                        Some(a) => {
+                            // Same loud-failure contract as the other two
+                            // axes: one malformed timeout fails the whole
+                            // submission, never a silently smaller grid.
+                            let mut out = Vec::with_capacity(a.len());
+                            for x in a {
+                                match x.as_f64() {
+                                    Some(t) if t > 0.0 => out.push(t / 1e3),
+                                    _ => bail!(
+                                        "sweep 'batch_timeouts_ms' entries must be positive numbers"
+                                    ),
+                                }
+                            }
+                            out
+                        }
+                        None => vec![default_wait_s],
+                    };
+                if routers.is_empty() || replicas.is_empty() || batch_timeouts_s.is_empty() {
+                    bail!(
+                        "sweep needs non-empty 'routers', 'replicas', and 'batch_timeouts_ms' lists"
+                    );
                 }
                 JobKind::Sweep {
                     model: str_or(doc, "model", "resnet50"),
@@ -330,10 +416,70 @@ impl JobSpec {
                     software: str_or(doc, "software", "tris"),
                     routers,
                     replicas,
+                    batch_timeouts_s,
                     rate_per_replica: wl
                         .and_then(|w| w.get("rate_per_replica"))
                         .and_then(|v| v.as_f64())
                         .unwrap_or(120.0),
+                    duration_s: wl
+                        .and_then(|w| w.get("duration_s"))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(30.0),
+                    max_batch: doc
+                        .get("batching")
+                        .and_then(|b| b.get("max_size"))
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(8) as usize,
+                }
+            }
+            "multimodel" => {
+                let wl = doc.get("workload");
+                let models: Vec<String> = match doc.get("models").and_then(|v| v.as_arr()) {
+                    Some(a) => {
+                        let mut out = Vec::with_capacity(a.len());
+                        for x in a {
+                            match x.as_str() {
+                                Some(s) => out.push(s.to_string()),
+                                None => bail!("multimodel 'models' entries must be strings"),
+                            }
+                        }
+                        out
+                    }
+                    None => bail!("multimodel needs a 'models' list"),
+                };
+                if models.is_empty() {
+                    bail!("multimodel 'models' list must be non-empty");
+                }
+                let rates: Vec<f64> = match doc.get("rates").and_then(|v| v.as_arr()) {
+                    Some(a) => {
+                        let mut out = Vec::with_capacity(a.len());
+                        for x in a {
+                            match x.as_f64() {
+                                Some(r) if r > 0.0 => out.push(r),
+                                _ => bail!("multimodel 'rates' entries must be positive numbers"),
+                            }
+                        }
+                        out
+                    }
+                    None => models.iter().map(|_| 60.0).collect(),
+                };
+                if rates.len() != models.len() {
+                    bail!(
+                        "multimodel 'rates' must match 'models' ({} rates vs {} models)",
+                        rates.len(),
+                        models.len()
+                    );
+                }
+                JobKind::MultiModel {
+                    platform: str_or(doc, "platform", "G1"),
+                    software: str_or(doc, "software", "tris"),
+                    models,
+                    rates,
+                    mode: str_or(doc, "mode", "shared"),
+                    replicas: doc.get("replicas").and_then(|v| v.as_i64()).unwrap_or(1).max(1)
+                        as usize,
+                    mem_gb: doc.get("mem_gb").and_then(|v| v.as_f64()).unwrap_or(16.0),
+                    router: str_or(doc, "router", "least-outstanding"),
                     duration_s: wl
                         .and_then(|w| w.get("duration_s"))
                         .and_then(|v| v.as_f64())
@@ -379,9 +525,14 @@ fn default_estimate(kind: &JobKind) -> f64 {
         // Serial estimate: the sum of the per-cell cluster_sim estimates.
         // The leader divides this by its workers' thread budget when
         // charging backlog (see `LeaderConfig::charged_estimate_s`).
-        JobKind::Sweep { duration_s, replicas, routers, .. } => {
+        JobKind::Sweep { duration_s, replicas, routers, batch_timeouts_s, .. } => {
             let total_replicas: usize = replicas.iter().sum();
-            duration_s * 0.05 * total_replicas as f64 * routers.len() as f64 + 2.0
+            duration_s * 0.05 * total_replicas as f64 * routers.len() as f64
+                * batch_timeouts_s.len() as f64
+                + 2.0
+        }
+        JobKind::MultiModel { duration_s, models, .. } => {
+            duration_s * 0.05 * models.len() as f64 + 2.0
         }
         JobKind::Sleep { seconds } => *seconds,
     }
@@ -616,10 +767,10 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             software,
             routers,
             replicas,
+            batch_timeouts_s,
             rate_per_replica,
             duration_s,
             max_batch,
-            max_wait_s,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -632,40 +783,44 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 resolved.push((name.clone(), router_policy(name, seed)?));
             }
             let mut plan = SweepPlan::new(seed);
-            let mut axes = Vec::new(); // (fleet size, router name, rate) per cell
+            // (fleet size, router name, rate, timeout s) per cell
+            let mut axes = Vec::new();
             for &n in replicas {
                 for (name, policy) in &resolved {
-                    let rate = rate_per_replica * n as f64;
-                    let template = ReplicaConfig {
-                        software: sw,
-                        service: service.clone(),
-                        policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: *max_wait_s },
-                        max_queue: 4096,
-                    };
-                    let router = *policy;
-                    let duration = *duration_s;
-                    let payload = m.request_bytes;
-                    plan.push(format!("{n}x{name}"), move |cell_seed| ClusterConfig {
-                        arrivals: generate(&Pattern::Poisson { rate }, duration, cell_seed),
-                        closed_loop: None,
-                        duration_s: duration,
-                        replicas: (0..n).map(|_| template.clone()).collect(),
-                        router,
-                        autoscale: None,
-                        cold_start: None,
-                        path: RequestPath {
-                            processors: Processors::image(),
-                            network: LAN,
-                            payload_bytes: payload,
-                        },
-                        seed: cell_seed,
-                    });
-                    axes.push((n, name.clone(), rate));
+                    for &wait_s in batch_timeouts_s {
+                        let rate = rate_per_replica * n as f64;
+                        let template = ReplicaConfig {
+                            software: sw,
+                            service: service.clone(),
+                            policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: wait_s },
+                            max_queue: 4096,
+                        };
+                        let router = *policy;
+                        let duration = *duration_s;
+                        let payload = m.request_bytes;
+                        let label = format!("{n}x{name}@{:.1}ms", wait_s * 1e3);
+                        plan.push(label, move |cell_seed| ClusterConfig {
+                            arrivals: generate(&Pattern::Poisson { rate }, duration, cell_seed),
+                            closed_loop: None,
+                            duration_s: duration,
+                            replicas: (0..n).map(|_| template.clone()).collect(),
+                            router,
+                            autoscale: None,
+                            cold_start: None,
+                            path: RequestPath {
+                                processors: Processors::image(),
+                                network: LAN,
+                                payload_bytes: payload,
+                            },
+                            seed: cell_seed,
+                        });
+                        axes.push((n, name.clone(), rate, wait_s));
+                    }
                 }
             }
             let outcome = plan.run(threads.max(1));
             let mut out = Vec::with_capacity(outcome.cells.len());
-            for (cell, (n, router_name, rate)) in outcome.cells.iter().zip(&axes) {
+            for (cell, (n, router_name, rate, wait_s)) in outcome.cells.iter().zip(&axes) {
                 let r = &cell.result;
                 if r.collector.completed + r.dropped != r.issued {
                     bail!(
@@ -682,11 +837,125 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         .with_label("router", router_name)
                         .with_metric("replicas", *n as f64)
                         .with_metric("rate_rps", *rate)
+                        .with_metric("batch_timeout_ms", wait_s * 1e3)
                         .with_metric("p50_ms", r.collector.e2e.percentile(50.0) * 1e3)
                         .with_metric("p99_ms", r.collector.e2e.percentile(99.0) * 1e3)
                         .with_metric("throughput_rps", r.collector.throughput_rps())
                         .with_metric("dropped", r.dropped as f64)
                         .with_metric("issued", r.issued as f64),
+                );
+            }
+            Ok(out)
+        }
+        JobKind::MultiModel {
+            platform,
+            software,
+            models,
+            rates,
+            mode,
+            replicas,
+            mem_gb,
+            router,
+            duration_s,
+            max_batch,
+            max_wait_s,
+        } => {
+            let sw = backends::find(software)
+                .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
+            let mut specs = Vec::with_capacity(models.len());
+            let mut payload = 0u64; // largest request drives the modelled transfer
+            for (name, &rate) in models.iter().zip(rates) {
+                let cm = catalog::find(name).ok_or_else(|| anyhow!("model {name:?} unknown"))?;
+                payload = payload.max(cm.request_bytes);
+                specs.push(MmModelSpec {
+                    name: name.clone(),
+                    service: service_model_for(name, platform)?,
+                    policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: *max_wait_s },
+                    weight_bytes: cm.profile.weight_bytes,
+                    max_queue: 4096,
+                    pattern: Pattern::Poisson { rate },
+                });
+            }
+            let mem_bytes = (mem_gb * 1e9) as u64;
+            let total_weights: u64 = specs.iter().map(|s| s.weight_bytes).sum();
+            let fleet: Vec<MultiReplicaConfig> = match mode.as_str() {
+                "shared" => {
+                    // Validate the budget here so a misconfigured
+                    // submission fails with an error instead of panicking
+                    // inside a worker thread.
+                    if total_weights > mem_bytes {
+                        bail!(
+                            "multimodel shared placement overflows mem_gb: {} bytes of weights \
+                             vs {} budget",
+                            total_weights,
+                            mem_bytes
+                        );
+                    }
+                    (0..*replicas)
+                        .map(|_| MultiReplicaConfig {
+                            software: sw,
+                            mem_bytes,
+                            hosted: (0..specs.len()).collect(),
+                        })
+                        .collect()
+                }
+                "dedicated" => {
+                    for s in &specs {
+                        if s.weight_bytes > mem_bytes {
+                            bail!(
+                                "multimodel model {:?} does not fit mem_gb ({} bytes vs {})",
+                                s.name,
+                                s.weight_bytes,
+                                mem_bytes
+                            );
+                        }
+                    }
+                    (0..specs.len())
+                        .map(|i| MultiReplicaConfig { software: sw, mem_bytes, hosted: vec![i] })
+                        .collect()
+                }
+                other => bail!("multimodel mode must be 'shared' or 'dedicated', got {other:?}"),
+            };
+            let config = MultiModelConfig {
+                models: specs,
+                replicas: fleet,
+                router: router_policy(router, seed)?,
+                duration_s: *duration_s,
+                placement_ops: vec![],
+                contention: Default::default(),
+                path: RequestPath {
+                    processors: Processors::image(),
+                    network: LAN,
+                    payload_bytes: payload,
+                },
+                seed,
+            };
+            let result = multimodel::run(&config);
+            let colocated = if mode.as_str() == "shared" { models.len() } else { 1 };
+            let mut out = Vec::with_capacity(result.models.len());
+            for (mm, &rate) in result.models.iter().zip(rates) {
+                // Conservation is part of the contract, per stream.
+                if !mm.conserved() {
+                    bail!(
+                        "multimodel stream {:?} conservation violated: {} issued != {} completed \
+                         + {} dropped",
+                        mm.name,
+                        mm.issued,
+                        mm.collector.completed,
+                        mm.collector.dropped
+                    );
+                }
+                out.push(
+                    Record::new("multimodel", &mm.name, platform, software)
+                        .with_label("mode", mode)
+                        .with_metric("rate_rps", rate)
+                        .with_metric("replicas", result.replica_count() as f64)
+                        .with_metric("colocated", colocated as f64)
+                        .with_metric("p50_ms", mm.collector.e2e.percentile(50.0) * 1e3)
+                        .with_metric("p99_ms", mm.collector.e2e.percentile(99.0) * 1e3)
+                        .with_metric("throughput_rps", mm.collector.throughput_rps())
+                        .with_metric("issued", mm.issued as f64)
+                        .with_metric("dropped", mm.collector.dropped as f64),
                 );
             }
             Ok(out)
@@ -945,6 +1214,151 @@ batching:
                 );
             }
         }
+    }
+
+    #[test]
+    fn sweep_batch_timeout_axis_multiplies_the_grid() {
+        let spec = JobSpec::parse_yaml(
+            "task: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+             routers: [round-robin]\nreplicas: [1]\nbatch_timeouts_ms: [1, 2, 5]\n\
+             workload:\n  rate_per_replica: 60.0\n  duration_s: 3\n",
+        )
+        .unwrap();
+        match &spec.kind {
+            JobKind::Sweep { batch_timeouts_s, .. } => {
+                assert_eq!(batch_timeouts_s.len(), 3);
+                assert!((batch_timeouts_s[0] - 0.001).abs() < 1e-12);
+                assert!((batch_timeouts_s[2] - 0.005).abs() < 1e-12);
+            }
+            k => panic!("{k:?}"),
+        }
+        let records = execute(&spec, 5, 1.0, 2).unwrap();
+        assert_eq!(records.len(), 3, "1 fleet x 1 router x 3 timeouts");
+        for (r, want_ms) in records.iter().zip([1.0, 2.0, 5.0]) {
+            assert_eq!(r.metric("batch_timeout_ms"), Some(want_ms));
+            assert!(r.label("cell").unwrap().contains("ms"), "{:?}", r.label("cell"));
+        }
+    }
+
+    #[test]
+    fn sweep_defaults_to_single_batching_timeout() {
+        let spec = JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap();
+        match &spec.kind {
+            JobKind::Sweep { batch_timeouts_s, .. } => {
+                assert_eq!(batch_timeouts_s, &vec![0.002], "falls back to batching.max_wait_ms");
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_malformed_batch_timeouts() {
+        // A bad entry fails the submission loudly — the grid never
+        // silently shrinks (same contract as the router/replica axes).
+        assert!(JobSpec::parse_yaml("task: sweep\nbatch_timeouts_ms: [2, 0]\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nbatch_timeouts_ms: [2, -1]\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nbatch_timeouts_ms: [2, oops]\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nbatch_timeouts_ms: []\n").is_err());
+    }
+
+    const MULTIMODEL_SUBMISSION: &str = r#"
+name: share-vs-dedicate
+task: multimodel
+platform: G1
+software: tris
+models: [resnet50, mobilenet_v1]
+rates: [100.0, 80.0]
+mode: shared
+replicas: 1
+mem_gb: 4.0
+router: least-outstanding
+workload:
+  duration_s: 8
+batching:
+  max_size: 8
+  max_wait_ms: 2
+"#;
+
+    #[test]
+    fn parses_multimodel_submission() {
+        let spec = JobSpec::parse_yaml(MULTIMODEL_SUBMISSION).unwrap();
+        match &spec.kind {
+            JobKind::MultiModel { models, rates, mode, replicas, mem_gb, router, .. } => {
+                assert_eq!(models, &vec!["resnet50".to_string(), "mobilenet_v1".to_string()]);
+                assert_eq!(rates, &vec![100.0, 80.0]);
+                assert_eq!(mode, "shared");
+                assert_eq!(*replicas, 1);
+                assert_eq!(*mem_gb, 4.0);
+                assert_eq!(router, "least-outstanding");
+            }
+            k => panic!("{k:?}"),
+        }
+        assert!(spec.est_duration_s > 0.0);
+    }
+
+    #[test]
+    fn multimodel_rejects_malformed_submissions() {
+        assert!(JobSpec::parse_yaml("task: multimodel\n").is_err(), "models list required");
+        assert!(JobSpec::parse_yaml("task: multimodel\nmodels: []\n").is_err());
+        assert!(JobSpec::parse_yaml("task: multimodel\nmodels: [resnet50, 42]\n").is_err());
+        assert!(
+            JobSpec::parse_yaml("task: multimodel\nmodels: [resnet50]\nrates: [0]\n").is_err()
+        );
+        assert!(
+            JobSpec::parse_yaml("task: multimodel\nmodels: [resnet50]\nrates: [10, 20]\n")
+                .is_err(),
+            "rates must be index-aligned with models"
+        );
+    }
+
+    #[test]
+    fn executes_multimodel_one_record_per_stream() {
+        let spec = JobSpec::parse_yaml(MULTIMODEL_SUBMISSION).unwrap();
+        let records = execute(&spec, 3, 1.0, 1).unwrap();
+        assert_eq!(records.len(), 2, "one record per model stream");
+        assert_eq!(records[0].model, "resnet50");
+        assert_eq!(records[1].model, "mobilenet_v1");
+        for r in &records {
+            assert_eq!(r.label("mode"), Some("shared"));
+            assert_eq!(r.metric("replicas"), Some(1.0));
+            assert_eq!(r.metric("colocated"), Some(2.0));
+            // Conservation is enforced inside execute (a violation fails
+            // the job); the record carries the stream's ledger.
+            assert!(r.metric("issued").unwrap() > 0.0);
+            assert!(r.metric("dropped").unwrap() <= r.metric("issued").unwrap());
+            assert!(r.metric("throughput_rps").unwrap() > 0.0);
+            assert!(r.metric("p99_ms").unwrap() >= r.metric("p50_ms").unwrap());
+        }
+    }
+
+    #[test]
+    fn multimodel_dedicated_uses_one_replica_per_model() {
+        let yaml = MULTIMODEL_SUBMISSION.replace("mode: shared", "mode: dedicated");
+        let spec = JobSpec::parse_yaml(&yaml).unwrap();
+        let records = execute(&spec, 3, 1.0, 1).unwrap();
+        assert_eq!(records.len(), 2);
+        for r in &records {
+            assert_eq!(r.label("mode"), Some("dedicated"));
+            assert_eq!(r.metric("replicas"), Some(2.0));
+            assert_eq!(r.metric("colocated"), Some(1.0));
+        }
+    }
+
+    #[test]
+    fn multimodel_rejects_bad_mode_model_and_overflow() {
+        let bad_mode = JobSpec::parse_yaml("task: multimodel\nmodels: [resnet50]\nmode: vibes\n")
+            .unwrap();
+        assert!(execute(&bad_mode, 0, 1.0, 1).is_err());
+        let bad_model =
+            JobSpec::parse_yaml("task: multimodel\nmodels: [alexnet9000]\n").unwrap();
+        assert!(execute(&bad_model, 0, 1.0, 1).is_err());
+        // bert_large alone is ~1.36 GB of weights: a 1 GB budget must be
+        // refused as an error, not a worker panic.
+        let overflow = JobSpec::parse_yaml(
+            "task: multimodel\nmodels: [bert_large]\nmem_gb: 1.0\nmode: shared\n",
+        )
+        .unwrap();
+        assert!(execute(&overflow, 0, 1.0, 1).is_err());
     }
 
     #[test]

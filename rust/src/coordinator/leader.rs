@@ -145,12 +145,13 @@ impl LeaderConfig {
     /// sees the time the job will actually occupy the worker.
     fn charged_estimate_s(&self, spec: &JobSpec) -> f64 {
         match &spec.kind {
-            job::JobKind::Sweep { routers, replicas, .. } => {
+            job::JobKind::Sweep { routers, replicas, batch_timeouts_s, .. } => {
                 // The pool can't use more workers than the grid has
                 // cells, so the effective speedup divisor is capped by
                 // the cell count (a 2-cell sweep on a 16-thread budget
                 // still occupies the worker for ~half its serial time).
-                let cells = (routers.len() * replicas.len()).max(1);
+                let cells =
+                    (routers.len() * replicas.len() * batch_timeouts_s.len()).max(1);
                 let budget = self.threads_per_worker.max(1).min(cells);
                 spec.est_duration_s / budget as f64
             }

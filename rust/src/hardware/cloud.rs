@@ -41,6 +41,17 @@ pub fn instances_for(platform: &Platform) -> Vec<&'static Instance> {
     INSTANCES.iter().filter(|i| i.platform_id == platform.id).collect()
 }
 
+/// Cheapest hourly rate offered for a platform id across providers
+/// (`None` when no provider carries it) — the fleet-cost unit of the
+/// sharing-versus-dedicate comparison.
+pub fn cheapest_hourly_usd(platform_id: &str) -> Option<f64> {
+    INSTANCES
+        .iter()
+        .filter(|i| i.platform_id == platform_id)
+        .map(|i| i.hourly_usd)
+        .min_by(|a, b| a.partial_cmp(b).expect("NaN price"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -19,6 +19,15 @@
 //! autoscale figure (`benches/fig17_autoscale.rs`) reports burst-vs-
 //! recovery p99 for scale policies × cold-start profiles.
 //!
+//! Multi-model tier: [`serving::multimodel`] co-locates several models on
+//! each replica — per-model batchers and queues behind a model-aware
+//! [`serving::router::ModelRouter`], a per-replica weight-memory budget
+//! (loads pay cold starts; overflowing placements evict idle co-tenants
+//! or are rejected), and an MPS contention multiplier derived from
+//! [`hardware::sharing`] — the paper's §3.3 Sharing-versus-Dedicate
+//! study, reproduced event-driven by `benches/fig_sharing.rs` with exact
+//! per-stream conservation ([`metrics::ModelMetrics`]).
+//!
 //! Sweep tier: [`sweep`] executes whole benchmark grids (the fig7–fig17
 //! cell matrices) on a scoped-thread worker pool with per-cell seeds
 //! derived from the plan seed, returning results in plan order so a

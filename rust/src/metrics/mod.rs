@@ -355,6 +355,88 @@ impl ReplicaMetrics {
     }
 }
 
+/// Per-model (per-stream) accounting of a multi-model serving run: the
+/// model's own collector plus the number of requests its stream issued.
+/// Conservation holds independently per stream:
+/// `issued == collector.completed + collector.dropped`.
+#[derive(Debug)]
+pub struct ModelMetrics {
+    pub name: String,
+    /// Requests issued by this model's arrival stream.
+    pub issued: u64,
+    pub collector: Collector,
+}
+
+impl ModelMetrics {
+    pub fn new(name: impl Into<String>) -> Self {
+        ModelMetrics { name: name.into(), issued: 0, collector: Collector::new() }
+    }
+
+    /// Whether this stream's ledger balances exactly.
+    pub fn conserved(&self) -> bool {
+        self.issued == self.collector.completed + self.collector.dropped
+    }
+}
+
+/// What happened to a (replica, model) placement at a [`PlacementEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementEventKind {
+    /// A load was admitted: the model starts paying its cold start on the
+    /// replica (weight memory is charged immediately).
+    LoadRequested,
+    /// Cold start finished: the model is routable on the replica.
+    Ready,
+    /// The model left the replica: queued requests dropped, weight memory
+    /// freed (in-flight work still completes).
+    Evicted,
+    /// A load was refused: the model did not fit even after evicting
+    /// every idle co-tenant (or the op was invalid).
+    Rejected,
+}
+
+impl PlacementEventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementEventKind::LoadRequested => "load-requested",
+            PlacementEventKind::Ready => "ready",
+            PlacementEventKind::Evicted => "evicted",
+            PlacementEventKind::Rejected => "rejected",
+        }
+    }
+}
+
+/// One model-placement transition recorded by the multi-model serving
+/// engine (the weight-memory analogue of [`ScaleEvent`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementEvent {
+    pub time_s: f64,
+    pub kind: PlacementEventKind,
+    pub replica: usize,
+    pub model: usize,
+}
+
+/// Every placement transition of a multi-model run, in event order.
+/// Models hosted at t = 0 are not recorded (they never transitioned).
+#[derive(Debug, Clone, Default)]
+pub struct PlacementTimeline {
+    pub events: Vec<PlacementEvent>,
+}
+
+impl PlacementTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, time_s: f64, kind: PlacementEventKind, replica: usize, model: usize) {
+        self.events.push(PlacementEvent { time_s, kind, replica, model });
+    }
+
+    /// Number of events of one kind (e.g. completed loads, evictions).
+    pub fn count(&self, kind: PlacementEventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+}
+
 /// One replica-lifecycle transition recorded by the autoscaling cluster
 /// engine.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -704,6 +786,37 @@ mod tests {
         assert_eq!(s.count(ScaleEventKind::AddRequested), 1);
         assert_eq!(s.count(ScaleEventKind::Retired), 1);
         assert_eq!(ScaleTimeline::new(4).active_series(), vec![(0.0, 4)]);
+    }
+
+    #[test]
+    fn model_metrics_conservation_check() {
+        let mut m = ModelMetrics::new("resnet50");
+        assert!(m.conserved(), "empty ledger balances");
+        m.issued = 2;
+        assert!(!m.conserved());
+        let mut ok = RequestTrace::new(0, 0.0);
+        ok.record_stage(Stage::Inference, 0.01);
+        m.collector.ingest(&ok);
+        let mut dropped = RequestTrace::new(1, 0.0);
+        dropped.dropped = true;
+        m.collector.ingest(&dropped);
+        assert!(m.conserved());
+        assert_eq!(m.name, "resnet50");
+    }
+
+    #[test]
+    fn placement_timeline_counts_by_kind() {
+        let mut p = PlacementTimeline::new();
+        p.record(1.0, PlacementEventKind::LoadRequested, 0, 2);
+        p.record(4.5, PlacementEventKind::Ready, 0, 2);
+        p.record(4.5, PlacementEventKind::Evicted, 0, 1);
+        p.record(9.0, PlacementEventKind::Rejected, 1, 2);
+        assert_eq!(p.count(PlacementEventKind::LoadRequested), 1);
+        assert_eq!(p.count(PlacementEventKind::Ready), 1);
+        assert_eq!(p.count(PlacementEventKind::Evicted), 1);
+        assert_eq!(p.count(PlacementEventKind::Rejected), 1);
+        assert_eq!(p.events[2].model, 1);
+        assert_eq!(PlacementEventKind::Evicted.label(), "evicted");
     }
 
     #[test]

@@ -151,6 +151,18 @@ impl PerfDb {
         self.records.iter().filter(|r| q.matches(r)).collect()
     }
 
+    /// Query records additionally filtered by a string tag set via
+    /// [`Record::with_label`] — e.g. pull one sweep cell's records (or
+    /// every record of one router policy) back out of a grid. Labels
+    /// were previously write-only: jobs tagged per-cell records but no
+    /// read path could select on them.
+    pub fn query_by_label(&self, q: &Query, key: &str, value: &str) -> Vec<&Record> {
+        self.records
+            .iter()
+            .filter(|r| q.matches(r) && r.label(key) == Some(value))
+            .collect()
+    }
+
     /// Mean of a metric over matching records.
     pub fn aggregate_mean(&self, q: &Query, metric: &str) -> Option<f64> {
         let vals: Vec<f64> = self.query(q).iter().filter_map(|r| r.metric(metric)).collect();
@@ -223,6 +235,32 @@ mod tests {
         assert_eq!(db.query(&Query::default().model("resnet50")).len(), 3);
         assert_eq!(db.query(&Query::default().model("resnet50").platform("G1")).len(), 2);
         assert_eq!(db.query(&Query::default().software("tris")).len(), 1);
+    }
+
+    #[test]
+    fn query_by_label_filters_tagged_records() {
+        let mut db = sample_db();
+        db.insert(
+            Record::new("sweep", "resnet50", "G1", "tris")
+                .with_label("router", "round-robin")
+                .with_metric("p99_ms", 20.0),
+        );
+        db.insert(
+            Record::new("sweep", "resnet50", "G1", "tris")
+                .with_label("router", "least-outstanding")
+                .with_metric("p99_ms", 15.0),
+        );
+        let rr = db.query_by_label(&Query::default().task("sweep"), "router", "round-robin");
+        assert_eq!(rr.len(), 1);
+        assert_eq!(rr[0].metric("p99_ms"), Some(20.0));
+        // Envelope filters still compose with the label filter.
+        assert!(db
+            .query_by_label(&Query::default().task("serve"), "router", "round-robin")
+            .is_empty());
+        // Records without the label never match; a numeric metric under
+        // the same key is not a string label.
+        assert!(db.query_by_label(&Query::default(), "p99_ms", "20").is_empty());
+        assert!(db.query_by_label(&Query::default(), "router", "teleport").is_empty());
     }
 
     #[test]

@@ -120,6 +120,16 @@ impl Batcher {
         self.decide(now)
     }
 
+    /// Remove and return every queued request (model-eviction / teardown
+    /// path: the queue's owner is disappearing, and the caller must
+    /// account for each drained request). Resets the tracked oldest
+    /// deadline; the ready buffer (an already-dispatched batch) is
+    /// untouched.
+    pub fn take_queue(&mut self) -> Vec<Queued> {
+        self.oldest_s = f64::INFINITY;
+        std::mem::take(&mut self.queue)
+    }
+
     fn decide(&mut self, now: f64) -> Decision {
         if self.queue.is_empty() {
             return Decision::Wait;
@@ -315,6 +325,19 @@ mod tests {
                 assert!(b.ready().len() <= 4);
             }
         }
+    }
+
+    #[test]
+    fn take_queue_drains_everything_and_resets_deadline() {
+        let mut b = Batcher::new(Policy::Dynamic { max_size: 8, max_wait_s: 0.02 });
+        b.on_arrival(1, 1.0);
+        b.on_arrival(2, 1.005);
+        let drained = b.take_queue();
+        assert_eq!(drained.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.queue_len(), 0);
+        // The tracked oldest deadline reset with the queue: the next
+        // arrival's wake derives from itself, not the drained requests.
+        assert!(matches!(b.on_arrival(3, 5.0), Decision::WakeAt(t) if (t - 5.02).abs() < 1e-12));
     }
 
     #[test]

@@ -39,6 +39,7 @@
 use super::autoscale::{Autoscaler, ScaleDecision, ScaleSignal};
 use super::backends::{DynamicBatching, Software};
 use super::batcher::{Batcher, Decision, Policy};
+use super::des::{self, push, EventBox, Key};
 use super::router::{Router, RouterPolicy};
 use super::service::ServiceModel;
 use crate::metrics::{
@@ -234,54 +235,21 @@ enum Event {
     ScaleEval,
 }
 
-/// f64 ordered key for the event heap; the sequence number breaks ties
-/// deterministically (FIFO among simultaneous events).
-#[derive(Debug, PartialEq, PartialOrd)]
-struct Key(f64, u64);
-
-impl Eq for Key {}
-
-#[allow(clippy::derive_ord_xor_partial_ord)]
-impl Ord for Key {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).expect("NaN event time")
-    }
-}
-
-/// Newtype so Event participates in the heap tuple without Ord on Event.
-#[derive(Debug, PartialEq)]
-struct EventBox(Event);
-
-impl Eq for EventBox {}
-
-impl PartialOrd for EventBox {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for EventBox {
-    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
-        std::cmp::Ordering::Equal // ordering handled entirely by Key
-    }
-}
-
-type Heap = BinaryHeap<Reverse<(Key, EventBox)>>;
-
-fn push(heap: &mut Heap, t: f64, e: Event, seq: &mut u64) {
-    heap.push(Reverse((Key(t, *seq), EventBox(e))));
-    *seq += 1;
-}
+/// Time-then-sequence event heap, shared with the multi-model engine
+/// (see `serving::des` for the determinism contract of the ordering).
+type Heap = des::Heap<Event>;
 
 /// Insert `ri` into the ascending candidate list (no-op if present).
-fn insert_routable(routable: &mut Vec<usize>, ri: usize) {
+/// Shared with the multi-model engine, which keeps one such list per
+/// model.
+pub(super) fn insert_routable(routable: &mut Vec<usize>, ri: usize) {
     if let Err(pos) = routable.binary_search(&ri) {
         routable.insert(pos, ri);
     }
 }
 
 /// Remove `ri` from the ascending candidate list (no-op if absent).
-fn remove_routable(routable: &mut Vec<usize>, ri: usize) {
+pub(super) fn remove_routable(routable: &mut Vec<usize>, ri: usize) {
     if let Ok(pos) = routable.binary_search(&ri) {
         routable.remove(pos);
     }

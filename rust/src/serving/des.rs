@@ -1,0 +1,78 @@
+//! Shared discrete-event-heap machinery for the serving engines
+//! (`cluster` and `multimodel`), generic over the engine's event type.
+//!
+//! Determinism rests on the key: events order by time, with a
+//! monotonically increasing sequence number breaking ties — FIFO among
+//! simultaneous events, so the processing order of a time-collision is
+//! the order the events were scheduled, never heap-internal layout. Both
+//! engines advertise bit-identical replays per seed; keeping one
+//! definition of this ordering (instead of a copy per engine) keeps that
+//! guarantee from silently diverging.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// f64-ordered heap key; the sequence number breaks ties
+/// deterministically (FIFO among simultaneous events).
+#[derive(Debug, PartialEq, PartialOrd)]
+pub(super) struct Key(pub f64, pub u64);
+
+impl Eq for Key {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("NaN event time")
+    }
+}
+
+/// Newtype so an engine's event type participates in the heap tuple
+/// without needing its own `Ord` (ordering lives entirely in [`Key`]).
+#[derive(Debug, PartialEq)]
+pub(super) struct EventBox<E: PartialEq>(pub E);
+
+impl<E: PartialEq> Eq for EventBox<E> {}
+
+impl<E: PartialEq> PartialOrd for EventBox<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E: PartialEq> Ord for EventBox<E> {
+    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal // ordering handled entirely by Key
+    }
+}
+
+/// Min-heap of (time, sequence)-keyed events.
+pub(super) type Heap<E> = BinaryHeap<Reverse<(Key, EventBox<E>)>>;
+
+/// Schedule `e` at time `t`, consuming one sequence number.
+pub(super) fn push<E: PartialEq>(heap: &mut Heap<E>, t: f64, e: E, seq: &mut u64) {
+    heap.push(Reverse((Key(t, *seq), EventBox(e))));
+    *seq += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_schedule_order() {
+        let mut heap: Heap<&'static str> = BinaryHeap::new();
+        let mut seq = 0u64;
+        push(&mut heap, 2.0, "late", &mut seq);
+        push(&mut heap, 1.0, "first-at-1", &mut seq);
+        push(&mut heap, 1.0, "second-at-1", &mut seq);
+        let mut order = Vec::new();
+        while let Some(Reverse((Key(t, _), EventBox(e)))) = heap.pop() {
+            order.push((t, e));
+        }
+        assert_eq!(
+            order,
+            vec![(1.0, "first-at-1"), (1.0, "second-at-1"), (2.0, "late")],
+            "time ascending; FIFO among simultaneous events"
+        );
+    }
+}

@@ -16,6 +16,13 @@
 //! software's cold start before taking traffic; scale-down drains the
 //! replica before retiring it (no request lost at a scale event).
 //!
+//! Multi-model structure: `multimodel` hosts several models per replica —
+//! per-model batchers and queues behind a model-aware `ModelRouter`,
+//! under a per-replica weight-memory budget (loads pay cold starts,
+//! overflowing placements evict idle co-tenants or are rejected) and an
+//! MPS-style contention multiplier derived from `hardware::sharing` (the
+//! paper's Sharing-versus-Dedicate study, event-driven).
+//!
 //! The DES request lifecycle is allocation-free at steady state and its
 //! throughput (simulated requests/sec) is tracked per PR — see PERF.md
 //! and `benches/l4_des_throughput.rs`.
@@ -24,7 +31,9 @@ pub mod autoscale;
 pub mod backends;
 pub mod batcher;
 pub mod cluster;
+mod des;
 pub mod live;
+pub mod multimodel;
 pub mod router;
 pub mod service;
 pub mod sim;
@@ -33,6 +42,10 @@ pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision, ScalePolicy, Sca
 pub use backends::{DynamicBatching, Software};
 pub use batcher::{Batcher, Decision, Policy};
 pub use cluster::{ClusterConfig, ClusterResult, ReplicaConfig};
-pub use router::{Router, RouterPolicy};
+pub use multimodel::{
+    ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
+    PlacementOp,
+};
+pub use router::{ModelRouter, Router, RouterPolicy};
 pub use service::ServiceModel;
 pub use sim::{run, SimConfig, SimResult};

@@ -1,0 +1,1218 @@
+//! Multi-model replica serving: several models co-resident on each
+//! replica, with per-model queues, a weight-memory placement budget, and
+//! MPS-style contention between co-tenants — the paper's "Sharing versus
+//! Dedicate" study (§3.3; §4.2.1 sharing manager) made event-driven.
+//!
+//! Where [`super::cluster`] serves one model per replica, this engine
+//! hosts a *set* of models on each replica. Every hosted model owns its
+//! own [`Batcher`] and queue, and dispatches batches **concurrently**
+//! with its co-tenants — MPS spatial sharing, not time multiplexing.
+//! What couples the co-tenants is the contention multiplier, the
+//! event-driven form of the `hardware::sharing` analytic model:
+//!
+//! ```text
+//! demand_i  = busy seconds of model i on this replica over the trailing
+//!             window [now - W, now], divided by W     (observed, not offered)
+//! total     = sum over hosted models
+//! slowdown  = 1                        if total <= mps_efficiency
+//!           = total / mps_efficiency   otherwise
+//! service   = base * slowdown + mps_overhead          (when >= 2 co-tenants)
+//! ```
+//!
+//! A replica hosting a single model is *dedicated*: no slowdown, no MPS
+//! overhead (the `exclusive_s` side of `hardware::sharing`). Contention
+//! counts lanes whose kernels can actually occupy the device — serving
+//! models and evicted ones still draining in-flight work; a co-tenant
+//! that is merely `Loading` (host-side weight copy) does not yet end the
+//! incumbent's exclusive latency. The static
+//! `share()` report takes offered rates as given; here demand is what the
+//! simulation actually observed, so feedback is live: an overcommitted
+//! pair (`total_demand > mps_efficiency`) slows down, which raises its
+//! own demand, which slows it further — the shared tail diverges exactly
+//! when the analytic model says the device is overcommitted, while the
+//! same two models on dedicated replicas stay stable (see
+//! `benches/fig_sharing.rs`).
+//!
+//! Placement is budgeted: each replica has `mem_bytes` of weight memory
+//! and `sum(weight_bytes)` of its resident models may not exceed it.
+//! Scripted [`PlacementOp`]s load/evict models mid-run: a load pays the
+//! software's cold start before the model becomes routable (requests
+//! arriving meanwhile are held at the routing tier, as in the cluster
+//! engine's cold start), evicts idle co-tenants least-recently-active
+//! first when the budget overflows, and is rejected loudly when the model
+//! still cannot fit. An eviction drops the model's queued requests (they
+//! are accounted as that stream's drops) and lets in-flight work finish.
+//!
+//! Workload: one open-loop arrival stream per model
+//! ([`crate::workload::generate_streams`]), merged deterministically by
+//! arrival time. Routing: [`ModelRouter`] — one router per model over the
+//! replicas hosting it. Metrics: a [`ModelMetrics`] per stream with exact
+//! conservation (`issued == completed + dropped` independently per
+//! model, across colocation and eviction events), plus the usual
+//! per-replica and cluster-level collectors and a [`PlacementTimeline`].
+
+use super::backends::Software;
+use super::batcher::{Batcher, Decision, Policy};
+use super::cluster::{effective, insert_routable, remove_routable};
+use super::des::{self, push, EventBox, Key};
+use super::router::{ModelRouter, RouterPolicy};
+use super::service::ServiceModel;
+use crate::hardware::sharing::{MPS_EFFICIENCY, MPS_OVERHEAD_S};
+use crate::metrics::{
+    Collector, ModelMetrics, PlacementEventKind, PlacementTimeline, ReplicaMetrics, RequestTrace,
+    Stage, TraceStore,
+};
+use crate::pipeline::RequestPath;
+use crate::util::rng::Pcg64;
+use crate::workload::{generate_streams, Pattern, StreamSpec};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+// The fig_sharing grid runs multi-model cells through
+// `sweep::map_indexed`; configs move into worker threads and results move
+// back out, so both must stay transferable (see the identical assertions
+// in cluster.rs).
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    const fn assert_send<T: Send>() {}
+    assert_send_sync::<MultiModelConfig>();
+    assert_send::<MultiModelResult>();
+};
+
+/// One model in the fleet's catalog: its service behaviour, its weight
+/// footprint (the placement currency), and the open-loop stream that
+/// targets it (stream `i` is model `i`).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub service: ServiceModel,
+    /// Batching policy for this model's per-replica queue.
+    pub policy: Policy,
+    /// Weight footprint charged against a replica's `mem_bytes`.
+    pub weight_bytes: u64,
+    /// Per-(replica, model) queue capacity; arrivals routed beyond it are
+    /// rejected.
+    pub max_queue: usize,
+    /// This model's arrival pattern (open-loop; `ClosedLoop` is not
+    /// supported by the multi-model engine).
+    pub pattern: Pattern,
+}
+
+/// One replica of the multi-model fleet.
+#[derive(Debug, Clone)]
+pub struct MultiReplicaConfig {
+    pub software: &'static Software,
+    /// Weight-memory capacity (bytes). The resident models' summed
+    /// `weight_bytes` may never exceed it.
+    pub mem_bytes: u64,
+    /// Models hosted (warm and routable) at t = 0, as indices into
+    /// [`MultiModelConfig::models`]. Must fit in `mem_bytes`, no
+    /// duplicates.
+    pub hosted: Vec<usize>,
+}
+
+/// A scripted placement operation, executed at a fixed simulation time
+/// (deterministic: the placement timeline is part of the scenario, like
+/// the arrival trace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlacementOp {
+    /// Load `model` onto `replica`: charge its weights, pay the
+    /// software's cold start, then become routable. Evicts idle
+    /// co-tenants (least recently active first) while the budget
+    /// overflows; rejected if the model still cannot fit, if it is
+    /// already hosted, or if a previous eviction's in-flight work has not
+    /// drained yet.
+    Load { replica: usize, model: usize },
+    /// Evict `model` from `replica` immediately: queued requests drop
+    /// (accounted to the model's stream), weight memory is freed,
+    /// in-flight work completes.
+    Evict { replica: usize, model: usize },
+}
+
+/// The MPS contention parameters (defaults from [`crate::hardware::sharing`]).
+#[derive(Debug, Clone)]
+pub struct ContentionModel {
+    /// Fraction of the device co-tenants can actually use concurrently.
+    pub mps_efficiency: f64,
+    /// Added per-dispatch overhead from MPS context switching.
+    pub mps_overhead_s: f64,
+    /// Trailing window over which per-model busy fractions (demand) are
+    /// observed.
+    pub window_s: f64,
+}
+
+impl Default for ContentionModel {
+    fn default() -> Self {
+        ContentionModel {
+            mps_efficiency: MPS_EFFICIENCY,
+            mps_overhead_s: MPS_OVERHEAD_S,
+            window_s: 1.0,
+        }
+    }
+}
+
+/// Multi-model cluster simulation configuration.
+#[derive(Debug, Clone)]
+pub struct MultiModelConfig {
+    pub models: Vec<ModelSpec>,
+    pub replicas: Vec<MultiReplicaConfig>,
+    /// Routing policy, applied per model over the replicas hosting it.
+    pub router: RouterPolicy,
+    pub duration_s: f64,
+    /// Scripted placement changes, `(time_s, op)`.
+    pub placement_ops: Vec<(f64, PlacementOp)>,
+    pub contention: ContentionModel,
+    pub path: RequestPath,
+    pub seed: u64,
+}
+
+/// Multi-model simulation output.
+#[derive(Debug)]
+pub struct MultiModelResult {
+    /// Union of everything the run observed (all streams, all replicas,
+    /// routing-tier drops included).
+    pub collector: Collector,
+    /// Per-model (per-stream) metrics, index-aligned with
+    /// [`MultiModelConfig::models`]. Conservation holds independently per
+    /// entry.
+    pub models: Vec<ModelMetrics>,
+    /// Per-replica metrics (all hosted models' completions land on the
+    /// replica that served them).
+    pub replicas: Vec<ReplicaMetrics>,
+    /// Every load / ready / evict / reject transition.
+    pub placement: PlacementTimeline,
+    /// Requests dropped across all streams.
+    pub dropped: u64,
+    /// Requests issued across all streams.
+    pub issued: u64,
+    /// Discrete events processed by the simulation loop.
+    pub events: u64,
+}
+
+impl MultiModelResult {
+    pub fn throughput_rps(&self) -> f64 {
+        self.collector.throughput_rps()
+    }
+
+    /// Replica count of the run (the §3.3 cost axis: dedicated fleets pay
+    /// one device per model, shared fleets pack models onto fewer).
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Per-model metrics looked up by model name.
+    pub fn model(&self, name: &str) -> Option<&ModelMetrics> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+/// Lifecycle of one model resident on one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HostState {
+    /// Paying its cold start; weights charged, not routable yet.
+    Loading,
+    /// Routable.
+    Active,
+    /// Evicted: weights freed, queue dropped; the entry lingers only to
+    /// let in-flight work complete (and to be reused by a later reload).
+    Evicted,
+}
+
+/// One model's live state on one replica. At most one entry per model per
+/// replica ever exists (reloads reuse the evicted entry).
+struct Hosted {
+    model: usize,
+    batcher: Batcher,
+    penalty_s: f64,
+    state: HostState,
+    busy: bool,
+    queued: usize,
+    in_flight: Vec<(u32, f64, f64)>, // (trace slot, service start, enqueue time)
+    /// Recent dispatch intervals (start, end), in start order — the
+    /// demand window input. Pruned as it is read.
+    recent: VecDeque<(f64, f64)>,
+    /// Last dispatch time (LRU eviction order; NEG_INFINITY = never).
+    last_active_s: f64,
+    /// When the in-progress load becomes ready; guards stale
+    /// `ModelReady` events after an evict + reload.
+    ready_at: f64,
+}
+
+impl Hosted {
+    fn new(model: usize, spec: &ModelSpec, software: &Software, state: HostState) -> Hosted {
+        let (policy, penalty_s) = effective(spec.policy, software);
+        Hosted {
+            model,
+            batcher: Batcher::new(policy),
+            penalty_s,
+            state,
+            busy: false,
+            queued: 0,
+            in_flight: Vec::new(),
+            recent: VecDeque::new(),
+            last_active_s: f64::NEG_INFINITY,
+            ready_at: 0.0,
+        }
+    }
+}
+
+/// One replica's live state: the co-resident models plus the shared
+/// weight-memory ledger.
+struct Replica {
+    software: &'static Software,
+    mem_bytes: u64,
+    used_bytes: u64,
+    hosted: Vec<Hosted>,
+    metrics: ReplicaMetrics,
+}
+
+impl Replica {
+    /// Index of `model`'s entry (unique per replica), any state.
+    fn host_index(&self, model: usize) -> Option<usize> {
+        self.hosted.iter().position(|h| h.model == model)
+    }
+
+    /// Lanes whose kernels can occupy the device right now — serving
+    /// models plus evicted ones still draining in-flight work. MPS
+    /// contention applies at >= 2. A `Loading` model is copying weights
+    /// host-side and has not launched a kernel yet, so a lone serving
+    /// model keeps its exclusive latency for the whole cold start.
+    fn contending(&self) -> usize {
+        self.hosted
+            .iter()
+            .filter(|h| h.state == HostState::Active || !h.in_flight.is_empty())
+            .count()
+    }
+}
+
+/// The single drop path: remove the trace from the slab, mark it
+/// dropped, and feed every ledger that owns it — the per-model stream,
+/// the cluster-level collector, and (when the drop happened on a replica
+/// rather than at the routing tier) that replica's own collector. Every
+/// rejection goes through here, so no path can update the conservation
+/// ledger partially.
+fn drop_trace(
+    slot: u32,
+    model: usize,
+    replica: Option<&mut ReplicaMetrics>,
+    traces: &mut TraceStore,
+    model_metrics: &mut [ModelMetrics],
+    collector: &mut Collector,
+) {
+    let mut trace = traces.remove(slot);
+    trace.dropped = true;
+    if let Some(r) = replica {
+        r.collector.ingest(&trace);
+    }
+    model_metrics[model].collector.ingest(&trace);
+    collector.ingest(&trace);
+}
+
+/// Drop dispatch intervals that ended at or before `lo` (intervals are
+/// kept in start order, so expiry is a front-prefix): the single
+/// definition of "expired" shared by the demand read and the push side.
+fn prune_expired(recent: &mut VecDeque<(f64, f64)>, lo: f64) {
+    while let Some(&(_, end)) = recent.front() {
+        if end <= lo {
+            recent.pop_front();
+        } else {
+            break;
+        }
+    }
+}
+
+/// Busy fraction of one hosted model over the trailing window
+/// [now - window, now]: dispatch intervals (completed or still running)
+/// are clipped to the window. Fully expired intervals are pruned as a
+/// side effect, so the deque stays bounded by what one window can hold.
+fn window_demand(recent: &mut VecDeque<(f64, f64)>, now: f64, window_s: f64) -> f64 {
+    let lo = now - window_s;
+    prune_expired(recent, lo);
+    let mut busy = 0.0;
+    for &(start, end) in recent.iter() {
+        let a = start.max(lo);
+        let b = end.min(now);
+        if b > a {
+            busy += b - a;
+        }
+    }
+    busy / window_s
+}
+
+#[derive(Debug, PartialEq)]
+enum Event {
+    /// Request reaches the routing tier (pre-processing + transmission
+    /// done). Carries the trace slot and the target model.
+    Enqueue { slot: u32, model: u32 },
+    /// Batcher timeout for one (replica, model) queue.
+    Wake { replica: usize, model: u32, scheduled_for: f64 },
+    /// One (replica, model) pair finishes its in-flight batch.
+    ServerFree { replica: usize, model: u32 },
+    /// A loading model finished its cold start and becomes routable.
+    ModelReady { replica: usize, model: u32 },
+    /// A scripted placement op fires (index into `placement_ops`).
+    Place { op: usize },
+}
+
+/// Time-then-sequence event heap, shared with the cluster engine (see
+/// `serving::des` for the determinism contract of the ordering).
+type Heap = des::Heap<Event>;
+
+/// Start the batch just formed by `r.hosted[hi]`'s batcher: apply the
+/// contention multiplier, record waits, occupy the (replica, model) lane.
+#[allow(clippy::too_many_arguments)]
+fn start_batch(
+    ri: usize,
+    hi: usize,
+    r: &mut Replica,
+    spec: &ModelSpec,
+    contention: &ContentionModel,
+    now: f64,
+    heap: &mut Heap,
+    seq: &mut u64,
+    traces: &mut TraceStore,
+) {
+    let b = r.hosted[hi].batcher.ready().len();
+    let base = spec.service.service_s(b, r.software) + r.hosted[hi].penalty_s;
+    // MPS is active only under co-tenancy: a dedicated replica serves at
+    // the exclusive latency (hardware::sharing's `exclusive_s` side).
+    let service = if r.contending() >= 2 {
+        let mut total = 0.0;
+        for h in r.hosted.iter_mut() {
+            total += window_demand(&mut h.recent, now, contention.window_s);
+        }
+        let slowdown = if total <= contention.mps_efficiency {
+            1.0
+        } else {
+            total / contention.mps_efficiency
+        };
+        base * slowdown + contention.mps_overhead_s
+    } else {
+        base
+    };
+    let util = spec.service.utilization(b);
+    r.metrics.timeline.record_busy(now, service, util);
+    r.metrics.busy_timeline.record_busy(now, service, 1.0);
+    r.metrics.record_batch(b);
+    let model = r.hosted[hi].model;
+    let h = &mut r.hosted[hi];
+    h.queued -= b;
+    // Keep the demand deque bounded on dedicated replicas too, where no
+    // window_demand read ever prunes it: expired intervals leave at push.
+    prune_expired(&mut h.recent, now - contention.window_s);
+    h.recent.push_back((now, now + service));
+    h.last_active_s = now;
+    let batch = h.batcher.ready();
+    for q in batch {
+        let trace = traces.get_mut(q.id as u32);
+        // Batching stage: enqueue -> service start.
+        trace.record_stage(Stage::Batching, now - q.enqueue_s);
+        h.in_flight.push((q.id as u32, now, q.enqueue_s));
+    }
+    h.busy = true;
+    push(heap, now + service, Event::ServerFree { replica: ri, model: model as u32 }, seq);
+}
+
+/// Evict `replicas[ri].hosted[hi]`: drop its queued requests (accounted
+/// to its stream), free its weights, stop routing to it. In-flight work
+/// completes later through the normal `ServerFree` path. If this was the
+/// model's last host and no other load is in progress, requests held at
+/// the routing tier are dropped too (nothing will ever serve them).
+#[allow(clippy::too_many_arguments)]
+fn evict_model(
+    ri: usize,
+    hi: usize,
+    now: f64,
+    replicas: &mut [Replica],
+    specs: &[ModelSpec],
+    routable: &mut [Vec<usize>],
+    outstanding: &mut [Vec<usize>],
+    held: &mut [Vec<u32>],
+    traces: &mut TraceStore,
+    model_metrics: &mut [ModelMetrics],
+    collector: &mut Collector,
+    placement: &mut PlacementTimeline,
+) {
+    let m = replicas[ri].hosted[hi].model;
+    let drained = replicas[ri].hosted[hi].batcher.take_queue();
+    for q in &drained {
+        drop_trace(
+            q.id as u32,
+            m,
+            Some(&mut replicas[ri].metrics),
+            traces,
+            model_metrics,
+            collector,
+        );
+    }
+    outstanding[m][ri] -= drained.len();
+    {
+        let h = &mut replicas[ri].hosted[hi];
+        h.queued = 0;
+        h.state = HostState::Evicted;
+    }
+    replicas[ri].used_bytes = replicas[ri].used_bytes.saturating_sub(specs[m].weight_bytes);
+    remove_routable(&mut routable[m], ri);
+    placement.record(now, PlacementEventKind::Evicted, ri, m);
+    // Stranded holds: the model has no host left and none on the way.
+    if routable[m].is_empty()
+        && !replicas
+            .iter()
+            .any(|r| r.hosted.iter().any(|h| h.model == m && h.state == HostState::Loading))
+    {
+        for slot in held[m].drain(..) {
+            drop_trace(slot, m, None, traces, model_metrics, collector);
+        }
+    }
+}
+
+/// Run the multi-model cluster simulation.
+pub fn run(config: &MultiModelConfig) -> MultiModelResult {
+    assert!(!config.models.is_empty(), "multimodel needs at least one model");
+    assert!(!config.replicas.is_empty(), "multimodel needs at least one replica");
+    assert!(config.contention.window_s > 0.0, "contention window must be positive");
+    assert!(config.contention.mps_efficiency > 0.0, "mps_efficiency must be positive");
+    for m in &config.models {
+        assert!(
+            !matches!(m.pattern, Pattern::ClosedLoop { .. }),
+            "multimodel engine is open-loop; ClosedLoop stream for model {:?}",
+            m.name
+        );
+    }
+    let horizon_s = config.duration_s.max(1.0) * 1.5;
+    let n_models = config.models.len();
+
+    // Build replicas; initial placement must fit the budget.
+    let mut replicas: Vec<Replica> = Vec::with_capacity(config.replicas.len());
+    for (ri, rc) in config.replicas.iter().enumerate() {
+        let mut seen = rc.hosted.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), rc.hosted.len(), "replica {ri}: duplicate hosted model");
+        let mut used = 0u64;
+        let mut hosted = Vec::with_capacity(rc.hosted.len());
+        for &mi in &rc.hosted {
+            assert!(mi < n_models, "replica {ri}: hosted model {mi} out of range");
+            used += config.models[mi].weight_bytes;
+            hosted.push(Hosted::new(mi, &config.models[mi], rc.software, HostState::Active));
+        }
+        assert!(
+            used <= rc.mem_bytes,
+            "replica {ri}: initial placement overflows weight memory ({used} > {} bytes)",
+            rc.mem_bytes
+        );
+        replicas.push(Replica {
+            software: rc.software,
+            mem_bytes: rc.mem_bytes,
+            used_bytes: used,
+            hosted,
+            metrics: ReplicaMetrics::new(horizon_s, 0.5),
+        });
+    }
+
+    let mut rng = Pcg64::seeded(config.seed);
+    let mut router = ModelRouter::new(config.router, n_models);
+    let mut heap: Heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut collector = Collector::new();
+    let mut placement = PlacementTimeline::new();
+    let mut model_metrics: Vec<ModelMetrics> =
+        config.models.iter().map(|m| ModelMetrics::new(m.name.clone())).collect();
+
+    // Per-model router inputs: the ascending list of replicas hosting the
+    // model (maintained on placement transitions) and per-(model, replica)
+    // outstanding counts.
+    let mut routable: Vec<Vec<usize>> = vec![Vec::new(); n_models];
+    for (ri, r) in replicas.iter().enumerate() {
+        for h in &r.hosted {
+            insert_routable(&mut routable[h.model], ri);
+        }
+    }
+    let mut outstanding: Vec<Vec<usize>> = vec![vec![0; replicas.len()]; n_models];
+    // Requests held at the routing tier per model while its only hosts
+    // are still loading; flushed on ModelReady.
+    let mut held: Vec<Vec<u32>> = vec![Vec::new(); n_models];
+
+    // Merge the per-model streams and issue every request up front
+    // (open loop): sample its pipeline stages, schedule its Enqueue.
+    let streams: Vec<StreamSpec> = config
+        .models
+        .iter()
+        .map(|m| StreamSpec { name: m.name.clone(), pattern: m.pattern.clone() })
+        .collect();
+    let arrivals = generate_streams(&streams, config.duration_s, config.seed);
+    let mut traces = TraceStore::with_capacity(arrivals.len().max(64));
+    for a in &arrivals {
+        if a.time_s >= config.duration_s {
+            continue;
+        }
+        model_metrics[a.stream].issued += 1;
+        let (pre, tx, _post) = config.path.sample(&mut rng);
+        let mut trace = RequestTrace::new(a.id, a.time_s);
+        trace.record_stage(Stage::PreProcess, pre);
+        trace.record_stage(Stage::Transmission, tx);
+        let enqueue_at = trace.completed_s;
+        let slot = traces.insert(trace);
+        push(&mut heap, enqueue_at, Event::Enqueue { slot, model: a.stream as u32 }, &mut seq);
+    }
+
+    // Scripted placement timeline.
+    for (i, (t, _)) in config.placement_ops.iter().enumerate() {
+        push(&mut heap, *t, Event::Place { op: i }, &mut seq);
+    }
+
+    let mut events = 0u64;
+    while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
+        events += 1;
+        match event {
+            Event::Enqueue { slot, model } => {
+                let m = model as usize;
+                if routable[m].is_empty() {
+                    // No replica hosts this model right now: hold while a
+                    // load is in progress, otherwise reject — nothing will
+                    // ever serve it.
+                    let loading = replicas.iter().any(|r| {
+                        r.hosted.iter().any(|h| h.model == m && h.state == HostState::Loading)
+                    });
+                    if loading {
+                        held[m].push(slot);
+                    } else {
+                        drop_trace(slot, m, None, &mut traces, &mut model_metrics, &mut collector);
+                    }
+                    continue;
+                }
+                let ri = router.route(m, now, &routable[m], &outstanding[m]);
+                let hi = replicas[ri]
+                    .host_index(m)
+                    .expect("routable replica hosts the model");
+                if replicas[ri].hosted[hi].queued >= config.models[m].max_queue {
+                    // This model's queue on the chosen replica is full.
+                    drop_trace(
+                        slot,
+                        m,
+                        Some(&mut replicas[ri].metrics),
+                        &mut traces,
+                        &mut model_metrics,
+                        &mut collector,
+                    );
+                    continue;
+                }
+                {
+                    // Routing-tier hold time (load-in-progress window)
+                    // counts as queueing, as in the cluster engine.
+                    let trace = traces.get_mut(slot);
+                    if now > trace.completed_s {
+                        let hold = now - trace.completed_s;
+                        trace.record_stage(Stage::Batching, hold);
+                    }
+                }
+                let r = &mut replicas[ri];
+                let h = &mut r.hosted[hi];
+                h.batcher.enqueue(slot as u64, now);
+                h.queued += 1;
+                outstanding[m][ri] += 1;
+                if !h.busy {
+                    match h.batcher.poll(now) {
+                        Decision::Dispatch(_) => start_batch(
+                            ri,
+                            hi,
+                            r,
+                            &config.models[m],
+                            &config.contention,
+                            now,
+                            &mut heap,
+                            &mut seq,
+                            &mut traces,
+                        ),
+                        Decision::WakeAt(t) => push(
+                            &mut heap,
+                            t,
+                            Event::Wake { replica: ri, model, scheduled_for: t },
+                            &mut seq,
+                        ),
+                        Decision::Wait => {}
+                    }
+                }
+            }
+            Event::Wake { replica: ri, model, scheduled_for } => {
+                let m = model as usize;
+                let Some(hi) = replicas[ri].host_index(m) else { continue };
+                {
+                    let h = &replicas[ri].hosted[hi];
+                    if h.state != HostState::Active || h.busy || scheduled_for < now - 1e-12 {
+                        continue; // busy lanes poll again at ServerFree
+                    }
+                }
+                match replicas[ri].hosted[hi].batcher.on_wake(now) {
+                    Decision::Dispatch(_) => start_batch(
+                        ri,
+                        hi,
+                        &mut replicas[ri],
+                        &config.models[m],
+                        &config.contention,
+                        now,
+                        &mut heap,
+                        &mut seq,
+                        &mut traces,
+                    ),
+                    Decision::WakeAt(t) => push(
+                        &mut heap,
+                        t,
+                        Event::Wake { replica: ri, model, scheduled_for: t },
+                        &mut seq,
+                    ),
+                    Decision::Wait => {}
+                }
+            }
+            Event::ServerFree { replica: ri, model } => {
+                let m = model as usize;
+                let hi = replicas[ri].host_index(m).expect("completion for unknown host");
+                replicas[ri].hosted[hi].busy = false;
+                let overhead = replicas[ri].software.request_overhead_s;
+                let n_done = replicas[ri].hosted[hi].in_flight.len();
+                // Indexed loop (not an iterator): the body needs replicas,
+                // traces, and the collectors mutably (see cluster.rs).
+                #[allow(clippy::needless_range_loop)]
+                for k in 0..n_done {
+                    let (slot, started, enqueued) = replicas[ri].hosted[hi].in_flight[k];
+                    let mut trace = traces.remove(slot);
+                    trace.record_stage(Stage::Inference, now - started + overhead);
+                    let (_, _, post) = config.path.sample(&mut rng);
+                    trace.record_stage(Stage::PostProcess, post);
+                    router.observe(m, ri, now - enqueued + overhead);
+                    replicas[ri].metrics.collector.ingest(&trace);
+                    model_metrics[m].collector.ingest(&trace);
+                    collector.ingest(&trace);
+                }
+                replicas[ri].hosted[hi].in_flight.clear();
+                outstanding[m][ri] -= n_done;
+                // Drain this lane's backlog (evicted lanes have none and
+                // take no new work).
+                if replicas[ri].hosted[hi].state == HostState::Active {
+                    match replicas[ri].hosted[hi].batcher.poll(now) {
+                        Decision::Dispatch(_) => start_batch(
+                            ri,
+                            hi,
+                            &mut replicas[ri],
+                            &config.models[m],
+                            &config.contention,
+                            now,
+                            &mut heap,
+                            &mut seq,
+                            &mut traces,
+                        ),
+                        Decision::WakeAt(t) => push(
+                            &mut heap,
+                            t,
+                            Event::Wake { replica: ri, model, scheduled_for: t },
+                            &mut seq,
+                        ),
+                        Decision::Wait => {}
+                    }
+                }
+            }
+            Event::ModelReady { replica: ri, model } => {
+                let m = model as usize;
+                let Some(hi) = replicas[ri].host_index(m) else { continue };
+                {
+                    let h = &mut replicas[ri].hosted[hi];
+                    // Stale readiness: the load was evicted, or superseded
+                    // by a newer load with a different deadline.
+                    if h.state != HostState::Loading || (now - h.ready_at).abs() > 1e-9 {
+                        continue;
+                    }
+                    h.state = HostState::Active;
+                    h.last_active_s = now;
+                }
+                insert_routable(&mut routable[m], ri);
+                placement.record(now, PlacementEventKind::Ready, ri, m);
+                // Flush requests held at the routing tier, in arrival
+                // order (the sequence counter keeps the FIFO exact).
+                for slot in held[m].drain(..) {
+                    push(&mut heap, now, Event::Enqueue { slot, model }, &mut seq);
+                }
+            }
+            Event::Place { op: opi } => {
+                let (_, op) = config.placement_ops[opi];
+                match op {
+                    PlacementOp::Load { replica: ri, model: m } => {
+                        assert!(
+                            ri < replicas.len() && m < config.models.len(),
+                            "placement op {opi} out of range"
+                        );
+                        let reusable = match replicas[ri].host_index(m) {
+                            Some(hi) => {
+                                let h = &replicas[ri].hosted[hi];
+                                if h.state != HostState::Evicted || !h.in_flight.is_empty() {
+                                    // Already hosted/loading, or a reload
+                                    // racing the evicted entry's in-flight
+                                    // drain: refuse.
+                                    placement.record(now, PlacementEventKind::Rejected, ri, m);
+                                    continue;
+                                }
+                                Some(hi)
+                            }
+                            None => None,
+                        };
+                        let need = config.models[m].weight_bytes;
+                        // Evict idle co-tenants, least recently active
+                        // first, until the new model fits.
+                        while replicas[ri].used_bytes + need > replicas[ri].mem_bytes {
+                            let victim = replicas[ri]
+                                .hosted
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, h)| {
+                                    h.state == HostState::Active
+                                        && !h.busy
+                                        && h.queued == 0
+                                        && h.in_flight.is_empty()
+                                })
+                                .min_by(|(_, a), (_, b)| {
+                                    a.last_active_s
+                                        .partial_cmp(&b.last_active_s)
+                                        .expect("NaN activity time")
+                                        .then(a.model.cmp(&b.model))
+                                })
+                                .map(|(i, _)| i);
+                            match victim {
+                                Some(vi) => evict_model(
+                                    ri,
+                                    vi,
+                                    now,
+                                    &mut replicas,
+                                    &config.models,
+                                    &mut routable,
+                                    &mut outstanding,
+                                    &mut held,
+                                    &mut traces,
+                                    &mut model_metrics,
+                                    &mut collector,
+                                    &mut placement,
+                                ),
+                                None => break,
+                            }
+                        }
+                        if replicas[ri].used_bytes + need > replicas[ri].mem_bytes {
+                            // Still does not fit (co-tenants busy or the
+                            // model is bigger than the budget): reject.
+                            placement.record(now, PlacementEventKind::Rejected, ri, m);
+                            continue;
+                        }
+                        replicas[ri].used_bytes += need;
+                        let ready_at = now + replicas[ri].software.coldstart_s(need);
+                        match reusable {
+                            Some(hi) => {
+                                let h = &mut replicas[ri].hosted[hi];
+                                h.state = HostState::Loading;
+                                h.ready_at = ready_at;
+                            }
+                            None => {
+                                let software = replicas[ri].software;
+                                let mut h =
+                                    Hosted::new(m, &config.models[m], software, HostState::Loading);
+                                h.ready_at = ready_at;
+                                replicas[ri].hosted.push(h);
+                            }
+                        }
+                        placement.record(now, PlacementEventKind::LoadRequested, ri, m);
+                        push(
+                            &mut heap,
+                            ready_at,
+                            Event::ModelReady { replica: ri, model: m as u32 },
+                            &mut seq,
+                        );
+                    }
+                    PlacementOp::Evict { replica: ri, model: m } => {
+                        assert!(
+                            ri < replicas.len() && m < config.models.len(),
+                            "placement op {opi} out of range"
+                        );
+                        let target = replicas[ri]
+                            .hosted
+                            .iter()
+                            .position(|h| h.model == m && h.state != HostState::Evicted);
+                        match target {
+                            Some(hi) => evict_model(
+                                ri,
+                                hi,
+                                now,
+                                &mut replicas,
+                                &config.models,
+                                &mut routable,
+                                &mut outstanding,
+                                &mut held,
+                                &mut traces,
+                                &mut model_metrics,
+                                &mut collector,
+                                &mut placement,
+                            ),
+                            None => placement.record(now, PlacementEventKind::Rejected, ri, m),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Every issued trace was completed or rejected; the slab must be
+    // empty or a stream's ledger is broken upstream.
+    debug_assert!(traces.is_empty(), "trace leak: {} live traces at end of run", traces.len());
+    for mm in &model_metrics {
+        debug_assert!(
+            mm.conserved(),
+            "stream {:?} ledger broken: issued {} != completed {} + dropped {}",
+            mm.name,
+            mm.issued,
+            mm.collector.completed,
+            mm.collector.dropped
+        );
+    }
+
+    let dropped = collector.dropped;
+    let issued: u64 = model_metrics.iter().map(|m| m.issued).sum();
+    MultiModelResult {
+        collector,
+        models: model_metrics,
+        replicas: replicas.into_iter().map(|r| r.metrics).collect(),
+        placement,
+        dropped,
+        issued,
+        events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::Processors;
+    use crate::serving::backends;
+
+    fn model(name: &str, per_req_ms: f64, rate: f64) -> ModelSpec {
+        ModelSpec {
+            name: name.into(),
+            service: ServiceModel::Measured {
+                per_batch: vec![(1, per_req_ms / 1e3)],
+                utilization: 0.6,
+            },
+            policy: Policy::Single,
+            weight_bytes: 400_000_000,
+            max_queue: 100_000,
+            pattern: Pattern::Poisson { rate },
+        }
+    }
+
+    fn base(models: Vec<ModelSpec>, replicas: Vec<MultiReplicaConfig>) -> MultiModelConfig {
+        MultiModelConfig {
+            models,
+            replicas,
+            router: RouterPolicy::LeastOutstanding,
+            duration_s: 15.0,
+            placement_ops: vec![],
+            contention: ContentionModel::default(),
+            path: RequestPath::local(Processors::none()),
+            seed: 9,
+        }
+    }
+
+    fn shared_replica(hosted: Vec<usize>) -> MultiReplicaConfig {
+        MultiReplicaConfig { software: &backends::TRIS, mem_bytes: 2_000_000_000, hosted }
+    }
+
+    fn assert_conserved(r: &MultiModelResult) {
+        for m in &r.models {
+            assert!(
+                m.conserved(),
+                "{}: issued {} != completed {} + dropped {}",
+                m.name,
+                m.issued,
+                m.collector.completed,
+                m.collector.dropped
+            );
+        }
+        assert_eq!(r.collector.completed + r.dropped, r.issued, "cluster-level ledger");
+        let per_model: u64 = r.models.iter().map(|m| m.collector.completed).sum();
+        assert_eq!(per_model, r.collector.completed, "per-model completions must sum");
+    }
+
+    #[test]
+    fn dedicated_replicas_serve_only_their_model() {
+        let cfg = base(
+            vec![model("a", 4.0, 60.0), model("b", 4.0, 60.0)],
+            vec![shared_replica(vec![0]), shared_replica(vec![1])],
+        );
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert!(r.models[0].collector.completed > 0);
+        assert!(r.models[1].collector.completed > 0);
+        // Replica i hosts only model i, so the per-replica and per-model
+        // ledgers coincide exactly.
+        assert_eq!(r.replicas[0].collector.completed, r.models[0].collector.completed);
+        assert_eq!(r.replicas[1].collector.completed, r.models[1].collector.completed);
+        assert!(r.placement.events.is_empty(), "static placement records no events");
+    }
+
+    #[test]
+    fn colocated_streams_conserve_under_rejections() {
+        let mut m0 = model("a", 5.0, 150.0);
+        let mut m1 = model("b", 5.0, 150.0);
+        m0.max_queue = 8;
+        m1.max_queue = 8;
+        let cfg = base(vec![m0, m1], vec![shared_replica(vec![0, 1])]);
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert!(r.dropped > 0, "tiny per-model queues under overcommit must reject");
+        assert!(r.models[0].collector.dropped > 0);
+        assert!(r.models[1].collector.dropped > 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = base(
+            vec![model("a", 5.0, 100.0), model("b", 3.0, 80.0)],
+            vec![shared_replica(vec![0, 1]), shared_replica(vec![0, 1])],
+        );
+        let (a, b) = (run(&cfg), run(&cfg));
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.issued, b.issued);
+        assert_eq!(a.collector.fingerprint(), b.collector.fingerprint());
+        for (ma, mb) in a.models.iter().zip(&b.models) {
+            assert_eq!(ma.collector.fingerprint(), mb.collector.fingerprint(), "{}", ma.name);
+        }
+    }
+
+    #[test]
+    fn overcommitted_colocation_melts_the_tail_but_saves_replicas() {
+        // demand = 2 models x 120 rps x 5 ms = 1.2 > mps_efficiency:
+        // the shared device cannot serve the offered load, the dedicated
+        // pair can (0.6 each).
+        let models = || vec![model("a", 5.0, 120.0), model("b", 5.0, 120.0)];
+        let shared = base(models(), vec![shared_replica(vec![0, 1])]);
+        let dedicated = base(models(), vec![shared_replica(vec![0]), shared_replica(vec![1])]);
+        let (rs, rd) = (run(&shared), run(&dedicated));
+        assert_conserved(&rs);
+        assert_conserved(&rd);
+        let (p99_s, p99_d) =
+            (rs.collector.e2e.percentile(99.0), rd.collector.e2e.percentile(99.0));
+        assert!(
+            p99_s > p99_d,
+            "overcommitted sharing must be strictly worse: shared {p99_s}s vs dedicated {p99_d}s"
+        );
+        assert!(rs.replica_count() < rd.replica_count(), "sharing must use fewer replicas");
+    }
+
+    #[test]
+    fn light_colocation_is_nearly_free() {
+        // demand = 2 x 30 rps x 5 ms = 0.3 < mps_efficiency: slowdown 1,
+        // only the MPS per-dispatch overhead separates shared from
+        // dedicated (the Fig 13 under-utilization motivation).
+        let models = || vec![model("a", 5.0, 30.0), model("b", 5.0, 30.0)];
+        let shared = base(models(), vec![shared_replica(vec![0, 1])]);
+        let dedicated = base(models(), vec![shared_replica(vec![0]), shared_replica(vec![1])]);
+        let (rs, rd) = (run(&shared), run(&dedicated));
+        let (p99_s, p99_d) =
+            (rs.collector.e2e.percentile(99.0), rd.collector.e2e.percentile(99.0));
+        assert!(
+            p99_s < p99_d + 0.005,
+            "light sharing should cost ~the MPS overhead: {p99_s}s vs {p99_d}s"
+        );
+        assert_eq!(rs.collector.completed, rs.issued - rs.dropped);
+    }
+
+    #[test]
+    fn loading_cotenant_does_not_disturb_the_incumbent() {
+        // Model b has no traffic and spends the whole run cold-starting
+        // (TRIS needs ~10.6 s for 400 MB; the op fires at t=5, the run
+        // ends at t=14): the incumbent a must serve at its exclusive
+        // latency throughout — bit-identical to a run with no load
+        // scripted at all. Only kernels contend, not weight copies.
+        let mut b = model("b", 4.0, 1.0);
+        b.pattern = Pattern::Trace { times_s: vec![] };
+        let mut with_load =
+            base(vec![model("a", 5.0, 150.0), b], vec![shared_replica(vec![0])]);
+        with_load.duration_s = 14.0;
+        with_load.placement_ops = vec![(5.0, PlacementOp::Load { replica: 0, model: 1 })];
+        let mut without = with_load.clone();
+        without.placement_ops = vec![];
+        let (rw, ro) = (run(&with_load), run(&without));
+        assert_eq!(rw.placement.count(PlacementEventKind::LoadRequested), 1);
+        assert_eq!(
+            rw.collector.fingerprint(),
+            ro.collector.fingerprint(),
+            "a loading co-tenant must not slow the serving model"
+        );
+    }
+
+    #[test]
+    fn scripted_eviction_drops_queued_and_keeps_ledgers_exact() {
+        // Model b is overloaded on its own replica (400 rps vs ~200 rps
+        // capacity), so a deep queue exists when the eviction fires; all
+        // of it must drop, and later arrivals die at the routing tier.
+        let cfg = MultiModelConfig {
+            placement_ops: vec![(5.0, PlacementOp::Evict { replica: 1, model: 1 })],
+            ..base(
+                vec![model("a", 4.0, 60.0), model("b", 5.0, 400.0)],
+                vec![shared_replica(vec![0]), shared_replica(vec![1])],
+            )
+        };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert_eq!(r.placement.count(PlacementEventKind::Evicted), 1);
+        let b = r.model("b").unwrap();
+        assert!(b.collector.dropped > 0, "eviction must drop the backlog");
+        assert!(b.collector.completed > 0, "pre-eviction work completed");
+        // Model a is untouched by its co-stream's eviction.
+        let a = r.model("a").unwrap();
+        assert_eq!(a.collector.dropped, 0);
+        // Determinism across the eviction path too.
+        let r2 = run(&cfg);
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+    }
+
+    #[test]
+    fn load_evicts_least_recently_active_idle_cotenant() {
+        // Replica fits two models; b goes quiet after one early request,
+        // so the scripted load of c evicts b (LRU) and c then serves.
+        let mut b = model("b", 4.0, 1.0);
+        b.pattern = Pattern::Trace { times_s: vec![0.5] };
+        let cfg = MultiModelConfig {
+            duration_s: 40.0,
+            placement_ops: vec![(6.0, PlacementOp::Load { replica: 0, model: 2 })],
+            ..base(
+                vec![model("a", 4.0, 50.0), b, model("c", 4.0, 50.0)],
+                vec![MultiReplicaConfig {
+                    software: &backends::TRIS,
+                    mem_bytes: 800_000_000, // fits exactly two 400 MB models
+                    hosted: vec![0, 1],
+                }],
+            )
+        };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert_eq!(r.placement.count(PlacementEventKind::LoadRequested), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::Ready), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::Evicted), 1);
+        let evicted = r.placement.events.iter().find(|e| e.kind == PlacementEventKind::Evicted);
+        assert_eq!(evicted.unwrap().model, 1, "LRU must pick the quiet model b");
+        assert_eq!(r.model("b").unwrap().collector.completed, 1);
+        // c: arrivals before the load drop at the routing tier, arrivals
+        // during the cold start are held and then served.
+        let c = r.model("c").unwrap();
+        assert!(c.collector.dropped > 0, "pre-load arrivals have no host");
+        assert!(c.collector.completed > 0, "post-ready arrivals are served");
+        // Held requests paid the load as queueing time.
+        assert!(c.collector.stage(Stage::Batching).max() > 5.0, "cold start visible in holds");
+    }
+
+    #[test]
+    fn stale_ready_after_evict_and_reload_is_ignored() {
+        // Load b at t=2 (ready would be ~12.6), evict it mid-cold-start
+        // at t=5, reload at t=8 (ready ~18.6). The first load's
+        // ModelReady still fires at 12.6 and must NOT activate the
+        // superseding load early: exactly one Ready is recorded, and b
+        // serves only after the second cold start. The evicted-entry
+        // reuse path (reload after a drained evict) is exercised too.
+        let cfg = MultiModelConfig {
+            duration_s: 25.0,
+            placement_ops: vec![
+                (2.0, PlacementOp::Load { replica: 0, model: 1 }),
+                (5.0, PlacementOp::Evict { replica: 0, model: 1 }),
+                (8.0, PlacementOp::Load { replica: 0, model: 1 }),
+            ],
+            ..base(
+                vec![model("a", 4.0, 40.0), model("b", 4.0, 20.0)],
+                vec![shared_replica(vec![0])],
+            )
+        };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert_eq!(r.placement.count(PlacementEventKind::LoadRequested), 2);
+        assert_eq!(r.placement.count(PlacementEventKind::Evicted), 1);
+        assert_eq!(
+            r.placement.count(PlacementEventKind::Ready),
+            1,
+            "the first load's stale ModelReady must not activate the second"
+        );
+        let ready = r.placement.events.iter().find(|e| e.kind == PlacementEventKind::Ready);
+        assert!(ready.unwrap().time_s > 18.0, "only the reload's cold start completes");
+        let b = r.model("b").unwrap();
+        assert!(b.collector.completed > 0, "b serves after the reload");
+        assert!(b.collector.dropped > 0, "pre-load and evict-window arrivals drop");
+    }
+
+    #[test]
+    fn reload_racing_inflight_drain_is_rejected() {
+        // Model a is overloaded with 40 ms batches (uniform arrivals, so
+        // the lane is deterministically mid-batch at t=5). Evicting it
+        // leaves in-flight work draining; the reload 1 ms later must be
+        // rejected, not double-charge weight memory against the ledger.
+        let mut a = model("a", 50.0, 1.0);
+        a.pattern = Pattern::Uniform { rate: 100.0 };
+        let cfg = MultiModelConfig {
+            placement_ops: vec![
+                (5.0, PlacementOp::Evict { replica: 0, model: 0 }),
+                (5.001, PlacementOp::Load { replica: 0, model: 0 }),
+            ],
+            ..base(vec![a], vec![shared_replica(vec![0])])
+        };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert_eq!(r.placement.count(PlacementEventKind::Evicted), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::Rejected), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::LoadRequested), 0);
+        let a = &r.models[0];
+        assert!(a.collector.completed > 0, "pre-eviction batches completed");
+        assert!(a.collector.dropped > 0, "backlog + post-eviction arrivals dropped");
+    }
+
+    #[test]
+    fn load_rejected_when_no_cotenant_is_evictable() {
+        // Model a is overloaded, so its queue never empties: the load of
+        // b finds nothing idle to evict and must be rejected, leaving the
+        // memory ledger untouched.
+        let cfg = MultiModelConfig {
+            placement_ops: vec![(5.0, PlacementOp::Load { replica: 0, model: 1 })],
+            ..base(
+                vec![model("a", 5.0, 400.0), model("b", 4.0, 30.0)],
+                vec![MultiReplicaConfig {
+                    software: &backends::TRIS,
+                    mem_bytes: 400_000_000, // fits only one model
+                    hosted: vec![0],
+                }],
+            )
+        };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert_eq!(r.placement.count(PlacementEventKind::Rejected), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::LoadRequested), 0);
+        let b = r.model("b").unwrap();
+        assert_eq!(b.collector.completed, 0, "b never hosted anywhere");
+        assert_eq!(b.collector.dropped, b.issued);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows weight memory")]
+    fn initial_placement_overflow_is_refused_loudly() {
+        let cfg = base(
+            vec![model("a", 4.0, 10.0), model("b", 4.0, 10.0)],
+            vec![MultiReplicaConfig {
+                software: &backends::TRIS,
+                mem_bytes: 500_000_000, // two 400 MB models do not fit
+                hosted: vec![0, 1],
+            }],
+        );
+        let _ = run(&cfg);
+    }
+
+    #[test]
+    fn contention_window_prunes_but_sums_live_intervals() {
+        let mut recent: VecDeque<(f64, f64)> = VecDeque::new();
+        recent.push_back((0.0, 0.2)); // fully expired at now=2, window=1
+        recent.push_back((1.2, 1.5)); // fully inside
+        recent.push_back((1.9, 2.4)); // in-flight: clipped at now
+        let d = window_demand(&mut recent, 2.0, 1.0);
+        assert!((d - 0.4).abs() < 1e-12, "0.3 + 0.1 busy over a 1 s window, got {d}");
+        assert_eq!(recent.len(), 2, "expired interval pruned");
+    }
+}

@@ -212,6 +212,65 @@ impl Router {
     }
 }
 
+/// Model-aware routing for multi-model fleets: one independent [`Router`]
+/// per model, each deciding among the replicas that *host* that model
+/// (the caller passes the hosting candidate set and per-(replica, model)
+/// outstanding counts, so `LeastOutstanding` is least-outstanding *per
+/// model*, not per device). Keeping a router per model means round-robin
+/// cursors, power-of-two sampling streams, and EWMA latency signals never
+/// interleave across models — stream A's traffic cannot perturb stream
+/// B's routing sequence, which the multi-model determinism suite relies
+/// on.
+#[derive(Debug, Clone)]
+pub struct ModelRouter {
+    routers: Vec<Router>,
+}
+
+impl ModelRouter {
+    pub fn new(policy: RouterPolicy, models: usize) -> ModelRouter {
+        let routers = (0..models)
+            .map(|m| {
+                // Decorrelate p2c sampling across models while pinning each
+                // model's stream to its index (model 0 keeps the bare seed).
+                let per_model = match policy {
+                    RouterPolicy::PowerOfTwoChoices { seed } => RouterPolicy::PowerOfTwoChoices {
+                        seed: seed ^ (m as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                    },
+                    p => p,
+                };
+                Router::new(per_model)
+            })
+            .collect();
+        ModelRouter { routers }
+    }
+
+    pub fn models(&self) -> usize {
+        self.routers.len()
+    }
+
+    /// Route one request for `model` among `candidates` (the replicas
+    /// hosting it), reading that model's per-replica outstanding counts.
+    pub fn route(
+        &mut self,
+        model: usize,
+        now: f64,
+        candidates: &[usize],
+        outstanding: &[usize],
+    ) -> usize {
+        self.routers[model].route_among(now, candidates, outstanding)
+    }
+
+    /// Feed one observed replica residence time into `model`'s router.
+    pub fn observe(&mut self, model: usize, replica: usize, latency_s: f64) {
+        self.routers[model].observe(replica, latency_s);
+    }
+
+    /// The underlying per-model router (testing / introspection).
+    pub fn model_router(&self, model: usize) -> &Router {
+        &self.routers[model]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,5 +401,72 @@ mod tests {
         r.observe(0, 0.050);
         // Replica 1 (fresh, e.g. just warmed) has no signal: score 0 wins.
         assert_eq!(r.route(&[0, 0]), 1);
+    }
+
+    #[test]
+    fn model_router_keeps_independent_round_robin_cursors() {
+        let mut r = ModelRouter::new(RouterPolicy::RoundRobin, 2);
+        let load = [0, 0, 0];
+        // Model 0 routes twice; model 1's cursor must still start at the
+        // first candidate (no shared cursor across models).
+        assert_eq!(r.route(0, 0.0, &[0, 1, 2], &load), 0);
+        assert_eq!(r.route(0, 0.0, &[0, 1, 2], &load), 1);
+        assert_eq!(r.route(1, 0.0, &[0, 1, 2], &load), 0);
+        assert_eq!(r.route(1, 0.0, &[0, 1, 2], &load), 1);
+        assert_eq!(r.models(), 2);
+    }
+
+    #[test]
+    fn model_router_respects_hosting_candidates() {
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 5 },
+            RouterPolicy::LatencyEwma { alpha: 0.5, stale_s: 0.0 },
+        ] {
+            let mut r = ModelRouter::new(policy, 2);
+            let load = [9, 0, 9, 0];
+            // Model 1 is hosted only on replicas 0 and 2.
+            for _ in 0..20 {
+                let pick = r.route(1, 0.0, &[0, 2], &load);
+                assert!(pick == 0 || pick == 2, "{}: picked {pick}", policy.label());
+            }
+        }
+    }
+
+    #[test]
+    fn model_router_least_outstanding_is_per_model() {
+        let mut r = ModelRouter::new(RouterPolicy::LeastOutstanding, 2);
+        // Model 0's counts: replica 1 lighter. Model 1's counts differ.
+        assert_eq!(r.route(0, 0.0, &[0, 1], &[5, 1]), 1);
+        assert_eq!(r.route(1, 0.0, &[0, 1], &[0, 4]), 0);
+    }
+
+    #[test]
+    fn model_router_p2c_streams_are_deterministic_and_decorrelated() {
+        let load = [1, 1, 1, 1];
+        let picks = |seed: u64| -> Vec<usize> {
+            let mut r = ModelRouter::new(RouterPolicy::PowerOfTwoChoices { seed }, 2);
+            (0..32usize).map(|i| r.route(i % 2, 0.0, &[0, 1, 2, 3], &load)).collect()
+        };
+        assert_eq!(picks(42), picks(42), "deterministic per seed");
+        // Model 0 keeps the bare seed: its draw sequence matches a plain
+        // router with the same seed.
+        let mut m = ModelRouter::new(RouterPolicy::PowerOfTwoChoices { seed: 9 }, 2);
+        let mut plain = Router::new(RouterPolicy::PowerOfTwoChoices { seed: 9 });
+        for _ in 0..16 {
+            assert_eq!(m.route(0, 0.0, &[0, 1, 2, 3], &load), plain.route(&load));
+        }
+    }
+
+    #[test]
+    fn model_router_observe_feeds_only_that_model() {
+        let mut r = ModelRouter::new(RouterPolicy::LatencyEwma { alpha: 1.0, stale_s: 0.0 }, 2);
+        r.observe(0, 0, 0.100); // model 0 sees replica 0 slow
+        r.observe(0, 1, 0.010);
+        // Model 0 avoids replica 0; model 1 has no signals and ties to 0.
+        assert_eq!(r.route(0, 0.0, &[0, 1], &[1, 1]), 1);
+        assert_eq!(r.route(1, 0.0, &[0, 1], &[1, 1]), 0);
+        assert!(r.model_router(1).signal(0).is_none());
     }
 }

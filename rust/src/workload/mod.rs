@@ -104,6 +104,53 @@ pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
     out
 }
 
+/// One named open-loop stream of a multi-stream workload: a model name
+/// plus the arrival pattern that targets it (the multi-model serving
+/// engine pairs stream `i` with model `i`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    pub name: String,
+    pub pattern: Pattern,
+}
+
+/// An arrival belonging to one stream of a merged multi-stream workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamArrival {
+    /// Global id, monotone in arrival time across the merged workload
+    /// (the contract every single-stream pattern keeps).
+    pub id: u64,
+    /// Index of the originating stream in the spec list.
+    pub stream: usize,
+    /// Arrival time, seconds from benchmark start.
+    pub time_s: f64,
+}
+
+/// Generate every stream over [0, duration_s) and merge deterministically
+/// by arrival time. Stream `i` draws from its own PCG stream
+/// (`Pcg64::new(seed, i)` seeds its generator), so adding, removing, or
+/// reordering *other* streams never perturbs a stream's own arrival
+/// times; ties at identical times break by stream index, and global ids
+/// are assigned after the merge so they are monotone in time.
+pub fn generate_streams(streams: &[StreamSpec], duration_s: f64, seed: u64) -> Vec<StreamArrival> {
+    let mut merged: Vec<StreamArrival> = Vec::new();
+    for (si, spec) in streams.iter().enumerate() {
+        let stream_seed = Pcg64::new(seed, si as u64).next_u64();
+        for a in generate(&spec.pattern, duration_s, stream_seed) {
+            merged.push(StreamArrival { id: 0, stream: si, time_s: a.time_s });
+        }
+    }
+    merged.sort_by(|a, b| {
+        a.time_s
+            .partial_cmp(&b.time_s)
+            .expect("NaN arrival time")
+            .then(a.stream.cmp(&b.stream))
+    });
+    for (i, a) in merged.iter_mut().enumerate() {
+        a.id = i as u64;
+    }
+    merged
+}
+
 /// Observed average rate of an arrival vector (requests/second).
 pub fn observed_rate(arrivals: &[Arrival], duration_s: f64) -> f64 {
     arrivals.len() as f64 / duration_s
@@ -250,6 +297,70 @@ mod tests {
         );
         let rate = observed_rate(&a, 60.0);
         assert!((rate - 80.0).abs() < 6.0, "rate {rate}");
+    }
+
+    #[test]
+    fn multi_stream_merge_is_sorted_with_monotone_ids() {
+        let streams = vec![
+            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 50.0 } },
+            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 30.0 } },
+        ];
+        let merged = generate_streams(&streams, 20.0, 7);
+        assert!(merged.windows(2).all(|w| w[0].time_s <= w[1].time_s), "merge must be sorted");
+        for (i, a) in merged.iter().enumerate() {
+            assert_eq!(a.id, i as u64, "ids must be dense and monotone in time");
+        }
+        // Both streams present, at roughly their own rates.
+        let n0 = merged.iter().filter(|a| a.stream == 0).count() as f64 / 20.0;
+        let n1 = merged.iter().filter(|a| a.stream == 1).count() as f64 / 20.0;
+        assert!((n0 - 50.0).abs() < 8.0, "stream 0 rate {n0}");
+        assert!((n1 - 30.0).abs() < 3.0, "stream 1 rate {n1}");
+    }
+
+    #[test]
+    fn streams_are_independent_of_co_streams() {
+        // Stream 0's arrival times must not change when stream 1's pattern
+        // does (per-stream PCG streams, not one shared draw sequence).
+        let a = generate_streams(
+            &[
+                StreamSpec { name: "x".into(), pattern: Pattern::Poisson { rate: 40.0 } },
+                StreamSpec { name: "y".into(), pattern: Pattern::Poisson { rate: 10.0 } },
+            ],
+            15.0,
+            3,
+        );
+        let b = generate_streams(
+            &[
+                StreamSpec { name: "x".into(), pattern: Pattern::Poisson { rate: 40.0 } },
+                StreamSpec { name: "y".into(), pattern: Pattern::Uniform { rate: 200.0 } },
+            ],
+            15.0,
+            3,
+        );
+        let times = |v: &[StreamArrival], s: usize| -> Vec<f64> {
+            v.iter().filter(|a| a.stream == s).map(|a| a.time_s).collect()
+        };
+        assert_eq!(times(&a, 0), times(&b, 0), "co-stream change leaked into stream 0");
+        assert_ne!(times(&a, 1), times(&b, 1));
+    }
+
+    #[test]
+    fn multi_stream_deterministic_per_seed() {
+        let streams = vec![
+            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 25.0 } },
+            StreamSpec { name: "b".into(), pattern: Pattern::Poisson { rate: 25.0 } },
+        ];
+        let a = generate_streams(&streams, 10.0, 42);
+        let b = generate_streams(&streams, 10.0, 42);
+        assert_eq!(a, b);
+        let c = generate_streams(&streams, 10.0, 43);
+        assert_ne!(a, c);
+        // Same seed, same index => distinct draws per stream even with
+        // identical patterns.
+        assert_ne!(
+            a.iter().filter(|x| x.stream == 0).map(|x| x.time_s).collect::<Vec<_>>(),
+            a.iter().filter(|x| x.stream == 1).map(|x| x.time_s).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Multi-model serving suite: per-stream conservation across colocation
+//! and eviction events, the Sharing-versus-Dedicate acceptance criterion,
+//! and golden-style determinism of a multimodel grid at 1/2/8 threads
+//! (the `tests/parallel_sweep.rs` contract extended to the new engine).
+
+use inferbench::metrics::PlacementEventKind;
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::multimodel::{
+    self, ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
+    PlacementOp,
+};
+use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
+use inferbench::sweep;
+use inferbench::workload::Pattern;
+
+fn model(name: &str, per_req_ms: f64, pattern: Pattern) -> ModelSpec {
+    ModelSpec {
+        name: name.into(),
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3)],
+            utilization: 0.6,
+        },
+        policy: Policy::Single,
+        weight_bytes: 400_000_000,
+        max_queue: 200_000,
+        pattern,
+    }
+}
+
+fn replica(hosted: Vec<usize>, mem_bytes: u64) -> MultiReplicaConfig {
+    MultiReplicaConfig { software: &backends::TRIS, mem_bytes, hosted }
+}
+
+fn base(models: Vec<ModelSpec>, replicas: Vec<MultiReplicaConfig>) -> MultiModelConfig {
+    MultiModelConfig {
+        models,
+        replicas,
+        router: RouterPolicy::LeastOutstanding,
+        duration_s: 20.0,
+        placement_ops: vec![],
+        contention: ContentionModel::default(),
+        path: RequestPath::local(Processors::none()),
+        seed: 20260727,
+    }
+}
+
+fn assert_conserved(r: &MultiModelResult, label: &str) {
+    for m in &r.models {
+        assert!(
+            m.conserved(),
+            "{label}/{}: issued {} != completed {} + dropped {}",
+            m.name,
+            m.issued,
+            m.collector.completed,
+            m.collector.dropped
+        );
+    }
+    assert_eq!(r.collector.completed + r.dropped, r.issued, "{label}: cluster ledger");
+    let sum: u64 = r.models.iter().map(|m| m.collector.completed).sum();
+    assert_eq!(sum, r.collector.completed, "{label}: per-model completions must sum");
+    let sum_d: u64 = r.models.iter().map(|m| m.collector.dropped).sum();
+    assert_eq!(sum_d, r.dropped, "{label}: per-model drops must sum");
+}
+
+/// The scenario grid the determinism assertions run over: colocated
+/// overcommit, dedicated pair, a 2-replica shared fleet with rejections,
+/// and an eviction + reload script — every engine path the PR adds.
+fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
+    let poisson = |rate: f64| Pattern::Poisson { rate };
+    // Two shared replicas, tight per-model queues: routing + rejections.
+    let mut tight_a = model("a", 5.0, poisson(200.0));
+    tight_a.max_queue = 16;
+    let mut tight_b = model("b", 3.0, poisson(150.0));
+    tight_b.max_queue = 16;
+    // Placement script: load c (evicting the LRU-idle b), later evict a.
+    let quiet_b = model("b", 4.0, Pattern::Trace { times_s: vec![0.5] });
+    vec![
+        // Overcommitted colocation on one replica.
+        MultiModelConfig {
+            seed,
+            ..base(
+                vec![model("a", 5.0, poisson(120.0)), model("b", 5.0, poisson(120.0))],
+                vec![replica(vec![0, 1], 2_000_000_000)],
+            )
+        },
+        // The same pair dedicated.
+        MultiModelConfig {
+            seed,
+            ..base(
+                vec![model("a", 5.0, poisson(120.0)), model("b", 5.0, poisson(120.0))],
+                vec![replica(vec![0], 2_000_000_000), replica(vec![1], 2_000_000_000)],
+            )
+        },
+        MultiModelConfig {
+            seed,
+            ..base(
+                vec![tight_a, tight_b],
+                vec![replica(vec![0, 1], 2_000_000_000), replica(vec![0, 1], 2_000_000_000)],
+            )
+        },
+        MultiModelConfig {
+            seed,
+            duration_s: 40.0,
+            placement_ops: vec![
+                (6.0, PlacementOp::Load { replica: 0, model: 2 }),
+                (25.0, PlacementOp::Evict { replica: 0, model: 0 }),
+            ],
+            ..base(
+                vec![model("a", 4.0, poisson(50.0)), quiet_b, model("c", 4.0, poisson(50.0))],
+                vec![replica(vec![0, 1], 800_000_000)],
+            )
+        },
+    ]
+}
+
+#[test]
+fn per_stream_conservation_across_colocation_and_eviction() {
+    for (i, cfg) in scenario_configs(11).into_iter().enumerate() {
+        let r = multimodel::run(&cfg);
+        assert_conserved(&r, &format!("scenario{i}"));
+        assert!(r.collector.completed > 0, "scenario{i}: no work done");
+    }
+}
+
+#[test]
+fn multimodel_grid_bit_identical_at_1_2_8_threads() {
+    // The parallel_sweep contract extended to the multimodel engine: the
+    // same grid through sweep::map_indexed must agree to the last bit at
+    // any thread count, per-stream collectors included.
+    let run_grid = |threads: usize| -> Vec<MultiModelResult> {
+        let configs = scenario_configs(0); // seeds derived per cell below
+        sweep::map_indexed(&configs, threads, |i, cfg| {
+            let mut cell = cfg.clone();
+            cell.seed = sweep::cell_seed(909, i as u64);
+            multimodel::run(&cell)
+        })
+    };
+    let serial = run_grid(1);
+    assert_eq!(serial.len(), 4, "scenario grid shape");
+    for threads in [2, 8] {
+        let parallel = run_grid(threads);
+        assert_eq!(serial.len(), parallel.len());
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            assert_eq!(a.issued, b.issued, "cell {i} @{threads}");
+            assert_eq!(a.dropped, b.dropped, "cell {i} @{threads}");
+            assert_eq!(a.events, b.events, "cell {i} @{threads}: event count");
+            assert_eq!(
+                a.collector.fingerprint(),
+                b.collector.fingerprint(),
+                "cell {i} @{threads}: cluster collector"
+            );
+            for (ma, mb) in a.models.iter().zip(&b.models) {
+                assert_eq!(ma.issued, mb.issued, "cell {i} @{threads}: {}", ma.name);
+                assert_eq!(
+                    ma.collector.fingerprint(),
+                    mb.collector.fingerprint(),
+                    "cell {i} @{threads}: stream {}",
+                    ma.name
+                );
+            }
+            assert_eq!(a.placement.events.len(), b.placement.events.len(), "cell {i}");
+            for (pa, pb) in a.placement.events.iter().zip(&b.placement.events) {
+                assert_eq!(pa, pb, "cell {i} @{threads}: placement timeline");
+            }
+            for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(ra.batch_sizes(), rb.batch_sizes(), "cell {i}: batch sequence");
+            }
+        }
+    }
+}
+
+#[test]
+fn overcommitted_sharing_strictly_worse_p99_strictly_cheaper() {
+    // The acceptance criterion: total demand 2 x 120 rps x ~4.2 ms
+    // effective = ~1.0 > MPS_EFFICIENCY. Shared must lose on p99 and win
+    // on replica count, with exact conservation on both sides.
+    let models = || {
+        vec![
+            model("a", 5.0, Pattern::Poisson { rate: 120.0 }),
+            model("b", 5.0, Pattern::Poisson { rate: 120.0 }),
+        ]
+    };
+    let shared = base(models(), vec![replica(vec![0, 1], 2_000_000_000)]);
+    let dedicated = base(
+        models(),
+        vec![replica(vec![0], 2_000_000_000), replica(vec![1], 2_000_000_000)],
+    );
+    let (rs, rd) = (multimodel::run(&shared), multimodel::run(&dedicated));
+    assert_conserved(&rs, "shared");
+    assert_conserved(&rd, "dedicated");
+    let (p99_s, p99_d) = (rs.collector.e2e.percentile(99.0), rd.collector.e2e.percentile(99.0));
+    assert!(
+        p99_s > p99_d,
+        "overcommitted shared p99 ({p99_s}s) must strictly exceed dedicated ({p99_d}s)"
+    );
+    // Per-stream view agrees: each colocated stream is worse than its
+    // dedicated twin.
+    for (ms, md) in rs.models.iter().zip(&rd.models) {
+        assert!(
+            ms.collector.e2e.percentile(99.0) > md.collector.e2e.percentile(99.0),
+            "stream {}",
+            ms.name
+        );
+    }
+    assert!(
+        rs.replica_count() < rd.replica_count(),
+        "sharing must use strictly fewer replicas ({} vs {})",
+        rs.replica_count(),
+        rd.replica_count()
+    );
+}
+
+#[test]
+fn eviction_mid_run_keeps_every_stream_ledger_exact() {
+    // Model b overloaded on its own replica: the eviction at t=5 drops a
+    // deep queue; arrivals after it die at the routing tier. Everything
+    // must still add up, stream by stream.
+    let cfg = MultiModelConfig {
+        placement_ops: vec![(5.0, PlacementOp::Evict { replica: 1, model: 1 })],
+        ..base(
+            vec![
+                model("a", 4.0, Pattern::Poisson { rate: 60.0 }),
+                model("b", 5.0, Pattern::Poisson { rate: 400.0 }),
+            ],
+            vec![replica(vec![0], 2_000_000_000), replica(vec![1], 2_000_000_000)],
+        )
+    };
+    let r = multimodel::run(&cfg);
+    assert_conserved(&r, "eviction");
+    assert_eq!(r.placement.count(PlacementEventKind::Evicted), 1);
+    let b = r.model("b").unwrap();
+    assert!(b.collector.dropped > 0, "evicted backlog + post-eviction arrivals must drop");
+    assert!(b.collector.completed > 0, "pre-eviction completions kept");
+    assert_eq!(r.model("a").unwrap().collector.dropped, 0, "co-stream untouched");
+}
+
+#[test]
+fn load_with_eviction_serves_the_new_model_after_cold_start() {
+    let cfg = scenario_configs(21).pop().unwrap();
+    let r = multimodel::run(&cfg);
+    assert_conserved(&r, "placement-script");
+    assert_eq!(r.placement.count(PlacementEventKind::LoadRequested), 1);
+    assert_eq!(r.placement.count(PlacementEventKind::Ready), 1);
+    // b evicted by the load (LRU), a evicted by script.
+    assert_eq!(r.placement.count(PlacementEventKind::Evicted), 2);
+    let c = r.model("c").unwrap();
+    assert!(c.collector.completed > 0, "c must serve after its cold start");
+    assert!(c.collector.dropped > 0, "c's pre-load arrivals had no host");
+    // a keeps serving until its eviction, then its stream drops.
+    let a = r.model("a").unwrap();
+    assert!(a.collector.completed > 0);
+    assert!(a.collector.dropped > 0, "post-eviction arrivals of a must drop");
+}
+
+#[test]
+fn model_aware_routing_only_uses_hosting_replicas() {
+    // Replica 0 hosts only a, replica 1 hosts a and b: every b
+    // completion must come from replica 1, and a spreads over both.
+    let cfg = base(
+        vec![
+            model("a", 4.0, Pattern::Poisson { rate: 120.0 }),
+            model("b", 4.0, Pattern::Poisson { rate: 60.0 }),
+        ],
+        vec![replica(vec![0], 2_000_000_000), replica(vec![0, 1], 2_000_000_000)],
+    );
+    let r = multimodel::run(&cfg);
+    assert_conserved(&r, "hosting");
+    let b_done = r.model("b").unwrap().collector.completed;
+    assert!(b_done > 0);
+    // Replica 1 completed all of b plus its share of a.
+    assert!(r.replicas[1].collector.completed >= b_done);
+    // Replica 0 completed only a-work: total minus replica 1 equals its
+    // count, and it can never exceed a's stream total.
+    let a_done = r.model("a").unwrap().collector.completed;
+    assert!(r.replicas[0].collector.completed <= a_done);
+    assert!(r.replicas[0].collector.completed > 0, "a must spread to replica 0");
+}
+
+#[test]
+fn multimodel_leader_job_records_share_vs_dedicate() {
+    // The coordinator path end to end: two YAML submissions through a
+    // leader, then the sharing trade-off read back out of the PerfDB via
+    // the new label query.
+    use inferbench::coordinator::{Leader, LeaderConfig};
+    use inferbench::perfdb::Query;
+    let yaml = |mode: &str| {
+        format!(
+            "name: share-study\ntask: multimodel\nplatform: G1\nsoftware: tris\n\
+             models: [resnet50, mobilenet_v1]\nrates: [100.0, 80.0]\nmode: {mode}\n\
+             replicas: 1\nmem_gb: 4.0\nworkload:\n  duration_s: 6\n"
+        )
+    };
+    let leader = Leader::start(LeaderConfig { workers: 1, ..Default::default() });
+    leader.submit_yaml(&yaml("shared")).unwrap();
+    leader.submit_yaml(&yaml("dedicated")).unwrap();
+    let done = leader.wait_for(2, std::time::Duration::from_secs(120)).unwrap();
+    assert!(done.iter().all(|j| j.ok), "multimodel jobs failed: {done:?}");
+    let db = leader.perfdb.lock().unwrap();
+    let q = Query::default().task("multimodel");
+    let shared = db.query_by_label(&q, "mode", "shared");
+    let dedicated = db.query_by_label(&q, "mode", "dedicated");
+    assert_eq!(shared.len(), 2, "one record per stream");
+    assert_eq!(dedicated.len(), 2);
+    for r in &shared {
+        assert_eq!(r.metric("replicas"), Some(1.0));
+    }
+    for r in &dedicated {
+        assert_eq!(r.metric("replicas"), Some(2.0));
+    }
+    drop(db);
+    leader.shutdown();
+}
