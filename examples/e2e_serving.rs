@@ -17,7 +17,8 @@ use inferbench::serving::cluster::{run as run_cluster, ClusterConfig, ReplicaCon
 use inferbench::serving::live::{run_load, LiveConfig, LiveServer};
 use inferbench::serving::{backends, Policy, RouterPolicy, Software};
 use inferbench::util::render;
-use inferbench::workload::{generate, Pattern};
+use inferbench::metrics::MetricsMode;
+use inferbench::workload::{Pattern, Workload};
 
 fn serve_one(stem: &str, rate: f64, duration: f64, max_batch: usize) -> anyhow::Result<Vec<String>> {
     eprintln!("== {stem}: loading artifacts (XLA compile + param upload)...");
@@ -104,8 +105,10 @@ fn cluster_scaleout_section() -> anyhow::Result<()> {
         ] {
             let rn = inferbench::models::catalog::find("resnet50").unwrap();
             let cfg = ClusterConfig {
-                arrivals: generate(&Pattern::Poisson { rate: 120.0 * n as f64 }, duration, 1234),
-                closed_loop: None,
+                workload: Workload::Stream {
+                    pattern: Pattern::Poisson { rate: 120.0 * n as f64 },
+                    seed: 1234,
+                },
                 duration_s: duration,
                 replicas: (0..n)
                     .map(|_| -> anyhow::Result<ReplicaConfig> {
@@ -125,6 +128,7 @@ fn cluster_scaleout_section() -> anyhow::Result<()> {
                     network: LAN,
                     payload_bytes: rn.request_bytes,
                 },
+                metrics: MetricsMode::Exact,
                 seed: 99,
             };
             let r = run_cluster(&cfg);
@@ -168,17 +172,15 @@ fn autoscale_spike_section() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for software in [&backends::TFS, &backends::TRIS] {
         let cfg = ClusterConfig {
-            arrivals: generate(
-                &Pattern::Spike {
+            workload: Workload::Stream {
+                pattern: Pattern::Spike {
                     base_rate: 150.0,
                     burst_rate: 900.0,
                     start_s: 20.0,
                     duration_s: 12.0,
                 },
-                60.0,
-                2024,
-            ),
-            closed_loop: None,
+                seed: 2024,
+            },
             duration_s: 60.0,
             replicas: vec![replica(software), replica(software)],
             router: RouterPolicy::LeastOutstanding,
@@ -196,6 +198,7 @@ fn autoscale_spike_section() -> anyhow::Result<()> {
             }),
             cold_start: None,
             path: RequestPath::local(Processors::none()),
+            metrics: MetricsMode::Exact,
             seed: 2024,
         };
         let r = run_cluster(&cfg);
@@ -265,6 +268,7 @@ fn multimodel_sharing_section() -> anyhow::Result<()> {
                 placement_ops: vec![],
                 contention: ContentionModel::default(),
                 path: RequestPath::local(Processors::none()),
+                metrics: MetricsMode::Exact,
                 seed: 77,
             };
             let r = multimodel::run(&cfg);

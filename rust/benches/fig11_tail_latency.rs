@@ -16,15 +16,14 @@ use inferbench::pipeline::{Processors, RequestPath, LAN};
 use inferbench::serving::{backends, run, Policy, SimConfig};
 use inferbench::sweep;
 use inferbench::util::render;
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 const DURATION: f64 = 120.0;
 
 fn base_config(rate: f64) -> SimConfig {
     let rn = catalog::find("resnet50").unwrap();
     SimConfig {
-        arrivals: generate(&Pattern::Poisson { rate }, DURATION, 1234),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate }, seed: 1234 },
         duration_s: DURATION,
         policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.005 },
         software: &backends::TFS,
@@ -85,11 +84,15 @@ fn main() {
     println!("\n=== Fig 11c: spike load (base 50 rps, burst 300 rps for 20s, batch 1) ===\n");
     let mut spike_cfg = base_config(50.0);
     spike_cfg.policy = Policy::Single;
-    spike_cfg.arrivals = generate(
-        &Pattern::Spike { base_rate: 50.0, burst_rate: 300.0, start_s: 40.0, duration_s: 20.0 },
-        DURATION,
-        77,
-    );
+    spike_cfg.workload = Workload::Stream {
+        pattern: Pattern::Spike {
+            base_rate: 50.0,
+            burst_rate: 300.0,
+            start_s: 40.0,
+            duration_s: 20.0,
+        },
+        seed: 77,
+    };
     let mut steady_cfg = base_config(50.0);
     steady_cfg.policy = Policy::Single;
     let pair = [spike_cfg, steady_cfg];

@@ -31,8 +31,7 @@ struct Cell {
 fn throughput(software: &'static Software, concurrency: usize, dynamic: bool) -> (f64, f64) {
     let rn = catalog::find("resnet50").unwrap();
     let config = SimConfig {
-        arrivals: vec![],
-        closed_loop: Some(concurrency),
+        workload: inferbench::workload::Workload::ClosedLoop { clients: concurrency },
         duration_s: DURATION,
         policy: if dynamic {
             Policy::Dynamic { max_size: 32, max_wait_s: 0.002 }

@@ -17,12 +17,10 @@ const DURATION: f64 = 60.0;
 fn timeline(model: &str, rate: f64, software: &'static Software) -> (Vec<f64>, f64) {
     let m = catalog::find(model).unwrap();
     let config = SimConfig {
-        arrivals: inferbench::workload::generate(
-            &inferbench::workload::Pattern::Poisson { rate },
-            DURATION,
-            5150,
-        ),
-        closed_loop: None,
+        workload: inferbench::workload::Workload::Stream {
+            pattern: inferbench::workload::Pattern::Poisson { rate },
+            seed: 5150,
+        },
         duration_s: DURATION,
         policy: Policy::Single, // paper: batch size 1
         software,

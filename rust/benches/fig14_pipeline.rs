@@ -13,15 +13,14 @@ use inferbench::pipeline::{Network, Processors, RequestPath, LAN, LTE_4G, WIFI};
 use inferbench::runtime::Engine;
 use inferbench::serving::{backends, run, Policy, SimConfig};
 use inferbench::util::render;
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 const DURATION: f64 = 60.0;
 
 fn sim(batch: usize, network: Network) -> SimConfig {
     let rn = catalog::find("resnet50").unwrap();
     SimConfig {
-        arrivals: generate(&Pattern::Poisson { rate: 60.0 }, DURATION, 2020),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate: 60.0 }, seed: 2020 },
         duration_s: DURATION,
         policy: if batch == 1 {
             Policy::Single

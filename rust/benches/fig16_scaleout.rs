@@ -17,12 +17,13 @@
 //! cells run across all cores and come back in plan order, bit-identical
 //! to a serial sweep, so the tables below don't depend on core count.
 
+use inferbench::metrics::MetricsMode;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::cluster::{ClusterConfig, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
 use inferbench::sweep::{self, SweepPlan};
 use inferbench::util::render;
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 const DURATION: f64 = 40.0;
 const SEED: u64 = 4242;
@@ -50,14 +51,14 @@ fn routers() -> [RouterPolicy; 4] {
 
 fn cluster(replicas: Vec<ReplicaConfig>, rate: f64, router: RouterPolicy) -> ClusterConfig {
     ClusterConfig {
-        arrivals: generate(&Pattern::Poisson { rate }, DURATION, SEED),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate }, seed: SEED },
         duration_s: DURATION,
         replicas,
         router,
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: SEED,
     }
 }

@@ -21,14 +21,14 @@
 //! a serial sweep, and the replica-count timeline is read straight from
 //! the grid cell instead of a fifth run.
 
-use inferbench::metrics::ScaleEventKind;
+use inferbench::metrics::{MetricsMode, ScaleEventKind};
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
 use inferbench::serving::cluster::{ClusterConfig, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel, Software};
 use inferbench::sweep::{self, SweepPlan};
 use inferbench::util::render;
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 const DURATION: f64 = 60.0;
 const BASE_RATE: f64 = 150.0;
@@ -64,17 +64,15 @@ fn policies() -> [(&'static str, ScalePolicy); 2] {
 
 fn config_for(software: &'static Software, policy: ScalePolicy) -> ClusterConfig {
     ClusterConfig {
-        arrivals: generate(
-            &Pattern::Spike {
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
                 base_rate: BASE_RATE,
                 burst_rate: BURST_RATE,
                 start_s: BURST_START,
                 duration_s: BURST_LEN,
             },
-            DURATION,
-            SEED,
-        ),
-        closed_loop: None,
+            seed: SEED,
+        },
         duration_s: DURATION,
         replicas: (0..INITIAL_REPLICAS).map(|_| replica(software)).collect(),
         router: RouterPolicy::LeastOutstanding,
@@ -88,6 +86,7 @@ fn config_for(software: &'static Software, policy: ScalePolicy) -> ClusterConfig
         }),
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: SEED,
     }
 }

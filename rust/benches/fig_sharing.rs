@@ -26,6 +26,7 @@
 //! Run: `cargo bench --bench fig_sharing [-- --smoke]`
 
 use inferbench::hardware::cloud;
+use inferbench::metrics::MetricsMode;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::multimodel::{
     self, ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
@@ -101,6 +102,7 @@ fn config_for(mode: Mode, degree: usize, rate: f64, seed: u64) -> MultiModelConf
         placement_ops: vec![],
         contention: ContentionModel::default(),
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed,
     }
 }

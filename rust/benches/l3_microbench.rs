@@ -10,7 +10,7 @@ use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::{run, backends, Batcher, Policy, SimConfig};
 use inferbench::util::json;
 use inferbench::util::rng::Pcg64;
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 use std::time::Instant;
 
 /// Time `f` over `iters` inner ops, repeated `reps` times; report median.
@@ -68,16 +68,15 @@ fn main() {
         n
     });
 
-    let arrivals = generate(&Pattern::Poisson { rate: 2000.0 }, 30.0, 3);
-    let n_arrivals = arrivals.len() as u64;
+    let workload = Workload::Stream { pattern: Pattern::Poisson { rate: 2000.0 }, seed: 3 };
+    let n_arrivals = workload.count_in(30.0);
     bench(
         &format!("DES: full sim, {n_arrivals} requests"),
         n_arrivals,
         7,
         || {
             let config = SimConfig {
-                arrivals: arrivals.clone(),
-                closed_loop: None,
+                workload: workload.clone(),
                 duration_s: 30.0,
                 policy: Policy::Dynamic { max_size: 16, max_wait_s: 0.002 },
                 software: &backends::TRIS,

@@ -21,20 +21,30 @@
 //! reporting cells/sec and the parallel speedup — with a bit-identity
 //! assertion between the two runs (the engine's core guarantee).
 //!
+//! Streaming scale row: the `streaming-sketch` scenario runs the
+//! fixed-fleet config with a lazily generated workload and sketch-mode
+//! metrics — no arrival vector, no per-sample latency tables — at 10⁸
+//! requests (10⁷ under `--smoke`, where the row carries a hard
+//! RSS-growth assertion: the run must not grow resident memory by more
+//! than a fraction of what materializing the arrivals alone would cost).
+//! Peak/delta RSS is read from `/proc/self/status` and written into the
+//! JSON row, so the flat-memory claim is tracked alongside req/s.
+//!
 //! Everything is written to `BENCH_des.json` at the repository root so
 //! the trajectory is tracked in-repo. Pass `--smoke` for the CI variant:
-//! the 10k single-run scale plus a small 2-thread sweep grid, printed
-//! into the job summary.
+//! the 10k single-run scale plus a small 2-thread sweep grid and the
+//! 10⁷ streaming row, printed into the job summary.
 //!
 //! Run: `cargo bench --bench l4_des_throughput [-- --smoke]`
 
+use inferbench::metrics::MetricsMode;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
 use inferbench::serving::cluster::{run, ClusterConfig, ClusterResult, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
 use inferbench::sweep::SweepPlan;
 use inferbench::util::render;
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 use std::path::Path;
 use std::time::Instant;
 
@@ -55,16 +65,23 @@ fn fixed_fleet(n: u64) -> ClusterConfig {
     let rate = 2000.0;
     let duration = n as f64 / rate;
     ClusterConfig {
-        arrivals: generate(&Pattern::Poisson { rate }, duration, 42),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate }, seed: 42 },
         duration_s: duration,
         replicas: vec![replica(2.0), replica(3.0), replica(5.0), replica(8.0)],
         router: RouterPolicy::LeastOutstanding,
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 42,
     }
+}
+
+/// The 10⁸-scale row: the fixed fleet with lazily streamed Poisson
+/// arrivals and sketch-mode metrics. Nothing in this config — or in the
+/// run it drives — is O(requests).
+fn streaming_sketch(n: u64) -> ClusterConfig {
+    ClusterConfig { metrics: MetricsMode::Sketch { alpha: 0.01 }, ..fixed_fleet(n) }
 }
 
 /// Elastic fleet under spike load; sized for ~`n` requests.
@@ -73,17 +90,15 @@ fn autoscale(n: u64) -> ClusterConfig {
     // average offered rate ~1600 rps.
     let duration = n as f64 / 1600.0;
     ClusterConfig {
-        arrivals: generate(
-            &Pattern::Spike {
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
                 base_rate: 1000.0,
                 burst_rate: 4000.0,
                 start_s: duration * 0.4,
                 duration_s: duration * 0.2,
             },
-            duration,
-            43,
-        ),
-        closed_loop: None,
+            seed: 43,
+        },
         duration_s: duration,
         replicas: vec![replica(2.0), replica(2.0)],
         router: RouterPolicy::LeastOutstanding,
@@ -101,6 +116,7 @@ fn autoscale(n: u64) -> ClusterConfig {
         }),
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 43,
     }
 }
@@ -112,14 +128,14 @@ fn closed_loop(n: u64) -> ClusterConfig {
     // 64 clients over 4 replicas at ~2.4 ms effective -> ~2400 rps.
     let duration = n as f64 / 2400.0;
     ClusterConfig {
-        arrivals: vec![],
-        closed_loop: Some(64),
+        workload: Workload::ClosedLoop { clients: 64 },
         duration_s: duration,
         replicas: vec![replica(2.0), replica(2.0), replica(2.0), replica(2.0)],
         router: RouterPolicy::LeastOutstanding,
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 44,
     }
 }
@@ -131,6 +147,67 @@ struct Cell {
     completed: u64,
     events: u64,
     wall_s: f64,
+}
+
+/// Current resident set size in MB from `/proc/self/status` (Linux);
+/// `None` elsewhere, which skips the flat-RSS assertion but still runs
+/// the row.
+fn rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmRSS:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+struct StreamingRow {
+    requests: u64,
+    issued: u64,
+    events: u64,
+    wall_s: f64,
+    p99_ms: f64,
+    /// RSS growth over the run in MB; `None` off Linux.
+    rss_growth_mb: Option<f64>,
+}
+
+impl StreamingRow {
+    fn requests_per_s(&self) -> f64 {
+        self.issued as f64 / self.wall_s
+    }
+}
+
+/// Run the streamed sketch-mode scale row and enforce the flat-RSS
+/// contract: the run may not grow resident memory by more than
+/// `budget_mb`, a small constant far below the ~16 B/request it would
+/// take just to materialize the arrival vector.
+fn measure_streaming(n: u64, budget_mb: f64) -> StreamingRow {
+    let cfg = streaming_sketch(n);
+    let before = rss_mb();
+    let t0 = Instant::now();
+    let r = run(&cfg);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let after = rss_mb();
+    assert_eq!(r.collector.completed + r.dropped, r.issued, "streaming-sketch: conservation");
+    assert!(r.collector.is_bounded(), "streaming-sketch: collector must be in sketch mode");
+    let rss_growth_mb = match (before, after) {
+        (Some(b), Some(a)) => Some(a - b),
+        _ => None,
+    };
+    if let Some(g) = rss_growth_mb {
+        let vector_mb = n as f64 * 16.0 / (1024.0 * 1024.0);
+        assert!(
+            g < budget_mb,
+            "streaming-sketch: RSS grew {g:.1} MB over a {n}-request run (budget {budget_mb} MB; \
+             the arrival vector alone would be ~{vector_mb:.0} MB)"
+        );
+    }
+    StreamingRow {
+        requests: n,
+        issued: r.issued,
+        events: r.events,
+        wall_s,
+        p99_ms: r.collector.e2e.percentile(99.0) * 1e3,
+        rss_growth_mb,
+    }
 }
 
 impl Cell {
@@ -184,18 +261,17 @@ fn sweep_grid(fleets: &[usize], duration_s: f64) -> SweepPlan {
             RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.1 },
         ] {
             plan.push(format!("{n}x{}", router.label()), move |seed| ClusterConfig {
-                arrivals: generate(
-                    &Pattern::Poisson { rate: 170.0 * n as f64 },
-                    duration_s,
+                workload: Workload::Stream {
+                    pattern: Pattern::Poisson { rate: 170.0 * n as f64 },
                     seed,
-                ),
-                closed_loop: None,
+                },
                 duration_s,
                 replicas: (0..n).map(|_| replica(5.0)).collect(),
                 router,
                 autoscale: None,
                 cold_start: None,
                 path: RequestPath::local(Processors::none()),
+                metrics: MetricsMode::Exact,
                 seed,
             });
         }
@@ -301,16 +377,37 @@ fn json_sweeps(rows: &[SweepRow]) -> Vec<String> {
         .collect()
 }
 
-fn write_json(cells: &[Cell], sweeps: &[SweepRow]) -> std::io::Result<()> {
+fn json_streaming(rows: &[StreamingRow]) -> Vec<String> {
+    rows.iter()
+        .map(|s| {
+            format!(
+                "    {{\"scenario\": \"streaming-sketch\", \"requests\": {}, \"issued\": {}, \
+                 \"events\": {}, \"wall_s\": {:.4}, \"requests_per_s\": {:.0}, \
+                 \"p99_ms\": {:.4}, \"rss_growth_mb\": {}}}",
+                s.requests,
+                s.issued,
+                s.events,
+                s.wall_s,
+                s.requests_per_s(),
+                s.p99_ms,
+                s.rss_growth_mb.map_or("null".to_string(), |g| format!("{g:.1}"))
+            )
+        })
+        .collect()
+}
+
+fn write_json(cells: &[Cell], sweeps: &[SweepRow], streaming: &[StreamingRow]) -> std::io::Result<()> {
     // The repo root is one level above the rust package.
     let path = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_des.json");
     let doc = format!(
         "{{\n  \"bench\": \"l4_des_throughput\",\n  \"unit\": \"simulated requests (issued) and \
          DES events per wall-clock second; sweep rows add grid cells per second, serial vs \
-         parallel\",\n  \"regenerate\": \"cargo bench --bench l4_des_throughput\",\n  \
-         \"results\": [\n{}\n  ],\n  \"sweep\": [\n{}\n  ]\n}}\n",
+         parallel; streaming rows add sketch-mode scale runs with RSS growth\",\n  \
+         \"regenerate\": \"cargo bench --bench l4_des_throughput\",\n  \
+         \"results\": [\n{}\n  ],\n  \"sweep\": [\n{}\n  ],\n  \"streaming\": [\n{}\n  ]\n}}\n",
         json_results(cells).join(",\n"),
-        json_sweeps(sweeps).join(",\n")
+        json_sweeps(sweeps).join(",\n"),
+        json_streaming(streaming).join(",\n")
     );
     std::fs::write(path, doc)
 }
@@ -371,6 +468,25 @@ fn main() {
     assert_eq!(a.collector.completed, b.collector.completed);
     assert_eq!(a.collector.e2e.percentile(99.0), b.collector.e2e.percentile(99.0));
 
+    // Streaming + sketch scale row: the whole point of the streaming
+    // pipeline — request counts that could never be materialized, at a
+    // resident set that does not grow with the horizon.
+    println!("\n=== Streaming + sketch: constant-memory scale row ===\n");
+    let stream_n: u64 = if smoke { 10_000_000 } else { 100_000_000 };
+    let streaming_row = measure_streaming(stream_n, 64.0);
+    println!(
+        "streaming-sketch {:>11} requests: {:>8.3}s wall, {:>12.0} req/s, p99 {:.3} ms, \
+         RSS growth {}",
+        streaming_row.requests,
+        streaming_row.wall_s,
+        streaming_row.requests_per_s(),
+        streaming_row.p99_ms,
+        streaming_row
+            .rss_growth_mb
+            .map_or("n/a".to_string(), |g| format!("{g:.1} MB (flat)")),
+    );
+    let streaming_rows = vec![streaming_row];
+
     // Sweep engine: cells/sec and parallel speedup on the fig16-style
     // grid, with bit-identity between the serial and threaded runs
     // asserted inside measure_sweep.
@@ -427,16 +543,19 @@ fn main() {
             sweeps.push(row);
         }
     }
-    println!("\nPASS: conservation + determinism on every scenario; sweep parallel == serial bit-for-bit");
+    println!(
+        "\nPASS: conservation + determinism on every scenario; sweep parallel == serial \
+         bit-for-bit; streaming scale row at flat RSS"
+    );
 
     if smoke {
         // Don't clobber the committed full matrix with 10k-only rows.
         println!("(smoke run: BENCH_des.json left untouched)");
     } else {
-        match write_json(&cells, &sweeps) {
+        match write_json(&cells, &sweeps, &streaming_rows) {
             Ok(()) => {
                 let (nc, ns) = (cells.len(), sweeps.len());
-                println!("wrote BENCH_des.json ({nc} cells, {ns} sweep rows)");
+                println!("wrote BENCH_des.json ({nc} cells, {ns} sweep rows, 1 streaming row)");
             }
             Err(e) => eprintln!("WARNING: could not write BENCH_des.json: {e}"),
         }

@@ -58,6 +58,16 @@
 //!   max_wait_ms: 2
 //! ```
 //!
+//! `cluster_sim`, `sweep`, and `multimodel` submissions accept an
+//! optional top-level `scale` knob selecting the metrics backend:
+//! `scale: exact` (default) retains every latency sample; `scale: sketch`
+//! switches the engines to the bounded-memory quantile sketch
+//! (`sketch_alpha` tunes the relative-error bound, default 0.01), which
+//! is what lets a 10⁸-request streamed run finish at flat RSS. Counts,
+//! throughput, min/max, and conservation checks are identical in both
+//! modes; sketch percentiles carry the configured relative error, and
+//! window-scoped metrics (`burst_p99_ms`) are exact-only and omitted.
+//!
 //! A `cluster_sim` submission requesting an autoscaled spike study
 //! (Fig 11c burst against a cold-starting fleet) looks like:
 //!
@@ -90,6 +100,7 @@
 //! ```
 
 use crate::hardware::{self, Parallelism};
+use crate::metrics::MetricsMode;
 use crate::models::catalog;
 use crate::perfdb::Record;
 use crate::pipeline::{Processors, RequestPath, LAN};
@@ -103,7 +114,7 @@ use crate::serving::{
 use crate::sweep::SweepPlan;
 use crate::util::json::Json;
 use crate::util::yamlish;
-use crate::workload::{generate, Pattern};
+use crate::workload::{Pattern, Workload};
 use anyhow::{anyhow, bail, Result};
 
 /// What a worker should run.
@@ -138,6 +149,9 @@ pub enum JobKind {
         max_wait_s: f64,
         /// Optional elasticity; fixed fleet when absent.
         autoscale: Option<AutoscaleSpec>,
+        /// Metrics backend (`scale:` knob): exact retention or the
+        /// bounded-memory quantile sketch for long-horizon runs.
+        metrics: MetricsMode,
     },
     /// Roofline sweep of a model across batch sizes (hardware tier).
     HardwareSweep { model: String, platform: String, batches: Vec<usize> },
@@ -164,6 +178,8 @@ pub enum JobKind {
         rate_per_replica: f64,
         duration_s: f64,
         max_batch: usize,
+        /// Metrics backend (`scale:` knob), applied to every cell.
+        metrics: MetricsMode,
     },
     /// Multi-model replica serving (Sharing versus Dedicate, §3.3): one
     /// Poisson stream per model against a shared fleet (co-located under
@@ -188,6 +204,8 @@ pub enum JobKind {
         duration_s: f64,
         max_batch: usize,
         max_wait_s: f64,
+        /// Metrics backend (`scale:` knob), applied per model stream.
+        metrics: MetricsMode,
     },
     /// Do nothing for a fixed time (scheduler studies; time is scaled by
     /// the leader's `time_scale`).
@@ -332,6 +350,7 @@ impl JobSpec {
                         .unwrap_or(5.0)
                         / 1e3,
                     autoscale,
+                    metrics: scale_mode(doc)?,
                 }
             }
             "hardware_sweep" => JobKind::HardwareSweep {
@@ -430,6 +449,7 @@ impl JobSpec {
                         .and_then(|b| b.get("max_size"))
                         .and_then(|v| v.as_i64())
                         .unwrap_or(8) as usize,
+                    metrics: scale_mode(doc)?,
                 }
             }
             "multimodel" => {
@@ -495,6 +515,7 @@ impl JobSpec {
                         .and_then(|v| v.as_f64())
                         .unwrap_or(5.0)
                         / 1e3,
+                    metrics: scale_mode(doc)?,
                 }
             }
             "sleep" => JobKind::Sleep {
@@ -512,6 +533,23 @@ impl JobSpec {
 
 fn str_or(doc: &Json, key: &str, default: &str) -> String {
     doc.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+}
+
+/// Parse the top-level `scale:` knob into a [`MetricsMode`]. Absent means
+/// exact; `sketch` reads the optional `sketch_alpha` relative-error bound.
+/// Unknown names fail the submission loudly.
+fn scale_mode(doc: &Json) -> Result<MetricsMode> {
+    match doc.get("scale").and_then(|v| v.as_str()) {
+        None | Some("exact") => Ok(MetricsMode::Exact),
+        Some("sketch") => {
+            let alpha = doc.get("sketch_alpha").and_then(|v| v.as_f64()).unwrap_or(0.01);
+            if !(alpha > 0.0 && alpha < 1.0) {
+                bail!("sketch_alpha must be in (0, 1), got {alpha}");
+            }
+            Ok(MetricsMode::Sketch { alpha })
+        }
+        Some(other) => bail!("scale must be 'exact' or 'sketch', got {other:?}"),
+    }
 }
 
 /// Duration estimate used by the scheduler when the submission omits one.
@@ -588,8 +626,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
             let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
             let config = SimConfig {
-                arrivals: generate(&Pattern::Poisson { rate: *rate_rps }, *duration_s, seed),
-                closed_loop: None,
+                workload: Workload::Stream { pattern: Pattern::Poisson { rate: *rate_rps }, seed },
                 duration_s: *duration_s,
                 policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: *max_wait_s },
                 software: sw,
@@ -627,6 +664,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             max_batch,
             max_wait_s,
             autoscale,
+            metrics,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -690,8 +728,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 })
                 .transpose()?;
             let config = ClusterConfig {
-                arrivals: generate(&pattern, *duration_s, seed),
-                closed_loop: None,
+                workload: Workload::Stream { pattern, seed },
                 duration_s: *duration_s,
                 replicas: (0..*replicas).map(|_| template.clone()).collect(),
                 router: router_policy(router, seed)?,
@@ -702,6 +739,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     network: LAN,
                     payload_bytes: m.request_bytes,
                 },
+                metrics: *metrics,
                 seed,
             };
             let result = cluster::run(&config);
@@ -771,6 +809,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             rate_per_replica,
             duration_s,
             max_batch,
+            metrics,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -798,10 +837,13 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         let router = *policy;
                         let duration = *duration_s;
                         let payload = m.request_bytes;
+                        let mode = *metrics;
                         let label = format!("{n}x{name}@{:.1}ms", wait_s * 1e3);
                         plan.push(label, move |cell_seed| ClusterConfig {
-                            arrivals: generate(&Pattern::Poisson { rate }, duration, cell_seed),
-                            closed_loop: None,
+                            workload: Workload::Stream {
+                                pattern: Pattern::Poisson { rate },
+                                seed: cell_seed,
+                            },
                             duration_s: duration,
                             replicas: (0..n).map(|_| template.clone()).collect(),
                             router,
@@ -812,6 +854,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                                 network: LAN,
                                 payload_bytes: payload,
                             },
+                            metrics: mode,
                             seed: cell_seed,
                         });
                         axes.push((n, name.clone(), rate, wait_s));
@@ -859,6 +902,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             duration_s,
             max_batch,
             max_wait_s,
+            metrics,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -928,6 +972,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     network: LAN,
                     payload_bytes: payload,
                 },
+                metrics: *metrics,
                 seed,
             };
             let result = multimodel::run(&config);
@@ -1062,6 +1107,81 @@ autoscale:
         assert!(r.metric("scale_ups").unwrap() >= 1.0);
         assert!(r.metric("burst_p99_ms").unwrap() >= r.metric("p50_ms").unwrap());
         assert!(r.metric("throughput_rps").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scale_knob_parses_and_rejects_bad_values() {
+        let exact = JobSpec::parse_yaml("task: cluster_sim\nmodel: resnet50\n").unwrap();
+        match exact.kind {
+            JobKind::ClusterSim { metrics, .. } => assert_eq!(metrics, MetricsMode::Exact),
+            k => panic!("{k:?}"),
+        }
+        let sketch =
+            JobSpec::parse_yaml("task: cluster_sim\nmodel: resnet50\nscale: sketch\n").unwrap();
+        match sketch.kind {
+            JobKind::ClusterSim { metrics, .. } => {
+                assert_eq!(metrics, MetricsMode::Sketch { alpha: 0.01 })
+            }
+            k => panic!("{k:?}"),
+        }
+        let tuned = JobSpec::parse_yaml(
+            "task: sweep\nscale: sketch\nsketch_alpha: 0.05\nrouters: [round-robin]\nreplicas: [1]\n",
+        )
+        .unwrap();
+        match tuned.kind {
+            JobKind::Sweep { metrics, .. } => {
+                assert_eq!(metrics, MetricsMode::Sketch { alpha: 0.05 })
+            }
+            k => panic!("{k:?}"),
+        }
+        assert!(JobSpec::parse_yaml("task: cluster_sim\nscale: turbo\n").is_err());
+        assert!(
+            JobSpec::parse_yaml("task: cluster_sim\nscale: sketch\nsketch_alpha: 0\n").is_err()
+        );
+        assert!(
+            JobSpec::parse_yaml("task: cluster_sim\nscale: sketch\nsketch_alpha: 1.5\n").is_err()
+        );
+    }
+
+    #[test]
+    fn cluster_sim_sketch_scale_matches_exact_ledger() {
+        // The `scale` knob changes only metric summarization: the
+        // simulation itself (issued/dropped counts, throughput window) is
+        // identical, sketch percentiles track exact within alpha, and the
+        // exact-only burst window metric is omitted rather than wrong.
+        let exact_spec = JobSpec::parse_yaml(CLUSTER_SUBMISSION).unwrap();
+        let sketch_yaml = format!("{CLUSTER_SUBMISSION}scale: sketch\n");
+        let sketch_spec = JobSpec::parse_yaml(&sketch_yaml).unwrap();
+        let e = &execute(&exact_spec, 3, 1.0, 1).unwrap()[0];
+        let s = &execute(&sketch_spec, 3, 1.0, 1).unwrap()[0];
+        assert_eq!(e.metric("issued"), s.metric("issued"));
+        assert_eq!(e.metric("dropped"), s.metric("dropped"));
+        assert_eq!(e.metric("replicas_max"), s.metric("replicas_max"));
+        assert_eq!(
+            e.metric("throughput_rps").unwrap().to_bits(),
+            s.metric("throughput_rps").unwrap().to_bits()
+        );
+        for key in ["p50_ms", "p99_ms"] {
+            let (ev, sv) = (e.metric(key).unwrap(), s.metric(key).unwrap());
+            assert!((sv / ev - 1.0).abs() <= 0.021, "{key}: exact {ev} sketch {sv}");
+        }
+        assert!(e.metric("burst_p99_ms").is_some());
+        assert!(s.metric("burst_p99_ms").is_none(), "window metrics are exact-only");
+    }
+
+    #[test]
+    fn multimodel_sketch_scale_keeps_per_stream_ledgers() {
+        let yaml = format!("{MULTIMODEL_SUBMISSION}scale: sketch\n");
+        let spec = JobSpec::parse_yaml(&yaml).unwrap();
+        let exact = execute(&JobSpec::parse_yaml(MULTIMODEL_SUBMISSION).unwrap(), 3, 1.0, 1)
+            .unwrap();
+        let sketch = execute(&spec, 3, 1.0, 1).unwrap();
+        assert_eq!(exact.len(), sketch.len());
+        for (e, s) in exact.iter().zip(&sketch) {
+            assert_eq!(e.model, s.model);
+            assert_eq!(e.metric("issued"), s.metric("issued"));
+            assert_eq!(e.metric("dropped"), s.metric("dropped"));
+        }
     }
 
     #[test]

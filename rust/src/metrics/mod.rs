@@ -14,6 +14,41 @@
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 
+/// How a run's latency distributions are stored.
+///
+/// `Exact` keeps every sample (`Vec<f64>` per summary) — bit-exact
+/// percentiles, O(completed) memory; the right choice up to ~10⁶ requests
+/// and the mode every golden test pins. `Sketch` bounds memory with
+/// DDSketch-style log buckets (`Summary::sketch`): percentiles within
+/// relative error `alpha`, memory constant in request count — the mode
+/// that makes 10⁸-request streaming runs fit in a flat RSS. Counts, sums,
+/// means, min/max, and p0/p100 stay exact in both modes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum MetricsMode {
+    #[default]
+    Exact,
+    Sketch {
+        /// Relative-error bound for quantiles, e.g. 0.01 for 1%.
+        alpha: f64,
+    },
+}
+
+impl MetricsMode {
+    /// A fresh latency summary in this mode.
+    pub fn summary(&self) -> Summary {
+        match self {
+            MetricsMode::Exact => Summary::new(),
+            MetricsMode::Sketch { alpha } => Summary::sketch(*alpha),
+        }
+    }
+
+    /// True when per-sample side tables (windowed-latency pairs, batch-size
+    /// sequences) must not be materialized.
+    pub fn is_bounded(&self) -> bool {
+        matches!(self, MetricsMode::Sketch { .. })
+    }
+}
+
 /// The five pipeline stages of Fig 4, in order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
@@ -156,15 +191,20 @@ impl TraceStore {
 }
 
 /// Aggregated metrics over a benchmark run.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct Collector {
     pub e2e: Summary,
     /// Per-stage latency summaries, indexed by [`Stage::idx`]; read via
     /// [`Collector::stage`].
     per_stage: [Summary; 5],
     /// (arrival_s, e2e_s) per completed request, in ingest order — feeds
-    /// windowed tail analysis (burst-window p99, recovery curves).
+    /// windowed tail analysis (burst-window p99, recovery curves). Empty
+    /// in bounded ([`MetricsMode::Sketch`]) mode: the side table is
+    /// O(completed) and would defeat the flat-RSS guarantee.
     pub arrival_e2e: Vec<(f64, f64)>,
+    /// True when built with [`MetricsMode::Sketch`]: per-sample side
+    /// tables are suppressed.
+    bounded: bool,
     pub completed: u64,
     pub dropped: u64,
     pub first_arrival_s: f64,
@@ -172,8 +212,27 @@ pub struct Collector {
 }
 
 impl Collector {
+    /// Exact collector (every sample retained).
     pub fn new() -> Self {
         Collector { first_arrival_s: f64::INFINITY, ..Default::default() }
+    }
+
+    /// Collector in the given [`MetricsMode`]. Sketch mode bounds memory:
+    /// latency summaries use the quantile sketch and the per-completion
+    /// `arrival_e2e` side table stays empty.
+    pub fn with_mode(mode: MetricsMode) -> Self {
+        Collector {
+            e2e: mode.summary(),
+            per_stage: std::array::from_fn(|_| mode.summary()),
+            bounded: mode.is_bounded(),
+            first_arrival_s: f64::INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// True when built with [`MetricsMode::Sketch`].
+    pub fn is_bounded(&self) -> bool {
+        self.bounded
     }
 
     pub fn ingest(&mut self, trace: &RequestTrace) {
@@ -183,7 +242,9 @@ impl Collector {
         }
         self.completed += 1;
         self.e2e.record(trace.e2e_s());
-        self.arrival_e2e.push((trace.arrival_s, trace.e2e_s()));
+        if !self.bounded {
+            self.arrival_e2e.push((trace.arrival_s, trace.e2e_s()));
+        }
         for (i, summary) in self.per_stage.iter_mut().enumerate() {
             if trace.recorded & (1 << i) != 0 {
                 summary.record(trace.stage_s[i]);
@@ -200,7 +261,9 @@ impl Collector {
 
     /// End-to-end latency summary restricted to requests that *arrived*
     /// within [lo_s, hi_s) — the burst-window / recovery-window view the
-    /// autoscaling figures report.
+    /// autoscaling figures report. Requires the exact mode: in bounded
+    /// mode the per-completion table is not kept, so the returned summary
+    /// is empty (callers that need windowed tails run exact).
     pub fn e2e_in_window(&self, lo_s: f64, hi_s: f64) -> Summary {
         let mut s = Summary::new();
         for &(arrival, e2e) in &self.arrival_e2e {
@@ -258,24 +321,36 @@ impl Collector {
         h
     }
 
-    /// Fold another collector into this one. Exact, not approximate: raw
-    /// samples are concatenated, so percentiles of the merged collector
-    /// equal percentiles over the union of the inputs.
+    /// Fold another collector into this one, borrowing `other`. Thin
+    /// convenience over [`Collector::absorb`]: clones `other` once and
+    /// delegates, so there is exactly one buffer copy (the clone) instead
+    /// of the former per-element `samples()`/`extend` path, which rebuilt
+    /// every sample vector a second time — doubling peak memory exactly
+    /// when merging is hottest. Prefer `absorb` when you can give up
+    /// ownership: it copies nothing at all.
+    ///
+    /// Merge semantics by mode are `absorb`'s: exact + exact concatenates
+    /// raw samples (percentiles of the union, bit-exact); sketch + sketch
+    /// adds bucket counters (bounded memory, error stays ≤ α); a sketch
+    /// merged into a *non-empty* exact collector panics (samples cannot be
+    /// reconstructed from buckets).
     pub fn merge(&mut self, other: &Collector) {
-        self.e2e.extend(other.e2e.samples());
-        for (dst, src) in self.per_stage.iter_mut().zip(&other.per_stage) {
-            dst.extend(src.samples());
-        }
-        self.arrival_e2e.extend_from_slice(&other.arrival_e2e);
-        self.completed += other.completed;
-        self.dropped += other.dropped;
-        self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
-        self.last_completion_s = self.last_completion_s.max(other.last_completion_s);
+        self.absorb(other.clone());
     }
 
-    /// Move-based [`Collector::merge`]: consumes `other` and appends its
-    /// sample buffers instead of copying them element by element (the
-    /// first absorb into an empty collector takes the buffers wholesale).
+    /// Move-based merge: consumes `other` and appends its sample buffers
+    /// instead of copying them element by element (the first absorb into
+    /// an empty collector takes the buffers wholesale).
+    ///
+    /// Mode semantics (see [`Summary::absorb`] for the full matrix):
+    /// exact ← exact concatenates raw samples, so percentiles of the
+    /// merged collector equal percentiles over the union of the inputs —
+    /// exact, not approximate. Sketch ← sketch adds bucket counters
+    /// (deterministic, commutative, error bound α preserved across
+    /// chains); both sides must share the same α. An empty exact
+    /// collector absorbing a sketch becomes a sketch (fan-in aggregators
+    /// adopt the mode of their cells); a *non-empty* exact collector
+    /// absorbing a sketch panics.
     pub fn absorb(&mut self, other: Collector) {
         self.e2e.absorb(other.e2e);
         for (dst, src) in self.per_stage.iter_mut().zip(other.per_stage) {
@@ -286,6 +361,7 @@ impl Collector {
         } else {
             self.arrival_e2e.extend(other.arrival_e2e);
         }
+        self.bounded |= other.bounded;
         self.completed += other.completed;
         self.dropped += other.dropped;
         self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
@@ -306,39 +382,64 @@ pub struct ReplicaMetrics {
     /// Busy-fraction utilization — what DCGM/nvidia-smi report.
     pub busy_timeline: UtilizationTimeline,
     /// Completed batch sizes on this replica; private so every append
-    /// goes through [`ReplicaMetrics::record_batch`] and the running sum
-    /// stays exact. Read via [`ReplicaMetrics::batch_sizes`].
+    /// goes through [`ReplicaMetrics::record_batch`] and the running
+    /// count/sum stay exact. Read via [`ReplicaMetrics::batch_sizes`].
+    /// Kept empty in bounded mode (the count/sum counters still track).
     batch_sizes: Vec<usize>,
+    /// Number of completed batches. Counted separately from the vector so
+    /// bounded mode can drop the O(batches) sequence and keep exact means.
+    batches: u64,
     batch_sum: u64,
+    bounded: bool,
 }
 
 impl ReplicaMetrics {
     pub fn new(horizon_s: f64, bucket_s: f64) -> Self {
+        Self::with_mode(horizon_s, bucket_s, MetricsMode::Exact)
+    }
+
+    /// Replica metrics in the given [`MetricsMode`]. Sketch mode keeps the
+    /// latency sketches plus exact batch count/sum, but not the
+    /// per-dispatch batch-size sequence.
+    pub fn with_mode(horizon_s: f64, bucket_s: f64, mode: MetricsMode) -> Self {
         ReplicaMetrics {
-            collector: Collector::new(),
+            collector: Collector::with_mode(mode),
             timeline: UtilizationTimeline::new(horizon_s, bucket_s),
             busy_timeline: UtilizationTimeline::new(horizon_s, bucket_s),
             batch_sizes: Vec::new(),
+            batches: 0,
             batch_sum: 0,
+            bounded: mode.is_bounded(),
         }
     }
 
-    /// Record one completed batch (keeps the running sum for O(1) means).
+    /// Record one completed batch (keeps running count/sum for O(1) means).
     pub fn record_batch(&mut self, size: usize) {
-        self.batch_sizes.push(size);
+        if !self.bounded {
+            self.batch_sizes.push(size);
+        }
+        self.batches += 1;
         self.batch_sum += size as u64;
     }
 
-    /// Completed batch sizes, in dispatch order.
+    /// Completed batch sizes, in dispatch order. Empty in bounded mode
+    /// (use [`ReplicaMetrics::batches`]/[`ReplicaMetrics::batch_sum`]).
     pub fn batch_sizes(&self) -> &[usize] {
         &self.batch_sizes
     }
 
-    /// Move the batch-size vector out (resets it and the running sum) —
-    /// used by the single-server wrapper to hand ownership to SimResult.
+    /// Move the batch-size vector out (resets it and the running counters)
+    /// — used by the single-server wrapper to hand ownership to SimResult.
     pub fn take_batch_sizes(&mut self) -> Vec<usize> {
         self.batch_sum = 0;
+        self.batches = 0;
         std::mem::take(&mut self.batch_sizes)
+    }
+
+    /// Number of completed batches. O(1): maintained at record, exact in
+    /// both modes.
+    pub fn batches(&self) -> u64 {
+        self.batches
     }
 
     /// Sum of all completed batch sizes. O(1): maintained at record.
@@ -346,12 +447,13 @@ impl ReplicaMetrics {
         self.batch_sum
     }
 
-    /// Mean completed batch size. O(1): uses the maintained sum.
+    /// Mean completed batch size. O(1): uses the maintained counters,
+    /// exact in both modes.
     pub fn mean_batch(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        if self.batches == 0 {
             return 0.0;
         }
-        self.batch_sum as f64 / self.batch_sizes.len() as f64
+        self.batch_sum as f64 / self.batches as f64
     }
 }
 
@@ -369,7 +471,13 @@ pub struct ModelMetrics {
 
 impl ModelMetrics {
     pub fn new(name: impl Into<String>) -> Self {
-        ModelMetrics { name: name.into(), issued: 0, collector: Collector::new() }
+        Self::with_mode(name, MetricsMode::Exact)
+    }
+
+    /// Per-model metrics in the given [`MetricsMode`] — sketch mode keeps
+    /// thousand-model Zipf runs at bounded memory per model.
+    pub fn with_mode(name: impl Into<String>, mode: MetricsMode) -> Self {
+        ModelMetrics { name: name.into(), issued: 0, collector: Collector::with_mode(mode) }
     }
 
     /// Whether this stream's ledger balances exactly.
@@ -827,6 +935,69 @@ mod tests {
         m.record_batch(4);
         assert!((m.mean_batch() - 3.0).abs() < 1e-12);
         assert_eq!(m.batch_sum(), 6);
+        assert_eq!(m.batches(), 2);
+        assert_eq!(m.batch_sizes(), &[2, 4]);
+    }
+
+    #[test]
+    fn bounded_collector_skips_side_tables() {
+        let mode = MetricsMode::Sketch { alpha: 0.01 };
+        let mut c = Collector::with_mode(mode);
+        for i in 0..100 {
+            let mut t = RequestTrace::new(i, i as f64);
+            t.record_stage(Stage::Inference, 0.01 + 1e-4 * i as f64);
+            c.ingest(&t);
+        }
+        assert!(c.is_bounded());
+        assert_eq!(c.completed, 100);
+        assert!(c.arrival_e2e.is_empty(), "bounded mode must not grow the side table");
+        assert_eq!(c.e2e_in_window(0.0, 100.0).len(), 0);
+        assert_eq!(c.e2e.len(), 100);
+        assert!(c.e2e.is_sketch());
+        // Extremes + counts are still exact.
+        assert!((c.e2e.percentile(100.0) - (0.01 + 1e-4 * 99.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_replica_metrics_keep_exact_batch_counters() {
+        let mut m = ReplicaMetrics::with_mode(10.0, 1.0, MetricsMode::Sketch { alpha: 0.01 });
+        m.record_batch(3);
+        m.record_batch(5);
+        assert!(m.batch_sizes().is_empty(), "bounded mode drops the sequence");
+        assert_eq!(m.batches(), 2);
+        assert_eq!(m.batch_sum(), 8);
+        assert!((m.mean_batch() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_collectors_absorb_deterministically() {
+        let mode = MetricsMode::Sketch { alpha: 0.01 };
+        let build = |ids: std::ops::Range<u64>| {
+            let mut c = Collector::with_mode(mode);
+            for i in ids {
+                let mut t = RequestTrace::new(i, i as f64);
+                t.record_stage(Stage::Inference, 0.005 + 1e-4 * (i % 37) as f64);
+                c.ingest(&t);
+            }
+            c
+        };
+        let mut ab = Collector::new();
+        ab.absorb(build(0..500));
+        ab.absorb(build(500..900));
+        let mut ba = Collector::new();
+        ba.absorb(build(500..900));
+        ba.absorb(build(0..500));
+        assert!(ab.is_bounded() && ba.is_bounded());
+        assert_eq!(ab.completed, 900);
+        // Bucket merges commute: same fingerprint either way.
+        assert_eq!(ab.fingerprint(), ba.fingerprint());
+    }
+
+    #[test]
+    fn model_metrics_with_mode_is_bounded() {
+        let m = ModelMetrics::with_mode("m0", MetricsMode::Sketch { alpha: 0.02 });
+        assert!(m.collector.is_bounded());
+        assert!(m.conserved());
     }
 
     #[test]

@@ -97,6 +97,14 @@ pub struct RequestPath {
 }
 
 impl RequestPath {
+    /// PRNG steps one [`RequestPath::sample`] call consumes, always:
+    /// processors are deterministic and the network jitter is one
+    /// `lognormal` draw (two steps). The streaming serving engines use
+    /// this to fast-forward their loop-phase RNG past the issue-phase
+    /// draws with `Pcg64::advance` instead of materializing the workload
+    /// (pinned by a test below).
+    pub const RNG_STEPS_PER_SAMPLE: u64 = 2;
+
     pub fn local(processors: Processors) -> RequestPath {
         RequestPath { processors, network: LAN, payload_bytes: 1_000 }
     }
@@ -155,6 +163,28 @@ mod tests {
         assert_eq!(pre, 2.5e-3);
         assert_eq!(post, 0.3e-3);
         assert!(tx > 0.0);
+    }
+
+    #[test]
+    fn sample_consumes_exactly_the_advertised_rng_steps() {
+        // Every network (jitter sigma 0.1 .. 0.5) and payload must cost the
+        // same fixed step count, or the engines' loop-RNG fast-forward
+        // desynchronizes from the materialized draw order.
+        for network in NETWORKS {
+            for payload in [0u64, 1_000, 5_000_000] {
+                let p = RequestPath { processors: Processors::image(), network: *network, payload_bytes: payload };
+                let mut sampled = Pcg64::seeded(99);
+                p.sample(&mut sampled);
+                let mut jumped = Pcg64::seeded(99);
+                jumped.advance(RequestPath::RNG_STEPS_PER_SAMPLE as u128);
+                assert_eq!(
+                    sampled.next_u64(),
+                    jumped.next_u64(),
+                    "{} payload {payload}",
+                    network.name
+                );
+            }
+        }
     }
 
     #[test]

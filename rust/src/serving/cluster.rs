@@ -35,6 +35,19 @@
 //! (plus routing-tier rejections, which belong to no replica), so it is
 //! the exact union of everything the run observed. The [`ScaleTimeline`]
 //! records every replica-lifecycle transition.
+//!
+//! Streaming workloads: the engine pulls arrivals lazily from
+//! [`Workload::source`] — an arrival is injected into the event heap only
+//! once simulated time reaches it — so a run over 10⁸ requests holds
+//! O(in-flight) traces, not O(horizon). Bit-identity with the old
+//! materialize-then-simulate engine is preserved by (a) splitting the
+//! seeded RNG into an issue-phase generator (arrival pipeline draws, in
+//! arrival order) and a loop-phase clone fast-forwarded past the
+//! `RequestPath::RNG_STEPS_PER_SAMPLE × N` issue draws via
+//! [`Pcg64::advance`], and (b) partitioning event-sequence tie-breakers by
+//! scheduling phase (see `serving::des`). With
+//! [`MetricsMode::Sketch`], latency summaries drop to bounded-memory
+//! quantile sketches and the whole run is flat-RSS in the request count.
 
 use super::autoscale::{Autoscaler, ScaleDecision, ScaleSignal};
 use super::backends::{DynamicBatching, Software};
@@ -43,11 +56,12 @@ use super::des::{self, push, EventBox, Key};
 use super::router::{Router, RouterPolicy};
 use super::service::ServiceModel;
 use crate::metrics::{
-    Collector, ReplicaMetrics, RequestTrace, ScaleEventKind, ScaleTimeline, Stage, TraceStore,
+    Collector, MetricsMode, ReplicaMetrics, RequestTrace, ScaleEventKind, ScaleTimeline, Stage,
+    TraceStore,
 };
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
-use crate::workload::Arrival;
+use crate::workload::Workload;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -87,12 +101,11 @@ pub struct ReplicaConfig {
 /// Cluster simulation configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    /// Open-loop arrivals (ignored when `closed_loop` is set).
-    pub arrivals: Vec<Arrival>,
-    /// Closed-loop client count: each client issues its next request when
-    /// the previous completes — or is rejected (see
-    /// [`REJECT_RETRY_BACKOFF_S`]).
-    pub closed_loop: Option<usize>,
+    /// What drives the run: a pre-materialized arrival list, a streaming
+    /// pattern (never materialized — O(1) generator memory), or a closed
+    /// loop of clients, each issuing its next request when the previous
+    /// completes — or is rejected (see [`REJECT_RETRY_BACKOFF_S`]).
+    pub workload: Workload,
     /// Simulated duration; no new requests issued past this.
     pub duration_s: f64,
     /// The initial fleet (routable at t = 0 unless `cold_start` is set).
@@ -106,6 +119,11 @@ pub struct ClusterConfig {
     /// held at the routing tier. `None` starts the fleet warm.
     pub cold_start: Option<u64>,
     pub path: RequestPath,
+    /// Latency-metric backend: [`MetricsMode::Exact`] keeps every sample
+    /// (bit-identical to the historical collector); [`MetricsMode::Sketch`]
+    /// bounds metric memory for horizon-scale runs. Simulation behaviour
+    /// (routing, batching, drops, event count) is identical in both modes.
+    pub metrics: MetricsMode,
     pub seed: u64,
 }
 
@@ -139,9 +157,10 @@ impl ClusterResult {
     }
 
     /// Mean completed batch size across all replicas. O(replicas): uses
-    /// the sums maintained at record time, not a rescan of every batch.
+    /// the counters maintained at record time (exact in both metric
+    /// modes), not a rescan of every batch.
     pub fn mean_batch(&self) -> f64 {
-        let n: usize = self.replicas.iter().map(|r| r.batch_sizes().len()).sum();
+        let n: u64 = self.replicas.iter().map(|r| r.batches()).sum();
         if n == 0 {
             return 0.0;
         }
@@ -196,7 +215,7 @@ struct Replica {
 }
 
 impl Replica {
-    fn new(rc: &ReplicaConfig, state: ReplicaState, horizon_s: f64) -> Replica {
+    fn new(rc: &ReplicaConfig, state: ReplicaState, horizon_s: f64, mode: MetricsMode) -> Replica {
         let (policy, penalty_s) = effective(rc.policy, rc.software);
         Replica {
             batcher: Batcher::new(policy),
@@ -209,7 +228,7 @@ impl Replica {
             queued: 0,
             in_flight: Vec::new(),
             busy_s_since_eval: 0.0,
-            metrics: ReplicaMetrics::new(horizon_s, 0.5),
+            metrics: ReplicaMetrics::with_mode(horizon_s, 0.5, mode),
         }
     }
 
@@ -291,7 +310,16 @@ fn count_state(replicas: &[Replica], state: ReplicaState) -> usize {
 /// Run the cluster simulation.
 pub fn run(config: &ClusterConfig) -> ClusterResult {
     assert!(!config.replicas.is_empty(), "cluster needs at least one replica");
-    let mut rng = Pcg64::seeded(config.seed);
+    let closed_loop = config.workload.closed_loop_clients();
+    // O(1)-memory counting pre-pass over the source: how many requests the
+    // issue phase will draw. The loop-phase RNG is the seeded generator
+    // fast-forwarded past those draws, so lazily interleaving issue-phase
+    // draws with loop-phase draws reproduces the materialized engine's
+    // single-sequence draw order bit for bit.
+    let n_issue = config.workload.count_in(config.duration_s);
+    let mut rng_issue = Pcg64::seeded(config.seed);
+    let mut rng_loop = rng_issue.clone();
+    rng_loop.advance(RequestPath::RNG_STEPS_PER_SAMPLE as u128 * n_issue as u128);
     let mut router = Router::new(config.router);
     let horizon_s = config.duration_s.max(1.0) * 1.5;
     let cold = config.cold_start.is_some();
@@ -299,7 +327,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     let mut replicas: Vec<Replica> = config
         .replicas
         .iter()
-        .map(|rc| Replica::new(rc, initial_state, horizon_s))
+        .map(|rc| Replica::new(rc, initial_state, horizon_s, config.metrics))
         .collect();
     let mut scaler = config.autoscale.clone().map(Autoscaler::new);
     if let Some(s) = &scaler {
@@ -311,26 +339,42 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     let mut scale = ScaleTimeline::new(if cold { 0 } else { replicas.len() });
 
     let mut heap: Heap = BinaryHeap::new();
-    let mut seq = 0u64;
+    // Sequence numbers partition by scheduling phase (see `serving::des`):
+    // setup events from 0, arrivals from ARRIVAL_SEQ_BASE in arrival
+    // order, loop-scheduled events from LOOP_SEQ_BASE — the same
+    // tie-break order the materialized engine produced with one counter.
+    let mut setup_seq = 0u64;
+    let mut arrival_seq = des::ARRIVAL_SEQ_BASE;
+    let mut seq = des::LOOP_SEQ_BASE;
     // Slab trace store: slot indices are dense and reused after
     // completion, so the lifecycle is allocation-free at steady state.
-    let expected = config.arrivals.len() + config.closed_loop.unwrap_or(0);
-    let mut traces = TraceStore::with_capacity(expected.max(64));
+    // Live traces scale with in-flight concurrency (queued + in service +
+    // inside the pre/tx pipeline window), not with the horizon, so
+    // streaming runs need only a small slab regardless of request count.
+    let expected = match &config.workload {
+        Workload::Arrivals(v) => v.len(),
+        Workload::ClosedLoop { clients } => *clients,
+        Workload::Stream { .. } => 0,
+    };
+    let mut traces = TraceStore::with_capacity(expected.clamp(64, 1 << 16));
     let mut next_id = 0u64;
     // Cluster-level collector, fed directly at completion/rejection time —
     // the end-of-run merge that copied every raw sample is gone (§Perf,
     // PERF.md).
-    let mut collector = Collector::new();
+    let mut collector = Collector::with_mode(config.metrics);
 
     // Cold initial fleet: every replica schedules its readiness.
     if let Some(weight_bytes) = config.cold_start {
         for (i, rc) in config.replicas.iter().enumerate() {
             let coldstart = rc.software.coldstart_s(weight_bytes);
-            push(&mut heap, coldstart, Event::ReplicaReady { replica: i }, &mut seq);
+            push(&mut heap, coldstart, Event::ReplicaReady { replica: i }, &mut setup_seq);
         }
     }
 
     // Issue one request: samples its pipeline stages and schedules Enqueue.
+    // Issue-phase callers (lazy arrival injection) pass `rng_issue` +
+    // `arrival_seq`; loop-phase callers (closed-loop reissues) pass
+    // `rng_loop` + the loop counter.
     let mut issue = |arrival_s: f64,
                      heap: &mut Heap,
                      traces: &mut TraceStore,
@@ -347,24 +391,17 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         push(heap, enqueue_at, Event::Enqueue { slot }, seq);
     };
 
-    // Seed initial arrivals.
-    if let Some(clients) = config.closed_loop {
-        for _ in 0..clients {
-            issue(0.0, &mut heap, &mut traces, &mut rng, &mut seq);
-        }
-    } else {
-        for a in &config.arrivals {
-            if a.time_s < config.duration_s {
-                issue(a.time_s, &mut heap, &mut traces, &mut rng, &mut seq);
-            }
-        }
-    }
+    // Lazy arrival stream: `pending` is the next arrival not yet injected.
+    let mut source = config.workload.source(config.duration_s);
+    let mut pending = source.next();
 
-    // First autoscaler evaluation one interval in.
+    // First autoscaler evaluation one interval in. The materialized engine
+    // scheduled this right after seeding all N arrivals, so its tie-break
+    // slot is pinned just past the arrival range.
     if let Some(s) = &scaler {
         let interval = s.config().eval_interval_s;
         if interval < config.duration_s {
-            push(&mut heap, interval, Event::ScaleEval, &mut seq);
+            des::push_at(&mut heap, interval, Event::ScaleEval, des::ARRIVAL_SEQ_BASE + n_issue);
         }
     }
 
@@ -379,7 +416,26 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     let mut held: Vec<u32> = Vec::new();
     let mut events = 0u64;
 
-    while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
+    loop {
+        // Inject every arrival due at or before the next event (all of
+        // them if the heap is idle). An arrival's Enqueue fires at
+        // `arrival + pre + tx >= arrival`, so injecting once simulated
+        // time reaches the arrival instant is always early enough — and
+        // injection order is arrival order, which keeps both the
+        // issue-phase RNG draw order and the arrival-range sequence
+        // numbers identical to the materialized engine's upfront loop.
+        while let Some(a) = pending {
+            let due = match heap.peek() {
+                Some(Reverse((Key(t, _), _))) => a.time_s <= *t,
+                None => true,
+            };
+            if !due {
+                break;
+            }
+            issue(a.time_s, &mut heap, &mut traces, &mut rng_issue, &mut arrival_seq);
+            pending = source.next();
+        }
+        let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() else { break };
         events += 1;
         match event {
             Event::Enqueue { slot } => {
@@ -394,12 +450,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         let mut trace = traces.remove(slot);
                         trace.dropped = true;
                         collector.ingest(&trace);
-                        if config.closed_loop.is_some() && now < config.duration_s {
+                        if closed_loop.is_some() && now < config.duration_s {
                             issue(
                                 now + REJECT_RETRY_BACKOFF_S,
                                 &mut heap,
                                 &mut traces,
-                                &mut rng,
+                                &mut rng_loop,
                                 &mut seq,
                             );
                         }
@@ -415,12 +471,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     trace.dropped = true;
                     replicas[ri].metrics.collector.ingest(&trace);
                     collector.ingest(&trace);
-                    if config.closed_loop.is_some() && now < config.duration_s {
+                    if closed_loop.is_some() && now < config.duration_s {
                         issue(
                             now + REJECT_RETRY_BACKOFF_S,
                             &mut heap,
                             &mut traces,
-                            &mut rng,
+                            &mut rng_loop,
                             &mut seq,
                         );
                     }
@@ -486,7 +542,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     let (slot, started, enqueued) = replicas[ri].in_flight[k];
                     let mut trace = traces.remove(slot);
                     trace.record_stage(Stage::Inference, now - started + overhead);
-                    let (_, _, post) = config.path.sample(&mut rng);
+                    let (_, _, post) = config.path.sample(&mut rng_loop);
                     trace.record_stage(Stage::PostProcess, post);
                     // Latency-aware routing signal: replica residence time
                     // (queue wait + service + overhead), what a
@@ -496,8 +552,8 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     collector.ingest(&trace);
                     // Closed loop: this client's next request enters now
                     // (and is routed fresh at its enqueue time).
-                    if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
-                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
+                    if closed_loop.is_some() && trace.completed_s < config.duration_s {
+                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng_loop, &mut seq);
                     }
                 }
                 replicas[ri].in_flight.clear();
@@ -576,7 +632,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         let cfg = scaler.config();
                         let coldstart = cfg.template.software.coldstart_s(cfg.weight_bytes);
                         let ri = replicas.len();
-                        replicas.push(Replica::new(&cfg.template, ReplicaState::Warming, horizon_s));
+                        replicas.push(Replica::new(
+                            &cfg.template,
+                            ReplicaState::Warming,
+                            horizon_s,
+                            config.metrics,
+                        ));
                         outstanding.push(0);
                         scale.record(now, ScaleEventKind::AddRequested, ri, active);
                         push(&mut heap, now + coldstart, Event::ReplicaReady { replica: ri }, &mut seq);
@@ -614,6 +675,15 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     // Every issued trace was completed or rejected; the slab must be
     // empty or the conservation invariant is broken upstream.
     debug_assert!(traces.is_empty(), "trace leak: {} live traces at end of run", traces.len());
+    // The loop drains the source before exiting, and the counting
+    // pre-pass must agree with what the source actually yielded (the
+    // loop-phase RNG offset depends on it).
+    debug_assert!(pending.is_none(), "arrivals left uninjected at end of run");
+    debug_assert_eq!(
+        arrival_seq - des::ARRIVAL_SEQ_BASE,
+        n_issue,
+        "count_in pre-pass disagrees with the arrivals the source yielded"
+    );
 
     // Single source of truth for drops: the cluster collector ingested
     // every rejected trace exactly once (replica queue or routing tier).
@@ -650,14 +720,14 @@ mod tests {
 
     fn base(n: usize, rate: f64, duration: f64, router: RouterPolicy) -> ClusterConfig {
         ClusterConfig {
-            arrivals: generate(&Pattern::Poisson { rate }, duration, 11),
-            closed_loop: None,
+            workload: Workload::Arrivals(generate(&Pattern::Poisson { rate }, duration, 11)),
             duration_s: duration,
             replicas: (0..n).map(|_| replica(5.0)).collect(),
             router,
             autoscale: None,
             cold_start: None,
             path: RequestPath::local(Processors::none()),
+            metrics: MetricsMode::Exact,
             seed: 5,
         }
     }
@@ -665,7 +735,7 @@ mod tests {
     #[test]
     fn conservation_across_replicas() {
         let cfg = base(4, 200.0, 20.0, RouterPolicy::RoundRobin);
-        let n = cfg.arrivals.len() as u64;
+        let n = cfg.workload.count_in(20.0);
         let r = run(&cfg);
         assert_eq!(r.collector.completed + r.dropped, n);
         assert_eq!(r.issued, n);
@@ -767,8 +837,7 @@ mod tests {
     #[test]
     fn closed_loop_cluster_sustains_concurrency() {
         let mut cfg = base(2, 1.0, 10.0, RouterPolicy::LeastOutstanding);
-        cfg.arrivals = vec![];
-        cfg.closed_loop = Some(8);
+        cfg.workload = Workload::ClosedLoop { clients: 8 };
         let r = run(&cfg);
         // 8 clients over 2 replicas at ~4.2 ms effective service: thousands
         // of completions; every client's chain stays alive to the horizon.
@@ -803,7 +872,7 @@ mod tests {
         cfg.cold_start = Some(50_000_000);
         let coldstart = backends::TRIS.coldstart_s(50_000_000);
         assert!(coldstart > 0.5, "scenario needs a visible cold start, got {coldstart}");
-        let n = cfg.arrivals.len() as u64;
+        let n = cfg.workload.count_in(10.0);
         let r = run(&cfg);
         assert_eq!(r.collector.completed + r.dropped, n, "conservation across the hold");
         assert_eq!(r.dropped, 0, "held requests must not be dropped");
@@ -827,8 +896,7 @@ mod tests {
         // first request is held, the chains resume after warm-up, and
         // accounting stays exact.
         let mut cfg = base(2, 1.0, 15.0, RouterPolicy::LeastOutstanding);
-        cfg.arrivals = vec![];
-        cfg.closed_loop = Some(4);
+        cfg.workload = Workload::ClosedLoop { clients: 4 };
         cfg.cold_start = Some(10_000_000);
         let r = run(&cfg);
         assert_eq!(r.collector.completed + r.dropped, r.issued);
@@ -846,11 +914,18 @@ mod tests {
         // 1 replica at ~200 rps capacity; a 600 rps burst forces scale-up,
         // and the post-burst lull forces drain-on-remove back toward min.
         let mut cfg = base(1, 60.0, 60.0, RouterPolicy::LeastOutstanding);
-        cfg.arrivals = generate(
-            &Pattern::Spike { base_rate: 60.0, burst_rate: 600.0, start_s: 10.0, duration_s: 10.0 },
-            60.0,
-            21,
-        );
+        // Streamed, not materialized: the autoscaler path (ScaleEval seq
+        // pinning, warm-up ReplicaReady events) must hold under lazy
+        // injection too.
+        cfg.workload = Workload::Stream {
+            pattern: Pattern::Spike {
+                base_rate: 60.0,
+                burst_rate: 600.0,
+                start_s: 10.0,
+                duration_s: 10.0,
+            },
+            seed: 21,
+        };
         cfg.autoscale = Some(AutoscaleConfig {
             policy: ScalePolicy::QueueDepth {
                 up_per_replica: 6.0,
@@ -877,5 +952,143 @@ mod tests {
         // Retired replicas completed work and kept it (metrics preserved).
         let completed: u64 = r.replicas.iter().map(|m| m.collector.completed).sum();
         assert_eq!(completed, r.collector.completed);
+    }
+
+    #[test]
+    fn streaming_workload_bit_identical_to_materialized() {
+        // The tentpole guarantee: feeding the engine a lazy pattern stream
+        // produces the same run — to the last bit — as materializing the
+        // same pattern first. Covers plain serving, overload (drops), and
+        // a router that draws its own RNG.
+        let pattern = Pattern::Spike {
+            base_rate: 150.0,
+            burst_rate: 500.0,
+            start_s: 5.0,
+            duration_s: 5.0,
+        };
+        for router in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastOutstanding,
+            RouterPolicy::PowerOfTwoChoices { seed: 17 },
+        ] {
+            let mut materialized = base(3, 100.0, 20.0, router);
+            materialized.workload = Workload::Arrivals(generate(&pattern, 20.0, 77));
+            for rc in &mut materialized.replicas {
+                rc.max_queue = 48; // force some drops into the comparison
+            }
+            let mut streamed = materialized.clone();
+            streamed.workload = Workload::Stream { pattern: pattern.clone(), seed: 77 };
+            let (a, b) = (run(&materialized), run(&streamed));
+            assert_eq!(a.issued, b.issued, "{}", router.label());
+            assert_eq!(a.dropped, b.dropped, "{}", router.label());
+            assert_eq!(a.events, b.events, "{}", router.label());
+            assert_eq!(a.collector.completed, b.collector.completed);
+            assert_eq!(a.collector.fingerprint(), b.collector.fingerprint(), "{}", router.label());
+            for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(ra.batch_sizes(), rb.batch_sizes(), "{}", router.label());
+            }
+            for q in [50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    a.collector.e2e.percentile(q).to_bits(),
+                    b.collector.e2e.percentile(q).to_bits(),
+                    "p{q} {}",
+                    router.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_autoscaled_run_bit_identical_to_materialized() {
+        // Same equivalence across scale events: warming replicas, the
+        // pinned initial ScaleEval slot, and drain-on-remove all happen
+        // with lazy injection active.
+        let pattern = Pattern::Spike {
+            base_rate: 60.0,
+            burst_rate: 600.0,
+            start_s: 10.0,
+            duration_s: 10.0,
+        };
+        let mut materialized = base(1, 60.0, 60.0, RouterPolicy::LeastOutstanding);
+        materialized.workload = Workload::Arrivals(generate(&pattern, 60.0, 21));
+        materialized.autoscale = Some(AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth {
+                up_per_replica: 6.0,
+                down_per_replica: 0.5,
+                cooldown_s: 1.0,
+            },
+            min_replicas: 1,
+            max_replicas: 6,
+            template: replica(5.0),
+            weight_bytes: 50_000_000,
+            eval_interval_s: 0.5,
+        });
+        let mut streamed = materialized.clone();
+        streamed.workload = Workload::Stream { pattern, seed: 21 };
+        let (a, b) = (run(&materialized), run(&streamed));
+        assert_eq!(a.issued, b.issued);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.collector.fingerprint(), b.collector.fingerprint());
+        assert_eq!(a.scale.events.len(), b.scale.events.len());
+        assert_eq!(a.replicas.len(), b.replicas.len());
+        assert_eq!(a.collector.e2e.percentile(99.0).to_bits(), b.collector.e2e.percentile(99.0).to_bits());
+    }
+
+    #[test]
+    fn closed_loop_source_is_single_truth_for_issued_counts() {
+        // Regression (satellite): the initial closed-loop wave comes from
+        // the workload source, not an engine-private loop — the streaming
+        // count pre-pass, the engine's issued ledger, and both closed-loop
+        // spellings must agree.
+        let mut cfg = base(2, 1.0, 10.0, RouterPolicy::LeastOutstanding);
+        cfg.workload = Workload::ClosedLoop { clients: 8 };
+        assert_eq!(cfg.workload.count_in(10.0), 8, "source must emit exactly the initial wave");
+        let r = run(&cfg);
+        assert!(r.issued > 8, "clients must reissue");
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
+
+        let mut via_pattern = cfg.clone();
+        via_pattern.workload =
+            Workload::Stream { pattern: Pattern::ClosedLoop { concurrency: 8 }, seed: 123 };
+        let r2 = run(&via_pattern);
+        assert_eq!(r.issued, r2.issued, "both closed-loop spellings drive the same run");
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+    }
+
+    #[test]
+    fn sketch_metrics_do_not_perturb_the_simulation() {
+        // MetricsMode changes how latency is summarized, never what the
+        // simulation does: counts, events, and batch ledgers stay exact,
+        // and sketch percentiles track the exact ones within alpha.
+        let mut exact = base(3, 300.0, 20.0, RouterPolicy::LeastOutstanding);
+        exact.workload =
+            Workload::Stream { pattern: Pattern::Poisson { rate: 300.0 }, seed: 31 };
+        let mut sketch = exact.clone();
+        let alpha = 0.01;
+        sketch.metrics = MetricsMode::Sketch { alpha };
+        let (e, s) = (run(&exact), run(&sketch));
+        assert_eq!(e.issued, s.issued);
+        assert_eq!(e.dropped, s.dropped);
+        assert_eq!(e.events, s.events);
+        assert_eq!(e.collector.completed, s.collector.completed);
+        assert_eq!(e.mean_batch(), s.mean_batch());
+        for (re, rs) in e.replicas.iter().zip(&s.replicas) {
+            assert_eq!(re.batches(), rs.batches());
+            assert_eq!(re.batch_sum(), rs.batch_sum());
+            assert!(rs.collector.is_bounded());
+            assert!(rs.batch_sizes().is_empty(), "bounded mode keeps no batch vector");
+        }
+        assert!(s.collector.is_bounded());
+        for q in [50.0, 95.0, 99.0] {
+            let (pe, ps) = (e.collector.e2e.percentile(q), s.collector.e2e.percentile(q));
+            assert!(
+                (ps - pe).abs() <= 2.0 * alpha * pe.abs(),
+                "p{q}: sketch {ps} vs exact {pe}"
+            );
+        }
+        // min/max are tracked exactly even in sketch mode.
+        assert_eq!(e.collector.e2e.min(), s.collector.e2e.min());
+        assert_eq!(e.collector.e2e.max(), s.collector.e2e.max());
     }
 }

@@ -12,6 +12,26 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+/// Sequence-number ranges partitioning the tie-break space. The streaming
+/// engines no longer schedule every arrival before the event loop starts,
+/// so a single shared counter would hand arrivals *loop-phase* sequence
+/// numbers and change tie-break outcomes versus the materialized engine.
+/// Instead each scheduling phase draws from its own range, chosen so the
+/// relative order between phases — setup (cold-start readiness) before
+/// arrivals before the initial autoscaler evaluation before loop-scheduled
+/// events — matches the order the old engine scheduled them in:
+///
+/// - setup events count from 0,
+/// - arrival enqueues count from [`ARRIVAL_SEQ_BASE`] in arrival order
+///   (the initial `ScaleEval`, which the old engine pushed right after
+///   seeding all N arrivals, sits at `ARRIVAL_SEQ_BASE + N`),
+/// - loop-scheduled events count from [`LOOP_SEQ_BASE`].
+///
+/// Bit-identical replays per seed across the engine rewrite rest on this
+/// partition; see the golden tests.
+pub(super) const ARRIVAL_SEQ_BASE: u64 = 1 << 32;
+pub(super) const LOOP_SEQ_BASE: u64 = 1 << 62;
+
 /// f64-ordered heap key; the sequence number breaks ties
 /// deterministically (FIFO among simultaneous events).
 #[derive(Debug, PartialEq, PartialOrd)]
@@ -54,6 +74,13 @@ pub(super) fn push<E: PartialEq>(heap: &mut Heap<E>, t: f64, e: E, seq: &mut u64
     *seq += 1;
 }
 
+/// Schedule `e` at time `t` with an explicit sequence number (no counter
+/// consumed) — for one-off events whose tie-break position is pinned by
+/// the range partition above rather than by a running counter.
+pub(super) fn push_at<E: PartialEq>(heap: &mut Heap<E>, t: f64, e: E, seq: u64) {
+    heap.push(Reverse((Key(t, seq), EventBox(e))));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +101,25 @@ mod tests {
             vec![(1.0, "first-at-1"), (1.0, "second-at-1"), (2.0, "late")],
             "time ascending; FIFO among simultaneous events"
         );
+    }
+
+    #[test]
+    fn seq_ranges_order_phases_at_equal_times() {
+        // At one instant: setup < arrival < initial-scale-eval < loop,
+        // regardless of push order — the partition the streaming engines
+        // rely on for bit-identity with the materialized engine.
+        let mut heap: Heap<&'static str> = BinaryHeap::new();
+        let mut loop_seq = LOOP_SEQ_BASE;
+        push(&mut heap, 1.0, "loop", &mut loop_seq);
+        push_at(&mut heap, 1.0, "scale-eval", ARRIVAL_SEQ_BASE + 2);
+        push_at(&mut heap, 1.0, "arrival-1", ARRIVAL_SEQ_BASE + 1);
+        push_at(&mut heap, 1.0, "arrival-0", ARRIVAL_SEQ_BASE);
+        let mut setup_seq = 0u64;
+        push(&mut heap, 1.0, "setup", &mut setup_seq);
+        let mut order = Vec::new();
+        while let Some(Reverse((_, EventBox(e)))) = heap.pop() {
+            order.push(e);
+        }
+        assert_eq!(order, vec!["setup", "arrival-0", "arrival-1", "scale-eval", "loop"]);
     }
 }

@@ -43,13 +43,20 @@
 //! still cannot fit. An eviction drops the model's queued requests (they
 //! are accounted as that stream's drops) and lets in-flight work finish.
 //!
-//! Workload: one open-loop arrival stream per model
-//! ([`crate::workload::generate_streams`]), merged deterministically by
-//! arrival time. Routing: [`ModelRouter`] — one router per model over the
+//! Workload: one open-loop arrival stream per model, heap-merged lazily
+//! by [`crate::workload::MergedSource`] (deterministic by arrival time,
+//! ties by stream index) and injected into the event heap as simulated
+//! time reaches each arrival — Zipf fleets of hundreds of models run in
+//! O(streams) generator memory, not O(total requests). Bit-identity with
+//! the old materialize-then-simulate engine uses the same split-RNG +
+//! sequence-range machinery as [`super::cluster`] (see `serving::des`).
+//! Routing: [`ModelRouter`] — one router per model over the
 //! replicas hosting it. Metrics: a [`ModelMetrics`] per stream with exact
 //! conservation (`issued == completed + dropped` independently per
 //! model, across colocation and eviction events), plus the usual
-//! per-replica and cluster-level collectors and a [`PlacementTimeline`].
+//! per-replica and cluster-level collectors and a [`PlacementTimeline`];
+//! [`MetricsMode::Sketch`] bounds every ledger's memory for
+//! horizon-scale runs.
 
 use super::backends::Software;
 use super::batcher::{Batcher, Decision, Policy};
@@ -59,12 +66,12 @@ use super::router::{ModelRouter, RouterPolicy};
 use super::service::ServiceModel;
 use crate::hardware::sharing::{MPS_EFFICIENCY, MPS_OVERHEAD_S};
 use crate::metrics::{
-    Collector, ModelMetrics, PlacementEventKind, PlacementTimeline, ReplicaMetrics, RequestTrace,
-    Stage, TraceStore,
+    Collector, MetricsMode, ModelMetrics, PlacementEventKind, PlacementTimeline, ReplicaMetrics,
+    RequestTrace, Stage, TraceStore,
 };
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
-use crate::workload::{generate_streams, Pattern, StreamSpec};
+use crate::workload::{MergedSource, Pattern, StreamSpec};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -163,6 +170,10 @@ pub struct MultiModelConfig {
     pub placement_ops: Vec<(f64, PlacementOp)>,
     pub contention: ContentionModel,
     pub path: RequestPath,
+    /// Latency-metric backend (see [`MetricsMode`]): simulation behaviour
+    /// is identical in both modes; `Sketch` bounds per-model, per-replica,
+    /// and cluster-level metric memory for long-horizon many-model runs.
+    pub metrics: MetricsMode,
     pub seed: u64,
 }
 
@@ -506,18 +517,39 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             mem_bytes: rc.mem_bytes,
             used_bytes: used,
             hosted,
-            metrics: ReplicaMetrics::new(horizon_s, 0.5),
+            metrics: ReplicaMetrics::with_mode(horizon_s, 0.5, config.metrics),
         });
     }
 
-    let mut rng = Pcg64::seeded(config.seed);
+    let streams: Vec<StreamSpec> = config
+        .models
+        .iter()
+        .map(|m| StreamSpec { name: m.name.clone(), pattern: m.pattern.clone() })
+        .collect();
+    // O(streams)-memory counting pre-pass over the merged source, then the
+    // split-RNG setup (see cluster.rs): issue-phase draws come lazily from
+    // the seeded generator in merge order; loop-phase draws come from a
+    // clone fast-forwarded past all of them.
+    let n_issue = MergedSource::new(&streams, config.duration_s, config.seed).count() as u64;
+    let mut rng_issue = Pcg64::seeded(config.seed);
+    let mut rng_loop = rng_issue.clone();
+    rng_loop.advance(RequestPath::RNG_STEPS_PER_SAMPLE as u128 * n_issue as u128);
+
     let mut router = ModelRouter::new(config.router, n_models);
     let mut heap: Heap = BinaryHeap::new();
-    let mut seq = 0u64;
-    let mut collector = Collector::new();
+    // Sequence ranges (see `serving::des`): arrivals from ARRIVAL_SEQ_BASE
+    // in merge order, the scripted placement timeline pinned right after
+    // the arrival range (the old engine pushed it after seeding all N
+    // arrivals), loop-scheduled events from LOOP_SEQ_BASE.
+    let mut arrival_seq = des::ARRIVAL_SEQ_BASE;
+    let mut seq = des::LOOP_SEQ_BASE;
+    let mut collector = Collector::with_mode(config.metrics);
     let mut placement = PlacementTimeline::new();
-    let mut model_metrics: Vec<ModelMetrics> =
-        config.models.iter().map(|m| ModelMetrics::new(m.name.clone())).collect();
+    let mut model_metrics: Vec<ModelMetrics> = config
+        .models
+        .iter()
+        .map(|m| ModelMetrics::with_mode(m.name.clone(), config.metrics))
+        .collect();
 
     // Per-model router inputs: the ascending list of replicas hosting the
     // model (maintained on placement transitions) and per-(model, replica)
@@ -533,36 +565,57 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
     // are still loading; flushed on ModelReady.
     let mut held: Vec<Vec<u32>> = vec![Vec::new(); n_models];
 
-    // Merge the per-model streams and issue every request up front
-    // (open loop): sample its pipeline stages, schedule its Enqueue.
-    let streams: Vec<StreamSpec> = config
-        .models
-        .iter()
-        .map(|m| StreamSpec { name: m.name.clone(), pattern: m.pattern.clone() })
-        .collect();
-    let arrivals = generate_streams(&streams, config.duration_s, config.seed);
-    let mut traces = TraceStore::with_capacity(arrivals.len().max(64));
-    for a in &arrivals {
-        if a.time_s >= config.duration_s {
-            continue;
-        }
-        model_metrics[a.stream].issued += 1;
-        let (pre, tx, _post) = config.path.sample(&mut rng);
-        let mut trace = RequestTrace::new(a.id, a.time_s);
-        trace.record_stage(Stage::PreProcess, pre);
-        trace.record_stage(Stage::Transmission, tx);
-        let enqueue_at = trace.completed_s;
-        let slot = traces.insert(trace);
-        push(&mut heap, enqueue_at, Event::Enqueue { slot, model: a.stream as u32 }, &mut seq);
-    }
+    // Lazy merged arrival stream (open loop): one request is issued —
+    // pipeline stages sampled, Enqueue scheduled, its stream's `issued`
+    // ledger bumped — only when simulated time reaches its arrival. The
+    // slab holds in-flight traces, not the horizon.
+    let mut source = MergedSource::new(&streams, config.duration_s, config.seed);
+    let mut pending = source.next();
+    let mut traces = TraceStore::with_capacity((n_issue as usize).clamp(64, 1 << 16));
 
-    // Scripted placement timeline.
+    // Scripted placement timeline, pinned just past the arrival range.
     for (i, (t, _)) in config.placement_ops.iter().enumerate() {
-        push(&mut heap, *t, Event::Place { op: i }, &mut seq);
+        des::push_at(
+            &mut heap,
+            *t,
+            Event::Place { op: i },
+            des::ARRIVAL_SEQ_BASE + n_issue + i as u64,
+        );
     }
 
     let mut events = 0u64;
-    while let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() {
+    loop {
+        // Inject every merged arrival due at or before the next event (all
+        // of them if the heap is idle); its Enqueue fires at
+        // `arrival + pre + tx >= arrival`, so this is always early enough,
+        // and injection order = merge order keeps the issue-phase RNG and
+        // arrival-range sequence numbers identical to the materialized
+        // engine's upfront loop.
+        while let Some(a) = pending {
+            let due = match heap.peek() {
+                Some(Reverse((Key(t, _), _))) => a.time_s <= *t,
+                None => true,
+            };
+            if !due {
+                break;
+            }
+            model_metrics[a.stream].issued += 1;
+            let (pre, tx, _post) = config.path.sample(&mut rng_issue);
+            let mut trace = RequestTrace::new(a.id, a.time_s);
+            trace.record_stage(Stage::PreProcess, pre);
+            trace.record_stage(Stage::Transmission, tx);
+            let enqueue_at = trace.completed_s;
+            let slot = traces.insert(trace);
+            des::push_at(
+                &mut heap,
+                enqueue_at,
+                Event::Enqueue { slot, model: a.stream as u32 },
+                arrival_seq,
+            );
+            arrival_seq += 1;
+            pending = source.next();
+        }
+        let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() else { break };
         events += 1;
         match event {
             Event::Enqueue { slot, model } => {
@@ -677,7 +730,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     let (slot, started, enqueued) = replicas[ri].hosted[hi].in_flight[k];
                     let mut trace = traces.remove(slot);
                     trace.record_stage(Stage::Inference, now - started + overhead);
-                    let (_, _, post) = config.path.sample(&mut rng);
+                    let (_, _, post) = config.path.sample(&mut rng_loop);
                     trace.record_stage(Stage::PostProcess, post);
                     router.observe(m, ri, now - enqueued + overhead);
                     replicas[ri].metrics.collector.ingest(&trace);
@@ -858,6 +911,12 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
     // Every issued trace was completed or rejected; the slab must be
     // empty or a stream's ledger is broken upstream.
     debug_assert!(traces.is_empty(), "trace leak: {} live traces at end of run", traces.len());
+    debug_assert!(pending.is_none(), "arrivals left uninjected at end of run");
+    debug_assert_eq!(
+        arrival_seq - des::ARRIVAL_SEQ_BASE,
+        n_issue,
+        "counting pre-pass disagrees with the merged source"
+    );
     for mm in &model_metrics {
         debug_assert!(
             mm.conserved(),
@@ -911,6 +970,7 @@ mod tests {
             placement_ops: vec![],
             contention: ContentionModel::default(),
             path: RequestPath::local(Processors::none()),
+            metrics: MetricsMode::Exact,
             seed: 9,
         }
     }
@@ -1214,5 +1274,81 @@ mod tests {
         let d = window_demand(&mut recent, 2.0, 1.0);
         assert!((d - 0.4).abs() < 1e-12, "0.3 + 0.1 busy over a 1 s window, got {d}");
         assert_eq!(recent.len(), 2, "expired interval pruned");
+    }
+
+    #[test]
+    fn sketch_metrics_do_not_perturb_the_multimodel_simulation() {
+        // MetricsMode must not change what the simulation does, only how
+        // latency is summarized — counts, events, and every conservation
+        // ledger stay exact in sketch mode.
+        let exact = base(
+            vec![model("a", 5.0, 100.0), model("b", 3.0, 80.0)],
+            vec![shared_replica(vec![0, 1]), shared_replica(vec![0, 1])],
+        );
+        let mut sketch = exact.clone();
+        let alpha = 0.01;
+        sketch.metrics = MetricsMode::Sketch { alpha };
+        let (e, s) = (run(&exact), run(&sketch));
+        assert_conserved(&s);
+        assert_eq!(e.issued, s.issued);
+        assert_eq!(e.dropped, s.dropped);
+        assert_eq!(e.events, s.events);
+        assert_eq!(e.collector.completed, s.collector.completed);
+        for (me, ms) in e.models.iter().zip(&s.models) {
+            assert_eq!(me.issued, ms.issued, "{}", me.name);
+            assert_eq!(me.collector.completed, ms.collector.completed, "{}", me.name);
+            assert!(ms.collector.is_bounded());
+        }
+        for q in [50.0, 99.0] {
+            let (pe, ps) = (e.collector.e2e.percentile(q), s.collector.e2e.percentile(q));
+            assert!(
+                (ps - pe).abs() <= 2.0 * alpha * pe.abs(),
+                "p{q}: sketch {ps} vs exact {pe}"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_fleet_streams_many_models_at_bounded_metric_memory() {
+        // A Zipf-popular catalog of 40 models over 4 shared replicas, in
+        // sketch mode: the merged source streams all arrivals lazily, every
+        // stream's ledger balances, and the popularity skew shows up in
+        // per-model issue counts (head stream ~ rank^1.1 over the tail).
+        let specs = crate::workload::zipf_streams("m", 40, 1.1, 400.0);
+        let models: Vec<ModelSpec> = specs
+            .iter()
+            .map(|s| {
+                let mut m = model(&s.name, 3.0, 1.0);
+                m.pattern = s.pattern.clone();
+                m.weight_bytes = 40_000_000;
+                m
+            })
+            .collect();
+        let hosted: Vec<Vec<usize>> =
+            (0..4).map(|r| (0..40).filter(|m| m % 4 == r).collect()).collect();
+        let mut cfg = base(
+            models,
+            hosted
+                .into_iter()
+                .map(|h| MultiReplicaConfig {
+                    software: &backends::TRIS,
+                    mem_bytes: 2_000_000_000,
+                    hosted: h,
+                })
+                .collect(),
+        );
+        cfg.duration_s = 10.0;
+        cfg.metrics = MetricsMode::Sketch { alpha: 0.01 };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert!(r.collector.is_bounded());
+        assert!(r.issued > 2_000, "≈400 rps over 10 s, got {}", r.issued);
+        let head = r.models[0].issued as f64;
+        let tail = r.models[39].issued.max(1) as f64;
+        assert!(head > 5.0 * tail, "Zipf skew must be visible: head {head} vs tail {tail}");
+        // Determinism of the streamed run.
+        let r2 = run(&cfg);
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
     }
 }

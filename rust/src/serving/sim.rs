@@ -20,19 +20,18 @@ use super::batcher::Policy;
 use super::cluster::{self, ClusterConfig, ReplicaConfig};
 use super::router::RouterPolicy;
 use super::service::ServiceModel;
-use crate::metrics::{Collector, UtilizationTimeline};
+use crate::metrics::{Collector, MetricsMode, UtilizationTimeline};
 use crate::pipeline::RequestPath;
-use crate::workload::Arrival;
+use crate::workload::Workload;
 
 /// Simulation configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    /// Open-loop arrivals (ignored when `closed_loop` is set).
-    pub arrivals: Vec<Arrival>,
-    /// Closed-loop client count (Fig 12): each client issues its next
-    /// request when the previous completes (or is rejected — rejection
-    /// re-issues after `cluster::REJECT_RETRY_BACKOFF_S`).
-    pub closed_loop: Option<usize>,
+    /// What drives the run: an arrival list, a streaming pattern, or a
+    /// closed loop of clients (Fig 12), each issuing its next request when
+    /// the previous completes (or is rejected — rejection re-issues after
+    /// `cluster::REJECT_RETRY_BACKOFF_S`).
+    pub workload: Workload,
     /// Simulated duration; no new requests issued past this.
     pub duration_s: f64,
     pub policy: Policy,
@@ -77,10 +76,12 @@ impl SimResult {
 }
 
 /// Run the simulation: a one-replica cluster behind a trivial router.
+/// Single-server results expose raw per-sample vectors (`batch_sizes`,
+/// windowed latencies), so this wrapper always runs with exact metrics;
+/// use [`cluster::run`] directly for bounded-memory sketch runs.
 pub fn run(config: &SimConfig) -> SimResult {
     let cluster_cfg = ClusterConfig {
-        arrivals: config.arrivals.clone(),
-        closed_loop: config.closed_loop,
+        workload: config.workload.clone(),
         duration_s: config.duration_s,
         replicas: vec![ReplicaConfig {
             software: config.software,
@@ -92,6 +93,7 @@ pub fn run(config: &SimConfig) -> SimResult {
         autoscale: None,
         cold_start: None,
         path: config.path,
+        metrics: MetricsMode::Exact,
         seed: config.seed,
     };
     let mut result = cluster::run(&cluster_cfg);
@@ -120,8 +122,7 @@ mod tests {
 
     fn base_config(rate: f64, duration: f64) -> SimConfig {
         SimConfig {
-            arrivals: generate(&Pattern::Poisson { rate }, duration, 11),
-            closed_loop: None,
+            workload: Workload::Arrivals(generate(&Pattern::Poisson { rate }, duration, 11)),
             duration_s: duration,
             policy: Policy::Single,
             software: &backends::TFS,
@@ -135,7 +136,7 @@ mod tests {
     #[test]
     fn conservation_all_requests_accounted() {
         let cfg = base_config(50.0, 20.0);
-        let n = cfg.arrivals.len() as u64;
+        let n = cfg.workload.count_in(20.0);
         let r = run(&cfg);
         assert_eq!(r.collector.completed + r.dropped, n);
         assert_eq!(r.issued, n);
@@ -200,8 +201,7 @@ mod tests {
     #[test]
     fn closed_loop_sustains_concurrency() {
         let mut cfg = base_config(1.0, 10.0);
-        cfg.arrivals = vec![];
-        cfg.closed_loop = Some(4);
+        cfg.workload = Workload::ClosedLoop { clients: 4 };
         cfg.policy = Policy::Dynamic { max_size: 8, max_wait_s: 0.001 };
         cfg.software = &backends::TRIS;
         let r = run(&cfg);
@@ -279,12 +279,11 @@ mod tests {
         // 0.010 with the server free, the buggy engine flushed E after
         // only 2 ms of waiting. E must wait its own full max_wait_s.
         let cfg = SimConfig {
-            arrivals: generate(
+            workload: Workload::Arrivals(generate(
                 &Pattern::Trace { times_s: vec![0.0, 0.0002, 0.0004, 0.0006, 0.008] },
                 1.0,
                 0,
-            ),
-            closed_loop: None,
+            )),
             duration_s: 1.0,
             policy: Policy::Dynamic { max_size: 4, max_wait_s: 0.010 },
             software: &backends::TRIS,
@@ -314,8 +313,7 @@ mod tests {
         // every rejection re-issues, so the server stays saturated and
         // accounting is exact.
         let mut cfg = base_config(1.0, 10.0);
-        cfg.arrivals = vec![];
-        cfg.closed_loop = Some(4);
+        cfg.workload = Workload::ClosedLoop { clients: 4 };
         cfg.max_queue = 1;
         let r = run(&cfg);
         assert!(r.dropped > 0, "1-slot queue under 4 clients must reject");

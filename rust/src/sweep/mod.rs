@@ -260,8 +260,9 @@ mod tests {
     use crate::serving::batcher::Policy;
     use crate::serving::router::RouterPolicy;
     use crate::serving::service::ServiceModel;
+    use crate::metrics::MetricsMode;
     use crate::serving::{backends, cluster::ReplicaConfig};
-    use crate::workload::{generate, Pattern};
+    use crate::workload::{Pattern, Workload};
 
     fn replica(per_req_ms: f64) -> ReplicaConfig {
         ReplicaConfig {
@@ -281,14 +282,16 @@ mod tests {
             [RouterPolicy::RoundRobin, RouterPolicy::LeastOutstanding].into_iter().enumerate()
         {
             plan.push(format!("cell{i}"), move |seed| ClusterConfig {
-                arrivals: generate(&Pattern::Poisson { rate: 120.0 }, 4.0, seed),
-                closed_loop: None,
+                // Streamed per-cell: the cell seed drives both the lazy
+                // generator and the engine.
+                workload: Workload::Stream { pattern: Pattern::Poisson { rate: 120.0 }, seed },
                 duration_s: 4.0,
                 replicas: vec![replica(3.0), replica(6.0)],
                 router,
                 autoscale: None,
                 cold_start: None,
                 path: RequestPath::local(Processors::none()),
+                metrics: MetricsMode::Exact,
                 seed,
             });
         }
@@ -325,16 +328,57 @@ mod tests {
 
     #[test]
     fn parallel_run_matches_serial_bit_for_bit() {
+        // Streamed cells (lazy generation inside each worker) stay
+        // bit-identical across thread counts, like materialized ones did.
         let serial = small_plan().run(1);
-        let parallel = small_plan().run(4);
-        assert_eq!(serial.len(), parallel.len());
-        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
-            assert_eq!(a.label, b.label);
-            assert_eq!(a.seed, b.seed);
-            assert_eq!(a.result.issued, b.result.issued);
-            assert_eq!(a.result.events, b.result.events);
-            assert_eq!(a.result.collector.fingerprint(), b.result.collector.fingerprint());
+        for threads in [2, 4, 8] {
+            let parallel = small_plan().run(threads);
+            assert_eq!(serial.len(), parallel.len());
+            for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+                assert_eq!(a.label, b.label, "threads={threads}");
+                assert_eq!(a.seed, b.seed);
+                assert_eq!(a.result.issued, b.result.issued, "threads={threads}");
+                assert_eq!(a.result.events, b.result.events, "threads={threads}");
+                assert_eq!(
+                    a.result.collector.fingerprint(),
+                    b.result.collector.fingerprint(),
+                    "threads={threads}"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn sketch_mode_sweep_aggregates_deterministically() {
+        // Sketch-mode cells fan in through the same plan-order absorb path:
+        // the aggregated sketch is thread-count independent, and the empty
+        // exact seed collector adopts the sketch representation.
+        let sketch_plan = || {
+            let mut plan = SweepPlan::new(7);
+            for i in 0..4u64 {
+                plan.push(format!("cell{i}"), move |seed| ClusterConfig {
+                    workload: Workload::Stream {
+                        pattern: Pattern::Poisson { rate: 100.0 + i as f64 * 40.0 },
+                        seed,
+                    },
+                    duration_s: 4.0,
+                    replicas: vec![replica(3.0)],
+                    router: RouterPolicy::LeastOutstanding,
+                    autoscale: None,
+                    cold_start: None,
+                    path: RequestPath::local(Processors::none()),
+                    metrics: MetricsMode::Sketch { alpha: 0.01 },
+                    seed,
+                });
+            }
+            plan
+        };
+        let a = sketch_plan().run(1).aggregate();
+        let b = sketch_plan().run(8).aggregate();
+        assert!(a.is_bounded() && b.is_bounded());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.e2e.percentile(99.0).to_bits(), b.e2e.percentile(99.0).to_bits());
     }
 
     #[test]

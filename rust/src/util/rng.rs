@@ -34,6 +34,30 @@ impl Pcg64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
     }
 
+    /// Jump the generator forward by `delta` steps in O(log delta) time
+    /// (Brown, "Random Number Generation with Arbitrary Strides"). One
+    /// `next_u64`/`next_f64`/`exponential` call is one step; `normal` and
+    /// `lognormal` are two. This is what lets the streaming engines split a
+    /// single logical draw sequence into an issue-phase RNG and a loop-phase
+    /// RNG without materializing the issue phase: clone the seeded generator
+    /// and advance the clone past the steps the issue phase will consume.
+    pub fn advance(&mut self, mut delta: u128) {
+        let mut acc_mult: u128 = 1;
+        let mut acc_plus: u128 = 0;
+        let mut cur_mult = PCG_MULT;
+        let mut cur_plus = self.inc;
+        while delta > 0 {
+            if delta & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            delta >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+    }
+
     /// Next uniform u64.
     pub fn next_u64(&mut self) -> u64 {
         self.step();
@@ -216,6 +240,45 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn advance_matches_sequential_steps() {
+        for delta in [0u128, 1, 2, 3, 7, 64, 1000, 4097] {
+            let mut jumped = Pcg64::seeded(42);
+            jumped.advance(delta);
+            let mut walked = Pcg64::seeded(42);
+            for _ in 0..delta {
+                walked.next_u64();
+            }
+            assert_eq!(jumped.next_u64(), walked.next_u64(), "delta {delta}");
+            assert_eq!(jumped.next_u64(), walked.next_u64(), "delta {delta}");
+        }
+    }
+
+    #[test]
+    fn advance_composes() {
+        let mut a = Pcg64::new(9, 3);
+        a.advance(100);
+        a.advance(23);
+        let mut b = Pcg64::new(9, 3);
+        b.advance(123);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn advance_counts_distribution_draws() {
+        // Pin the step cost of each distribution: exponential/next_f64 are one
+        // step, normal/lognormal are two. The streaming engines rely on these
+        // counts to fast-forward the loop-phase RNG.
+        let mut walked = Pcg64::seeded(5);
+        walked.exponential(2.0);
+        walked.next_f64();
+        walked.lognormal(0.0, 0.1);
+        walked.normal(1.0, 2.0);
+        let mut jumped = Pcg64::seeded(5);
+        jumped.advance(1 + 1 + 2 + 2);
+        assert_eq!(jumped.next_u64(), walked.next_u64());
     }
 
     #[test]

@@ -2,27 +2,168 @@
 //!
 //! The metric collector (paper §4.2.4) records every request's latency;
 //! the analysis stage (§4.3.1) needs exact tail percentiles (p95/p99) and
-//! CDF plots. `Summary` keeps raw samples (exact quantiles, fine at
-//! benchmark scale); `LogHistogram` is the O(1)-memory recorder used on
-//! the serving hot path.
+//! CDF plots. `Summary` has two backends behind one API: the default
+//! exact-sample representation (raw `Vec<f64>`, exact order statistics —
+//! fine at small benchmark scale), and a bounded-memory quantile sketch
+//! ([`QuantileSketch`], DDSketch-style log buckets with relative-error
+//! guarantee α) selected via [`Summary::sketch`] for 10⁸-request streaming
+//! runs. `LogHistogram` is the O(1)-memory recorder used on the serving
+//! hot path.
 //!
-//! Percentiles are exact order statistics via `select_nth_unstable` (O(n)
+//! Exact percentiles are order statistics via `select_nth_unstable` (O(n)
 //! selection, no full sort, `&self` — see PERF.md §Percentile selection);
 //! `min`/`max`/`sum` are maintained incrementally at record time so
 //! report-generation loops calling them repeatedly stay O(1) per call.
 
-/// Exact-sample summary. Percentiles use the nearest-rank method.
+/// DDSketch-style quantile sketch: logarithmic buckets with growth factor
+/// γ = (1+α)/(1-α) guarantee every reported quantile is within relative
+/// error α of the true sample value (for positive samples). Memory is a
+/// fixed ~`BUCKETS(α)` u64 counters (≈1.7k for α = 1%), independent of the
+/// number of recorded samples.
+///
+/// The trackable range is fixed at [1 ns, 10⁶ s] so two sketches with the
+/// same α always have identical bucket boundaries and merge by plain
+/// counter addition — commutative, associative, deterministic. Values at
+/// or below the low cutoff land in a dedicated zero bucket and report the
+/// tracked exact minimum.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    alpha: f64,
+    gamma: f64,
+    gamma_ln: f64,
+    counts: Vec<u64>,
+    zero_count: u64,
+    count: u64,
+    sum_sq: f64,
+}
+
+/// Smallest positive value the sketch resolves (1 ns, in seconds).
+const SKETCH_LO: f64 = 1e-9;
+/// Largest value before clamping into the top bucket (~11.6 days).
+const SKETCH_HI: f64 = 1e6;
+
+impl QuantileSketch {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha < 1.0, "sketch alpha must be in (0, 1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        let gamma_ln = gamma.ln();
+        let buckets = ((SKETCH_HI / SKETCH_LO).ln() / gamma_ln).ceil() as usize + 1;
+        QuantileSketch {
+            alpha,
+            gamma,
+            gamma_ln,
+            counts: vec![0; buckets],
+            zero_count: 0,
+            count: 0,
+            sum_sq: 0.0,
+        }
+    }
+
+    /// Configured relative-error bound.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn bucket(&self, x: f64) -> usize {
+        // Caller guarantees x > SKETCH_LO; floor() is the DDSketch index.
+        (((x / SKETCH_LO).ln() / self.gamma_ln) as usize).min(self.counts.len() - 1)
+    }
+
+    /// Midpoint representative of bucket k: within α of anything in it.
+    fn value_of(&self, k: usize) -> f64 {
+        SKETCH_LO * (self.gamma_ln * k as f64).exp() * 2.0 * self.gamma / (self.gamma + 1.0)
+    }
+
+    fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum_sq += x * x;
+        if x <= SKETCH_LO {
+            self.zero_count += 1;
+        } else {
+            let k = self.bucket(x);
+            self.counts[k] += 1;
+        }
+    }
+
+    /// Value at nearest-rank `rank` (1-based), before min/max clamping.
+    fn value_at_rank(&self, rank: u64, min: f64) -> f64 {
+        let mut seen = self.zero_count;
+        if seen >= rank {
+            return min;
+        }
+        for (k, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.value_of(k);
+            }
+        }
+        // Unreachable when rank <= count; be safe for rounding slop.
+        self.value_of(self.counts.len() - 1)
+    }
+
+    /// Approximate fraction of samples <= threshold (resolution α).
+    fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let mut below = self.zero_count;
+        if threshold > SKETCH_LO {
+            let kt = self.bucket(threshold);
+            below += self.counts[..=kt].iter().sum::<u64>();
+        } else if threshold < 0.0 {
+            below = 0;
+        }
+        below as f64 / self.count as f64
+    }
+
+    fn merge_from(&mut self, other: &QuantileSketch) {
+        assert_eq!(
+            self.counts.len(),
+            other.counts.len(),
+            "sketch shape mismatch: merging requires identical alpha"
+        );
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-15,
+            "sketch alpha mismatch: {} vs {}",
+            self.alpha,
+            other.alpha
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.zero_count += other.zero_count;
+        self.count += other.count;
+        self.sum_sq += other.sum_sq;
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Exact {
+        samples: Vec<f64>,
+        /// True while `samples` is known to be ascending (set by
+        /// [`Summary::cdf`], cleared by every record); lets `percentile`
+        /// answer by direct index.
+        sorted: bool,
+        /// Selection scratch for `&self` percentiles: a lazily filled copy
+        /// of `samples` (in some permutation). Samples are append-only, so
+        /// a length match means the scratch holds exactly the current
+        /// multiset and back-to-back p50/p95/p99 calls share one fill.
+        scratch: std::cell::RefCell<Vec<f64>>,
+    },
+    Sketch(QuantileSketch),
+}
+
+/// Latency summary. Percentiles use the nearest-rank method.
+///
+/// Two representations behind one API: exact raw samples (the default,
+/// O(n) memory, bit-exact order statistics) or a bounded-memory
+/// [`QuantileSketch`] ([`Summary::sketch`], O(1) memory in sample count,
+/// quantiles within relative error α). `min`/`max`/`sum`/`mean` are exact
+/// in both modes; `p0`/`p100` report the exact extremes in both modes.
 #[derive(Debug, Clone)]
 pub struct Summary {
-    samples: Vec<f64>,
-    /// True while `samples` is known to be ascending (set by [`Self::cdf`],
-    /// cleared by every record); lets `percentile` answer by direct index.
-    sorted: bool,
-    /// Selection scratch for `&self` percentiles: a lazily filled copy of
-    /// `samples` (in some permutation). Samples are append-only, so a
-    /// length match means the scratch holds exactly the current multiset
-    /// and back-to-back p50/p95/p99 calls share one fill.
-    scratch: std::cell::RefCell<Vec<f64>>,
+    repr: Repr,
     sum: f64,
     min: f64,
     max: f64,
@@ -31,9 +172,11 @@ pub struct Summary {
 impl Default for Summary {
     fn default() -> Self {
         Summary {
-            samples: Vec::new(),
-            sorted: true,
-            scratch: std::cell::RefCell::new(Vec::new()),
+            repr: Repr::Exact {
+                samples: Vec::new(),
+                sorted: true,
+                scratch: std::cell::RefCell::new(Vec::new()),
+            },
             sum: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
@@ -42,13 +185,35 @@ impl Default for Summary {
 }
 
 impl Summary {
+    /// Exact-sample summary (O(n) memory, bit-exact percentiles).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Sketch-backed summary: constant memory in the number of samples,
+    /// percentiles within relative error `alpha` of the exact path.
+    pub fn sketch(alpha: f64) -> Self {
+        Summary {
+            repr: Repr::Sketch(QuantileSketch::new(alpha)),
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// True when backed by the bounded-memory sketch.
+    pub fn is_sketch(&self) -> bool {
+        matches!(self.repr, Repr::Sketch(_))
+    }
+
     pub fn record(&mut self, x: f64) {
-        self.samples.push(x);
-        self.sorted = false;
+        match &mut self.repr {
+            Repr::Exact { samples, sorted, .. } => {
+                samples.push(x);
+                *sorted = false;
+            }
+            Repr::Sketch(sk) => sk.record(x),
+        }
         self.sum += x;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
@@ -60,46 +225,85 @@ impl Summary {
         }
     }
 
-    /// Move-based merge: appends `other`'s raw samples without going
-    /// through per-sample records, and takes the buffer wholesale when
-    /// `self` is still empty (the first merge of a fan-in copies nothing).
+    /// Move-based merge. Semantics by representation:
+    ///
+    /// - **exact ← exact**: appends `other`'s raw samples without
+    ///   per-sample records, and takes the buffer wholesale when `self` is
+    ///   still empty (the first merge of a fan-in copies nothing). Result
+    ///   is bit-exact.
+    /// - **empty exact ← sketch**: `self` *becomes* the sketch (fan-in
+    ///   aggregators start as `Summary::new()` and adopt the mode of what
+    ///   they absorb).
+    /// - **sketch ← sketch**: bucket-wise counter addition — commutative,
+    ///   associative, deterministic; both sides must share the same α. The
+    ///   α error bound is preserved across arbitrary absorb chains.
+    /// - **sketch ← exact**: `other`'s raw samples are recorded into the
+    ///   sketch (lossy by ≤ α, bounded memory).
+    /// - **non-empty exact ← sketch**: panics — raw samples cannot be
+    ///   reconstructed from a sketch, and silently degrading the exact
+    ///   side would corrupt golden fingerprints.
     pub fn absorb(&mut self, mut other: Summary) {
-        if self.samples.is_empty() {
+        if other.is_empty() {
+            return;
+        }
+        if self.is_empty() && !self.is_sketch() {
             *self = other;
             return;
         }
-        if other.samples.is_empty() {
-            return;
+        match (&mut self.repr, &mut other.repr) {
+            (Repr::Exact { samples, sorted, .. }, Repr::Exact { samples: os, .. }) => {
+                samples.append(os);
+                *sorted = false;
+            }
+            (Repr::Sketch(sk), Repr::Sketch(osk)) => sk.merge_from(osk),
+            (Repr::Sketch(sk), Repr::Exact { samples: os, .. }) => {
+                for &x in os.iter() {
+                    sk.record(x);
+                }
+            }
+            (Repr::Exact { .. }, Repr::Sketch(_)) => {
+                panic!("cannot absorb a sketch Summary into a non-empty exact Summary")
+            }
         }
-        self.samples.append(&mut other.samples);
-        self.sorted = false;
         self.sum += other.sum;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        match &self.repr {
+            Repr::Exact { samples, .. } => samples.len(),
+            Repr::Sketch(sk) => sk.count as usize,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.len() == 0
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.is_empty() {
             return f64::NAN;
         }
-        self.sum / self.samples.len() as f64
+        self.sum / self.len() as f64
     }
 
     pub fn stddev(&self) -> f64 {
-        let n = self.samples.len();
+        let n = self.len();
         if n < 2 {
             return 0.0;
         }
-        let m = self.mean();
-        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+        match &self.repr {
+            Repr::Exact { samples, .. } => {
+                let m = self.mean();
+                (samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+            }
+            Repr::Sketch(sk) => {
+                let m = self.mean();
+                // Σ(x-m)² = Σx² - n·m²; clamp rounding residue at zero.
+                ((sk.sum_sq - n as f64 * m * m).max(0.0) / (n - 1) as f64).sqrt()
+            }
+        }
     }
 
     /// Smallest sample (`INFINITY` when empty). O(1): maintained at record.
@@ -117,41 +321,44 @@ impl Summary {
         self.sum
     }
 
-    fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
-            self.sorted = true;
-        }
-    }
-
-    /// Nearest-rank percentile, q in [0, 100]. Exact order statistic via
-    /// `select_nth_unstable` over a reused scratch copy — O(n) with no
-    /// `&mut self`, no per-call allocation after the first, and identical
-    /// values to the former full-sort path.
+    /// Nearest-rank percentile, q in [0, 100]. Exact mode answers with the
+    /// true order statistic via `select_nth_unstable` over a reused scratch
+    /// copy — O(n), no `&mut self`, no per-call allocation after the first.
+    /// Sketch mode answers from the log buckets within relative error α,
+    /// clamped into [min, max]; rank 1 and rank n report the exact
+    /// extremes in both modes.
     pub fn percentile(&self, q: f64) -> f64 {
-        let n = self.samples.len();
+        let n = self.len();
         if n == 0 {
             return f64::NAN;
         }
         let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
         let idx = rank.min(n) - 1;
-        if self.sorted {
-            return self.samples[idx];
-        }
         if idx == 0 {
             return self.min;
         }
         if idx == n - 1 {
             return self.max;
         }
-        let mut scratch = self.scratch.borrow_mut();
-        if scratch.len() != n {
-            scratch.clone_from(&self.samples);
+        match &self.repr {
+            Repr::Exact { samples, sorted, scratch } => {
+                if *sorted {
+                    return samples[idx];
+                }
+                let mut scratch = scratch.borrow_mut();
+                if scratch.len() != n {
+                    scratch.clone_from(samples);
+                }
+                // Any permutation of the multiset selects the same order
+                // statistic.
+                let (_, nth, _) = scratch
+                    .select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).expect("NaN sample"));
+                *nth
+            }
+            Repr::Sketch(sk) => {
+                sk.value_at_rank(idx as u64 + 1, self.min).clamp(self.min, self.max)
+            }
         }
-        // Any permutation of the multiset selects the same order statistic.
-        let (_, nth, _) =
-            scratch.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).expect("NaN sample"));
-        *nth
     }
 
     pub fn p50(&self) -> f64 {
@@ -167,34 +374,58 @@ impl Summary {
     }
 
     /// Empirical CDF evaluated at `points` many evenly spaced sample
-    /// quantiles; returns (value, cumulative probability) pairs. Sorts the
-    /// sample buffer once (subsequent `percentile` calls are then O(1)).
+    /// quantiles; returns (value, cumulative probability) pairs. Exact mode
+    /// sorts the sample buffer once (subsequent `percentile` calls are then
+    /// O(1)); sketch mode reads the buckets (α-approximate values).
     pub fn cdf(&mut self, points: usize) -> Vec<(f64, f64)> {
-        if self.samples.is_empty() {
+        if self.is_empty() {
             return Vec::new();
         }
-        self.ensure_sorted();
-        let n = self.samples.len();
+        if let Repr::Exact { samples, sorted, .. } = &mut self.repr {
+            if !*sorted {
+                samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+                *sorted = true;
+            }
+            let n = samples.len();
+            return (1..=points)
+                .map(|i| {
+                    let p = i as f64 / points as f64;
+                    let idx = ((p * n as f64).ceil() as usize).clamp(1, n) - 1;
+                    (samples[idx], p)
+                })
+                .collect();
+        }
         (1..=points)
             .map(|i| {
                 let p = i as f64 / points as f64;
-                let idx = ((p * n as f64).ceil() as usize).clamp(1, n) - 1;
-                (self.samples[idx], p)
+                (self.percentile(p * 100.0), p)
             })
             .collect()
     }
 
-    /// Fraction of samples <= threshold (SLO attainment).
+    /// Fraction of samples <= threshold (SLO attainment). Exact mode scans
+    /// the samples; sketch mode reads buckets (value resolution α).
     pub fn fraction_below(&self, threshold: f64) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
+        match &self.repr {
+            Repr::Exact { samples, .. } => {
+                if samples.is_empty() {
+                    return f64::NAN;
+                }
+                samples.iter().filter(|&&x| x <= threshold).count() as f64 / samples.len() as f64
+            }
+            Repr::Sketch(sk) => sk.fraction_below(threshold),
         }
-        self.samples.iter().filter(|&&x| x <= threshold).count() as f64
-            / self.samples.len() as f64
     }
 
+    /// Raw sample access — exact mode only. Sketch-backed summaries do not
+    /// retain samples; asking for them is a programming error.
     pub fn samples(&self) -> &[f64] {
-        &self.samples
+        match &self.repr {
+            Repr::Exact { samples, .. } => samples,
+            Repr::Sketch(_) => {
+                panic!("Summary::samples() on a sketch-backed summary: raw samples not retained")
+            }
+        }
     }
 }
 
@@ -476,5 +707,143 @@ mod tests {
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
         assert!(s.fraction_below(1.0).is_nan());
+        let sk = Summary::sketch(0.01);
+        assert!(sk.mean().is_nan());
+        assert!(sk.percentile(50.0).is_nan());
+        assert!(sk.fraction_below(1.0).is_nan());
+    }
+
+    #[test]
+    fn sketch_percentiles_within_alpha_of_exact() {
+        let alpha = 0.01;
+        let mut exact = Summary::new();
+        let mut sketch = Summary::sketch(alpha);
+        let mut rng = crate::util::rng::Pcg64::seeded(77);
+        for _ in 0..100_000 {
+            let x = rng.lognormal(-4.0, 1.2); // latency-ish: ~18 ms median
+            exact.record(x);
+            sketch.record(x);
+        }
+        assert_eq!(exact.len(), sketch.len());
+        for q in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let e = exact.percentile(q);
+            let s = sketch.percentile(q);
+            assert!(
+                (s / e - 1.0).abs() <= alpha + 1e-12,
+                "q{q}: sketch {s} vs exact {e}"
+            );
+        }
+        // Extremes are exact in both modes.
+        assert_eq!(sketch.percentile(0.0), exact.percentile(0.0));
+        assert_eq!(sketch.percentile(100.0), exact.percentile(100.0));
+        assert_eq!(sketch.min(), exact.min());
+        assert_eq!(sketch.max(), exact.max());
+        assert!((sketch.mean() - exact.mean()).abs() < 1e-12);
+        assert!((sketch.stddev() / exact.stddev() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sketch_absorb_chain_preserves_error_bound() {
+        // Merging sketches bucket-wise must not compound error: a chain of
+        // absorbs answers within alpha of the pooled exact summary.
+        let alpha = 0.02;
+        let mut pooled_exact = Summary::new();
+        let mut chain = Summary::sketch(alpha);
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        for part in 0..8 {
+            let mut piece = Summary::sketch(alpha);
+            for _ in 0..5_000 {
+                let x = rng.lognormal(-3.0, 0.8 + 0.05 * part as f64);
+                piece.record(x);
+                pooled_exact.record(x);
+            }
+            chain.absorb(piece);
+        }
+        assert_eq!(chain.len(), pooled_exact.len());
+        for q in [50.0, 95.0, 99.0, 99.9] {
+            let e = pooled_exact.percentile(q);
+            let s = chain.percentile(q);
+            assert!(
+                (s / e - 1.0).abs() <= alpha + 1e-12,
+                "q{q}: chained sketch {s} vs exact {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_exact_absorbing_sketch_becomes_sketch() {
+        let mut piece = Summary::sketch(0.01);
+        piece.record(1.0);
+        piece.record(2.0);
+        let mut agg = Summary::new(); // fan-in aggregator default
+        agg.absorb(piece);
+        assert!(agg.is_sketch());
+        assert_eq!(agg.len(), 2);
+        assert_eq!(agg.min(), 1.0);
+        assert_eq!(agg.max(), 2.0);
+    }
+
+    #[test]
+    fn sketch_absorbs_exact_samples() {
+        let mut sk = Summary::sketch(0.01);
+        sk.record(0.5);
+        let mut ex = Summary::new();
+        ex.extend(&[0.1, 0.9]);
+        sk.absorb(ex);
+        assert_eq!(sk.len(), 3);
+        assert_eq!(sk.min(), 0.1);
+        assert_eq!(sk.max(), 0.9);
+        assert!((sk.sum() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot absorb a sketch")]
+    fn exact_refuses_sketch_absorb() {
+        let mut ex = Summary::new();
+        ex.record(1.0);
+        let mut sk = Summary::sketch(0.01);
+        sk.record(2.0);
+        ex.absorb(sk);
+    }
+
+    #[test]
+    #[should_panic(expected = "not retained")]
+    fn sketch_samples_panics() {
+        let mut sk = Summary::sketch(0.01);
+        sk.record(1.0);
+        let _ = sk.samples();
+    }
+
+    #[test]
+    fn sketch_memory_is_flat_in_samples() {
+        // Structural constant-memory guarantee: bucket storage never grows
+        // with the number of records.
+        let sk = QuantileSketch::new(0.01);
+        let buckets_at_birth = sk.counts.len();
+        let mut s = Summary::sketch(0.01);
+        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        for _ in 0..200_000 {
+            s.record(rng.lognormal(-4.0, 2.0));
+        }
+        match &s.repr {
+            Repr::Sketch(inner) => assert_eq!(inner.counts.len(), buckets_at_birth),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn sketch_cdf_and_fraction_below_consistent() {
+        let mut s = Summary::sketch(0.01);
+        for i in 1..=1000 {
+            s.record(i as f64 * 1e-3);
+        }
+        let cdf = s.cdf(10);
+        assert_eq!(cdf.len(), 10);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        let f = s.fraction_below(0.5);
+        assert!((f - 0.5).abs() < 0.02, "fraction {f}");
     }
 }

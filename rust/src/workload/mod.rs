@@ -4,9 +4,17 @@
 //! benchmarking, we implement this workload generator" — modes cover the
 //! paper's experiments: Poisson arrivals at a given rate (Fig 11), uniform
 //! (constant-rate), spike/burst overload (Fig 11c), closed-loop concurrency
-//! (Fig 12, dynamic batching), and trace replay.
+//! (Fig 12, dynamic batching), trace replay, plus long-horizon diurnal and
+//! flash-crowd shapes for multi-day studies.
+//!
+//! Generation is streaming-first: [`source::PatternSource`] and
+//! [`source::MergedSource`] yield arrivals lazily in O(1) memory, and the
+//! materializing [`generate`]/[`generate_streams`] entry points are thin
+//! `collect()` wrappers kept byte-identical to their historical output
+//! (golden-tested below against frozen reference implementations).
 
-use crate::util::rng::Pcg64;
+pub mod source;
+pub use source::{zipf_streams, MergedSource, PatternSource, WorkloadSource};
 
 /// An arrival-pattern specification.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,6 +32,20 @@ pub enum Pattern {
     ClosedLoop { concurrency: usize },
     /// Explicit timestamps (trace replay).
     Trace { times_s: Vec<f64> },
+    /// Sinusoidal day/night cycle: λ(t) = base_rate · (1 + amplitude ·
+    /// sin(2πt/period_s)), realized by thinning. `amplitude` in [0, 1].
+    Diurnal { base_rate: f64, amplitude: f64, period_s: f64 },
+    /// Flash crowd: base rate, then at `start_s` a linear ramp to
+    /// `peak_rate` over `ramp_s`, held for `hold_s`, decaying linearly
+    /// back over `decay_s`.
+    FlashCrowd {
+        base_rate: f64,
+        peak_rate: f64,
+        start_s: f64,
+        ramp_s: f64,
+        hold_s: f64,
+        decay_s: f64,
+    },
 }
 
 /// A generated request arrival.
@@ -34,74 +56,115 @@ pub struct Arrival {
     pub time_s: f64,
 }
 
-/// Generate all arrivals in [0, duration_s) for a pattern.
-pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
-    let mut rng = Pcg64::seeded(seed);
-    let mut out = Vec::new();
-    let mut id = 0u64;
-    let mut push = |t: f64, out: &mut Vec<Arrival>| {
-        out.push(Arrival { id, time_s: t });
-        id += 1;
-    };
-    match pattern {
-        Pattern::Poisson { rate } => {
-            assert!(*rate > 0.0);
-            let mut t = rng.exponential(*rate);
-            while t < duration_s {
-                push(t, &mut out);
-                t += rng.exponential(*rate);
+/// What drives a serving run: either a pre-materialized arrival list, a
+/// streaming pattern (generated lazily inside the engine, O(1) memory), or
+/// a closed loop of clients. This replaces the old
+/// `arrivals: Vec<Arrival>` + `closed_loop: Option<usize>` config pair —
+/// every engine consumer now pulls from a [`WorkloadSource`] built here.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// Explicit arrival list (must be sorted by time; entries at or past
+    /// the run duration are skipped). Memory is O(len) by construction —
+    /// prefer `Stream` for large runs.
+    Arrivals(Vec<Arrival>),
+    /// Stream a pattern with the given generator seed. Never materialized:
+    /// the engine draws arrivals one at a time.
+    Stream { pattern: Pattern, seed: u64 },
+    /// Closed loop: `clients` concurrent clients, each reissuing on
+    /// completion. The initial wave comes from the streaming source (the
+    /// single source of truth for client count); reissues are engine
+    /// events.
+    ClosedLoop { clients: usize },
+}
+
+impl Workload {
+    /// Build the streaming source for a run of `duration_s`.
+    pub fn source(&self, duration_s: f64) -> SourceIter<'_> {
+        match self {
+            Workload::Arrivals(v) => {
+                SourceIter::Arrivals { iter: v.iter(), duration_s, next_id: 0, last_t: 0.0 }
             }
-        }
-        Pattern::Uniform { rate } => {
-            assert!(*rate > 0.0);
-            let gap = 1.0 / rate;
-            let mut t = gap;
-            while t < duration_s {
-                push(t, &mut out);
-                t += gap;
+            Workload::Stream { pattern, seed } => {
+                SourceIter::Pattern(PatternSource::new(pattern, duration_s, *seed))
             }
-        }
-        Pattern::Spike { base_rate, burst_rate, start_s, duration_s: burst_len } => {
-            assert!(*base_rate > 0.0 && *burst_rate > 0.0);
-            // Lewis–Shedler thinning: sample candidates from a homogeneous
-            // Poisson process at the envelope rate λ_max and accept each at
-            // probability λ(t)/λ_max. Sampling each gap at the rate in
-            // effect at the gap's *start* (the old scheme) lagged the burst
-            // onset by up to one base-rate gap and overshot past its end;
-            // thinning realizes the exact inhomogeneous process, so the
-            // rate switches at the window boundaries to the sample.
-            let lambda_max = base_rate.max(*burst_rate);
-            let mut t = 0.0;
-            loop {
-                t += rng.exponential(lambda_max);
-                if t >= duration_s {
-                    break;
-                }
-                let in_burst = t >= *start_s && t < start_s + burst_len;
-                let rate = if in_burst { *burst_rate } else { *base_rate };
-                if rng.next_f64() < rate / lambda_max {
-                    push(t, &mut out);
-                }
-            }
-        }
-        Pattern::ClosedLoop { concurrency } => {
-            for _ in 0..*concurrency {
-                push(0.0, &mut out);
-            }
-        }
-        Pattern::Trace { times_s } => {
-            // Sort the clipped timestamps *before* assigning ids: every
-            // other pattern emits ids monotonic in time, and downstream
-            // consumers key on that (assigning ids first, then sorting,
-            // produced id order != time order for unsorted traces).
-            let mut times: Vec<f64> = times_s.iter().copied().filter(|&t| t < duration_s).collect();
-            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            for t in times {
-                push(t, &mut out);
-            }
+            Workload::ClosedLoop { clients } => SourceIter::Pattern(PatternSource::new(
+                &Pattern::ClosedLoop { concurrency: *clients },
+                duration_s,
+                0,
+            )),
         }
     }
-    out
+
+    /// Count the arrivals the source will yield, without materializing
+    /// them — an O(1)-memory pre-pass. The engines use this to fast-forward
+    /// their loop-phase RNG past the issue-phase draws (see
+    /// `Pcg64::advance`) and to place the post-arrival event seqs.
+    pub fn count_in(&self, duration_s: f64) -> u64 {
+        match self {
+            Workload::Arrivals(v) => v.iter().filter(|a| a.time_s < duration_s).count() as u64,
+            _ => self.source(duration_s).count() as u64,
+        }
+    }
+
+    /// Number of closed-loop clients, if this workload is closed-loop.
+    /// `Pattern::ClosedLoop` streams count too: the source is the single
+    /// source of truth for the initial wave, and the engine drives
+    /// reissues for any closed-loop workload.
+    pub fn closed_loop_clients(&self) -> Option<usize> {
+        match self {
+            Workload::ClosedLoop { clients } => Some(*clients),
+            Workload::Stream { pattern: Pattern::ClosedLoop { concurrency }, .. } => {
+                Some(*concurrency)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Streaming iterator over a [`Workload`]'s arrivals. Times are
+/// non-decreasing and strictly below the run duration; ids are dense from
+/// zero in emission order.
+#[derive(Debug, Clone)]
+pub enum SourceIter<'a> {
+    Arrivals {
+        iter: std::slice::Iter<'a, Arrival>,
+        duration_s: f64,
+        next_id: u64,
+        last_t: f64,
+    },
+    Pattern(PatternSource),
+}
+
+impl Iterator for SourceIter<'_> {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        match self {
+            SourceIter::Arrivals { iter, duration_s, next_id, last_t } => loop {
+                let a = iter.next()?;
+                assert!(
+                    a.time_s >= *last_t,
+                    "Workload::Arrivals must be sorted by time for streaming injection"
+                );
+                *last_t = a.time_s;
+                if a.time_s >= *duration_s {
+                    continue;
+                }
+                let id = *next_id;
+                *next_id += 1;
+                return Some(Arrival { id, time_s: a.time_s });
+            },
+            SourceIter::Pattern(p) => p.next(),
+        }
+    }
+}
+
+/// Generate all arrivals in [0, duration_s) for a pattern.
+///
+/// Thin wrapper: collects the streaming [`PatternSource`], byte-identical
+/// to the historical materializing generator (see the golden tests below).
+pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
+    PatternSource::new(pattern, duration_s, seed).collect()
 }
 
 /// One named open-loop stream of a multi-stream workload: a model name
@@ -130,25 +193,12 @@ pub struct StreamArrival {
 /// (`Pcg64::new(seed, i)` seeds its generator), so adding, removing, or
 /// reordering *other* streams never perturbs a stream's own arrival
 /// times; ties at identical times break by stream index, and global ids
-/// are assigned after the merge so they are monotone in time.
+/// are monotone in time.
+///
+/// Thin wrapper: collects the lazy k-way [`MergedSource`], byte-identical
+/// to the historical sort-based merge.
 pub fn generate_streams(streams: &[StreamSpec], duration_s: f64, seed: u64) -> Vec<StreamArrival> {
-    let mut merged: Vec<StreamArrival> = Vec::new();
-    for (si, spec) in streams.iter().enumerate() {
-        let stream_seed = Pcg64::new(seed, si as u64).next_u64();
-        for a in generate(&spec.pattern, duration_s, stream_seed) {
-            merged.push(StreamArrival { id: 0, stream: si, time_s: a.time_s });
-        }
-    }
-    merged.sort_by(|a, b| {
-        a.time_s
-            .partial_cmp(&b.time_s)
-            .expect("NaN arrival time")
-            .then(a.stream.cmp(&b.stream))
-    });
-    for (i, a) in merged.iter_mut().enumerate() {
-        a.id = i as u64;
-    }
-    merged
+    MergedSource::new(streams, duration_s, seed).collect()
 }
 
 /// Observed average rate of an arrival vector (requests/second).
@@ -165,6 +215,195 @@ pub fn observed_rate_in(arrivals: &[Arrival], lo_s: f64, hi_s: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Frozen copy of the pre-streaming materializing generator. The
+    /// streaming wrappers must reproduce it byte for byte — this is the
+    /// golden oracle for the workload layer (new patterns excluded: they
+    /// never had a materializing form).
+    fn reference_generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut out = Vec::new();
+        let mut id = 0u64;
+        let mut push = |t: f64, out: &mut Vec<Arrival>| {
+            out.push(Arrival { id, time_s: t });
+            id += 1;
+        };
+        match pattern {
+            Pattern::Poisson { rate } => {
+                assert!(*rate > 0.0);
+                let mut t = rng.exponential(*rate);
+                while t < duration_s {
+                    push(t, &mut out);
+                    t += rng.exponential(*rate);
+                }
+            }
+            Pattern::Uniform { rate } => {
+                assert!(*rate > 0.0);
+                let gap = 1.0 / rate;
+                let mut t = gap;
+                while t < duration_s {
+                    push(t, &mut out);
+                    t += gap;
+                }
+            }
+            Pattern::Spike { base_rate, burst_rate, start_s, duration_s: burst_len } => {
+                assert!(*base_rate > 0.0 && *burst_rate > 0.0);
+                let lambda_max = base_rate.max(*burst_rate);
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(lambda_max);
+                    if t >= duration_s {
+                        break;
+                    }
+                    let in_burst = t >= *start_s && t < start_s + burst_len;
+                    let rate = if in_burst { *burst_rate } else { *base_rate };
+                    if rng.next_f64() < rate / lambda_max {
+                        push(t, &mut out);
+                    }
+                }
+            }
+            Pattern::ClosedLoop { concurrency } => {
+                for _ in 0..*concurrency {
+                    push(0.0, &mut out);
+                }
+            }
+            Pattern::Trace { times_s } => {
+                let mut times: Vec<f64> =
+                    times_s.iter().copied().filter(|&t| t < duration_s).collect();
+                times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for t in times {
+                    push(t, &mut out);
+                }
+            }
+            _ => unreachable!("no frozen reference for post-streaming patterns"),
+        }
+        out
+    }
+
+    /// Frozen copy of the pre-streaming sort-based multi-stream merge.
+    fn reference_generate_streams(
+        streams: &[StreamSpec],
+        duration_s: f64,
+        seed: u64,
+    ) -> Vec<StreamArrival> {
+        let mut merged: Vec<StreamArrival> = Vec::new();
+        for (si, spec) in streams.iter().enumerate() {
+            let stream_seed = Pcg64::new(seed, si as u64).next_u64();
+            for a in reference_generate(&spec.pattern, duration_s, stream_seed) {
+                merged.push(StreamArrival { id: 0, stream: si, time_s: a.time_s });
+            }
+        }
+        merged.sort_by(|a, b| {
+            a.time_s
+                .partial_cmp(&b.time_s)
+                .expect("NaN arrival time")
+                .then(a.stream.cmp(&b.stream))
+        });
+        for (i, a) in merged.iter_mut().enumerate() {
+            a.id = i as u64;
+        }
+        merged
+    }
+
+    #[test]
+    fn generate_is_byte_identical_to_frozen_reference() {
+        let patterns = [
+            Pattern::Poisson { rate: 100.0 },
+            Pattern::Uniform { rate: 64.0 },
+            Pattern::Spike { base_rate: 20.0, burst_rate: 200.0, start_s: 8.0, duration_s: 4.0 },
+            Pattern::ClosedLoop { concurrency: 6 },
+            Pattern::Trace { times_s: vec![5.0, 1.0, 99.0, 3.0, 3.0] },
+        ];
+        for p in &patterns {
+            for seed in [0u64, 7, 42, 12345] {
+                for duration in [1.0, 10.0, 30.0] {
+                    assert_eq!(
+                        generate(p, duration, seed),
+                        reference_generate(p, duration, seed),
+                        "{p:?} seed {seed} duration {duration}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generate_streams_is_byte_identical_to_frozen_reference() {
+        let streams = vec![
+            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 50.0 } },
+            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 30.0 } },
+            StreamSpec {
+                name: "c".into(),
+                pattern: Pattern::Spike {
+                    base_rate: 15.0,
+                    burst_rate: 150.0,
+                    start_s: 4.0,
+                    duration_s: 3.0,
+                },
+            },
+        ];
+        for seed in [0u64, 7, 42] {
+            assert_eq!(
+                generate_streams(&streams, 20.0, seed),
+                reference_generate_streams(&streams, 20.0, seed),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn workload_source_matches_generate() {
+        let w = Workload::Stream { pattern: Pattern::Poisson { rate: 80.0 }, seed: 9 };
+        let streamed: Vec<Arrival> = w.source(10.0).collect();
+        assert_eq!(streamed, generate(&Pattern::Poisson { rate: 80.0 }, 10.0, 9));
+        assert_eq!(w.count_in(10.0), streamed.len() as u64);
+    }
+
+    #[test]
+    fn workload_arrivals_clip_and_reindex() {
+        let w = Workload::Arrivals(vec![
+            Arrival { id: 10, time_s: 1.0 },
+            Arrival { id: 11, time_s: 5.0 },
+            Arrival { id: 12, time_s: 15.0 },
+        ]);
+        let got: Vec<Arrival> = w.source(10.0).collect();
+        assert_eq!(
+            got,
+            vec![Arrival { id: 0, time_s: 1.0 }, Arrival { id: 1, time_s: 5.0 }]
+        );
+        assert_eq!(w.count_in(10.0), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted by time")]
+    fn workload_arrivals_reject_unsorted() {
+        let w = Workload::Arrivals(vec![
+            Arrival { id: 0, time_s: 5.0 },
+            Arrival { id: 1, time_s: 1.0 },
+        ]);
+        let _: Vec<Arrival> = w.source(10.0).collect();
+    }
+
+    #[test]
+    fn workload_closed_loop_clients() {
+        assert_eq!(Workload::ClosedLoop { clients: 4 }.closed_loop_clients(), Some(4));
+        assert_eq!(
+            Workload::Stream { pattern: Pattern::ClosedLoop { concurrency: 3 }, seed: 0 }
+                .closed_loop_clients(),
+            Some(3)
+        );
+        assert_eq!(
+            Workload::Stream { pattern: Pattern::Poisson { rate: 1.0 }, seed: 0 }
+                .closed_loop_clients(),
+            None
+        );
+        // The source is the single source of truth for the initial wave.
+        let w = Workload::ClosedLoop { clients: 4 };
+        let wave: Vec<Arrival> = w.source(10.0).collect();
+        assert_eq!(wave.len(), 4);
+        assert!(wave.iter().all(|a| a.time_s == 0.0));
+    }
 
     #[test]
     fn poisson_rate_matches() {

@@ -1,0 +1,487 @@
+//! Streaming arrival sources: O(1)-memory workload generation.
+//!
+//! Every pattern in [`Pattern`] has a streaming implementation here that
+//! yields arrivals one at a time in non-decreasing time order, drawing from
+//! its RNG in *exactly* the order the materializing generator always did —
+//! `generate` and `generate_streams` are now thin `collect()` wrappers over
+//! these sources and stay byte-identical to their historical output. The
+//! serving engines pull from a source lazily, so a 10⁸-request trace never
+//! exists in memory: resident set stays flat in request count.
+//!
+//! Multi-stream workloads merge per-stream sources through a k-way heap
+//! keyed on `(time, stream index)`. Each stream's own sequence is
+//! non-decreasing and at most one candidate per stream sits in the heap, so
+//! the heap order is exactly the stable sort by `(time, stream)` that the
+//! materializing merge performed — determinism survives the tie-break.
+
+use super::{Arrival, Pattern, StreamArrival, StreamSpec};
+use crate::util::rng::Pcg64;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// A streaming arrival source: an iterator over [`Arrival`]s whose times
+/// are non-decreasing. Blanket-implemented, so any conforming iterator
+/// (including adapters over [`PatternSource`]) is a `WorkloadSource`.
+pub trait WorkloadSource: Iterator<Item = Arrival> {}
+impl<T: Iterator<Item = Arrival>> WorkloadSource for T {}
+
+/// Rate shapes realized by Lewis–Shedler thinning: candidates are drawn
+/// from a homogeneous Poisson process at the envelope rate `max_rate` and
+/// accepted with probability `rate_at(t) / max_rate`, which realizes the
+/// exact inhomogeneous process (rates switch at window boundaries *to the
+/// sample*, not lagged by a gap).
+#[derive(Debug, Clone)]
+enum RateShape {
+    /// Base rate with a burst window [start, start+len).
+    Spike { base_rate: f64, burst_rate: f64, start_s: f64, burst_len: f64 },
+    /// Sinusoidal day/night cycle: λ(t) = base · (1 + amplitude·sin(2πt/period)).
+    Diurnal { base_rate: f64, amplitude: f64, period_s: f64 },
+    /// Flash crowd: base, linear ramp to peak over `ramp_s` starting at
+    /// `start_s`, hold for `hold_s`, linear decay back over `decay_s`.
+    FlashCrowd {
+        base_rate: f64,
+        peak_rate: f64,
+        start_s: f64,
+        ramp_s: f64,
+        hold_s: f64,
+        decay_s: f64,
+    },
+}
+
+impl RateShape {
+    fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            RateShape::Spike { base_rate, burst_rate, start_s, burst_len } => {
+                let in_burst = t >= *start_s && t < start_s + burst_len;
+                if in_burst {
+                    *burst_rate
+                } else {
+                    *base_rate
+                }
+            }
+            RateShape::Diurnal { base_rate, amplitude, period_s } => {
+                base_rate * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin())
+            }
+            RateShape::FlashCrowd { base_rate, peak_rate, start_s, ramp_s, hold_s, decay_s } => {
+                if t < *start_s {
+                    *base_rate
+                } else if t < start_s + ramp_s {
+                    base_rate + (peak_rate - base_rate) * (t - start_s) / ramp_s
+                } else if t < start_s + ramp_s + hold_s {
+                    *peak_rate
+                } else if t < start_s + ramp_s + hold_s + decay_s {
+                    let into = t - start_s - ramp_s - hold_s;
+                    peak_rate - (peak_rate - base_rate) * into / decay_s
+                } else {
+                    *base_rate
+                }
+            }
+        }
+    }
+
+    /// Thinning envelope: must dominate `rate_at` everywhere.
+    fn max_rate(&self) -> f64 {
+        match self {
+            RateShape::Spike { base_rate, burst_rate, .. } => base_rate.max(*burst_rate),
+            RateShape::Diurnal { base_rate, amplitude, .. } => base_rate * (1.0 + amplitude),
+            RateShape::FlashCrowd { base_rate, peak_rate, .. } => base_rate.max(*peak_rate),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum State {
+    /// Poisson holds the *next* arrival time: the materializing generator
+    /// drew the first gap before its loop, so the constructor does too.
+    Poisson { rng: Pcg64, rate: f64, t: f64 },
+    /// Uniform accumulates `t += gap` (matching the generator's loop; no
+    /// multiplication-based regeneration, which would round differently).
+    Uniform { gap: f64, t: f64 },
+    /// Thinned inhomogeneous Poisson: draws lag acceptance, so `t` here is
+    /// the last *candidate* time, advanced inside `next()`.
+    Thinned { rng: Pcg64, shape: RateShape, lambda_max: f64, t: f64, done: bool },
+    /// Initial wave of a closed-loop run: `remaining` arrivals at t=0
+    /// (reissues are simulated by the serving engine at completion time).
+    ClosedLoop { remaining: usize },
+    /// Trace replay is inherently materialized: clipped + sorted up front.
+    Trace { times: std::vec::IntoIter<f64> },
+}
+
+/// Streaming generator for one [`Pattern`] over `[0, duration_s)`.
+///
+/// `Clone` is cheap (RNG + scalars, except `Trace`), which is what the
+/// engines use for the O(1)-memory counting pre-pass that splits the issue
+/// and loop RNG phases.
+#[derive(Debug, Clone)]
+pub struct PatternSource {
+    duration_s: f64,
+    next_id: u64,
+    state: State,
+}
+
+impl PatternSource {
+    pub fn new(pattern: &Pattern, duration_s: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let state = match pattern {
+            Pattern::Poisson { rate } => {
+                assert!(*rate > 0.0);
+                let t = rng.exponential(*rate);
+                State::Poisson { rng, rate: *rate, t }
+            }
+            Pattern::Uniform { rate } => {
+                assert!(*rate > 0.0);
+                let gap = 1.0 / rate;
+                State::Uniform { gap, t: gap }
+            }
+            Pattern::Spike { base_rate, burst_rate, start_s, duration_s: burst_len } => {
+                assert!(*base_rate > 0.0 && *burst_rate > 0.0);
+                let shape = RateShape::Spike {
+                    base_rate: *base_rate,
+                    burst_rate: *burst_rate,
+                    start_s: *start_s,
+                    burst_len: *burst_len,
+                };
+                let lambda_max = shape.max_rate();
+                State::Thinned { rng, shape, lambda_max, t: 0.0, done: false }
+            }
+            Pattern::Diurnal { base_rate, amplitude, period_s } => {
+                assert!(*base_rate > 0.0 && *period_s > 0.0);
+                assert!((0.0..=1.0).contains(amplitude), "amplitude must be in [0, 1]");
+                let shape = RateShape::Diurnal {
+                    base_rate: *base_rate,
+                    amplitude: *amplitude,
+                    period_s: *period_s,
+                };
+                let lambda_max = shape.max_rate();
+                State::Thinned { rng, shape, lambda_max, t: 0.0, done: false }
+            }
+            Pattern::FlashCrowd { base_rate, peak_rate, start_s, ramp_s, hold_s, decay_s } => {
+                assert!(*base_rate > 0.0 && *peak_rate > 0.0);
+                assert!(*ramp_s >= 0.0 && *hold_s >= 0.0 && *decay_s >= 0.0);
+                let shape = RateShape::FlashCrowd {
+                    base_rate: *base_rate,
+                    peak_rate: *peak_rate,
+                    start_s: *start_s,
+                    ramp_s: *ramp_s,
+                    hold_s: *hold_s,
+                    decay_s: *decay_s,
+                };
+                let lambda_max = shape.max_rate();
+                State::Thinned { rng, shape, lambda_max, t: 0.0, done: false }
+            }
+            Pattern::ClosedLoop { concurrency } => State::ClosedLoop { remaining: *concurrency },
+            Pattern::Trace { times_s } => {
+                // Clip then sort *before* assigning ids so ids stay monotone
+                // in time (same contract as every other pattern).
+                let mut times: Vec<f64> =
+                    times_s.iter().copied().filter(|&t| t < duration_s).collect();
+                times.sort_by(|a, b| a.partial_cmp(b).expect("NaN trace time"));
+                State::Trace { times: times.into_iter() }
+            }
+        };
+        PatternSource { duration_s, next_id: 0, state }
+    }
+
+    fn emit(&mut self, time_s: f64) -> Option<Arrival> {
+        let a = Arrival { id: self.next_id, time_s };
+        self.next_id += 1;
+        Some(a)
+    }
+}
+
+impl Iterator for PatternSource {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        let duration_s = self.duration_s;
+        match &mut self.state {
+            State::Poisson { rng, rate, t } => {
+                if *t < duration_s {
+                    let at = *t;
+                    *t += rng.exponential(*rate);
+                    self.emit(at)
+                } else {
+                    None
+                }
+            }
+            State::Uniform { gap, t } => {
+                if *t < duration_s {
+                    let at = *t;
+                    *t += *gap;
+                    self.emit(at)
+                } else {
+                    None
+                }
+            }
+            State::Thinned { rng, shape, lambda_max, t, done } => {
+                if *done {
+                    return None;
+                }
+                loop {
+                    *t += rng.exponential(*lambda_max);
+                    if *t >= duration_s {
+                        *done = true;
+                        return None;
+                    }
+                    let rate = shape.rate_at(*t);
+                    if rng.next_f64() < rate / *lambda_max {
+                        let at = *t;
+                        return self.emit(at);
+                    }
+                }
+            }
+            State::ClosedLoop { remaining } => {
+                if *remaining > 0 {
+                    *remaining -= 1;
+                    self.emit(0.0)
+                } else {
+                    None
+                }
+            }
+            State::Trace { times } => {
+                let at = times.next()?;
+                self.emit(at)
+            }
+        }
+    }
+}
+
+/// Heap candidate for the k-way merge; min-ordered by `(time, stream)`.
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    time_s: f64,
+    stream: usize,
+}
+
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Candidate {}
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_s
+            .partial_cmp(&other.time_s)
+            .expect("NaN arrival time")
+            .then(self.stream.cmp(&other.stream))
+    }
+}
+
+/// Lazy k-way merge of per-stream [`PatternSource`]s.
+///
+/// Stream `i` draws from its own PCG stream (`Pcg64::new(seed, i)` seeds
+/// its generator) exactly as `generate_streams` always did, so adding,
+/// removing, or reordering *other* streams never perturbs a stream's own
+/// arrival times. Ties at identical times break by stream index, and
+/// global ids are assigned at pop, so they are dense and monotone in time —
+/// the merged sequence is byte-identical to the materializing merge.
+///
+/// Memory is O(streams), independent of the number of arrivals: this is
+/// what makes Zipf-popularity workloads over hundreds to thousands of
+/// models viable at 10⁸-request horizons.
+#[derive(Debug, Clone)]
+pub struct MergedSource {
+    sources: Vec<PatternSource>,
+    heap: BinaryHeap<Reverse<Candidate>>,
+    next_id: u64,
+}
+
+impl MergedSource {
+    pub fn new(streams: &[StreamSpec], duration_s: f64, seed: u64) -> Self {
+        let mut sources = Vec::with_capacity(streams.len());
+        let mut heap = BinaryHeap::with_capacity(streams.len());
+        for (si, spec) in streams.iter().enumerate() {
+            let stream_seed = Pcg64::new(seed, si as u64).next_u64();
+            let mut source = PatternSource::new(&spec.pattern, duration_s, stream_seed);
+            if let Some(a) = source.next() {
+                heap.push(Reverse(Candidate { time_s: a.time_s, stream: si }));
+            }
+            sources.push(source);
+        }
+        MergedSource { sources, heap, next_id: 0 }
+    }
+
+    /// Number of merged streams.
+    pub fn stream_count(&self) -> usize {
+        self.sources.len()
+    }
+}
+
+impl Iterator for MergedSource {
+    type Item = StreamArrival;
+
+    fn next(&mut self) -> Option<StreamArrival> {
+        let Reverse(c) = self.heap.pop()?;
+        if let Some(next) = self.sources[c.stream].next() {
+            self.heap.push(Reverse(Candidate { time_s: next.time_s, stream: c.stream }));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(StreamArrival { id, stream: c.stream, time_s: c.time_s })
+    }
+}
+
+/// Zipf-distributed model popularity: `n_streams` Poisson streams whose
+/// rates follow rank^(-exponent), normalized to `total_rate`. Stream 0 is
+/// the most popular model — the long tail of rarely-hit models is exactly
+/// the regime where lazy merging beats materialization.
+pub fn zipf_streams(prefix: &str, n_streams: usize, exponent: f64, total_rate: f64) -> Vec<StreamSpec> {
+    assert!(n_streams > 0);
+    assert!(total_rate > 0.0);
+    assert!(exponent >= 0.0);
+    let weights: Vec<f64> = (1..=n_streams).map(|k| (k as f64).powf(-exponent)).collect();
+    let z: f64 = weights.iter().sum();
+    weights
+        .into_iter()
+        .enumerate()
+        .map(|(i, w)| StreamSpec {
+            name: format!("{prefix}{i}"),
+            pattern: Pattern::Poisson { rate: total_rate * w / z },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, generate_streams, observed_rate_in};
+
+    #[test]
+    fn pattern_source_collects_to_generate() {
+        // The wrapper relationship, stated directly: collecting the source
+        // IS generate. (generate itself is golden-tested against a frozen
+        // reference in workload::tests.)
+        let patterns = [
+            Pattern::Poisson { rate: 120.0 },
+            Pattern::Uniform { rate: 75.0 },
+            Pattern::Spike { base_rate: 30.0, burst_rate: 300.0, start_s: 5.0, duration_s: 3.0 },
+            Pattern::ClosedLoop { concurrency: 12 },
+            Pattern::Trace { times_s: vec![4.0, 0.5, 11.0, 2.5, 2.5] },
+        ];
+        for p in &patterns {
+            let streamed: Vec<Arrival> = PatternSource::new(p, 10.0, 77).collect();
+            assert_eq!(streamed, generate(p, 10.0, 77), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn sources_are_fused_after_exhaustion() {
+        let mut s = PatternSource::new(&Pattern::Poisson { rate: 50.0 }, 2.0, 3);
+        while s.next().is_some() {}
+        for _ in 0..4 {
+            assert!(s.next().is_none());
+        }
+    }
+
+    #[test]
+    fn merged_source_collects_to_generate_streams() {
+        let streams = vec![
+            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 60.0 } },
+            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 45.0 } },
+            StreamSpec {
+                name: "c".into(),
+                pattern: Pattern::Spike {
+                    base_rate: 10.0,
+                    burst_rate: 90.0,
+                    start_s: 3.0,
+                    duration_s: 2.0,
+                },
+            },
+        ];
+        let streamed: Vec<StreamArrival> = MergedSource::new(&streams, 12.0, 5).collect();
+        assert_eq!(streamed, generate_streams(&streams, 12.0, 5));
+    }
+
+    #[test]
+    fn merged_source_tie_break_is_stream_index() {
+        // Uniform streams at the same rate collide at every arrival time;
+        // ties must resolve by stream index, exactly like the stable sort.
+        let streams = vec![
+            StreamSpec { name: "a".into(), pattern: Pattern::Uniform { rate: 10.0 } },
+            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 10.0 } },
+        ];
+        let merged: Vec<StreamArrival> = MergedSource::new(&streams, 1.0, 1).collect();
+        assert_eq!(merged, generate_streams(&streams, 1.0, 1));
+        for pair in merged.chunks(2) {
+            assert_eq!(pair[0].time_s, pair[1].time_s);
+            assert_eq!((pair[0].stream, pair[1].stream), (0, 1));
+        }
+    }
+
+    #[test]
+    fn merged_source_is_constant_memory_in_arrivals() {
+        // Structural guarantee: the heap never holds more than one
+        // candidate per stream, regardless of how many arrivals flow.
+        let streams = zipf_streams("m", 50, 1.0, 500.0);
+        let mut src = MergedSource::new(&streams, 5.0, 9);
+        let mut n = 0u64;
+        while src.next().is_some() {
+            assert!(src.heap.len() <= src.stream_count());
+            n += 1;
+        }
+        assert!(n > 1000, "expected a busy merge, got {n}");
+    }
+
+    #[test]
+    fn zipf_rates_normalized_and_skewed() {
+        let streams = zipf_streams("m", 100, 1.2, 1000.0);
+        assert_eq!(streams.len(), 100);
+        let rates: Vec<f64> = streams
+            .iter()
+            .map(|s| match s.pattern {
+                Pattern::Poisson { rate } => rate,
+                _ => unreachable!(),
+            })
+            .collect();
+        let total: f64 = rates.iter().sum();
+        assert!((total - 1000.0).abs() < 1e-9, "total {total}");
+        assert!(rates.windows(2).all(|w| w[0] >= w[1]), "rates must be rank-sorted");
+        // Rank 1 vs rank 2 follows the power law: r1/r2 = 2^1.2.
+        assert!((rates[0] / rates[1] - 2f64.powf(1.2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_rate_tracks_the_sinusoid() {
+        let p = Pattern::Diurnal { base_rate: 200.0, amplitude: 0.8, period_s: 40.0 };
+        let a: Vec<Arrival> = PatternSource::new(&p, 40.0, 21).collect();
+        // Peak quarter (sin=+1 at t=10) vs trough quarter (sin=-1 at t=30).
+        let peak = observed_rate_in(&a, 5.0, 15.0);
+        let trough = observed_rate_in(&a, 25.0, 35.0);
+        assert!(peak > 2.5 * trough, "peak {peak} vs trough {trough}");
+        assert!((peak - 360.0).abs() < 0.15 * 360.0, "peak-quarter rate {peak}");
+    }
+
+    #[test]
+    fn flash_crowd_ramps_holds_decays() {
+        let p = Pattern::FlashCrowd {
+            base_rate: 50.0,
+            peak_rate: 500.0,
+            start_s: 10.0,
+            ramp_s: 2.0,
+            hold_s: 6.0,
+            decay_s: 2.0,
+        };
+        let a: Vec<Arrival> = PatternSource::new(&p, 30.0, 33).collect();
+        let before = observed_rate_in(&a, 0.0, 10.0);
+        let hold = observed_rate_in(&a, 12.0, 18.0);
+        let after = observed_rate_in(&a, 22.0, 30.0);
+        assert!((before - 50.0).abs() < 0.35 * 50.0, "pre-crowd rate {before}");
+        assert!((hold - 500.0).abs() < 0.12 * 500.0, "hold rate {hold}");
+        assert!((after - 50.0).abs() < 0.35 * 50.0, "post-crowd rate {after}");
+    }
+
+    #[test]
+    fn diurnal_deterministic_per_seed() {
+        let p = Pattern::Diurnal { base_rate: 100.0, amplitude: 0.5, period_s: 20.0 };
+        let a: Vec<Arrival> = PatternSource::new(&p, 20.0, 4).collect();
+        let b: Vec<Arrival> = PatternSource::new(&p, 20.0, 4).collect();
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].time_s <= w[1].time_s));
+    }
+}

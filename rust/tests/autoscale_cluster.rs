@@ -4,13 +4,13 @@
 //! coordinator's `cluster_sim` submission path end to end.
 
 use inferbench::coordinator::{Leader, LeaderConfig};
-use inferbench::metrics::ScaleEventKind;
+use inferbench::metrics::{MetricsMode, ScaleEventKind};
 use inferbench::perfdb::Query;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
 use inferbench::serving::cluster::{run as run_cluster, ClusterConfig, ClusterResult, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel, Software};
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 const WEIGHT_BYTES: u64 = 100_000_000;
 
@@ -25,18 +25,22 @@ fn replica(software: &'static Software) -> ReplicaConfig {
 
 fn spike_config(software: &'static Software, autoscale: Option<AutoscaleConfig>) -> ClusterConfig {
     ClusterConfig {
-        arrivals: generate(
-            &Pattern::Spike { base_rate: 120.0, burst_rate: 700.0, start_s: 15.0, duration_s: 10.0 },
-            50.0,
-            909,
-        ),
-        closed_loop: None,
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
+                base_rate: 120.0,
+                burst_rate: 700.0,
+                start_s: 15.0,
+                duration_s: 10.0,
+            },
+            seed: 909,
+        },
         duration_s: 50.0,
         replicas: vec![replica(software), replica(software)],
         router: RouterPolicy::LeastOutstanding,
         autoscale,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 909,
     }
 }
@@ -139,7 +143,7 @@ fn draining_replica_takes_no_new_traffic() {
     // removes one replica at the first evaluation; all later work lands
     // on the survivors.
     let mut cfg = spike_config(&backends::TFS, Some(queue_depth_scaler(&backends::TFS)));
-    cfg.arrivals = generate(&Pattern::Uniform { rate: 40.0 }, 30.0, 4);
+    cfg.workload = Workload::Stream { pattern: Pattern::Uniform { rate: 40.0 }, seed: 4 };
     cfg.duration_s = 30.0;
     cfg.replicas = vec![
         replica(&backends::TFS),

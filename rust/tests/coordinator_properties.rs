@@ -231,7 +231,7 @@ fn prop_batcher_fifo_across_batches() {
 fn prop_sim_conservation_under_random_configs() {
     use inferbench::pipeline::{Processors, RequestPath};
     use inferbench::serving::{backends, run, ServiceModel, SimConfig};
-    use inferbench::workload::{generate, Pattern};
+    use inferbench::workload::{Pattern, Workload};
 
     forall(
         "sim-conserves-requests",
@@ -246,8 +246,7 @@ fn prop_sim_conservation_under_random_configs() {
         |&(rate, max_size, service_ms, sw)| {
             let software = backends::ALL[sw];
             let config = SimConfig {
-                arrivals: generate(&Pattern::Poisson { rate }, 10.0, 77),
-                closed_loop: None,
+                workload: Workload::Stream { pattern: Pattern::Poisson { rate }, seed: 77 },
                 duration_s: 10.0,
                 policy: Policy::Dynamic { max_size, max_wait_s: 0.005 },
                 software,
@@ -259,7 +258,7 @@ fn prop_sim_conservation_under_random_configs() {
                 max_queue: 100_000,
                 seed: 5,
             };
-            let n = config.arrivals.len() as u64;
+            let n = config.workload.count_in(config.duration_s);
             let r = run(&config);
             if r.collector.completed + r.dropped != n {
                 return Err(format!(

@@ -29,7 +29,8 @@ use inferbench::serving::{
     backends, DynamicBatching, Policy, Router, RouterPolicy, ServiceModel, Software,
 };
 use inferbench::util::rng::Pcg64;
-use inferbench::workload::{generate, Pattern};
+use inferbench::metrics::MetricsMode;
+use inferbench::workload::{Pattern, Workload};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
@@ -304,12 +305,17 @@ fn run_reference(config: &ClusterConfig) -> RefResult {
         rpush(heap, enqueue_at, REvent::Enqueue { id }, seq);
     };
 
-    if let Some(clients) = config.closed_loop {
+    // The reference engine predates streaming: issue the entire workload
+    // upfront, exactly as the old materialize-everything pipeline did.
+    // (`Workload::source` is golden-tested to reproduce `generate`, so the
+    // reference still sees the pre-refactor arrival sequence.)
+    let closed_loop = config.workload.closed_loop_clients();
+    if let Some(clients) = closed_loop {
         for _ in 0..clients {
             issue(0.0, &mut heap, &mut traces, &mut rng, &mut seq);
         }
     } else {
-        for a in &config.arrivals {
+        for a in config.workload.source(config.duration_s) {
             if a.time_s < config.duration_s {
                 issue(a.time_s, &mut heap, &mut traces, &mut rng, &mut seq);
             }
@@ -374,7 +380,7 @@ fn run_reference(config: &ClusterConfig) -> RefResult {
                     traces.remove(&id).expect("trace");
                     r.dropped += 1;
                     dropped += 1;
-                    if config.closed_loop.is_some() && now < config.duration_s {
+                    if closed_loop.is_some() && now < config.duration_s {
                         issue(
                             now + REJECT_RETRY_BACKOFF_S,
                             &mut heap,
@@ -432,7 +438,7 @@ fn run_reference(config: &ClusterConfig) -> RefResult {
                     e2e.push(trace.completed_s - trace.arrival_s);
                     first_arrival_s = first_arrival_s.min(trace.arrival_s);
                     last_completion_s = last_completion_s.max(trace.completed_s);
-                    if config.closed_loop.is_some() && trace.completed_s < config.duration_s {
+                    if closed_loop.is_some() && trace.completed_s < config.duration_s {
                         issue(trace.completed_s, &mut heap, &mut traces, &mut rng, &mut seq);
                     }
                 }
@@ -610,8 +616,7 @@ fn golden_fixed_fleet_every_router() {
     ] {
         let dynamic = Policy::Dynamic { max_size: 8, max_wait_s: 0.003 };
         let cfg = ClusterConfig {
-            arrivals: generate(&Pattern::Poisson { rate: 300.0 }, 20.0, 31),
-            closed_loop: None,
+            workload: Workload::Stream { pattern: Pattern::Poisson { rate: 300.0 }, seed: 31 },
             duration_s: 20.0,
             replicas: vec![
                 replica(3.0, dynamic, &backends::TRIS),
@@ -622,6 +627,7 @@ fn golden_fixed_fleet_every_router() {
             autoscale: None,
             cold_start: None,
             path: RequestPath::local(Processors::image()),
+            metrics: MetricsMode::Exact,
             seed: 31,
         };
         assert_engines_match(&cfg, router.label());
@@ -631,12 +637,15 @@ fn golden_fixed_fleet_every_router() {
 #[test]
 fn golden_autoscale_spike() {
     let cfg = ClusterConfig {
-        arrivals: generate(
-            &Pattern::Spike { base_rate: 80.0, burst_rate: 500.0, start_s: 10.0, duration_s: 8.0 },
-            40.0,
-            77,
-        ),
-        closed_loop: None,
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
+                base_rate: 80.0,
+                burst_rate: 500.0,
+                start_s: 10.0,
+                duration_s: 8.0,
+            },
+            seed: 77,
+        },
         duration_s: 40.0,
         replicas: vec![replica(5.0, Policy::Single, &backends::TFS)],
         router: RouterPolicy::LeastOutstanding,
@@ -654,6 +663,7 @@ fn golden_autoscale_spike() {
         }),
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 77,
     };
     assert_engines_match(&cfg, "autoscale-spike");
@@ -662,8 +672,7 @@ fn golden_autoscale_spike() {
 #[test]
 fn golden_closed_loop_with_rejections() {
     let cfg = ClusterConfig {
-        arrivals: vec![],
-        closed_loop: Some(6),
+        workload: Workload::ClosedLoop { clients: 6 },
         duration_s: 8.0,
         replicas: vec![
             ReplicaConfig { max_queue: 2, ..replica(4.0, Policy::Single, &backends::TRIS) },
@@ -673,6 +682,7 @@ fn golden_closed_loop_with_rejections() {
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 13,
     };
     let golden = run_reference(&cfg);
@@ -683,14 +693,14 @@ fn golden_closed_loop_with_rejections() {
 #[test]
 fn golden_fixed_batch_with_image_pipeline() {
     let cfg = ClusterConfig {
-        arrivals: generate(&Pattern::Uniform { rate: 120.0 }, 15.0, 5),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Uniform { rate: 120.0 }, seed: 5 },
         duration_s: 15.0,
         replicas: vec![replica(6.0, Policy::Fixed { size: 4, timeout_s: 0.02 }, &backends::TFS)],
         router: RouterPolicy::RoundRobin,
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::image()),
+        metrics: MetricsMode::Exact,
         seed: 9,
     };
     assert_engines_match(&cfg, "fixed-batch-image");

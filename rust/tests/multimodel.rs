@@ -3,7 +3,7 @@
 //! and golden-style determinism of a multimodel grid at 1/2/8 threads
 //! (the `tests/parallel_sweep.rs` contract extended to the new engine).
 
-use inferbench::metrics::PlacementEventKind;
+use inferbench::metrics::{MetricsMode, PlacementEventKind};
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::multimodel::{
     self, ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
@@ -40,6 +40,7 @@ fn base(models: Vec<ModelSpec>, replicas: Vec<MultiReplicaConfig>) -> MultiModel
         placement_ops: vec![],
         contention: ContentionModel::default(),
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 20260727,
     }
 }

@@ -15,14 +15,14 @@
 //! path (`task: sweep` through a leader with a thread budget).
 
 use inferbench::coordinator::{Leader, LeaderConfig};
-use inferbench::metrics::Collector;
+use inferbench::metrics::{Collector, MetricsMode};
 use inferbench::perfdb::Query;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
 use inferbench::serving::cluster::{ClusterConfig, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel};
 use inferbench::sweep::{self, SweepPlan};
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 fn replica(per_req_ms: f64, policy: Policy) -> ReplicaConfig {
     ReplicaConfig {
@@ -49,8 +49,7 @@ fn scenario_plan() -> SweepPlan {
         RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.25 },
     ] {
         plan.push(format!("fixed/{}", router.label()), move |seed| ClusterConfig {
-            arrivals: generate(&Pattern::Poisson { rate: 180.0 }, 8.0, seed),
-            closed_loop: None,
+            workload: Workload::Stream { pattern: Pattern::Poisson { rate: 180.0 }, seed },
             duration_s: 8.0,
             replicas: vec![
                 replica(2.0, Policy::Single),
@@ -61,17 +60,21 @@ fn scenario_plan() -> SweepPlan {
             autoscale: None,
             cold_start: None,
             path: RequestPath::local(Processors::none()),
+            metrics: MetricsMode::Exact,
             seed,
         });
     }
     // Autoscale spike: cold starts on scale-up, drain-on-remove after.
     plan.push("autoscale/spike", |seed| ClusterConfig {
-        arrivals: generate(
-            &Pattern::Spike { base_rate: 60.0, burst_rate: 600.0, start_s: 8.0, duration_s: 8.0 },
-            30.0,
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
+                base_rate: 60.0,
+                burst_rate: 600.0,
+                start_s: 8.0,
+                duration_s: 8.0,
+            },
             seed,
-        ),
-        closed_loop: None,
+        },
         duration_s: 30.0,
         replicas: vec![replica(5.0, Policy::Single)],
         router: RouterPolicy::LeastOutstanding,
@@ -89,6 +92,7 @@ fn scenario_plan() -> SweepPlan {
         }),
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed,
     });
     // Closed loop against a tiny queue: constant rejections + re-issues.
@@ -96,27 +100,27 @@ fn scenario_plan() -> SweepPlan {
         let mut rc = replica(5.0, Policy::Single);
         rc.max_queue = 2;
         ClusterConfig {
-            arrivals: vec![],
-            closed_loop: Some(8),
+            workload: Workload::ClosedLoop { clients: 8 },
             duration_s: 6.0,
             replicas: vec![rc],
             router: RouterPolicy::LeastOutstanding,
             autoscale: None,
             cold_start: None,
             path: RequestPath::local(Processors::none()),
+            metrics: MetricsMode::Exact,
             seed,
         }
     });
     // Cold initial fleet: early requests held at the routing tier.
     plan.push("cold/hold", |seed| ClusterConfig {
-        arrivals: generate(&Pattern::Poisson { rate: 100.0 }, 8.0, seed),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate: 100.0 }, seed },
         duration_s: 8.0,
         replicas: vec![replica(4.0, Policy::Single), replica(4.0, Policy::Single)],
         router: RouterPolicy::LeastOutstanding,
         autoscale: None,
         cold_start: Some(50_000_000),
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed,
     });
     plan
@@ -226,14 +230,14 @@ fn panic_in_one_cell_surfaces_without_deadlocking() {
     // while the healthy cells around it still drain off the queue.
     let mut plan = SweepPlan::new(3);
     let healthy = |seed: u64| ClusterConfig {
-        arrivals: generate(&Pattern::Poisson { rate: 80.0 }, 2.0, seed),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate: 80.0 }, seed },
         duration_s: 2.0,
         replicas: vec![replica(3.0, Policy::Single)],
         router: RouterPolicy::RoundRobin,
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed,
     };
     for i in 0..6 {

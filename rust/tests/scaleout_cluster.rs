@@ -3,10 +3,11 @@
 //! policies, and the heterogeneous-replica routing result the fig16
 //! bench reports (least-outstanding p99 <= round-robin p99).
 
+use inferbench::metrics::MetricsMode;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::cluster::{run as run_cluster, ClusterConfig, ReplicaConfig};
 use inferbench::serving::{backends, run as run_sim, Policy, RouterPolicy, ServiceModel, SimConfig};
-use inferbench::workload::{generate, Pattern};
+use inferbench::workload::{Pattern, Workload};
 
 fn service(per_req_ms: f64) -> ServiceModel {
     ServiceModel::Measured {
@@ -30,8 +31,7 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
     // beyond its capacity, so its queue diverges; load-aware routing
     // keeps the cluster stable.
     ClusterConfig {
-        arrivals: generate(&Pattern::Poisson { rate: 380.0 }, duration, 7),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate: 380.0 }, seed: 7 },
         duration_s: duration,
         replicas: vec![
             replica(4.0, Policy::Single),
@@ -43,6 +43,7 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
         autoscale: None,
         cold_start: None,
         path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
         seed: 7,
     }
 }
@@ -50,8 +51,7 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
 #[test]
 fn n1_cluster_matches_single_server_sim() {
     let sim_cfg = SimConfig {
-        arrivals: generate(&Pattern::Poisson { rate: 120.0 }, 15.0, 3),
-        closed_loop: None,
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate: 120.0 }, seed: 3 },
         duration_s: 15.0,
         policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.004 },
         software: &backends::TFS,
@@ -61,8 +61,7 @@ fn n1_cluster_matches_single_server_sim() {
         seed: 3,
     };
     let cluster_cfg = ClusterConfig {
-        arrivals: sim_cfg.arrivals.clone(),
-        closed_loop: None,
+        workload: sim_cfg.workload.clone(),
         duration_s: sim_cfg.duration_s,
         replicas: vec![ReplicaConfig {
             software: sim_cfg.software,
@@ -74,6 +73,7 @@ fn n1_cluster_matches_single_server_sim() {
         autoscale: None,
         cold_start: None,
         path: sim_cfg.path,
+        metrics: MetricsMode::Exact,
         seed: sim_cfg.seed,
     };
     let s = run_sim(&sim_cfg);
@@ -116,7 +116,7 @@ fn least_outstanding_beats_round_robin_on_heterogeneous_replicas() {
     let rr = run_cluster(&hetero_cluster(RouterPolicy::RoundRobin, 15.0));
     let lo = run_cluster(&hetero_cluster(RouterPolicy::LeastOutstanding, 15.0));
     // Conservation holds under both routers.
-    let n = hetero_cluster(RouterPolicy::RoundRobin, 15.0).arrivals.len() as u64;
+    let n = hetero_cluster(RouterPolicy::RoundRobin, 15.0).workload.count_in(15.0);
     assert_eq!(rr.collector.completed + rr.dropped, n);
     assert_eq!(lo.collector.completed + lo.dropped, n);
     let (p99_rr, p99_lo) =
