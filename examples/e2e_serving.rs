@@ -129,6 +129,7 @@ fn cluster_scaleout_section() -> anyhow::Result<()> {
                     payload_bytes: rn.request_bytes,
                 },
                 metrics: MetricsMode::Exact,
+                admission: None,
                 seed: 99,
             };
             let r = run_cluster(&cfg);
@@ -199,6 +200,7 @@ fn autoscale_spike_section() -> anyhow::Result<()> {
             cold_start: None,
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
+            admission: None,
             seed: 2024,
         };
         let r = run_cluster(&cfg);
@@ -269,6 +271,7 @@ fn multimodel_sharing_section() -> anyhow::Result<()> {
                 contention: ContentionModel::default(),
                 path: RequestPath::local(Processors::none()),
                 metrics: MetricsMode::Exact,
+                admission: None,
                 seed: 77,
             };
             let r = multimodel::run(&cfg);

@@ -59,6 +59,7 @@ fn cluster(replicas: Vec<ReplicaConfig>, rate: f64, router: RouterPolicy) -> Clu
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: SEED,
     }
 }

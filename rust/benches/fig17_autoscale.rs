@@ -87,6 +87,7 @@ fn config_for(software: &'static Software, policy: ScalePolicy) -> ClusterConfig
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: SEED,
     }
 }

@@ -1,0 +1,220 @@
+//! Per-tenant QoS under overload (the ingress-tier figure): three
+//! priority classes — gold / silver / bronze — offered 2–5x the fleet's
+//! capacity through the shared admission tier, on the N-replica cluster
+//! DES.
+//!
+//! The admission tier sheds lowest-class-first: each class has an
+//! in-system depth (`shed_depth`), so as the backlog grows it crosses the
+//! bronze threshold first, then silver, and only then gold. Readings:
+//!
+//!  (a) the gold SLO survives every overload: bronze (and, deeper in,
+//!      silver) absorb the excess, so gold's p99 stays bounded by its
+//!      queue-depth budget while total offered load quintuples
+//!      (asserted);
+//!  (b) shedding is strictly lowest-class-first: bronze shed fraction
+//!      exceeds silver's, silver's is at least gold's, and gold never
+//!      sheds (asserted, per overload);
+//!  (c) the per-class ledgers are exact: the classes partition every
+//!      issued request, and within each class
+//!      `issued == completed + Σ dropped-by-reason` (asserted).
+//!
+//! The overload axis runs through `sweep::map_indexed` (seeds pinned to
+//! plan position via `sweep::cell_seed`), so the figure parallelizes like
+//! every other grid bench and is bit-identical at any thread count — the
+//! smoke run asserts that too.
+//!
+//! Run: `cargo bench --bench fig_qos [-- --smoke]`
+
+use inferbench::metrics::MetricsMode;
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::cluster::{self, ClusterConfig, ClusterResult, ReplicaConfig};
+use inferbench::serving::{backends, AdmissionConfig, Policy, RouterPolicy, ServiceModel, TenantSpec};
+use inferbench::sweep;
+use inferbench::util::render;
+use inferbench::workload::{Pattern, StreamSpec, Workload};
+
+const SEED: u64 = 4404;
+/// Measured per-request device time; with TrIS factors this yields
+/// ~238 rps of capacity per replica (same service model as fig_sharing).
+const PER_REQ_S: f64 = 0.005;
+const REPLICAS: usize = 2;
+/// Offered-load shares per class: gold stays under fleet capacity even at
+/// the 5x point, so the SLO question is purely about isolation.
+const SHARES: [f64; 3] = [0.15, 0.25, 0.60];
+const CLASS_NAMES: [&str; 3] = ["gold", "silver", "bronze"];
+/// In-system depth per class: the backlog crosses bronze's threshold
+/// first, then silver's; gold's budget bounds its worst-case sojourn.
+const SHED_DEPTH: [usize; 3] = [160, 80, 40];
+/// Gold p99 SLO: its depth budget over the fleet service rate, with
+/// headroom for batching/transport. ~160/476 s ≈ 340 ms would be the
+/// absolute worst case; in practice the backlog parks near silver's
+/// threshold, so 250 ms holds with margin.
+const GOLD_P99_SLO_S: f64 = 0.250;
+
+/// Effective per-request service time under TrIS (runtime factor +
+/// per-batch overhead) — the capacity unit of the overload axis.
+fn effective_service_s() -> f64 {
+    PER_REQ_S * backends::TRIS.runtime_factor + backends::TRIS.batch_overhead_s
+}
+
+fn fleet_capacity_rps() -> f64 {
+    REPLICAS as f64 / effective_service_s()
+}
+
+fn config_for(overload: f64, duration_s: f64, seed: u64) -> ClusterConfig {
+    let offered = overload * fleet_capacity_rps();
+    let streams: Vec<StreamSpec> = CLASS_NAMES
+        .iter()
+        .zip(SHARES)
+        .enumerate()
+        .map(|(c, (&name, share))| {
+            StreamSpec::new(name, Pattern::Poisson { rate: offered * share })
+                .with_qos(c as u8, 1.0)
+        })
+        .collect();
+    let admission = AdmissionConfig {
+        tenants: CLASS_NAMES
+            .iter()
+            .enumerate()
+            .map(|(c, &name)| TenantSpec::new(name).with_class(c as u8))
+            .collect(),
+        shed_depth: SHED_DEPTH.to_vec(),
+    };
+    let replica = ReplicaConfig {
+        software: &backends::TRIS,
+        service: ServiceModel::Measured { per_batch: vec![(1, PER_REQ_S)], utilization: 0.6 },
+        policy: Policy::Single,
+        max_queue: 400_000,
+    };
+    ClusterConfig {
+        workload: Workload::Streams { streams, seed },
+        duration_s,
+        replicas: (0..REPLICAS).map(|_| replica.clone()).collect(),
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
+        admission: Some(admission),
+        seed,
+    }
+}
+
+fn assert_class_ledgers(r: &ClusterResult, overload: f64) {
+    assert_eq!(r.classes.len(), 3, "{overload}x: one ledger per class");
+    let issued: u64 = r.classes.iter().map(|c| c.issued).sum();
+    assert_eq!(issued, r.issued, "{overload}x: classes must partition issued requests");
+    for cm in &r.classes {
+        assert!(
+            cm.conserved(),
+            "{overload}x class {}: {} issued != {} completed + {} dropped (reasons sum {})",
+            cm.class,
+            cm.issued,
+            cm.collector.completed,
+            cm.collector.dropped,
+            cm.collector.drop_breakdown().iter().map(|&(_, n)| n).sum::<u64>()
+        );
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = if smoke { 2 } else { sweep::default_threads() };
+    let duration_s = if smoke { 10.0 } else { 25.0 };
+    let overloads: &[f64] = if smoke { &[2.0, 5.0] } else { &[2.0, 3.0, 4.0, 5.0] };
+    let capacity = fleet_capacity_rps();
+    println!(
+        "=== Per-class QoS vs offered overload ({REPLICAS} replicas, {capacity:.0} rps capacity, \
+         {duration_s} s horizon, shed depths {SHED_DEPTH:?}, grid on {threads} threads) ===\n",
+    );
+
+    let run_grid = |threads: usize| -> Vec<ClusterResult> {
+        sweep::map_indexed(overloads, threads, |i, &overload| {
+            cluster::run(&config_for(overload, duration_s, sweep::cell_seed(SEED, i as u64)))
+        })
+    };
+    let results = run_grid(threads);
+    if smoke {
+        // Bit-identity of the QoS grid, serial vs threaded: admission is
+        // RNG-free, so the ingress tier must not perturb determinism.
+        let serial = run_grid(1);
+        for ((a, b), &overload) in results.iter().zip(&serial).zip(overloads) {
+            assert_eq!(
+                a.collector.fingerprint(),
+                b.collector.fingerprint(),
+                "{overload}x: parallel grid must be bit-identical"
+            );
+            assert_eq!(a.events, b.events);
+        }
+    }
+
+    let mut rows = Vec::new();
+    for (&overload, r) in overloads.iter().zip(&results) {
+        assert_class_ledgers(r, overload);
+        for cm in &r.classes {
+            rows.push(vec![
+                format!("{overload:.1}x"),
+                CLASS_NAMES[cm.class as usize].to_string(),
+                cm.issued.to_string(),
+                format!("{:.3}", cm.goodput()),
+                format!("{:.3}", cm.shed_fraction()),
+                if cm.collector.completed > 0 {
+                    format!("{:.1}", cm.collector.e2e.percentile(99.0) * 1e3)
+                } else {
+                    "-".to_string()
+                },
+                cm.collector.dropped.to_string(),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        render::table(
+            &["Overload", "Class", "Issued", "Goodput", "Shed", "p99 ms", "Dropped"],
+            &rows
+        )
+    );
+
+    println!();
+    for (&overload, r) in overloads.iter().zip(&results) {
+        let shed: Vec<f64> = r.classes.iter().map(|c| c.shed_fraction()).collect();
+        let gold = &r.classes[0];
+        let gold_p99 = gold.collector.e2e.percentile(99.0);
+        println!(
+            "{overload:.1}x capacity: gold p99 {:.1} ms (SLO {:.0} ms), goodput {:.3}; \
+             shed gold {:.3} / silver {:.3} / bronze {:.3}",
+            gold_p99 * 1e3,
+            GOLD_P99_SLO_S * 1e3,
+            gold.goodput(),
+            shed[0],
+            shed[1],
+            shed[2],
+        );
+        // (a) The gold SLO holds at every overload point.
+        assert!(
+            gold_p99 <= GOLD_P99_SLO_S,
+            "{overload}x: gold p99 {gold_p99}s blows the {GOLD_P99_SLO_S}s SLO"
+        );
+        assert!(gold.goodput() > 0.99, "{overload}x: gold goodput {}", gold.goodput());
+        // (b) Shedding is strictly lowest-class-first.
+        assert_eq!(shed[0], 0.0, "{overload}x: gold must never shed");
+        assert!(shed[2] > 0.0, "{overload}x: bronze absorbs the overload");
+        assert!(
+            shed[2] >= shed[1] && shed[1] >= shed[0],
+            "{overload}x: shed fractions must be monotone in class: {shed:?}"
+        );
+        assert!(shed[2] > shed[0], "{overload}x: bronze must shed strictly more than gold");
+    }
+    // Deeper overload reaches strictly higher classes: at the top of the
+    // axis silver sheds too, while gold still does not.
+    let top = results.last().expect("non-empty overload axis");
+    assert!(
+        top.classes[1].shed_fraction() > 0.0,
+        "at {}x the backlog must cross silver's threshold",
+        overloads.last().unwrap()
+    );
+    println!(
+        "\nPASS: gold p99 SLO held at every overload, shedding strictly lowest-class-first, \
+         per-class conservation exact"
+    );
+}

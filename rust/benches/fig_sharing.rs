@@ -103,6 +103,7 @@ fn config_for(mode: Mode, degree: usize, rate: f64, seed: u64) -> MultiModelConf
         contention: ContentionModel::default(),
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed,
     }
 }

@@ -73,6 +73,7 @@ fn fixed_fleet(n: u64) -> ClusterConfig {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 42,
     }
 }
@@ -117,6 +118,7 @@ fn autoscale(n: u64) -> ClusterConfig {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 43,
     }
 }
@@ -136,6 +138,7 @@ fn closed_loop(n: u64) -> ClusterConfig {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 44,
     }
 }
@@ -272,6 +275,7 @@ fn sweep_grid(fleets: &[usize], duration_s: f64) -> SweepPlan {
                 cold_start: None,
                 path: RequestPath::local(Processors::none()),
                 metrics: MetricsMode::Exact,
+                admission: None,
                 seed,
             });
         }

@@ -58,6 +58,37 @@
 //!   max_wait_ms: 2
 //! ```
 //!
+//! `cluster_sim`, `sweep`, and `multimodel` submissions also accept an
+//! optional top-level `admission:` block attaching the ingress tier's
+//! per-tenant QoS (token-bucket rate limits, priority classes shed
+//! lowest-first under overload, weighted-fair release — see
+//! `serving::ingress`). For `multimodel`, tenant i governs model stream
+//! i (counts must match); for `cluster_sim` and `sweep`, the offered
+//! rate splits evenly across the tenants, one tagged stream each. With
+//! admission on, the job emits one extra record per priority class
+//! (label `class`) carrying issued/goodput/shed_fraction and the
+//! per-reason drop breakdown; every record's `dropped` is also broken
+//! down by reason (`dropped_queue_full`, `dropped_shed`,
+//! `dropped_evicted_backlog`, `dropped_rejected_placement`):
+//!
+//! ```yaml
+//! admission:
+//!   shed_depth: [600, 200, 60]  # in-system cap per class, class 0 first
+//!   tenants:
+//!     - name: gold
+//!       class: 0
+//!       weight: 4.0             # weighted-fair share of held releases
+//!     - name: bronze
+//!       class: 2
+//!       rate: 50.0              # token-bucket limit (rps), optional
+//!       burst: 10.0             # bucket depth in tokens
+//! ```
+//!
+//! Submissions are validated loudly: malformed grid axes, bad admission
+//! shapes, and *unknown top-level keys* all fail the parse with an error
+//! naming the offender — a typo'd key never silently runs a different
+//! benchmark than the one submitted.
+//!
 //! `cluster_sim`, `sweep`, and `multimodel` submissions accept an
 //! optional top-level `scale` knob selecting the metrics backend:
 //! `scale: exact` (default) retains every latency sample; `scale: sketch`
@@ -109,12 +140,13 @@ use crate::serving::multimodel::{
     self, ModelSpec as MmModelSpec, MultiModelConfig, MultiReplicaConfig,
 };
 use crate::serving::{
-    self, backends, AutoscaleConfig, Policy, RouterPolicy, ScalePolicy, ServiceModel, SimConfig,
+    self, backends, AdmissionConfig, AutoscaleConfig, Policy, RouterPolicy, ScalePolicy,
+    ServiceModel, SimConfig, TenantSpec,
 };
 use crate::sweep::SweepPlan;
 use crate::util::json::Json;
 use crate::util::yamlish;
-use crate::workload::{Pattern, Workload};
+use crate::workload::{Pattern, StreamSpec, Workload};
 use anyhow::{anyhow, bail, Result};
 
 /// What a worker should run.
@@ -152,6 +184,10 @@ pub enum JobKind {
         /// Metrics backend (`scale:` knob): exact retention or the
         /// bounded-memory quantile sketch for long-horizon runs.
         metrics: MetricsMode,
+        /// Optional per-tenant ingress control (`admission:` block). When
+        /// present the offered rate is split evenly across the tenants,
+        /// each becoming a tagged workload stream.
+        admission: Option<AdmissionConfig>,
     },
     /// Roofline sweep of a model across batch sizes (hardware tier).
     HardwareSweep { model: String, platform: String, batches: Vec<usize> },
@@ -180,6 +216,9 @@ pub enum JobKind {
         max_batch: usize,
         /// Metrics backend (`scale:` knob), applied to every cell.
         metrics: MetricsMode,
+        /// Optional per-tenant ingress control, applied to every cell
+        /// (each cell's offered rate splits evenly across the tenants).
+        admission: Option<AdmissionConfig>,
     },
     /// Multi-model replica serving (Sharing versus Dedicate, §3.3): one
     /// Poisson stream per model against a shared fleet (co-located under
@@ -206,6 +245,9 @@ pub enum JobKind {
         max_wait_s: f64,
         /// Metrics backend (`scale:` knob), applied per model stream.
         metrics: MetricsMode,
+        /// Optional per-tenant ingress control; tenant i governs model
+        /// stream i (the tenant list must match `models` in length).
+        admission: Option<AdmissionConfig>,
     },
     /// Do nothing for a fixed time (scheduler studies; time is scaled by
     /// the leader's `time_scale`).
@@ -264,6 +306,7 @@ impl JobSpec {
             .ok_or_else(|| anyhow!("submission missing 'task'"))?;
         let kind = match task {
             "serving_sim" => {
+                reject_unknown_keys(doc, task, &["model", "platform", "software", "workload", "batching"])?;
                 let wl = doc.get("workload");
                 JobKind::ServingSim {
                     model: str_or(doc, "model", "resnet50"),
@@ -288,6 +331,12 @@ impl JobSpec {
                 }
             }
             "cluster_sim" => {
+                reject_unknown_keys(
+                    doc,
+                    task,
+                    &["model", "platform", "software", "replicas", "router", "workload",
+                      "batching", "autoscale", "scale", "sketch_alpha", "admission"],
+                )?;
                 let wl = doc.get("workload");
                 let burst = wl.and_then(|w| w.get("burst")).map(|b| BurstSpec {
                     rate_rps: b.get("rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
@@ -351,18 +400,29 @@ impl JobSpec {
                         / 1e3,
                     autoscale,
                     metrics: scale_mode(doc)?,
+                    admission: admission_spec(doc)?,
                 }
             }
-            "hardware_sweep" => JobKind::HardwareSweep {
-                model: str_or(doc, "model", "resnet50"),
-                platform: str_or(doc, "platform", "G1"),
-                batches: doc
-                    .get("batches")
-                    .and_then(|v| v.as_arr())
-                    .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|i| i as usize).collect())
-                    .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]),
-            },
+            "hardware_sweep" => {
+                reject_unknown_keys(doc, task, &["model", "platform", "batches"])?;
+                JobKind::HardwareSweep {
+                    model: str_or(doc, "model", "resnet50"),
+                    platform: str_or(doc, "platform", "G1"),
+                    batches: doc
+                        .get("batches")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|i| i as usize).collect())
+                        .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32]),
+                }
+            }
             "sweep" => {
+                reject_unknown_keys(
+                    doc,
+                    task,
+                    &["model", "platform", "software", "routers", "replicas",
+                      "batch_timeouts_ms", "workload", "batching", "scale", "sketch_alpha",
+                      "admission"],
+                )?;
                 let wl = doc.get("workload");
                 let routers: Vec<String> = match doc.get("routers").and_then(|v| v.as_arr()) {
                     Some(a) => {
@@ -450,9 +510,16 @@ impl JobSpec {
                         .and_then(|v| v.as_i64())
                         .unwrap_or(8) as usize,
                     metrics: scale_mode(doc)?,
+                    admission: admission_spec(doc)?,
                 }
             }
             "multimodel" => {
+                reject_unknown_keys(
+                    doc,
+                    task,
+                    &["platform", "software", "models", "rates", "mode", "replicas", "mem_gb",
+                      "router", "workload", "batching", "scale", "sketch_alpha", "admission"],
+                )?;
                 let wl = doc.get("workload");
                 let models: Vec<String> = match doc.get("models").and_then(|v| v.as_arr()) {
                     Some(a) => {
@@ -490,6 +557,18 @@ impl JobSpec {
                         models.len()
                     );
                 }
+                // Tenant i governs model stream i; a count mismatch is a
+                // submission error, caught before any worker runs it.
+                let admission = admission_spec(doc)?;
+                if let Some(a) = &admission {
+                    if a.tenants.len() != models.len() {
+                        bail!(
+                            "multimodel admission defines {} tenants but there are {} models",
+                            a.tenants.len(),
+                            models.len()
+                        );
+                    }
+                }
                 JobKind::MultiModel {
                     platform: str_or(doc, "platform", "G1"),
                     software: str_or(doc, "software", "tris"),
@@ -516,11 +595,15 @@ impl JobSpec {
                         .unwrap_or(5.0)
                         / 1e3,
                     metrics: scale_mode(doc)?,
+                    admission,
                 }
             }
-            "sleep" => JobKind::Sleep {
-                seconds: doc.get("seconds").and_then(|v| v.as_f64()).unwrap_or(1.0),
-            },
+            "sleep" => {
+                reject_unknown_keys(doc, task, &["seconds"])?;
+                JobKind::Sleep {
+                    seconds: doc.get("seconds").and_then(|v| v.as_f64()).unwrap_or(1.0),
+                }
+            }
             other => bail!("unknown task kind {other:?}"),
         };
         let est = doc
@@ -550,6 +633,131 @@ fn scale_mode(doc: &Json) -> Result<MetricsMode> {
         }
         Some(other) => bail!("scale must be 'exact' or 'sketch', got {other:?}"),
     }
+}
+
+/// Keys every submission may carry regardless of task.
+const COMMON_KEYS: [&str; 3] = ["name", "task", "est_duration_s"];
+
+/// Reject unknown top-level keys loudly. A typo'd key (`replcas: 3`)
+/// would otherwise fall back to a default and run a different benchmark
+/// than the one submitted, with no error anywhere — the same silent-shrink
+/// hazard the grid axes guard against, one level up.
+fn reject_unknown_keys(doc: &Json, task: &str, allowed: &[&str]) -> Result<()> {
+    let Some(map) = doc.as_obj() else { return Ok(()) };
+    for key in map.keys() {
+        if !COMMON_KEYS.contains(&key.as_str()) && !allowed.contains(&key.as_str()) {
+            bail!(
+                "unknown key {key:?} in a {task:?} submission (accepted: {})",
+                allowed.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Parse the optional top-level `admission:` block into an
+/// [`AdmissionConfig`]. Shape errors fail the submission loudly here; the
+/// engines re-validate tenant count against the workload's streams.
+///
+/// ```yaml
+/// admission:
+///   shed_depth: [600, 200, 60]   # in-system cap per class, class 0 first
+///   tenants:
+///     - name: gold
+///       class: 0
+///       weight: 4.0              # WFQ share of held-queue release
+///     - name: bronze
+///       class: 2
+///       rate: 50.0               # token-bucket rate limit (rps)
+///       burst: 10.0              # bucket depth (tokens)
+/// ```
+fn admission_spec(doc: &Json) -> Result<Option<AdmissionConfig>> {
+    let Some(block) = doc.get("admission") else { return Ok(None) };
+    let shed_depth: Vec<usize> = match block.get("shed_depth").and_then(|v| v.as_arr()) {
+        Some(a) if !a.is_empty() => {
+            let mut out = Vec::with_capacity(a.len());
+            for x in a {
+                match x.as_i64() {
+                    Some(d) if d > 0 => out.push(d as usize),
+                    _ => bail!("admission 'shed_depth' entries must be positive integers"),
+                }
+            }
+            out
+        }
+        _ => bail!("admission needs a non-empty 'shed_depth' list (one depth per class)"),
+    };
+    let tenants_json = block
+        .get("tenants")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("admission needs a 'tenants' list"))?;
+    if tenants_json.is_empty() {
+        bail!("admission 'tenants' list must be non-empty");
+    }
+    let mut tenants = Vec::with_capacity(tenants_json.len());
+    for (i, t) in tenants_json.iter().enumerate() {
+        if let Some(map) = t.as_obj() {
+            for key in map.keys() {
+                if !["name", "class", "weight", "rate", "burst"].contains(&key.as_str()) {
+                    bail!("unknown key {key:?} in admission tenant {i} (accepted: name, class, weight, rate, burst)");
+                }
+            }
+        }
+        let name = t
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("tenant{i}"));
+        let class = match t.get("class").and_then(|v| v.as_i64()).unwrap_or(0) {
+            c if c >= 0 && (c as usize) < shed_depth.len() => c as u8,
+            c => bail!("admission tenant {name:?}: class {c} has no shed_depth entry"),
+        };
+        let weight = t.get("weight").and_then(|v| v.as_f64()).unwrap_or(1.0);
+        if !(weight > 0.0) {
+            bail!("admission tenant {name:?}: weight must be positive, got {weight}");
+        }
+        let mut spec = TenantSpec::new(name.clone()).with_class(class).with_weight(weight);
+        match t.get("rate").and_then(|v| v.as_f64()) {
+            Some(rate) if rate > 0.0 => {
+                let burst = t.get("burst").and_then(|v| v.as_f64()).unwrap_or(1.0);
+                if !(burst >= 1.0) {
+                    bail!("admission tenant {name:?}: burst must be >= 1 token, got {burst}");
+                }
+                spec = spec.with_rate(rate, burst);
+            }
+            Some(rate) => bail!("admission tenant {name:?}: rate must be positive, got {rate}"),
+            None => {
+                if t.get("burst").is_some() {
+                    bail!("admission tenant {name:?}: burst without a rate has no effect");
+                }
+            }
+        }
+        tenants.push(spec);
+    }
+    Ok(Some(AdmissionConfig { tenants, shed_depth }))
+}
+
+/// Split the offered pattern evenly across admission tenants, one tagged
+/// stream per tenant — how `cluster_sim` and `sweep` submissions (a
+/// single offered rate) meet the ingress tier's tenant-tagged workload
+/// requirement. Stream i carries tenant i's class/weight tags.
+fn split_streams(adm: &AdmissionConfig, pattern: &Pattern) -> Vec<StreamSpec> {
+    let n = adm.tenants.len() as f64;
+    adm.tenants
+        .iter()
+        .map(|t| {
+            let share = match *pattern {
+                Pattern::Poisson { rate } => Pattern::Poisson { rate: rate / n },
+                Pattern::Spike { base_rate, burst_rate, start_s, duration_s } => Pattern::Spike {
+                    base_rate: base_rate / n,
+                    burst_rate: burst_rate / n,
+                    start_s,
+                    duration_s,
+                },
+                ref p => p.clone(),
+            };
+            StreamSpec::new(t.name.clone(), share).with_qos(t.class, t.weight)
+        })
+        .collect()
 }
 
 /// Duration estimate used by the scheduler when the submission omits one.
@@ -613,6 +821,57 @@ pub fn service_model_for(model_name: &str, platform_id: &str) -> Result<ServiceM
     })
 }
 
+/// Attach the per-reason drop breakdown (satellite of the ingress tier:
+/// `dropped` alone no longer says *why*). Metric keys are the
+/// [`DropReason`](crate::metrics::DropReason) labels with `-` → `_`:
+/// `dropped_queue_full`, `dropped_shed`, `dropped_evicted_backlog`,
+/// `dropped_rejected_placement`.
+fn with_drop_breakdown(mut record: Record, collector: &crate::metrics::Collector) -> Record {
+    for (label, n) in collector.drop_breakdown() {
+        record = record.with_metric(&format!("dropped_{}", label.replace('-', "_")), n as f64);
+    }
+    record
+}
+
+/// One record per priority class — the per-tenant QoS view of a run with
+/// an `admission:` block. Class records share the run's task name and are
+/// distinguished by the `class` label; conservation is enforced per class
+/// (a violation fails the job, same contract as the run-level ledger).
+fn class_records(
+    task: &str,
+    model: &str,
+    platform: &str,
+    software: &str,
+    classes: &[crate::metrics::ClassMetrics],
+) -> Result<Vec<Record>> {
+    let mut out = Vec::with_capacity(classes.len());
+    for cm in classes {
+        if !cm.conserved() {
+            bail!(
+                "class {} conservation violated: {} issued != {} completed + {} dropped",
+                cm.class,
+                cm.issued,
+                cm.collector.completed,
+                cm.collector.dropped
+            );
+        }
+        let mut r = Record::new(task, model, platform, software)
+            .with_label("class", &cm.class.to_string())
+            .with_metric("issued", cm.issued as f64)
+            .with_metric("completed", cm.collector.completed as f64)
+            .with_metric("dropped", cm.collector.dropped as f64)
+            .with_metric("goodput", cm.goodput())
+            .with_metric("shed_fraction", cm.shed_fraction());
+        if cm.collector.completed > 0 {
+            r = r
+                .with_metric("p50_ms", cm.collector.e2e.percentile(50.0) * 1e3)
+                .with_metric("p99_ms", cm.collector.e2e.percentile(99.0) * 1e3);
+        }
+        out.push(with_drop_breakdown(r, &cm.collector));
+    }
+    Ok(out)
+}
+
 /// Execute a job, producing PerfDB records. `time_scale` divides sleep
 /// durations (scheduler studies run faster than real time); `threads` is
 /// the intra-job parallelism budget — sweep jobs run their grid cells on
@@ -665,6 +924,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             max_wait_s,
             autoscale,
             metrics,
+            admission,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -727,8 +987,15 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     })
                 })
                 .transpose()?;
+            // The ingress tier wants tenant-tagged streams; a plain
+            // `rate:` submission with an `admission:` block becomes one
+            // stream per tenant at an even share of the offered rate.
+            let workload = match admission {
+                Some(adm) => Workload::Streams { streams: split_streams(adm, &pattern), seed },
+                None => Workload::Stream { pattern, seed },
+            };
             let config = ClusterConfig {
-                workload: Workload::Stream { pattern, seed },
+                workload,
                 duration_s: *duration_s,
                 replicas: (0..*replicas).map(|_| template.clone()).collect(),
                 router: router_policy(router, seed)?,
@@ -740,6 +1007,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     payload_bytes: m.request_bytes,
                 },
                 metrics: *metrics,
+                admission: admission.clone(),
                 seed,
             };
             let result = cluster::run(&config);
@@ -751,6 +1019,13 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     result.collector.completed,
                     result.dropped,
                     result.issued
+                );
+            }
+            if !result.collector.drops_conserved() {
+                bail!(
+                    "cluster_sim drop-reason ledger violated: reasons sum to {} but dropped is {}",
+                    result.collector.drop_breakdown().iter().map(|&(_, n)| n).sum::<u64>(),
+                    result.collector.dropped
                 );
             }
             let collector = &result.collector;
@@ -777,7 +1052,9 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     record = record.with_metric("burst_p99_ms", w.percentile(99.0) * 1e3);
                 }
             }
-            Ok(vec![record])
+            let mut out = vec![with_drop_breakdown(record, collector)];
+            out.extend(class_records("cluster_sim", model, platform, software, &result.classes)?);
+            Ok(out)
         }
         JobKind::HardwareSweep { model, platform, batches } => {
             let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
@@ -810,6 +1087,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             duration_s,
             max_batch,
             metrics,
+            admission,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -838,11 +1116,18 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         let duration = *duration_s;
                         let payload = m.request_bytes;
                         let mode = *metrics;
+                        let adm = admission.clone();
                         let label = format!("{n}x{name}@{:.1}ms", wait_s * 1e3);
                         plan.push(label, move |cell_seed| ClusterConfig {
-                            workload: Workload::Stream {
-                                pattern: Pattern::Poisson { rate },
-                                seed: cell_seed,
+                            workload: match &adm {
+                                Some(a) => Workload::Streams {
+                                    streams: split_streams(a, &Pattern::Poisson { rate }),
+                                    seed: cell_seed,
+                                },
+                                None => Workload::Stream {
+                                    pattern: Pattern::Poisson { rate },
+                                    seed: cell_seed,
+                                },
                             },
                             duration_s: duration,
                             replicas: (0..n).map(|_| template.clone()).collect(),
@@ -855,6 +1140,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                                 payload_bytes: payload,
                             },
                             metrics: mode,
+                            admission: adm.clone(),
                             seed: cell_seed,
                         });
                         axes.push((n, name.clone(), rate, wait_s));
@@ -874,7 +1160,14 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         r.issued
                     );
                 }
-                out.push(
+                if !r.collector.drops_conserved() {
+                    bail!(
+                        "sweep cell {} drop-reason ledger violated ({} dropped)",
+                        cell.label,
+                        r.collector.dropped
+                    );
+                }
+                out.push(with_drop_breakdown(
                     Record::new("sweep", model, platform, software)
                         .with_label("cell", &cell.label)
                         .with_label("router", router_name)
@@ -886,7 +1179,14 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         .with_metric("throughput_rps", r.collector.throughput_rps())
                         .with_metric("dropped", r.dropped as f64)
                         .with_metric("issued", r.issued as f64),
-                );
+                    &r.collector,
+                ));
+            }
+            // Grid-wide per-class view: `aggregate_classes` absorbs every
+            // cell's ledgers (thread-count independent, like the cells).
+            if admission.is_some() {
+                let (_, classes) = outcome.aggregate_classes();
+                out.extend(class_records("sweep", model, platform, software, &classes)?);
             }
             Ok(out)
         }
@@ -903,6 +1203,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             max_batch,
             max_wait_s,
             metrics,
+            admission,
         } => {
             let sw = backends::find(software)
                 .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
@@ -973,6 +1274,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                     payload_bytes: payload,
                 },
                 metrics: *metrics,
+                admission: admission.clone(),
                 seed,
             };
             let result = multimodel::run(&config);
@@ -990,7 +1292,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         mm.collector.dropped
                     );
                 }
-                out.push(
+                out.push(with_drop_breakdown(
                     Record::new("multimodel", &mm.name, platform, software)
                         .with_label("mode", mode)
                         .with_metric("rate_rps", rate)
@@ -1001,8 +1303,10 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         .with_metric("throughput_rps", mm.collector.throughput_rps())
                         .with_metric("issued", mm.issued as f64)
                         .with_metric("dropped", mm.collector.dropped as f64),
-                );
+                    &mm.collector,
+                ));
             }
+            out.extend(class_records("multimodel", "-", platform, software, &result.classes)?);
             Ok(out)
         }
         JobKind::Sleep { seconds } => {
@@ -1502,5 +1806,165 @@ batching:
         // Same contract on the router axis: yamlish types unquoted
         // scalars, so a numeric entry is not a router name.
         assert!(JobSpec::parse_yaml("task: sweep\nrouters: [round-robin, 42]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_top_level_keys() {
+        // A typo'd key would fall back to a default and silently run a
+        // different benchmark; the parse must name the offender instead.
+        let err = JobSpec::parse_yaml("task: cluster_sim\nmodel: resnet50\nreplcas: 3\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("replcas"), "{err}");
+        assert!(err.to_string().contains("replicas"), "should list accepted keys: {err}");
+        assert!(JobSpec::parse_yaml("task: serving_sim\nrouter: round-robin\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nrouter: round-robin\n").is_err());
+        assert!(
+            JobSpec::parse_yaml("task: multimodel\nmodels: [resnet50]\nmodel: resnet50\n")
+                .is_err()
+        );
+        assert!(JobSpec::parse_yaml("task: hardware_sweep\nscale: sketch\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sleep\nseconds: 1\nminutes: 2\n").is_err());
+        // name / task / est_duration_s are accepted everywhere.
+        assert!(JobSpec::parse_yaml("name: z\ntask: sleep\nseconds: 1\nest_duration_s: 2\n")
+            .is_ok());
+    }
+
+    const QOS_SUBMISSION: &str = r#"
+name: qos-cluster
+task: cluster_sim
+model: resnet50
+platform: G1
+software: tris
+replicas: 2
+workload:
+  rate: 300.0
+  duration_s: 10
+batching:
+  max_size: 8
+  max_wait_ms: 2
+admission:
+  shed_depth: [4000, 40]
+  tenants:
+    - name: gold
+      class: 0
+      weight: 3.0
+    - name: bronze
+      class: 1
+      rate: 40.0
+      burst: 8.0
+"#;
+
+    #[test]
+    fn parses_admission_block() {
+        let spec = JobSpec::parse_yaml(QOS_SUBMISSION).unwrap();
+        match &spec.kind {
+            JobKind::ClusterSim { admission: Some(a), .. } => {
+                assert_eq!(a.shed_depth, vec![4000, 40]);
+                assert_eq!(a.tenants.len(), 2);
+                assert_eq!(a.tenants[0].name, "gold");
+                assert_eq!(a.tenants[0].class, 0);
+                assert_eq!(a.tenants[0].weight, 3.0);
+                assert_eq!(a.tenants[0].rate, None, "gold is not rate-limited");
+                assert_eq!(a.tenants[1].class, 1);
+                assert_eq!(a.tenants[1].rate, Some(40.0));
+                assert_eq!(a.tenants[1].burst, 8.0);
+            }
+            k => panic!("{k:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_admission_blocks() {
+        let parse = |block: &str| {
+            JobSpec::parse_yaml(&format!("task: cluster_sim\nmodel: resnet50\n{block}"))
+        };
+        assert!(parse("admission:\n  tenants:\n    - name: a\n").is_err(), "missing shed_depth");
+        assert!(parse("admission:\n  shed_depth: [10]\n").is_err(), "missing tenants");
+        assert!(parse("admission:\n  shed_depth: []\n  tenants:\n    - name: a\n").is_err());
+        assert!(parse("admission:\n  shed_depth: [10, 0]\n  tenants:\n    - name: a\n").is_err());
+        let class_oob = "admission:\n  shed_depth: [10]\n  tenants:\n    - name: a\n      class: 3\n";
+        assert!(parse(class_oob).is_err(), "class without a shed_depth entry");
+        let bad_weight =
+            "admission:\n  shed_depth: [10]\n  tenants:\n    - name: a\n      weight: 0\n";
+        assert!(parse(bad_weight).is_err());
+        let bad_rate = "admission:\n  shed_depth: [10]\n  tenants:\n    - name: a\n      rate: 0\n";
+        assert!(parse(bad_rate).is_err());
+        let bad_burst =
+            "admission:\n  shed_depth: [10]\n  tenants:\n    - name: a\n      rate: 5\n      burst: 0.5\n";
+        assert!(parse(bad_burst).is_err());
+        let orphan_burst =
+            "admission:\n  shed_depth: [10]\n  tenants:\n    - name: a\n      burst: 4\n";
+        assert!(parse(orphan_burst).is_err(), "burst without rate is inert — reject it");
+        let typo = "admission:\n  shed_depth: [10]\n  tenants:\n    - name: a\n      wieght: 2\n";
+        assert!(parse(typo).is_err(), "unknown tenant keys are rejected too");
+    }
+
+    #[test]
+    fn multimodel_admission_tenant_count_must_match_models() {
+        let err = JobSpec::parse_yaml(
+            "task: multimodel\nmodels: [resnet50, mobilenet_v1]\n\
+             admission:\n  shed_depth: [100]\n  tenants:\n    - name: only\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("1 tenants"), "{err}");
+        assert!(err.to_string().contains("2 models"), "{err}");
+    }
+
+    #[test]
+    fn executes_cluster_sim_with_admission_emits_class_records() {
+        let spec = JobSpec::parse_yaml(QOS_SUBMISSION).unwrap();
+        let records = execute(&spec, 5, 1.0, 1).unwrap();
+        assert_eq!(records.len(), 3, "run record + one per class");
+        let main = &records[0];
+        assert!(main.label("class").is_none());
+        // Satellite: `dropped` is broken down by reason, and the reasons
+        // account for every drop exactly.
+        let reasons = [
+            "dropped_queue_full",
+            "dropped_shed",
+            "dropped_evicted_backlog",
+            "dropped_rejected_placement",
+        ];
+        let sum: f64 = reasons.iter().map(|k| main.metric(k).unwrap()).sum();
+        assert_eq!(sum, main.metric("dropped").unwrap());
+        let gold = &records[1];
+        let bronze = &records[2];
+        assert_eq!(gold.label("class"), Some("0"));
+        assert_eq!(bronze.label("class"), Some("1"));
+        // The two tenants partition the offered load.
+        assert_eq!(
+            gold.metric("issued").unwrap() + bronze.metric("issued").unwrap(),
+            main.metric("issued").unwrap()
+        );
+        // Bronze offers ~150 rps against a 40 rps token bucket: most of
+        // it sheds. Gold is unlimited and must not shed at all.
+        assert!(bronze.metric("shed_fraction").unwrap() > 0.5);
+        assert_eq!(gold.metric("dropped_shed").unwrap(), 0.0);
+        assert!(gold.metric("goodput").unwrap() > 0.9);
+    }
+
+    #[test]
+    fn sweep_with_admission_is_thread_count_independent() {
+        let yaml = "task: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+                    routers: [round-robin]\nreplicas: [1, 2]\n\
+                    workload:\n  rate_per_replica: 120.0\n  duration_s: 3\n\
+                    admission:\n  shed_depth: [2000, 400]\n  tenants:\n\
+                    \x20   - name: gold\n      class: 0\n      weight: 2.0\n\
+                    \x20   - name: bronze\n      class: 1\n      rate: 30.0\n      burst: 5.0\n";
+        let spec = JobSpec::parse_yaml(yaml).unwrap();
+        let serial = execute(&spec, 9, 1.0, 1).unwrap();
+        let threaded = execute(&spec, 9, 1.0, 8).unwrap();
+        assert_eq!(serial.len(), 4, "2 cells + 2 grid-wide class records");
+        assert_eq!(serial.len(), threaded.len());
+        for (a, b) in serial.iter().zip(&threaded) {
+            assert_eq!(a.label("class"), b.label("class"));
+            for key in ["issued", "dropped", "dropped_shed"] {
+                assert_eq!(a.metric(key), b.metric(key), "{key}");
+            }
+        }
+        let classes: Vec<&Record> =
+            serial.iter().filter(|r| r.label("class").is_some()).collect();
+        assert_eq!(classes.len(), 2);
+        assert!(classes[1].metric("shed_fraction").unwrap() > 0.0, "bronze bucket binds");
     }
 }

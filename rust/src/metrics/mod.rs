@@ -84,9 +84,59 @@ impl Stage {
     }
 }
 
+/// Why a request was dropped instead of completed. The collector keeps
+/// one counter per reason next to the aggregate [`Collector::dropped`]
+/// count, refining the conservation ledger from
+/// `issued == completed + dropped` to
+/// `issued == completed + Σ dropped_by_reason` — the totals always agree
+/// (both are bumped by the same `ingest` branch), so fingerprints and
+/// every pre-existing check are untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DropReason {
+    /// The routed replica's batch queue was at `max_queue`. The default:
+    /// call sites that only flip [`RequestTrace::dropped`] keep their
+    /// historical meaning.
+    #[default]
+    QueueFull,
+    /// The admission tier shed the request before routing — token-bucket
+    /// exhaustion or a class backlog threshold (`serving/ingress.rs`).
+    Shed,
+    /// The request was queued (or held) behind a model that was evicted
+    /// out from under it — multi-model engine only.
+    EvictedBacklog,
+    /// No routable replica existed and none was warming/loading: the
+    /// request had nowhere to go at the routing tier.
+    RejectedPlacement,
+}
+
+/// All drop reasons, in [`DropReason::idx`] order.
+pub const DROP_REASONS: [DropReason; 4] = [
+    DropReason::QueueFull,
+    DropReason::Shed,
+    DropReason::EvictedBacklog,
+    DropReason::RejectedPlacement,
+];
+
+impl DropReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DropReason::QueueFull => "queue-full",
+            DropReason::Shed => "shed",
+            DropReason::EvictedBacklog => "evicted-backlog",
+            DropReason::RejectedPlacement => "rejected-placement",
+        }
+    }
+
+    /// Dense index into per-reason arrays (declaration order, 0..4).
+    pub const fn idx(self) -> usize {
+        self as usize
+    }
+}
+
 /// Per-request probe record: arrival + per-stage durations (seconds).
 /// Flat and `Copy` — 72 bytes, no heap — so the trace store can hold it
-/// inline and hand it around by value.
+/// inline and hand it around by value (the reason/class tags ride in
+/// padding the pre-ledger layout already paid for).
 #[derive(Debug, Clone, Copy)]
 pub struct RequestTrace {
     pub id: u64,
@@ -99,6 +149,11 @@ pub struct RequestTrace {
     pub completed_s: f64,
     /// Set when the request was rejected/dropped (overload).
     pub dropped: bool,
+    /// Why, when `dropped` is set. Meaningless otherwise.
+    pub drop_reason: DropReason,
+    /// Priority class the request was admitted under (0 = highest). Stays
+    /// 0 when the run has no admission tier.
+    pub class: u8,
 }
 
 impl RequestTrace {
@@ -110,7 +165,16 @@ impl RequestTrace {
             recorded: 0,
             completed_s: arrival_s,
             dropped: false,
+            drop_reason: DropReason::QueueFull,
+            class: 0,
         }
+    }
+
+    /// Mark the request dropped for `reason` (the tagged form of the
+    /// historical `trace.dropped = true`).
+    pub fn drop_with(&mut self, reason: DropReason) {
+        self.dropped = true;
+        self.drop_reason = reason;
     }
 
     pub fn record_stage(&mut self, stage: Stage, seconds: f64) {
@@ -207,6 +271,9 @@ pub struct Collector {
     bounded: bool,
     pub completed: u64,
     pub dropped: u64,
+    /// Drops split by [`DropReason::idx`]. Invariant (kept by `ingest` and
+    /// `absorb`): the entries sum to `dropped` exactly.
+    dropped_by_reason: [u64; DROP_REASONS.len()],
     pub first_arrival_s: f64,
     pub last_completion_s: f64,
 }
@@ -238,6 +305,7 @@ impl Collector {
     pub fn ingest(&mut self, trace: &RequestTrace) {
         if trace.dropped {
             self.dropped += 1;
+            self.dropped_by_reason[trace.drop_reason.idx()] += 1;
             return;
         }
         self.completed += 1;
@@ -257,6 +325,24 @@ impl Collector {
     /// Latency summary for one pipeline stage (empty if never probed).
     pub fn stage(&self, stage: Stage) -> &Summary {
         &self.per_stage[stage.idx()]
+    }
+
+    /// Drops attributed to one [`DropReason`].
+    pub fn dropped_by(&self, reason: DropReason) -> u64 {
+        self.dropped_by_reason[reason.idx()]
+    }
+
+    /// `(label, count)` per drop reason, in [`DROP_REASONS`] order — the
+    /// shape the coordinator's JSON records and the fig_qos tables print.
+    pub fn drop_breakdown(&self) -> [(&'static str, u64); DROP_REASONS.len()] {
+        std::array::from_fn(|i| (DROP_REASONS[i].label(), self.dropped_by_reason[i]))
+    }
+
+    /// The refined ledger invariant: the per-reason counters account for
+    /// every drop exactly (`dropped == Σ dropped_by_reason`). Engines
+    /// assert this next to `issued == completed + dropped`.
+    pub fn drops_conserved(&self) -> bool {
+        self.dropped == self.dropped_by_reason.iter().sum::<u64>()
     }
 
     /// End-to-end latency summary restricted to requests that *arrived*
@@ -364,8 +450,69 @@ impl Collector {
         self.bounded |= other.bounded;
         self.completed += other.completed;
         self.dropped += other.dropped;
+        for (dst, src) in self.dropped_by_reason.iter_mut().zip(other.dropped_by_reason) {
+            *dst += src;
+        }
         self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
         self.last_completion_s = self.last_completion_s.max(other.last_completion_s);
+    }
+}
+
+/// Per-priority-class ledger of an admission-enabled run: issued count
+/// plus a full [`Collector`], one per class (0 = highest priority).
+/// Conservation holds independently per class:
+/// `issued == collector.completed + collector.dropped`, with the drop
+/// side further split by [`DropReason`]. Engines leave the class vector
+/// empty when no admission tier is configured — the classless path pays
+/// nothing for the ledger.
+#[derive(Debug)]
+pub struct ClassMetrics {
+    /// Priority class (0 = highest).
+    pub class: u8,
+    /// Requests of this class issued by the arrival source(s).
+    pub issued: u64,
+    pub collector: Collector,
+}
+
+impl ClassMetrics {
+    pub fn new(class: u8) -> Self {
+        Self::with_mode(class, MetricsMode::Exact)
+    }
+
+    pub fn with_mode(class: u8, mode: MetricsMode) -> Self {
+        ClassMetrics { class, issued: 0, collector: Collector::with_mode(mode) }
+    }
+
+    /// Whether this class's ledger balances exactly, including the
+    /// per-reason refinement.
+    pub fn conserved(&self) -> bool {
+        self.issued == self.collector.completed + self.collector.dropped
+            && self.collector.drops_conserved()
+    }
+
+    /// Fraction of issued requests that completed (goodput per offered
+    /// load, the fig_qos y-axis). 0 for an idle class.
+    pub fn goodput(&self) -> f64 {
+        if self.issued == 0 {
+            return 0.0;
+        }
+        self.collector.completed as f64 / self.issued as f64
+    }
+
+    /// Fraction of issued requests the admission tier shed.
+    pub fn shed_fraction(&self) -> f64 {
+        if self.issued == 0 {
+            return 0.0;
+        }
+        self.collector.dropped_by(DropReason::Shed) as f64 / self.issued as f64
+    }
+
+    /// Move-based merge, mirroring [`Collector::absorb`]; both sides must
+    /// describe the same class.
+    pub fn absorb(&mut self, other: ClassMetrics) {
+        assert_eq!(self.class, other.class, "absorbing mismatched classes");
+        self.issued += other.issued;
+        self.collector.absorb(other.collector);
     }
 }
 
@@ -480,9 +627,11 @@ impl ModelMetrics {
         ModelMetrics { name: name.into(), issued: 0, collector: Collector::with_mode(mode) }
     }
 
-    /// Whether this stream's ledger balances exactly.
+    /// Whether this stream's ledger balances exactly, including the
+    /// per-reason drop refinement (`Σ dropped_by_reason == dropped`).
     pub fn conserved(&self) -> bool {
         self.issued == self.collector.completed + self.collector.dropped
+            && self.collector.drops_conserved()
     }
 }
 
@@ -1016,6 +1165,94 @@ mod tests {
         u.record_busy(0.0, 1.0, 1.0);
         u.record_busy(0.0, 1.0, 1.0); // double-booked
         assert_eq!(u.series()[0], 1.0);
+    }
+
+    #[test]
+    fn drop_reasons_split_the_single_counter() {
+        let mut c = Collector::new();
+        let mut a = RequestTrace::new(0, 0.0);
+        a.dropped = true; // bare flag: historical queue-full meaning
+        c.ingest(&a);
+        let mut b = RequestTrace::new(1, 0.0);
+        b.drop_with(DropReason::Shed);
+        c.ingest(&b);
+        let mut e = RequestTrace::new(2, 0.0);
+        e.drop_with(DropReason::EvictedBacklog);
+        c.ingest(&e);
+        c.ingest(&e); // same reason twice
+        assert_eq!(c.dropped, 4);
+        assert_eq!(c.dropped_by(DropReason::QueueFull), 1);
+        assert_eq!(c.dropped_by(DropReason::Shed), 1);
+        assert_eq!(c.dropped_by(DropReason::EvictedBacklog), 2);
+        assert_eq!(c.dropped_by(DropReason::RejectedPlacement), 0);
+        assert!(c.drops_conserved());
+        let breakdown = c.drop_breakdown();
+        assert_eq!(breakdown[0], ("queue-full", 1));
+        assert_eq!(breakdown[1], ("shed", 1));
+        assert_eq!(breakdown[2], ("evicted-backlog", 2));
+        assert_eq!(breakdown[3], ("rejected-placement", 0));
+    }
+
+    #[test]
+    fn drop_reasons_survive_absorb_and_do_not_move_fingerprints() {
+        let run = |reason: Option<DropReason>| {
+            let mut c = Collector::new();
+            let mut ok = RequestTrace::new(0, 0.0);
+            ok.record_stage(Stage::Inference, 0.01);
+            c.ingest(&ok);
+            let mut bad = RequestTrace::new(1, 0.5);
+            match reason {
+                Some(r) => bad.drop_with(r),
+                None => bad.dropped = true,
+            }
+            c.ingest(&bad);
+            c
+        };
+        // The reason tag refines the ledger without entering the digest:
+        // a shed drop and a legacy queue-full drop fingerprint alike.
+        assert_eq!(run(None).fingerprint(), run(Some(DropReason::Shed)).fingerprint());
+        let mut all = Collector::new();
+        all.absorb(run(Some(DropReason::Shed)));
+        all.absorb(run(Some(DropReason::RejectedPlacement)));
+        all.absorb(run(None));
+        assert_eq!(all.dropped, 3);
+        assert_eq!(all.dropped_by(DropReason::Shed), 1);
+        assert_eq!(all.dropped_by(DropReason::RejectedPlacement), 1);
+        assert_eq!(all.dropped_by(DropReason::QueueFull), 1);
+        assert!(all.drops_conserved());
+    }
+
+    #[test]
+    fn class_metrics_ledger_balances() {
+        let mut g = ClassMetrics::new(0);
+        assert!(g.conserved(), "empty class ledger balances");
+        assert_eq!(g.goodput(), 0.0);
+        g.issued = 3;
+        let mut ok = RequestTrace::new(0, 0.0);
+        ok.class = 0;
+        ok.record_stage(Stage::Inference, 0.02);
+        g.collector.ingest(&ok);
+        g.collector.ingest(&ok);
+        let mut shed = RequestTrace::new(1, 0.0);
+        shed.drop_with(DropReason::Shed);
+        g.collector.ingest(&shed);
+        assert!(g.conserved());
+        assert!((g.goodput() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((g.shed_fraction() - 1.0 / 3.0).abs() < 1e-12);
+
+        let mut h = ClassMetrics::new(0);
+        h.issued = 1;
+        h.collector.ingest(&ok);
+        g.absorb(h);
+        assert_eq!(g.issued, 4);
+        assert_eq!(g.collector.completed, 3);
+        assert!(g.conserved());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched classes")]
+    fn class_metrics_absorb_rejects_mismatched_class() {
+        ClassMetrics::new(0).absorb(ClassMetrics::new(1));
     }
 
     #[test]

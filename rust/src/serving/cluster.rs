@@ -36,6 +36,17 @@
 //! the exact union of everything the run observed. The [`ScaleTimeline`]
 //! records every replica-lifecycle transition.
 //!
+//! Ingress tier: the pre-batching front door — held-request parking,
+//! flush-on-ready, drop accounting, and (when [`ClusterConfig::admission`]
+//! is set) per-tenant token buckets, weighted-fair queueing, and
+//! priority-class shedding — lives in `serving::ingress`, shared with the
+//! multi-model engine. With `admission: None` the FIFO path performs
+//! exactly the pre-ingress operations (golden bit-identity); with an
+//! [`AdmissionConfig`] the workload must be [`Workload::Streams`] so each
+//! arrival carries its tenant, and every request stages admit → hold
+//! (WFQ) → route → batch, with per-class ledgers in
+//! [`ClusterResult::classes`].
+//!
 //! Streaming workloads: the engine pulls arrivals lazily from
 //! [`Workload::source`] — an arrival is injected into the event heap only
 //! once simulated time reaches it — so a run over 10⁸ requests holds
@@ -53,19 +64,21 @@ use super::autoscale::{Autoscaler, ScaleDecision, ScaleSignal};
 use super::backends::{DynamicBatching, Software};
 use super::batcher::{Batcher, Decision, Policy};
 use super::des::{self, push, EventBox, Key};
+use super::ingress::{self, class_ingest, Admission, HeldQueue};
 use super::router::{Router, RouterPolicy};
 use super::service::ServiceModel;
 use crate::metrics::{
-    Collector, MetricsMode, ReplicaMetrics, RequestTrace, ScaleEventKind, ScaleTimeline, Stage,
-    TraceStore,
+    ClassMetrics, Collector, DropReason, MetricsMode, ReplicaMetrics, RequestTrace,
+    ScaleEventKind, ScaleTimeline, Stage, TraceStore,
 };
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
-use crate::workload::Workload;
+use crate::workload::{MergedSource, Pattern, SourceIter, Workload};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 pub use super::autoscale::AutoscaleConfig;
+pub use super::ingress::{AdmissionConfig, TenantSpec};
 
 // The parallel sweep engine (`crate::sweep`) moves cell configs into
 // scoped worker threads and their results back out. Keep both types
@@ -124,6 +137,13 @@ pub struct ClusterConfig {
     /// bounds metric memory for horizon-scale runs. Simulation behaviour
     /// (routing, batching, drops, event count) is identical in both modes.
     pub metrics: MetricsMode,
+    /// Per-tenant admission tier (token buckets + WFQ + priority-class
+    /// shedding; see `serving::ingress`). Requires a
+    /// [`Workload::Streams`] workload so each arrival carries its tenant;
+    /// the spec is validated loudly against the stream count. `None`
+    /// disables the tier entirely — the request path is then bit-identical
+    /// to the pre-ingress engine.
+    pub admission: Option<AdmissionConfig>,
     pub seed: u64,
 }
 
@@ -142,7 +162,13 @@ pub struct ClusterResult {
     /// cold start).
     pub scale: ScaleTimeline,
     /// Requests rejected across all replica queues and the routing tier.
+    /// `collector.drop_breakdown()` splits this by [`DropReason`].
     pub dropped: u64,
+    /// Per-class ledgers (issued / completed / dropped-by-reason +
+    /// latency), indexed by priority class. Empty when
+    /// [`ClusterConfig::admission`] is `None`; otherwise one entry per
+    /// configured class, each individually conserved.
+    pub classes: Vec<ClassMetrics>,
     /// Requests issued in total (completed + dropped == issued).
     pub issued: u64,
     /// Discrete events processed by the simulation loop (the events/sec
@@ -307,10 +333,113 @@ fn count_state(replicas: &[Replica], state: ReplicaState) -> usize {
     replicas.iter().filter(|r| r.state == state).count()
 }
 
+/// Lazy arrival feed: the tenant-blind [`SourceIter`] for untagged
+/// workloads, or the tagged [`MergedSource`] when the admission tier
+/// needs each arrival's tenant. Both yield identical `(time, id)`
+/// sequences for the same `Workload::Streams` (the `SourceIter::Merged`
+/// arm is the same merge with the tag projected away), so enabling
+/// admission never moves an arrival.
+enum Feed<'a> {
+    Plain(SourceIter<'a>),
+    Tagged(MergedSource),
+}
+
+impl Feed<'_> {
+    fn next(&mut self) -> Option<(f64, u32)> {
+        match self {
+            Feed::Plain(s) => s.next().map(|a| (a.time_s, 0)),
+            Feed::Tagged(m) => m.next().map(|a| (a.time_s, a.stream as u32)),
+        }
+    }
+}
+
+/// Release WFQ-held requests while capacity exists (admission-enabled
+/// path only). Called at the end of every event that can change the
+/// routable set or free queue space. Stops on backpressure — the routed
+/// replica's queue is full — rather than dropping: with an admission
+/// tier, overload is shed at admission (by class), not at replica
+/// queues. If nothing is routable and nothing is warming, the backlog
+/// can never drain and is rejected as [`DropReason::RejectedPlacement`].
+#[allow(clippy::too_many_arguments)]
+fn drain_held(
+    now: f64,
+    held: &mut HeldQueue,
+    admission: &mut Admission,
+    router: &mut Router,
+    routable: &[usize],
+    outstanding: &mut [usize],
+    replicas: &mut [Replica],
+    traces: &mut TraceStore,
+    collector: &mut Collector,
+    classes: &mut [ClassMetrics],
+    heap: &mut Heap,
+    seq: &mut u64,
+) {
+    while !held.is_empty() {
+        if routable.is_empty() {
+            if replicas.iter().any(|r| r.state == ReplicaState::Warming) {
+                return; // capacity is on the way; keep holding
+            }
+            while let Some((slot, _tenant)) = held.pop_wfq(admission) {
+                let mut trace = traces.remove(slot);
+                ingress::drop_trace(&mut trace, DropReason::RejectedPlacement, [&mut *collector]);
+                class_ingest(classes, &trace);
+            }
+            return;
+        }
+        let ri = router.route_among(now, routable, outstanding);
+        if replicas[ri].queued >= replicas[ri].max_queue {
+            return; // backpressure: hold until the queue frees up
+        }
+        let Some((slot, _tenant)) = held.pop_wfq(admission) else { return };
+        let r = &mut replicas[ri];
+        let d = ingress::stage_into_batcher(traces.get_mut(slot), &mut r.batcher, slot, now, r.busy);
+        r.queued += 1;
+        outstanding[ri] += 1;
+        match d {
+            Decision::Dispatch(_) => start_batch(ri, &mut replicas[ri], now, heap, seq, traces),
+            Decision::WakeAt(t) => push(heap, t, Event::Wake { replica: ri, scheduled_for: t }, seq),
+            Decision::Wait => {}
+        }
+    }
+}
+
 /// Run the cluster simulation.
 pub fn run(config: &ClusterConfig) -> ClusterResult {
     assert!(!config.replicas.is_empty(), "cluster needs at least one replica");
     let closed_loop = config.workload.closed_loop_clients();
+    if let Some(streams) = config.workload.stream_specs() {
+        for s in streams {
+            assert!(
+                !matches!(s.pattern, Pattern::ClosedLoop { .. }),
+                "Workload::Streams cannot contain closed-loop patterns (stream {:?})",
+                s.name
+            );
+        }
+    }
+    // Admission tier setup: validated loudly up front, like every other
+    // config assert. Tenant i is stream i, so the workload must carry
+    // tenant tags.
+    if let Some(adm) = &config.admission {
+        let streams = config
+            .workload
+            .stream_specs()
+            .expect("admission control requires a tenant-tagged workload (Workload::Streams)");
+        adm.validate(streams.len());
+    }
+    let mut admission = config.admission.as_ref().map(Admission::new);
+    // Tenant -> priority class (authoritative: the AdmissionConfig);
+    // empty when the tier is off.
+    let class_tags: Vec<u8> =
+        config.admission.as_ref().map_or(Vec::new(), |a| {
+            a.tenants.iter().map(|t| t.class).collect()
+        });
+    let mut classes: Vec<ClassMetrics> = config.admission.as_ref().map_or(Vec::new(), |a| {
+        (0..a.n_classes()).map(|c| ClassMetrics::with_mode(c as u8, config.metrics)).collect()
+    });
+    // Slot -> tenant side table (slots are reused; entries are rewritten
+    // at issue). Only maintained when the admission tier is on.
+    let mut tenant_of: Vec<u32> = Vec::new();
     // O(1)-memory counting pre-pass over the source: how many requests the
     // issue phase will draw. The loop-phase RNG is the seeded generator
     // fast-forwarded past those draws, so lazily interleaving issue-phase
@@ -354,7 +483,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     let expected = match &config.workload {
         Workload::Arrivals(v) => v.len(),
         Workload::ClosedLoop { clients } => *clients,
-        Workload::Stream { .. } => 0,
+        Workload::Stream { .. } | Workload::Streams { .. } => 0,
     };
     let mut traces = TraceStore::with_capacity(expected.clamp(64, 1 << 16));
     let mut next_id = 0u64;
@@ -374,10 +503,16 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     // Issue one request: samples its pipeline stages and schedules Enqueue.
     // Issue-phase callers (lazy arrival injection) pass `rng_issue` +
     // `arrival_seq`; loop-phase callers (closed-loop reissues) pass
-    // `rng_loop` + the loop counter.
+    // `rng_loop` + the loop counter. `tenant` tags the request for the
+    // admission tier (always 0 when the tier is off — closed-loop
+    // reissues are tenant 0 by construction, since admission and closed
+    // loops cannot coexist).
     let mut issue = |arrival_s: f64,
+                     tenant: u32,
                      heap: &mut Heap,
                      traces: &mut TraceStore,
+                     tenant_of: &mut Vec<u32>,
+                     classes: &mut [ClassMetrics],
                      rng: &mut Pcg64,
                      seq: &mut u64| {
         let id = next_id;
@@ -386,13 +521,31 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         let mut trace = RequestTrace::new(id, arrival_s);
         trace.record_stage(Stage::PreProcess, pre);
         trace.record_stage(Stage::Transmission, tx);
+        if !classes.is_empty() {
+            trace.class = class_tags[tenant as usize];
+            classes[trace.class as usize].issued += 1;
+        }
         let enqueue_at = trace.completed_s;
         let slot = traces.insert(trace);
+        if !classes.is_empty() {
+            if slot as usize >= tenant_of.len() {
+                tenant_of.resize(slot as usize + 1, 0);
+            }
+            tenant_of[slot as usize] = tenant;
+        }
         push(heap, enqueue_at, Event::Enqueue { slot }, seq);
     };
 
-    // Lazy arrival stream: `pending` is the next arrival not yet injected.
-    let mut source = config.workload.source(config.duration_s);
+    // Lazy arrival stream: `pending` is the next arrival not yet
+    // injected. With the admission tier on, the tagged merge is consumed
+    // directly so each arrival keeps its tenant (same times and ids as
+    // the projected `SourceIter::Merged`).
+    let mut source = match (&config.workload, &admission) {
+        (Workload::Streams { streams, seed }, Some(_)) => {
+            Feed::Tagged(MergedSource::new(streams, config.duration_s, *seed))
+        }
+        _ => Feed::Plain(config.workload.source(config.duration_s)),
+    };
     let mut pending = source.next();
 
     // First autoscaler evaluation one interval in. The materialized engine
@@ -411,9 +564,10 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     // ascending routable-candidate list, updated on state transitions.
     let mut outstanding: Vec<usize> = vec![0; replicas.len()];
     let mut routable: Vec<usize> = if cold { Vec::new() } else { (0..replicas.len()).collect() };
-    // Requests held at the routing tier while nothing is routable (FIFO),
-    // flushed the instant a replica becomes ready.
-    let mut held: Vec<u32> = Vec::new();
+    // Requests held at the routing tier: FIFO (flushed the instant a
+    // replica becomes ready — the historical behaviour, bit-identical)
+    // without admission, weighted-fair-queued with it.
+    let mut held = if admission.is_some() { HeldQueue::wfq() } else { HeldQueue::fifo() };
     let mut events = 0u64;
 
     loop {
@@ -424,37 +578,73 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         // injection order is arrival order, which keeps both the
         // issue-phase RNG draw order and the arrival-range sequence
         // numbers identical to the materialized engine's upfront loop.
-        while let Some(a) = pending {
+        while let Some((time_s, tenant)) = pending {
             let due = match heap.peek() {
-                Some(Reverse((Key(t, _), _))) => a.time_s <= *t,
+                Some(Reverse((Key(t, _), _))) => time_s <= *t,
                 None => true,
             };
             if !due {
                 break;
             }
-            issue(a.time_s, &mut heap, &mut traces, &mut rng_issue, &mut arrival_seq);
+            issue(
+                time_s,
+                tenant,
+                &mut heap,
+                &mut traces,
+                &mut tenant_of,
+                &mut classes,
+                &mut rng_issue,
+                &mut arrival_seq,
+            );
             pending = source.next();
         }
         let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() else { break };
         events += 1;
         match event {
             Event::Enqueue { slot } => {
+                if let Some(adm) = admission.as_mut() {
+                    // Admission tier: admit (token bucket + class shed)
+                    // against the live in-system count excluding this
+                    // arrival, then park in the WFQ and drain what
+                    // capacity allows. Closed loops cannot coexist with
+                    // admission (asserted above), so no reissue here.
+                    let tenant = tenant_of[slot as usize] as usize;
+                    if let Some(reason) = adm.admit(now, tenant, traces.len() - 1) {
+                        let mut trace = traces.remove(slot);
+                        ingress::drop_trace(&mut trace, reason, [&mut collector]);
+                        class_ingest(&mut classes, &trace);
+                    } else {
+                        held.push_wfq(adm, tenant, slot);
+                        drain_held(
+                            now, &mut held, adm, &mut router, &routable, &mut outstanding,
+                            &mut replicas, &mut traces, &mut collector, &mut classes,
+                            &mut heap, &mut seq,
+                        );
+                    }
+                    continue;
+                }
                 if routable.is_empty() {
                     // Empty candidate set (cold start, or every replica
                     // warming/draining at a scale boundary): never handed
                     // to the router. Hold while capacity is on the way;
                     // reject if nothing will ever become routable.
                     if replicas.iter().any(|r| r.state == ReplicaState::Warming) {
-                        held.push(slot);
+                        held.push_fifo(slot);
                     } else {
                         let mut trace = traces.remove(slot);
-                        trace.dropped = true;
-                        collector.ingest(&trace);
+                        ingress::drop_trace(
+                            &mut trace,
+                            DropReason::RejectedPlacement,
+                            [&mut collector],
+                        );
                         if closed_loop.is_some() && now < config.duration_s {
                             issue(
                                 now + REJECT_RETRY_BACKOFF_S,
+                                0,
                                 &mut heap,
                                 &mut traces,
+                                &mut tenant_of,
+                                &mut classes,
                                 &mut rng_loop,
                                 &mut seq,
                             );
@@ -468,44 +658,45 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // (no leak) and a closed-loop client re-issues after a
                     // short retry backoff instead of silently dying.
                     let mut trace = traces.remove(slot);
-                    trace.dropped = true;
-                    replicas[ri].metrics.collector.ingest(&trace);
-                    collector.ingest(&trace);
+                    ingress::drop_trace(
+                        &mut trace,
+                        DropReason::QueueFull,
+                        [&mut replicas[ri].metrics.collector, &mut collector],
+                    );
                     if closed_loop.is_some() && now < config.duration_s {
                         issue(
                             now + REJECT_RETRY_BACKOFF_S,
+                            0,
                             &mut heap,
                             &mut traces,
+                            &mut tenant_of,
+                            &mut classes,
                             &mut rng_loop,
                             &mut seq,
                         );
                     }
                     continue;
                 }
-                {
-                    // Routing-tier hold time (cold-start window): the
-                    // trace reached the router at `completed_s`; any gap
-                    // to `now` was spent held and counts as queueing.
-                    let trace = traces.get_mut(slot);
-                    if now > trace.completed_s {
-                        let hold = now - trace.completed_s;
-                        trace.record_stage(Stage::Batching, hold);
-                    }
-                }
+                // Shared ingress tail: routing-tier hold time (cold-start
+                // window) charged to queueing, batcher enqueue, idle poll.
                 let r = &mut replicas[ri];
-                r.batcher.enqueue(slot as u64, now);
+                let d = ingress::stage_into_batcher(
+                    traces.get_mut(slot),
+                    &mut r.batcher,
+                    slot,
+                    now,
+                    r.busy,
+                );
                 r.queued += 1;
                 outstanding[ri] += 1;
-                if !r.busy {
-                    match r.batcher.poll(now) {
-                        Decision::Dispatch(_) => {
-                            start_batch(ri, r, now, &mut heap, &mut seq, &mut traces)
-                        }
-                        Decision::WakeAt(t) => {
-                            push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
-                        }
-                        Decision::Wait => {}
+                match d {
+                    Decision::Dispatch(_) => {
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
                     }
+                    Decision::WakeAt(t) => {
+                        push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                    }
+                    Decision::Wait => {}
                 }
             }
             Event::Wake { replica: ri, scheduled_for } => {
@@ -525,6 +716,14 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
                     }
                     Decision::Wait => {}
+                }
+                // A dispatch freed queue slots: release backpressured holds.
+                if let Some(adm) = admission.as_mut() {
+                    drain_held(
+                        now, &mut held, adm, &mut router, &routable, &mut outstanding,
+                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut heap, &mut seq,
+                    );
                 }
             }
             Event::ServerFree { replica: ri } => {
@@ -550,10 +749,20 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     router.observe(ri, now - enqueued + overhead);
                     replicas[ri].metrics.collector.ingest(&trace);
                     collector.ingest(&trace);
+                    class_ingest(&mut classes, &trace);
                     // Closed loop: this client's next request enters now
                     // (and is routed fresh at its enqueue time).
                     if closed_loop.is_some() && trace.completed_s < config.duration_s {
-                        issue(trace.completed_s, &mut heap, &mut traces, &mut rng_loop, &mut seq);
+                        issue(
+                            trace.completed_s,
+                            0,
+                            &mut heap,
+                            &mut traces,
+                            &mut tenant_of,
+                            &mut classes,
+                            &mut rng_loop,
+                            &mut seq,
+                        );
                     }
                 }
                 replicas[ri].in_flight.clear();
@@ -579,6 +788,15 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     let active = count_state(&replicas, ReplicaState::Active);
                     scale.record(now, ScaleEventKind::Retired, ri, active);
                 }
+                // Completions freed queue + in-flight capacity: release
+                // backpressured holds.
+                if let Some(adm) = admission.as_mut() {
+                    drain_held(
+                        now, &mut held, adm, &mut router, &routable, &mut outstanding,
+                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut heap, &mut seq,
+                    );
+                }
             }
             Event::ReplicaReady { replica: ri } => {
                 debug_assert_eq!(replicas[ri].state, ReplicaState::Warming);
@@ -586,10 +804,22 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 insert_routable(&mut routable, ri);
                 let active = count_state(&replicas, ReplicaState::Active);
                 scale.record(now, ScaleEventKind::Ready, ri, active);
-                // Flush requests held at the routing tier, in arrival
-                // order (the sequence counter keeps the FIFO exact).
-                for slot in held.drain(..) {
-                    push(&mut heap, now, Event::Enqueue { slot }, &mut seq);
+                match admission.as_mut() {
+                    // Flush requests held at the routing tier, in arrival
+                    // order (the sequence counter keeps the FIFO exact).
+                    None => {
+                        for slot in held.drain_fifo() {
+                            push(&mut heap, now, Event::Enqueue { slot }, &mut seq);
+                        }
+                    }
+                    // WFQ holds release by weighted-fair order, routed
+                    // directly (no event round-trip needed for fairness —
+                    // the virtual clock, not the event heap, orders them).
+                    Some(adm) => drain_held(
+                        now, &mut held, adm, &mut router, &routable, &mut outstanding,
+                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut heap, &mut seq,
+                    ),
                 }
             }
             Event::ScaleEval => {
@@ -668,6 +898,17 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 if next < config.duration_s {
                     push(&mut heap, next, Event::ScaleEval, &mut seq);
                 }
+                // A scale-down shrank the routable set: if nothing is
+                // routable or warming any more, held requests must be
+                // rejected now, not leaked (the slab empty-at-end assert
+                // pins this).
+                if let Some(adm) = admission.as_mut() {
+                    drain_held(
+                        now, &mut held, adm, &mut router, &routable, &mut outstanding,
+                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut heap, &mut seq,
+                    );
+                }
             }
         }
     }
@@ -686,13 +927,25 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     );
 
     // Single source of truth for drops: the cluster collector ingested
-    // every rejected trace exactly once (replica queue or routing tier).
+    // every rejected trace exactly once (replica queue or routing tier),
+    // with its reason — the breakdown must sum back to the total.
     let dropped = collector.dropped;
+    debug_assert!(collector.drops_conserved(), "drop-reason ledger out of balance");
+    // Per-class conservation: each class ledger balances on its own
+    // (issued == completed + Σ dropped-by-reason), and the classes sum to
+    // the cluster totals.
+    if !classes.is_empty() {
+        debug_assert_eq!(classes.iter().map(|c| c.issued).sum::<u64>(), next_id);
+        for cm in &classes {
+            debug_assert!(cm.conserved(), "class {} ledger out of balance", cm.class);
+        }
+    }
     ClusterResult {
         collector,
         replicas: replicas.into_iter().map(|r| r.metrics).collect(),
         scale,
         dropped,
+        classes,
         issued: next_id,
         events,
     }
@@ -728,7 +981,32 @@ mod tests {
             cold_start: None,
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
+            admission: None,
             seed: 5,
+        }
+    }
+
+    /// Three tagged tenants (gold/silver/bronze) at `rate` rps each.
+    fn three_class_streams(rate: f64) -> Workload {
+        use crate::workload::StreamSpec;
+        Workload::Streams {
+            streams: vec![
+                StreamSpec::new("gold", Pattern::Poisson { rate }).with_qos(0, 4.0),
+                StreamSpec::new("silver", Pattern::Poisson { rate }).with_qos(1, 2.0),
+                StreamSpec::new("bronze", Pattern::Poisson { rate }).with_qos(2, 1.0),
+            ],
+            seed: 42,
+        }
+    }
+
+    fn three_class_admission() -> AdmissionConfig {
+        AdmissionConfig {
+            tenants: vec![
+                TenantSpec::new("gold").with_class(0).with_weight(4.0),
+                TenantSpec::new("silver").with_class(1).with_weight(2.0),
+                TenantSpec::new("bronze").with_class(2).with_weight(1.0),
+            ],
+            shed_depth: vec![300, 100, 30],
         }
     }
 
@@ -1054,6 +1332,130 @@ mod tests {
         assert_eq!(r.issued, r2.issued, "both closed-loop spellings drive the same run");
         assert_eq!(r.events, r2.events);
         assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+    }
+
+    #[test]
+    fn tagged_streams_without_admission_match_projected_merge() {
+        // Workload::Streams with the admission tier off takes the plain
+        // FIFO path: tags are inert, and the run is bit-identical to any
+        // other spelling of the same merged arrival sequence.
+        let mut cfg = base(2, 100.0, 10.0, RouterPolicy::LeastOutstanding);
+        cfg.workload = three_class_streams(50.0);
+        let n = cfg.workload.count_in(10.0);
+        let r = run(&cfg);
+        assert_eq!(r.issued, n);
+        assert_eq!(r.collector.completed + r.dropped, n);
+        assert!(r.classes.is_empty(), "no admission tier, no class ledgers");
+        let r2 = run(&cfg);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+    }
+
+    #[test]
+    fn admission_keeps_exact_per_class_conservation() {
+        // Overloaded: 3 tenants at 150 rps each against one ~200 rps
+        // replica. Every class ledger balances individually; shed order
+        // is strictly lowest-class-first.
+        let mut cfg = base(1, 10.0, 15.0, RouterPolicy::LeastOutstanding);
+        cfg.workload = three_class_streams(150.0);
+        cfg.admission = Some(three_class_admission());
+        let r = run(&cfg);
+        assert_eq!(r.classes.len(), 3);
+        let issued: u64 = r.classes.iter().map(|c| c.issued).sum();
+        assert_eq!(issued, r.issued);
+        for cm in &r.classes {
+            assert!(cm.conserved(), "class {} out of balance", cm.class);
+        }
+        assert_eq!(r.collector.completed + r.dropped, r.issued);
+        // Lowest class sheds hardest, highest least.
+        let shed: Vec<f64> = r.classes.iter().map(|c| c.shed_fraction()).collect();
+        assert!(shed[2] > shed[1] && shed[1] > shed[0], "shed fractions {shed:?}");
+        assert!(shed[2] > 0.1, "bronze must shed under 2.25x overload: {shed:?}");
+        // Reason ledger: admission drops are Shed, nothing else fires in
+        // this scenario (queues are deep, fleet is fixed and warm).
+        assert_eq!(r.collector.dropped_by(crate::metrics::DropReason::Shed), r.dropped);
+        assert!(r.collector.drops_conserved());
+        // Deterministic replay, WFQ and buckets included.
+        let r2 = run(&cfg);
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+        for (a, b) in r.classes.iter().zip(&r2.classes) {
+            assert_eq!(a.collector.fingerprint(), b.collector.fingerprint());
+        }
+    }
+
+    #[test]
+    fn admission_protects_gold_latency_under_overload() {
+        let mut cfg = base(1, 10.0, 15.0, RouterPolicy::LeastOutstanding);
+        cfg.workload = three_class_streams(150.0);
+        cfg.admission = Some(three_class_admission());
+        let r = run(&cfg);
+        let gold = &r.classes[0];
+        // Gold keeps high goodput; its backlog is capped by shed_depth so
+        // its p99 stays bounded even at 2.25x aggregate overload.
+        assert!(gold.goodput() > 0.9, "gold goodput {}", gold.goodput());
+        let p99 = gold.collector.e2e.percentile(99.0);
+        assert!(p99 < 5.0, "gold p99 {p99} unbounded under overload");
+    }
+
+    #[test]
+    #[should_panic(expected = "admission control requires a tenant-tagged workload")]
+    fn admission_rejects_untagged_workloads() {
+        let mut cfg = base(1, 100.0, 5.0, RouterPolicy::RoundRobin);
+        cfg.admission = Some(three_class_admission());
+        run(&cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "admission defines 3 tenants but the workload has 2 streams")]
+    fn admission_rejects_tenant_stream_mismatch() {
+        use crate::workload::StreamSpec;
+        let mut cfg = base(1, 100.0, 5.0, RouterPolicy::RoundRobin);
+        cfg.workload = Workload::Streams {
+            streams: vec![
+                StreamSpec::new("a", Pattern::Poisson { rate: 10.0 }),
+                StreamSpec::new("b", Pattern::Poisson { rate: 10.0 }),
+            ],
+            seed: 1,
+        };
+        cfg.admission = Some(three_class_admission());
+        run(&cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot contain closed-loop patterns")]
+    fn streams_reject_closed_loop_patterns() {
+        use crate::workload::StreamSpec;
+        let mut cfg = base(1, 100.0, 5.0, RouterPolicy::RoundRobin);
+        cfg.workload = Workload::Streams {
+            streams: vec![StreamSpec::new("cl", Pattern::ClosedLoop { concurrency: 4 })],
+            seed: 1,
+        };
+        run(&cfg);
+    }
+
+    #[test]
+    fn token_bucket_caps_a_tenant_end_to_end() {
+        // Tenant "bronze" rate-limited to 20 rps while offering ~150:
+        // most of its traffic sheds at the bucket, the others are
+        // untouched (fleet has headroom for the admitted load).
+        let mut cfg = base(4, 10.0, 15.0, RouterPolicy::LeastOutstanding);
+        cfg.workload = three_class_streams(150.0);
+        let mut adm = three_class_admission();
+        adm.tenants[2] = adm.tenants[2].clone().with_rate(20.0, 5.0);
+        cfg.admission = Some(adm);
+        let r = run(&cfg);
+        let bronze = &r.classes[2];
+        assert!(
+            bronze.shed_fraction() > 0.7,
+            "bucket must cap bronze: shed {}",
+            bronze.shed_fraction()
+        );
+        // Admitted bronze ~ 20 rps * 15 s (plus the initial burst).
+        let admitted = bronze.issued - bronze.collector.dropped;
+        assert!((250..=400).contains(&admitted), "admitted bronze {admitted}");
+        for cm in &r.classes[..2] {
+            assert!(cm.goodput() > 0.95, "class {} goodput {}", cm.class, cm.goodput());
+        }
     }
 
     #[test]

@@ -23,6 +23,20 @@
 //! MPS-style contention multiplier derived from `hardware::sharing` (the
 //! paper's Sharing-versus-Dedicate study, event-driven).
 //!
+//! Ingress structure: both engines stage every request through the shared
+//! `ingress` tier — `admit (token bucket + class shed) → route →
+//! hold/flush → batch`. With an [`AdmissionConfig`] attached, tenants
+//! (tagged workload streams in `cluster`, models in `multimodel`) get
+//! token-bucket rate limits, priority classes that shed
+//! lowest-class-first under overload, and — where tenants share one
+//! routing domain — weighted-fair release of held requests. The tier is
+//! RNG-free, so determinism is untouched; `admission: None` keeps the
+//! request path bit-identical to the pre-ingress engines (pinned by the
+//! golden suites at 1/2/8 sweep threads). Per-class ledgers land in
+//! `metrics::ClassMetrics` with exact conservation and a
+//! per-[`DropReason`](crate::metrics::DropReason) breakdown; see
+//! `benches/fig_qos.rs` for the overload study.
+//!
 //! The DES request lifecycle is allocation-free at steady state and its
 //! throughput (simulated requests/sec) is tracked per PR — see PERF.md
 //! and `benches/l4_des_throughput.rs`.
@@ -32,6 +46,7 @@ pub mod backends;
 pub mod batcher;
 pub mod cluster;
 mod des;
+pub mod ingress;
 pub mod live;
 pub mod multimodel;
 pub mod router;
@@ -42,6 +57,7 @@ pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision, ScalePolicy, Sca
 pub use backends::{DynamicBatching, Software};
 pub use batcher::{Batcher, Decision, Policy};
 pub use cluster::{ClusterConfig, ClusterResult, ReplicaConfig};
+pub use ingress::{AdmissionConfig, TenantSpec};
 pub use multimodel::{
     ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
     PlacementOp,

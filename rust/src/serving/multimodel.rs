@@ -57,17 +57,29 @@
 //! per-replica and cluster-level collectors and a [`PlacementTimeline`];
 //! [`MetricsMode::Sketch`] bounds every ledger's memory for
 //! horizon-scale runs.
+//!
+//! Ingress tier: the pre-batching front door is shared with the cluster
+//! engine (`serving::ingress`) — held-request parking per model, the
+//! drop ledger with [`DropReason`]s, and the staged batcher entry. With
+//! [`MultiModelConfig::admission`] each *model* is a tenant: token
+//! buckets and priority-class shedding apply at the routing tier, with
+//! per-class ledgers in [`MultiModelResult::classes`]. WFQ does not
+//! apply here — every model already owns its routing domain, so there is
+//! no shared front door to arbitrate; held queues stay FIFO and fairness
+//! between models comes from placement and routing. `admission: None`
+//! keeps the request path bit-identical to the pre-ingress engine.
 
 use super::backends::Software;
 use super::batcher::{Batcher, Decision, Policy};
 use super::cluster::{effective, insert_routable, remove_routable};
 use super::des::{self, push, EventBox, Key};
+use super::ingress::{self, class_ingest, Admission, AdmissionConfig, HeldQueue};
 use super::router::{ModelRouter, RouterPolicy};
 use super::service::ServiceModel;
 use crate::hardware::sharing::{MPS_EFFICIENCY, MPS_OVERHEAD_S};
 use crate::metrics::{
-    Collector, MetricsMode, ModelMetrics, PlacementEventKind, PlacementTimeline, ReplicaMetrics,
-    RequestTrace, Stage, TraceStore,
+    ClassMetrics, Collector, DropReason, MetricsMode, ModelMetrics, PlacementEventKind,
+    PlacementTimeline, ReplicaMetrics, RequestTrace, Stage, TraceStore,
 };
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
@@ -174,6 +186,11 @@ pub struct MultiModelConfig {
     /// is identical in both modes; `Sketch` bounds per-model, per-replica,
     /// and cluster-level metric memory for long-horizon many-model runs.
     pub metrics: MetricsMode,
+    /// Per-model admission tier (token buckets + priority-class shedding;
+    /// see `serving::ingress`). Tenant `i` is model `i`, validated loudly
+    /// against the model count. `None` disables the tier — the request
+    /// path is then bit-identical to the pre-ingress engine.
+    pub admission: Option<AdmissionConfig>,
     pub seed: u64,
 }
 
@@ -192,7 +209,12 @@ pub struct MultiModelResult {
     pub replicas: Vec<ReplicaMetrics>,
     /// Every load / ready / evict / reject transition.
     pub placement: PlacementTimeline,
+    /// Per-class ledgers, indexed by priority class. Empty when
+    /// [`MultiModelConfig::admission`] is `None`; otherwise one entry per
+    /// configured class, each individually conserved.
+    pub classes: Vec<ClassMetrics>,
     /// Requests dropped across all streams.
+    /// `collector.drop_breakdown()` splits this by [`DropReason`].
     pub dropped: u64,
     /// Requests issued across all streams.
     pub issued: u64,
@@ -296,27 +318,38 @@ impl Replica {
     }
 }
 
-/// The single drop path: remove the trace from the slab, mark it
-/// dropped, and feed every ledger that owns it — the per-model stream,
-/// the cluster-level collector, and (when the drop happened on a replica
-/// rather than at the routing tier) that replica's own collector. Every
-/// rejection goes through here, so no path can update the conservation
-/// ledger partially.
-fn drop_trace(
+/// The single drop path: remove the trace from the slab and feed every
+/// ledger that owns it — [`ingress::drop_trace`] stamps the reason and
+/// ingests the sinks in the canonical order (replica when the drop
+/// happened on one, then the per-model stream, then the cluster-level
+/// collector), and the per-class ledger follows when the admission tier
+/// is on. Every rejection goes through here, so no path can update the
+/// conservation ledger partially.
+#[allow(clippy::too_many_arguments)]
+fn drop_slot(
     slot: u32,
     model: usize,
+    reason: DropReason,
     replica: Option<&mut ReplicaMetrics>,
     traces: &mut TraceStore,
     model_metrics: &mut [ModelMetrics],
+    classes: &mut [ClassMetrics],
     collector: &mut Collector,
 ) {
     let mut trace = traces.remove(slot);
-    trace.dropped = true;
-    if let Some(r) = replica {
-        r.collector.ingest(&trace);
+    match replica {
+        Some(r) => ingress::drop_trace(
+            &mut trace,
+            reason,
+            [&mut r.collector, &mut model_metrics[model].collector, &mut *collector],
+        ),
+        None => ingress::drop_trace(
+            &mut trace,
+            reason,
+            [&mut model_metrics[model].collector, &mut *collector],
+        ),
     }
-    model_metrics[model].collector.ingest(&trace);
-    collector.ingest(&trace);
+    class_ingest(classes, &trace);
 }
 
 /// Drop dispatch intervals that ended at or before `lo` (intervals are
@@ -438,21 +471,24 @@ fn evict_model(
     specs: &[ModelSpec],
     routable: &mut [Vec<usize>],
     outstanding: &mut [Vec<usize>],
-    held: &mut [Vec<u32>],
+    held: &mut [HeldQueue],
     traces: &mut TraceStore,
     model_metrics: &mut [ModelMetrics],
+    classes: &mut [ClassMetrics],
     collector: &mut Collector,
     placement: &mut PlacementTimeline,
 ) {
     let m = replicas[ri].hosted[hi].model;
     let drained = replicas[ri].hosted[hi].batcher.take_queue();
     for q in &drained {
-        drop_trace(
+        drop_slot(
             q.id as u32,
             m,
+            DropReason::EvictedBacklog,
             Some(&mut replicas[ri].metrics),
             traces,
             model_metrics,
+            classes,
             collector,
         );
     }
@@ -471,9 +507,87 @@ fn evict_model(
             .iter()
             .any(|r| r.hosted.iter().any(|h| h.model == m && h.state == HostState::Loading))
     {
-        for slot in held[m].drain(..) {
-            drop_trace(slot, m, None, traces, model_metrics, collector);
+        for (slot, _) in held[m].drain_all() {
+            drop_slot(
+                slot,
+                m,
+                DropReason::EvictedBacklog,
+                None,
+                traces,
+                model_metrics,
+                classes,
+                collector,
+            );
         }
+    }
+}
+
+/// Route one request at the front door and stage it into the chosen
+/// (replica, model) lane — or drop it as [`DropReason::QueueFull`] when
+/// that lane's queue is at capacity. The shared tail of the ingress
+/// path: the arrival handler and the post-cold-start flush of held
+/// requests both end here, so the hold-time accounting, the queue
+/// counters, and the batcher decision are written once.
+#[allow(clippy::too_many_arguments)]
+fn route_and_stage(
+    slot: u32,
+    m: usize,
+    now: f64,
+    config: &MultiModelConfig,
+    router: &mut ModelRouter,
+    routable: &[Vec<usize>],
+    outstanding: &mut [Vec<usize>],
+    replicas: &mut [Replica],
+    traces: &mut TraceStore,
+    model_metrics: &mut [ModelMetrics],
+    classes: &mut [ClassMetrics],
+    collector: &mut Collector,
+    heap: &mut Heap,
+    seq: &mut u64,
+) {
+    let ri = router.route(m, now, &routable[m], &outstanding[m]);
+    let hi = replicas[ri].host_index(m).expect("routable replica hosts the model");
+    if replicas[ri].hosted[hi].queued >= config.models[m].max_queue {
+        // This model's queue on the chosen replica is full.
+        drop_slot(
+            slot,
+            m,
+            DropReason::QueueFull,
+            Some(&mut replicas[ri].metrics),
+            traces,
+            model_metrics,
+            classes,
+            collector,
+        );
+        return;
+    }
+    let r = &mut replicas[ri];
+    let decision = {
+        let h = &mut r.hosted[hi];
+        let d = ingress::stage_into_batcher(traces.get_mut(slot), &mut h.batcher, slot, now, h.busy);
+        h.queued += 1;
+        d
+    };
+    outstanding[m][ri] += 1;
+    match decision {
+        Decision::Dispatch(_) => start_batch(
+            ri,
+            hi,
+            r,
+            &config.models[m],
+            &config.contention,
+            now,
+            heap,
+            seq,
+            traces,
+        ),
+        Decision::WakeAt(t) => push(
+            heap,
+            t,
+            Event::Wake { replica: ri, model: m as u32, scheduled_for: t },
+            seq,
+        ),
+        Decision::Wait => {}
     }
 }
 
@@ -492,6 +606,9 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
     }
     let horizon_s = config.duration_s.max(1.0) * 1.5;
     let n_models = config.models.len();
+    if let Some(adm) = &config.admission {
+        adm.validate(n_models);
+    }
 
     // Build replicas; initial placement must fit the budget.
     let mut replicas: Vec<Replica> = Vec::with_capacity(config.replicas.len());
@@ -524,7 +641,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
     let streams: Vec<StreamSpec> = config
         .models
         .iter()
-        .map(|m| StreamSpec { name: m.name.clone(), pattern: m.pattern.clone() })
+        .map(|m| StreamSpec::new(m.name.clone(), m.pattern.clone()))
         .collect();
     // O(streams)-memory counting pre-pass over the merged source, then the
     // split-RNG setup (see cluster.rs): issue-phase draws come lazily from
@@ -551,6 +668,21 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
         .map(|m| ModelMetrics::with_mode(m.name.clone(), config.metrics))
         .collect();
 
+    // Admission tier (tenant i = model i). Token buckets and class
+    // shedding only: every model owns its routing domain, so there is no
+    // shared front door for WFQ to arbitrate (see the module doc).
+    let mut admission = config.admission.as_ref().map(Admission::new);
+    let class_tags: Vec<u8> = config
+        .admission
+        .as_ref()
+        .map(|a| a.tenants.iter().map(|t| t.class).collect())
+        .unwrap_or_default();
+    let mut classes: Vec<ClassMetrics> = config
+        .admission
+        .as_ref()
+        .map(|a| (0..a.n_classes()).map(|c| ClassMetrics::with_mode(c as u8, config.metrics)).collect())
+        .unwrap_or_default();
+
     // Per-model router inputs: the ascending list of replicas hosting the
     // model (maintained on placement transitions) and per-(model, replica)
     // outstanding counts.
@@ -562,8 +694,9 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
     }
     let mut outstanding: Vec<Vec<usize>> = vec![vec![0; replicas.len()]; n_models];
     // Requests held at the routing tier per model while its only hosts
-    // are still loading; flushed on ModelReady.
-    let mut held: Vec<Vec<u32>> = vec![Vec::new(); n_models];
+    // are still loading; flushed on ModelReady. Always FIFO here — each
+    // model is its own routing domain (see the module doc).
+    let mut held: Vec<HeldQueue> = (0..n_models).map(|_| HeldQueue::fifo()).collect();
 
     // Lazy merged arrival stream (open loop): one request is issued —
     // pipeline stages sampled, Enqueue scheduled, its stream's `issued`
@@ -602,6 +735,10 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             model_metrics[a.stream].issued += 1;
             let (pre, tx, _post) = config.path.sample(&mut rng_issue);
             let mut trace = RequestTrace::new(a.id, a.time_s);
+            if !classes.is_empty() {
+                trace.class = class_tags[a.stream];
+                classes[trace.class as usize].issued += 1;
+            }
             trace.record_stage(Stage::PreProcess, pre);
             trace.record_stage(Stage::Transmission, tx);
             let enqueue_at = trace.completed_s;
@@ -620,6 +757,27 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
         match event {
             Event::Enqueue { slot, model } => {
                 let m = model as usize;
+                // Admission first: a shed request never reaches routing.
+                // `traces.len() - 1` is the live in-system count excluding
+                // the arrival itself (same convention as the cluster
+                // engine). With admission on, held requests are flushed by
+                // direct staging (see ModelReady), so this event only ever
+                // carries first-time arrivals — no token double-spend.
+                if let Some(adm) = admission.as_mut() {
+                    if let Some(reason) = adm.admit(now, m, traces.len() - 1) {
+                        drop_slot(
+                            slot,
+                            m,
+                            reason,
+                            None,
+                            &mut traces,
+                            &mut model_metrics,
+                            &mut classes,
+                            &mut collector,
+                        );
+                        continue;
+                    }
+                }
                 if routable[m].is_empty() {
                     // No replica hosts this model right now: hold while a
                     // load is in progress, otherwise reject — nothing will
@@ -628,64 +786,37 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                         r.hosted.iter().any(|h| h.model == m && h.state == HostState::Loading)
                     });
                     if loading {
-                        held[m].push(slot);
+                        held[m].push_fifo(slot);
                     } else {
-                        drop_trace(slot, m, None, &mut traces, &mut model_metrics, &mut collector);
-                    }
-                    continue;
-                }
-                let ri = router.route(m, now, &routable[m], &outstanding[m]);
-                let hi = replicas[ri]
-                    .host_index(m)
-                    .expect("routable replica hosts the model");
-                if replicas[ri].hosted[hi].queued >= config.models[m].max_queue {
-                    // This model's queue on the chosen replica is full.
-                    drop_trace(
-                        slot,
-                        m,
-                        Some(&mut replicas[ri].metrics),
-                        &mut traces,
-                        &mut model_metrics,
-                        &mut collector,
-                    );
-                    continue;
-                }
-                {
-                    // Routing-tier hold time (load-in-progress window)
-                    // counts as queueing, as in the cluster engine.
-                    let trace = traces.get_mut(slot);
-                    if now > trace.completed_s {
-                        let hold = now - trace.completed_s;
-                        trace.record_stage(Stage::Batching, hold);
-                    }
-                }
-                let r = &mut replicas[ri];
-                let h = &mut r.hosted[hi];
-                h.batcher.enqueue(slot as u64, now);
-                h.queued += 1;
-                outstanding[m][ri] += 1;
-                if !h.busy {
-                    match h.batcher.poll(now) {
-                        Decision::Dispatch(_) => start_batch(
-                            ri,
-                            hi,
-                            r,
-                            &config.models[m],
-                            &config.contention,
-                            now,
-                            &mut heap,
-                            &mut seq,
+                        drop_slot(
+                            slot,
+                            m,
+                            DropReason::RejectedPlacement,
+                            None,
                             &mut traces,
-                        ),
-                        Decision::WakeAt(t) => push(
-                            &mut heap,
-                            t,
-                            Event::Wake { replica: ri, model, scheduled_for: t },
-                            &mut seq,
-                        ),
-                        Decision::Wait => {}
+                            &mut model_metrics,
+                            &mut classes,
+                            &mut collector,
+                        );
                     }
+                    continue;
                 }
+                route_and_stage(
+                    slot,
+                    m,
+                    now,
+                    config,
+                    &mut router,
+                    &routable,
+                    &mut outstanding,
+                    &mut replicas,
+                    &mut traces,
+                    &mut model_metrics,
+                    &mut classes,
+                    &mut collector,
+                    &mut heap,
+                    &mut seq,
+                );
             }
             Event::Wake { replica: ri, model, scheduled_for } => {
                 let m = model as usize;
@@ -736,6 +867,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     replicas[ri].metrics.collector.ingest(&trace);
                     model_metrics[m].collector.ingest(&trace);
                     collector.ingest(&trace);
+                    class_ingest(&mut classes, &trace);
                 }
                 replicas[ri].hosted[hi].in_flight.clear();
                 outstanding[m][ri] -= n_done;
@@ -779,10 +911,39 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                 }
                 insert_routable(&mut routable[m], ri);
                 placement.record(now, PlacementEventKind::Ready, ri, m);
-                // Flush requests held at the routing tier, in arrival
-                // order (the sequence counter keeps the FIFO exact).
-                for slot in held[m].drain(..) {
-                    push(&mut heap, now, Event::Enqueue { slot, model }, &mut seq);
+                match admission.as_ref() {
+                    // Flush requests held at the routing tier, in arrival
+                    // order (the sequence counter keeps the FIFO exact) —
+                    // the historical re-push, pinned by the golden suites.
+                    None => {
+                        for slot in held[m].drain_fifo() {
+                            push(&mut heap, now, Event::Enqueue { slot, model }, &mut seq);
+                        }
+                    }
+                    // With admission on, held requests were already
+                    // admitted at arrival: stage them directly instead of
+                    // re-pushing Enqueue events, which would re-run
+                    // admission and double-spend bucket tokens.
+                    Some(_) => {
+                        for (slot, _) in held[m].drain_all() {
+                            route_and_stage(
+                                slot,
+                                m,
+                                now,
+                                config,
+                                &mut router,
+                                &routable,
+                                &mut outstanding,
+                                &mut replicas,
+                                &mut traces,
+                                &mut model_metrics,
+                                &mut classes,
+                                &mut collector,
+                                &mut heap,
+                                &mut seq,
+                            );
+                        }
+                    }
                 }
             }
             Event::Place { op: opi } => {
@@ -840,6 +1001,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                     &mut held,
                                     &mut traces,
                                     &mut model_metrics,
+                                    &mut classes,
                                     &mut collector,
                                     &mut placement,
                                 ),
@@ -897,6 +1059,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                 &mut held,
                                 &mut traces,
                                 &mut model_metrics,
+                                &mut classes,
                                 &mut collector,
                                 &mut placement,
                             ),
@@ -927,14 +1090,38 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             mm.collector.dropped
         );
     }
+    debug_assert!(
+        collector.drops_conserved(),
+        "drop-reason ledger broken: reasons sum to {} but dropped is {}",
+        collector.drop_breakdown().iter().map(|&(_, n)| n).sum::<u64>(),
+        collector.dropped
+    );
 
     let dropped = collector.dropped;
     let issued: u64 = model_metrics.iter().map(|m| m.issued).sum();
+    if !classes.is_empty() {
+        debug_assert_eq!(
+            classes.iter().map(|c| c.issued).sum::<u64>(),
+            issued,
+            "per-class issue counts must partition the issue total"
+        );
+        for cm in &classes {
+            debug_assert!(
+                cm.conserved(),
+                "class {} ledger broken: issued {} != completed {} + dropped {}",
+                cm.class,
+                cm.issued,
+                cm.collector.completed,
+                cm.collector.dropped
+            );
+        }
+    }
     MultiModelResult {
         collector,
         models: model_metrics,
         replicas: replicas.into_iter().map(|r| r.metrics).collect(),
         placement,
+        classes,
         dropped,
         issued,
         events,
@@ -946,6 +1133,7 @@ mod tests {
     use super::*;
     use crate::pipeline::Processors;
     use crate::serving::backends;
+    use crate::serving::ingress::TenantSpec;
 
     fn model(name: &str, per_req_ms: f64, rate: f64) -> ModelSpec {
         ModelSpec {
@@ -971,6 +1159,7 @@ mod tests {
             contention: ContentionModel::default(),
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
+            admission: None,
             seed: 9,
         }
     }
@@ -1306,6 +1495,71 @@ mod tests {
                 "p{q}: sketch {ps} vs exact {pe}"
             );
         }
+    }
+
+    #[test]
+    fn admission_sheds_per_model_and_keeps_class_ledgers_exact() {
+        // Model a is gold (class 0, unlimited); model b is bronze
+        // (class 1) and rate-limited to 40 rps against 300 rps offered —
+        // most of b sheds at the token bucket while a is untouched, and
+        // every ledger (per model, per class, per reason) stays exact.
+        let cfg = MultiModelConfig {
+            admission: Some(AdmissionConfig {
+                tenants: vec![
+                    TenantSpec::new("a").with_class(0),
+                    TenantSpec::new("b").with_class(1).with_rate(40.0, 10.0),
+                ],
+                shed_depth: vec![10_000, 10_000],
+            }),
+            ..base(
+                vec![model("a", 4.0, 60.0), model("b", 5.0, 300.0)],
+                vec![shared_replica(vec![0, 1])],
+            )
+        };
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert_eq!(r.classes.len(), 2);
+        assert_eq!(r.classes.iter().map(|c| c.issued).sum::<u64>(), r.issued);
+        for c in &r.classes {
+            assert!(c.conserved(), "class {} ledger must balance", c.class);
+        }
+        let bronze = &r.classes[1];
+        assert!(
+            bronze.collector.dropped_by(DropReason::Shed) as f64
+                > 0.7 * bronze.issued as f64,
+            "a 40 rps bucket against 300 rps offered must shed most of bronze"
+        );
+        assert_eq!(bronze.collector.dropped_by(DropReason::Shed), bronze.collector.dropped);
+        assert_eq!(r.classes[0].collector.dropped, 0, "gold is untouched by b's limit");
+        assert_eq!(
+            r.collector.dropped_by(DropReason::Shed),
+            r.dropped,
+            "every drop in this scenario is an admission shed"
+        );
+        // Determinism with the tier on.
+        let r2 = run(&cfg);
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+    }
+
+    #[test]
+    #[should_panic(expected = "admission defines 3 tenants but the workload has 2 streams")]
+    fn admission_rejects_model_count_mismatch() {
+        let cfg = MultiModelConfig {
+            admission: Some(AdmissionConfig {
+                tenants: vec![
+                    TenantSpec::new("a"),
+                    TenantSpec::new("b"),
+                    TenantSpec::new("ghost"),
+                ],
+                shed_depth: vec![100],
+            }),
+            ..base(
+                vec![model("a", 4.0, 10.0), model("b", 4.0, 10.0)],
+                vec![shared_replica(vec![0, 1])],
+            )
+        };
+        let _ = run(&cfg);
     }
 
     #[test]

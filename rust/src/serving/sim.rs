@@ -94,6 +94,7 @@ pub fn run(config: &SimConfig) -> SimResult {
         cold_start: None,
         path: config.path,
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: config.seed,
     };
     let mut result = cluster::run(&cluster_cfg);

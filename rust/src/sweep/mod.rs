@@ -33,7 +33,7 @@
 //! and the worker runs the plan on its `threads_per_worker` budget — the
 //! paper's two-tier scheduler extended down to intra-job parallelism.
 
-use crate::metrics::Collector;
+use crate::metrics::{ClassMetrics, Collector};
 use crate::serving::cluster::{self, ClusterConfig, ClusterResult};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -251,6 +251,29 @@ impl SweepOutcome {
         }
         all
     }
+
+    /// Class-aware fan-in: the overall collector plus per-class ledgers
+    /// merged across cells, all absorbed **in plan order** (cell by cell,
+    /// class by class) so the result is bit-identical at any thread
+    /// count, like [`aggregate`](Self::aggregate). Cells run without an
+    /// admission tier contribute no class entries; cells that shed
+    /// different class counts align by class index. The class vector is
+    /// empty iff no cell had admission configured.
+    pub fn aggregate_classes(self) -> (Collector, Vec<ClassMetrics>) {
+        let mut all = Collector::new();
+        let mut classes: Vec<ClassMetrics> = Vec::new();
+        for cell in self.cells {
+            all.absorb(cell.result.collector);
+            for cm in cell.result.classes {
+                let c = cm.class as usize;
+                while classes.len() <= c {
+                    classes.push(ClassMetrics::new(classes.len() as u8));
+                }
+                classes[c].absorb(cm);
+            }
+        }
+        (all, classes)
+    }
 }
 
 #[cfg(test)]
@@ -292,6 +315,7 @@ mod tests {
                 cold_start: None,
                 path: RequestPath::local(Processors::none()),
                 metrics: MetricsMode::Exact,
+                admission: None,
                 seed,
             });
         }
@@ -368,6 +392,7 @@ mod tests {
                     cold_start: None,
                     path: RequestPath::local(Processors::none()),
                     metrics: MetricsMode::Sketch { alpha: 0.01 },
+                    admission: None,
                     seed,
                 });
             }
@@ -379,6 +404,64 @@ mod tests {
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.fingerprint(), b.fingerprint());
         assert_eq!(a.e2e.percentile(99.0).to_bits(), b.e2e.percentile(99.0).to_bits());
+    }
+
+    #[test]
+    fn class_aggregation_is_thread_count_independent() {
+        use crate::serving::ingress::{AdmissionConfig, TenantSpec};
+        use crate::workload::StreamSpec;
+        // Admission-enabled cells: two classes, bronze rate-limited so the
+        // Shed ledger is genuinely exercised through the absorb path.
+        let qos_plan = || {
+            let mut plan = SweepPlan::new(11);
+            for i in 0..3u64 {
+                plan.push(format!("cell{i}"), move |seed| ClusterConfig {
+                    workload: Workload::Streams {
+                        streams: vec![
+                            StreamSpec::new("gold", Pattern::Poisson { rate: 60.0 })
+                                .with_qos(0, 2.0),
+                            StreamSpec::new(
+                                "bronze",
+                                Pattern::Poisson { rate: 120.0 + i as f64 * 40.0 },
+                            )
+                            .with_qos(1, 1.0),
+                        ],
+                        seed,
+                    },
+                    duration_s: 4.0,
+                    replicas: vec![replica(3.0)],
+                    router: RouterPolicy::LeastOutstanding,
+                    autoscale: None,
+                    cold_start: None,
+                    path: RequestPath::local(Processors::none()),
+                    metrics: MetricsMode::Exact,
+                    admission: Some(AdmissionConfig {
+                        tenants: vec![
+                            TenantSpec::new("gold").with_class(0).with_weight(2.0),
+                            TenantSpec::new("bronze").with_class(1).with_rate(50.0, 10.0),
+                        ],
+                        shed_depth: vec![2000, 500],
+                    }),
+                    seed,
+                });
+            }
+            plan
+        };
+        let (a_all, a_classes) = qos_plan().run(1).aggregate_classes();
+        let (b_all, b_classes) = qos_plan().run(8).aggregate_classes();
+        assert_eq!(a_all.fingerprint(), b_all.fingerprint());
+        assert_eq!(a_classes.len(), 2);
+        assert_eq!(b_classes.len(), 2);
+        for (ca, cb) in a_classes.iter().zip(&b_classes) {
+            assert_eq!(ca.class, cb.class);
+            assert_eq!(ca.issued, cb.issued);
+            assert!(ca.conserved(), "merged class {} ledger must balance", ca.class);
+            assert_eq!(ca.collector.fingerprint(), cb.collector.fingerprint());
+        }
+        assert!(a_classes[1].shed_fraction() > 0.0, "bronze rate limit must bite");
+        assert_eq!(a_classes[0].collector.dropped, 0, "gold rides free in this grid");
+        let issued: u64 = a_classes.iter().map(|c| c.issued).sum();
+        assert_eq!(issued, a_all.completed + a_all.dropped, "classes partition the sweep");
     }
 
     #[test]

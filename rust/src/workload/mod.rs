@@ -75,6 +75,14 @@ pub enum Workload {
     /// single source of truth for client count); reissues are engine
     /// events.
     ClosedLoop { clients: usize },
+    /// Multi-tenant open-loop traffic: one tagged stream per tenant,
+    /// merged deterministically by `(time, stream)` exactly like the
+    /// multi-model generator. The cluster engine reads the per-arrival
+    /// stream index as the tenant id, which is what the admission tier
+    /// keys its token buckets, WFQ weights, and priority classes on.
+    /// `Pattern::ClosedLoop` streams are not supported here (reissue
+    /// routing is per-tenant-undefined); the engine asserts.
+    Streams { streams: Vec<StreamSpec>, seed: u64 },
 }
 
 impl Workload {
@@ -92,6 +100,20 @@ impl Workload {
                 duration_s,
                 0,
             )),
+            Workload::Streams { streams, seed } => {
+                SourceIter::Merged(MergedSource::new(streams, duration_s, *seed))
+            }
+        }
+    }
+
+    /// The tagged tenant streams, when this is a [`Workload::Streams`]
+    /// workload. Engines use the tags to size admission state and map
+    /// arrival stream indices to tenants; `None` means one anonymous
+    /// tenant (index 0).
+    pub fn stream_specs(&self) -> Option<&[StreamSpec]> {
+        match self {
+            Workload::Streams { streams, .. } => Some(streams),
+            _ => None,
         }
     }
 
@@ -133,6 +155,10 @@ pub enum SourceIter<'a> {
         last_t: f64,
     },
     Pattern(PatternSource),
+    /// Tagged multi-stream merge with the tenant tag projected away —
+    /// used by tenant-unaware consumers (`count_in`, rate checks). The
+    /// cluster engine consumes [`MergedSource`] directly to keep the tag.
+    Merged(MergedSource),
 }
 
 impl Iterator for SourceIter<'_> {
@@ -155,6 +181,9 @@ impl Iterator for SourceIter<'_> {
                 return Some(Arrival { id, time_s: a.time_s });
             },
             SourceIter::Pattern(p) => p.next(),
+            SourceIter::Merged(m) => {
+                m.next().map(|a| Arrival { id: a.id, time_s: a.time_s })
+            }
         }
     }
 }
@@ -169,11 +198,38 @@ pub fn generate(pattern: &Pattern, duration_s: f64, seed: u64) -> Vec<Arrival> {
 
 /// One named open-loop stream of a multi-stream workload: a model name
 /// plus the arrival pattern that targets it (the multi-model serving
-/// engine pairs stream `i` with model `i`).
+/// engine pairs stream `i` with model `i`; the cluster engine's
+/// [`Workload::Streams`] treats stream `i` as tenant `i`).
+///
+/// The `class`/`weight` tags are QoS metadata for the admission tier
+/// (`serving/ingress.rs`): they never enter arrival generation — stream
+/// seeds derive from `(seed, stream index)` and draws depend only on
+/// `pattern` — so tagging a stream cannot perturb a single arrival time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StreamSpec {
     pub name: String,
     pub pattern: Pattern,
+    /// Priority class for admission control (0 = highest). Ignored when
+    /// the run has no admission tier.
+    pub class: u8,
+    /// Weighted-fair-queueing weight (> 0). Ignored without admission.
+    pub weight: f64,
+}
+
+impl StreamSpec {
+    /// An untagged stream: class 0 (highest), weight 1 — the defaults
+    /// every pre-QoS call site meant.
+    pub fn new(name: impl Into<String>, pattern: Pattern) -> Self {
+        StreamSpec { name: name.into(), pattern, class: 0, weight: 1.0 }
+    }
+
+    /// Tag the stream with an admission class and WFQ weight.
+    pub fn with_qos(mut self, class: u8, weight: f64) -> Self {
+        assert!(weight > 0.0, "WFQ weight must be positive, got {weight}");
+        self.class = class;
+        self.weight = weight;
+        self
+    }
 }
 
 /// An arrival belonging to one stream of a merged multi-stream workload.
@@ -331,17 +387,17 @@ mod tests {
     #[test]
     fn generate_streams_is_byte_identical_to_frozen_reference() {
         let streams = vec![
-            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 50.0 } },
-            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 30.0 } },
-            StreamSpec {
-                name: "c".into(),
-                pattern: Pattern::Spike {
+            StreamSpec::new("a", Pattern::Poisson { rate: 50.0 }),
+            StreamSpec::new("b", Pattern::Uniform { rate: 30.0 }),
+            StreamSpec::new(
+                "c",
+                Pattern::Spike {
                     base_rate: 15.0,
                     burst_rate: 150.0,
                     start_s: 4.0,
                     duration_s: 3.0,
                 },
-            },
+            ),
         ];
         for seed in [0u64, 7, 42] {
             assert_eq!(
@@ -541,8 +597,8 @@ mod tests {
     #[test]
     fn multi_stream_merge_is_sorted_with_monotone_ids() {
         let streams = vec![
-            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 50.0 } },
-            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 30.0 } },
+            StreamSpec::new("a", Pattern::Poisson { rate: 50.0 }),
+            StreamSpec::new("b", Pattern::Uniform { rate: 30.0 }),
         ];
         let merged = generate_streams(&streams, 20.0, 7);
         assert!(merged.windows(2).all(|w| w[0].time_s <= w[1].time_s), "merge must be sorted");
@@ -562,16 +618,16 @@ mod tests {
         // does (per-stream PCG streams, not one shared draw sequence).
         let a = generate_streams(
             &[
-                StreamSpec { name: "x".into(), pattern: Pattern::Poisson { rate: 40.0 } },
-                StreamSpec { name: "y".into(), pattern: Pattern::Poisson { rate: 10.0 } },
+                StreamSpec::new("x", Pattern::Poisson { rate: 40.0 }),
+                StreamSpec::new("y", Pattern::Poisson { rate: 10.0 }),
             ],
             15.0,
             3,
         );
         let b = generate_streams(
             &[
-                StreamSpec { name: "x".into(), pattern: Pattern::Poisson { rate: 40.0 } },
-                StreamSpec { name: "y".into(), pattern: Pattern::Uniform { rate: 200.0 } },
+                StreamSpec::new("x", Pattern::Poisson { rate: 40.0 }),
+                StreamSpec::new("y", Pattern::Uniform { rate: 200.0 }),
             ],
             15.0,
             3,
@@ -586,8 +642,8 @@ mod tests {
     #[test]
     fn multi_stream_deterministic_per_seed() {
         let streams = vec![
-            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 25.0 } },
-            StreamSpec { name: "b".into(), pattern: Pattern::Poisson { rate: 25.0 } },
+            StreamSpec::new("a", Pattern::Poisson { rate: 25.0 }),
+            StreamSpec::new("b", Pattern::Poisson { rate: 25.0 }),
         ];
         let a = generate_streams(&streams, 10.0, 42);
         let b = generate_streams(&streams, 10.0, 42);
@@ -600,6 +656,43 @@ mod tests {
             a.iter().filter(|x| x.stream == 0).map(|x| x.time_s).collect::<Vec<_>>(),
             a.iter().filter(|x| x.stream == 1).map(|x| x.time_s).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn tagged_workload_matches_generate_streams() {
+        // Workload::Streams is the merged generator with tags: same
+        // times, same ids, and QoS tags do not perturb generation.
+        let plain = vec![
+            StreamSpec::new("gold", Pattern::Poisson { rate: 40.0 }),
+            StreamSpec::new("bronze", Pattern::Uniform { rate: 25.0 }),
+        ];
+        let tagged: Vec<StreamSpec> = vec![
+            StreamSpec::new("gold", Pattern::Poisson { rate: 40.0 }).with_qos(0, 4.0),
+            StreamSpec::new("bronze", Pattern::Uniform { rate: 25.0 }).with_qos(2, 1.0),
+        ];
+        let w = Workload::Streams { streams: tagged.clone(), seed: 17 };
+        let got: Vec<Arrival> = w.source(8.0).collect();
+        let expect: Vec<Arrival> = generate_streams(&plain, 8.0, 17)
+            .into_iter()
+            .map(|a| Arrival { id: a.id, time_s: a.time_s })
+            .collect();
+        assert_eq!(got, expect, "QoS tags must not move arrival times");
+        assert_eq!(w.count_in(8.0), got.len() as u64);
+        assert_eq!(w.closed_loop_clients(), None);
+        assert_eq!(w.stream_specs().map(<[StreamSpec]>::len), Some(2));
+        assert_eq!(tagged[0].class, 0);
+        assert_eq!(tagged[1].class, 2);
+        assert_eq!(tagged[1].weight, 1.0);
+        assert_eq!(
+            Workload::Stream { pattern: Pattern::Poisson { rate: 1.0 }, seed: 0 }.stream_specs(),
+            None
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "weight must be positive")]
+    fn qos_tags_reject_nonpositive_weight() {
+        let _ = StreamSpec::new("a", Pattern::Poisson { rate: 1.0 }).with_qos(0, 0.0);
     }
 
     #[test]

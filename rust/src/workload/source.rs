@@ -340,9 +340,8 @@ pub fn zipf_streams(prefix: &str, n_streams: usize, exponent: f64, total_rate: f
     weights
         .into_iter()
         .enumerate()
-        .map(|(i, w)| StreamSpec {
-            name: format!("{prefix}{i}"),
-            pattern: Pattern::Poisson { rate: total_rate * w / z },
+        .map(|(i, w)| {
+            StreamSpec::new(format!("{prefix}{i}"), Pattern::Poisson { rate: total_rate * w / z })
         })
         .collect()
 }
@@ -382,17 +381,17 @@ mod tests {
     #[test]
     fn merged_source_collects_to_generate_streams() {
         let streams = vec![
-            StreamSpec { name: "a".into(), pattern: Pattern::Poisson { rate: 60.0 } },
-            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 45.0 } },
-            StreamSpec {
-                name: "c".into(),
-                pattern: Pattern::Spike {
+            StreamSpec::new("a", Pattern::Poisson { rate: 60.0 }),
+            StreamSpec::new("b", Pattern::Uniform { rate: 45.0 }),
+            StreamSpec::new(
+                "c",
+                Pattern::Spike {
                     base_rate: 10.0,
                     burst_rate: 90.0,
                     start_s: 3.0,
                     duration_s: 2.0,
                 },
-            },
+            ),
         ];
         let streamed: Vec<StreamArrival> = MergedSource::new(&streams, 12.0, 5).collect();
         assert_eq!(streamed, generate_streams(&streams, 12.0, 5));
@@ -403,8 +402,8 @@ mod tests {
         // Uniform streams at the same rate collide at every arrival time;
         // ties must resolve by stream index, exactly like the stable sort.
         let streams = vec![
-            StreamSpec { name: "a".into(), pattern: Pattern::Uniform { rate: 10.0 } },
-            StreamSpec { name: "b".into(), pattern: Pattern::Uniform { rate: 10.0 } },
+            StreamSpec::new("a", Pattern::Uniform { rate: 10.0 }),
+            StreamSpec::new("b", Pattern::Uniform { rate: 10.0 }),
         ];
         let merged: Vec<StreamArrival> = MergedSource::new(&streams, 1.0, 1).collect();
         assert_eq!(merged, generate_streams(&streams, 1.0, 1));

@@ -41,6 +41,7 @@ fn spike_config(software: &'static Software, autoscale: Option<AutoscaleConfig>)
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 909,
     }
 }

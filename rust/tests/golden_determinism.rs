@@ -628,6 +628,7 @@ fn golden_fixed_fleet_every_router() {
             cold_start: None,
             path: RequestPath::local(Processors::image()),
             metrics: MetricsMode::Exact,
+            admission: None,
             seed: 31,
         };
         assert_engines_match(&cfg, router.label());
@@ -664,6 +665,7 @@ fn golden_autoscale_spike() {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 77,
     };
     assert_engines_match(&cfg, "autoscale-spike");
@@ -683,6 +685,7 @@ fn golden_closed_loop_with_rejections() {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 13,
     };
     let golden = run_reference(&cfg);
@@ -701,6 +704,7 @@ fn golden_fixed_batch_with_image_pipeline() {
         cold_start: None,
         path: RequestPath::local(Processors::image()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 9,
     };
     assert_engines_match(&cfg, "fixed-batch-image");

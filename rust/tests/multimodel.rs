@@ -41,6 +41,7 @@ fn base(models: Vec<ModelSpec>, replicas: Vec<MultiReplicaConfig>) -> MultiModel
         contention: ContentionModel::default(),
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 20260727,
     }
 }
@@ -78,6 +79,7 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
     vec![
         // Overcommitted colocation on one replica.
         MultiModelConfig {
+            admission: None,
             seed,
             ..base(
                 vec![model("a", 5.0, poisson(120.0)), model("b", 5.0, poisson(120.0))],
@@ -86,6 +88,7 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
         },
         // The same pair dedicated.
         MultiModelConfig {
+            admission: None,
             seed,
             ..base(
                 vec![model("a", 5.0, poisson(120.0)), model("b", 5.0, poisson(120.0))],
@@ -93,6 +96,7 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
             )
         },
         MultiModelConfig {
+            admission: None,
             seed,
             ..base(
                 vec![tight_a, tight_b],
@@ -100,6 +104,7 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
             )
         },
         MultiModelConfig {
+            admission: None,
             seed,
             duration_s: 40.0,
             placement_ops: vec![

@@ -61,6 +61,7 @@ fn scenario_plan() -> SweepPlan {
             cold_start: None,
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
+            admission: None,
             seed,
         });
     }
@@ -93,6 +94,7 @@ fn scenario_plan() -> SweepPlan {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed,
     });
     // Closed loop against a tiny queue: constant rejections + re-issues.
@@ -108,6 +110,7 @@ fn scenario_plan() -> SweepPlan {
             cold_start: None,
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
+            admission: None,
             seed,
         }
     });
@@ -121,6 +124,7 @@ fn scenario_plan() -> SweepPlan {
         cold_start: Some(50_000_000),
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed,
     });
     plan
@@ -238,6 +242,7 @@ fn panic_in_one_cell_surfaces_without_deadlocking() {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed,
     };
     for i in 0..6 {

@@ -1,0 +1,209 @@
+//! Ingress-tier acceptance suite: the shared admission front end must be
+//! invisible when disabled (bit-for-bit, at any sweep thread count),
+//! must match the disabled engine when configured permissively, and its
+//! per-class ledgers must survive the bounded-memory metrics backend.
+//!
+//! Complements `tests/golden_determinism.rs` (which pins the disabled
+//! path against the preserved pre-refactor reference engine) and the
+//! unit suites in `serving::ingress` / `serving::cluster` /
+//! `serving::multimodel`.
+
+use inferbench::metrics::{DropReason, MetricsMode};
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::cluster::{self, ClusterConfig, ReplicaConfig};
+use inferbench::serving::{
+    backends, AdmissionConfig, Policy, RouterPolicy, ServiceModel, TenantSpec,
+};
+use inferbench::sweep::SweepPlan;
+use inferbench::workload::{Pattern, StreamSpec, Workload};
+
+fn replica(per_req_ms: f64, policy: Policy) -> ReplicaConfig {
+    ReplicaConfig {
+        software: &backends::TRIS,
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+            utilization: 0.6,
+        },
+        policy,
+        max_queue: 100_000,
+    }
+}
+
+fn base_config(workload: Workload, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        workload,
+        duration_s: 12.0,
+        replicas: vec![
+            replica(3.0, Policy::Dynamic { max_size: 8, max_wait_s: 0.003 }),
+            replica(5.0, Policy::Dynamic { max_size: 8, max_wait_s: 0.003 }),
+        ],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::image()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        seed,
+    }
+}
+
+/// The existing golden scenarios (every router, mixed policies), run
+/// through the sweep engine with admission disabled: results must be
+/// bit-identical at 1, 2, and 8 threads — the ingress refactor must not
+/// have introduced any thread-sensitive state into the request path.
+#[test]
+fn admission_disabled_goldens_bit_identical_at_1_2_8_threads() {
+    let mut plan = SweepPlan::new(4242);
+    for (i, router) in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastOutstanding,
+        RouterPolicy::PowerOfTwoChoices { seed: 17 },
+        RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.25 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        plan.push(format!("router{i}"), move |seed| {
+            let mut cfg = base_config(
+                Workload::Stream { pattern: Pattern::Poisson { rate: 240.0 }, seed },
+                seed,
+            );
+            cfg.router = router;
+            cfg
+        });
+    }
+    plan.push("fixed-batch", |seed| {
+        let mut cfg = base_config(
+            Workload::Stream { pattern: Pattern::Uniform { rate: 150.0 }, seed },
+            seed,
+        );
+        cfg.replicas = vec![replica(6.0, Policy::Fixed { size: 4, timeout_s: 0.02 })];
+        cfg
+    });
+
+    let serial = plan.run(1);
+    for threads in [2, 8] {
+        let parallel = plan.run(threads);
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(
+                a.result.collector.fingerprint(),
+                b.result.collector.fingerprint(),
+                "{}: fingerprint diverged at {threads} threads",
+                a.label
+            );
+            assert_eq!(a.result.events, b.result.events, "{}", a.label);
+            assert_eq!(a.result.issued, b.result.issued, "{}", a.label);
+        }
+    }
+    // The sweep cells are the direct engine runs, not a variant of them.
+    let first = &serial.cells[0];
+    let direct = cluster::run(&plan.cells()[0].config_for(first.seed));
+    assert_eq!(direct.collector.fingerprint(), first.result.collector.fingerprint());
+    for cell in &serial.cells {
+        assert!(cell.result.classes.is_empty(), "no admission => no class ledgers");
+    }
+}
+
+/// A permissive admission config — one class, depths far above any
+/// backlog this load can build, no token buckets — must reproduce the
+/// admission-disabled run exactly: same collector fingerprint, same
+/// event count, zero shed. The admission seam costs nothing when it has
+/// nothing to do.
+#[test]
+fn permissive_admission_matches_disabled_run_exactly() {
+    let streams = vec![
+        StreamSpec::new("a", Pattern::Poisson { rate: 130.0 }),
+        StreamSpec::new("b", Pattern::Poisson { rate: 110.0 }),
+    ];
+    let disabled = cluster::run(&base_config(
+        Workload::Streams { streams: streams.clone(), seed: 909 },
+        909,
+    ));
+    let mut cfg =
+        base_config(Workload::Streams { streams, seed: 909 }, 909);
+    cfg.admission = Some(AdmissionConfig {
+        tenants: vec![TenantSpec::new("a"), TenantSpec::new("b")],
+        shed_depth: vec![1_000_000],
+    });
+    let permissive = cluster::run(&cfg);
+
+    assert_eq!(
+        permissive.collector.fingerprint(),
+        disabled.collector.fingerprint(),
+        "permissive admission must not perturb the request path"
+    );
+    assert_eq!(permissive.events, disabled.events);
+    assert_eq!(permissive.issued, disabled.issued);
+    assert_eq!(permissive.dropped, disabled.dropped);
+    assert_eq!(permissive.classes.len(), 1);
+    let cm = &permissive.classes[0];
+    assert!(cm.conserved());
+    assert_eq!(cm.issued, permissive.issued);
+    assert_eq!(cm.collector.dropped_by(DropReason::Shed), 0);
+}
+
+/// Overloaded two-class scenario where admission sheds the low class
+/// from the middle of the run onward (its stream spikes at t=4s).
+fn shedding_config(metrics: MetricsMode, seed: u64) -> ClusterConfig {
+    let streams = vec![
+        StreamSpec::new("gold", Pattern::Poisson { rate: 120.0 }).with_qos(0, 2.0),
+        StreamSpec::new(
+            "bronze",
+            Pattern::Spike { base_rate: 40.0, burst_rate: 700.0, start_s: 4.0, duration_s: 8.0 },
+        )
+        .with_qos(1, 1.0),
+    ];
+    let mut cfg = base_config(Workload::Streams { streams, seed }, seed);
+    cfg.admission = Some(AdmissionConfig {
+        tenants: vec![
+            TenantSpec::new("gold").with_class(0).with_weight(2.0),
+            TenantSpec::new("bronze").with_class(1).with_rate(60.0, 12.0),
+        ],
+        shed_depth: vec![5_000, 60],
+    });
+    cfg.metrics = metrics;
+    cfg
+}
+
+/// Property (satellite): with admission shedding a class mid-run, the
+/// sketch metrics backend keeps every per-class *count* exact and every
+/// per-class percentile within the configured relative error `alpha` of
+/// the exact backend — across seeds and alphas.
+#[test]
+fn sketch_per_class_percentiles_track_exact_within_alpha_under_shedding() {
+    for seed in [1u64, 58, 2026] {
+        let exact = cluster::run(&shedding_config(MetricsMode::Exact, seed));
+        assert_eq!(exact.classes.len(), 2);
+        let bronze_shed = exact.classes[1].collector.dropped_by(DropReason::Shed);
+        assert!(bronze_shed > 0, "seed {seed}: scenario must actually shed bronze");
+        assert_eq!(
+            exact.classes[0].collector.dropped_by(DropReason::Shed),
+            0,
+            "seed {seed}: gold must not shed"
+        );
+        for alpha in [0.01, 0.05] {
+            let sketch =
+                cluster::run(&shedding_config(MetricsMode::Sketch { alpha }, seed));
+            assert_eq!(sketch.classes.len(), 2);
+            for (e, s) in exact.classes.iter().zip(&sketch.classes) {
+                // Counts and the drop-reason ledger are mode-independent.
+                assert_eq!(e.class, s.class);
+                assert_eq!(e.issued, s.issued, "seed {seed} class {}", e.class);
+                assert_eq!(e.collector.completed, s.collector.completed);
+                assert_eq!(e.collector.drop_breakdown(), s.collector.drop_breakdown());
+                assert!(s.conserved(), "seed {seed} class {}", s.class);
+                // Percentiles carry at most the configured relative error.
+                for q in [50.0, 90.0, 99.0] {
+                    let (ev, sv) =
+                        (e.collector.e2e.percentile(q), s.collector.e2e.percentile(q));
+                    assert!(
+                        (sv / ev - 1.0).abs() <= alpha * 2.0 + 1e-9,
+                        "seed {seed} class {} p{q}: exact {ev} vs sketch {sv} (alpha {alpha})",
+                        e.class
+                    );
+                }
+            }
+        }
+    }
+}

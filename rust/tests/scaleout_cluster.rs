@@ -44,6 +44,7 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
         cold_start: None,
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: 7,
     }
 }
@@ -74,6 +75,7 @@ fn n1_cluster_matches_single_server_sim() {
         cold_start: None,
         path: sim_cfg.path,
         metrics: MetricsMode::Exact,
+        admission: None,
         seed: sim_cfg.seed,
     };
     let s = run_sim(&sim_cfg);
