@@ -60,6 +60,8 @@ fn cluster(replicas: Vec<ReplicaConfig>, rate: f64, router: RouterPolicy) -> Clu
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: SEED,
     }
 }

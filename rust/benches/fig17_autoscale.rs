@@ -88,6 +88,8 @@ fn config_for(software: &'static Software, policy: ScalePolicy) -> ClusterConfig
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: SEED,
     }
 }

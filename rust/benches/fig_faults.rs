@@ -1,0 +1,262 @@
+//! Tail latency, goodput and availability under replica crashes (the
+//! fault-injection figure): a 3-replica fleet at ~70% load, crashed at
+//! increasing rates from a seeded MTTF/MTTR profile, served either
+//! fail-and-drop (requests stranded on a crashed replica die as
+//! `replica-failed`) or with the ingress retry policy (stranded requests
+//! re-issued with exponential backoff under a per-request deadline, onto
+//! replicas the health-aware routers still consider routable). Readings:
+//!
+//!  (a) retry + health-aware routing strictly beats fail-and-drop on
+//!      goodput at every crash rate and under both routers (asserted);
+//!  (b) the conservation ledger survives faults exactly: per cell,
+//!      `issued == completed + Σ dropped-by-reason` (asserted);
+//!  (c) availability degrades with the crash rate — the fleet's measured
+//!      `1 - downtime/(replicas × horizon)` tracks the configured
+//!      MTTF/(MTTF+MTTR) — while the *retry* axis never changes it
+//!      (faults are injected identically on both sides of each pair,
+//!      from the same plan seed; asserted bitwise).
+//!
+//! The policy pairs are comparable by construction: within one
+//! (crash rate, router) pair both cells share a workload seed and a
+//! fault-plan seed, so the retry column differs only in what happens to
+//! stranded requests. The grid runs through `sweep::map_indexed`; the
+//! smoke run asserts serial-vs-threaded bit-identity on top.
+//!
+//! Run: `cargo bench --bench fig_faults [-- --smoke]`
+
+use inferbench::metrics::{DropReason, MetricsMode};
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::cluster::{self, ClusterConfig, ClusterResult, ReplicaConfig};
+use inferbench::serving::{
+    backends, FaultPlan, FaultProfile, Policy, RetryPolicy, RouterPolicy, ServiceModel,
+};
+use inferbench::sweep;
+use inferbench::util::render;
+use inferbench::workload::{Pattern, Workload};
+
+const SEED: u64 = 5505;
+/// Measured per-request device time; with TrIS factors this yields
+/// ~238 rps of capacity per replica (same service model as fig_qos).
+const PER_REQ_S: f64 = 0.005;
+const REPLICAS: usize = 3;
+/// Offered load as a fraction of fleet capacity: enough headroom that a
+/// surviving 2-replica fleet can absorb a crashed replica's retries.
+const LOAD: f64 = 0.70;
+/// Mean time to recovery: crashed replicas come back (through a cold
+/// start) after ~1.5 s of downtime on average.
+const MTTR_S: f64 = 1.5;
+
+fn effective_service_s() -> f64 {
+    PER_REQ_S * backends::TRIS.runtime_factor + backends::TRIS.batch_overhead_s
+}
+
+fn offered_rps() -> f64 {
+    LOAD * REPLICAS as f64 / effective_service_s()
+}
+
+/// One grid cell: crash rate x router x whether stranded requests retry.
+#[derive(Clone, Copy)]
+struct Cell {
+    mttf_s: f64,
+    router: RouterPolicy,
+    router_name: &'static str,
+    retry: bool,
+    /// Workload + fault seeds, shared by both policies of a pair so the
+    /// retry column is the only difference within it.
+    pair_seed: u64,
+}
+
+fn config_for(cell: &Cell, duration_s: f64) -> ClusterConfig {
+    let replica = ReplicaConfig {
+        software: &backends::TRIS,
+        service: ServiceModel::Measured { per_batch: vec![(1, PER_REQ_S)], utilization: 0.6 },
+        policy: Policy::Single,
+        max_queue: 400_000,
+    };
+    let plan = FaultPlan::random(
+        FaultProfile { mttf_s: cell.mttf_s, mttr_s: MTTR_S, degrade: None },
+        cell.pair_seed,
+    );
+    ClusterConfig {
+        workload: Workload::Stream {
+            pattern: Pattern::Poisson { rate: offered_rps() },
+            seed: cell.pair_seed,
+        },
+        duration_s,
+        replicas: (0..REPLICAS).map(|_| replica.clone()).collect(),
+        router: cell.router,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: Some(plan),
+        retry: cell.retry.then(|| RetryPolicy::new(6, 10.0, 0.05)),
+        seed: cell.pair_seed,
+    }
+}
+
+fn goodput(r: &ClusterResult) -> f64 {
+    r.collector.completed as f64 / r.issued.max(1) as f64
+}
+
+fn availability(r: &ClusterResult, duration_s: f64) -> f64 {
+    1.0 - r.downtime_s / (REPLICAS as f64 * duration_s)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = if smoke { 2 } else { sweep::default_threads() };
+    let duration_s = if smoke { 20.0 } else { 40.0 };
+    let mttfs: &[f64] = if smoke { &[10.0] } else { &[20.0, 10.0, 5.0] };
+    let routers: [(RouterPolicy, &'static str); 2] = [
+        (RouterPolicy::LeastOutstanding, "least-outstanding"),
+        (RouterPolicy::RoundRobin, "round-robin"),
+    ];
+
+    // Pair-major grid: (mttf, router) pairs, each expanded into its
+    // fail-and-drop and retry cells. The pair seed depends on the pair
+    // position only, never on the policy column.
+    let mut cells = Vec::new();
+    for (mi, &mttf_s) in mttfs.iter().enumerate() {
+        for (ri, &(router, router_name)) in routers.iter().enumerate() {
+            let pair_seed = sweep::cell_seed(SEED, (mi * routers.len() + ri) as u64);
+            for retry in [false, true] {
+                cells.push(Cell { mttf_s, router, router_name, retry, pair_seed });
+            }
+        }
+    }
+
+    println!(
+        "=== Crash rate x retry policy x router ({REPLICAS} replicas at {:.0}% load, \
+         {:.0} rps offered, mttr {MTTR_S} s, {duration_s} s horizon, grid on {threads} \
+         threads) ===\n",
+        LOAD * 1e2,
+        offered_rps(),
+    );
+
+    let run_grid = |threads: usize| -> Vec<ClusterResult> {
+        sweep::map_indexed(&cells, threads, |_, cell| cluster::run(&config_for(cell, duration_s)))
+    };
+    let results = run_grid(threads);
+    if smoke {
+        // Crash-heavy bit-identity, serial vs threaded: fault injection
+        // must not perturb the sweep engine's determinism.
+        let serial = run_grid(1);
+        for ((a, b), cell) in results.iter().zip(&serial).zip(&cells) {
+            assert_eq!(
+                a.collector.fingerprint(),
+                b.collector.fingerprint(),
+                "mttf {} {} retry={}: parallel grid must be bit-identical",
+                cell.mttf_s,
+                cell.router_name,
+                cell.retry
+            );
+            assert_eq!(a.events, b.events);
+        }
+    }
+
+    let mut rows = Vec::new();
+    for (cell, r) in cells.iter().zip(&results) {
+        // (b) Conservation holds exactly under faults, drop reasons
+        // included.
+        assert_eq!(
+            r.collector.completed + r.dropped,
+            r.issued,
+            "mttf {} {} retry={}: conservation violated",
+            cell.mttf_s,
+            cell.router_name,
+            cell.retry
+        );
+        assert!(r.collector.drops_conserved());
+        rows.push(vec![
+            format!("{:.0}", cell.mttf_s),
+            cell.router_name.to_string(),
+            if cell.retry { "retry" } else { "drop" }.to_string(),
+            r.issued.to_string(),
+            format!("{:.4}", goodput(r)),
+            format!("{:.1}", r.collector.e2e.percentile(99.0) * 1e3),
+            format!("{:.4}", availability(r, duration_s)),
+            r.collector.dropped_by(DropReason::ReplicaFailed).to_string(),
+            r.collector.dropped_by(DropReason::TimedOut).to_string(),
+        ]);
+    }
+    print!(
+        "{}",
+        render::table(
+            &["MTTF s", "Router", "Policy", "Issued", "Goodput", "p99 ms", "Avail", "Failed",
+              "TimedOut"],
+            &rows
+        )
+    );
+
+    println!();
+    for pair in cells.chunks(2).zip(results.chunks(2)).map(|(c, r)| (&c[0], &r[0], &c[1], &r[1])) {
+        let (drop_cell, drop_r, retry_cell, retry_r) = pair;
+        assert!(!drop_cell.retry && retry_cell.retry, "pair layout");
+        // Faults are injected from the pair seed: the retry axis must not
+        // move a single crash, so measured downtime matches bitwise.
+        assert_eq!(
+            drop_r.downtime_s.to_bits(),
+            retry_r.downtime_s.to_bits(),
+            "mttf {} {}: retry policy must not change the fault schedule",
+            drop_cell.mttf_s,
+            drop_cell.router_name
+        );
+        let (g_drop, g_retry) = (goodput(drop_r), goodput(retry_r));
+        let p99_delta_ms = (retry_r.collector.e2e.percentile(99.0)
+            - drop_r.collector.e2e.percentile(99.0))
+            * 1e3;
+        println!(
+            "mttf {:>4.0} s, {:<17}: goodput {:.4} -> {:.4} (+{:.4}), availability {:.4}, \
+             p99 {:+.1} ms, replica-failed drops {} -> {}",
+            drop_cell.mttf_s,
+            drop_cell.router_name,
+            g_drop,
+            g_retry,
+            g_retry - g_drop,
+            availability(drop_r, duration_s),
+            p99_delta_ms,
+            drop_r.collector.dropped_by(DropReason::ReplicaFailed),
+            retry_r.collector.dropped_by(DropReason::ReplicaFailed),
+        );
+        // Crashes actually landed (a quiet plan would make the figure
+        // vacuous) and the drop side lost requests to them.
+        assert!(drop_r.downtime_s > 0.0, "no downtime at mttf {}", drop_cell.mttf_s);
+        assert!(
+            drop_r.collector.dropped_by(DropReason::ReplicaFailed) > 0,
+            "mttf {} {}: crashes must strand requests on the drop side",
+            drop_cell.mttf_s,
+            drop_cell.router_name
+        );
+        // (a) Retry + health-aware routing strictly beats fail-and-drop
+        // on goodput, at every crash rate, under both routers.
+        assert!(
+            g_retry > g_drop,
+            "mttf {} {}: retry goodput {g_retry} must strictly beat drop {g_drop}",
+            drop_cell.mttf_s,
+            drop_cell.router_name
+        );
+    }
+    // (c) Availability falls as crashes come faster. Each pair draws its
+    // own fault seed, so adjacent MTTF points can flip by seed luck; the
+    // endpoints of the axis (4x apart in crash rate) must still order.
+    if mttfs.len() > 1 {
+        for ri in 0..routers.len() {
+            let at = |mi: usize| availability(&results[(mi * routers.len() + ri) * 2], duration_s);
+            let (slowest, fastest) = (at(0), at(mttfs.len() - 1));
+            assert!(
+                fastest < slowest,
+                "{}: availability at mttf {} ({fastest:.4}) should be below mttf {} \
+                 ({slowest:.4})",
+                routers[ri].1,
+                mttfs[mttfs.len() - 1],
+                mttfs[0]
+            );
+        }
+    }
+    println!(
+        "\nPASS: retry strictly beat fail-and-drop on goodput at every crash rate and router, \
+         conservation exact under faults, fault schedule independent of the retry policy"
+    );
+}

@@ -96,6 +96,8 @@ fn config_for(overload: f64, duration_s: f64, seed: u64) -> ClusterConfig {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: Some(admission),
+        faults: None,
+        retry: None,
         seed,
     }
 }

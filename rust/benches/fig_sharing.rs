@@ -104,6 +104,8 @@ fn config_for(mode: Mode, degree: usize, rate: f64, seed: u64) -> MultiModelConf
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed,
     }
 }

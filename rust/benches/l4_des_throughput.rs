@@ -74,6 +74,8 @@ fn fixed_fleet(n: u64) -> ClusterConfig {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 42,
     }
 }
@@ -119,6 +121,8 @@ fn autoscale(n: u64) -> ClusterConfig {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 43,
     }
 }
@@ -139,6 +143,8 @@ fn closed_loop(n: u64) -> ClusterConfig {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 44,
     }
 }
@@ -276,6 +282,8 @@ fn sweep_grid(fleets: &[usize], duration_s: f64) -> SweepPlan {
                 path: RequestPath::local(Processors::none()),
                 metrics: MetricsMode::Exact,
                 admission: None,
+                faults: None,
+                retry: None,
                 seed,
             });
         }

@@ -22,6 +22,11 @@ struct Pending {
     id: u64,
     spec: JobSpec,
     submitted: Instant,
+    /// Execution attempts already made (0 for a fresh submission).
+    attempts: u32,
+    /// Retry backoff gate: the job is not eligible to start before this
+    /// instant. `None` for fresh submissions.
+    not_before: Option<Instant>,
 }
 
 /// Completion log entry (the task manager's record, paper §4.2.1).
@@ -32,8 +37,12 @@ pub struct Completed {
     pub worker: usize,
     /// Queue wait, seconds.
     pub waited_s: f64,
-    /// Execution time, seconds.
+    /// Execution time of the final attempt, seconds.
     pub ran_s: f64,
+    /// Execution attempts consumed: 1 = first try succeeded; `ok: false`
+    /// with `attempts == max_job_attempts` means the job gave up after
+    /// exhausting its retries.
+    pub attempts: u32,
     pub ok: bool,
 }
 
@@ -120,6 +129,14 @@ pub struct LeaderConfig {
     /// the paper's two-tier scheduler (queue-aware placement at the
     /// leader, SJF at the worker) with a third tier inside the job.
     pub threads_per_worker: usize,
+    /// Total execution attempts a job gets before the leader gives up on
+    /// it (>= 1). A failed attempt is re-queued on its worker behind a
+    /// capped exponential backoff, its cost estimate re-charged to the
+    /// published backlog so queue-aware placement keeps seeing the truth;
+    /// retries re-run with the same derived seed, so a deterministic job
+    /// retries bit-identically. The final failure lands in the PerfDB as
+    /// a `job_failed` record (`status: failed` + attempt count).
+    pub max_job_attempts: usize,
     pub seed: u64,
 }
 
@@ -130,6 +147,7 @@ impl Default for LeaderConfig {
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 1.0,
             threads_per_worker: 1,
+            max_job_attempts: 3,
             seed: 0,
         }
     }
@@ -241,7 +259,13 @@ impl Leader {
         {
             let mut q = ws.queue.lock().unwrap();
             let charged = self.config.charged_estimate_s(&spec);
-            q.push_back(Pending { id, spec: spec.clone(), submitted: Instant::now() });
+            q.push_back(Pending {
+                id,
+                spec: spec.clone(),
+                submitted: Instant::now(),
+                attempts: 0,
+                not_before: None,
+            });
             *ws.backlog_s.lock().unwrap() += charged;
         }
         ws.cv.notify_one();
@@ -358,7 +382,6 @@ fn worker_loop(
         let ran_s = t0.elapsed().as_secs_f64();
         ws.busy.store(false, Ordering::Relaxed);
         *ws.running.lock().unwrap() = None;
-        ws.completed.fetch_add(1, Ordering::Relaxed);
 
         let ok = match result {
             Ok(records) => {
@@ -369,16 +392,56 @@ fn worker_loop(
                 true
             }
             Err(e) => {
-                // Failure visibility: record the error in the PerfDB too.
-                let mut db = db.lock().unwrap();
-                db.insert(
+                // Failure visibility: every attempt's error lands in the
+                // PerfDB, whether or not a retry follows.
+                let attempt = pending.attempts + 1;
+                db.lock().unwrap().insert(
                     Record::new("job_error", &pending.spec.name, "-", "-")
-                        .with_metric("error", 1.0),
+                        .with_metric("error", 1.0)
+                        .with_metric("attempt", attempt as f64),
                 );
-                eprintln!("worker {wid}: job {} failed: {e:#}", pending.spec.name);
+                if (attempt as usize) < cfg.max_job_attempts.max(1) {
+                    // Re-queue behind a capped exponential backoff (50 ms
+                    // base, 500 ms cap, mapped through the leader's time
+                    // scale like Sleep durations are), re-charging the
+                    // cost estimate the dequeue subtracted so queue-aware
+                    // placement still sees the pending work. Same id, so
+                    // the retry re-runs with the same derived seed.
+                    let backoff_ms = (50u64 << (attempt - 1).min(16)).min(500);
+                    let backoff = std::time::Duration::from_secs_f64(
+                        backoff_ms as f64 / 1e3 / cfg.time_scale.max(1e-9),
+                    );
+                    eprintln!(
+                        "worker {wid}: job {} failed (attempt {attempt}/{}), retrying: {e:#}",
+                        pending.spec.name, cfg.max_job_attempts
+                    );
+                    {
+                        let mut q = ws.queue.lock().unwrap();
+                        *ws.backlog_s.lock().unwrap() += charged;
+                        q.push_back(Pending {
+                            attempts: attempt,
+                            not_before: Some(Instant::now() + backoff),
+                            ..pending
+                        });
+                    }
+                    ws.cv.notify_one();
+                    continue;
+                }
+                // Out of attempts: the failure ledger gets a terminal
+                // record distinguishable from per-attempt errors.
+                db.lock().unwrap().insert(
+                    Record::new("job_failed", &pending.spec.name, "-", "-")
+                        .with_label("status", "failed")
+                        .with_metric("attempts", attempt as f64),
+                );
+                eprintln!(
+                    "worker {wid}: job {} gave up after {attempt} attempts: {e:#}",
+                    pending.spec.name
+                );
                 false
             }
         };
+        ws.completed.fetch_add(1, Ordering::Relaxed);
         {
             let mut entries = done.entries.lock().unwrap();
             entries.push(Completed {
@@ -387,6 +450,7 @@ fn worker_loop(
                 worker: wid,
                 waited_s,
                 ran_s,
+                attempts: pending.attempts + 1,
                 ok,
             });
         }
@@ -400,22 +464,24 @@ fn worker_loop(
 /// (`LeaderConfig::charged_estimate_s`) — a sweep that parallelizes to a
 /// quarter of its serial estimate really is the shorter job, and ranking
 /// it by the serial number would invert shortest-job-first.
+/// Jobs re-queued by the retry path carry a backoff gate (`not_before`)
+/// and are skipped until it passes — the worker's 50 ms condvar timeout
+/// re-polls, so a gated retry starts within one tick of becoming due.
 fn pick(q: &mut VecDeque<Pending>, order: LocalOrder, cfg: &LeaderConfig) -> Option<Pending> {
-    if q.is_empty() {
-        return None;
-    }
+    let now = Instant::now();
+    let eligible = |p: &Pending| p.not_before.map_or(true, |t| t <= now);
     let idx = match order {
-        LocalOrder::Fcfs => 0,
+        LocalOrder::Fcfs => q.iter().position(|p| eligible(p))?,
         LocalOrder::Sjf => q
             .iter()
             .enumerate()
+            .filter(|(_, p)| eligible(p))
             .min_by(|a, b| {
                 cfg.charged_estimate_s(&a.1.spec)
                     .partial_cmp(&cfg.charged_estimate_s(&b.1.spec))
                     .unwrap()
             })
-            .map(|(i, _)| i)
-            .unwrap(),
+            .map(|(i, _)| i)?,
     };
     q.remove(idx)
 }
@@ -493,6 +559,7 @@ mod tests {
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 10.0,
             threads_per_worker: 1,
+            max_job_attempts: 3,
             seed: 0,
         });
         leader.submit(sleep_spec("long", 5.0)).unwrap();
@@ -525,6 +592,7 @@ mod tests {
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 10.0,
             threads_per_worker: 1,
+            max_job_attempts: 3,
             seed: 0,
         });
         leader.submit(sleep_spec("long", 5.0)).unwrap(); // -> idle worker (both 0): w0
@@ -561,15 +629,67 @@ mod tests {
 
     #[test]
     fn failed_jobs_reported_not_fatal() {
+        // A deterministically bad job fails every attempt: the default
+        // config retries it twice, then gives up — one job_error record
+        // per attempt plus a terminal job_failed record, and the
+        // completion entry distinguishes "gave up after N" from "done".
         let leader = Leader::start(LeaderConfig { workers: 1, ..Default::default() });
         leader
             .submit_yaml("name: bad\ntask: hardware_sweep\nmodel: notamodel\nplatform: G1\n")
             .unwrap();
         let done = leader.wait_for(1, std::time::Duration::from_secs(10)).unwrap();
         assert!(!done[0].ok);
+        assert_eq!(done[0].attempts, 3, "default budget is 3 attempts");
+        let db = leader.perfdb.lock().unwrap();
+        assert_eq!(db.query(&Query::default().task("job_error")).len(), 3);
+        let failed = db.query(&Query::default().task("job_failed"));
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].label("status"), Some("failed"));
+        drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn single_attempt_budget_fails_fast() {
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            max_job_attempts: 1,
+            ..Default::default()
+        });
+        leader
+            .submit_yaml("name: bad\ntask: hardware_sweep\nmodel: notamodel\nplatform: G1\n")
+            .unwrap();
+        let done = leader.wait_for(1, std::time::Duration::from_secs(10)).unwrap();
+        assert!(!done[0].ok);
+        assert_eq!(done[0].attempts, 1);
         let db = leader.perfdb.lock().unwrap();
         assert_eq!(db.query(&Query::default().task("job_error")).len(), 1);
+        assert_eq!(db.query(&Query::default().task("job_failed")).len(), 1);
         drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn retries_do_not_block_other_jobs_and_good_jobs_report_one_attempt() {
+        // While the bad job cycles through its backoff gates, a healthy
+        // job submitted behind it still completes — the gate defers the
+        // retry, it does not occupy the worker.
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            time_scale: 10.0,
+            ..Default::default()
+        });
+        leader
+            .submit_yaml("name: bad\ntask: hardware_sweep\nmodel: notamodel\nplatform: G1\n")
+            .unwrap();
+        leader.submit(sleep_spec("good", 0.5)).unwrap();
+        let done = leader.wait_for(2, std::time::Duration::from_secs(20)).unwrap();
+        let good = done.iter().find(|c| c.name == "good").unwrap();
+        assert!(good.ok);
+        assert_eq!(good.attempts, 1);
+        let bad = done.iter().find(|c| c.name == "bad").unwrap();
+        assert!(!bad.ok);
+        assert_eq!(bad.attempts, 3);
         leader.shutdown();
     }
 
@@ -597,6 +717,7 @@ mod tests {
             policy: SchedulerPolicy::qa_sjf(),
             time_scale: 20.0,
             threads_per_worker: 1,
+            max_job_attempts: 3,
             seed: 0,
         });
         leader.submit(sleep_spec("blocker", 2.0)).unwrap();

@@ -107,14 +107,24 @@ pub enum DropReason {
     /// No routable replica existed and none was warming/loading: the
     /// request had nowhere to go at the routing tier.
     RejectedPlacement,
+    /// The request was queued or in flight on a replica that crashed,
+    /// and no retry policy (or no remaining attempt) could re-issue it
+    /// (`serving/faults.rs`).
+    ReplicaFailed,
+    /// A retry was scheduled but its deterministic backoff would have
+    /// landed past the retry policy's end-to-end deadline, so the
+    /// request gave up instead of re-issuing.
+    TimedOut,
 }
 
 /// All drop reasons, in [`DropReason::idx`] order.
-pub const DROP_REASONS: [DropReason; 4] = [
+pub const DROP_REASONS: [DropReason; 6] = [
     DropReason::QueueFull,
     DropReason::Shed,
     DropReason::EvictedBacklog,
     DropReason::RejectedPlacement,
+    DropReason::ReplicaFailed,
+    DropReason::TimedOut,
 ];
 
 impl DropReason {
@@ -124,10 +134,12 @@ impl DropReason {
             DropReason::Shed => "shed",
             DropReason::EvictedBacklog => "evicted-backlog",
             DropReason::RejectedPlacement => "rejected-placement",
+            DropReason::ReplicaFailed => "replica-failed",
+            DropReason::TimedOut => "timed-out",
         }
     }
 
-    /// Dense index into per-reason arrays (declaration order, 0..4).
+    /// Dense index into per-reason arrays (declaration order, 0..6).
     pub const fn idx(self) -> usize {
         self as usize
     }
@@ -718,6 +730,12 @@ pub enum ScaleEventKind {
     DrainStarted,
     /// Drain finished: the replica retired with zero outstanding work.
     Retired,
+    /// Fault injection killed the replica: routing stops instantly and
+    /// queued + in-flight work dies or is retried (`serving/faults.rs`).
+    Crashed,
+    /// A crashed replica came back and starts paying its recovery cold
+    /// start (it becomes routable again at the following `Ready`).
+    Recovered,
 }
 
 impl ScaleEventKind {
@@ -727,6 +745,8 @@ impl ScaleEventKind {
             ScaleEventKind::Ready => "ready",
             ScaleEventKind::DrainStarted => "drain-started",
             ScaleEventKind::Retired => "retired",
+            ScaleEventKind::Crashed => "crashed",
+            ScaleEventKind::Recovered => "recovered",
         }
     }
 }
@@ -1180,17 +1200,27 @@ mod tests {
         e.drop_with(DropReason::EvictedBacklog);
         c.ingest(&e);
         c.ingest(&e); // same reason twice
-        assert_eq!(c.dropped, 4);
+        let mut f = RequestTrace::new(3, 0.0);
+        f.drop_with(DropReason::ReplicaFailed);
+        c.ingest(&f);
+        let mut t = RequestTrace::new(4, 0.0);
+        t.drop_with(DropReason::TimedOut);
+        c.ingest(&t);
+        assert_eq!(c.dropped, 6);
         assert_eq!(c.dropped_by(DropReason::QueueFull), 1);
         assert_eq!(c.dropped_by(DropReason::Shed), 1);
         assert_eq!(c.dropped_by(DropReason::EvictedBacklog), 2);
         assert_eq!(c.dropped_by(DropReason::RejectedPlacement), 0);
+        assert_eq!(c.dropped_by(DropReason::ReplicaFailed), 1);
+        assert_eq!(c.dropped_by(DropReason::TimedOut), 1);
         assert!(c.drops_conserved());
         let breakdown = c.drop_breakdown();
         assert_eq!(breakdown[0], ("queue-full", 1));
         assert_eq!(breakdown[1], ("shed", 1));
         assert_eq!(breakdown[2], ("evicted-backlog", 2));
         assert_eq!(breakdown[3], ("rejected-placement", 0));
+        assert_eq!(breakdown[4], ("replica-failed", 1));
+        assert_eq!(breakdown[5], ("timed-out", 1));
     }
 
     #[test]
@@ -1211,13 +1241,20 @@ mod tests {
         // The reason tag refines the ledger without entering the digest:
         // a shed drop and a legacy queue-full drop fingerprint alike.
         assert_eq!(run(None).fingerprint(), run(Some(DropReason::Shed)).fingerprint());
+        // The fault-tier reasons follow the same convention exactly.
+        assert_eq!(run(None).fingerprint(), run(Some(DropReason::ReplicaFailed)).fingerprint());
+        assert_eq!(run(None).fingerprint(), run(Some(DropReason::TimedOut)).fingerprint());
         let mut all = Collector::new();
         all.absorb(run(Some(DropReason::Shed)));
         all.absorb(run(Some(DropReason::RejectedPlacement)));
+        all.absorb(run(Some(DropReason::ReplicaFailed)));
+        all.absorb(run(Some(DropReason::TimedOut)));
         all.absorb(run(None));
-        assert_eq!(all.dropped, 3);
+        assert_eq!(all.dropped, 5);
         assert_eq!(all.dropped_by(DropReason::Shed), 1);
         assert_eq!(all.dropped_by(DropReason::RejectedPlacement), 1);
+        assert_eq!(all.dropped_by(DropReason::ReplicaFailed), 1);
+        assert_eq!(all.dropped_by(DropReason::TimedOut), 1);
         assert_eq!(all.dropped_by(DropReason::QueueFull), 1);
         assert!(all.drops_conserved());
     }

@@ -76,6 +76,12 @@ pub struct ScaleSignal {
     pub warming: usize,
     /// Replicas draining toward retirement.
     pub draining: usize,
+    /// Replicas currently down after a crash (fault injection). They are
+    /// not provisioned capacity: the same outstanding work spread over
+    /// fewer provisioned replicas reads as scale-up pressure, so the
+    /// policy reacts to crash-induced capacity loss without a special
+    /// case.
+    pub failed: usize,
     /// Outstanding requests (queued + in service) across active replicas.
     pub outstanding: usize,
     /// Busy fraction of active replicas since the last evaluation, [0,1].
@@ -171,7 +177,29 @@ mod tests {
     }
 
     fn signal(active: usize, warming: usize, outstanding: usize, util: f64) -> ScaleSignal {
-        ScaleSignal { active, warming, draining: 0, outstanding, utilization: util }
+        ScaleSignal { active, warming, draining: 0, failed: 0, outstanding, utilization: util }
+    }
+
+    #[test]
+    fn crash_induced_capacity_loss_reads_as_scale_up_pressure() {
+        let mut a = scaler(
+            ScalePolicy::QueueDepth { up_per_replica: 4.0, down_per_replica: 0.5, cooldown_s: 0.0 },
+            1,
+            8,
+        );
+        // 12 outstanding over 4 healthy replicas: 3 per replica, hold.
+        assert_eq!(a.decide(0.0, signal(4, 0, 12, 0.9)), ScaleDecision::Hold);
+        // Two of them crash: the same backlog over 2 provisioned replicas
+        // is 6 per replica — the policy adds without a fault special case.
+        let crashed = ScaleSignal {
+            active: 2,
+            warming: 0,
+            draining: 0,
+            failed: 2,
+            outstanding: 12,
+            utilization: 0.9,
+        };
+        assert_eq!(a.decide(1.0, crashed), ScaleDecision::Add);
     }
 
     #[test]

@@ -64,7 +64,8 @@ use super::autoscale::{Autoscaler, ScaleDecision, ScaleSignal};
 use super::backends::{DynamicBatching, Software};
 use super::batcher::{Batcher, Decision, Policy};
 use super::des::{self, push, EventBox, Key};
-use super::ingress::{self, class_ingest, Admission, HeldQueue};
+use super::faults::{FaultKind, FaultPlan, ScheduledFault};
+use super::ingress::{self, class_ingest, Admission, HeldQueue, RetryPolicy};
 use super::router::{Router, RouterPolicy};
 use super::service::ServiceModel;
 use crate::metrics::{
@@ -144,6 +145,19 @@ pub struct ClusterConfig {
     /// disables the tier entirely — the request path is then bit-identical
     /// to the pre-ingress engine.
     pub admission: Option<AdmissionConfig>,
+    /// Deterministic fault injection: scripted and/or seeded-random
+    /// replica crashes, recoveries-through-cold-start, and straggler
+    /// slowdowns (see `serving::faults`). Only the initial fleet is a
+    /// fault target. `None` — or a plan with nothing to inject — keeps
+    /// the run bit-identical to the pre-fault engine (the schedule draws
+    /// from its own PCG streams, so it cannot move workload or routing
+    /// draws either way).
+    pub faults: Option<FaultPlan>,
+    /// Retry policy for requests stranded on a crashed replica: they
+    /// re-enter the ingress tier after a deterministic exponential
+    /// backoff instead of dying. `None` means fail-and-drop
+    /// ([`DropReason::ReplicaFailed`]).
+    pub retry: Option<RetryPolicy>,
     pub seed: u64,
 }
 
@@ -171,6 +185,12 @@ pub struct ClusterResult {
     pub classes: Vec<ClassMetrics>,
     /// Requests issued in total (completed + dropped == issued).
     pub issued: u64,
+    /// Total replica-seconds spent in the `Failed` state within
+    /// `[0, duration_s]`, summed over the fleet (recovery cold starts
+    /// count as warming, like scale-up, not as downtime). Availability
+    /// over the run is `1 - downtime_s / (replicas × duration_s)`.
+    /// Zero without fault injection.
+    pub downtime_s: f64,
     /// Discrete events processed by the simulation loop (the events/sec
     /// numerator for the `l4_des_throughput` bench).
     pub events: u64,
@@ -220,6 +240,9 @@ enum ReplicaState {
     Draining,
     /// Drained and gone; receives no further events.
     Retired,
+    /// Crashed by fault injection: not routable, backlog killed. Leaves
+    /// this state only through a scheduled `Recover` (→ `Warming`).
+    Failed,
 }
 
 /// One replica's live state during the run.
@@ -237,6 +260,16 @@ struct Replica {
     /// are charged at dispatch; one spanning an evaluation boundary counts
     /// toward the interval it started in).
     busy_s_since_eval: f64,
+    /// Incarnation counter, bumped at every crash: in-heap `ServerFree`/
+    /// `ReplicaReady` events carry the epoch they were scheduled under
+    /// and are ignored if the replica crashed in between (the batch they
+    /// announce died with the process).
+    epoch: u32,
+    /// Straggler service-time multiplier (1.0 = healthy). Applied at
+    /// batch start; a fault-free run never reads a value other than 1.0.
+    slowdown: f64,
+    /// When the current `Failed` interval began (downtime accounting).
+    failed_at: f64,
     metrics: ReplicaMetrics,
 }
 
@@ -254,6 +287,9 @@ impl Replica {
             queued: 0,
             in_flight: Vec::new(),
             busy_s_since_eval: 0.0,
+            epoch: 0,
+            slowdown: 1.0,
+            failed_at: 0.0,
             metrics: ReplicaMetrics::with_mode(horizon_s, 0.5, mode),
         }
     }
@@ -272,12 +308,20 @@ enum Event {
     Enqueue { slot: u32 },
     /// Batcher timeout on one replica.
     Wake { replica: usize, scheduled_for: f64 },
-    /// One replica finishes its in-flight batch.
-    ServerFree { replica: usize },
+    /// One replica finishes its in-flight batch. `epoch` is the
+    /// replica's incarnation at scheduling time; a crash in between
+    /// makes the event stale (the batch died with the process).
+    ServerFree { replica: usize, epoch: u32 },
     /// A warming replica finished its cold start and becomes routable.
-    ReplicaReady { replica: usize },
+    /// Stale (crashed-mid-warm-up) readiness is filtered by `epoch`.
+    ReplicaReady { replica: usize, epoch: u32 },
     /// Periodic autoscaler evaluation.
     ScaleEval,
+    /// Entry `fault` of the materialized fault schedule fires.
+    Fault { fault: usize },
+    /// A crash-stranded request re-enters the ingress tier after its
+    /// retry backoff.
+    Retry { slot: u32 },
 }
 
 /// Time-then-sequence event heap, shared with the multi-model engine
@@ -313,7 +357,12 @@ fn start_batch(
     let batch = r.batcher.ready();
     let b = batch.len();
     r.queued -= b;
-    let service = r.service.service_s(b, r.software) + r.penalty_s;
+    let mut service = r.service.service_s(b, r.software) + r.penalty_s;
+    if r.slowdown != 1.0 {
+        // Straggler window (fault injection): the arithmetic is gated so
+        // the fault-free path performs the exact historical operations.
+        service *= r.slowdown;
+    }
     let util = r.service.utilization(b);
     r.metrics.timeline.record_busy(now, service, util);
     r.metrics.busy_timeline.record_busy(now, service, 1.0);
@@ -326,11 +375,111 @@ fn start_batch(
         r.in_flight.push((q.id as u32, now, q.enqueue_s));
     }
     r.busy = true;
-    push(heap, now + service, Event::ServerFree { replica: ri }, seq);
+    push(heap, now + service, Event::ServerFree { replica: ri, epoch: r.epoch }, seq);
 }
 
 fn count_state(replicas: &[Replica], state: ReplicaState) -> usize {
     replicas.iter().filter(|r| r.state == state).count()
+}
+
+/// True when capacity is on the way: a replica is warming, or a crashed
+/// replica has a recovery left in the fault schedule. Requests held at
+/// the routing tier wait for it; otherwise the backlog can never drain
+/// and is rejected. (`upcoming_recovers` covers the initial fleet only —
+/// autoscaled replicas are never fault targets.)
+fn capacity_pending(replicas: &[Replica], upcoming_recovers: &[u32]) -> bool {
+    replicas.iter().enumerate().any(|(i, r)| {
+        r.state == ReplicaState::Warming
+            || (r.state == ReplicaState::Failed
+                && upcoming_recovers.get(i).copied().unwrap_or(0) > 0)
+    })
+}
+
+/// Hedge/retry roles, kept in a slot-indexed side table ([`RetrySide`]).
+const PRIMARY: u8 = 0;
+/// A hedged shadow copy: pure extra load, invisible to every ledger
+/// until it wins the race (then it completes *as* the request).
+const GHOST: u8 = 1;
+/// The losing copy of a decided race: drained silently on completion.
+const ORPHAN: u8 = 2;
+const NO_LINK: u32 = u32::MAX;
+
+/// Retry/hedge side tables, indexed by trace slot. Slots are reused, so
+/// every entry is rewritten when its slot is re-issued. All-empty (and
+/// never grown) when the engine runs without a retry policy.
+struct RetrySide {
+    on: bool,
+    /// Attempts started for the request in this slot (1 = original issue).
+    attempts: Vec<u32>,
+    roles: Vec<u8>,
+    /// Partner slot of a live hedge pair, [`NO_LINK`] otherwise.
+    links: Vec<u32>,
+}
+
+impl RetrySide {
+    fn new(on: bool) -> Self {
+        RetrySide { on, attempts: Vec::new(), roles: Vec::new(), links: Vec::new() }
+    }
+
+    fn grow(&mut self, slot: u32) {
+        let idx = slot as usize;
+        if idx >= self.attempts.len() {
+            self.attempts.resize(idx + 1, 0);
+            self.roles.resize(idx + 1, PRIMARY);
+            self.links.resize(idx + 1, NO_LINK);
+        }
+    }
+
+    /// A slot was (re)issued: fresh attempt-1 primary, no partner.
+    fn reset(&mut self, slot: u32) {
+        if !self.on {
+            return;
+        }
+        self.grow(slot);
+        self.attempts[slot as usize] = 1;
+        self.roles[slot as usize] = PRIMARY;
+        self.links[slot as usize] = NO_LINK;
+    }
+
+    fn role(&self, slot: u32) -> u8 {
+        if !self.on {
+            return PRIMARY;
+        }
+        self.roles[slot as usize]
+    }
+
+    /// A copy completed or died: if its partner is still live, detach it
+    /// (and orphan it when `orphan` — the race is decided).
+    fn detach_partner(&mut self, slot: u32, orphan: bool) {
+        if !self.on {
+            return;
+        }
+        let p = self.links[slot as usize];
+        if p != NO_LINK {
+            if orphan {
+                self.roles[p as usize] = ORPHAN;
+            }
+            self.links[p as usize] = NO_LINK;
+            self.links[slot as usize] = NO_LINK;
+        }
+    }
+
+    /// Stage `gslot` as the hedged shadow of `primary`.
+    fn make_ghost(&mut self, gslot: u32, primary: u32) {
+        self.grow(gslot);
+        self.roles[gslot as usize] = GHOST;
+        self.attempts[gslot as usize] = 0;
+        self.links[gslot as usize] = primary;
+        self.links[primary as usize] = gslot;
+    }
+
+    /// The primary died on a crashed replica but its shadow is alive:
+    /// the shadow becomes the request (keeping the attempt count).
+    fn promote(&mut self, gslot: u32, attempts: u32) {
+        self.roles[gslot as usize] = PRIMARY;
+        self.attempts[gslot as usize] = attempts;
+        self.links[gslot as usize] = NO_LINK;
+    }
 }
 
 /// Lazy arrival feed: the tenant-blind [`SourceIter`] for untagged
@@ -369,6 +518,7 @@ fn drain_held(
     routable: &[usize],
     outstanding: &mut [usize],
     replicas: &mut [Replica],
+    upcoming_recovers: &[u32],
     traces: &mut TraceStore,
     collector: &mut Collector,
     classes: &mut [ClassMetrics],
@@ -377,7 +527,7 @@ fn drain_held(
 ) {
     while !held.is_empty() {
         if routable.is_empty() {
-            if replicas.iter().any(|r| r.state == ReplicaState::Warming) {
+            if capacity_pending(replicas, upcoming_recovers) {
                 return; // capacity is on the way; keep holding
             }
             while let Some((slot, _tenant)) = held.pop_wfq(admission) {
@@ -496,9 +646,45 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
     if let Some(weight_bytes) = config.cold_start {
         for (i, rc) in config.replicas.iter().enumerate() {
             let coldstart = rc.software.coldstart_s(weight_bytes);
-            push(&mut heap, coldstart, Event::ReplicaReady { replica: i }, &mut setup_seq);
+            push(&mut heap, coldstart, Event::ReplicaReady { replica: i, epoch: 0 }, &mut setup_seq);
         }
     }
+
+    // Fault injection: materialize the whole plan up front (its PCG
+    // streams are disjoint from every other draw in the run) and pin the
+    // events' tie-break slots just past the arrival range, after the
+    // initial ScaleEval slot. An empty plan pushes nothing and consumes
+    // nothing — `faults: None` and `FaultPlan::none()` are byte-for-byte
+    // the same run as the pre-fault engine.
+    let fault_sched: Vec<ScheduledFault> = match &config.faults {
+        Some(plan) if !plan.is_none() => {
+            plan.schedule(config.replicas.len(), config.duration_s)
+        }
+        _ => Vec::new(),
+    };
+    for (i, f) in fault_sched.iter().enumerate() {
+        des::push_at(
+            &mut heap,
+            f.at_s,
+            Event::Fault { fault: i },
+            des::ARRIVAL_SEQ_BASE + n_issue + 1 + i as u64,
+        );
+    }
+    // Recoveries left in the schedule, per initial replica: a crashed
+    // replica with one pending still counts as capacity-on-the-way for
+    // requests held at the routing tier.
+    let mut upcoming_recovers = vec![0u32; config.replicas.len()];
+    for f in &fault_sched {
+        if f.kind == FaultKind::Recover {
+            upcoming_recovers[f.replica] += 1;
+        }
+    }
+    let recovery_bytes = config.faults.as_ref().map_or(0, |p| p.recovery_bytes);
+    if let Some(pol) = &config.retry {
+        pol.validate();
+    }
+    let mut side = RetrySide::new(config.retry.is_some());
+    let mut downtime_s = 0.0f64;
 
     // Issue one request: samples its pipeline stages and schedules Enqueue.
     // Issue-phase callers (lazy arrival injection) pass `rng_issue` +
@@ -513,6 +699,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                      traces: &mut TraceStore,
                      tenant_of: &mut Vec<u32>,
                      classes: &mut [ClassMetrics],
+                     side: &mut RetrySide,
                      rng: &mut Pcg64,
                      seq: &mut u64| {
         let id = next_id;
@@ -527,6 +714,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         }
         let enqueue_at = trace.completed_s;
         let slot = traces.insert(trace);
+        side.reset(slot);
         if !classes.is_empty() {
             if slot as usize >= tenant_of.len() {
                 tenant_of.resize(slot as usize + 1, 0);
@@ -593,6 +781,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 &mut traces,
                 &mut tenant_of,
                 &mut classes,
+                &mut side,
                 &mut rng_issue,
                 &mut arrival_seq,
             );
@@ -617,7 +806,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         held.push_wfq(adm, tenant, slot);
                         drain_held(
                             now, &mut held, adm, &mut router, &routable, &mut outstanding,
-                            &mut replicas, &mut traces, &mut collector, &mut classes,
+                            &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
                             &mut heap, &mut seq,
                         );
                     }
@@ -628,7 +817,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // warming/draining at a scale boundary): never handed
                     // to the router. Hold while capacity is on the way;
                     // reject if nothing will ever become routable.
-                    if replicas.iter().any(|r| r.state == ReplicaState::Warming) {
+                    if capacity_pending(&replicas, &upcoming_recovers) {
                         held.push_fifo(slot);
                     } else {
                         let mut trace = traces.remove(slot);
@@ -645,6 +834,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                 &mut traces,
                                 &mut tenant_of,
                                 &mut classes,
+                                &mut side,
                                 &mut rng_loop,
                                 &mut seq,
                             );
@@ -671,6 +861,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             &mut traces,
                             &mut tenant_of,
                             &mut classes,
+                            &mut side,
                             &mut rng_loop,
                             &mut seq,
                         );
@@ -700,7 +891,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 }
             }
             Event::Wake { replica: ri, scheduled_for } => {
-                if replicas[ri].state == ReplicaState::Retired
+                if matches!(replicas[ri].state, ReplicaState::Retired | ReplicaState::Failed)
                     || replicas[ri].busy
                     || scheduled_for < now - 1e-12
                 {
@@ -721,12 +912,17 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 if let Some(adm) = admission.as_mut() {
                     drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
-                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
                         &mut heap, &mut seq,
                     );
                 }
             }
-            Event::ServerFree { replica: ri } => {
+            Event::ServerFree { replica: ri, epoch } => {
+                if epoch != replicas[ri].epoch {
+                    // The batch this event announced died in a crash; the
+                    // replica (if recovered) is a new incarnation.
+                    continue;
+                }
                 replicas[ri].busy = false;
                 // Complete in-flight requests in place (no drain-collect):
                 // inference + request overhead + post-processing, then
@@ -739,6 +935,24 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 #[allow(clippy::needless_range_loop)]
                 for k in 0..n_done {
                     let (slot, started, enqueued) = replicas[ri].in_flight[k];
+                    if side.on {
+                        match side.role(slot) {
+                            // The losing copy of a decided hedge race:
+                            // drained silently — it was never issued, so
+                            // no ledger may see it.
+                            ORPHAN => {
+                                traces.remove(slot);
+                                continue;
+                            }
+                            // Winner of a live race (either copy): the
+                            // survivor below completes as the request;
+                            // its partner becomes the orphan.
+                            _ => side.detach_partner(slot, true),
+                        }
+                        if side.roles[slot as usize] == GHOST {
+                            side.roles[slot as usize] = PRIMARY;
+                        }
+                    }
                     let mut trace = traces.remove(slot);
                     trace.record_stage(Stage::Inference, now - started + overhead);
                     let (_, _, post) = config.path.sample(&mut rng_loop);
@@ -760,6 +974,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             &mut traces,
                             &mut tenant_of,
                             &mut classes,
+                            &mut side,
                             &mut rng_loop,
                             &mut seq,
                         );
@@ -793,12 +1008,15 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 if let Some(adm) = admission.as_mut() {
                     drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
-                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
                         &mut heap, &mut seq,
                     );
                 }
             }
-            Event::ReplicaReady { replica: ri } => {
+            Event::ReplicaReady { replica: ri, epoch } => {
+                if epoch != replicas[ri].epoch {
+                    continue; // crashed while warming; readiness is stale
+                }
                 debug_assert_eq!(replicas[ri].state, ReplicaState::Warming);
                 replicas[ri].state = ReplicaState::Active;
                 insert_routable(&mut routable, ri);
@@ -817,7 +1035,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // the virtual clock, not the event heap, orders them).
                     Some(adm) => drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
-                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
                         &mut heap, &mut seq,
                     ),
                 }
@@ -854,6 +1072,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     active,
                     warming,
                     draining,
+                    failed: count_state(&replicas, ReplicaState::Failed),
                     outstanding: queued_total,
                     utilization,
                 };
@@ -870,7 +1089,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         ));
                         outstanding.push(0);
                         scale.record(now, ScaleEventKind::AddRequested, ri, active);
-                        push(&mut heap, now + coldstart, Event::ReplicaReady { replica: ri }, &mut seq);
+                        push(
+                            &mut heap,
+                            now + coldstart,
+                            Event::ReplicaReady { replica: ri, epoch: 0 },
+                            &mut seq,
+                        );
                     }
                     ScaleDecision::Remove => {
                         // Drain the least-loaded active replica (cheapest
@@ -905,9 +1129,316 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 if let Some(adm) = admission.as_mut() {
                     drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
-                        &mut replicas, &mut traces, &mut collector, &mut classes,
+                        &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
                         &mut heap, &mut seq,
                     );
+                }
+            }
+            Event::Fault { fault } => {
+                let ScheduledFault { replica: ri, kind, .. } = fault_sched[fault];
+                match kind {
+                    FaultKind::DegradeStart { factor } => {
+                        if replicas[ri].state != ReplicaState::Retired {
+                            replicas[ri].slowdown = factor;
+                        }
+                    }
+                    FaultKind::DegradeEnd => {
+                        replicas[ri].slowdown = 1.0;
+                    }
+                    FaultKind::Recover => {
+                        upcoming_recovers[ri] -= 1;
+                        if replicas[ri].state == ReplicaState::Failed {
+                            downtime_s += now - replicas[ri].failed_at;
+                            replicas[ri].state = ReplicaState::Warming;
+                            let active = count_state(&replicas, ReplicaState::Active);
+                            scale.record(now, ScaleEventKind::Recovered, ri, active);
+                            // Recovery pays a cold start: the plan's own
+                            // footprint, or the fleet's configured one.
+                            let bytes = if recovery_bytes > 0 {
+                                recovery_bytes
+                            } else {
+                                config.cold_start.unwrap_or(0)
+                            };
+                            let coldstart = replicas[ri].software.coldstart_s(bytes);
+                            push(
+                                &mut heap,
+                                now + coldstart,
+                                Event::ReplicaReady { replica: ri, epoch: replicas[ri].epoch },
+                                &mut seq,
+                            );
+                        }
+                    }
+                    FaultKind::Crash => {
+                        if matches!(
+                            replicas[ri].state,
+                            ReplicaState::Retired | ReplicaState::Failed
+                        ) {
+                            continue; // already dead
+                        }
+                        // A draining replica was leaving anyway: its crash
+                        // retires it for good (it never recovers).
+                        let draining = replicas[ri].state == ReplicaState::Draining;
+                        replicas[ri].state =
+                            if draining { ReplicaState::Retired } else { ReplicaState::Failed };
+                        replicas[ri].failed_at = now;
+                        replicas[ri].epoch += 1; // in-heap events go stale
+                        replicas[ri].busy = false;
+                        replicas[ri].slowdown = 1.0; // the process restarts healthy
+                        remove_routable(&mut routable, ri);
+                        // Kill the backlog: queued requests in queue order,
+                        // then the in-flight batch in dispatch order.
+                        let mut killed: Vec<u32> = replicas[ri]
+                            .batcher
+                            .take_queue()
+                            .iter()
+                            .map(|q| q.id as u32)
+                            .collect();
+                        killed.extend(
+                            std::mem::take(&mut replicas[ri].in_flight)
+                                .iter()
+                                .map(|&(slot, _, _)| slot),
+                        );
+                        replicas[ri].queued = 0;
+                        outstanding[ri] = 0;
+                        let active = count_state(&replicas, ReplicaState::Active);
+                        scale.record(now, ScaleEventKind::Crashed, ri, active);
+                        for slot in killed {
+                            // Hedge bookkeeping first: shadow copies and
+                            // decided losers vanish silently — the request
+                            // itself lives or dies elsewhere.
+                            match side.role(slot) {
+                                ORPHAN => {
+                                    traces.remove(slot);
+                                    continue;
+                                }
+                                GHOST => {
+                                    side.detach_partner(slot, false);
+                                    traces.remove(slot);
+                                    continue;
+                                }
+                                _ => {}
+                            }
+                            if side.on {
+                                let g = side.links[slot as usize];
+                                if g != NO_LINK {
+                                    // The primary died but its hedged shadow
+                                    // is alive on another replica: the shadow
+                                    // becomes the request.
+                                    side.promote(g, side.attempts[slot as usize]);
+                                    side.links[slot as usize] = NO_LINK;
+                                    traces.remove(slot);
+                                    continue;
+                                }
+                            }
+                            // Retry or die.
+                            let mut terminal = Some(DropReason::ReplicaFailed);
+                            if let Some(pol) = &config.retry {
+                                let made = side.attempts[slot as usize];
+                                if made < pol.max_attempts {
+                                    let delay = pol.delay_for(made);
+                                    let deadline =
+                                        traces.get_mut(slot).arrival_s + pol.deadline_s;
+                                    if now + delay <= deadline {
+                                        side.attempts[slot as usize] = made + 1;
+                                        push(&mut heap, now + delay, Event::Retry { slot }, &mut seq);
+                                        terminal = None;
+                                    } else {
+                                        terminal = Some(DropReason::TimedOut);
+                                    }
+                                }
+                            }
+                            if let Some(reason) = terminal {
+                                let mut trace = traces.remove(slot);
+                                ingress::drop_trace(
+                                    &mut trace,
+                                    reason,
+                                    [&mut replicas[ri].metrics.collector, &mut collector],
+                                );
+                                class_ingest(&mut classes, &trace);
+                                if closed_loop.is_some() && now < config.duration_s {
+                                    issue(
+                                        now + REJECT_RETRY_BACKOFF_S,
+                                        0,
+                                        &mut heap,
+                                        &mut traces,
+                                        &mut tenant_of,
+                                        &mut classes,
+                                        &mut side,
+                                        &mut rng_loop,
+                                        &mut seq,
+                                    );
+                                }
+                            }
+                        }
+                        // The crash may have stranded the held backlog (no
+                        // routable replica left and none on the way): reject
+                        // it now, not at the end of the run.
+                        match admission.as_mut() {
+                            Some(adm) => drain_held(
+                                now, &mut held, adm, &mut router, &routable, &mut outstanding,
+                                &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
+                                &mut heap, &mut seq,
+                            ),
+                            None => {
+                                if routable.is_empty()
+                                    && !capacity_pending(&replicas, &upcoming_recovers)
+                                    && !held.is_empty()
+                                {
+                                    let stranded: Vec<u32> = held.drain_fifo().collect();
+                                    for slot in stranded {
+                                        let mut trace = traces.remove(slot);
+                                        ingress::drop_trace(
+                                            &mut trace,
+                                            DropReason::RejectedPlacement,
+                                            [&mut collector],
+                                        );
+                                        if closed_loop.is_some() && now < config.duration_s {
+                                            issue(
+                                                now + REJECT_RETRY_BACKOFF_S,
+                                                0,
+                                                &mut heap,
+                                                &mut traces,
+                                                &mut tenant_of,
+                                                &mut classes,
+                                                &mut side,
+                                                &mut rng_loop,
+                                                &mut seq,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Event::Retry { slot } => {
+                // A retried attempt re-enters the routing tier below
+                // admission (it was admitted at first issue). Its backoff
+                // gap lands in Stage::Batching via the staging charge, so
+                // retried e2e latency keeps the original arrival.
+                if routable.is_empty() {
+                    if capacity_pending(&replicas, &upcoming_recovers) {
+                        match admission.as_mut() {
+                            None => held.push_fifo(slot),
+                            Some(adm) => {
+                                let tenant =
+                                    tenant_of.get(slot as usize).copied().unwrap_or(0) as usize;
+                                held.push_wfq(adm, tenant, slot);
+                            }
+                        }
+                    } else {
+                        let mut trace = traces.remove(slot);
+                        ingress::drop_trace(
+                            &mut trace,
+                            DropReason::RejectedPlacement,
+                            [&mut collector],
+                        );
+                        class_ingest(&mut classes, &trace);
+                        if closed_loop.is_some() && now < config.duration_s {
+                            issue(
+                                now + REJECT_RETRY_BACKOFF_S,
+                                0,
+                                &mut heap,
+                                &mut traces,
+                                &mut tenant_of,
+                                &mut classes,
+                                &mut side,
+                                &mut rng_loop,
+                                &mut seq,
+                            );
+                        }
+                    }
+                    continue;
+                }
+                let ri = router.route_among(now, &routable, &outstanding);
+                if replicas[ri].queued >= replicas[ri].max_queue {
+                    let mut trace = traces.remove(slot);
+                    ingress::drop_trace(
+                        &mut trace,
+                        DropReason::QueueFull,
+                        [&mut replicas[ri].metrics.collector, &mut collector],
+                    );
+                    class_ingest(&mut classes, &trace);
+                    if closed_loop.is_some() && now < config.duration_s {
+                        issue(
+                            now + REJECT_RETRY_BACKOFF_S,
+                            0,
+                            &mut heap,
+                            &mut traces,
+                            &mut tenant_of,
+                            &mut classes,
+                            &mut side,
+                            &mut rng_loop,
+                            &mut seq,
+                        );
+                    }
+                    continue;
+                }
+                let pol = config.retry.expect("Retry events exist only with a retry policy");
+                // Hedge: snapshot the trace before staging so both copies
+                // charge their own arrival→now gap.
+                let ghost =
+                    if pol.hedge && routable.len() >= 2 { Some(*traces.get_mut(slot)) } else { None };
+                let r = &mut replicas[ri];
+                let d = ingress::stage_into_batcher(
+                    traces.get_mut(slot),
+                    &mut r.batcher,
+                    slot,
+                    now,
+                    r.busy,
+                );
+                r.queued += 1;
+                outstanding[ri] += 1;
+                match d {
+                    Decision::Dispatch(_) => {
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
+                    }
+                    Decision::WakeAt(t) => {
+                        push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
+                    }
+                    Decision::Wait => {}
+                }
+                if let Some(g) = ghost {
+                    // Shadow copy on the least-loaded other healthy replica
+                    // with queue room (ascending scan: index breaks ties).
+                    let mut second: Option<usize> = None;
+                    for &cand in &routable {
+                        if cand == ri || replicas[cand].queued >= replicas[cand].max_queue {
+                            continue;
+                        }
+                        match second {
+                            None => second = Some(cand),
+                            Some(b) if outstanding[cand] < outstanding[b] => second = Some(cand),
+                            _ => {}
+                        }
+                    }
+                    if let Some(gi) = second {
+                        let gslot = traces.insert(g);
+                        side.make_ghost(gslot, slot);
+                        let r = &mut replicas[gi];
+                        let d = ingress::stage_into_batcher(
+                            traces.get_mut(gslot),
+                            &mut r.batcher,
+                            gslot,
+                            now,
+                            r.busy,
+                        );
+                        r.queued += 1;
+                        outstanding[gi] += 1;
+                        match d {
+                            Decision::Dispatch(_) => start_batch(
+                                gi, &mut replicas[gi], now, &mut heap, &mut seq, &mut traces,
+                            ),
+                            Decision::WakeAt(t) => push(
+                                &mut heap,
+                                t,
+                                Event::Wake { replica: gi, scheduled_for: t },
+                                &mut seq,
+                            ),
+                            Decision::Wait => {}
+                        }
+                    }
                 }
             }
         }
@@ -940,6 +1471,13 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
             debug_assert!(cm.conserved(), "class {} ledger out of balance", cm.class);
         }
     }
+    // Replicas still down when the clock runs out owe the rest of the
+    // horizon to the downtime ledger.
+    for r in &replicas {
+        if r.state == ReplicaState::Failed {
+            downtime_s += config.duration_s - r.failed_at;
+        }
+    }
     ClusterResult {
         collector,
         replicas: replicas.into_iter().map(|r| r.metrics).collect(),
@@ -947,6 +1485,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         dropped,
         classes,
         issued: next_id,
+        downtime_s,
         events,
     }
 }
@@ -982,6 +1521,8 @@ mod tests {
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
             admission: None,
+            faults: None,
+            retry: None,
             seed: 5,
         }
     }

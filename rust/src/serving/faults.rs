@@ -1,0 +1,383 @@
+//! Deterministic fault injection for the serving engines.
+//!
+//! A [`FaultPlan`] describes replica crashes, recoveries and straggler
+//! slowdowns for one DES run. Plans come in two flavors that compose:
+//!
+//! - **Scripted**: an explicit list of [`FaultOp`]s at fixed times —
+//!   exactly reproducible by construction, the right tool for goldens
+//!   and targeted what-if studies ("kill replica 1 at t=3s").
+//! - **Random profile**: a [`FaultProfile`] with exponential MTTF/MTTR
+//!   (and optionally a degrade distribution) sampled from seeded PCG
+//!   streams. Each replica draws from its own stream, derived as
+//!   `Pcg64::new(seed, FAULT_STREAM + replica)` — streams the workload
+//!   generator (`Pcg64::seeded`, stream `0xda3e39cb94b95bdb`), the
+//!   engines' loop RNGs (clones of the same stream) and the routers'
+//!   p2c stream (`0x9e3779b97f4a7c15`) never touch. Adding, removing
+//!   or re-seeding faults therefore cannot shift a single workload or
+//!   routing draw: the only way a fault changes a run is through the
+//!   injected events themselves.
+//!
+//! The whole plan is materialized into a sorted [`ScheduledFault`] list
+//! at engine setup, before the first simulated event. [`FaultPlan::none`]
+//! materializes to an empty list, pushes zero DES events and consumes
+//! zero RNG draws or sequence numbers — which is why a `faults: none`
+//! run is bit-identical to an engine that predates this module (gated by
+//! `tests/faults.rs`).
+
+use crate::util::rng::Pcg64;
+
+/// PCG stream base for per-replica crash/recover draws: the high bits of
+/// sqrt(2), disjoint from the workload stream (`0xda3e39cb94b95bdb`, used
+/// by `Pcg64::seeded`) and the router p2c stream (`0x9e3779b97f4a7c15`).
+pub const FAULT_STREAM: u64 = 0x6a09e667f3bcc908;
+
+/// PCG stream base for per-replica degrade draws: the high bits of
+/// sqrt(3). Separate from [`FAULT_STREAM`] so toggling the degrade
+/// profile does not move the crash schedule.
+pub const DEGRADE_STREAM: u64 = 0xbb67ae8584caa73b;
+
+/// One scripted fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultOp {
+    /// Replica dies at `at_s`: it leaves the routable set instantly and
+    /// its queued + in-flight requests die or are retried.
+    Crash { replica: usize, at_s: f64 },
+    /// A crashed replica begins recovery at `at_s`; it becomes routable
+    /// again after paying its cold start.
+    Recover { replica: usize, at_s: f64 },
+    /// Straggler window: service times on `replica` are multiplied by
+    /// `factor` (≥ 1.0) from `at_s` until `until_s`.
+    Degrade { replica: usize, at_s: f64, until_s: f64, factor: f64 },
+}
+
+/// Random degrade (straggler) distribution: exponential gaps between
+/// windows of fixed duration and slowdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeProfile {
+    /// Mean time between degrade-window starts, seconds (exponential).
+    pub mtbd_s: f64,
+    /// Length of each degrade window, seconds.
+    pub duration_s: f64,
+    /// Service-time multiplier during the window (≥ 1.0).
+    pub factor: f64,
+}
+
+/// Random crash/recover distribution: classic exponential MTTF/MTTR.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    /// Mean time to failure, seconds (exponential up-time).
+    pub mttf_s: f64,
+    /// Mean time to recovery, seconds (exponential down-time).
+    pub mttr_s: f64,
+    /// Optional straggler distribution layered on the same replicas.
+    pub degrade: Option<DegradeProfile>,
+}
+
+/// A full fault-injection plan for one run: scripted ops, an optional
+/// random profile, and the seed the profile draws from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Explicit events, applied verbatim (after validation).
+    pub script: Vec<FaultOp>,
+    /// Random MTTF/MTTR (+ degrade) sampling, per replica.
+    pub profile: Option<FaultProfile>,
+    /// Seed for the profile's per-replica PCG streams. Ignored for
+    /// purely scripted plans.
+    pub seed: u64,
+    /// Weight bytes re-loaded on recovery; `0` means "reuse the
+    /// engine's configured cold-start size". Lets a study price
+    /// recovery differently from scale-up cold starts.
+    pub recovery_bytes: u64,
+}
+
+/// What a materialized fault does, in tie-break order (crashes before
+/// recoveries at the same instant would re-kill a replica that just came
+/// back; processing the crash first keeps same-instant scripts sane).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    Crash,
+    Recover,
+    DegradeStart { factor: f64 },
+    DegradeEnd,
+}
+
+impl FaultKind {
+    fn rank(&self) -> u8 {
+        match self {
+            FaultKind::Crash => 0,
+            FaultKind::Recover => 1,
+            FaultKind::DegradeStart { .. } => 2,
+            FaultKind::DegradeEnd => 3,
+        }
+    }
+}
+
+/// One materialized fault event, ready for the DES heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledFault {
+    pub at_s: f64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultPlan {
+    /// The empty plan: no script, no profile. Materializes to zero
+    /// events; engines treat it exactly like `faults: None`.
+    pub fn none() -> Self {
+        FaultPlan { script: Vec::new(), profile: None, seed: 0, recovery_bytes: 0 }
+    }
+
+    /// A purely scripted plan.
+    pub fn scripted(ops: Vec<FaultOp>) -> Self {
+        FaultPlan { script: ops, profile: None, seed: 0, recovery_bytes: 0 }
+    }
+
+    /// A purely random plan drawing from `seed`'s fault streams.
+    pub fn random(profile: FaultProfile, seed: u64) -> Self {
+        FaultPlan { script: Vec::new(), profile: Some(profile), seed, recovery_bytes: 0 }
+    }
+
+    /// True when the plan can inject nothing.
+    pub fn is_none(&self) -> bool {
+        self.script.is_empty() && self.profile.is_none()
+    }
+
+    /// Panics (loudly, like `AdmissionConfig::validate`) on nonsense:
+    /// negative times, inverted degrade windows, slowdown factors below
+    /// 1.0, non-positive profile means.
+    pub fn validate(&self) {
+        for op in &self.script {
+            match *op {
+                FaultOp::Crash { at_s, .. } | FaultOp::Recover { at_s, .. } => {
+                    assert!(at_s >= 0.0, "fault op time must be >= 0, got {at_s}");
+                }
+                FaultOp::Degrade { at_s, until_s, factor, .. } => {
+                    assert!(at_s >= 0.0, "degrade start must be >= 0, got {at_s}");
+                    assert!(
+                        until_s > at_s,
+                        "degrade window must end after it starts ({at_s}..{until_s})"
+                    );
+                    assert!(factor >= 1.0, "degrade factor must be >= 1.0, got {factor}");
+                }
+            }
+        }
+        if let Some(p) = &self.profile {
+            assert!(p.mttf_s > 0.0, "mttf_s must be > 0, got {}", p.mttf_s);
+            assert!(p.mttr_s > 0.0, "mttr_s must be > 0, got {}", p.mttr_s);
+            if let Some(d) = &p.degrade {
+                assert!(d.mtbd_s > 0.0, "mtbd_s must be > 0, got {}", d.mtbd_s);
+                assert!(d.duration_s > 0.0, "degrade duration_s must be > 0, got {}", d.duration_s);
+                assert!(d.factor >= 1.0, "degrade factor must be >= 1.0, got {}", d.factor);
+            }
+        }
+    }
+
+    /// Materialize the plan against a fleet of `n_replicas` initial
+    /// replicas over `[0, duration_s)`. Scripted ops naming a replica
+    /// outside the initial fleet are dropped (autoscaled replicas added
+    /// mid-run are not fault targets — only the configured fleet is).
+    /// The result is sorted by `(time, replica, kind)`, a deterministic
+    /// total order: the same plan always materializes to the same list.
+    pub fn schedule(&self, n_replicas: usize, duration_s: f64) -> Vec<ScheduledFault> {
+        self.validate();
+        let mut out = Vec::new();
+        for op in &self.script {
+            match *op {
+                FaultOp::Crash { replica, at_s } => {
+                    if replica < n_replicas && at_s < duration_s {
+                        out.push(ScheduledFault { at_s, replica, kind: FaultKind::Crash });
+                    }
+                }
+                FaultOp::Recover { replica, at_s } => {
+                    if replica < n_replicas && at_s < duration_s {
+                        out.push(ScheduledFault { at_s, replica, kind: FaultKind::Recover });
+                    }
+                }
+                FaultOp::Degrade { replica, at_s, until_s, factor } => {
+                    if replica < n_replicas && at_s < duration_s {
+                        out.push(ScheduledFault {
+                            at_s,
+                            replica,
+                            kind: FaultKind::DegradeStart { factor },
+                        });
+                        if until_s < duration_s {
+                            out.push(ScheduledFault {
+                                at_s: until_s,
+                                replica,
+                                kind: FaultKind::DegradeEnd,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(p) = &self.profile {
+            for replica in 0..n_replicas {
+                let mut rng = Pcg64::new(self.seed, FAULT_STREAM.wrapping_add(replica as u64));
+                let mut t = rng.exponential(1.0 / p.mttf_s);
+                while t < duration_s {
+                    out.push(ScheduledFault { at_s: t, replica, kind: FaultKind::Crash });
+                    t += rng.exponential(1.0 / p.mttr_s);
+                    if t >= duration_s {
+                        break; // down for the rest of the run
+                    }
+                    out.push(ScheduledFault { at_s: t, replica, kind: FaultKind::Recover });
+                    t += rng.exponential(1.0 / p.mttf_s);
+                }
+                if let Some(d) = &p.degrade {
+                    let mut rng =
+                        Pcg64::new(self.seed, DEGRADE_STREAM.wrapping_add(replica as u64));
+                    let mut t = rng.exponential(1.0 / d.mtbd_s);
+                    while t < duration_s {
+                        out.push(ScheduledFault {
+                            at_s: t,
+                            replica,
+                            kind: FaultKind::DegradeStart { factor: d.factor },
+                        });
+                        let end = t + d.duration_s;
+                        if end < duration_s {
+                            out.push(ScheduledFault {
+                                at_s: end,
+                                replica,
+                                kind: FaultKind::DegradeEnd,
+                            });
+                        }
+                        t = end + rng.exponential(1.0 / d.mtbd_s);
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            a.at_s
+                .total_cmp(&b.at_s)
+                .then(a.replica.cmp(&b.replica))
+                .then(a.kind.rank().cmp(&b.kind.rank()))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_materializes_to_nothing() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_none());
+        assert!(plan.schedule(8, 100.0).is_empty());
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let profile = FaultProfile {
+            mttf_s: 5.0,
+            mttr_s: 1.0,
+            degrade: Some(DegradeProfile { mtbd_s: 7.0, duration_s: 2.0, factor: 3.0 }),
+        };
+        let a = FaultPlan::random(profile, 42).schedule(4, 60.0);
+        let b = FaultPlan::random(profile, 42).schedule(4, 60.0);
+        assert!(!a.is_empty(), "a 60s run at mttf 5s should produce crashes");
+        assert_eq!(a, b);
+        let c = FaultPlan::random(profile, 43).schedule(4, 60.0);
+        assert_ne!(a, c, "different seeds should move the schedule");
+    }
+
+    #[test]
+    fn profile_alternates_crash_recover_per_replica() {
+        let plan = FaultPlan::random(
+            FaultProfile { mttf_s: 3.0, mttr_s: 0.5, degrade: None },
+            7,
+        );
+        let sched = plan.schedule(3, 200.0);
+        for r in 0..3 {
+            let mine: Vec<&ScheduledFault> =
+                sched.iter().filter(|f| f.replica == r).collect();
+            assert!(mine.len() >= 2, "replica {r} should fail at least once in 200s");
+            for (i, f) in mine.iter().enumerate() {
+                let want = if i % 2 == 0 { FaultKind::Crash } else { FaultKind::Recover };
+                assert_eq!(f.kind, want, "replica {r} event {i}");
+            }
+            for w in mine.windows(2) {
+                assert!(w[0].at_s < w[1].at_s, "strictly increasing per replica");
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_ops_sorted_and_clipped() {
+        let plan = FaultPlan::scripted(vec![
+            FaultOp::Recover { replica: 1, at_s: 5.0 },
+            FaultOp::Crash { replica: 1, at_s: 2.0 },
+            FaultOp::Crash { replica: 9, at_s: 1.0 },  // outside fleet: dropped
+            FaultOp::Crash { replica: 0, at_s: 50.0 }, // past duration: dropped
+            FaultOp::Degrade { replica: 0, at_s: 3.0, until_s: 40.0, factor: 2.0 },
+        ]);
+        let sched = plan.schedule(2, 10.0);
+        assert_eq!(sched.len(), 3);
+        assert_eq!(sched[0], ScheduledFault { at_s: 2.0, replica: 1, kind: FaultKind::Crash });
+        assert_eq!(
+            sched[1],
+            ScheduledFault { at_s: 3.0, replica: 0, kind: FaultKind::DegradeStart { factor: 2.0 } }
+        );
+        // Degrade end past duration is clipped; only the start survives.
+        assert_eq!(sched[2], ScheduledFault { at_s: 5.0, replica: 1, kind: FaultKind::Recover });
+    }
+
+    #[test]
+    fn same_instant_crash_sorts_before_recover() {
+        let plan = FaultPlan::scripted(vec![
+            FaultOp::Recover { replica: 0, at_s: 4.0 },
+            FaultOp::Crash { replica: 0, at_s: 4.0 },
+        ]);
+        let sched = plan.schedule(1, 10.0);
+        assert_eq!(sched[0].kind, FaultKind::Crash);
+        assert_eq!(sched[1].kind, FaultKind::Recover);
+    }
+
+    #[test]
+    fn degrade_stream_disjoint_from_crash_stream() {
+        // Toggling the degrade profile must not move the crash schedule.
+        let bare = FaultPlan::random(
+            FaultProfile { mttf_s: 4.0, mttr_s: 1.0, degrade: None },
+            99,
+        )
+        .schedule(2, 100.0);
+        let with_degrade = FaultPlan::random(
+            FaultProfile {
+                mttf_s: 4.0,
+                mttr_s: 1.0,
+                degrade: Some(DegradeProfile { mtbd_s: 9.0, duration_s: 1.0, factor: 2.0 }),
+            },
+            99,
+        )
+        .schedule(2, 100.0);
+        let crashes = |s: &[ScheduledFault]| -> Vec<ScheduledFault> {
+            s.iter()
+                .filter(|f| matches!(f.kind, FaultKind::Crash | FaultKind::Recover))
+                .copied()
+                .collect()
+        };
+        assert_eq!(crashes(&bare), crashes(&with_degrade));
+        assert!(with_degrade.len() > bare.len(), "degrade windows present");
+    }
+
+    #[test]
+    #[should_panic(expected = "degrade factor must be >= 1.0")]
+    fn speedup_factors_rejected() {
+        FaultPlan::scripted(vec![FaultOp::Degrade {
+            replica: 0,
+            at_s: 0.0,
+            until_s: 1.0,
+            factor: 0.5,
+        }])
+        .schedule(1, 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mttf_s must be > 0")]
+    fn non_positive_mttf_rejected() {
+        FaultPlan::random(FaultProfile { mttf_s: 0.0, mttr_s: 1.0, degrade: None }, 1)
+            .schedule(1, 10.0);
+    }
+}

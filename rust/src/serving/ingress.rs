@@ -185,6 +185,74 @@ impl AdmissionConfig {
     }
 }
 
+/// Ingress-tier retry policy for requests stranded by a replica crash
+/// (`serving/faults.rs`). `None` at the engine level means fail-and-drop:
+/// a crash kills its queued + in-flight requests with
+/// `DropReason::ReplicaFailed`, and the request path is bit-identical to
+/// the pre-retry engines.
+///
+/// Retries are deterministic: attempt `k` (1-based; the original issue is
+/// attempt 1) re-enters the ingress tier after
+/// `min(backoff_s · 2^(k-1), backoff_cap_s)` — no jitter, no RNG. A retry
+/// whose backoff would land past `arrival + deadline_s` gives up
+/// immediately with `DropReason::TimedOut`. The end-to-end latency of a
+/// retried request keeps its original arrival time, so backoff gaps show
+/// up in `Stage::Batching` exactly like held-at-routing time does.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the original issue (≥ 1; 1 = no retries).
+    pub max_attempts: u32,
+    /// End-to-end deadline from the request's arrival, seconds. A retry
+    /// scheduled past it is dropped as timed out.
+    pub deadline_s: f64,
+    /// First backoff gap, seconds; doubles each further attempt.
+    pub backoff_s: f64,
+    /// Cap on the exponential backoff, seconds.
+    pub backoff_cap_s: f64,
+    /// Hedge: when a retried request is staged and a second healthy
+    /// replica exists, stage a shadow copy there too; first completion
+    /// wins, the loser is discarded without touching the ledgers.
+    pub hedge: bool,
+}
+
+impl RetryPolicy {
+    /// A plain exponential-backoff policy: no hedging, backoff capped at
+    /// 16× the base gap.
+    pub fn new(max_attempts: u32, deadline_s: f64, backoff_s: f64) -> Self {
+        RetryPolicy {
+            max_attempts,
+            deadline_s,
+            backoff_s,
+            backoff_cap_s: backoff_s * 16.0,
+            hedge: false,
+        }
+    }
+
+    pub fn with_hedge(mut self) -> Self {
+        self.hedge = true;
+        self
+    }
+
+    /// Backoff before attempt `attempt + 1`, given `attempt` attempts
+    /// already made (≥ 1): `min(backoff_s · 2^(attempt-1), cap)`.
+    pub fn delay_for(&self, attempt: u32) -> f64 {
+        debug_assert!(attempt >= 1, "the original issue is attempt 1");
+        let exp = (attempt - 1).min(52); // past 2^52 the cap decides anyway
+        (self.backoff_s * (1u64 << exp) as f64).min(self.backoff_cap_s)
+    }
+
+    /// Panic loudly on nonsense, mirroring `AdmissionConfig::validate`.
+    pub fn validate(&self) {
+        assert!(self.max_attempts >= 1, "retry needs at least one attempt (the original)");
+        assert!(self.deadline_s > 0.0, "retry deadline_s must be positive");
+        assert!(self.backoff_s >= 0.0, "retry backoff_s must be non-negative");
+        assert!(
+            self.backoff_cap_s >= self.backoff_s,
+            "retry backoff_cap_s must be >= backoff_s"
+        );
+    }
+}
+
 /// Token bucket: refills continuously at `rate`, capped at `burst`. A
 /// pure function of simulated time — no RNG, no wall clock.
 #[derive(Debug, Clone)]
@@ -659,6 +727,30 @@ mod tests {
         wfq.push_wfq(&mut adm, 1, 2); // finish 0.1 — drains first
         assert_eq!(wfq.drain_all(), vec![(2, 1), (1, 0)]);
         assert!(wfq.is_empty());
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_caps() {
+        let pol = RetryPolicy::new(6, 10.0, 0.05);
+        pol.validate();
+        assert_eq!(pol.delay_for(1), 0.05);
+        assert_eq!(pol.delay_for(2), 0.10);
+        assert_eq!(pol.delay_for(3), 0.20);
+        assert_eq!(pol.delay_for(5), 0.80, "exact doubling: powers of two are exact in f64");
+        // Cap: 16× base = 0.8, so attempt 6+ stays put.
+        assert_eq!(pol.delay_for(6), 0.80);
+        assert_eq!(pol.delay_for(60), 0.80, "huge attempt counts saturate, no overflow");
+        // Deterministic: same inputs, same bits.
+        assert_eq!(pol.delay_for(4).to_bits(), pol.delay_for(4).to_bits());
+        assert!(!pol.hedge);
+        assert!(RetryPolicy::new(3, 1.0, 0.01).with_hedge().hedge);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one attempt")]
+    fn retry_rejects_zero_attempts() {
+        RetryPolicy { max_attempts: 0, deadline_s: 1.0, backoff_s: 0.0, backoff_cap_s: 0.0, hedge: false }
+            .validate();
     }
 
     #[test]

@@ -37,6 +37,20 @@
 //! per-[`DropReason`](crate::metrics::DropReason) breakdown; see
 //! `benches/fig_qos.rs` for the overload study.
 //!
+//! Fault structure: a [`FaultPlan`] (`faults`) injects deterministic
+//! replica crashes, recoveries-through-cold-start and straggler
+//! slowdowns into both engines. Crashed replicas leave the routable set
+//! instantly and their queued + in-flight requests either die (new
+//! `ReplicaFailed`/`TimedOut` drop reasons, same exact conservation) or
+//! re-enter the ingress tier under a [`RetryPolicy`] with deterministic
+//! exponential backoff and optional hedged shadow attempts; the
+//! autoscaler sees crash-induced capacity loss as scale-up pressure.
+//! Fault schedules draw from PCG streams disjoint from the workload and
+//! routing streams, so `faults: None` (or `FaultPlan::none()`) is
+//! bit-identical to the pre-fault engines — pinned by `tests/faults.rs`
+//! at 1/2/8 sweep threads; see `benches/fig_faults.rs` for the
+//! availability study.
+//!
 //! The DES request lifecycle is allocation-free at steady state and its
 //! throughput (simulated requests/sec) is tracked per PR — see PERF.md
 //! and `benches/l4_des_throughput.rs`.
@@ -46,6 +60,7 @@ pub mod backends;
 pub mod batcher;
 pub mod cluster;
 mod des;
+pub mod faults;
 pub mod ingress;
 pub mod live;
 pub mod multimodel;
@@ -57,7 +72,8 @@ pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision, ScalePolicy, Sca
 pub use backends::{DynamicBatching, Software};
 pub use batcher::{Batcher, Decision, Policy};
 pub use cluster::{ClusterConfig, ClusterResult, ReplicaConfig};
-pub use ingress::{AdmissionConfig, TenantSpec};
+pub use faults::{DegradeProfile, FaultOp, FaultPlan, FaultProfile};
+pub use ingress::{AdmissionConfig, RetryPolicy, TenantSpec};
 pub use multimodel::{
     ContentionModel, ModelSpec, MultiModelConfig, MultiModelResult, MultiReplicaConfig,
     PlacementOp,

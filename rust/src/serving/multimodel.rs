@@ -68,12 +68,23 @@
 //! no shared front door to arbitrate; held queues stay FIFO and fairness
 //! between models comes from placement and routing. `admission: None`
 //! keeps the request path bit-identical to the pre-ingress engine.
+//!
+//! Faults: a [`FaultPlan`] (`faults`) crashes whole replicas — every
+//! hosted lane is force-evicted (weights freed, queued + in-flight
+//! requests die as [`DropReason::ReplicaFailed`] or re-enter routing
+//! under a [`RetryPolicy`] after a deterministic backoff) and the
+//! replica's lost models re-load through the normal cold-start path on
+//! recovery. Unlike the cluster engine there is no hedging here: every
+//! model owns its routing domain, so a retry is just a re-route within
+//! it. `faults: None` keeps the run bit-identical to the pre-fault
+//! engine (the schedule draws from its own PCG streams).
 
 use super::backends::Software;
 use super::batcher::{Batcher, Decision, Policy};
 use super::cluster::{effective, insert_routable, remove_routable};
 use super::des::{self, push, EventBox, Key};
-use super::ingress::{self, class_ingest, Admission, AdmissionConfig, HeldQueue};
+use super::faults::{FaultKind, FaultPlan, ScheduledFault};
+use super::ingress::{self, class_ingest, Admission, AdmissionConfig, HeldQueue, RetryPolicy};
 use super::router::{ModelRouter, RouterPolicy};
 use super::service::ServiceModel;
 use crate::hardware::sharing::{MPS_EFFICIENCY, MPS_OVERHEAD_S};
@@ -191,6 +202,19 @@ pub struct MultiModelConfig {
     /// against the model count. `None` disables the tier — the request
     /// path is then bit-identical to the pre-ingress engine.
     pub admission: Option<AdmissionConfig>,
+    /// Deterministic fault injection: scripted and/or seeded-random
+    /// replica crashes, recoveries, and straggler slowdowns (see
+    /// `serving::faults`). A crash force-evicts every hosted lane;
+    /// recovery re-loads the lost models through the cold-start path.
+    /// `None` — or a plan with nothing to inject — keeps the run
+    /// bit-identical to the pre-fault engine.
+    pub faults: Option<FaultPlan>,
+    /// Retry policy for requests stranded on a crashed replica: they
+    /// re-enter this model's routing domain after a deterministic
+    /// exponential backoff instead of dying. `None` means fail-and-drop
+    /// ([`DropReason::ReplicaFailed`]). Hedging is ignored here (see the
+    /// module doc).
+    pub retry: Option<RetryPolicy>,
     pub seed: u64,
 }
 
@@ -218,6 +242,12 @@ pub struct MultiModelResult {
     pub dropped: u64,
     /// Requests issued across all streams.
     pub issued: u64,
+    /// Total replica-seconds spent crashed within `[0, duration_s]`,
+    /// summed over the fleet (recovery cold starts count as loading, not
+    /// as downtime). Availability over the run is
+    /// `1 - downtime_s / (replicas × duration_s)`. Zero without fault
+    /// injection.
+    pub downtime_s: f64,
     /// Discrete events processed by the simulation loop.
     pub events: u64,
 }
@@ -269,6 +299,10 @@ struct Hosted {
     /// When the in-progress load becomes ready; guards stale
     /// `ModelReady` events after an evict + reload.
     ready_at: f64,
+    /// Bumped when a crash kills this lane: in-heap `ServerFree` events
+    /// carry the epoch they were scheduled under, so a completion for a
+    /// batch that died with the replica cannot fire after a reload.
+    epoch: u32,
 }
 
 impl Hosted {
@@ -285,6 +319,7 @@ impl Hosted {
             recent: VecDeque::new(),
             last_active_s: f64::NEG_INFINITY,
             ready_at: 0.0,
+            epoch: 0,
         }
     }
 }
@@ -297,6 +332,15 @@ struct Replica {
     used_bytes: u64,
     hosted: Vec<Hosted>,
     metrics: ReplicaMetrics,
+    /// Straggler multiplier from fault injection (1.0 = healthy).
+    slowdown: f64,
+    /// Crashed and not yet recovered.
+    failed: bool,
+    /// When the current outage began (meaningful while `failed`).
+    failed_at: f64,
+    /// Models force-evicted by the crash, in eviction order; recovery
+    /// re-loads them through the cold-start path.
+    lost: Vec<usize>,
 }
 
 impl Replica {
@@ -390,12 +434,19 @@ enum Event {
     Enqueue { slot: u32, model: u32 },
     /// Batcher timeout for one (replica, model) queue.
     Wake { replica: usize, model: u32, scheduled_for: f64 },
-    /// One (replica, model) pair finishes its in-flight batch.
-    ServerFree { replica: usize, model: u32 },
+    /// One (replica, model) pair finishes its in-flight batch. Stale
+    /// after a crash: the lane's epoch was bumped, so the completion is
+    /// dropped on arrival.
+    ServerFree { replica: usize, model: u32, epoch: u32 },
     /// A loading model finished its cold start and becomes routable.
     ModelReady { replica: usize, model: u32 },
     /// A scripted placement op fires (index into `placement_ops`).
     Place { op: usize },
+    /// A scheduled fault fires (index into the materialized schedule).
+    Fault { fault: usize },
+    /// A request stranded by a crash re-enters its model's routing
+    /// domain after its retry backoff.
+    Retry { slot: u32, model: u32 },
 }
 
 /// Time-then-sequence event heap, shared with the cluster engine (see
@@ -420,7 +471,7 @@ fn start_batch(
     let base = spec.service.service_s(b, r.software) + r.hosted[hi].penalty_s;
     // MPS is active only under co-tenancy: a dedicated replica serves at
     // the exclusive latency (hardware::sharing's `exclusive_s` side).
-    let service = if r.contending() >= 2 {
+    let mut service = if r.contending() >= 2 {
         let mut total = 0.0;
         for h in r.hosted.iter_mut() {
             total += window_demand(&mut h.recent, now, contention.window_s);
@@ -434,6 +485,12 @@ fn start_batch(
     } else {
         base
     };
+    // Straggler injection. Gated so a fault-free run's arithmetic is
+    // bit-identical to the pre-fault engine (x * 1.0 is not a no-op for
+    // every float).
+    if r.slowdown != 1.0 {
+        service *= r.slowdown;
+    }
     let util = spec.service.utilization(b);
     r.metrics.timeline.record_busy(now, service, util);
     r.metrics.busy_timeline.record_busy(now, service, 1.0);
@@ -454,7 +511,13 @@ fn start_batch(
         h.in_flight.push((q.id as u32, now, q.enqueue_s));
     }
     h.busy = true;
-    push(heap, now + service, Event::ServerFree { replica: ri, model: model as u32 }, seq);
+    let epoch = h.epoch;
+    push(
+        heap,
+        now + service,
+        Event::ServerFree { replica: ri, model: model as u32, epoch },
+        seq,
+    );
 }
 
 /// Evict `replicas[ri].hosted[hi]`: drop its queued requests (accounted
@@ -520,6 +583,17 @@ fn evict_model(
             );
         }
     }
+}
+
+/// Is capacity for model `m` on the way? True while any replica has a
+/// `Loading` lane for it, or a crashed replica that lost it has a
+/// recovery still scheduled (the recovery will re-load it). Requests
+/// held at the routing tier keep waiting exactly as long as this holds.
+fn capacity_pending_for(m: usize, replicas: &[Replica], upcoming_recovers: &[u32]) -> bool {
+    replicas.iter().enumerate().any(|(ri, r)| {
+        r.hosted.iter().any(|h| h.model == m && h.state == HostState::Loading)
+            || (r.failed && upcoming_recovers[ri] > 0 && r.lost.contains(&m))
+    })
 }
 
 /// Route one request at the front door and stage it into the chosen
@@ -635,6 +709,10 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             used_bytes: used,
             hosted,
             metrics: ReplicaMetrics::with_mode(horizon_s, 0.5, config.metrics),
+            slowdown: 1.0,
+            failed: false,
+            failed_at: 0.0,
+            lost: Vec::new(),
         });
     }
 
@@ -716,6 +794,42 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
         );
     }
 
+    // Fault schedule, pinned just past the placement range: `faults: None`
+    // (or a plan with nothing in it) pushes zero events and consumes zero
+    // sequence numbers or RNG draws — trivially bit-identical to the
+    // pre-fault engine.
+    let mut fault_sched: Vec<ScheduledFault> = Vec::new();
+    if let Some(plan) = &config.faults {
+        if !plan.is_none() {
+            plan.validate();
+            fault_sched = plan.schedule(config.replicas.len(), config.duration_s);
+        }
+    }
+    let n_ops = config.placement_ops.len() as u64;
+    for (i, f) in fault_sched.iter().enumerate() {
+        des::push_at(
+            &mut heap,
+            f.at_s,
+            Event::Fault { fault: i },
+            des::ARRIVAL_SEQ_BASE + n_issue + n_ops + i as u64,
+        );
+    }
+    let mut upcoming_recovers: Vec<u32> = vec![0; config.replicas.len()];
+    for f in &fault_sched {
+        if matches!(f.kind, FaultKind::Recover) {
+            upcoming_recovers[f.replica] += 1;
+        }
+    }
+    let recovery_bytes = config.faults.as_ref().map(|p| p.recovery_bytes).unwrap_or(0);
+    if let Some(pol) = &config.retry {
+        pol.validate();
+    }
+    let retry_on = config.retry.is_some();
+    // Retry attempts made per live trace slot, reset when a slot is
+    // reused for a fresh arrival. Empty (never touched) without a policy.
+    let mut attempts: Vec<u32> = Vec::new();
+    let mut downtime_s = 0.0f64;
+
     let mut events = 0u64;
     loop {
         // Inject every merged arrival due at or before the next event (all
@@ -743,6 +857,16 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             trace.record_stage(Stage::Transmission, tx);
             let enqueue_at = trace.completed_s;
             let slot = traces.insert(trace);
+            if retry_on {
+                // The single point where a slot becomes a fresh request:
+                // reset its attempt count here, nowhere else, so held or
+                // re-routed slots keep theirs.
+                if attempts.len() <= slot as usize {
+                    attempts.resize(slot as usize + 1, 0);
+                } else {
+                    attempts[slot as usize] = 0;
+                }
+            }
             des::push_at(
                 &mut heap,
                 enqueue_at,
@@ -780,12 +904,9 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                 }
                 if routable[m].is_empty() {
                     // No replica hosts this model right now: hold while a
-                    // load is in progress, otherwise reject — nothing will
-                    // ever serve it.
-                    let loading = replicas.iter().any(|r| {
-                        r.hosted.iter().any(|h| h.model == m && h.state == HostState::Loading)
-                    });
-                    if loading {
+                    // load (or a crashed host's recovery) is in progress,
+                    // otherwise reject — nothing will ever serve it.
+                    if capacity_pending_for(m, &replicas, &upcoming_recovers) {
                         held[m].push_fifo(slot);
                     } else {
                         drop_slot(
@@ -848,9 +969,12 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     Decision::Wait => {}
                 }
             }
-            Event::ServerFree { replica: ri, model } => {
+            Event::ServerFree { replica: ri, model, epoch } => {
                 let m = model as usize;
                 let hi = replicas[ri].host_index(m).expect("completion for unknown host");
+                if replicas[ri].hosted[hi].epoch != epoch {
+                    continue; // the batch died with the replica
+                }
                 replicas[ri].hosted[hi].busy = false;
                 let overhead = replicas[ri].software.request_overhead_s;
                 let n_done = replicas[ri].hosted[hi].in_flight.len();
@@ -1068,6 +1192,194 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     }
                 }
             }
+            Event::Fault { fault } => {
+                let ScheduledFault { replica: ri, kind, .. } = fault_sched[fault];
+                match kind {
+                    FaultKind::DegradeStart { factor } => {
+                        replicas[ri].slowdown = factor;
+                    }
+                    FaultKind::DegradeEnd => {
+                        replicas[ri].slowdown = 1.0;
+                    }
+                    FaultKind::Recover => {
+                        upcoming_recovers[ri] -= 1;
+                        if !replicas[ri].failed {
+                            continue;
+                        }
+                        downtime_s += now - replicas[ri].failed_at;
+                        replicas[ri].failed = false;
+                        // Re-load the lost models through the normal
+                        // cold-start path, in eviction order. A model whose
+                        // weights no longer fit (a co-tenant loaded into the
+                        // freed space meanwhile) is rejected loudly.
+                        let lost = std::mem::take(&mut replicas[ri].lost);
+                        for m in lost {
+                            let need = config.models[m].weight_bytes;
+                            if replicas[ri].used_bytes + need > replicas[ri].mem_bytes {
+                                placement.record(now, PlacementEventKind::Rejected, ri, m);
+                                continue;
+                            }
+                            replicas[ri].used_bytes += need;
+                            let footprint =
+                                if recovery_bytes > 0 { recovery_bytes } else { need };
+                            let ready_at = now + replicas[ri].software.coldstart_s(footprint);
+                            let hi =
+                                replicas[ri].host_index(m).expect("lost model keeps its lane");
+                            {
+                                let h = &mut replicas[ri].hosted[hi];
+                                h.state = HostState::Loading;
+                                h.ready_at = ready_at;
+                            }
+                            placement.record(now, PlacementEventKind::LoadRequested, ri, m);
+                            push(
+                                &mut heap,
+                                ready_at,
+                                Event::ModelReady { replica: ri, model: m as u32 },
+                                &mut seq,
+                            );
+                        }
+                    }
+                    FaultKind::Crash => {
+                        if replicas[ri].failed {
+                            continue; // already down
+                        }
+                        replicas[ri].failed = true;
+                        replicas[ri].failed_at = now;
+                        replicas[ri].slowdown = 1.0; // the process restarts healthy
+                        // Force-evict every lane: free weights, kill the
+                        // backlog (queue order, then in-flight dispatch
+                        // order), leave the routable set.
+                        let mut killed: Vec<(u32, usize)> = Vec::new();
+                        for hi in 0..replicas[ri].hosted.len() {
+                            let m = replicas[ri].hosted[hi].model;
+                            let was = replicas[ri].hosted[hi].state;
+                            let drained = replicas[ri].hosted[hi].batcher.take_queue();
+                            let inflight = std::mem::take(&mut replicas[ri].hosted[hi].in_flight);
+                            outstanding[m][ri] -= drained.len() + inflight.len();
+                            for q in &drained {
+                                killed.push((q.id as u32, m));
+                            }
+                            for &(slot, _, _) in &inflight {
+                                killed.push((slot, m));
+                            }
+                            {
+                                let h = &mut replicas[ri].hosted[hi];
+                                h.queued = 0;
+                                h.busy = false;
+                                h.epoch += 1; // in-heap completions go stale
+                                h.recent.clear();
+                                h.state = HostState::Evicted;
+                            }
+                            if was != HostState::Evicted {
+                                replicas[ri].used_bytes = replicas[ri]
+                                    .used_bytes
+                                    .saturating_sub(config.models[m].weight_bytes);
+                                replicas[ri].lost.push(m);
+                                remove_routable(&mut routable[m], ri);
+                                placement.record(now, PlacementEventKind::Evicted, ri, m);
+                            }
+                        }
+                        for (slot, m) in killed {
+                            // Retry or die.
+                            let mut terminal = Some(DropReason::ReplicaFailed);
+                            if let Some(pol) = &config.retry {
+                                let made = attempts[slot as usize];
+                                if made < pol.max_attempts {
+                                    let delay = pol.delay_for(made);
+                                    let deadline =
+                                        traces.get_mut(slot).arrival_s + pol.deadline_s;
+                                    if now + delay <= deadline {
+                                        attempts[slot as usize] = made + 1;
+                                        push(
+                                            &mut heap,
+                                            now + delay,
+                                            Event::Retry { slot, model: m as u32 },
+                                            &mut seq,
+                                        );
+                                        terminal = None;
+                                    } else {
+                                        terminal = Some(DropReason::TimedOut);
+                                    }
+                                }
+                            }
+                            if let Some(reason) = terminal {
+                                drop_slot(
+                                    slot,
+                                    m,
+                                    reason,
+                                    Some(&mut replicas[ri].metrics),
+                                    &mut traces,
+                                    &mut model_metrics,
+                                    &mut classes,
+                                    &mut collector,
+                                );
+                            }
+                        }
+                        // Holds for models this crash left hostless die now
+                        // unless capacity is on the way (a loading co-host
+                        // or this replica's own scheduled recovery).
+                        for m in 0..n_models {
+                            if routable[m].is_empty()
+                                && !held[m].is_empty()
+                                && !capacity_pending_for(m, &replicas, &upcoming_recovers)
+                            {
+                                for (slot, _) in held[m].drain_all() {
+                                    drop_slot(
+                                        slot,
+                                        m,
+                                        DropReason::ReplicaFailed,
+                                        None,
+                                        &mut traces,
+                                        &mut model_metrics,
+                                        &mut classes,
+                                        &mut collector,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Event::Retry { slot, model } => {
+                let m = model as usize;
+                // A retried attempt re-enters below admission (it was
+                // admitted at first issue); its backoff gap lands in
+                // `Stage::Batching` via the staging charge, so retried e2e
+                // latency keeps the original arrival.
+                if routable[m].is_empty() {
+                    if capacity_pending_for(m, &replicas, &upcoming_recovers) {
+                        held[m].push_fifo(slot);
+                    } else {
+                        drop_slot(
+                            slot,
+                            m,
+                            DropReason::RejectedPlacement,
+                            None,
+                            &mut traces,
+                            &mut model_metrics,
+                            &mut classes,
+                            &mut collector,
+                        );
+                    }
+                    continue;
+                }
+                route_and_stage(
+                    slot,
+                    m,
+                    now,
+                    config,
+                    &mut router,
+                    &routable,
+                    &mut outstanding,
+                    &mut replicas,
+                    &mut traces,
+                    &mut model_metrics,
+                    &mut classes,
+                    &mut collector,
+                    &mut heap,
+                    &mut seq,
+                );
+            }
         }
     }
 
@@ -1116,6 +1428,13 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             );
         }
     }
+    // Replicas still down when the clock runs out owe the rest of the
+    // horizon to the downtime ledger.
+    for r in &replicas {
+        if r.failed {
+            downtime_s += config.duration_s - r.failed_at;
+        }
+    }
     MultiModelResult {
         collector,
         models: model_metrics,
@@ -1124,6 +1443,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
         classes,
         dropped,
         issued,
+        downtime_s,
         events,
     }
 }
@@ -1160,6 +1480,8 @@ mod tests {
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
             admission: None,
+            faults: None,
+            retry: None,
             seed: 9,
         }
     }
@@ -1560,6 +1882,53 @@ mod tests {
             )
         };
         let _ = run(&cfg);
+    }
+
+    #[test]
+    fn replica_crash_kills_backlog_and_recovery_reloads_the_model() {
+        use crate::serving::faults::FaultOp;
+        // Both replicas are overloaded (200 rps of 20 ms work), so replica
+        // 1 deterministically holds a deep backlog when it crashes at t=5.
+        // Without a retry policy that backlog dies as ReplicaFailed; with
+        // one it re-routes to replica 0 and completes (queues are
+        // effectively unbounded here, and the engine drains past the
+        // horizon). Recovery at t=8 re-loads the lost model through the
+        // cold-start path: exactly 3 s of downtime.
+        let mut cfg = base(
+            vec![model("a", 20.0, 200.0)],
+            vec![shared_replica(vec![0]), shared_replica(vec![0])],
+        );
+        cfg.duration_s = 30.0;
+        cfg.faults = Some(FaultPlan::scripted(vec![
+            FaultOp::Crash { replica: 1, at_s: 5.0 },
+            FaultOp::Recover { replica: 1, at_s: 8.0 },
+        ]));
+        let r = run(&cfg);
+        assert_conserved(&r);
+        assert!(
+            r.collector.dropped_by(DropReason::ReplicaFailed) > 0,
+            "the crashed replica's backlog must die without a retry policy"
+        );
+        assert!((r.downtime_s - 3.0).abs() < 1e-9, "downtime was {}", r.downtime_s);
+        assert_eq!(r.placement.count(PlacementEventKind::Evicted), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::LoadRequested), 1);
+        assert_eq!(r.placement.count(PlacementEventKind::Ready), 1);
+        // Determinism across the fault path.
+        let r2 = run(&cfg);
+        assert_eq!(r.events, r2.events);
+        assert_eq!(r.collector.fingerprint(), r2.collector.fingerprint());
+        // Retry turns those deaths into completions.
+        let mut retry_cfg = cfg.clone();
+        retry_cfg.retry = Some(RetryPolicy::new(4, 60.0, 0.05));
+        let rr = run(&retry_cfg);
+        assert_conserved(&rr);
+        assert_eq!(rr.collector.dropped_by(DropReason::ReplicaFailed), 0);
+        assert!(
+            rr.collector.completed > r.collector.completed,
+            "retry must strictly beat fail-and-drop here: {} vs {}",
+            rr.collector.completed,
+            r.collector.completed
+        );
     }
 
     #[test]

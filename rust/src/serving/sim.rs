@@ -95,6 +95,8 @@ pub fn run(config: &SimConfig) -> SimResult {
         path: config.path,
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: config.seed,
     };
     let mut result = cluster::run(&cluster_cfg);

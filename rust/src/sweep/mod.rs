@@ -59,9 +59,14 @@ pub fn default_threads() -> usize {
 /// therefore cannot leak into the output — `map_indexed(items, 8, f)` is
 /// element-for-element `items.iter().enumerate().map(f)`.
 ///
-/// A panic in any cell is surfaced: remaining cells still drain (no
-/// deadlock — the queue is just a counter), and the first panic payload is
-/// re-raised on the calling thread once every worker has parked.
+/// A failing cell is retried in place, up to [`CELL_ATTEMPTS`] total
+/// attempts — cells are deterministic functions of their derived seed, so
+/// a retry of a *transient* failure (a worker lost to the environment) is
+/// bit-identical to the attempt that died, and the sweep's output is
+/// unchanged. A cell that keeps failing is surfaced: remaining cells
+/// still drain (no deadlock — the queue is just a counter), and the
+/// first panic payload is re-raised on the calling thread once every
+/// worker has parked.
 pub fn map_indexed<T, R, F>(items: &[T], threads: usize, work: F) -> Vec<R>
 where
     T: Sync,
@@ -75,7 +80,7 @@ where
     let threads = threads.clamp(1, n);
     if threads == 1 {
         // Serial fast path: same closure, same order, no pool.
-        return items.iter().enumerate().map(|(i, t)| work(i, t)).collect();
+        return items.iter().enumerate().map(|(i, t)| run_cell(&work, i, t)).collect();
     }
     let cursor = AtomicUsize::new(0);
     let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
@@ -90,7 +95,7 @@ where
                     if i >= n {
                         break;
                     }
-                    local.push((i, work(i, &items[i])));
+                    local.push((i, run_cell(work, i, &items[i])));
                 }
                 local
             }));
@@ -117,6 +122,29 @@ where
         .into_iter()
         .map(|r| r.expect("work queue covered every cell exactly once"))
         .collect()
+}
+
+/// Total attempts a cell gets before its failure aborts the sweep: two
+/// caught-and-retried, then a final unguarded run whose panic propagates
+/// with the original payload.
+const CELL_ATTEMPTS: usize = 3;
+
+/// Execute one cell with in-place retries. Per-cell seeding makes every
+/// attempt bit-identical, so retrying a transiently failed cell cannot
+/// change the sweep's output — only rescue it.
+fn run_cell<T, R, F>(work: &F, i: usize, item: &T) -> R
+where
+    F: Fn(usize, &T) -> R,
+{
+    for attempt in 1..CELL_ATTEMPTS {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(i, item))) {
+            Ok(r) => return r,
+            Err(_) => {
+                eprintln!("sweep: cell {i} failed (attempt {attempt}/{CELL_ATTEMPTS}); retrying")
+            }
+        }
+    }
+    work(i, item)
 }
 
 /// Factory for one cell's configuration; receives the cell's derived seed.
@@ -316,6 +344,8 @@ mod tests {
                 path: RequestPath::local(Processors::none()),
                 metrics: MetricsMode::Exact,
                 admission: None,
+                faults: None,
+                retry: None,
                 seed,
             });
         }
@@ -393,6 +423,8 @@ mod tests {
                     path: RequestPath::local(Processors::none()),
                     metrics: MetricsMode::Sketch { alpha: 0.01 },
                     admission: None,
+                    faults: None,
+                    retry: None,
                     seed,
                 });
             }
@@ -442,6 +474,8 @@ mod tests {
                         ],
                         shed_depth: vec![2000, 500],
                     }),
+                    faults: None,
+                    retry: None,
                     seed,
                 });
             }
@@ -462,6 +496,35 @@ mod tests {
         assert_eq!(a_classes[0].collector.dropped, 0, "gold rides free in this grid");
         let issued: u64 = a_classes.iter().map(|c| c.issued).sum();
         assert_eq!(issued, a_all.completed + a_all.dropped, "classes partition the sweep");
+    }
+
+    #[test]
+    fn transient_cell_failure_is_retried_in_place() {
+        use std::sync::atomic::AtomicUsize;
+        // Cell 3 panics on its first two attempts, then succeeds; the
+        // sweep result is exactly what an all-healthy run produces.
+        let failures = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..8).collect();
+        let out = map_indexed(&items, 4, |i, &v| {
+            if i == 3 && failures.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("simulated transient worker loss");
+            }
+            v * 10
+        });
+        assert_eq!(out, (0..8).map(|v| v * 10).collect::<Vec<_>>());
+        assert_eq!(failures.load(Ordering::SeqCst), 3, "two failures + one success");
+    }
+
+    #[test]
+    #[should_panic(expected = "persistent cell failure")]
+    fn persistent_cell_failure_still_aborts_the_sweep() {
+        let items: Vec<usize> = (0..4).collect();
+        let _ = map_indexed(&items, 2, |i, &v| {
+            if i == 1 {
+                panic!("persistent cell failure");
+            }
+            v
+        });
     }
 
     #[test]

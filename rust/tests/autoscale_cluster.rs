@@ -42,6 +42,8 @@ fn spike_config(software: &'static Software, autoscale: Option<AutoscaleConfig>)
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 909,
     }
 }

@@ -1,0 +1,414 @@
+//! Fault-injection acceptance suite: the fault tier must be invisible
+//! when disabled (bit-for-bit against the pre-fault engine, in both DES
+//! engines), deterministic when enabled (crash-heavy sweeps bit-identical
+//! at 1/2/8 threads), exactly conserved under retries (every stranded
+//! request ends as a completion or a reasoned drop), and compatible with
+//! the bounded-memory metrics backend (sketch percentiles track exact
+//! within alpha across mid-run crashes).
+//!
+//! Complements `tests/qos.rs` (ingress tier) and the unit suites in
+//! `serving::faults` / `serving::cluster` / `serving::multimodel`.
+
+use inferbench::metrics::{DropReason, MetricsMode};
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::cluster::{self, ClusterConfig, ReplicaConfig};
+use inferbench::serving::multimodel::{
+    self, ContentionModel, ModelSpec, MultiModelConfig, MultiReplicaConfig,
+};
+use inferbench::serving::{
+    backends, DegradeProfile, FaultOp, FaultPlan, FaultProfile, Policy, RetryPolicy,
+    RouterPolicy, ServiceModel,
+};
+use inferbench::sweep::SweepPlan;
+use inferbench::workload::{Pattern, Workload};
+
+fn replica(per_req_ms: f64, policy: Policy) -> ReplicaConfig {
+    ReplicaConfig {
+        software: &backends::TRIS,
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+            utilization: 0.6,
+        },
+        policy,
+        max_queue: 200_000,
+    }
+}
+
+fn cluster_config(rate: f64, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        workload: Workload::Stream { pattern: Pattern::Poisson { rate }, seed },
+        duration_s: 12.0,
+        replicas: vec![
+            replica(3.0, Policy::Dynamic { max_size: 8, max_wait_s: 0.003 }),
+            replica(5.0, Policy::Dynamic { max_size: 8, max_wait_s: 0.003 }),
+        ],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::image()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: None,
+        retry: None,
+        seed,
+    }
+}
+
+fn mm_model(name: &str, per_req_ms: f64, rate: f64) -> ModelSpec {
+    ModelSpec {
+        name: name.into(),
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3)],
+            utilization: 0.6,
+        },
+        policy: Policy::Single,
+        weight_bytes: 400_000_000,
+        max_queue: 200_000,
+        pattern: Pattern::Poisson { rate },
+    }
+}
+
+fn mm_config(seed: u64) -> MultiModelConfig {
+    MultiModelConfig {
+        models: vec![mm_model("a", 5.0, 120.0), mm_model("b", 3.0, 90.0)],
+        replicas: (0..2)
+            .map(|_| MultiReplicaConfig {
+                software: &backends::TRIS,
+                mem_bytes: 2_000_000_000,
+                hosted: vec![0, 1],
+            })
+            .collect(),
+        router: RouterPolicy::LeastOutstanding,
+        duration_s: 12.0,
+        placement_ops: vec![],
+        contention: ContentionModel::default(),
+        path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: None,
+        retry: None,
+        seed,
+    }
+}
+
+/// A heavy random plan: every replica crashes several times over the
+/// 12 s horizon, with straggler windows layered on top.
+fn heavy_plan(seed: u64) -> FaultPlan {
+    FaultPlan::random(
+        FaultProfile {
+            mttf_s: 3.0,
+            mttr_s: 1.0,
+            degrade: Some(DegradeProfile { mtbd_s: 5.0, duration_s: 1.0, factor: 2.0 }),
+        },
+        seed,
+    )
+}
+
+/// Crash-heavy sweep grid — every router, random and scripted plans,
+/// retry on/off/hedged — must be bit-identical at 1, 2, and 8 threads.
+/// Fault injection introduces new event kinds, RNG streams, and retry
+/// bookkeeping; none of it may be thread-sensitive.
+#[test]
+fn crash_heavy_sweep_bit_identical_at_1_2_8_threads() {
+    let mut plan = SweepPlan::new(777);
+    plan.push("rr-hedged", |seed| {
+        let mut cfg = cluster_config(600.0, seed);
+        cfg.router = RouterPolicy::RoundRobin;
+        cfg.faults = Some(heavy_plan(1));
+        cfg.retry = Some(RetryPolicy::new(4, 5.0, 0.05).with_hedge());
+        cfg
+    });
+    plan.push("lo-retry", |seed| {
+        let mut cfg = cluster_config(600.0, seed);
+        cfg.faults = Some(heavy_plan(2));
+        cfg.retry = Some(RetryPolicy::new(4, 5.0, 0.05));
+        cfg
+    });
+    plan.push("p2c-scripted", |seed| {
+        let mut cfg = cluster_config(600.0, seed);
+        cfg.router = RouterPolicy::PowerOfTwoChoices { seed: 17 };
+        cfg.faults = Some(FaultPlan::scripted(vec![
+            FaultOp::Crash { replica: 0, at_s: 2.0 },
+            FaultOp::Recover { replica: 0, at_s: 3.5 },
+            FaultOp::Crash { replica: 1, at_s: 4.0 },
+            FaultOp::Recover { replica: 1, at_s: 5.0 },
+            FaultOp::Degrade { replica: 0, at_s: 6.0, until_s: 9.0, factor: 3.0 },
+        ]));
+        cfg.retry = Some(RetryPolicy::new(3, 4.0, 0.02));
+        cfg
+    });
+    plan.push("ewma-faildrop", |seed| {
+        let mut cfg = cluster_config(600.0, seed);
+        cfg.router = RouterPolicy::LatencyEwma { alpha: 0.3, stale_s: 0.25 };
+        cfg.faults = Some(heavy_plan(3));
+        cfg
+    });
+
+    let serial = plan.run(1);
+    // The grid is genuinely crash-heavy: downtime lands in every cell.
+    for cell in &serial.cells {
+        assert!(cell.result.downtime_s > 0.0, "{}: plan injected nothing", cell.label);
+        assert_eq!(
+            cell.result.collector.completed + cell.result.dropped,
+            cell.result.issued,
+            "{}: conservation",
+            cell.label
+        );
+    }
+    assert!(
+        serial.cells.iter().any(|c| c.result.dropped > 0),
+        "a crash-heavy grid should drop somewhere"
+    );
+    for threads in [2, 8] {
+        let parallel = plan.run(threads);
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(
+                a.result.collector.fingerprint(),
+                b.result.collector.fingerprint(),
+                "{}: fingerprint diverged at {threads} threads",
+                a.label
+            );
+            assert_eq!(a.result.events, b.result.events, "{}", a.label);
+            assert_eq!(a.result.issued, b.result.issued, "{}", a.label);
+            assert_eq!(
+                a.result.downtime_s.to_bits(),
+                b.result.downtime_s.to_bits(),
+                "{}",
+                a.label
+            );
+            assert_eq!(
+                a.result.collector.drop_breakdown(),
+                b.result.collector.drop_breakdown(),
+                "{}",
+                a.label
+            );
+        }
+    }
+}
+
+/// `faults: None`, `Some(FaultPlan::none())`, and a retry policy with no
+/// faults to act on must all reproduce the pre-fault engine exactly:
+/// same fingerprint, same event count, same per-replica batch sequences,
+/// same percentile bits. The fault tier costs nothing when it has
+/// nothing to do — in either engine.
+#[test]
+fn empty_fault_plan_is_bit_identical_to_pre_fault_cluster_engine() {
+    let baseline = cluster::run(&cluster_config(240.0, 909));
+
+    let mut none_plan = cluster_config(240.0, 909);
+    none_plan.faults = Some(FaultPlan::none());
+    let mut idle_retry = cluster_config(240.0, 909);
+    idle_retry.retry = Some(RetryPolicy::new(4, 5.0, 0.05).with_hedge());
+
+    for (label, cfg) in [("FaultPlan::none()", none_plan), ("idle retry", idle_retry)] {
+        let run = cluster::run(&cfg);
+        assert_eq!(
+            run.collector.fingerprint(),
+            baseline.collector.fingerprint(),
+            "{label}: fingerprint must match the pre-fault engine"
+        );
+        assert_eq!(run.events, baseline.events, "{label}");
+        assert_eq!(run.issued, baseline.issued, "{label}");
+        assert_eq!(run.dropped, baseline.dropped, "{label}");
+        assert_eq!(run.downtime_s.to_bits(), 0f64.to_bits(), "{label}: no downtime");
+        assert_eq!(run.replicas.len(), baseline.replicas.len(), "{label}");
+        for (i, (a, b)) in run.replicas.iter().zip(&baseline.replicas).enumerate() {
+            assert_eq!(
+                a.batch_sizes(),
+                b.batch_sizes(),
+                "{label}: replica {i} batch sequence diverged"
+            );
+        }
+        for q in [50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                run.collector.e2e.percentile(q).to_bits(),
+                baseline.collector.e2e.percentile(q).to_bits(),
+                "{label}: p{q} bits diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_pre_fault_multimodel_engine() {
+    let baseline = multimodel::run(&mm_config(313));
+
+    let mut none_plan = mm_config(313);
+    none_plan.faults = Some(FaultPlan::none());
+    let mut idle_retry = mm_config(313);
+    idle_retry.retry = Some(RetryPolicy::new(4, 5.0, 0.05));
+
+    for (label, cfg) in [("FaultPlan::none()", none_plan), ("idle retry", idle_retry)] {
+        let run = multimodel::run(&cfg);
+        assert_eq!(
+            run.collector.fingerprint(),
+            baseline.collector.fingerprint(),
+            "{label}: fingerprint must match the pre-fault engine"
+        );
+        assert_eq!(run.events, baseline.events, "{label}");
+        assert_eq!(run.issued, baseline.issued, "{label}");
+        assert_eq!(run.downtime_s.to_bits(), 0f64.to_bits(), "{label}");
+        for (m, bm) in run.models.iter().zip(&baseline.models) {
+            assert_eq!(m.issued, bm.issued, "{label}/{}", m.name);
+            assert_eq!(
+                m.collector.fingerprint(),
+                bm.collector.fingerprint(),
+                "{label}/{}",
+                m.name
+            );
+            for q in [50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    m.collector.e2e.percentile(q).to_bits(),
+                    bm.collector.e2e.percentile(q).to_bits(),
+                    "{label}/{}: p{q} bits diverged",
+                    m.name
+                );
+            }
+        }
+    }
+}
+
+/// A fleet far past saturation: two 20 ms single-batch replicas offered
+/// 300 rps, so every crash finds a deep deterministic backlog to strand.
+fn overloaded_config(seed: u64) -> ClusterConfig {
+    let mut cfg = cluster_config(300.0, seed);
+    cfg.replicas = vec![replica(20.0, Policy::Single), replica(20.0, Policy::Single)];
+    cfg
+}
+
+/// Overloaded fleet, one replica crashed with a retry policy whose
+/// backoff cannot meet its deadline: every stranded request times out,
+/// none is silently lost, and the conservation ledger balances exactly.
+#[test]
+fn conservation_holds_when_retries_exceed_the_deadline() {
+    let mut cfg = overloaded_config(41);
+    cfg.duration_s = 8.0;
+    cfg.faults = Some(FaultPlan::scripted(vec![
+        FaultOp::Crash { replica: 1, at_s: 2.0 },
+        FaultOp::Recover { replica: 1, at_s: 4.0 },
+    ]));
+    // First retry would fire 1 s after the crash — past every stranded
+    // request's 0.2 s deadline (its backlog is seconds old by then), so
+    // the whole backlog times out.
+    cfg.retry = Some(RetryPolicy::new(4, 0.2, 1.0));
+    let r = cluster::run(&cfg);
+    assert_eq!(r.collector.completed + r.dropped, r.issued, "conservation");
+    assert!(r.collector.drops_conserved());
+    assert!(
+        r.collector.dropped_by(DropReason::TimedOut) > 0,
+        "an overloaded replica must strand a backlog at the crash"
+    );
+    assert_eq!(
+        r.collector.dropped_by(DropReason::ReplicaFailed),
+        0,
+        "with attempts to spare, the deadline is the only terminal reason"
+    );
+    assert!((r.downtime_s - 2.0).abs() < 1e-9, "downtime {}", r.downtime_s);
+}
+
+/// Both replicas die in sequence under a one-retry budget: requests
+/// re-issued off the first crash are still queued on the survivor when
+/// the second crash lands (the survivor drains ~30 rps against a
+/// hundreds-deep backlog), so they exhaust their budget and fall out as
+/// `replica-failed`; arrivals after the fleet is gone are rejected at
+/// placement. The ledger still balances exactly.
+#[test]
+fn conservation_holds_when_retry_attempts_are_exhausted() {
+    let mut cfg = overloaded_config(42);
+    cfg.duration_s = 6.0;
+    cfg.faults = Some(FaultPlan::scripted(vec![
+        FaultOp::Crash { replica: 0, at_s: 2.0 },
+        FaultOp::Crash { replica: 1, at_s: 2.5 },
+    ]));
+    cfg.retry = Some(RetryPolicy::new(1, 60.0, 0.05));
+    let r = cluster::run(&cfg);
+    assert_eq!(r.collector.completed + r.dropped, r.issued, "conservation");
+    assert!(r.collector.drops_conserved());
+    assert!(
+        r.collector.dropped_by(DropReason::ReplicaFailed) > 0,
+        "requests retried off crash 1 and killed by crash 2 must exhaust their budget"
+    );
+    assert!(
+        r.collector.dropped_by(DropReason::RejectedPlacement) > 0,
+        "arrivals after the whole fleet is down have nowhere to go"
+    );
+    // Both replicas stay down through the end of the run.
+    assert!(
+        (r.downtime_s - ((6.0 - 2.0) + (6.0 - 2.5))).abs() < 1e-9,
+        "downtime {}",
+        r.downtime_s
+    );
+}
+
+/// The multimodel engine honors the same deadline semantics: a crash
+/// strands the crashed replica's backlog, the policy's backoff misses
+/// the deadline, and the per-model ledgers still balance.
+#[test]
+fn multimodel_conservation_holds_when_retries_exceed_the_deadline() {
+    let mut cfg = mm_config(55);
+    cfg.models = vec![mm_model("a", 20.0, 200.0)];
+    cfg.replicas = (0..2)
+        .map(|_| MultiReplicaConfig {
+            software: &backends::TRIS,
+            mem_bytes: 2_000_000_000,
+            hosted: vec![0],
+        })
+        .collect();
+    cfg.duration_s = 10.0;
+    cfg.faults = Some(FaultPlan::scripted(vec![
+        FaultOp::Crash { replica: 1, at_s: 3.0 },
+        FaultOp::Recover { replica: 1, at_s: 6.0 },
+    ]));
+    cfg.retry = Some(RetryPolicy::new(4, 0.1, 1.0));
+    let r = multimodel::run(&cfg);
+    assert_eq!(r.collector.completed + r.dropped, r.issued, "conservation");
+    for m in &r.models {
+        assert!(m.conserved(), "{}", m.name);
+    }
+    assert!(r.collector.dropped_by(DropReason::TimedOut) > 0);
+    assert_eq!(r.collector.dropped_by(DropReason::ReplicaFailed), 0);
+}
+
+/// Property: with a crash + recovery mid-run (retries inflating the
+/// latency tail), the sketch metrics backend keeps every count and the
+/// full drop-reason ledger exact, and tracks every percentile within the
+/// configured relative error — across seeds and alphas.
+#[test]
+fn sketch_percentiles_track_exact_within_alpha_under_mid_run_crashes() {
+    let faulted = |metrics: MetricsMode, seed: u64| {
+        let mut cfg = cluster_config(400.0, seed);
+        cfg.metrics = metrics;
+        cfg.faults = Some(FaultPlan::scripted(vec![
+            FaultOp::Crash { replica: 1, at_s: 4.0 },
+            FaultOp::Recover { replica: 1, at_s: 7.0 },
+        ]));
+        cfg.retry = Some(RetryPolicy::new(4, 10.0, 0.05));
+        cfg
+    };
+    for seed in [1u64, 58, 2026] {
+        let exact = cluster::run(&faulted(MetricsMode::Exact, seed));
+        assert!(exact.downtime_s > 0.0, "seed {seed}: the crash must land");
+        for alpha in [0.01, 0.05] {
+            let sketch = cluster::run(&faulted(MetricsMode::Sketch { alpha }, seed));
+            // The simulation itself is mode-independent: counts, drop
+            // reasons, and the fault schedule match exactly.
+            assert_eq!(exact.issued, sketch.issued, "seed {seed}");
+            assert_eq!(exact.collector.completed, sketch.collector.completed);
+            assert_eq!(
+                exact.collector.drop_breakdown(),
+                sketch.collector.drop_breakdown(),
+                "seed {seed}"
+            );
+            assert_eq!(exact.downtime_s.to_bits(), sketch.downtime_s.to_bits());
+            for q in [50.0, 90.0, 99.0] {
+                let (ev, sv) =
+                    (exact.collector.e2e.percentile(q), sketch.collector.e2e.percentile(q));
+                assert!(
+                    (sv / ev - 1.0).abs() <= alpha * 2.0 + 1e-9,
+                    "seed {seed} p{q}: exact {ev} vs sketch {sv} (alpha {alpha})"
+                );
+            }
+        }
+    }
+}

@@ -629,6 +629,8 @@ fn golden_fixed_fleet_every_router() {
             path: RequestPath::local(Processors::image()),
             metrics: MetricsMode::Exact,
             admission: None,
+            faults: None,
+            retry: None,
             seed: 31,
         };
         assert_engines_match(&cfg, router.label());
@@ -666,6 +668,8 @@ fn golden_autoscale_spike() {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 77,
     };
     assert_engines_match(&cfg, "autoscale-spike");
@@ -686,6 +690,8 @@ fn golden_closed_loop_with_rejections() {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 13,
     };
     let golden = run_reference(&cfg);
@@ -705,6 +711,8 @@ fn golden_fixed_batch_with_image_pipeline() {
         path: RequestPath::local(Processors::image()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 9,
     };
     assert_engines_match(&cfg, "fixed-batch-image");

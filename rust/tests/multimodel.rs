@@ -42,6 +42,8 @@ fn base(models: Vec<ModelSpec>, replicas: Vec<MultiReplicaConfig>) -> MultiModel
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 20260727,
     }
 }
@@ -80,6 +82,8 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
         // Overcommitted colocation on one replica.
         MultiModelConfig {
             admission: None,
+            faults: None,
+            retry: None,
             seed,
             ..base(
                 vec![model("a", 5.0, poisson(120.0)), model("b", 5.0, poisson(120.0))],
@@ -89,6 +93,8 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
         // The same pair dedicated.
         MultiModelConfig {
             admission: None,
+            faults: None,
+            retry: None,
             seed,
             ..base(
                 vec![model("a", 5.0, poisson(120.0)), model("b", 5.0, poisson(120.0))],
@@ -97,6 +103,8 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
         },
         MultiModelConfig {
             admission: None,
+            faults: None,
+            retry: None,
             seed,
             ..base(
                 vec![tight_a, tight_b],
@@ -105,6 +113,8 @@ fn scenario_configs(seed: u64) -> Vec<MultiModelConfig> {
         },
         MultiModelConfig {
             admission: None,
+            faults: None,
+            retry: None,
             seed,
             duration_s: 40.0,
             placement_ops: vec![

@@ -62,6 +62,8 @@ fn scenario_plan() -> SweepPlan {
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
             admission: None,
+            faults: None,
+            retry: None,
             seed,
         });
     }
@@ -95,6 +97,8 @@ fn scenario_plan() -> SweepPlan {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed,
     });
     // Closed loop against a tiny queue: constant rejections + re-issues.
@@ -111,6 +115,8 @@ fn scenario_plan() -> SweepPlan {
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
             admission: None,
+            faults: None,
+            retry: None,
             seed,
         }
     });
@@ -125,6 +131,8 @@ fn scenario_plan() -> SweepPlan {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed,
     });
     plan
@@ -243,6 +251,8 @@ fn panic_in_one_cell_surfaces_without_deadlocking() {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed,
     };
     for i in 0..6 {

@@ -43,6 +43,8 @@ fn base_config(workload: Workload, seed: u64) -> ClusterConfig {
         path: RequestPath::local(Processors::image()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed,
     }
 }

@@ -45,6 +45,8 @@ fn hetero_cluster(router: RouterPolicy, duration: f64) -> ClusterConfig {
         path: RequestPath::local(Processors::none()),
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: 7,
     }
 }
@@ -76,6 +78,8 @@ fn n1_cluster_matches_single_server_sim() {
         path: sim_cfg.path,
         metrics: MetricsMode::Exact,
         admission: None,
+        faults: None,
+        retry: None,
         seed: sim_cfg.seed,
     };
     let s = run_sim(&sim_cfg);
