@@ -21,6 +21,12 @@
 //! reporting cells/sec and the parallel speedup — with a bit-identity
 //! assertion between the two runs (the engine's core guarantee).
 //!
+//! Distributed rows: the same-shaped grid sharded across 2 followers
+//! through each wire codec (`coordinator::distributed`), reporting
+//! sharded cells/sec plus bytes-on-wire per cell for the binary and
+//! JSON-lines codecs — the satellite metric for PERF.md §Distributed
+//! sweeps. Bit-identity against the serial run is asserted here too.
+//!
 //! Streaming scale row: the `streaming-sketch` scenario runs the
 //! fixed-fleet config with a lazily generated workload and sketch-mode
 //! metrics — no arrival vector, no per-sample latency tables — at 10⁸
@@ -37,6 +43,10 @@
 //!
 //! Run: `cargo bench --bench l4_des_throughput [-- --smoke]`
 
+use inferbench::codec::CodecKind;
+use inferbench::coordinator::distributed::run_sharded;
+use inferbench::coordinator::job::{self, JobKind, JobSpec};
+use inferbench::coordinator::DistConfig;
 use inferbench::metrics::MetricsMode;
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
@@ -291,6 +301,16 @@ fn sweep_grid(fleets: &[usize], duration_s: f64) -> SweepPlan {
     plan
 }
 
+/// Wire accounting attached to a sharded-sweep row.
+struct WireInfo {
+    codec: &'static str,
+    followers: usize,
+    bytes_to_leader: u64,
+    bytes_to_followers: u64,
+    /// First-round cells per follower — the shard-balance view.
+    shard_cells: Vec<usize>,
+}
+
 struct SweepRow {
     grid: String,
     cells: usize,
@@ -298,6 +318,9 @@ struct SweepRow {
     serial_wall_s: f64,
     parallel_wall_s: f64,
     events: u64,
+    /// `Some` for distributed rows (cells crossed a codec on the way
+    /// back); `None` for the in-process worker-pool rows.
+    wire: Option<WireInfo>,
 }
 
 impl SweepRow {
@@ -345,6 +368,63 @@ fn measure_sweep(
         serial_wall_s,
         parallel_wall_s,
         events: serial.total_events(),
+        wire: None,
+    }
+}
+
+/// The distributed grid as a `task: sweep` submission — the sharded path
+/// needs the self-describing grid doc, so this goes through the job
+/// layer rather than building a `SweepPlan` directly.
+fn dist_grid_kind(fleets: &[usize], duration_s: f64) -> JobKind {
+    let reps = fleets.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(", ");
+    let yaml = format!(
+        "name: dist-bench\ntask: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+         routers: [round-robin, least-outstanding, power-of-two, latency-ewma]\n\
+         replicas: [{reps}]\nworkload:\n  rate_per_replica: 150.0\n  duration_s: {duration_s}\n\
+         batching:\n  max_size: 16\n  max_wait_ms: 2\n"
+    );
+    JobSpec::parse_yaml(&yaml).expect("dist grid parses").kind
+}
+
+/// Shard the grid across 2 followers over `codec`, assert bit-identity
+/// against the serial baseline, and return a sweep row carrying the wire
+/// accounting (bytes/cell is the codec-efficiency metric).
+fn measure_distributed(
+    kind: &JobKind,
+    seed: u64,
+    codec: CodecKind,
+    serial: &inferbench::sweep::SweepOutcome,
+    serial_wall_s: f64,
+) -> SweepRow {
+    const FOLLOWERS: usize = 2;
+    let threads = 4;
+    let t0 = Instant::now();
+    let dist = run_sharded(kind, seed, &DistConfig::uniform(FOLLOWERS, threads, codec))
+        .expect("sharded run succeeds");
+    let parallel_wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(serial.cells.len(), dist.outcome.cells.len());
+    for (a, b) in serial.cells.iter().zip(&dist.outcome.cells) {
+        assert_eq!(
+            a.result.collector.fingerprint(),
+            b.result.collector.fingerprint(),
+            "sharded/{}: output drift vs serial",
+            a.label
+        );
+    }
+    SweepRow {
+        grid: format!("sharded-{FOLLOWERS}-followers-{}", codec.name()),
+        cells: serial.cells.len(),
+        threads,
+        serial_wall_s,
+        parallel_wall_s,
+        events: serial.total_events(),
+        wire: Some(WireInfo {
+            codec: codec.name(),
+            followers: FOLLOWERS,
+            bytes_to_leader: dist.stats.bytes_to_leader,
+            bytes_to_followers: dist.stats.bytes_to_followers,
+            shard_cells: dist.stats.shard_cells.clone(),
+        }),
     }
 }
 
@@ -371,10 +451,10 @@ fn json_results(cells: &[Cell]) -> Vec<String> {
 fn json_sweeps(rows: &[SweepRow]) -> Vec<String> {
     rows.iter()
         .map(|s| {
-            format!(
+            let mut row = format!(
                 "    {{\"grid\": \"{}\", \"cells\": {}, \"threads\": {}, \"serial_wall_s\": {:.4}, \
                  \"parallel_wall_s\": {:.4}, \"cells_per_s_serial\": {:.2}, \
-                 \"cells_per_s_parallel\": {:.2}, \"speedup\": {:.2}, \"events\": {}}}",
+                 \"cells_per_s_parallel\": {:.2}, \"speedup\": {:.2}, \"events\": {}",
                 s.grid,
                 s.cells,
                 s.threads,
@@ -384,7 +464,26 @@ fn json_sweeps(rows: &[SweepRow]) -> Vec<String> {
                 s.cells_per_s_parallel(),
                 s.speedup(),
                 s.events
-            )
+            );
+            if let Some(w) = &s.wire {
+                row.push_str(&format!(
+                    ", \"codec\": \"{}\", \"followers\": {}, \"bytes_to_leader\": {}, \
+                     \"bytes_to_followers\": {}, \"bytes_per_cell\": {:.0}, \
+                     \"shard_cells\": [{}]",
+                    w.codec,
+                    w.followers,
+                    w.bytes_to_leader,
+                    w.bytes_to_followers,
+                    w.bytes_to_leader as f64 / s.cells.max(1) as f64,
+                    w.shard_cells
+                        .iter()
+                        .map(|c| c.to_string())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
+            row.push('}');
+            row
         })
         .collect()
 }
@@ -555,9 +654,46 @@ fn main() {
             sweeps.push(row);
         }
     }
+    // Distributed sweep: the same-shaped grid sharded across 2 followers
+    // through each wire codec, with bit-identity asserted against the
+    // serial run and bytes-on-wire per cell as the codec metric.
+    println!("\n=== Distributed sweep: sharded cells/sec + bytes on the wire ===\n");
+    let (dist_fleets, dist_dur): (&[usize], f64) =
+        if smoke { (&[1, 2], 4.0) } else { (&[1, 2, 4], 20.0) };
+    let dist_kind = dist_grid_kind(dist_fleets, dist_dur);
+    let dist_seed = 4242;
+    let (dist_plan, _) = job::build_sweep_plan(&dist_kind, dist_seed).expect("plan builds");
+    let t0 = Instant::now();
+    let dist_serial = dist_plan.run(1);
+    let dist_serial_wall_s = t0.elapsed().as_secs_f64();
+    for codec in [CodecKind::Binary, CodecKind::JsonLines] {
+        let row = measure_distributed(&dist_kind, dist_seed, codec, &dist_serial, dist_serial_wall_s);
+        let w = row.wire.as_ref().expect("distributed rows carry wire stats");
+        println!(
+            "sharded-{}   {} cells over {} followers (balance {:?}): {:.3}s \
+             ({:.2} cells/s, serial {:.2}), \
+             wire {} B/cell to leader ({} B total, {} B assignments)",
+            w.codec,
+            row.cells,
+            w.followers,
+            w.shard_cells,
+            row.parallel_wall_s,
+            row.cells_per_s_parallel(),
+            row.cells_per_s_serial(),
+            w.bytes_to_leader / row.cells.max(1) as u64,
+            w.bytes_to_leader,
+            w.bytes_to_followers
+        );
+        sweeps.push(row);
+    }
+    // The per-cell fingerprint asserts above are the verdict; this line
+    // exists so CI can grep a human-readable confirmation into the job
+    // summary (the bench aborts before printing it on any drift).
+    println!("sharded == serial: bit-identical fingerprints on every cell, both codecs");
+
     println!(
         "\nPASS: conservation + determinism on every scenario; sweep parallel == serial \
-         bit-for-bit; streaming scale row at flat RSS"
+         bit-for-bit (sharded runs included); streaming scale row at flat RSS"
     );
 
     if smoke {

@@ -1,0 +1,1320 @@
+//! Self-describing wire codec for distributed sweeps.
+//!
+//! The leader shards one `SweepPlan` across followers (see
+//! `coordinator::distributed`); everything that crosses the leader/follower
+//! boundary is a [`Frame`] serialized through a [`Codec`]. Two impls share
+//! the frame vocabulary:
+//!
+//! * [`JsonLinesCodec`] — one compact-JSON object per line. Every frame is
+//!   human-readable (`frame` key names its type), greppable, and diffable;
+//!   the debugging format.
+//! * [`BinaryCodec`] — `[magic][kind][len u32 LE][payload]` with raw
+//!   `f64::to_bits` floats and length-prefixed strings; the hot-path
+//!   format (~6-8x fewer bytes per exact-mode cell than JSON, and no
+//!   float formatting on either end).
+//!
+//! Both are *self-describing* in the sense that matters for a stream: each
+//! frame carries its own type in-band (the `frame` key / the kind byte)
+//! and its own extent (the newline / the length prefix), so a reader never
+//! needs out-of-band schema agreement to walk a stream, skip a frame, or
+//! resynchronize diagnostics. Determinism is part of the contract: both
+//! encoders are byte-deterministic (sorted object keys, shortest-roundtrip
+//! float text on the JSON side; fixed field order on the binary side), so
+//! encode → decode → encode reproduces the original bytes exactly.
+//!
+//! Frames stream in both directions: the leader sends one
+//! [`ShardAssignment`] per follower, followers stream one
+//! [`CellResultFrame`] per finished cell (not one blob per shard), then
+//! close with `ShardDone`/`ShardFailed`. [`FrameReader`] reassembles
+//! frames from arbitrary transport chunking and reports malformed input
+//! loudly with absolute byte offsets ([`CodecError`]); a partial frame is
+//! never an error, just "feed me more bytes".
+//!
+//! Latency payloads ride as the snapshot types ([`SummarySnapshot`],
+//! [`CollectorSnapshot`], [`ClassSnapshot`]) whose restore is bit-identical
+//! in both metric modes — the foundation of the distributed determinism
+//! guarantee (PERF.md §Distributed sweeps).
+
+use crate::metrics::{ClassSnapshot, CollectorSnapshot, DROP_REASONS};
+use crate::util::json::{self, Json};
+use crate::util::stats::SummarySnapshot;
+use std::fmt;
+
+/// Decode failure: the stream holds bytes that cannot be a frame. The
+/// offset is relative to the start of the buffer handed to
+/// [`Codec::decode`]; [`FrameReader`] rebases it to the absolute stream
+/// position before surfacing it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodecError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "codec error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// One message on the distributed-sweep wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Leader → follower: run these cells of the shared grid.
+    Shard(ShardAssignment),
+    /// Follower → leader: one finished cell, streamed as it completes.
+    CellResult(CellResultFrame),
+    /// Follower → leader: the shard finished; `cells` results were sent.
+    ShardDone { shard: u32, cells: u32 },
+    /// Follower → leader: the shard died after sending `completed`
+    /// results. The leader re-queues the outstanding cells elsewhere.
+    ShardFailed { shard: u32, completed: u32, error: String },
+}
+
+impl Frame {
+    /// The in-band type tag (`frame` key / kind-byte name).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Shard(_) => "shard",
+            Frame::CellResult(_) => "cell_result",
+            Frame::ShardDone { .. } => "shard_done",
+            Frame::ShardFailed { .. } => "shard_failed",
+        }
+    }
+}
+
+/// One follower's slice of a sweep: the shared grid description (the job
+/// layer's YAML-shaped doc, opaque to the codec) plus the assigned cells.
+/// Followers rebuild the full plan from `grid` and run only their indices,
+/// so a cell computes from `cell_seed(plan_seed, index)` no matter where
+/// it lands — the sharding-is-invisible determinism argument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardAssignment {
+    pub shard: u32,
+    pub plan_seed: u64,
+    /// Grid config doc (`GridSpec::to_json` shape). Codec-opaque: it
+    /// round-trips as a JSON value, validated by the job layer's parser.
+    pub grid: Json,
+    pub cells: Vec<CellSpec>,
+}
+
+/// One assigned cell: its global plan index, its derived per-cell seed
+/// (redundant with `cell_seed(plan_seed, index)` — shipped so followers
+/// can cross-check for seed drift), and its human-readable axes label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSpec {
+    pub index: u32,
+    pub seed: u64,
+    pub label: String,
+}
+
+/// One finished cell, streamed back as soon as it completes: the ledger
+/// counters plus the full latency payload (collector snapshot and
+/// per-class snapshots). Everything a sweep-level PerfDB record reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResultFrame {
+    /// Global plan index — the reconciliation key for duplicate frames.
+    pub cell: u32,
+    /// The per-cell seed the cell actually ran with.
+    pub seed: u64,
+    pub label: String,
+    pub issued: u64,
+    pub events: u64,
+    pub dropped: u64,
+    pub downtime_s: f64,
+    pub collector: CollectorSnapshot,
+    pub classes: Vec<ClassSnapshot>,
+}
+
+/// A streaming frame codec. `encode` appends one frame; `decode` reads one
+/// frame off the front of a buffer:
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame; drop `consumed`
+///   bytes and go again.
+/// * `Ok(None)` — the buffer holds only a prefix of a frame; read more.
+/// * `Err(CodecError)` — the bytes cannot be a frame (corruption, schema
+///   violation, counters that do not reconcile); the offset names the bad
+///   byte relative to the buffer start.
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn encode(&self, frame: &Frame, out: &mut Vec<u8>);
+    fn decode(&self, buf: &[u8]) -> Result<Option<(Frame, usize)>, CodecError>;
+}
+
+/// Codec selection knob — what job YAML and bench flags name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    JsonLines,
+    Binary,
+}
+
+impl CodecKind {
+    pub fn codec(&self) -> &'static dyn Codec {
+        match self {
+            CodecKind::JsonLines => &JsonLinesCodec,
+            CodecKind::Binary => &BinaryCodec,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.codec().name()
+    }
+}
+
+/// Incremental frame reassembly over arbitrary transport chunking: push
+/// byte chunks as they arrive, pull frames as they complete. Error offsets
+/// are rebased to absolute stream positions (bytes since the first push),
+/// so "codec error at byte 1048600" points into the real stream, not the
+/// current window.
+pub struct FrameReader {
+    codec: &'static dyn Codec,
+    buf: Vec<u8>,
+    drained: usize,
+}
+
+impl FrameReader {
+    pub fn new(kind: CodecKind) -> Self {
+        FrameReader { codec: kind.codec(), buf: Vec::new(), drained: 0 }
+    }
+
+    pub fn push(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Next complete frame, or `None` if the buffered bytes are a frame
+    /// prefix. After an error the reader is poisoned for that stream —
+    /// callers treat it as a failed peer (there is no resync heuristic
+    /// that could not also fabricate results).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, CodecError> {
+        match self.codec.decode(&self.buf) {
+            Ok(Some((frame, consumed))) => {
+                self.buf.drain(..consumed);
+                self.drained += consumed;
+                Ok(Some(frame))
+            }
+            Ok(None) => Ok(None),
+            Err(e) => Err(CodecError { offset: self.drained + e.offset, message: e.message }),
+        }
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Frame-level semantic validation shared by both decoders: snapshots must
+/// restore without panicking and ledgers must reconcile. Rejecting here
+/// keeps "malformed frame" a loud decode error instead of a panic (or a
+/// silent corruption) deep inside the leader's absorption path.
+fn validate_frame(frame: &Frame) -> Result<(), String> {
+    fn check_collector(c: &CollectorSnapshot, what: &str) -> Result<(), String> {
+        c.e2e.validate().map_err(|e| format!("{what} e2e summary: {e}"))?;
+        for (i, s) in c.per_stage.iter().enumerate() {
+            s.validate().map_err(|e| format!("{what} stage {i} summary: {e}"))?;
+        }
+        let by_reason: u64 = c.dropped_by_reason.iter().sum();
+        if by_reason != c.dropped {
+            return Err(format!(
+                "{what}: drop counters do not reconcile ({by_reason} by reason vs {} total)",
+                c.dropped
+            ));
+        }
+        if c.e2e.len() as u64 != c.completed {
+            return Err(format!(
+                "{what}: e2e sample count {} disagrees with completed {}",
+                c.e2e.len(),
+                c.completed
+            ));
+        }
+        Ok(())
+    }
+    match frame {
+        Frame::CellResult(r) => {
+            check_collector(&r.collector, "cell collector")?;
+            for cl in &r.classes {
+                check_collector(&cl.collector, &format!("class {} collector", cl.class))?;
+            }
+            if r.collector.completed + r.dropped != r.issued {
+                return Err(format!(
+                    "cell {} ledger does not conserve: {} completed + {} dropped != {} issued",
+                    r.cell, r.collector.completed, r.dropped, r.issued
+                ));
+            }
+            Ok(())
+        }
+        Frame::Shard(s) => {
+            for c in &s.cells {
+                if c.seed != crate::sweep::cell_seed(s.plan_seed, c.index as u64) {
+                    return Err(format!(
+                        "shard {}: cell {} seed {:#x} disagrees with cell_seed(plan_seed, index)",
+                        s.shard, c.index, c.seed
+                    ));
+                }
+            }
+            Ok(())
+        }
+        Frame::ShardDone { .. } | Frame::ShardFailed { .. } => Ok(()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON lines
+// ---------------------------------------------------------------------------
+
+/// Line-delimited JSON: one compact object per frame, `frame` key first
+/// (alphabetical accident of `BTreeMap`, but guaranteed present) naming the
+/// type. Floats use the writer's shortest-roundtrip formatting, so finite
+/// values survive bit-exactly; IEEE specials (`±inf`, `nan`), which JSON
+/// cannot carry as numbers, ride as the strings `"inf"` / `"-inf"` /
+/// `"nan"`. u64 counters beyond `i64::MAX` (per-cell seeds are full-width
+/// PCG outputs) ride as decimal strings.
+pub struct JsonLinesCodec;
+
+impl Codec for JsonLinesCodec {
+    fn name(&self) -> &'static str {
+        "jsonl"
+    }
+
+    fn encode(&self, frame: &Frame, out: &mut Vec<u8>) {
+        out.extend_from_slice(frame_to_json(frame).to_string_compact().as_bytes());
+        out.push(b'\n');
+    }
+
+    fn decode(&self, buf: &[u8]) -> Result<Option<(Frame, usize)>, CodecError> {
+        let Some(nl) = buf.iter().position(|&b| b == b'\n') else {
+            return Ok(None);
+        };
+        let text = std::str::from_utf8(&buf[..nl]).map_err(|e| CodecError {
+            offset: e.valid_up_to(),
+            message: "invalid utf-8 in jsonl frame".into(),
+        })?;
+        let doc = json::parse(text)
+            .map_err(|e| CodecError { offset: e.offset, message: e.message })?;
+        let frame = frame_from_json(&doc)
+            .map_err(|m| CodecError { offset: 0, message: format!("jsonl frame: {m}") })?;
+        validate_frame(&frame)
+            .map_err(|m| CodecError { offset: 0, message: format!("jsonl frame: {m}") })?;
+        Ok(Some((frame, nl + 1)))
+    }
+}
+
+fn jf64(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn ju64(x: u64) -> Json {
+    if x <= i64::MAX as u64 {
+        Json::Int(x as i64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+fn pf64(v: &Json, what: &str) -> Result<f64, String> {
+    if let Some(s) = v.as_str() {
+        return match s {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            _ => Err(format!("{what}: unrecognized float string {s:?}")),
+        };
+    }
+    v.as_f64().ok_or_else(|| format!("{what}: expected a number"))
+}
+
+fn pu64(v: &Json, what: &str) -> Result<u64, String> {
+    if let Some(i) = v.as_i64() {
+        return u64::try_from(i).map_err(|_| format!("{what}: negative count {i}"));
+    }
+    if let Some(s) = v.as_str() {
+        return s.parse::<u64>().map_err(|_| format!("{what}: unparseable u64 string {s:?}"));
+    }
+    Err(format!("{what}: expected a u64"))
+}
+
+fn pu32(v: &Json, what: &str) -> Result<u32, String> {
+    u32::try_from(pu64(v, what)?).map_err(|_| format!("{what}: exceeds u32"))
+}
+
+fn field<'a>(v: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("{what}: missing {key:?}"))
+}
+
+fn pstr(v: &Json, what: &str) -> Result<String, String> {
+    v.as_str().map(str::to_string).ok_or_else(|| format!("{what}: expected a string"))
+}
+
+fn summary_to_json(s: &SummarySnapshot) -> Json {
+    let mut o = Json::obj();
+    match s {
+        SummarySnapshot::Exact { samples } => {
+            o.set("kind", Json::Str("exact".into()));
+            o.set("samples", Json::Arr(samples.iter().map(|&x| jf64(x)).collect()));
+        }
+        SummarySnapshot::Sketch { alpha, buckets, zero_count, count, sum_sq, sum, min, max } => {
+            o.set("kind", Json::Str("sketch".into()));
+            o.set("alpha", jf64(*alpha));
+            o.set(
+                "buckets",
+                Json::Arr(
+                    buckets
+                        .iter()
+                        .map(|&(k, c)| Json::Arr(vec![Json::Int(k as i64), ju64(c)]))
+                        .collect(),
+                ),
+            );
+            o.set("zero_count", ju64(*zero_count));
+            o.set("count", ju64(*count));
+            o.set("sum_sq", jf64(*sum_sq));
+            o.set("sum", jf64(*sum));
+            o.set("min", jf64(*min));
+            o.set("max", jf64(*max));
+        }
+    }
+    o
+}
+
+fn summary_from_json(v: &Json, what: &str) -> Result<SummarySnapshot, String> {
+    match field(v, "kind", what)?.as_str() {
+        Some("exact") => {
+            let arr = field(v, "samples", what)?
+                .as_arr()
+                .ok_or_else(|| format!("{what}: samples must be an array"))?;
+            let mut samples = Vec::with_capacity(arr.len());
+            for (i, x) in arr.iter().enumerate() {
+                samples.push(pf64(x, &format!("{what} sample {i}"))?);
+            }
+            Ok(SummarySnapshot::Exact { samples })
+        }
+        Some("sketch") => {
+            let arr = field(v, "buckets", what)?
+                .as_arr()
+                .ok_or_else(|| format!("{what}: buckets must be an array"))?;
+            let mut buckets = Vec::with_capacity(arr.len());
+            for (i, pair) in arr.iter().enumerate() {
+                let pair = pair
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| format!("{what} bucket {i}: expected [index, count]"))?;
+                buckets.push((
+                    pu32(&pair[0], &format!("{what} bucket {i} index"))?,
+                    pu64(&pair[1], &format!("{what} bucket {i} count"))?,
+                ));
+            }
+            Ok(SummarySnapshot::Sketch {
+                alpha: pf64(field(v, "alpha", what)?, &format!("{what} alpha"))?,
+                buckets,
+                zero_count: pu64(field(v, "zero_count", what)?, &format!("{what} zero_count"))?,
+                count: pu64(field(v, "count", what)?, &format!("{what} count"))?,
+                sum_sq: pf64(field(v, "sum_sq", what)?, &format!("{what} sum_sq"))?,
+                sum: pf64(field(v, "sum", what)?, &format!("{what} sum"))?,
+                min: pf64(field(v, "min", what)?, &format!("{what} min"))?,
+                max: pf64(field(v, "max", what)?, &format!("{what} max"))?,
+            })
+        }
+        Some(k) => Err(format!("{what}: unknown summary kind {k:?}")),
+        None => Err(format!("{what}: summary kind must be a string")),
+    }
+}
+
+fn collector_to_json(c: &CollectorSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("e2e", summary_to_json(&c.e2e));
+    o.set("stages", Json::Arr(c.per_stage.iter().map(summary_to_json).collect()));
+    o.set("bounded", Json::Bool(c.bounded));
+    o.set("completed", ju64(c.completed));
+    o.set("dropped", ju64(c.dropped));
+    o.set("drops", Json::Arr(c.dropped_by_reason.iter().map(|&d| ju64(d)).collect()));
+    o.set("first_arrival_s", jf64(c.first_arrival_s));
+    o.set("last_completion_s", jf64(c.last_completion_s));
+    o
+}
+
+fn collector_from_json(v: &Json, what: &str) -> Result<CollectorSnapshot, String> {
+    let stages = field(v, "stages", what)?
+        .as_arr()
+        .filter(|a| a.len() == 5)
+        .ok_or_else(|| format!("{what}: stages must be an array of 5 summaries"))?;
+    let mut per_stage: [SummarySnapshot; 5] =
+        std::array::from_fn(|_| SummarySnapshot::Exact { samples: Vec::new() });
+    for (i, s) in stages.iter().enumerate() {
+        per_stage[i] = summary_from_json(s, &format!("{what} stage {i}"))?;
+    }
+    let drops = field(v, "drops", what)?
+        .as_arr()
+        .filter(|a| a.len() == DROP_REASONS.len())
+        .ok_or_else(|| format!("{what}: drops must list {} counters", DROP_REASONS.len()))?;
+    let mut dropped_by_reason = [0u64; DROP_REASONS.len()];
+    for (i, d) in drops.iter().enumerate() {
+        dropped_by_reason[i] = pu64(d, &format!("{what} drop reason {i}"))?;
+    }
+    Ok(CollectorSnapshot {
+        e2e: summary_from_json(field(v, "e2e", what)?, &format!("{what} e2e"))?,
+        per_stage,
+        bounded: field(v, "bounded", what)?
+            .as_bool()
+            .ok_or_else(|| format!("{what}: bounded must be a boolean"))?,
+        completed: pu64(field(v, "completed", what)?, &format!("{what} completed"))?,
+        dropped: pu64(field(v, "dropped", what)?, &format!("{what} dropped"))?,
+        dropped_by_reason,
+        first_arrival_s: pf64(field(v, "first_arrival_s", what)?, &format!("{what} first_arrival_s"))?,
+        last_completion_s: pf64(
+            field(v, "last_completion_s", what)?,
+            &format!("{what} last_completion_s"),
+        )?,
+    })
+}
+
+fn class_to_json(c: &ClassSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("class", Json::Int(c.class as i64));
+    o.set("issued", ju64(c.issued));
+    o.set("collector", collector_to_json(&c.collector));
+    o
+}
+
+fn class_from_json(v: &Json, what: &str) -> Result<ClassSnapshot, String> {
+    let class = pu64(field(v, "class", what)?, &format!("{what} class"))?;
+    let class = u8::try_from(class).map_err(|_| format!("{what}: class {class} exceeds u8"))?;
+    Ok(ClassSnapshot {
+        class,
+        issued: pu64(field(v, "issued", what)?, &format!("{what} issued"))?,
+        collector: collector_from_json(field(v, "collector", what)?, what)?,
+    })
+}
+
+fn frame_to_json(frame: &Frame) -> Json {
+    let mut o = Json::obj();
+    o.set("frame", Json::Str(frame.kind().into()));
+    match frame {
+        Frame::Shard(s) => {
+            o.set("shard", Json::Int(s.shard as i64));
+            o.set("plan_seed", ju64(s.plan_seed));
+            o.set("grid", s.grid.clone());
+            o.set(
+                "cells",
+                Json::Arr(
+                    s.cells
+                        .iter()
+                        .map(|c| {
+                            let mut cell = Json::obj();
+                            cell.set("index", Json::Int(c.index as i64));
+                            cell.set("seed", ju64(c.seed));
+                            cell.set("label", Json::Str(c.label.clone()));
+                            cell
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Frame::CellResult(r) => {
+            o.set("cell", Json::Int(r.cell as i64));
+            o.set("seed", ju64(r.seed));
+            o.set("label", Json::Str(r.label.clone()));
+            o.set("issued", ju64(r.issued));
+            o.set("events", ju64(r.events));
+            o.set("dropped", ju64(r.dropped));
+            o.set("downtime_s", jf64(r.downtime_s));
+            o.set("collector", collector_to_json(&r.collector));
+            o.set("classes", Json::Arr(r.classes.iter().map(class_to_json).collect()));
+        }
+        Frame::ShardDone { shard, cells } => {
+            o.set("shard", Json::Int(*shard as i64));
+            o.set("cells", Json::Int(*cells as i64));
+        }
+        Frame::ShardFailed { shard, completed, error } => {
+            o.set("shard", Json::Int(*shard as i64));
+            o.set("completed", Json::Int(*completed as i64));
+            o.set("error", Json::Str(error.clone()));
+        }
+    }
+    o
+}
+
+fn frame_from_json(v: &Json) -> Result<Frame, String> {
+    let kind = field(v, "frame", "frame")?
+        .as_str()
+        .ok_or_else(|| "frame: type tag must be a string".to_string())?;
+    match kind {
+        "shard" => {
+            let cells_arr = field(v, "cells", "shard")?
+                .as_arr()
+                .ok_or_else(|| "shard: cells must be an array".to_string())?;
+            let mut cells = Vec::with_capacity(cells_arr.len());
+            for (i, c) in cells_arr.iter().enumerate() {
+                let what = format!("shard cell {i}");
+                cells.push(CellSpec {
+                    index: pu32(field(c, "index", &what)?, &format!("{what} index"))?,
+                    seed: pu64(field(c, "seed", &what)?, &format!("{what} seed"))?,
+                    label: pstr(field(c, "label", &what)?, &format!("{what} label"))?,
+                });
+            }
+            Ok(Frame::Shard(ShardAssignment {
+                shard: pu32(field(v, "shard", "shard")?, "shard index")?,
+                plan_seed: pu64(field(v, "plan_seed", "shard")?, "shard plan_seed")?,
+                grid: field(v, "grid", "shard")?.clone(),
+                cells,
+            }))
+        }
+        "cell_result" => {
+            let classes_arr = field(v, "classes", "cell_result")?
+                .as_arr()
+                .ok_or_else(|| "cell_result: classes must be an array".to_string())?;
+            let mut classes = Vec::with_capacity(classes_arr.len());
+            for (i, c) in classes_arr.iter().enumerate() {
+                classes.push(class_from_json(c, &format!("cell_result class {i}"))?);
+            }
+            Ok(Frame::CellResult(CellResultFrame {
+                cell: pu32(field(v, "cell", "cell_result")?, "cell_result cell")?,
+                seed: pu64(field(v, "seed", "cell_result")?, "cell_result seed")?,
+                label: pstr(field(v, "label", "cell_result")?, "cell_result label")?,
+                issued: pu64(field(v, "issued", "cell_result")?, "cell_result issued")?,
+                events: pu64(field(v, "events", "cell_result")?, "cell_result events")?,
+                dropped: pu64(field(v, "dropped", "cell_result")?, "cell_result dropped")?,
+                downtime_s: pf64(field(v, "downtime_s", "cell_result")?, "cell_result downtime_s")?,
+                collector: collector_from_json(
+                    field(v, "collector", "cell_result")?,
+                    "cell_result collector",
+                )?,
+                classes,
+            }))
+        }
+        "shard_done" => Ok(Frame::ShardDone {
+            shard: pu32(field(v, "shard", "shard_done")?, "shard_done shard")?,
+            cells: pu32(field(v, "cells", "shard_done")?, "shard_done cells")?,
+        }),
+        "shard_failed" => Ok(Frame::ShardFailed {
+            shard: pu32(field(v, "shard", "shard_failed")?, "shard_failed shard")?,
+            completed: pu32(field(v, "completed", "shard_failed")?, "shard_failed completed")?,
+            error: pstr(field(v, "error", "shard_failed")?, "shard_failed error")?,
+        }),
+        other => Err(format!("unknown frame type {other:?}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary
+// ---------------------------------------------------------------------------
+
+/// First header byte of every binary frame.
+const MAGIC: u8 = 0xB5;
+/// Header: `[MAGIC][kind][payload len u32 LE]`.
+const HDR: usize = 6;
+/// Sanity cap on the declared payload length — a corrupt length prefix
+/// fails loudly instead of making the reader wait for gigabytes that will
+/// never arrive.
+const MAX_FRAME: usize = 1 << 30;
+
+const KIND_SHARD: u8 = 1;
+const KIND_CELL_RESULT: u8 = 2;
+const KIND_SHARD_DONE: u8 = 3;
+const KIND_SHARD_FAILED: u8 = 4;
+
+/// Compact length-prefixed binary: little-endian integers, `f64::to_bits`
+/// floats (bit-exact by construction, no formatter in the loop),
+/// length-prefixed UTF-8 strings, and sparse sketch buckets. The one
+/// JSON-shaped field, the shard grid doc, rides as an embedded
+/// compact-JSON string: it is cold config sent once per shard, and reusing
+/// the job layer's parser beats maintaining a second schema for it.
+pub struct BinaryCodec;
+
+impl Codec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn encode(&self, frame: &Frame, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(&[MAGIC, 0, 0, 0, 0, 0]); // kind + len patched below
+        match frame {
+            Frame::Shard(s) => {
+                out[start + 1] = KIND_SHARD;
+                put_u32(out, s.shard);
+                put_u64(out, s.plan_seed);
+                put_str(out, &s.grid.to_string_compact());
+                put_u32(out, s.cells.len() as u32);
+                for c in &s.cells {
+                    put_u32(out, c.index);
+                    put_u64(out, c.seed);
+                    put_str(out, &c.label);
+                }
+            }
+            Frame::CellResult(r) => {
+                out[start + 1] = KIND_CELL_RESULT;
+                put_u32(out, r.cell);
+                put_u64(out, r.seed);
+                put_str(out, &r.label);
+                put_u64(out, r.issued);
+                put_u64(out, r.events);
+                put_u64(out, r.dropped);
+                put_f64(out, r.downtime_s);
+                put_collector(out, &r.collector);
+                put_u32(out, r.classes.len() as u32);
+                for cl in &r.classes {
+                    out.push(cl.class);
+                    put_u64(out, cl.issued);
+                    put_collector(out, &cl.collector);
+                }
+            }
+            Frame::ShardDone { shard, cells } => {
+                out[start + 1] = KIND_SHARD_DONE;
+                put_u32(out, *shard);
+                put_u32(out, *cells);
+            }
+            Frame::ShardFailed { shard, completed, error } => {
+                out[start + 1] = KIND_SHARD_FAILED;
+                put_u32(out, *shard);
+                put_u32(out, *completed);
+                put_str(out, error);
+            }
+        }
+        let len = (out.len() - start - HDR) as u32;
+        out[start + 2..start + HDR].copy_from_slice(&len.to_le_bytes());
+    }
+
+    fn decode(&self, buf: &[u8]) -> Result<Option<(Frame, usize)>, CodecError> {
+        if buf.len() < HDR {
+            return Ok(None);
+        }
+        if buf[0] != MAGIC {
+            return Err(CodecError {
+                offset: 0,
+                message: format!("bad magic byte {:#04x} (expected {MAGIC:#04x})", buf[0]),
+            });
+        }
+        let kind = buf[1];
+        let len = u32::from_le_bytes([buf[2], buf[3], buf[4], buf[5]]) as usize;
+        if len > MAX_FRAME {
+            return Err(CodecError {
+                offset: 2,
+                message: format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+            });
+        }
+        if buf.len() < HDR + len {
+            return Ok(None);
+        }
+        let mut cur = Cur { buf: &buf[HDR..HDR + len], pos: 0, base: HDR };
+        let frame = match kind {
+            KIND_SHARD => {
+                let shard = cur.u32()?;
+                let plan_seed = cur.u64()?;
+                let grid_at = cur.base + cur.pos + 4; // first byte past the length prefix
+                let grid_text = cur.str("grid doc")?;
+                let grid = json::parse(&grid_text).map_err(|e| CodecError {
+                    offset: grid_at + e.offset,
+                    message: format!("embedded grid doc: {}", e.message),
+                })?;
+                let n = cur.u32()? as usize;
+                let mut cells = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    cells.push(CellSpec {
+                        index: cur.u32()?,
+                        seed: cur.u64()?,
+                        label: cur.str("cell label")?,
+                    });
+                }
+                Frame::Shard(ShardAssignment { shard, plan_seed, grid, cells })
+            }
+            KIND_CELL_RESULT => {
+                let cell = cur.u32()?;
+                let seed = cur.u64()?;
+                let label = cur.str("cell label")?;
+                let issued = cur.u64()?;
+                let events = cur.u64()?;
+                let dropped = cur.u64()?;
+                let downtime_s = cur.f64()?;
+                let collector = cur.collector()?;
+                let n = cur.u32()? as usize;
+                let mut classes = Vec::with_capacity(n.min(1 << 10));
+                for _ in 0..n {
+                    classes.push(ClassSnapshot {
+                        class: cur.u8()?,
+                        issued: cur.u64()?,
+                        collector: cur.collector()?,
+                    });
+                }
+                Frame::CellResult(CellResultFrame {
+                    cell,
+                    seed,
+                    label,
+                    issued,
+                    events,
+                    dropped,
+                    downtime_s,
+                    collector,
+                    classes,
+                })
+            }
+            KIND_SHARD_DONE => Frame::ShardDone { shard: cur.u32()?, cells: cur.u32()? },
+            KIND_SHARD_FAILED => Frame::ShardFailed {
+                shard: cur.u32()?,
+                completed: cur.u32()?,
+                error: cur.str("error text")?,
+            },
+            k => {
+                return Err(CodecError {
+                    offset: 1,
+                    message: format!("unknown binary frame kind {k}"),
+                })
+            }
+        };
+        if cur.pos != len {
+            return Err(CodecError {
+                offset: HDR + cur.pos,
+                message: format!("{} trailing bytes in frame payload", len - cur.pos),
+            });
+        }
+        validate_frame(&frame)
+            .map_err(|m| CodecError { offset: 0, message: format!("binary frame: {m}") })?;
+        Ok(Some((frame, HDR + len)))
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_summary(out: &mut Vec<u8>, s: &SummarySnapshot) {
+    match s {
+        SummarySnapshot::Exact { samples } => {
+            out.push(0);
+            put_u64(out, samples.len() as u64);
+            for &x in samples {
+                put_f64(out, x);
+            }
+        }
+        SummarySnapshot::Sketch { alpha, buckets, zero_count, count, sum_sq, sum, min, max } => {
+            out.push(1);
+            put_f64(out, *alpha);
+            put_u32(out, buckets.len() as u32);
+            for &(k, c) in buckets {
+                put_u32(out, k);
+                put_u64(out, c);
+            }
+            put_u64(out, *zero_count);
+            put_u64(out, *count);
+            put_f64(out, *sum_sq);
+            put_f64(out, *sum);
+            put_f64(out, *min);
+            put_f64(out, *max);
+        }
+    }
+}
+
+fn put_collector(out: &mut Vec<u8>, c: &CollectorSnapshot) {
+    put_summary(out, &c.e2e);
+    for s in &c.per_stage {
+        put_summary(out, s);
+    }
+    out.push(c.bounded as u8);
+    put_u64(out, c.completed);
+    put_u64(out, c.dropped);
+    for &d in &c.dropped_by_reason {
+        put_u64(out, d);
+    }
+    put_f64(out, c.first_arrival_s);
+    put_f64(out, c.last_completion_s);
+}
+
+/// Payload cursor: bounds-checked reads with absolute-offset errors. The
+/// payload length is already known from the header, so running out of
+/// bytes mid-field is corruption ("truncated field"), not "read more".
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    base: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn err(&self, msg: String) -> CodecError {
+        CodecError { offset: self.base + self.pos, message: msg }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.buf.len() - self.pos < n {
+            return Err(self.err(format!(
+                "truncated field: needed {n} bytes, {} left in payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String, CodecError> {
+        let at = self.base + self.pos;
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError {
+            offset: at,
+            message: format!("{what}: invalid utf-8"),
+        })
+    }
+
+    fn summary(&mut self) -> Result<SummarySnapshot, CodecError> {
+        let at = self.base + self.pos;
+        match self.u8()? {
+            0 => {
+                let n = self.u64()? as usize;
+                let mut samples = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    samples.push(self.f64()?);
+                }
+                Ok(SummarySnapshot::Exact { samples })
+            }
+            1 => {
+                let alpha = self.f64()?;
+                let n = self.u32()? as usize;
+                let mut buckets = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    buckets.push((self.u32()?, self.u64()?));
+                }
+                Ok(SummarySnapshot::Sketch {
+                    alpha,
+                    buckets,
+                    zero_count: self.u64()?,
+                    count: self.u64()?,
+                    sum_sq: self.f64()?,
+                    sum: self.f64()?,
+                    min: self.f64()?,
+                    max: self.f64()?,
+                })
+            }
+            t => Err(CodecError {
+                offset: at,
+                message: format!("unknown summary tag {t} (expected 0=exact, 1=sketch)"),
+            }),
+        }
+    }
+
+    fn collector(&mut self) -> Result<CollectorSnapshot, CodecError> {
+        let e2e = self.summary()?;
+        let mut per_stage: [SummarySnapshot; 5] =
+            std::array::from_fn(|_| SummarySnapshot::Exact { samples: Vec::new() });
+        for s in per_stage.iter_mut() {
+            *s = self.summary()?;
+        }
+        let at = self.base + self.pos;
+        let bounded = match self.u8()? {
+            0 => false,
+            1 => true,
+            b => {
+                return Err(CodecError {
+                    offset: at,
+                    message: format!("bounded flag must be 0 or 1, got {b}"),
+                })
+            }
+        };
+        let completed = self.u64()?;
+        let dropped = self.u64()?;
+        let mut dropped_by_reason = [0u64; DROP_REASONS.len()];
+        for d in dropped_by_reason.iter_mut() {
+            *d = self.u64()?;
+        }
+        Ok(CollectorSnapshot {
+            e2e,
+            per_stage,
+            bounded,
+            completed,
+            dropped,
+            dropped_by_reason,
+            first_arrival_s: self.f64()?,
+            last_completion_s: self.f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Collector, DropReason, MetricsMode, RequestTrace, Stage};
+
+    fn collector_snapshot(mode: MetricsMode, seed: u64) -> CollectorSnapshot {
+        let mut c = Collector::with_mode(mode);
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        for i in 0..200u64 {
+            let mut t = RequestTrace::new(i, i as f64 * 0.05);
+            if i % 9 == 0 {
+                t.dropped = true;
+                t.drop_reason =
+                    if i % 2 == 0 { DropReason::QueueFull } else { DropReason::Shed };
+            } else {
+                t.record_stage(Stage::Batching, rng.lognormal(-6.0, 0.4));
+                t.record_stage(Stage::Inference, rng.lognormal(-4.0, 0.9));
+            }
+            c.ingest(&t);
+        }
+        c.snapshot()
+    }
+
+    fn cell_result(mode: MetricsMode, with_classes: bool) -> Frame {
+        let collector = collector_snapshot(mode, 7);
+        let mut classes = Vec::new();
+        if with_classes {
+            for class in 0..3u8 {
+                let inner = collector_snapshot(mode, 20 + class as u64);
+                classes.push(ClassSnapshot {
+                    class,
+                    issued: inner.completed + inner.dropped,
+                    collector: inner,
+                });
+            }
+        }
+        Frame::CellResult(CellResultFrame {
+            cell: 11,
+            seed: u64::MAX - 3, // exercises the beyond-i64 string path in JSON
+            label: "4xleast-outstanding@5.0ms".into(),
+            issued: collector.completed + collector.dropped,
+            events: 123_456,
+            dropped: collector.dropped,
+            downtime_s: 1.25,
+            collector,
+            classes,
+        })
+    }
+
+    fn grid_doc() -> Json {
+        let mut g = Json::obj();
+        g.set("model", Json::Str("resnet50".into()));
+        g.set("replicas", Json::Arr(vec![Json::Int(1), Json::Int(2)]));
+        g.set("rate", Json::Num(120.5));
+        g
+    }
+
+    fn shard_frame() -> Frame {
+        let plan_seed = 4242;
+        let cells = [0u32, 3, 5]
+            .iter()
+            .map(|&i| CellSpec {
+                index: i,
+                seed: crate::sweep::cell_seed(plan_seed, i as u64),
+                label: format!("cell-{i}"),
+            })
+            .collect();
+        Frame::Shard(ShardAssignment { shard: 1, plan_seed, grid: grid_doc(), cells })
+    }
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            shard_frame(),
+            cell_result(MetricsMode::Exact, false),
+            cell_result(MetricsMode::Exact, true),
+            cell_result(MetricsMode::Sketch { alpha: 0.01 }, true),
+            Frame::ShardDone { shard: 2, cells: 9 },
+            Frame::ShardFailed { shard: 0, completed: 4, error: "worker panic: \"boom\"".into() },
+        ]
+    }
+
+    #[test]
+    fn both_codecs_round_trip_every_frame_type() {
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            for frame in all_frames() {
+                let mut bytes = Vec::new();
+                codec.encode(&frame, &mut bytes);
+                let (decoded, consumed) =
+                    codec.decode(&bytes).unwrap().unwrap_or_else(|| {
+                        panic!("{}: complete {} frame must decode", codec.name(), frame.kind())
+                    });
+                assert_eq!(consumed, bytes.len(), "{}", codec.name());
+                assert_eq!(decoded, frame, "{} {}", codec.name(), frame.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn binary_re_encode_is_byte_exact() {
+        // encode -> decode -> encode reproduces the original bytes exactly,
+        // for both codecs (byte-determinism is part of the contract).
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            for frame in all_frames() {
+                let mut first = Vec::new();
+                codec.encode(&frame, &mut first);
+                let (decoded, _) = codec.decode(&first).unwrap().unwrap();
+                let mut second = Vec::new();
+                codec.encode(&decoded, &mut second);
+                assert_eq!(first, second, "{} {}", codec.name(), frame.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn json_and_binary_agree_on_every_frame() {
+        // JSON ≡ binary: decoding each codec's bytes yields the same Frame
+        // value, so the two wire formats are views of one vocabulary.
+        for frame in all_frames() {
+            let mut jb = Vec::new();
+            JsonLinesCodec.encode(&frame, &mut jb);
+            let (from_json, _) = JsonLinesCodec.decode(&jb).unwrap().unwrap();
+            let mut bb = Vec::new();
+            BinaryCodec.encode(&frame, &mut bb);
+            let (from_bin, _) = BinaryCodec.decode(&bb).unwrap().unwrap();
+            assert_eq!(from_json, from_bin, "{}", frame.kind());
+        }
+    }
+
+    #[test]
+    fn binary_is_much_smaller_for_exact_cells() {
+        let frame = cell_result(MetricsMode::Exact, true);
+        let (mut jb, mut bb) = (Vec::new(), Vec::new());
+        JsonLinesCodec.encode(&frame, &mut jb);
+        BinaryCodec.encode(&frame, &mut bb);
+        assert!(
+            bb.len() * 2 < jb.len(),
+            "binary {}B should be well under half of JSON {}B",
+            bb.len(),
+            jb.len()
+        );
+    }
+
+    #[test]
+    fn every_strict_prefix_is_incomplete_not_an_error() {
+        // Truncation is a transport condition, not corruption: any strict
+        // prefix of a valid frame must yield Ok(None) (JSON: no newline
+        // yet; binary: header or payload still short).
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            let mut bytes = Vec::new();
+            codec.encode(&Frame::ShardDone { shard: 3, cells: 17 }, &mut bytes);
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    codec.decode(&bytes[..cut]).unwrap(),
+                    None,
+                    "{} prefix of {cut}/{} bytes",
+                    codec.name(),
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frame_reader_reassembles_single_byte_chunks() {
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            let frames = all_frames();
+            let mut stream = Vec::new();
+            for f in &frames {
+                codec.encode(f, &mut stream);
+            }
+            let mut reader = FrameReader::new(kind);
+            let mut got = Vec::new();
+            for &b in &stream {
+                reader.push(&[b]);
+                while let Some(f) = reader.next_frame().unwrap() {
+                    got.push(f);
+                }
+            }
+            assert_eq!(got, frames, "{}", codec.name());
+            assert_eq!(reader.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn bad_magic_fails_at_offset_zero() {
+        let err = BinaryCodec.decode(b"XXXXXX").unwrap_err();
+        assert_eq!(err.offset, 0);
+        assert!(err.message.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn unknown_binary_kind_fails_at_offset_one() {
+        let mut buf = vec![MAGIC, 99];
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let err = BinaryCodec.decode(&buf).unwrap_err();
+        assert_eq!(err.offset, 1);
+        assert!(err.message.contains("unknown binary frame kind 99"), "{err}");
+    }
+
+    #[test]
+    fn absurd_length_prefix_fails_at_the_length_bytes() {
+        let mut buf = vec![MAGIC, KIND_SHARD_DONE];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = BinaryCodec.decode(&buf).unwrap_err();
+        assert_eq!(err.offset, 2);
+        assert!(err.message.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_summary_tag_reports_payload_offset() {
+        let mut bytes = Vec::new();
+        BinaryCodec.encode(&cell_result(MetricsMode::Exact, false), &mut bytes);
+        // The e2e summary tag sits right after cell(4) seed(8) label(4+len)
+        // issued(8) events(8) dropped(8) downtime(8) in the payload.
+        let label_len = "4xleast-outstanding@5.0ms".len();
+        let tag_at = HDR + 4 + 8 + 4 + label_len + 8 + 8 + 8 + 8;
+        assert!(bytes[tag_at] == 0, "expected the exact-summary tag here");
+        bytes[tag_at] = 7;
+        let err = BinaryCodec.decode(&bytes).unwrap_err();
+        assert_eq!(err.offset, tag_at);
+        assert!(err.message.contains("unknown summary tag 7"), "{err}");
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let mut bytes = Vec::new();
+        BinaryCodec.encode(&Frame::ShardDone { shard: 1, cells: 2 }, &mut bytes);
+        bytes.push(0xEE); // extra payload byte the fields do not account for
+        let len = (bytes.len() - HDR) as u32;
+        bytes[2..HDR].copy_from_slice(&len.to_le_bytes());
+        let err = BinaryCodec.decode(&bytes).unwrap_err();
+        assert!(err.message.contains("trailing"), "{err}");
+        assert_eq!(err.offset, bytes.len() - 1);
+    }
+
+    #[test]
+    fn malformed_json_line_reports_parse_offset() {
+        let err = JsonLinesCodec.decode(b"{\"frame\": nope}\n").unwrap_err();
+        assert!(err.offset >= 10, "offset {} should point at the bad token", err.offset);
+        let rendered = err.to_string();
+        assert!(rendered.contains("at byte"), "{rendered}");
+    }
+
+    #[test]
+    fn json_without_newline_is_incomplete() {
+        assert_eq!(JsonLinesCodec.decode(b"{\"frame\":\"shard_done\"").unwrap(), None);
+    }
+
+    #[test]
+    fn unknown_json_frame_type_is_rejected() {
+        let err = JsonLinesCodec.decode(b"{\"frame\":\"mystery\"}\n").unwrap_err();
+        assert!(err.message.contains("unknown frame type \"mystery\""), "{err}");
+    }
+
+    #[test]
+    fn unreconciled_drop_counters_are_rejected_by_both_codecs() {
+        let Frame::CellResult(mut r) = cell_result(MetricsMode::Exact, false) else {
+            unreachable!()
+        };
+        r.collector.dropped_by_reason[0] += 1; // no longer sums to dropped
+        let bad = Frame::CellResult(r);
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            let mut bytes = Vec::new();
+            codec.encode(&bad, &mut bytes);
+            let err = codec.decode(&bytes).unwrap_err();
+            assert!(err.message.contains("reconcile"), "{}: {err}", codec.name());
+        }
+    }
+
+    #[test]
+    fn shard_frames_with_seed_drift_are_rejected() {
+        let Frame::Shard(mut s) = shard_frame() else { unreachable!() };
+        s.cells[1].seed ^= 1;
+        let bad = Frame::Shard(s);
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            let mut bytes = Vec::new();
+            codec.encode(&bad, &mut bytes);
+            let err = codec.decode(&bytes).unwrap_err();
+            assert!(err.message.contains("seed"), "{}: {err}", codec.name());
+        }
+    }
+
+    #[test]
+    fn sketch_bucket_out_of_range_is_a_decode_error_not_a_panic() {
+        let frame = cell_result(MetricsMode::Sketch { alpha: 0.01 }, false);
+        let Frame::CellResult(mut r) = frame else { unreachable!() };
+        if let SummarySnapshot::Sketch { buckets, .. } = &mut r.collector.e2e {
+            buckets.push((u32::MAX, 1));
+        } else {
+            panic!("sketch mode expected");
+        }
+        if let SummarySnapshot::Sketch { count, .. } = &mut r.collector.e2e {
+            *count += 1; // keep totals reconciled so only the range check fires
+        }
+        let bad = Frame::CellResult(r);
+        for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+            let codec = kind.codec();
+            let mut bytes = Vec::new();
+            codec.encode(&bad, &mut bytes);
+            let err = codec.decode(&bytes).unwrap_err();
+            assert!(err.message.contains("outside space"), "{}: {err}", codec.name());
+        }
+    }
+
+    #[test]
+    fn frame_reader_reports_absolute_stream_offsets() {
+        let mut stream = Vec::new();
+        BinaryCodec.encode(&Frame::ShardDone { shard: 0, cells: 1 }, &mut stream);
+        let good_len = stream.len();
+        stream.push(0x00); // not MAGIC: corruption after one good frame
+        let mut reader = FrameReader::new(CodecKind::Binary);
+        reader.push(&stream);
+        assert!(reader.next_frame().unwrap().is_some());
+        let err = reader.next_frame().unwrap_err();
+        assert_eq!(err.offset, good_len, "offset must be absolute, past the drained frame");
+    }
+
+    #[test]
+    fn restored_wire_collector_fingerprints_match() {
+        // End-to-end through the codec: snapshot -> encode -> decode ->
+        // restore preserves the collector fingerprint in both modes and
+        // both formats.
+        for mode in [MetricsMode::Exact, MetricsMode::Sketch { alpha: 0.01 }] {
+            let frame = cell_result(mode, true);
+            let Frame::CellResult(orig) = &frame else { unreachable!() };
+            for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+                let codec = kind.codec();
+                let mut bytes = Vec::new();
+                codec.encode(&frame, &mut bytes);
+                let (Frame::CellResult(back), _) = codec.decode(&bytes).unwrap().unwrap() else {
+                    panic!("cell_result expected");
+                };
+                assert_eq!(
+                    back.collector.restore().fingerprint(),
+                    orig.collector.restore().fingerprint(),
+                    "{} {mode:?}",
+                    codec.name()
+                );
+                for (a, b) in back.classes.iter().zip(&orig.classes) {
+                    assert_eq!(
+                        a.collector.restore().fingerprint(),
+                        b.collector.restore().fingerprint()
+                    );
+                }
+            }
+        }
+    }
+}

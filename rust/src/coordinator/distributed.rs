@@ -1,0 +1,545 @@
+//! Distributed sweep engine: shard one `SweepPlan` across followers over
+//! the wire codec, absorb results as they stream back, re-queue the cells
+//! of crashed or straggling shards (PERF.md §Distributed sweeps).
+//!
+//! PR 4's sweep engine stops at one machine's cores: a `task: sweep` job
+//! saturates a single follower's `threads_per_worker` budget while the
+//! rest of the fleet idles. This module is the next multiplicative lever —
+//! cells/sec scales with fleet size — without giving up the determinism
+//! contract, which per-cell seeding already guarantees: cell `i` computes
+//! from `cell_seed(plan_seed, i)` no matter which follower runs it, or
+//! how many times.
+//!
+//! ## Protocol
+//!
+//! Everything crosses the leader/follower boundary as [`Frame`]s through
+//! a [`CodecKind`] codec (`crate::codec`), exactly as it would over a
+//! socket — followers see only bytes, never leader memory:
+//!
+//! 1. The leader builds the plan, splits the outstanding cells into
+//!    contiguous shards sized by each follower's thread budget
+//!    (`scheduler::shard_sizes`), and sends each follower one
+//!    `Shard` frame: the self-contained grid doc
+//!    ([`job::sweep_grid_doc`]) plus its assigned `CellSpec`s.
+//! 2. A follower rebuilds the *full* plan from the grid doc
+//!    ([`job::sweep_kind_from_grid_doc`] → [`job::build_sweep_plan`]),
+//!    cross-checks the assignment's seeds and labels against its own
+//!    derivation (drift fails loudly), runs only its indices on its
+//!    thread budget (`SweepPlan::run_indices`, the same `map_indexed`
+//!    pool as a local run), and streams one `CellResult` frame back **as
+//!    each cell finishes** — not one blob at shard end — closing with
+//!    `ShardDone` or `ShardFailed`.
+//! 3. The leader absorbs frames incrementally: each fresh cell fills its
+//!    slot in the outstanding-cells ledger and fires the streaming hook
+//!    (partial grids are usable — e.g. inserted into a PerfDB — before
+//!    the sweep completes). Duplicate frames for an already-filled cell
+//!    index are counted and dropped (first frame wins): re-queued cells
+//!    are bit-identical re-runs, so which copy lands first cannot matter.
+//! 4. If a shard dies (`ShardFailed`, or decode poison on its stream),
+//!    its unfinished cells are re-queued onto the healthy followers in
+//!    the next round — the shard-level analogue of PR 8's in-place cell
+//!    retry, and the same argument applies: a re-run from the per-cell
+//!    seed is bit-identical, so failure handling is invisible in the
+//!    output.
+//!
+//! The final [`SweepOutcome`] is assembled **in plan order** from the
+//! ledger, so aggregation (`SweepOutcome::aggregate_classes`, via
+//! `Collector::absorb`) and the per-cell PerfDB records are bit-for-bit
+//! what `SweepPlan::run` produces serially — at any follower count, any
+//! thread budget, any crash schedule that leaves at least one follower
+//! alive. `tests/distributed_sweep.rs` asserts this end-to-end.
+//!
+//! Followers here are scoped threads speaking the full wire protocol
+//! in-process. The transport is the only stub: swapping the `mpsc`
+//! channels for sockets changes no frame, no codec byte, and no
+//! determinism argument.
+
+use crate::codec::{CellResultFrame, CellSpec, CodecKind, Frame, FrameReader, ShardAssignment};
+use crate::coordinator::job::{self, JobKind};
+use crate::coordinator::scheduler::shard_sizes;
+use crate::metrics::ScaleTimeline;
+use crate::serving::cluster::ClusterResult;
+use crate::sweep::{CellOutcome, SweepOutcome};
+use anyhow::{anyhow, bail, Result};
+use std::sync::mpsc;
+
+/// One follower of the distributed engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FollowerSpec {
+    /// Sweep-cell thread budget (the follower's `threads_per_worker`);
+    /// also its weight in shard sizing.
+    pub threads: usize,
+    /// Fault-injection knob: complete only this many assigned cells, then
+    /// report `ShardFailed` and stay dead for later rounds. Deterministic
+    /// by construction — the crash point is a cell count, not a timer.
+    pub crash_after: Option<usize>,
+}
+
+impl FollowerSpec {
+    pub fn healthy(threads: usize) -> FollowerSpec {
+        FollowerSpec { threads, crash_after: None }
+    }
+}
+
+/// Distributed-run configuration.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub followers: Vec<FollowerSpec>,
+    /// Wire codec for every frame in both directions.
+    pub codec: CodecKind,
+    /// Transport chunk size for follower→leader streams, bytes. Frames
+    /// are deliberately split across chunks so the leader's
+    /// [`FrameReader`] reassembly path is always exercised.
+    pub chunk_bytes: usize,
+    /// Duplicate-injection knob: each surviving follower re-sends its
+    /// first N cell frames after finishing (late duplicates), exercising
+    /// the leader's by-cell-index reconciliation.
+    pub duplicate_first: usize,
+}
+
+impl DistConfig {
+    /// `followers` equal followers splitting `total_threads` between them
+    /// (each at least 1), no fault injection — what a `task: sweep` job
+    /// with a `followers:` knob runs under.
+    pub fn uniform(followers: usize, total_threads: usize, codec: CodecKind) -> DistConfig {
+        let n = followers.max(1);
+        let per = shard_sizes(total_threads.max(n), &vec![1; n]);
+        DistConfig {
+            followers: per.into_iter().map(|t| FollowerSpec::healthy(t.max(1))).collect(),
+            codec,
+            chunk_bytes: 4096,
+            duplicate_first: 0,
+        }
+    }
+}
+
+/// Wire and re-queue accounting for one distributed run. Deterministic:
+/// both codecs are byte-deterministic and the crash/duplicate knobs are
+/// cell counts, so the same config reproduces the same stats.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DistStats {
+    /// Re-queue rounds executed (1 = no failures).
+    pub rounds: usize,
+    /// Shard assignment bytes, leader → followers (all rounds).
+    pub bytes_to_followers: u64,
+    /// Result stream bytes, followers → leader (all rounds).
+    pub bytes_to_leader: u64,
+    /// Cell-result frames received, duplicates included.
+    pub frames_to_leader: u64,
+    /// Late duplicate frames dropped by the cell-index reconciliation.
+    pub duplicate_frames: u64,
+    /// Cells re-queued onto healthy followers after a shard failure.
+    pub cells_rerun: u64,
+    /// First-round shard sizes by follower — the balance view.
+    pub shard_cells: Vec<usize>,
+}
+
+/// A distributed run's outcome: plan-order cell results (bit-identical to
+/// `SweepPlan::run`) plus the wire accounting.
+pub struct DistOutcome {
+    pub outcome: SweepOutcome,
+    pub stats: DistStats,
+}
+
+/// Run a `JobKind::Sweep` grid sharded across `cfg.followers`, absorbing
+/// streamed results into the outstanding-cells ledger and re-queuing the
+/// cells of failed shards. See the module doc for the protocol and the
+/// determinism argument.
+pub fn run_sharded(kind: &JobKind, seed: u64, cfg: &DistConfig) -> Result<DistOutcome> {
+    run_sharded_with(kind, seed, cfg, &mut |_| {})
+}
+
+/// [`run_sharded`] with a streaming hook: `on_cell` fires once per fresh
+/// (non-duplicate) cell result, in **arrival order** — which follower
+/// finishes first is scheduling-dependent, so a caller wanting
+/// deterministic output must key by `frame.cell` (a PerfDB record per
+/// cell does exactly that; `benches/l4_des_throughput.rs` streams records
+/// this way). The returned outcome is plan-ordered and deterministic
+/// regardless of the hook.
+pub fn run_sharded_with(
+    kind: &JobKind,
+    seed: u64,
+    cfg: &DistConfig,
+    on_cell: &mut dyn FnMut(&CellResultFrame),
+) -> Result<DistOutcome> {
+    if cfg.followers.is_empty() {
+        bail!("distributed sweep needs at least one follower");
+    }
+    let (plan, _axes) = job::build_sweep_plan(kind, seed)?;
+    let total = plan.len();
+    let grid = job::sweep_grid_doc(kind);
+    let nf = cfg.followers.len();
+    let chunk = cfg.chunk_bytes.max(1);
+
+    let mut slots: Vec<Option<CellResultFrame>> = Vec::with_capacity(total);
+    slots.resize_with(total, || None);
+    let mut alive = vec![true; nf];
+    let mut outstanding: Vec<usize> = (0..total).collect();
+    let mut stats = DistStats::default();
+
+    while !outstanding.is_empty() {
+        let healthy: Vec<usize> = (0..nf).filter(|&f| alive[f]).collect();
+        if healthy.is_empty() {
+            bail!(
+                "distributed sweep: every follower failed with {} of {total} cells unfinished",
+                outstanding.len()
+            );
+        }
+        stats.rounds += 1;
+
+        // Contiguous budget-proportional shards over the outstanding cells.
+        let budgets: Vec<usize> = healthy.iter().map(|&f| cfg.followers[f].threads).collect();
+        let sizes = shard_sizes(outstanding.len(), &budgets);
+        let mut shards: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut cursor = 0;
+        for (&f, &size) in healthy.iter().zip(&sizes) {
+            if size > 0 {
+                shards.push((f, outstanding[cursor..cursor + size].to_vec()));
+                cursor += size;
+            }
+        }
+        if stats.rounds == 1 {
+            stats.shard_cells = vec![0; nf];
+            for (f, cells) in &shards {
+                stats.shard_cells[*f] = cells.len();
+            }
+        }
+
+        // Serialize one shard assignment per participating follower.
+        let codec = cfg.codec.codec();
+        let mut wires: Vec<(usize, Vec<u8>)> = Vec::with_capacity(shards.len());
+        for (f, cells) in &shards {
+            let assignment = ShardAssignment {
+                shard: *f as u32,
+                plan_seed: seed,
+                grid: grid.clone(),
+                cells: cells
+                    .iter()
+                    .map(|&i| CellSpec {
+                        index: i as u32,
+                        seed: plan.cell_seed(i),
+                        label: plan.cells()[i].label().to_string(),
+                    })
+                    .collect(),
+            };
+            let mut bytes = Vec::new();
+            codec.encode(&Frame::Shard(assignment), &mut bytes);
+            stats.bytes_to_followers += bytes.len() as u64;
+            wires.push((*f, bytes));
+        }
+
+        // One round: spawn the participating followers, drain their
+        // streams until every sender hangs up, then reconcile.
+        let (tx, rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        let mut deaths = 0usize;
+        let absorbed_before = slots.iter().filter(|s| s.is_some()).count();
+        std::thread::scope(|scope| -> Result<()> {
+            for (f, shard_bytes) in wires {
+                let tx = tx.clone();
+                let spec = cfg.followers[f];
+                scope.spawn(move || follower_round(f, spec, cfg, shard_bytes, tx));
+            }
+            drop(tx);
+
+            let mut readers: Vec<Option<FrameReader>> = (0..nf).map(|_| None).collect();
+            for (f, chunk_bytes) in rx {
+                if !alive[f] {
+                    // Late chunks from a follower already marked dead
+                    // (failed shard or poisoned stream) carry nothing the
+                    // re-queue rounds won't recompute.
+                    continue;
+                }
+                stats.bytes_to_leader += chunk_bytes.len() as u64;
+                let reader = readers[f].get_or_insert_with(|| FrameReader::new(cfg.codec));
+                reader.push(&chunk_bytes);
+                loop {
+                    let frame = match reader.next_frame() {
+                        Ok(Some(frame)) => frame,
+                        Ok(None) => break,
+                        // A poisoned stream is a failed peer: drop the
+                        // follower, keep its already-absorbed cells, and
+                        // let the re-queue round cover the rest.
+                        Err(e) => {
+                            eprintln!("distributed sweep: follower {f} stream corrupt: {e}");
+                            alive[f] = false;
+                            deaths += 1;
+                            break;
+                        }
+                    };
+                    match frame {
+                        Frame::CellResult(r) => {
+                            stats.frames_to_leader += 1;
+                            let i = r.cell as usize;
+                            if i >= total {
+                                bail!("follower {f} reported unknown cell {i} (grid has {total})");
+                            }
+                            if slots[i].is_some() {
+                                // Late duplicate (a re-queued cell's first
+                                // copy, or an injected re-send): identical
+                                // bits by the seeding argument, so first
+                                // frame wins and the copy is dropped.
+                                stats.duplicate_frames += 1;
+                                continue;
+                            }
+                            if r.seed != plan.cell_seed(i) || r.label != plan.cells()[i].label() {
+                                bail!(
+                                    "follower {f} cell {i} drifted: seed/label disagree with the plan"
+                                );
+                            }
+                            on_cell(&r);
+                            slots[i] = Some(r);
+                        }
+                        Frame::ShardDone { .. } => {}
+                        Frame::ShardFailed { shard, completed, error } => {
+                            eprintln!(
+                                "distributed sweep: shard {shard} failed after {completed} cells: {error}"
+                            );
+                            alive[shard as usize] = false;
+                            deaths += 1;
+                        }
+                        Frame::Shard(_) => {
+                            bail!("follower {f} sent a shard assignment to the leader")
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })?;
+
+        let absorbed_after = slots.iter().filter(|s| s.is_some()).count();
+        outstanding.retain(|&i| slots[i].is_none());
+        if !outstanding.is_empty() {
+            if absorbed_after == absorbed_before && deaths == 0 {
+                bail!(
+                    "distributed sweep stalled in round {}: {} cells outstanding, no progress, no failures",
+                    stats.rounds,
+                    outstanding.len()
+                );
+            }
+            stats.cells_rerun += outstanding.len() as u64;
+        }
+    }
+
+    // Assemble in plan order: this—not arrival order—is what makes the
+    // sharded outcome byte-for-byte the serial one.
+    let mut cells = Vec::with_capacity(total);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let r = slot.ok_or_else(|| anyhow!("cell {i} never absorbed despite drained ledger"))?;
+        cells.push(CellOutcome {
+            label: r.label,
+            seed: r.seed,
+            result: ClusterResult {
+                collector: r.collector.restore(),
+                // Per-replica views and the scale timeline stay on the
+                // follower: sweep records never read them, and shipping
+                // them would dominate the wire for nothing.
+                replicas: Vec::new(),
+                scale: ScaleTimeline::new(0),
+                dropped: r.dropped,
+                classes: r.classes.iter().map(|c| c.restore()).collect(),
+                issued: r.issued,
+                downtime_s: r.downtime_s,
+                events: r.events,
+            },
+        });
+    }
+    Ok(DistOutcome { outcome: SweepOutcome { cells }, stats })
+}
+
+/// One follower's round: decode the shard from bytes, rebuild the plan
+/// from the grid doc, run the assigned cells on the local thread budget,
+/// stream each result back as it completes. Every failure mode —
+/// malformed shard, grid drift, injected crash — reports `ShardFailed`
+/// rather than leaving the leader hanging.
+fn follower_round(
+    f: usize,
+    spec: FollowerSpec,
+    cfg: &DistConfig,
+    shard_bytes: Vec<u8>,
+    tx: mpsc::Sender<(usize, Vec<u8>)>,
+) {
+    let codec = cfg.codec.codec();
+    let send = |bytes: Vec<u8>| {
+        // Deliberately chunked so the leader's reassembly path always
+        // runs; a dropped receiver means the leader already bailed.
+        for piece in bytes.chunks(cfg.chunk_bytes.max(1)) {
+            if tx.send((f, piece.to_vec())).is_err() {
+                return;
+            }
+        }
+    };
+    let fail = |completed: u32, error: String| {
+        let mut bytes = Vec::new();
+        codec.encode(&Frame::ShardFailed { shard: f as u32, completed, error }, &mut bytes);
+        send(bytes);
+    };
+
+    // Decode the assignment (the codec validates seeds against the plan
+    // seed in-band).
+    let mut reader = FrameReader::new(cfg.codec);
+    reader.push(&shard_bytes);
+    let assignment = match reader.next_frame() {
+        Ok(Some(Frame::Shard(a))) => a,
+        Ok(_) => return fail(0, "expected a shard frame".into()),
+        Err(e) => return fail(0, format!("shard decode: {e}")),
+    };
+
+    // Rebuild the full plan from the wire-carried grid doc — the follower
+    // shares no memory with the leader's plan.
+    let plan = match job::sweep_kind_from_grid_doc(&assignment.grid)
+        .and_then(|kind| job::build_sweep_plan(&kind, assignment.plan_seed))
+    {
+        Ok((plan, _axes)) => plan,
+        Err(e) => return fail(0, format!("grid doc: {e}")),
+    };
+    // Drift check: the rebuilt plan must derive the exact seeds and labels
+    // the leader assigned, or the "sharding is invisible" contract is
+    // already broken — fail the shard loudly instead of computing wrong
+    // cells.
+    for c in &assignment.cells {
+        let i = c.index as usize;
+        if i >= plan.len()
+            || plan.cell_seed(i) != c.seed
+            || plan.cells()[i].label() != c.label
+        {
+            return fail(0, format!("assignment cell {i} disagrees with the rebuilt plan"));
+        }
+    }
+
+    let assigned: Vec<usize> = assignment.cells.iter().map(|c| c.index as usize).collect();
+    let run_count = spec.crash_after.map_or(assigned.len(), |k| k.min(assigned.len()));
+    let crashed = run_count < assigned.len();
+
+    // Stream each finished cell immediately. `run_indices` computes cells
+    // through the same pool and seed derivation as a local run, so what
+    // goes on the wire is bit-identical to serial by construction.
+    let mut first_frames: Vec<Vec<u8>> = Vec::new();
+    for (i, outcome) in plan.run_indices(&assigned[..run_count], spec.threads.max(1)) {
+        let r = &outcome.result;
+        let frame = Frame::CellResult(CellResultFrame {
+            cell: i as u32,
+            seed: outcome.seed,
+            label: outcome.label.clone(),
+            issued: r.issued,
+            events: r.events,
+            dropped: r.dropped,
+            downtime_s: r.downtime_s,
+            collector: r.collector.snapshot(),
+            classes: r.classes.iter().map(|c| c.snapshot()).collect(),
+        });
+        let mut bytes = Vec::new();
+        codec.encode(&frame, &mut bytes);
+        if first_frames.len() < cfg.duplicate_first {
+            first_frames.push(bytes.clone());
+        }
+        send(bytes);
+    }
+
+    if crashed {
+        return fail(run_count as u32, "injected crash (FollowerSpec::crash_after)".into());
+    }
+    // Late duplicates (injection knob): re-send the first N frames after
+    // the fact, exercising the leader's by-index reconciliation.
+    for bytes in first_frames {
+        send(bytes);
+    }
+    let mut bytes = Vec::new();
+    codec.encode(
+        &Frame::ShardDone { shard: f as u32, cells: run_count as u32 },
+        &mut bytes,
+    );
+    send(bytes);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobSpec;
+
+    fn grid_spec(extra: &str) -> JobKind {
+        let yaml = format!(
+            "name: dist-grid\ntask: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+             routers: [round-robin, least-outstanding]\nreplicas: [1, 2]\n\
+             batch_timeouts_ms: [2, 5]\nworkload:\n  rate_per_replica: 80.0\n  duration_s: 3\n\
+             batching:\n  max_size: 8\n  max_wait_ms: 2\n{extra}"
+        );
+        JobSpec::parse_yaml(&yaml).expect("grid yaml parses").kind
+    }
+
+    fn fingerprints(outcome: &SweepOutcome) -> Vec<u64> {
+        outcome.cells.iter().map(|c| c.result.collector.fingerprint()).collect()
+    }
+
+    #[test]
+    fn sharded_matches_serial_for_both_codecs() {
+        let kind = grid_spec("");
+        let (plan, _) = job::build_sweep_plan(&kind, 42).unwrap();
+        let serial = plan.run(2);
+        for codec in [CodecKind::Binary, CodecKind::JsonLines] {
+            let dist = run_sharded(&kind, 42, &DistConfig::uniform(3, 6, codec)).unwrap();
+            assert_eq!(dist.outcome.len(), serial.len());
+            assert_eq!(fingerprints(&dist.outcome), fingerprints(&serial), "{codec:?}");
+            for (a, b) in dist.outcome.cells.iter().zip(&serial.cells) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.seed, b.seed);
+                assert_eq!(a.result.issued, b.result.issued);
+                assert_eq!(a.result.events, b.result.events);
+            }
+            assert_eq!(dist.stats.rounds, 1);
+            assert_eq!(dist.stats.cells_rerun, 0);
+            assert_eq!(dist.stats.shard_cells.iter().sum::<usize>(), serial.len());
+            assert!(dist.stats.bytes_to_leader > 0);
+        }
+    }
+
+    #[test]
+    fn crashed_shard_cells_are_requeued_and_identical() {
+        let kind = grid_spec("");
+        let (plan, _) = job::build_sweep_plan(&kind, 7).unwrap();
+        let serial = plan.run(1);
+        let cfg = DistConfig {
+            followers: vec![
+                FollowerSpec::healthy(2),
+                FollowerSpec { threads: 2, crash_after: Some(1) },
+            ],
+            codec: CodecKind::Binary,
+            chunk_bytes: 64,
+            duplicate_first: 0,
+        };
+        let dist = run_sharded(&kind, 7, &cfg).unwrap();
+        assert_eq!(fingerprints(&dist.outcome), fingerprints(&serial));
+        assert!(dist.stats.rounds >= 2, "crash must force a re-queue round");
+        assert!(dist.stats.cells_rerun > 0);
+    }
+
+    #[test]
+    fn duplicate_late_frames_are_dropped_by_cell_index() {
+        let kind = grid_spec("");
+        let (plan, _) = job::build_sweep_plan(&kind, 9).unwrap();
+        let serial = plan.run(1);
+        let mut cfg = DistConfig::uniform(2, 4, CodecKind::Binary);
+        cfg.duplicate_first = 2;
+        let mut streamed = 0usize;
+        let dist = run_sharded_with(&kind, 9, &cfg, &mut |_| streamed += 1).unwrap();
+        assert_eq!(fingerprints(&dist.outcome), fingerprints(&serial));
+        assert_eq!(dist.stats.duplicate_frames, 4, "2 followers x 2 re-sent frames");
+        assert_eq!(streamed, serial.len(), "the hook sees each cell exactly once");
+        assert_eq!(
+            dist.stats.frames_to_leader,
+            serial.len() as u64 + dist.stats.duplicate_frames
+        );
+    }
+
+    #[test]
+    fn all_followers_dead_is_a_loud_error() {
+        let kind = grid_spec("");
+        let cfg = DistConfig {
+            followers: vec![FollowerSpec { threads: 2, crash_after: Some(0) }],
+            codec: CodecKind::Binary,
+            chunk_bytes: 512,
+            duplicate_first: 0,
+        };
+        let err = run_sharded(&kind, 1, &cfg).unwrap_err().to_string();
+        assert!(err.contains("every follower failed"), "{err}");
+    }
+}

@@ -184,6 +184,8 @@ use crate::serving::{
     FaultProfile, Policy, RetryPolicy, RouterPolicy, ScalePolicy, ServiceModel, SimConfig,
     TenantSpec,
 };
+use crate::codec::CodecKind;
+use crate::coordinator::distributed;
 use crate::sweep::SweepPlan;
 use crate::util::json::Json;
 use crate::util::yamlish;
@@ -272,6 +274,13 @@ pub enum JobKind {
         faults: Option<FaultPlan>,
         /// Optional retry policy, applied to every cell.
         retry: Option<RetryPolicy>,
+        /// Shard the grid across this many followers through the
+        /// distributed sweep engine (`coordinator::distributed`); `0` or
+        /// `1` runs locally on the worker's thread budget. Results are
+        /// bit-identical either way (PERF.md §Distributed sweeps).
+        followers: usize,
+        /// Wire codec for shard and result frames when `followers >= 2`.
+        codec: CodecKind,
     },
     /// Multi-model replica serving (Sharing versus Dedicate, §3.3): one
     /// Poisson stream per model against a shared fleet (co-located under
@@ -483,7 +492,7 @@ impl JobSpec {
                     task,
                     &["model", "platform", "software", "routers", "replicas",
                       "batch_timeouts_ms", "workload", "batching", "scale", "sketch_alpha",
-                      "admission", "faults", "retry"],
+                      "admission", "faults", "retry", "followers", "codec"],
                 )?;
                 let wl = doc.get("workload");
                 let routers: Vec<String> = match doc.get("routers").and_then(|v| v.as_arr()) {
@@ -551,6 +560,21 @@ impl JobSpec {
                         "sweep needs non-empty 'routers', 'replicas', and 'batch_timeouts_ms' lists"
                     );
                 }
+                let followers = match doc.get("followers") {
+                    None => 0,
+                    Some(v) => match v.as_i64() {
+                        Some(n) if n >= 0 => n as usize,
+                        _ => bail!("sweep 'followers' must be a non-negative integer"),
+                    },
+                };
+                let codec = match doc.get("codec") {
+                    None => CodecKind::Binary,
+                    Some(v) => match v.as_str() {
+                        Some("binary") => CodecKind::Binary,
+                        Some("jsonl") => CodecKind::JsonLines,
+                        _ => bail!("sweep 'codec' must be 'binary' or 'jsonl'"),
+                    },
+                };
                 JobKind::Sweep {
                     model: str_or(doc, "model", "resnet50"),
                     platform: str_or(doc, "platform", "G1"),
@@ -575,6 +599,8 @@ impl JobSpec {
                     admission: admission_spec(doc)?,
                     faults: faults_spec(doc)?,
                     retry: retry_spec(doc)?,
+                    followers,
+                    codec,
                 }
             }
             "multimodel" => {
@@ -1008,6 +1034,447 @@ fn split_streams(adm: &AdmissionConfig, pattern: &Pattern) -> Vec<StreamSpec> {
         .collect()
 }
 
+fn u64_json(x: u64) -> Json {
+    if x <= i64::MAX as u64 {
+        Json::Int(x as i64)
+    } else {
+        // JSON integers top out at i64 here; full-width u64s (PCG seeds,
+        // byte counts) ride as decimal strings.
+        Json::Str(x.to_string())
+    }
+}
+
+fn json_u64(v: &Json, what: &str) -> Result<u64> {
+    if let Some(i) = v.as_i64() {
+        return u64::try_from(i).map_err(|_| anyhow!("{what} must be non-negative, got {i}"));
+    }
+    if let Some(s) = v.as_str() {
+        return s.parse::<u64>().map_err(|_| anyhow!("{what}: unparseable u64 string {s:?}"));
+    }
+    bail!("{what} must be a u64")
+}
+
+/// Serialize a `JobKind::Sweep` into the self-contained grid doc that
+/// rides inside a distributed-sweep shard frame (`codec::ShardAssignment`).
+///
+/// The doc carries the *parsed* field values (timeouts in seconds, retry
+/// backoff in seconds, fault recovery in bytes) rather than the YAML
+/// submission shape, so no unit conversion happens on the wire and
+/// [`sweep_kind_from_grid_doc`] rebuilds the kind **exactly** — the
+/// follower's plan is field-for-field the leader's plan, which is what
+/// makes re-queued cells bit-identical. `followers`/`codec` are not
+/// carried: a follower always runs its shard locally.
+///
+/// Panics on a non-sweep kind (programmer error — only the distributed
+/// engine builds grid docs).
+pub fn sweep_grid_doc(kind: &JobKind) -> Json {
+    let JobKind::Sweep {
+        model,
+        platform,
+        software,
+        routers,
+        replicas,
+        batch_timeouts_s,
+        rate_per_replica,
+        duration_s,
+        max_batch,
+        metrics,
+        admission,
+        faults,
+        retry,
+        followers: _,
+        codec: _,
+    } = kind
+    else {
+        panic!("sweep_grid_doc on a non-sweep job kind");
+    };
+    let mut doc = Json::obj();
+    doc.set("model", Json::Str(model.clone()));
+    doc.set("platform", Json::Str(platform.clone()));
+    doc.set("software", Json::Str(software.clone()));
+    doc.set("routers", Json::Arr(routers.iter().map(|r| Json::Str(r.clone())).collect()));
+    doc.set("replicas", Json::Arr(replicas.iter().map(|&n| Json::Int(n as i64)).collect()));
+    doc.set(
+        "batch_timeouts_s",
+        Json::Arr(batch_timeouts_s.iter().map(|&t| Json::Num(t)).collect()),
+    );
+    doc.set("rate_per_replica", Json::Num(*rate_per_replica));
+    doc.set("duration_s", Json::Num(*duration_s));
+    doc.set("max_batch", Json::Int(*max_batch as i64));
+    let mut m = Json::obj();
+    match metrics {
+        MetricsMode::Exact => {
+            m.set("mode", Json::Str("exact".into()));
+        }
+        MetricsMode::Sketch { alpha } => {
+            m.set("mode", Json::Str("sketch".into()));
+            m.set("alpha", Json::Num(*alpha));
+        }
+    }
+    doc.set("metrics", m);
+    if let Some(adm) = admission {
+        let mut a = Json::obj();
+        a.set(
+            "shed_depth",
+            Json::Arr(adm.shed_depth.iter().map(|&d| Json::Int(d as i64)).collect()),
+        );
+        a.set(
+            "tenants",
+            Json::Arr(
+                adm.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut o = Json::obj();
+                        o.set("name", Json::Str(t.name.clone()));
+                        o.set("class", Json::Int(t.class as i64));
+                        o.set("weight", Json::Num(t.weight));
+                        if let Some(rate) = t.rate {
+                            o.set("rate", Json::Num(rate));
+                        }
+                        o.set("burst", Json::Num(t.burst));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        doc.set("admission", a);
+    }
+    if let Some(plan) = faults {
+        let mut f = Json::obj();
+        f.set(
+            "script",
+            Json::Arr(
+                plan.script
+                    .iter()
+                    .map(|op| {
+                        let mut o = Json::obj();
+                        match *op {
+                            FaultOp::Crash { replica, at_s } => {
+                                o.set("op", Json::Str("crash".into()));
+                                o.set("replica", Json::Int(replica as i64));
+                                o.set("at_s", Json::Num(at_s));
+                            }
+                            FaultOp::Recover { replica, at_s } => {
+                                o.set("op", Json::Str("recover".into()));
+                                o.set("replica", Json::Int(replica as i64));
+                                o.set("at_s", Json::Num(at_s));
+                            }
+                            FaultOp::Degrade { replica, at_s, until_s, factor } => {
+                                o.set("op", Json::Str("degrade".into()));
+                                o.set("replica", Json::Int(replica as i64));
+                                o.set("at_s", Json::Num(at_s));
+                                o.set("until_s", Json::Num(until_s));
+                                o.set("factor", Json::Num(factor));
+                            }
+                        }
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        if let Some(p) = &plan.profile {
+            let mut pj = Json::obj();
+            pj.set("mttf_s", Json::Num(p.mttf_s));
+            pj.set("mttr_s", Json::Num(p.mttr_s));
+            if let Some(d) = &p.degrade {
+                let mut dj = Json::obj();
+                dj.set("mtbd_s", Json::Num(d.mtbd_s));
+                dj.set("duration_s", Json::Num(d.duration_s));
+                dj.set("factor", Json::Num(d.factor));
+                pj.set("degrade", dj);
+            }
+            f.set("profile", pj);
+        }
+        f.set("seed", u64_json(plan.seed));
+        f.set("recovery_bytes", u64_json(plan.recovery_bytes));
+        doc.set("faults", f);
+    }
+    if let Some(rp) = retry {
+        let mut r = Json::obj();
+        r.set("max_attempts", Json::Int(rp.max_attempts as i64));
+        r.set("deadline_s", Json::Num(rp.deadline_s));
+        r.set("backoff_s", Json::Num(rp.backoff_s));
+        r.set("backoff_cap_s", Json::Num(rp.backoff_cap_s));
+        r.set("hedge", Json::Bool(rp.hedge));
+        doc.set("retry", r);
+    }
+    doc
+}
+
+/// Rebuild a `JobKind::Sweep` from a grid doc ([`sweep_grid_doc`]) —
+/// the follower side of a shard assignment. Exact inverse: every field
+/// round-trips value-for-value (floats bit-for-bit; the JSON writer uses
+/// shortest-roundtrip formatting and the binary codec embeds that same
+/// text). Missing or mistyped fields fail loudly — a malformed grid doc
+/// means wire corruption the codec's structural checks cannot see.
+pub fn sweep_kind_from_grid_doc(doc: &Json) -> Result<JobKind> {
+    fn need<'a>(doc: &'a Json, key: &str) -> Result<&'a Json> {
+        doc.get(key).ok_or_else(|| anyhow!("grid doc missing {key:?}"))
+    }
+    fn need_str(doc: &Json, key: &str) -> Result<String> {
+        need(doc, key)?
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("grid doc {key:?} must be a string"))
+    }
+    fn need_f64(doc: &Json, key: &str) -> Result<f64> {
+        need(doc, key)?.as_f64().ok_or_else(|| anyhow!("grid doc {key:?} must be a number"))
+    }
+    fn need_usize(doc: &Json, key: &str) -> Result<usize> {
+        match need(doc, key)?.as_i64() {
+            Some(n) if n >= 0 => Ok(n as usize),
+            _ => bail!("grid doc {key:?} must be a non-negative integer"),
+        }
+    }
+    let routers = need(doc, "routers")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("grid doc 'routers' must be an array"))?
+        .iter()
+        .map(|v| v.as_str().map(str::to_string))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow!("grid doc 'routers' entries must be strings"))?;
+    let replicas = need(doc, "replicas")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("grid doc 'replicas' must be an array"))?
+        .iter()
+        .map(|v| v.as_i64().filter(|&n| n > 0).map(|n| n as usize))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow!("grid doc 'replicas' entries must be positive integers"))?;
+    let batch_timeouts_s = need(doc, "batch_timeouts_s")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("grid doc 'batch_timeouts_s' must be an array"))?
+        .iter()
+        .map(|v| v.as_f64().filter(|&t| t > 0.0))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow!("grid doc 'batch_timeouts_s' entries must be positive numbers"))?;
+    if routers.is_empty() || replicas.is_empty() || batch_timeouts_s.is_empty() {
+        bail!("grid doc axes must be non-empty");
+    }
+    let metrics = {
+        let m = need(doc, "metrics")?;
+        match m.get("mode").and_then(|v| v.as_str()) {
+            Some("exact") => MetricsMode::Exact,
+            Some("sketch") => {
+                let alpha = need_f64(m, "alpha")?;
+                if !(alpha > 0.0 && alpha < 1.0) {
+                    bail!("grid doc sketch alpha must be in (0, 1), got {alpha}");
+                }
+                MetricsMode::Sketch { alpha }
+            }
+            _ => bail!("grid doc 'metrics.mode' must be 'exact' or 'sketch'"),
+        }
+    };
+    let admission = match doc.get("admission") {
+        None => None,
+        Some(a) => {
+            let shed_depth = need(a, "shed_depth")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("grid doc 'admission.shed_depth' must be an array"))?
+                .iter()
+                .map(|v| v.as_i64().filter(|&d| d > 0).map(|d| d as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| anyhow!("grid doc shed_depth entries must be positive"))?;
+            let tenants = need(a, "tenants")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("grid doc 'admission.tenants' must be an array"))?
+                .iter()
+                .map(|t| -> Result<TenantSpec> {
+                    Ok(TenantSpec {
+                        name: need_str(t, "name")?,
+                        class: u8::try_from(need_usize(t, "class")?)
+                            .map_err(|_| anyhow!("grid doc tenant class exceeds u8"))?,
+                        weight: need_f64(t, "weight")?,
+                        rate: match t.get("rate") {
+                            None => None,
+                            Some(v) => Some(
+                                v.as_f64()
+                                    .ok_or_else(|| anyhow!("grid doc tenant rate must be a number"))?,
+                            ),
+                        },
+                        burst: need_f64(t, "burst")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Some(AdmissionConfig { tenants, shed_depth })
+        }
+    };
+    let faults = match doc.get("faults") {
+        None => None,
+        Some(f) => {
+            let script = need(f, "script")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("grid doc 'faults.script' must be an array"))?
+                .iter()
+                .map(|op| -> Result<FaultOp> {
+                    let replica = need_usize(op, "replica")?;
+                    let at_s = need_f64(op, "at_s")?;
+                    Ok(match op.get("op").and_then(|v| v.as_str()) {
+                        Some("crash") => FaultOp::Crash { replica, at_s },
+                        Some("recover") => FaultOp::Recover { replica, at_s },
+                        Some("degrade") => FaultOp::Degrade {
+                            replica,
+                            at_s,
+                            until_s: need_f64(op, "until_s")?,
+                            factor: need_f64(op, "factor")?,
+                        },
+                        _ => bail!("grid doc fault op must be crash, recover, or degrade"),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let profile = match f.get("profile") {
+                None => None,
+                Some(p) => Some(FaultProfile {
+                    mttf_s: need_f64(p, "mttf_s")?,
+                    mttr_s: need_f64(p, "mttr_s")?,
+                    degrade: match p.get("degrade") {
+                        None => None,
+                        Some(d) => Some(DegradeProfile {
+                            mtbd_s: need_f64(d, "mtbd_s")?,
+                            duration_s: need_f64(d, "duration_s")?,
+                            factor: need_f64(d, "factor")?,
+                        }),
+                    },
+                }),
+            };
+            Some(FaultPlan {
+                script,
+                profile,
+                seed: json_u64(need(f, "seed")?, "grid doc faults seed")?,
+                recovery_bytes: json_u64(
+                    need(f, "recovery_bytes")?,
+                    "grid doc faults recovery_bytes",
+                )?,
+            })
+        }
+    };
+    let retry = match doc.get("retry") {
+        None => None,
+        Some(r) => Some(RetryPolicy {
+            max_attempts: u32::try_from(need_usize(r, "max_attempts")?)
+                .map_err(|_| anyhow!("grid doc retry max_attempts exceeds u32"))?,
+            deadline_s: need_f64(r, "deadline_s")?,
+            backoff_s: need_f64(r, "backoff_s")?,
+            backoff_cap_s: need_f64(r, "backoff_cap_s")?,
+            hedge: need(r, "hedge")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("grid doc retry hedge must be a boolean"))?,
+        }),
+    };
+    Ok(JobKind::Sweep {
+        model: need_str(doc, "model")?,
+        platform: need_str(doc, "platform")?,
+        software: need_str(doc, "software")?,
+        routers,
+        replicas,
+        batch_timeouts_s,
+        rate_per_replica: need_f64(doc, "rate_per_replica")?,
+        duration_s: need_f64(doc, "duration_s")?,
+        max_batch: need_usize(doc, "max_batch")?,
+        metrics,
+        admission,
+        faults,
+        retry,
+        followers: 0,
+        codec: CodecKind::Binary,
+    })
+}
+
+/// Per-cell report axes of a sweep grid, in plan order:
+/// `(fleet size, router name, offered rate, batching timeout s)`.
+pub type SweepAxes = (usize, String, f64, f64);
+
+/// Build the sweep plan and per-cell axes for a `JobKind::Sweep`.
+///
+/// Shared by the local execute path and the distributed followers
+/// (`coordinator::distributed`): both sides construct cells through this
+/// one function from the same grid description, so cell `i` is the same
+/// closure over the same config on every machine — the structural half of
+/// the sharding-is-invisible guarantee (per-cell seeds are the other
+/// half). `seed` is the job seed; per-cell seeds derive from it inside
+/// the plan.
+pub fn build_sweep_plan(kind: &JobKind, seed: u64) -> Result<(SweepPlan, Vec<SweepAxes>)> {
+    let JobKind::Sweep {
+        model,
+        platform,
+        software,
+        routers,
+        replicas,
+        batch_timeouts_s,
+        rate_per_replica,
+        duration_s,
+        max_batch,
+        metrics,
+        admission,
+        faults,
+        retry,
+        ..
+    } = kind
+    else {
+        bail!("build_sweep_plan on a non-sweep job kind");
+    };
+    let sw = backends::find(software).ok_or_else(|| anyhow!("software {software:?} unknown"))?;
+    let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
+    let service = service_model_for(model, platform)?;
+    // Resolve router names eagerly: a typo fails the whole job before any
+    // cell burns cycles.
+    let mut resolved = Vec::with_capacity(routers.len());
+    for name in routers {
+        resolved.push((name.clone(), router_policy(name, seed)?));
+    }
+    let mut plan = SweepPlan::new(seed);
+    let mut axes = Vec::new();
+    for &n in replicas {
+        for (name, policy) in &resolved {
+            for &wait_s in batch_timeouts_s {
+                let rate = rate_per_replica * n as f64;
+                let template = ReplicaConfig {
+                    software: sw,
+                    service: service.clone(),
+                    policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: wait_s },
+                    max_queue: 4096,
+                };
+                let router = *policy;
+                let duration = *duration_s;
+                let payload = m.request_bytes;
+                let mode = *metrics;
+                let adm = admission.clone();
+                let flt = faults.clone();
+                let rp = *retry;
+                let label = format!("{n}x{name}@{:.1}ms", wait_s * 1e3);
+                plan.push(label, move |cell_seed| ClusterConfig {
+                    workload: match &adm {
+                        Some(a) => Workload::Streams {
+                            streams: split_streams(a, &Pattern::Poisson { rate }),
+                            seed: cell_seed,
+                        },
+                        None => Workload::Stream {
+                            pattern: Pattern::Poisson { rate },
+                            seed: cell_seed,
+                        },
+                    },
+                    duration_s: duration,
+                    replicas: (0..n).map(|_| template.clone()).collect(),
+                    router,
+                    autoscale: None,
+                    cold_start: None,
+                    path: RequestPath {
+                        processors: Processors::image(),
+                        network: LAN,
+                        payload_bytes: payload,
+                    },
+                    metrics: mode,
+                    admission: adm.clone(),
+                    faults: flt.clone(),
+                    retry: rp,
+                    seed: cell_seed,
+                });
+                axes.push((n, name.clone(), rate, wait_s));
+            }
+        }
+    }
+    Ok((plan, axes))
+}
+
 /// Duration estimate used by the scheduler when the submission omits one.
 fn default_estimate(kind: &JobKind) -> f64 {
     match kind {
@@ -1329,84 +1796,18 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             }
             Ok(out)
         }
-        JobKind::Sweep {
-            model,
-            platform,
-            software,
-            routers,
-            replicas,
-            batch_timeouts_s,
-            rate_per_replica,
-            duration_s,
-            max_batch,
-            metrics,
-            admission,
-            faults,
-            retry,
-        } => {
-            let sw = backends::find(software)
-                .ok_or_else(|| anyhow!("software {software:?} unknown"))?;
-            let m = catalog::find(model).ok_or_else(|| anyhow!("model {model:?} unknown"))?;
-            let service = service_model_for(model, platform)?;
-            // Resolve router names eagerly: a typo fails the whole job
-            // before any cell burns cycles.
-            let mut resolved = Vec::with_capacity(routers.len());
-            for name in routers {
-                resolved.push((name.clone(), router_policy(name, seed)?));
-            }
-            let mut plan = SweepPlan::new(seed);
-            // (fleet size, router name, rate, timeout s) per cell
-            let mut axes = Vec::new();
-            for &n in replicas {
-                for (name, policy) in &resolved {
-                    for &wait_s in batch_timeouts_s {
-                        let rate = rate_per_replica * n as f64;
-                        let template = ReplicaConfig {
-                            software: sw,
-                            service: service.clone(),
-                            policy: Policy::Dynamic { max_size: *max_batch, max_wait_s: wait_s },
-                            max_queue: 4096,
-                        };
-                        let router = *policy;
-                        let duration = *duration_s;
-                        let payload = m.request_bytes;
-                        let mode = *metrics;
-                        let adm = admission.clone();
-                        let flt = faults.clone();
-                        let rp = *retry;
-                        let label = format!("{n}x{name}@{:.1}ms", wait_s * 1e3);
-                        plan.push(label, move |cell_seed| ClusterConfig {
-                            workload: match &adm {
-                                Some(a) => Workload::Streams {
-                                    streams: split_streams(a, &Pattern::Poisson { rate }),
-                                    seed: cell_seed,
-                                },
-                                None => Workload::Stream {
-                                    pattern: Pattern::Poisson { rate },
-                                    seed: cell_seed,
-                                },
-                            },
-                            duration_s: duration,
-                            replicas: (0..n).map(|_| template.clone()).collect(),
-                            router,
-                            autoscale: None,
-                            cold_start: None,
-                            path: RequestPath {
-                                processors: Processors::image(),
-                                network: LAN,
-                                payload_bytes: payload,
-                            },
-                            metrics: mode,
-                            admission: adm.clone(),
-                            faults: flt.clone(),
-                            retry: rp,
-                            seed: cell_seed,
-                        });
-                        axes.push((n, name.clone(), rate, wait_s));
-                    }
-                }
-            }
-            let outcome = plan.run(threads.max(1));
+        JobKind::Sweep { model, platform, software, admission, followers, codec, .. } => {
+            let (plan, axes) = build_sweep_plan(&spec.kind, seed)?;
+            let outcome = if *followers >= 2 {
+                // Shard the grid across followers through the wire codec
+                // (streaming absorption, straggler re-queue) — bit-
+                // identical to the local run by construction (PERF.md
+                // §Distributed sweeps).
+                let dist = distributed::DistConfig::uniform(*followers, threads.max(1), *codec);
+                distributed::run_sharded(&spec.kind, seed, &dist)?.outcome
+            } else {
+                plan.run(threads.max(1))
+            };
             let mut out = Vec::with_capacity(outcome.cells.len());
             for (cell, (n, router_name, rate, wait_s)) in outcome.cells.iter().zip(&axes) {
                 let r = &cell.result;
@@ -2418,6 +2819,111 @@ retry:
                     a.metric(key).unwrap().to_bits(),
                     b.metric(key).unwrap().to_bits(),
                     "{key} must be bit-identical across thread budgets under faults"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_parses_followers_and_codec_knobs() {
+        let spec = JobSpec::parse_yaml(
+            "task: sweep\nrouters: [round-robin]\nreplicas: [1]\nfollowers: 3\ncodec: jsonl\n",
+        )
+        .unwrap();
+        match spec.kind {
+            JobKind::Sweep { followers, codec, .. } => {
+                assert_eq!(followers, 3);
+                assert_eq!(codec, CodecKind::JsonLines);
+            }
+            k => panic!("{k:?}"),
+        }
+        // Defaults: run locally, binary wire.
+        match JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap().kind {
+            JobKind::Sweep { followers, codec, .. } => {
+                assert_eq!(followers, 0);
+                assert_eq!(codec, CodecKind::Binary);
+            }
+            k => panic!("{k:?}"),
+        }
+        assert!(JobSpec::parse_yaml("task: sweep\nrouters: [rr]\nfollowers: -1\n").is_err());
+        assert!(JobSpec::parse_yaml("task: sweep\nrouters: [rr]\ncodec: morse\n").is_err());
+        // The knobs are sweep-only top-level keys.
+        assert!(JobSpec::parse_yaml("task: cluster_sim\nfollowers: 2\n").is_err());
+    }
+
+    #[test]
+    fn sweep_grid_doc_round_trips_field_exactly() {
+        // Every optional block populated: the doc a shard frame carries
+        // must rebuild this kind field-for-field, or followers would run
+        // a different grid than the leader planned.
+        let yaml = "task: sweep\nmodel: mobilenet_v1\nplatform: G1\nsoftware: tfs\n\
+                    routers: [round-robin, power-of-two]\nreplicas: [1, 3]\n\
+                    batch_timeouts_ms: [1, 2.5]\n\
+                    workload:\n  rate_per_replica: 90.0\n  duration_s: 5\n\
+                    batching:\n  max_size: 16\n  max_wait_ms: 2\n\
+                    scale: sketch\nsketch_alpha: 0.02\n\
+                    admission:\n  shed_depth: [900, 300]\n  tenants:\n\
+                    \x20   - name: gold\n      class: 0\n      weight: 2.0\n\
+                    \x20   - name: bronze\n      class: 1\n      rate: 40.0\n      burst: 8.0\n\
+                    faults:\n  script:\n    - op: degrade\n      replica: 0\n      at_s: 1.0\n\
+                    \x20     until_s: 2.0\n      factor: 2.5\n\
+                    \x20 profile:\n    mttf_s: 9.0\n    mttr_s: 1.5\n\
+                    \x20   degrade:\n      mtbd_s: 4.0\n      duration_s: 0.5\n      factor: 1.5\n\
+                    \x20 seed: 3\n  recovery_gb: 2.0\n\
+                    retry:\n  max_attempts: 4\n  deadline_s: 6.0\n  backoff_ms: 30\n  hedge: true\n";
+        let mut kind = JobSpec::parse_yaml(yaml).unwrap().kind;
+        if let JobKind::Sweep { faults: Some(f), .. } = &mut kind {
+            // Past i64: exercises the decimal-string u64 encoding.
+            f.seed = u64::MAX - 17;
+        }
+        let doc = sweep_grid_doc(&kind);
+        let back = sweep_kind_from_grid_doc(&doc).unwrap();
+        assert_eq!(back, kind, "grid doc must rebuild the kind field-exactly");
+        // And through compact-JSON text, which is how the doc actually
+        // rides inside both codecs' shard frames.
+        let text = doc.to_string_compact();
+        let reparsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(sweep_kind_from_grid_doc(&reparsed).unwrap(), kind);
+    }
+
+    #[test]
+    fn sweep_grid_doc_rejects_malformed_docs() {
+        let kind = JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap().kind;
+        let doc = sweep_grid_doc(&kind);
+        // Drop a required key.
+        if let Json::Obj(map) = &doc {
+            let mut broken = map.clone();
+            broken.remove("routers");
+            assert!(sweep_kind_from_grid_doc(&Json::Obj(broken)).is_err());
+            let mut broken = map.clone();
+            broken.insert("replicas".into(), Json::Arr(Vec::new()));
+            assert!(sweep_kind_from_grid_doc(&Json::Obj(broken)).is_err());
+        } else {
+            panic!("grid doc must be an object");
+        }
+        assert!(sweep_kind_from_grid_doc(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn sweep_with_followers_matches_local_execution() {
+        // The execute path itself: `followers: 2` shards through the wire
+        // codec, yet the PerfDB records are bit-identical to a local run.
+        let local = JobSpec::parse_yaml(SWEEP_SUBMISSION).unwrap();
+        let sharded = JobSpec::parse_yaml(&format!(
+            "{}followers: 2\n",
+            SWEEP_SUBMISSION.trim_start_matches('\n')
+        ))
+        .unwrap();
+        let a = execute(&local, 21, 1.0, 2).unwrap();
+        let b = execute(&sharded, 21, 1.0, 2).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.label("cell"), rb.label("cell"));
+            for key in ["p99_ms", "throughput_rps", "issued", "dropped"] {
+                assert_eq!(
+                    ra.metric(key).map(f64::to_bits),
+                    rb.metric(key).map(f64::to_bits),
+                    "{key} must be bit-identical sharded vs local"
                 );
             }
         }

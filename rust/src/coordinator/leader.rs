@@ -72,6 +72,10 @@ pub struct WorkerStatus {
 /// queue-aware placement instead of a flat busy penalty.
 #[derive(Debug, Clone)]
 struct RunningJob {
+    /// Identity for the monitor and `wait_for`'s timeout report — a
+    /// timed-out caller is told *which* jobs are outstanding and where.
+    id: u64,
+    name: String,
     est_s: f64,
     started: Instant,
     /// Whether this job executes at `1/time_scale` real time (only Sleep
@@ -306,7 +310,29 @@ impl Leader {
             }
             let now = Instant::now();
             if now >= deadline {
-                return Err(anyhow!("timeout: {} of {n} jobs completed", done.len()));
+                // Name the stragglers, don't just count them: list every
+                // outstanding job (running or queued) with its id and the
+                // worker it sits on, so a timed-out caller can see *what*
+                // is stuck *where* instead of re-deriving it from logs.
+                let completed = done.len();
+                drop(done);
+                let mut outstanding = Vec::new();
+                for (w, ws) in self.shared.iter().enumerate() {
+                    if let Some(r) = ws.running.lock().unwrap().as_ref() {
+                        outstanding
+                            .push(format!("job {} '{}' running on worker {w}", r.id, r.name));
+                    }
+                    for p in ws.queue.lock().unwrap().iter() {
+                        outstanding.push(format!(
+                            "job {} '{}' queued on worker {w}",
+                            p.id, p.spec.name
+                        ));
+                    }
+                }
+                return Err(anyhow!(
+                    "timeout: {completed} of {n} jobs completed; outstanding: [{}]",
+                    outstanding.join(", ")
+                ));
             }
             let (guard, _timed_out) =
                 self.completions.cv.wait_timeout(done, deadline - now).unwrap();
@@ -366,6 +392,8 @@ fn worker_loop(
             *b = (*b - charged).max(0.0);
         }
         *ws.running.lock().unwrap() = Some(RunningJob {
+            id: pending.id,
+            name: pending.spec.name.clone(),
             est_s: charged,
             started: Instant::now(),
             time_scaled: matches!(pending.spec.kind, job::JobKind::Sleep { .. }),
@@ -548,6 +576,29 @@ mod tests {
         assert_eq!(recs.len(), 4, "2 fleet sizes x 2 routers");
         assert!(recs.iter().any(|r| r.label("router") == Some("least-outstanding")));
         drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn wait_for_timeout_names_outstanding_jobs() {
+        // One worker, two slow jobs: at the deadline one is running and
+        // one is queued, and the error must name both with their ids and
+        // placements — not just count them.
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            time_scale: 10.0,
+            ..Default::default()
+        });
+        leader.submit(sleep_spec("glacier", 8.0)).unwrap();
+        leader.submit(sleep_spec("queued-up", 8.0)).unwrap();
+        let err = leader
+            .wait_for(2, std::time::Duration::from_millis(250))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("0 of 2 jobs completed"), "{err}");
+        assert!(err.contains("'glacier' running on worker 0"), "{err}");
+        assert!(err.contains("'queued-up' queued on worker 0"), "{err}");
+        assert!(err.contains("job 0") && err.contains("job 1"), "{err}");
         leader.shutdown();
     }
 

@@ -6,11 +6,16 @@
 //! * [`job`] — YAML submission parsing and job execution on followers.
 //! * [`leader`] — the live threaded cluster: task manager, queue-aware
 //!   load balancer, SJF workers, monitor, PerfDB aggregation.
+//! * [`distributed`] — the distributed sweep engine: one `SweepPlan`
+//!   sharded across followers over the wire codec (`crate::codec`), with
+//!   streaming result absorption and straggler re-queue.
 
+pub mod distributed;
 pub mod job;
 pub mod leader;
 pub mod scheduler;
 
+pub use distributed::{DistConfig, DistOutcome, DistStats, FollowerSpec};
 pub use job::{JobKind, JobSpec};
 pub use leader::{Leader, LeaderConfig};
 pub use scheduler::{schedule_batch, simulate_online, Job, SchedulerPolicy};

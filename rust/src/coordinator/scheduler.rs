@@ -18,7 +18,12 @@
 //! `threads_per_worker` budget, and both tiers above charge the
 //! thread-budget-adjusted estimate (`LeaderConfig::charged_estimate_s`)
 //! so queue-aware placement keeps seeing the wall-clock a job actually
-//! occupies its worker.
+//! occupies its worker. The distributed sweep engine
+//! (`coordinator::distributed`) adds a tier-1-style decision one level
+//! down: [`shard_sizes`] splits one grid's cells across followers
+//! proportionally to their thread budgets, so every shard finishes in
+//! roughly the same wall-clock and no follower idles while another
+//! drowns.
 
 /// A benchmark job as the scheduler sees it.
 #[derive(Debug, Clone, PartialEq)]
@@ -262,6 +267,37 @@ pub fn simulate_online(jobs: &[Job], workers: usize, policy: SchedulerPolicy) ->
     Outcome { placements, min_backlog_s }
 }
 
+/// Split `cells` sweep cells across followers proportionally to their
+/// thread budgets — the distributed sweep engine's shard-sizing decision
+/// (`coordinator::distributed`). Returns one cell count per follower,
+/// summing to `cells` exactly.
+///
+/// Uses the deterministic "staircase" rule: follower `i`'s shard ends at
+/// `cells * (b_0 + … + b_i) / B` (integer division), so sizes track the
+/// budget ratios to within one cell with no accumulated rounding drift —
+/// a follower with twice the threads gets (within 1) twice the cells, and
+/// every shard finishes in roughly the same wall-clock. Zero budgets are
+/// treated as 1 (a follower that exists can run *something*); when
+/// `cells < followers`, trailing followers legitimately receive empty
+/// shards.
+pub fn shard_sizes(cells: usize, budgets: &[usize]) -> Vec<usize> {
+    if budgets.is_empty() {
+        return Vec::new();
+    }
+    let norm: Vec<u64> = budgets.iter().map(|&b| b.max(1) as u64).collect();
+    let total: u64 = norm.iter().sum();
+    let mut sizes = Vec::with_capacity(norm.len());
+    let mut cum = 0u64;
+    let mut prev_boundary = 0u64;
+    for b in norm {
+        cum += b;
+        let boundary = cells as u64 * cum / total;
+        sizes.push((boundary - prev_boundary) as usize);
+        prev_boundary = boundary;
+    }
+    sizes
+}
+
 /// The paper's benchmark-job workload for the Fig 15 study: a mix of
 /// short submissions (single-model latency checks) and long sweeps
 /// (batch-size x platform grids), heavy-tailed like real benchmark queues.
@@ -330,6 +366,25 @@ mod tests {
         for p in &out.placements {
             assert!(p.start_s >= p.job.submit_s - 1e-9);
         }
+    }
+
+    #[test]
+    fn shard_sizes_sum_and_track_budgets() {
+        // Equal budgets: as even as integers allow.
+        assert_eq!(shard_sizes(12, &[4, 4, 4]), vec![4, 4, 4]);
+        assert_eq!(shard_sizes(13, &[4, 4]), vec![6, 7]);
+        // Proportional: double the threads, double the cells (within 1).
+        assert_eq!(shard_sizes(12, &[2, 4, 6]), vec![2, 4, 6]);
+        let sizes = shard_sizes(100, &[1, 2, 3, 5]);
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes[3] >= 4 * sizes[0], "budget-5 follower dwarfs budget-1: {sizes:?}");
+        // Fewer cells than followers: trailing shards go empty, sum holds.
+        let sparse = shard_sizes(2, &[1, 1, 1, 1]);
+        assert_eq!(sparse.iter().sum::<usize>(), 2);
+        // Zero budgets are normalized to 1, not divided by.
+        assert_eq!(shard_sizes(4, &[0, 0]), vec![2, 2]);
+        assert_eq!(shard_sizes(0, &[3, 1]), vec![0, 0]);
+        assert!(shard_sizes(5, &[]).is_empty());
     }
 
     #[test]

@@ -33,12 +33,17 @@
 //! derived from the plan seed, returning results in plan order so a
 //! parallel run is bit-identical to a serial one. The coordinator
 //! dispatches grids as `task: sweep` YAML jobs executed under each
-//! worker's `threads_per_worker` budget.
+//! worker's `threads_per_worker` budget, and with `followers: N` shards
+//! one plan across followers over the [`codec`] wire frames
+//! ([`coordinator::distributed`]): streaming per-cell result absorption,
+//! straggler re-queue from per-cell seeds, bit-identical to serial at
+//! any follower count.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! regenerated paper results.
 
 pub mod analysis;
+pub mod codec;
 pub mod coordinator;
 pub mod hardware;
 pub mod metrics;

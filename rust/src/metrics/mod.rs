@@ -11,7 +11,7 @@
 //! in-flight traces live in a [`TraceStore`] slab with a free list, so the
 //! simulator's request lifecycle allocates nothing at steady state.
 
-use crate::util::stats::Summary;
+use crate::util::stats::{Summary, SummarySnapshot};
 use std::collections::BTreeMap;
 
 /// How a run's latency distributions are stored.
@@ -468,6 +468,87 @@ impl Collector {
         self.first_arrival_s = self.first_arrival_s.min(other.first_arrival_s);
         self.last_completion_s = self.last_completion_s.max(other.last_completion_s);
     }
+
+    /// Detach the serializable form that `CellResult` frames ship over the
+    /// distributed-sweep wire (see `codec`). Everything the sweep layer
+    /// reads off a cell collector travels — counts, the drop-reason
+    /// breakdown, the observation window, and the e2e + per-stage latency
+    /// payloads (raw samples in exact mode, sparse buckets in sketch
+    /// mode) — so [`CollectorSnapshot::restore`] reproduces percentiles,
+    /// throughput, and [`Collector::fingerprint`] bit-for-bit.
+    ///
+    /// Deliberately excluded: `arrival_e2e`, the per-completion windowed
+    /// side table. No sweep-level record reads it, it is O(completed) on
+    /// the wire, and bounded mode never materializes it; callers that need
+    /// windowed tails run their figure locally in exact mode.
+    pub fn snapshot(&self) -> CollectorSnapshot {
+        CollectorSnapshot {
+            e2e: self.e2e.snapshot(),
+            per_stage: std::array::from_fn(|i| self.per_stage[i].snapshot()),
+            bounded: self.bounded,
+            completed: self.completed,
+            dropped: self.dropped,
+            dropped_by_reason: self.dropped_by_reason,
+            first_arrival_s: self.first_arrival_s,
+            last_completion_s: self.last_completion_s,
+        }
+    }
+}
+
+/// Serializable form of a [`Collector`] — the latency/ledger payload of a
+/// distributed-sweep `CellResult` frame. See [`Collector::snapshot`] for
+/// what travels and what is deliberately left behind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectorSnapshot {
+    pub e2e: SummarySnapshot,
+    /// Indexed by [`Stage::idx`], like the live collector.
+    pub per_stage: [SummarySnapshot; 5],
+    pub bounded: bool,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Indexed by [`DropReason::idx`]; sums to `dropped`.
+    pub dropped_by_reason: [u64; DROP_REASONS.len()],
+    pub first_arrival_s: f64,
+    pub last_completion_s: f64,
+}
+
+impl CollectorSnapshot {
+    /// Rebuild the live [`Collector`]. The restored collector absorbs,
+    /// fingerprints, and reports identically to the original except for
+    /// the windowed `arrival_e2e` side table, which is not shipped.
+    pub fn restore(&self) -> Collector {
+        Collector {
+            e2e: self.e2e.restore(),
+            per_stage: std::array::from_fn(|i| self.per_stage[i].restore()),
+            arrival_e2e: Vec::new(),
+            bounded: self.bounded,
+            completed: self.completed,
+            dropped: self.dropped,
+            dropped_by_reason: self.dropped_by_reason,
+            first_arrival_s: self.first_arrival_s,
+            last_completion_s: self.last_completion_s,
+        }
+    }
+}
+
+/// Serializable form of a [`ClassMetrics`] ledger — rides alongside the
+/// cluster-level [`CollectorSnapshot`] in a `CellResult` frame so per-class
+/// QoS records survive the wire with their conservation intact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSnapshot {
+    pub class: u8,
+    pub issued: u64,
+    pub collector: CollectorSnapshot,
+}
+
+impl ClassSnapshot {
+    pub fn restore(&self) -> ClassMetrics {
+        ClassMetrics {
+            class: self.class,
+            issued: self.issued,
+            collector: self.collector.restore(),
+        }
+    }
 }
 
 /// Per-priority-class ledger of an admission-enabled run: issued count
@@ -525,6 +606,11 @@ impl ClassMetrics {
         assert_eq!(self.class, other.class, "absorbing mismatched classes");
         self.issued += other.issued;
         self.collector.absorb(other.collector);
+    }
+
+    /// Serializable form for the distributed-sweep wire.
+    pub fn snapshot(&self) -> ClassSnapshot {
+        ClassSnapshot { class: self.class, issued: self.issued, collector: self.collector.snapshot() }
     }
 }
 
@@ -908,6 +994,88 @@ mod tests {
         assert!((c.e2e.mean() - 0.5).abs() < 1e-12);
         // 10 requests over [0, 9.5] window.
         assert!((c.throughput_rps() - 10.0 / 9.5).abs() < 1e-9);
+    }
+
+    fn busy_collector(mode: MetricsMode, seed: u64) -> Collector {
+        let mut c = Collector::with_mode(mode);
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        for i in 0..500u64 {
+            let mut t = RequestTrace::new(i, i as f64 * 0.01);
+            if i % 7 == 0 {
+                t.dropped = true;
+                t.drop_reason = DROP_REASONS[(i % 6) as usize];
+            } else {
+                t.record_stage(Stage::Batching, rng.lognormal(-6.0, 0.5));
+                t.record_stage(Stage::Inference, rng.lognormal(-4.0, 1.0));
+            }
+            c.ingest(&t);
+        }
+        c
+    }
+
+    #[test]
+    fn collector_snapshot_restore_preserves_fingerprint() {
+        for mode in [MetricsMode::Exact, MetricsMode::Sketch { alpha: 0.01 }] {
+            let c = busy_collector(mode, 11);
+            let r = c.snapshot().restore();
+            assert_eq!(r.fingerprint(), c.fingerprint(), "{mode:?}");
+            assert_eq!(r.is_bounded(), c.is_bounded());
+            assert_eq!(r.drop_breakdown(), c.drop_breakdown());
+            assert!(r.drops_conserved());
+            assert_eq!(r.throughput_rps().to_bits(), c.throughput_rps().to_bits());
+            for s in STAGES {
+                assert_eq!(r.stage(s).len(), c.stage(s).len(), "{mode:?} {s:?}");
+                if !c.stage(s).is_empty() {
+                    assert_eq!(
+                        r.stage(s).percentile(99.0).to_bits(),
+                        c.stage(s).percentile(99.0).to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn restored_collectors_absorb_like_originals() {
+        // The leader's absorption path: restoring two cell snapshots and
+        // absorbing them must fingerprint identically to absorbing the
+        // originals (exact mode concatenates the same buffers in the same
+        // order; sketch mode adds the same counters).
+        for mode in [MetricsMode::Exact, MetricsMode::Sketch { alpha: 0.02 }] {
+            let a = busy_collector(mode, 3);
+            let b = busy_collector(mode, 4);
+            let mut direct = Collector::new();
+            direct.absorb(a.clone());
+            direct.absorb(b.clone());
+            let mut via_wire = Collector::new();
+            via_wire.absorb(a.snapshot().restore());
+            via_wire.absorb(b.snapshot().restore());
+            assert_eq!(via_wire.fingerprint(), direct.fingerprint(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn class_snapshot_round_trips_ledger() {
+        let mut cm = ClassMetrics::with_mode(2, MetricsMode::Exact);
+        cm.issued = 40;
+        for i in 0..40u64 {
+            let mut t = RequestTrace::new(i, i as f64);
+            if i % 5 == 0 {
+                t.dropped = true;
+                t.drop_reason = DropReason::Shed;
+            } else {
+                t.record_stage(Stage::Inference, 0.003 * (i + 1) as f64);
+            }
+            cm.collector.ingest(&t);
+        }
+        assert!(cm.conserved());
+        let r = cm.snapshot().restore();
+        assert_eq!(r.class, 2);
+        assert_eq!(r.issued, 40);
+        assert!(r.conserved());
+        assert_eq!(r.goodput().to_bits(), cm.goodput().to_bits());
+        assert_eq!(r.shed_fraction().to_bits(), cm.shed_fraction().to_bits());
+        assert_eq!(r.collector.fingerprint(), cm.collector.fingerprint());
     }
 
     #[test]

@@ -83,13 +83,18 @@ impl Record {
     }
 }
 
-/// Query filter: None = match-all per field.
+/// Query filter: None = match-all per envelope field, plus any number of
+/// string-label equality constraints (tags set via [`Record::with_label`],
+/// e.g. a sweep cell's router policy). All constraints AND together.
 #[derive(Debug, Default, Clone)]
 pub struct Query {
     pub task: Option<String>,
     pub model: Option<String>,
     pub platform: Option<String>,
     pub software: Option<String>,
+    /// Label equality constraints; a record matches only if it carries
+    /// every listed key as a string tag with the exact value.
+    pub labels: Vec<(String, String)>,
 }
 
 impl Query {
@@ -113,6 +118,13 @@ impl Query {
         self
     }
 
+    /// Require a string tag: `Query::default().label("router", "p2c")`
+    /// composes with the envelope filters and with further `label` calls.
+    pub fn label(mut self, key: &str, value: &str) -> Self {
+        self.labels.push((key.into(), value.into()));
+        self
+    }
+
     fn matches(&self, r: &Record) -> bool {
         fn ok(f: &Option<String>, v: &str) -> bool {
             f.as_deref().map_or(true, |x| x == v)
@@ -121,6 +133,7 @@ impl Query {
             && ok(&self.model, &r.model)
             && ok(&self.platform, &r.platform)
             && ok(&self.software, &r.software)
+            && self.labels.iter().all(|(k, v)| r.label(k) == Some(v.as_str()))
     }
 }
 
@@ -151,16 +164,12 @@ impl PerfDb {
         self.records.iter().filter(|r| q.matches(r)).collect()
     }
 
-    /// Query records additionally filtered by a string tag set via
-    /// [`Record::with_label`] — e.g. pull one sweep cell's records (or
-    /// every record of one router policy) back out of a grid. Labels
-    /// were previously write-only: jobs tagged per-cell records but no
-    /// read path could select on them.
+    /// Query records additionally filtered by a string tag — sugar for
+    /// `query(&q.clone().label(key, value))`, kept for callers holding a
+    /// `&Query`. Label filtering proper lives on the [`Query`] builder,
+    /// so it composes with `aggregate_mean` and `leaderboard` too.
     pub fn query_by_label(&self, q: &Query, key: &str, value: &str) -> Vec<&Record> {
-        self.records
-            .iter()
-            .filter(|r| q.matches(r) && r.label(key) == Some(value))
-            .collect()
+        self.query(&q.clone().label(key, value))
     }
 
     /// Mean of a metric over matching records.
@@ -261,6 +270,38 @@ mod tests {
         // the same key is not a string label.
         assert!(db.query_by_label(&Query::default(), "p99_ms", "20").is_empty());
         assert!(db.query_by_label(&Query::default(), "router", "teleport").is_empty());
+    }
+
+    #[test]
+    fn label_filter_composes_on_the_query_builder() {
+        let mut db = sample_db();
+        for (router, cell, p99) in [
+            ("round-robin", "1x", 30.0),
+            ("round-robin", "2x", 22.0),
+            ("least-outstanding", "1x", 18.0),
+        ] {
+            db.insert(
+                Record::new("sweep", "resnet50", "G1", "tris")
+                    .with_label("router", router)
+                    .with_label("cell", cell)
+                    .with_metric("p99_ms", p99),
+            );
+        }
+        let q = Query::default().task("sweep").label("router", "round-robin");
+        assert_eq!(db.query(&q).len(), 2);
+        // Multiple label constraints AND together.
+        assert_eq!(db.query(&q.clone().label("cell", "2x")).len(), 1);
+        assert!(db.query(&q.clone().label("cell", "4x")).is_empty());
+        // And the label-aware query flows through the aggregations.
+        let mean = db.aggregate_mean(&q, "p99_ms").unwrap();
+        assert!((mean - 26.0).abs() < 1e-12);
+        let best = db.leaderboard(&Query::default().task("sweep"), "p99_ms");
+        assert_eq!(best[0].label("router"), Some("least-outstanding"));
+        // query_by_label is now sugar over the builder: same rows.
+        assert_eq!(
+            db.query_by_label(&Query::default().task("sweep"), "router", "round-robin"),
+            db.query(&Query::default().task("sweep").label("router", "round-robin"))
+        );
     }
 
     #[test]

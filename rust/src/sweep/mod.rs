@@ -211,6 +211,25 @@ impl SweepPlan {
         cell_seed(self.seed, index as u64)
     }
 
+    /// Execute only the cells at `indices` — a follower's shard of the
+    /// plan (`coordinator::distributed`) — on up to `threads` workers,
+    /// returning `(plan index, outcome)` pairs in the given order.
+    ///
+    /// Runs through the same [`map_indexed`] pool and the same
+    /// `cell_seed(plan_seed, index)` derivation as [`run`](Self::run), so
+    /// a cell computes bit-identical results whether it executes here, in
+    /// a full local run, or re-queued onto a different follower after a
+    /// crash — sharding is invisible in the output.
+    pub fn run_indices(&self, indices: &[usize], threads: usize) -> Vec<(usize, CellOutcome)> {
+        let base = self.seed;
+        map_indexed(indices, threads, |_, &i| {
+            let cell = &self.cells[i];
+            let seed = cell_seed(base, i as u64);
+            let config = (cell.build)(seed);
+            (i, CellOutcome { label: cell.label.clone(), seed, result: cluster::run(&config) })
+        })
+    }
+
     /// Execute every cell on up to `threads` workers. Results come back
     /// in plan order and are bit-identical at any thread count.
     pub fn run(&self, threads: usize) -> SweepOutcome {
@@ -399,6 +418,26 @@ mod tests {
                     "threads={threads}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn run_indices_matches_full_run_per_cell() {
+        // A shard (here out of order, like a re-queued straggler's cells)
+        // reproduces the full run's per-cell bits exactly.
+        let full = small_plan().run(1);
+        let partial = small_plan().run_indices(&[1, 0], 2);
+        assert_eq!(partial.len(), 2);
+        assert_eq!(partial[0].0, 1, "results come back in the given index order");
+        assert_eq!(partial[1].0, 0);
+        for (i, out) in &partial {
+            let reference = &full.cells[*i];
+            assert_eq!(out.label, reference.label);
+            assert_eq!(out.seed, reference.seed);
+            assert_eq!(
+                out.result.collector.fingerprint(),
+                reference.result.collector.fingerprint()
+            );
         }
     }
 

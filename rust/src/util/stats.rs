@@ -427,6 +427,162 @@ impl Summary {
             }
         }
     }
+
+    /// Detach a serializable snapshot — the wire form the distributed-sweep
+    /// codec ships between followers and the leader (see `codec`).
+    ///
+    /// Exact mode snapshots the raw sample buffer in its current order;
+    /// [`SummarySnapshot::restore`] replays it through [`Summary::record`],
+    /// so `sum`/`min`/`max` re-accumulate in the same order and every
+    /// percentile answers bit-identically. Sketch mode snapshots the
+    /// non-zero buckets sparsely (most of the ~1.7k counters are zero)
+    /// plus the exactly-maintained scalars; restore rebuilds the bucket
+    /// array, so merges and quantile reads are bit-identical too.
+    pub fn snapshot(&self) -> SummarySnapshot {
+        match &self.repr {
+            Repr::Exact { samples, .. } => SummarySnapshot::Exact { samples: samples.clone() },
+            Repr::Sketch(sk) => SummarySnapshot::Sketch {
+                alpha: sk.alpha,
+                buckets: sk
+                    .counts
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c != 0)
+                    .map(|(k, &c)| (k as u32, c))
+                    .collect(),
+                zero_count: sk.zero_count,
+                count: sk.count,
+                sum_sq: sk.sum_sq,
+                sum: self.sum,
+                min: self.min,
+                max: self.max,
+            },
+        }
+    }
+}
+
+/// Serializable form of a [`Summary`] — what travels on the distributed-sweep
+/// wire. Restoring is bit-identical in both modes (see [`Summary::snapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SummarySnapshot {
+    /// Raw samples in buffer order. `sum`/`min`/`max` are not carried:
+    /// replaying the buffer re-derives them bit-exactly.
+    Exact { samples: Vec<f64> },
+    /// Sparse bucket counters plus the scalars a sketch cannot re-derive.
+    Sketch {
+        alpha: f64,
+        /// `(bucket index, count)` for every non-zero bucket, ascending.
+        buckets: Vec<(u32, u64)>,
+        zero_count: u64,
+        count: u64,
+        sum_sq: f64,
+        sum: f64,
+        min: f64,
+        max: f64,
+    },
+}
+
+impl SummarySnapshot {
+    /// Rebuild the live [`Summary`]. Panics on a malformed sketch snapshot
+    /// (bucket index out of range for its α, or counter totals that do not
+    /// reconcile) — the codec layer validates frames before they get here,
+    /// so reaching the panic means a codec bug, not bad input.
+    pub fn restore(&self) -> Summary {
+        match self {
+            SummarySnapshot::Exact { samples } => {
+                let mut s = Summary::new();
+                s.extend(samples);
+                s
+            }
+            SummarySnapshot::Sketch {
+                alpha,
+                buckets,
+                zero_count,
+                count,
+                sum_sq,
+                sum,
+                min,
+                max,
+            } => {
+                let mut sk = QuantileSketch::new(*alpha);
+                let mut in_buckets = 0u64;
+                for &(k, c) in buckets {
+                    let slot = sk
+                        .counts
+                        .get_mut(k as usize)
+                        .unwrap_or_else(|| panic!("sketch snapshot bucket {k} out of range"));
+                    *slot = c;
+                    in_buckets += c;
+                }
+                assert_eq!(
+                    in_buckets + zero_count,
+                    *count,
+                    "sketch snapshot counters do not reconcile"
+                );
+                sk.zero_count = *zero_count;
+                sk.count = *count;
+                sk.sum_sq = *sum_sq;
+                Summary { repr: Repr::Sketch(sk), sum: *sum, min: *min, max: *max }
+            }
+        }
+    }
+
+    /// Number of recorded samples the snapshot represents.
+    pub fn len(&self) -> usize {
+        match self {
+            SummarySnapshot::Exact { samples } => samples.len(),
+            SummarySnapshot::Sketch { count, .. } => *count as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Structural validation for wire decoders: a snapshot that passes
+    /// restores without panicking. Rejects sketch snapshots with α outside
+    /// (0, 1), bucket indices outside their α's bucket space, non-ascending
+    /// sparse entries, zero sparse counts, and counter totals that do not
+    /// reconcile with `count`. Exact snapshots reject NaN samples (the
+    /// summaries never record them; on the wire a NaN means corruption).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            SummarySnapshot::Exact { samples } => {
+                if samples.iter().any(|x| x.is_nan()) {
+                    return Err("exact summary contains NaN sample".into());
+                }
+                Ok(())
+            }
+            SummarySnapshot::Sketch { alpha, buckets, zero_count, count, .. } => {
+                if !(*alpha > 0.0 && *alpha < 1.0) {
+                    return Err(format!("sketch alpha {alpha} outside (0, 1)"));
+                }
+                let gamma_ln = ((1.0 + alpha) / (1.0 - alpha)).ln();
+                let space = ((SKETCH_HI / SKETCH_LO).ln() / gamma_ln).ceil() as usize + 1;
+                let mut prev = -1i64;
+                let mut in_buckets = 0u64;
+                for &(k, c) in buckets {
+                    if (k as usize) >= space {
+                        return Err(format!("sketch bucket {k} outside space {space} for alpha {alpha}"));
+                    }
+                    if (k as i64) <= prev {
+                        return Err(format!("sketch buckets not strictly ascending at {k}"));
+                    }
+                    if c == 0 {
+                        return Err(format!("sketch bucket {k} carries a zero count"));
+                    }
+                    prev = k as i64;
+                    in_buckets += c;
+                }
+                if in_buckets + zero_count != *count {
+                    return Err(format!(
+                        "sketch counters do not reconcile: {in_buckets} in buckets + {zero_count} zero != {count} total"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
 /// Logarithmic-bucket histogram: fixed memory, ~1% relative error.
@@ -829,6 +985,83 @@ mod tests {
             Repr::Sketch(inner) => assert_eq!(inner.counts.len(), buckets_at_birth),
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn exact_snapshot_restore_is_bit_identical() {
+        let mut s = Summary::new();
+        let mut rng = crate::util::rng::Pcg64::seeded(99);
+        for _ in 0..10_000 {
+            s.record(rng.lognormal(-4.0, 1.5));
+        }
+        let r = s.snapshot().restore();
+        assert_eq!(r.len(), s.len());
+        assert_eq!(r.sum().to_bits(), s.sum().to_bits());
+        assert_eq!(r.min().to_bits(), s.min().to_bits());
+        assert_eq!(r.max().to_bits(), s.max().to_bits());
+        for q in [0.0, 1.0, 50.0, 95.0, 99.0, 99.9, 100.0] {
+            assert_eq!(r.percentile(q).to_bits(), s.percentile(q).to_bits(), "q{q}");
+        }
+        assert_eq!(r.samples(), s.samples());
+    }
+
+    #[test]
+    fn sketch_snapshot_restore_is_bit_identical() {
+        let mut s = Summary::sketch(0.01);
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        for _ in 0..50_000 {
+            s.record(rng.lognormal(-3.0, 1.0));
+        }
+        s.record(0.0); // exercise the zero bucket
+        let snap = s.snapshot();
+        if let SummarySnapshot::Sketch { buckets, .. } = &snap {
+            assert!(!buckets.is_empty());
+            assert!(buckets.windows(2).all(|w| w[0].0 < w[1].0), "sparse buckets ascending");
+        } else {
+            panic!("sketch summary must snapshot as Sketch");
+        }
+        let r = snap.restore();
+        assert!(r.is_sketch());
+        assert_eq!(r.len(), s.len());
+        assert_eq!(r.sum().to_bits(), s.sum().to_bits());
+        assert_eq!(r.stddev().to_bits(), s.stddev().to_bits());
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(r.percentile(q).to_bits(), s.percentile(q).to_bits(), "q{q}");
+        }
+        // A restored sketch merges like the original (same α, same shape).
+        let mut a = s.clone();
+        let mut b = r;
+        let mut extra = Summary::sketch(0.01);
+        extra.record(0.5);
+        a.absorb(extra.clone());
+        b.absorb(extra);
+        assert_eq!(a.percentile(99.0).to_bits(), b.percentile(99.0).to_bits());
+    }
+
+    #[test]
+    fn empty_snapshot_restores_empty() {
+        let r = Summary::new().snapshot().restore();
+        assert!(r.is_empty());
+        assert_eq!(r.min(), f64::INFINITY);
+        assert_eq!(r.max(), f64::NEG_INFINITY);
+        let rs = Summary::sketch(0.02).snapshot().restore();
+        assert!(rs.is_empty() && rs.is_sketch());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn snapshot_restore_rejects_out_of_range_bucket() {
+        let snap = SummarySnapshot::Sketch {
+            alpha: 0.01,
+            buckets: vec![(u32::MAX, 1)],
+            zero_count: 0,
+            count: 1,
+            sum_sq: 1.0,
+            sum: 1.0,
+            min: 1.0,
+            max: 1.0,
+        };
+        let _ = snap.restore();
     }
 
     #[test]

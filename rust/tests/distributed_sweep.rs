@@ -1,0 +1,313 @@
+//! Distributed-sweep determinism suite (PERF.md §Distributed sweeps).
+//!
+//! The contract under test is the same one `parallel_sweep.rs` enforces
+//! one level down: distribution must be behavior-preserving, bit for bit.
+//! One `task: sweep` grid is run serially, then sharded across 1, 2, and
+//! 4 followers over both wire codecs, and every PerfDB-visible quantity —
+//! collector fingerprints, percentile bits, per-class QoS ledgers,
+//! issued/dropped/event counts — must agree exactly. Also covered: a
+//! follower crashing mid-shard (its cells re-queued onto survivors,
+//! re-run bit-identically), duplicate late frames reconciled by cell
+//! index, streaming absorption into a PerfDB while the sweep is still
+//! running, byte-exact binary frames against JSON-decoded equivalence,
+//! and the leader YAML path (`followers:` knob).
+
+use inferbench::codec::{CellSpec, CodecKind, Frame, ShardAssignment};
+use inferbench::coordinator::distributed::{run_sharded, run_sharded_with};
+use inferbench::coordinator::job::{self, JobKind, JobSpec};
+use inferbench::coordinator::{DistConfig, FollowerSpec, Leader, LeaderConfig};
+use inferbench::perfdb::{PerfDb, Query, Record};
+use inferbench::sweep::SweepOutcome;
+
+/// A grid exercising the full wire payload: two routers x two fleet
+/// sizes x two batching timeouts, with an admission tier so per-class
+/// ledgers ride in every cell-result frame.
+fn qos_grid() -> JobKind {
+    let yaml = "name: dist-qos-grid\ntask: sweep\nmodel: resnet50\nplatform: G1\n\
+                software: tris\nrouters: [round-robin, least-outstanding]\n\
+                replicas: [1, 2]\nbatch_timeouts_ms: [2, 5]\n\
+                workload:\n  rate_per_replica: 80.0\n  duration_s: 3\n\
+                batching:\n  max_size: 8\n  max_wait_ms: 2\n\
+                admission:\n  shed_depth: [2000, 400]\n  tenants:\n\
+                \x20   - name: gold\n      class: 0\n      weight: 2.0\n\
+                \x20   - name: bronze\n      class: 1\n      rate: 30.0\n      burst: 5.0\n";
+    JobSpec::parse_yaml(yaml).expect("grid submission parses").kind
+}
+
+/// Same grid under the bounded-memory sketch backend, so sketch
+/// collector snapshots cross the wire too.
+fn sketch_grid() -> JobKind {
+    let yaml = "task: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+                routers: [round-robin, power-of-two]\nreplicas: [1, 2]\n\
+                workload:\n  rate_per_replica: 100.0\n  duration_s: 3\n\
+                scale: sketch\nsketch_alpha: 0.01\n";
+    JobSpec::parse_yaml(yaml).expect("sketch grid parses").kind
+}
+
+const SEED: u64 = 20260808;
+
+fn serial_run(kind: &JobKind) -> SweepOutcome {
+    let (plan, _axes) = job::build_sweep_plan(kind, SEED).expect("plan builds");
+    plan.run(1)
+}
+
+/// Assert two outcomes agree on everything a PerfDB record reads.
+fn assert_bit_identical(a: &SweepOutcome, b: &SweepOutcome, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: cell count");
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.label, cb.label, "{what}: plan order must survive sharding");
+        assert_eq!(ca.seed, cb.seed, "{}: seed drift ({what})", ca.label);
+        let (ra, rb) = (&ca.result, &cb.result);
+        assert_eq!(ra.issued, rb.issued, "{} ({what})", ca.label);
+        assert_eq!(ra.dropped, rb.dropped, "{} ({what})", ca.label);
+        assert_eq!(ra.events, rb.events, "{} ({what})", ca.label);
+        assert_eq!(
+            ra.collector.fingerprint(),
+            rb.collector.fingerprint(),
+            "{} ({what}): collector fingerprint",
+            ca.label
+        );
+        for q in [50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                ra.collector.e2e.percentile(q).to_bits(),
+                rb.collector.e2e.percentile(q).to_bits(),
+                "{} ({what}): p{q} bits",
+                ca.label
+            );
+        }
+        assert_eq!(ra.classes.len(), rb.classes.len(), "{} ({what})", ca.label);
+        for (ka, kb) in ra.classes.iter().zip(&rb.classes) {
+            assert_eq!(ka.class, kb.class);
+            assert_eq!(ka.issued, kb.issued, "{} class {} ({what})", ca.label, ka.class);
+            assert_eq!(
+                ka.collector.fingerprint(),
+                kb.collector.fingerprint(),
+                "{} class {} ({what}): ledger fingerprint",
+                ca.label,
+                ka.class
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_sweep_is_bit_identical_at_any_follower_count() {
+    let kind = qos_grid();
+    let serial = serial_run(&kind);
+    assert_eq!(serial.len(), 8, "2 routers x 2 fleets x 2 timeouts");
+    assert!(
+        serial.cells.iter().all(|c| !c.result.classes.is_empty()),
+        "the QoS grid must put class ledgers on the wire"
+    );
+    for followers in [1, 2, 4] {
+        for codec in [CodecKind::Binary, CodecKind::JsonLines] {
+            let dist = run_sharded(&kind, SEED, &DistConfig::uniform(followers, 4, codec))
+                .expect("sharded run succeeds");
+            assert_bit_identical(
+                &serial,
+                &dist.outcome,
+                &format!("{followers} followers / {}", codec.name()),
+            );
+            assert_eq!(dist.stats.rounds, 1, "healthy fleets finish in one round");
+            assert_eq!(dist.stats.shard_cells.iter().sum::<usize>(), serial.len());
+            assert!(dist.stats.bytes_to_leader > 0);
+            assert!(dist.stats.bytes_to_followers > 0);
+        }
+    }
+}
+
+#[test]
+fn sketch_collectors_survive_the_wire_bit_for_bit() {
+    let kind = sketch_grid();
+    let serial = serial_run(&kind);
+    for codec in [CodecKind::Binary, CodecKind::JsonLines] {
+        let dist = run_sharded(&kind, SEED, &DistConfig::uniform(2, 4, codec))
+            .expect("sketch-mode sharded run succeeds");
+        assert_bit_identical(&serial, &dist.outcome, codec.name());
+        assert!(
+            dist.outcome.cells.iter().all(|c| c.result.collector.is_bounded()),
+            "cells must come back in sketch mode, not silently exact"
+        );
+    }
+}
+
+#[test]
+fn crashed_follower_cells_are_requeued_bit_identically() {
+    let kind = qos_grid();
+    let serial = serial_run(&kind);
+    // Follower 1 completes two cells of its shard, then dies; its
+    // remaining cells must land on follower 0 and reproduce the serial
+    // bits exactly — failure handling is invisible in the output.
+    let cfg = DistConfig {
+        followers: vec![
+            FollowerSpec::healthy(2),
+            FollowerSpec { threads: 2, crash_after: Some(2) },
+        ],
+        codec: CodecKind::Binary,
+        chunk_bytes: 97, // deliberately frame-misaligned
+        duplicate_first: 0,
+    };
+    let dist = run_sharded(&kind, SEED, &cfg).expect("run survives the crash");
+    assert_bit_identical(&serial, &dist.outcome, "crash + re-queue");
+    assert!(dist.stats.rounds >= 2, "the crash must force a re-queue round");
+    assert!(dist.stats.cells_rerun > 0, "the dead shard's cells must be re-queued");
+}
+
+#[test]
+fn duplicate_late_frames_reconcile_by_cell_index() {
+    let kind = qos_grid();
+    let serial = serial_run(&kind);
+    let mut cfg = DistConfig::uniform(2, 4, CodecKind::JsonLines);
+    cfg.duplicate_first = 1; // each follower re-sends its first result
+    let dist = run_sharded(&kind, SEED, &cfg).expect("run absorbs the duplicates");
+    assert_bit_identical(&serial, &dist.outcome, "duplicate injection");
+    assert_eq!(dist.stats.duplicate_frames, 2, "one late duplicate per follower");
+    assert_eq!(
+        dist.stats.frames_to_leader,
+        serial.len() as u64 + dist.stats.duplicate_frames
+    );
+}
+
+#[test]
+fn streaming_absorption_fills_a_perfdb_before_the_sweep_ends() {
+    // The leader-side hook fires once per fresh cell, so partial grids
+    // are usable immediately: here every frame becomes a PerfDB record
+    // at arrival, and the finished database matches the serial grid
+    // cell-for-cell (keyed by the frame's plan index, since arrival
+    // order is scheduling-dependent).
+    let kind = qos_grid();
+    let serial = serial_run(&kind);
+    let mut db = PerfDb::new();
+    let mut sizes_seen = Vec::new();
+    let dist = run_sharded_with(
+        &kind,
+        SEED,
+        &DistConfig::uniform(3, 6, CodecKind::Binary),
+        &mut |frame| {
+            sizes_seen.push(db.len());
+            db.insert(
+                Record::new("sweep_stream", "resnet50", "G1", "tris")
+                    .with_label("cell", &frame.label)
+                    .with_metric("index", frame.cell as f64)
+                    .with_metric("issued", frame.issued as f64)
+                    .with_metric("dropped", frame.dropped as f64),
+            );
+        },
+    )
+    .expect("streaming run succeeds");
+    assert_eq!(db.len(), serial.len(), "one record per cell, no duplicates");
+    assert_eq!(sizes_seen, (0..serial.len()).collect::<Vec<_>>(), "strictly incremental");
+    for (i, cell) in serial.cells.iter().enumerate() {
+        let rows = db.query(
+            &Query::default().task("sweep_stream").label("cell", &cell.label),
+        );
+        let row = rows
+            .iter()
+            .find(|r| r.metric("index") == Some(i as f64))
+            .unwrap_or_else(|| panic!("cell {i} '{}' missing from the stream", cell.label));
+        assert_eq!(row.metric("issued"), Some(cell.result.issued as f64));
+        assert_eq!(row.metric("dropped"), Some(cell.result.dropped as f64));
+    }
+    assert_bit_identical(&serial, &dist.outcome, "streaming");
+}
+
+#[test]
+fn binary_frames_round_trip_byte_exactly_and_match_jsonl() {
+    // Real frames, not synthetic ones: a shard assignment built from the
+    // QoS grid's own doc, and cell results captured from an actual run.
+    let kind = qos_grid();
+    let (plan, _axes) = job::build_sweep_plan(&kind, SEED).expect("plan builds");
+    let mut frames = vec![
+        Frame::Shard(ShardAssignment {
+            shard: 1,
+            plan_seed: SEED,
+            grid: job::sweep_grid_doc(&kind),
+            cells: (0..plan.len())
+                .map(|i| CellSpec {
+                    index: i as u32,
+                    seed: plan.cell_seed(i),
+                    label: plan.cells()[i].label().to_string(),
+                })
+                .collect(),
+        }),
+        Frame::ShardDone { shard: 1, cells: plan.len() as u32 },
+        Frame::ShardFailed { shard: 0, completed: 3, error: "injected crash".into() },
+    ];
+    let mut streamed = Vec::new();
+    run_sharded_with(
+        &kind,
+        SEED,
+        &DistConfig::uniform(2, 4, CodecKind::Binary),
+        &mut |frame| streamed.push(Frame::CellResult(frame.clone())),
+    )
+    .expect("capture run succeeds");
+    assert!(!streamed.is_empty());
+    frames.extend(streamed);
+
+    let bin = CodecKind::Binary.codec();
+    let json = CodecKind::JsonLines.codec();
+    for frame in &frames {
+        let mut bytes = Vec::new();
+        bin.encode(frame, &mut bytes);
+        let (decoded, consumed) = bin
+            .decode(&bytes)
+            .unwrap_or_else(|e| panic!("{} frame: {e}", frame.kind()))
+            .expect("complete frame");
+        assert_eq!(consumed, bytes.len(), "{} frame: trailing bytes", frame.kind());
+        assert_eq!(&decoded, frame, "{} frame: binary round trip", frame.kind());
+        // Byte-exact: re-encoding the decoded frame reproduces the wire.
+        let mut again = Vec::new();
+        bin.encode(&decoded, &mut again);
+        assert_eq!(again, bytes, "{} frame: binary encoding must be canonical", frame.kind());
+        // And the JSON codec decodes to the very same value.
+        let mut line = Vec::new();
+        json.encode(frame, &mut line);
+        let (via_json, _) = json.decode(&line).unwrap().expect("complete line");
+        assert_eq!(via_json, decoded, "{} frame: codecs must agree", frame.kind());
+    }
+}
+
+#[test]
+fn leader_yaml_path_shards_with_the_followers_knob() {
+    // End to end through the coordinator: the same submission with and
+    // without `followers: 2` produces identical PerfDB records — cells
+    // and grid-wide class records both.
+    let base = "name: dist\ntask: sweep\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+                routers: [round-robin, least-outstanding]\nreplicas: [1, 2]\n\
+                workload:\n  rate_per_replica: 60.0\n  duration_s: 3\n\
+                admission:\n  shed_depth: [2000, 400]\n  tenants:\n\
+                \x20   - name: gold\n      class: 0\n      weight: 2.0\n\
+                \x20   - name: bronze\n      class: 1\n      rate: 25.0\n      burst: 5.0\n";
+    let collect = |yaml: &str| -> Vec<(Option<String>, Option<String>, Vec<u64>)> {
+        let leader = Leader::start(LeaderConfig {
+            workers: 1,
+            threads_per_worker: 2,
+            ..Default::default()
+        });
+        leader.submit_yaml(yaml).unwrap();
+        let done = leader.wait_for(1, std::time::Duration::from_secs(120)).unwrap();
+        assert!(done[0].ok, "sweep job failed");
+        let db = leader.perfdb.lock().unwrap();
+        let rows = db
+            .query(&Query::default().task("sweep"))
+            .iter()
+            .map(|r| {
+                (
+                    r.label("cell").map(str::to_string),
+                    r.label("class").map(str::to_string),
+                    ["p99_ms", "throughput_rps", "issued", "dropped", "dropped_shed"]
+                        .iter()
+                        .filter_map(|k| r.metric(k).map(f64::to_bits))
+                        .collect(),
+                )
+            })
+            .collect();
+        drop(db);
+        leader.shutdown();
+        rows
+    };
+    let local = collect(base);
+    let sharded = collect(&format!("{base}followers: 2\n"));
+    assert_eq!(local.len(), 6, "4 cells + 2 grid-wide class records");
+    assert_eq!(local, sharded, "records must not depend on the follower count");
+}
