@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
     cluster_scaleout_section()?;
     autoscale_spike_section()?;
     multimodel_sharing_section()?;
+    tracing_section()?;
     Ok(())
 }
 
@@ -130,6 +131,8 @@ fn cluster_scaleout_section() -> anyhow::Result<()> {
                 },
                 metrics: MetricsMode::Exact,
                 admission: None,
+                faults: None,
+                retry: None,
                 seed: 99,
             };
             let r = run_cluster(&cfg);
@@ -201,6 +204,8 @@ fn autoscale_spike_section() -> anyhow::Result<()> {
             path: RequestPath::local(Processors::none()),
             metrics: MetricsMode::Exact,
             admission: None,
+            faults: None,
+            retry: None,
             seed: 2024,
         };
         let r = run_cluster(&cfg);
@@ -272,6 +277,8 @@ fn multimodel_sharing_section() -> anyhow::Result<()> {
                 path: RequestPath::local(Processors::none()),
                 metrics: MetricsMode::Exact,
                 admission: None,
+                faults: None,
+                retry: None,
                 seed: 77,
             };
             let r = multimodel::run(&cfg);
@@ -303,5 +310,97 @@ fn multimodel_sharing_section() -> anyhow::Result<()> {
         )
     );
     println!("\n(run `cargo bench --bench fig_sharing` for the full sharing figure)");
+    Ok(())
+}
+
+/// Tracing (simulated; runs without artifacts): rerun a burst scenario
+/// with full request tracing on — which is bit-invisible to the
+/// simulation — export the span tree + gauge timelines as Perfetto JSON
+/// (loadable at ui.perfetto.dev), and print the 5 slowest sampled
+/// requests with their per-stage breakdown.
+fn tracing_section() -> anyhow::Result<()> {
+    use inferbench::obs::{Span, TraceConfig, TraceSink};
+    use inferbench::serving::ServiceModel;
+    println!("\nTracing a burst (simulated, 150 rps base / 900 rps burst, full sampling):\n");
+    let replica = || ReplicaConfig {
+        software: &backends::TFS,
+        service: ServiceModel::Measured { per_batch: vec![(1, 0.005)], utilization: 0.6 },
+        policy: Policy::Dynamic { max_size: 8, max_wait_s: 0.004 },
+        max_queue: 200_000,
+    };
+    let cfg = ClusterConfig {
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
+                base_rate: 150.0,
+                burst_rate: 900.0,
+                start_s: 6.0,
+                duration_s: 4.0,
+            },
+            seed: 314,
+        },
+        duration_s: 16.0,
+        replicas: vec![replica(), replica()],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::image()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: None,
+        retry: None,
+        seed: 314,
+    };
+    let plain = run_cluster(&cfg);
+    let traced = inferbench::serving::cluster::run_traced(&cfg, &TraceConfig::full());
+    assert_eq!(
+        plain.collector.fingerprint(),
+        traced.collector.fingerprint(),
+        "tracing must be bit-invisible"
+    );
+    let trace = traced.trace.expect("full tracing produces a trace");
+
+    let out_path = "e2e_burst.trace.json";
+    TraceSink::write_perfetto(out_path, &trace)
+        .map_err(|e| anyhow::anyhow!("writing {out_path}: {e}"))?;
+    println!(
+        "exported {} spans + {} gauge series to {out_path} (open at ui.perfetto.dev)",
+        trace.spans.len(),
+        trace.gauges.len()
+    );
+
+    // The 5 slowest requests, with where the time went stage by stage.
+    let mut roots: Vec<&Span> =
+        trace.spans.iter().filter(|s| s.parent.is_none() && s.name == "request").collect();
+    roots.sort_by(|a, b| {
+        let (da, db) = (a.end_s - a.start_s, b.end_s - b.start_s);
+        db.partial_cmp(&da).unwrap().then(a.id.cmp(&b.id))
+    });
+    let mut rows = Vec::new();
+    for root in roots.iter().take(5) {
+        let stages: Vec<String> = trace
+            .spans
+            .iter()
+            .filter(|s| s.parent == Some(root.id) && s.end_s > s.start_s)
+            .map(|s| format!("{} {:.2}ms", s.name, (s.end_s - s.start_s) * 1e3))
+            .collect();
+        let attr = |key: &str| {
+            root.attrs.iter().find(|(k, _)| k == key).map_or("?".to_string(), |(_, v)| v.render())
+        };
+        rows.push(vec![
+            attr("id"),
+            format!("{:.3}", root.start_s),
+            format!("{:.1}", (root.end_s - root.start_s) * 1e3),
+            attr("outcome"),
+            stages.join(" -> "),
+        ]);
+    }
+    print!(
+        "{}",
+        render::table(&["Request", "Arrived s", "e2e ms", "Outcome", "Stage breakdown"], &rows)
+    );
+    println!(
+        "\n(add `trace:` to a coordinator job YAML, or `--trace-out` to fig17_autoscale, \
+         for the same export elsewhere)"
+    );
     Ok(())
 }

@@ -20,13 +20,20 @@
 //! (`inferbench::sweep`); cells come back in plan order, bit-identical to
 //! a serial sweep, and the replica-count timeline is read straight from
 //! the grid cell instead of a fifth run.
+//!
+//! Pass `--trace-out <path>` to run the grid with full tracing (which is
+//! bit-invisible — every assertion above still holds) and export the
+//! queue-depth/TrIS cell's request spans + gauge timelines as Perfetto
+//! JSON, loadable at ui.perfetto.dev. CI greps the `trace-export:` line.
 
 use inferbench::metrics::{MetricsMode, ScaleEventKind};
+use inferbench::obs::{TraceConfig, TraceSink};
 use inferbench::pipeline::{Processors, RequestPath};
 use inferbench::serving::autoscale::{AutoscaleConfig, ScalePolicy};
 use inferbench::serving::cluster::{ClusterConfig, ReplicaConfig};
 use inferbench::serving::{backends, Policy, RouterPolicy, ServiceModel, Software};
 use inferbench::sweep::{self, SweepPlan};
+use inferbench::util::cli::Args;
 use inferbench::util::render;
 use inferbench::workload::{Pattern, Workload};
 
@@ -95,6 +102,8 @@ fn config_for(software: &'static Software, policy: ScalePolicy) -> ClusterConfig
 }
 
 fn main() {
+    let args = Args::from_env(&[]);
+    let trace_out = args.trace_out();
     let threads = sweep::default_threads();
     println!(
         "=== Fig 17: autoscale under spike load ({BASE_RATE} rps base, {BURST_RATE} rps burst \
@@ -110,6 +119,11 @@ fn main() {
     let mut plan = SweepPlan::new(SEED);
     for &(plabel, policy, software) in &grid {
         plan.push(format!("{plabel}/{}", software.id), move |_seed| config_for(software, policy));
+    }
+    // Tracing is a pure observer: with `--trace-out` every cell runs
+    // fully traced and every assertion below still holds bit-for-bit.
+    if trace_out.is_some() {
+        plan.set_trace(TraceConfig::full());
     }
     let outcome = plan.run(threads);
 
@@ -179,6 +193,23 @@ fn main() {
     let series: Vec<String> =
         tris_qd.scale.active_series().iter().map(|(t, n)| format!("{t:.1}s:{n}")).collect();
     println!("\nTrIS/queue-depth active-replica timeline: {}", series.join(" -> "));
+
+    // Trace export: the queue-depth/TrIS cell (the figure's narrative
+    // cell) as a ui.perfetto.dev-loadable JSON file.
+    if let Some(path) = trace_out {
+        let trace = tris_qd.trace.as_ref().expect("traced sweep cell carries its trace");
+        let bounded = trace.gauges.iter().all(|g| g.samples.len() <= 4096);
+        TraceSink::write_perfetto(path, trace).expect("trace export written");
+        println!(
+            "trace-export: spans={} gauge_series={} truncated={} gauge_bounded={} file={path}",
+            trace.spans.len(),
+            trace.gauges.len(),
+            trace.truncated,
+            if bounded { "ok" } else { "OVERFLOW" }
+        );
+        assert!(bounded, "gauge ring exceeded its configured cap");
+        assert!(!trace.spans.is_empty(), "traced cell produced no request spans");
+    }
 
     // (a) same policy, slower cold start -> strictly worse burst p99.
     let p99_of = |plabel: &str, sw: &str| {

@@ -309,6 +309,12 @@ struct WireInfo {
     bytes_to_followers: u64,
     /// First-round cells per follower — the shard-balance view.
     shard_cells: Vec<usize>,
+    /// Dispatch rounds the leader ran (1 unless shards failed).
+    rounds: usize,
+    /// Result frames discarded as duplicates during absorption.
+    duplicate_frames: u64,
+    /// Cells re-queued after a shard failure.
+    cells_rerun: u64,
 }
 
 struct SweepRow {
@@ -424,6 +430,9 @@ fn measure_distributed(
             bytes_to_leader: dist.stats.bytes_to_leader,
             bytes_to_followers: dist.stats.bytes_to_followers,
             shard_cells: dist.stats.shard_cells.clone(),
+            rounds: dist.stats.rounds,
+            duplicate_frames: dist.stats.duplicate_frames,
+            cells_rerun: dist.stats.cells_rerun,
         }),
     }
 }
@@ -469,7 +478,8 @@ fn json_sweeps(rows: &[SweepRow]) -> Vec<String> {
                 row.push_str(&format!(
                     ", \"codec\": \"{}\", \"followers\": {}, \"bytes_to_leader\": {}, \
                      \"bytes_to_followers\": {}, \"bytes_per_cell\": {:.0}, \
-                     \"shard_cells\": [{}]",
+                     \"shard_cells\": [{}], \"rounds\": {}, \"duplicate_frames\": {}, \
+                     \"cells_rerun\": {}",
                     w.codec,
                     w.followers,
                     w.bytes_to_leader,
@@ -479,7 +489,10 @@ fn json_sweeps(rows: &[SweepRow]) -> Vec<String> {
                         .iter()
                         .map(|c| c.to_string())
                         .collect::<Vec<_>>()
-                        .join(", ")
+                        .join(", "),
+                    w.rounds,
+                    w.duplicate_frames,
+                    w.cells_rerun
                 ));
             }
             row.push('}');
@@ -683,6 +696,19 @@ fn main() {
             w.bytes_to_leader / row.cells.max(1) as u64,
             w.bytes_to_leader,
             w.bytes_to_followers
+        );
+        // Greppable wire accounting for the CI distributed-smoke summary
+        // (the same numbers `task: sweep` jobs surface per record).
+        println!(
+            "wire-stats: codec={} followers={} bytes_sent={} bytes_received={} duplicates={} \
+             cells_rerun={} rounds={}",
+            w.codec,
+            w.followers,
+            w.bytes_to_followers,
+            w.bytes_to_leader,
+            w.duplicate_frames,
+            w.cells_rerun,
+            w.rounds
         );
         sweeps.push(row);
     }

@@ -70,6 +70,10 @@ pub enum Frame {
     /// Follower → leader: the shard died after sending `completed`
     /// results. The leader re-queues the outstanding cells elsewhere.
     ShardFailed { shard: u32, completed: u32, error: String },
+    /// A trace span (see `obs`): follower shards stream cell spans to
+    /// the leader alongside `CellResult`s, and `obs::TraceSink` writes
+    /// any span set as line-delimited frames for offline tooling.
+    Span(SpanFrame),
 }
 
 impl Frame {
@@ -80,8 +84,28 @@ impl Frame {
             Frame::CellResult(_) => "cell_result",
             Frame::ShardDone { .. } => "shard_done",
             Frame::ShardFailed { .. } => "shard_failed",
+            Frame::Span(_) => "span",
         }
     }
+}
+
+/// One trace span on the wire: a named `[start_s, end_s]` interval on a
+/// track, optionally parented (`parent` is a span id, `-1` = root),
+/// with stringified attributes. Sim-time extents, so a follower's cell
+/// spans are as deterministic as its `CellResult`s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanFrame {
+    /// Lane the span renders on, e.g. `shard-1` or `requests`.
+    pub track: String,
+    /// Span id within its track (cell index for shard cell spans).
+    pub id: u64,
+    /// Parent span id within the same track; `-1` for roots.
+    pub parent: i64,
+    pub name: String,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Attribute key/value pairs (values pre-rendered to strings).
+    pub attrs: Vec<(String, String)>,
 }
 
 /// One follower's slice of a sweep: the shared grid description (the job
@@ -252,6 +276,24 @@ fn validate_frame(frame: &Frame) -> Result<(), String> {
                         s.shard, c.index, c.seed
                     ));
                 }
+            }
+            Ok(())
+        }
+        Frame::Span(s) => {
+            if !s.start_s.is_finite() || !s.end_s.is_finite() {
+                return Err(format!(
+                    "span {}/{}: non-finite extent [{}, {}]",
+                    s.track, s.id, s.start_s, s.end_s
+                ));
+            }
+            if s.end_s < s.start_s {
+                return Err(format!(
+                    "span {}/{}: ends before it starts ({} < {})",
+                    s.track, s.id, s.end_s, s.start_s
+                ));
+            }
+            if s.parent < -1 {
+                return Err(format!("span {}/{}: parent id {} below -1", s.track, s.id, s.parent));
             }
             Ok(())
         }
@@ -537,6 +579,25 @@ fn frame_to_json(frame: &Frame) -> Json {
             o.set("completed", Json::Int(*completed as i64));
             o.set("error", Json::Str(error.clone()));
         }
+        Frame::Span(s) => {
+            o.set("track", Json::Str(s.track.clone()));
+            o.set("id", ju64(s.id));
+            o.set("parent", Json::Int(s.parent));
+            o.set("name", Json::Str(s.name.clone()));
+            o.set("start_s", jf64(s.start_s));
+            o.set("end_s", jf64(s.end_s));
+            o.set(
+                "attrs",
+                Json::Arr(
+                    s.attrs
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())])
+                        })
+                        .collect(),
+                ),
+            );
+        }
     }
     o
 }
@@ -598,6 +659,33 @@ fn frame_from_json(v: &Json) -> Result<Frame, String> {
             completed: pu32(field(v, "completed", "shard_failed")?, "shard_failed completed")?,
             error: pstr(field(v, "error", "shard_failed")?, "shard_failed error")?,
         }),
+        "span" => {
+            let attrs_arr = field(v, "attrs", "span")?
+                .as_arr()
+                .ok_or_else(|| "span: attrs must be an array".to_string())?;
+            let mut attrs = Vec::with_capacity(attrs_arr.len());
+            for (i, pair) in attrs_arr.iter().enumerate() {
+                let pair = pair
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| format!("span attr {i}: expected [key, value]"))?;
+                attrs.push((
+                    pstr(&pair[0], &format!("span attr {i} key"))?,
+                    pstr(&pair[1], &format!("span attr {i} value"))?,
+                ));
+            }
+            Ok(Frame::Span(SpanFrame {
+                track: pstr(field(v, "track", "span")?, "span track")?,
+                id: pu64(field(v, "id", "span")?, "span id")?,
+                parent: field(v, "parent", "span")?
+                    .as_i64()
+                    .ok_or_else(|| "span parent: expected an integer".to_string())?,
+                name: pstr(field(v, "name", "span")?, "span name")?,
+                start_s: pf64(field(v, "start_s", "span")?, "span start_s")?,
+                end_s: pf64(field(v, "end_s", "span")?, "span end_s")?,
+                attrs,
+            }))
+        }
         other => Err(format!("unknown frame type {other:?}")),
     }
 }
@@ -619,6 +707,7 @@ const KIND_SHARD: u8 = 1;
 const KIND_CELL_RESULT: u8 = 2;
 const KIND_SHARD_DONE: u8 = 3;
 const KIND_SHARD_FAILED: u8 = 4;
+const KIND_SPAN: u8 = 5;
 
 /// Compact length-prefixed binary: little-endian integers, `f64::to_bits`
 /// floats (bit-exact by construction, no formatter in the loop),
@@ -676,6 +765,20 @@ impl Codec for BinaryCodec {
                 put_u32(out, *shard);
                 put_u32(out, *completed);
                 put_str(out, error);
+            }
+            Frame::Span(s) => {
+                out[start + 1] = KIND_SPAN;
+                put_str(out, &s.track);
+                put_u64(out, s.id);
+                put_u64(out, s.parent as u64); // two's complement round-trips
+                put_str(out, &s.name);
+                put_f64(out, s.start_s);
+                put_f64(out, s.end_s);
+                put_u32(out, s.attrs.len() as u32);
+                for (k, v) in &s.attrs {
+                    put_str(out, k);
+                    put_str(out, v);
+                }
             }
         }
         let len = (out.len() - start - HDR) as u32;
@@ -761,6 +864,20 @@ impl Codec for BinaryCodec {
                 completed: cur.u32()?,
                 error: cur.str("error text")?,
             },
+            KIND_SPAN => {
+                let track = cur.str("span track")?;
+                let id = cur.u64()?;
+                let parent = cur.u64()? as i64;
+                let name = cur.str("span name")?;
+                let start_s = cur.f64()?;
+                let end_s = cur.f64()?;
+                let n = cur.u32()? as usize;
+                let mut attrs = Vec::with_capacity(n.min(1 << 12));
+                for _ in 0..n {
+                    attrs.push((cur.str("span attr key")?, cur.str("span attr value")?));
+                }
+                Frame::Span(SpanFrame { track, id, parent, name, start_s, end_s, attrs })
+            }
             k => {
                 return Err(CodecError {
                     offset: 1,
@@ -1034,6 +1151,21 @@ mod tests {
         Frame::Shard(ShardAssignment { shard: 1, plan_seed, grid: grid_doc(), cells })
     }
 
+    fn span_frame() -> Frame {
+        Frame::Span(SpanFrame {
+            track: "shard-1".into(),
+            id: 5,
+            parent: -1,
+            name: "1xround-robin@2.0ms".into(),
+            start_s: 0.125,
+            end_s: 4.75,
+            attrs: vec![
+                ("seed".into(), "18446744073709551598".into()),
+                ("issued".into(), "240".into()),
+            ],
+        })
+    }
+
     fn all_frames() -> Vec<Frame> {
         vec![
             shard_frame(),
@@ -1042,6 +1174,7 @@ mod tests {
             cell_result(MetricsMode::Sketch { alpha: 0.01 }, true),
             Frame::ShardDone { shard: 2, cells: 9 },
             Frame::ShardFailed { shard: 0, completed: 4, error: "worker panic: \"boom\"".into() },
+            span_frame(),
         ]
     }
 
@@ -1271,6 +1404,28 @@ mod tests {
             codec.encode(&bad, &mut bytes);
             let err = codec.decode(&bytes).unwrap_err();
             assert!(err.message.contains("outside space"), "{}: {err}", codec.name());
+        }
+    }
+
+    #[test]
+    fn inverted_or_nonfinite_span_extents_are_rejected() {
+        let Frame::Span(base) = span_frame() else { unreachable!() };
+        let mut inverted = base.clone();
+        inverted.end_s = inverted.start_s - 1.0;
+        let mut nan = base.clone();
+        nan.start_s = f64::NAN;
+        for bad in [Frame::Span(inverted), Frame::Span(nan)] {
+            for kind in [CodecKind::JsonLines, CodecKind::Binary] {
+                let codec = kind.codec();
+                let mut bytes = Vec::new();
+                codec.encode(&bad, &mut bytes);
+                let err = codec.decode(&bytes).unwrap_err();
+                assert!(
+                    err.message.contains("span"),
+                    "{}: {err}",
+                    codec.name()
+                );
+            }
         }
     }
 

@@ -54,7 +54,9 @@
 //! channels for sockets changes no frame, no codec byte, and no
 //! determinism argument.
 
-use crate::codec::{CellResultFrame, CellSpec, CodecKind, Frame, FrameReader, ShardAssignment};
+use crate::codec::{
+    CellResultFrame, CellSpec, CodecKind, Frame, FrameReader, ShardAssignment, SpanFrame,
+};
 use crate::coordinator::job::{self, JobKind};
 use crate::coordinator::scheduler::shard_sizes;
 use crate::metrics::ScaleTimeline;
@@ -95,6 +97,13 @@ pub struct DistConfig {
     /// first N cell frames after finishing (late duplicates), exercising
     /// the leader's by-cell-index reconciliation.
     pub duplicate_first: usize,
+    /// Trace the sweep (obs): followers stream one [`Frame::Span`] per
+    /// completed cell (sim-time extents, so the spans are as
+    /// deterministic as the cell results), and the leader closes the set
+    /// with a root `sweep` span carrying the [`DistStats`] as
+    /// attributes. Off by default; the result cells are bit-identical
+    /// either way.
+    pub trace: bool,
 }
 
 impl DistConfig {
@@ -109,6 +118,7 @@ impl DistConfig {
             codec,
             chunk_bytes: 4096,
             duplicate_first: 0,
+            trace: false,
         }
     }
 }
@@ -139,6 +149,11 @@ pub struct DistStats {
 pub struct DistOutcome {
     pub outcome: SweepOutcome,
     pub stats: DistStats,
+    /// Shard→cell spans plus the root `sweep` span when
+    /// [`DistConfig::trace`] is on, sorted by `(track, id)` so the set
+    /// is byte-stable regardless of frame arrival order. Empty
+    /// otherwise.
+    pub spans: Vec<SpanFrame>,
 }
 
 /// Run a `JobKind::Sweep` grid sharded across `cfg.followers`, absorbing
@@ -176,6 +191,7 @@ pub fn run_sharded_with(
     let mut alive = vec![true; nf];
     let mut outstanding: Vec<usize> = (0..total).collect();
     let mut stats = DistStats::default();
+    let mut spans: Vec<SpanFrame> = Vec::new();
 
     while !outstanding.is_empty() {
         let healthy: Vec<usize> = (0..nf).filter(|&f| alive[f]).collect();
@@ -289,6 +305,15 @@ pub fn run_sharded_with(
                             on_cell(&r);
                             slots[i] = Some(r);
                         }
+                        Frame::Span(s) => {
+                            // A re-queued cell re-runs on a different
+                            // follower (dead ones stay dead), so a
+                            // duplicate (track, id) only means a re-sent
+                            // frame: first copy wins.
+                            if !spans.iter().any(|p| p.track == s.track && p.id == s.id) {
+                                spans.push(s);
+                            }
+                        }
                         Frame::ShardDone { .. } => {}
                         Frame::ShardFailed { shard, completed, error } => {
                             eprintln!(
@@ -340,10 +365,33 @@ pub fn run_sharded_with(
                 issued: r.issued,
                 downtime_s: r.downtime_s,
                 events: r.events,
+                trace: None,
             },
         });
     }
-    Ok(DistOutcome { outcome: SweepOutcome { cells }, stats })
+    // Close the traced set: sort for arrival-order independence, then a
+    // root `sweep` span carrying the wire accounting as attributes.
+    if cfg.trace {
+        spans.sort_by(|a, b| a.track.cmp(&b.track).then(a.id.cmp(&b.id)));
+        let end_s = spans.iter().fold(0.0f64, |m, s| m.max(s.end_s));
+        spans.push(SpanFrame {
+            track: "sweep".to_string(),
+            id: 0,
+            parent: -1,
+            name: "sweep".to_string(),
+            start_s: 0.0,
+            end_s,
+            attrs: vec![
+                ("rounds".to_string(), stats.rounds.to_string()),
+                ("bytes_sent".to_string(), stats.bytes_to_followers.to_string()),
+                ("bytes_received".to_string(), stats.bytes_to_leader.to_string()),
+                ("frames".to_string(), stats.frames_to_leader.to_string()),
+                ("duplicates".to_string(), stats.duplicate_frames.to_string()),
+                ("cells_rerun".to_string(), stats.cells_rerun.to_string()),
+            ],
+        });
+    }
+    Ok(DistOutcome { outcome: SweepOutcome { cells }, stats, spans })
 }
 
 /// One follower's round: decode the shard from bytes, rebuild the plan
@@ -433,6 +481,28 @@ fn follower_round(
             first_frames.push(bytes.clone());
         }
         send(bytes);
+        if cfg.trace {
+            // One span per finished cell: the cell's simulated horizon on
+            // this shard's track, with the conservation counters as
+            // attributes. Sim-time extents — no wall clock — so the
+            // traced wire stream is as deterministic as the results.
+            let span = Frame::Span(SpanFrame {
+                track: format!("shard-{f}"),
+                id: i as u64,
+                parent: -1,
+                name: outcome.label.clone(),
+                start_s: 0.0,
+                end_s: plan.cells()[i].config_for(outcome.seed).duration_s,
+                attrs: vec![
+                    ("issued".to_string(), r.issued.to_string()),
+                    ("events".to_string(), r.events.to_string()),
+                    ("dropped".to_string(), r.dropped.to_string()),
+                ],
+            });
+            let mut bytes = Vec::new();
+            codec.encode(&span, &mut bytes);
+            send(bytes);
+        }
     }
 
     if crashed {
@@ -505,6 +575,7 @@ mod tests {
             codec: CodecKind::Binary,
             chunk_bytes: 64,
             duplicate_first: 0,
+            trace: false,
         };
         let dist = run_sharded(&kind, 7, &cfg).unwrap();
         assert_eq!(fingerprints(&dist.outcome), fingerprints(&serial));
@@ -538,6 +609,7 @@ mod tests {
             codec: CodecKind::Binary,
             chunk_bytes: 512,
             duplicate_first: 0,
+            trace: false,
         };
         let err = run_sharded(&kind, 1, &cfg).unwrap_err().to_string();
         assert!(err.contains("every follower failed"), "{err}");

@@ -124,6 +124,29 @@
 //!   hedge: true                 # duplicate retries onto a 2nd replica
 //! ```
 //!
+//! The same three tasks accept an optional top-level `trace:` block
+//! switching on the deterministic tracing layer (see [`crate::obs`]):
+//! request span trees head-sampled by a pure function of the request id,
+//! gauge timelines on a fixed sim-time grid, and a Chrome-trace/Perfetto
+//! JSON export that `ui.perfetto.dev` loads directly. Tracing is
+//! observational only — the results (and every
+//! `Collector::fingerprint()`) are bit-identical with the block present
+//! or absent; only the exported spans differ. For distributed sweeps
+//! (`followers: 2+`) the block also turns on shard→cell span streaming:
+//! followers emit one span per completed cell and the leader closes the
+//! set with a root `sweep` span carrying the wire stats:
+//!
+//! ```yaml
+//! trace:
+//!   sample: 0.05             # off | all | a fraction in (0, 1]
+//!   every_nth: 100           # alternative to sample: every Nth request id
+//!   detail: full             # stages | full (batch attrs, retry links)
+//!   gauge_interval_ms: 100   # gauge sampling grid; 0 disables timelines
+//!   gauge_cap: 4096          # bounded ring capacity per gauge series
+//!   max_spans: 65536         # sampled request roots kept (arrival order)
+//!   out: trace.json          # optional Perfetto export path
+//! ```
+//!
 //! Submissions are validated loudly: malformed grid axes, bad admission
 //! shapes, and *unknown top-level keys* all fail the parse with an error
 //! naming the offender — a typo'd key never silently runs a different
@@ -184,8 +207,9 @@ use crate::serving::{
     FaultProfile, Policy, RetryPolicy, RouterPolicy, ScalePolicy, ServiceModel, SimConfig,
     TenantSpec,
 };
-use crate::codec::CodecKind;
+use crate::codec::{CodecKind, SpanFrame};
 use crate::coordinator::distributed;
+use crate::obs::{self, Detail, SampleSpec, TraceConfig};
 use crate::sweep::SweepPlan;
 use crate::util::json::Json;
 use crate::util::yamlish;
@@ -346,6 +370,17 @@ pub struct AutoscaleSpec {
     pub eval_interval_s: f64,
 }
 
+/// Parsed top-level `trace:` block — the deterministic tracing knobs of
+/// a `cluster_sim`, `sweep`, or `multimodel` submission (see
+/// [`crate::obs`] and the module docs for the YAML shape).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub config: TraceConfig,
+    /// Write the run's spans and gauge timelines as Chrome-trace/Perfetto
+    /// JSON here after the job completes (`ui.perfetto.dev` loads it).
+    pub out: Option<String>,
+}
+
 /// A parsed benchmark submission.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
@@ -353,6 +388,9 @@ pub struct JobSpec {
     pub kind: JobKind,
     /// Scheduler's duration estimate (paper: processing times are known).
     pub est_duration_s: f64,
+    /// Optional tracing block. Observational only: results are
+    /// bit-identical whether it is present or absent.
+    pub trace: Option<TraceSpec>,
 }
 
 impl JobSpec {
@@ -404,7 +442,7 @@ impl JobSpec {
                     task,
                     &["model", "platform", "software", "replicas", "router", "workload",
                       "batching", "autoscale", "scale", "sketch_alpha", "admission",
-                      "faults", "retry"],
+                      "faults", "retry", "trace"],
                 )?;
                 let wl = doc.get("workload");
                 let burst = wl.and_then(|w| w.get("burst")).map(|b| BurstSpec {
@@ -492,7 +530,7 @@ impl JobSpec {
                     task,
                     &["model", "platform", "software", "routers", "replicas",
                       "batch_timeouts_ms", "workload", "batching", "scale", "sketch_alpha",
-                      "admission", "faults", "retry", "followers", "codec"],
+                      "admission", "faults", "retry", "followers", "codec", "trace"],
                 )?;
                 let wl = doc.get("workload");
                 let routers: Vec<String> = match doc.get("routers").and_then(|v| v.as_arr()) {
@@ -609,7 +647,7 @@ impl JobSpec {
                     task,
                     &["platform", "software", "models", "rates", "mode", "replicas", "mem_gb",
                       "router", "workload", "batching", "scale", "sketch_alpha", "admission",
-                      "faults", "retry"],
+                      "faults", "retry", "trace"],
                 )?;
                 let wl = doc.get("workload");
                 let models: Vec<String> = match doc.get("models").and_then(|v| v.as_arr()) {
@@ -713,7 +751,7 @@ impl JobSpec {
             .get("est_duration_s")
             .and_then(|v| v.as_f64())
             .unwrap_or_else(|| default_estimate(&kind));
-        Ok(JobSpec { name, kind, est_duration_s: est })
+        Ok(JobSpec { name, kind, est_duration_s: est, trace: trace_spec(doc)? })
     }
 }
 
@@ -1008,6 +1046,82 @@ fn retry_spec(doc: &Json) -> Result<Option<RetryPolicy>> {
         }
     }
     Ok(Some(policy))
+}
+
+/// Parse the optional top-level `trace:` block into a [`TraceSpec`]
+/// (see the module docs for the YAML shape). Defaults are
+/// [`TraceConfig::full`] — every request sampled at full detail, gauges
+/// on a 100 ms grid — so a bare `trace:` block with only `out:` already
+/// produces a complete export. Head-sampling is a pure function of the
+/// request id, so any `sample`/`every_nth` choice is deterministic.
+fn trace_spec(doc: &Json) -> Result<Option<TraceSpec>> {
+    let Some(block) = doc.get("trace") else { return Ok(None) };
+    if let Some(map) = block.as_obj() {
+        for key in map.keys() {
+            if !["sample", "every_nth", "detail", "gauge_interval_ms", "gauge_cap", "max_spans",
+                 "out"]
+                .contains(&key.as_str())
+            {
+                bail!(
+                    "unknown key {key:?} in trace (accepted: sample, every_nth, detail, \
+                     gauge_interval_ms, gauge_cap, max_spans, out)"
+                );
+            }
+        }
+    }
+    let mut config = TraceConfig::full();
+    if block.get("sample").is_some() && block.get("every_nth").is_some() {
+        bail!("trace takes 'sample' or 'every_nth', not both");
+    }
+    if let Some(s) = block.get("sample") {
+        config.sample = match (s.as_str(), s.as_f64()) {
+            (Some("off"), _) => SampleSpec::Off,
+            (Some("all"), _) => SampleSpec::All,
+            (None, Some(p)) if p > 0.0 && p < 1.0 => SampleSpec::Rate(p),
+            (None, Some(p)) if p == 1.0 => SampleSpec::All,
+            _ => bail!("trace sample must be 'off', 'all', or a fraction in (0, 1]"),
+        };
+    }
+    if let Some(n) = block.get("every_nth") {
+        config.sample = match n.as_i64() {
+            Some(n) if n >= 1 => SampleSpec::EveryNth(n as u64),
+            _ => bail!("trace every_nth must be a positive integer"),
+        };
+    }
+    if let Some(d) = block.get("detail") {
+        config.detail = match d.as_str() {
+            Some("stages") => Detail::Stages,
+            Some("full") => Detail::Full,
+            _ => bail!("trace detail must be 'stages' or 'full'"),
+        };
+    }
+    if let Some(g) = block.get("gauge_interval_ms") {
+        config.gauge_interval_s = match g.as_f64() {
+            Some(ms) if ms > 0.0 => Some(ms / 1e3),
+            Some(ms) if ms == 0.0 => None, // 0 disables the timelines
+            _ => bail!("trace gauge_interval_ms must be a non-negative number"),
+        };
+    }
+    if let Some(c) = block.get("gauge_cap") {
+        config.gauge_cap = match c.as_i64() {
+            Some(n) if n >= 1 => n as usize,
+            _ => bail!("trace gauge_cap must be a positive integer"),
+        };
+    }
+    if let Some(m) = block.get("max_spans") {
+        config.max_spans = match m.as_i64() {
+            Some(n) if n >= 1 => n as usize,
+            _ => bail!("trace max_spans must be a positive integer"),
+        };
+    }
+    let out = match block.get("out") {
+        None => None,
+        Some(p) => match p.as_str() {
+            Some(path) if !path.is_empty() => Some(path.to_string()),
+            _ => bail!("trace out must be a non-empty path string"),
+        },
+    };
+    Ok(Some(TraceSpec { config, out }))
 }
 
 /// Split the offered pattern evenly across admission tenants, one tagged
@@ -1549,6 +1663,49 @@ fn with_drop_breakdown(mut record: Record, collector: &crate::metrics::Collector
     record
 }
 
+/// The engine trace config a submission asks for (`off()` — the
+/// zero-cost path — when it carries no `trace:` block).
+fn trace_config_of(spec: &JobSpec) -> TraceConfig {
+    spec.trace.as_ref().map_or_else(TraceConfig::off, |t| t.config.clone())
+}
+
+/// Write the Chrome-trace/Perfetto export when the submission asked for
+/// one (`trace.out`). The document bytes are deterministic for a fixed
+/// seed (sorted keys, canonical float rendering), so re-running the job
+/// rewrites the identical file.
+fn write_trace_out(spec: &JobSpec, trace: Option<&obs::TraceOutput>) -> Result<()> {
+    let Some(path) = spec.trace.as_ref().and_then(|t| t.out.as_deref()) else {
+        return Ok(());
+    };
+    let empty = obs::TraceOutput::default();
+    let doc = obs::perfetto::trace_json(trace.unwrap_or(&empty));
+    std::fs::write(path, doc.to_string_compact())
+        .map_err(|e| anyhow!("writing trace export {path:?}: {e}"))?;
+    Ok(())
+}
+
+/// Convert sweep cell-span wire frames into an [`obs::TraceOutput`] for
+/// the Perfetto export. The string track (`shard-3`, `sweep`, `local`)
+/// rides as a `track` attribute; the frame id becomes the display lane.
+fn frames_to_trace(frames: &[SpanFrame]) -> obs::TraceOutput {
+    let spans = frames
+        .iter()
+        .enumerate()
+        .map(|(i, f)| obs::Span {
+            id: i as u32,
+            parent: if f.parent >= 0 { Some(f.parent as u32) } else { None },
+            name: f.name.clone(),
+            track: f.id,
+            start_s: f.start_s,
+            end_s: f.end_s,
+            attrs: std::iter::once(("track".to_string(), obs::Attr::S(f.track.clone())))
+                .chain(f.attrs.iter().map(|(k, v)| (k.clone(), obs::Attr::S(v.clone()))))
+                .collect(),
+        })
+        .collect();
+    obs::TraceOutput { spans, gauges: Vec::new(), truncated: 0 }
+}
+
 /// One record per priority class — the per-tenant QoS view of a run with
 /// an `admission:` block. Class records share the run's task name and are
 /// distinguished by the `class` label; conservation is enforced per class
@@ -1730,7 +1887,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 retry: *retry,
                 seed,
             };
-            let result = cluster::run(&config);
+            let result = cluster::run_traced(&config, &trace_config_of(spec));
             // Conservation is part of the contract: drain-on-remove must
             // complete every accepted request across scale events.
             if result.collector.completed + result.dropped != result.issued {
@@ -1774,6 +1931,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             }
             let mut out = vec![with_drop_breakdown(record, collector)];
             out.extend(class_records("cluster_sim", model, platform, software, &result.classes)?);
+            write_trace_out(spec, result.trace.as_ref())?;
             Ok(out)
         }
         JobKind::HardwareSweep { model, platform, batches } => {
@@ -1797,16 +1955,50 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
             Ok(out)
         }
         JobKind::Sweep { model, platform, software, admission, followers, codec, .. } => {
-            let (plan, axes) = build_sweep_plan(&spec.kind, seed)?;
+            let (mut plan, axes) = build_sweep_plan(&spec.kind, seed)?;
+            if let Some(ts) = &spec.trace {
+                plan.set_trace(ts.config.clone());
+            }
+            let mut wire: Option<distributed::DistStats> = None;
+            let mut spans: Vec<SpanFrame> = Vec::new();
             let outcome = if *followers >= 2 {
                 // Shard the grid across followers through the wire codec
                 // (streaming absorption, straggler re-queue) — bit-
                 // identical to the local run by construction (PERF.md
                 // §Distributed sweeps).
-                let dist = distributed::DistConfig::uniform(*followers, threads.max(1), *codec);
-                distributed::run_sharded(&spec.kind, seed, &dist)?.outcome
+                let mut dist =
+                    distributed::DistConfig::uniform(*followers, threads.max(1), *codec);
+                dist.trace = spec.trace.is_some();
+                let d = distributed::run_sharded(&spec.kind, seed, &dist)?;
+                wire = Some(d.stats);
+                spans = d.spans;
+                d.outcome
             } else {
-                plan.run(threads.max(1))
+                let outcome = plan.run(threads.max(1));
+                if spec.trace.is_some() {
+                    // Local cell spans mirror the follower-emitted shape
+                    // (sim-time extents, conservation-counter attrs) so
+                    // the export looks the same sharded or not.
+                    spans = outcome
+                        .cells
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| SpanFrame {
+                            track: "local".to_string(),
+                            id: i as u64,
+                            parent: -1,
+                            name: c.label.clone(),
+                            start_s: 0.0,
+                            end_s: plan.cells()[i].config_for(c.seed).duration_s,
+                            attrs: vec![
+                                ("issued".to_string(), c.result.issued.to_string()),
+                                ("events".to_string(), c.result.events.to_string()),
+                                ("dropped".to_string(), c.result.dropped.to_string()),
+                            ],
+                        })
+                        .collect();
+                }
+                outcome
             };
             let mut out = Vec::with_capacity(outcome.cells.len());
             for (cell, (n, router_name, rate, wait_s)) in outcome.cells.iter().zip(&axes) {
@@ -1827,20 +2019,28 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                         r.collector.dropped
                     );
                 }
-                out.push(with_drop_breakdown(
-                    Record::new("sweep", model, platform, software)
-                        .with_label("cell", &cell.label)
-                        .with_label("router", router_name)
-                        .with_metric("replicas", *n as f64)
-                        .with_metric("rate_rps", *rate)
-                        .with_metric("batch_timeout_ms", wait_s * 1e3)
-                        .with_metric("p50_ms", r.collector.e2e.percentile(50.0) * 1e3)
-                        .with_metric("p99_ms", r.collector.e2e.percentile(99.0) * 1e3)
-                        .with_metric("throughput_rps", r.collector.throughput_rps())
-                        .with_metric("dropped", r.dropped as f64)
-                        .with_metric("issued", r.issued as f64),
-                    &r.collector,
-                ));
+                let mut rec = Record::new("sweep", model, platform, software)
+                    .with_label("cell", &cell.label)
+                    .with_label("router", router_name)
+                    .with_metric("replicas", *n as f64)
+                    .with_metric("rate_rps", *rate)
+                    .with_metric("batch_timeout_ms", wait_s * 1e3)
+                    .with_metric("p50_ms", r.collector.e2e.percentile(50.0) * 1e3)
+                    .with_metric("p99_ms", r.collector.e2e.percentile(99.0) * 1e3)
+                    .with_metric("throughput_rps", r.collector.throughput_rps())
+                    .with_metric("dropped", r.dropped as f64)
+                    .with_metric("issued", r.issued as f64);
+                if let Some(w) = &wire {
+                    // Wire accounting of the distributed run, surfaced on
+                    // every cell record (the whole grid shares one wire).
+                    rec = rec
+                        .with_metric("bytes_sent", w.bytes_to_followers as f64)
+                        .with_metric("bytes_received", w.bytes_to_leader as f64)
+                        .with_metric("duplicates", w.duplicate_frames as f64)
+                        .with_metric("cells_rerun", w.cells_rerun as f64)
+                        .with_metric("rounds", w.rounds as f64);
+                }
+                out.push(with_drop_breakdown(rec, &r.collector));
             }
             // Grid-wide per-class view: `aggregate_classes` absorbs every
             // cell's ledgers (thread-count independent, like the cells).
@@ -1848,6 +2048,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 let (_, classes) = outcome.aggregate_classes();
                 out.extend(class_records("sweep", model, platform, software, &classes)?);
             }
+            write_trace_out(spec, Some(&frames_to_trace(&spans)))?;
             Ok(out)
         }
         JobKind::MultiModel {
@@ -1941,7 +2142,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 retry: *retry,
                 seed,
             };
-            let result = multimodel::run(&config);
+            let result = multimodel::run_traced(&config, &trace_config_of(spec));
             let colocated = if mode.as_str() == "shared" { models.len() } else { 1 };
             let mut out = Vec::with_capacity(result.models.len());
             for (mm, &rate) in result.models.iter().zip(rates) {
@@ -1971,6 +2172,7 @@ pub fn execute(spec: &JobSpec, seed: u64, time_scale: f64, threads: usize) -> Re
                 ));
             }
             out.extend(class_records("multimodel", "-", platform, software, &result.classes)?);
+            write_trace_out(spec, result.trace.as_ref())?;
             Ok(out)
         }
         JobKind::Sleep { seconds } => {
@@ -2927,5 +3129,109 @@ retry:
                 );
             }
         }
+        // Satellite: the distributed run surfaces its wire accounting as
+        // metrics on every cell record; a local run has no wire.
+        for (ra, rb) in a.iter().zip(&b) {
+            for key in ["bytes_sent", "bytes_received", "duplicates", "cells_rerun", "rounds"] {
+                assert!(ra.metric(key).is_none(), "{key} must be absent on local records");
+                assert!(rb.metric(key).is_some(), "{key} must ride on sharded records");
+            }
+            assert!(rb.metric("bytes_sent").unwrap() > 0.0);
+            assert_eq!(rb.metric("rounds"), Some(1.0), "healthy followers finish in one round");
+        }
+    }
+
+    #[test]
+    fn parses_trace_block() {
+        let yaml = format!(
+            "{}trace:\n  sample: 0.25\n  detail: stages\n  gauge_interval_ms: 50\n\
+             \x20 gauge_cap: 128\n  max_spans: 1000\n  out: /tmp/t.json\n",
+            CLUSTER_SUBMISSION.trim_start_matches('\n')
+        );
+        let spec = JobSpec::parse_yaml(&yaml).unwrap();
+        let t = spec.trace.as_ref().unwrap();
+        assert_eq!(t.config.sample, SampleSpec::Rate(0.25));
+        assert_eq!(t.config.detail, Detail::Stages);
+        assert_eq!(t.config.gauge_interval_s, Some(0.05));
+        assert_eq!(t.config.gauge_cap, 128);
+        assert_eq!(t.config.max_spans, 1000);
+        assert_eq!(t.out.as_deref(), Some("/tmp/t.json"));
+        // Alternative sampling forms and the full-on defaults.
+        let nth = JobSpec::parse_yaml("task: sweep\nrouters: [rr]\nreplicas: [1]\n\
+                                       trace:\n  every_nth: 8\n")
+            .unwrap();
+        let cfg = nth.trace.unwrap().config;
+        assert_eq!(cfg.sample, SampleSpec::EveryNth(8));
+        assert_eq!(cfg.detail, Detail::Full, "defaults mirror TraceConfig::full()");
+        assert_eq!(cfg.gauge_interval_s, Some(0.1));
+        let off = JobSpec::parse_yaml("task: multimodel\nmodels: [resnet50]\n\
+                                       trace:\n  sample: off\n  gauge_interval_ms: 0\n")
+            .unwrap();
+        let cfg = off.trace.unwrap().config;
+        assert_eq!(cfg.sample, SampleSpec::Off);
+        assert_eq!(cfg.gauge_interval_s, None, "0 disables the timelines");
+        // No block at all — the zero-cost default.
+        assert!(JobSpec::parse_yaml(CLUSTER_SUBMISSION).unwrap().trace.is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_trace_blocks() {
+        let parse = |block: &str| {
+            JobSpec::parse_yaml(&format!("task: cluster_sim\nmodel: resnet50\n{block}"))
+        };
+        assert!(parse("trace:\n  sample: 2.0\n").is_err());
+        assert!(parse("trace:\n  sample: -0.1\n").is_err());
+        assert!(parse("trace:\n  sample: maybe\n").is_err());
+        assert!(parse("trace:\n  sample: all\n  every_nth: 4\n").is_err(), "one or the other");
+        assert!(parse("trace:\n  every_nth: 0\n").is_err());
+        assert!(parse("trace:\n  detail: everything\n").is_err());
+        assert!(parse("trace:\n  gauge_interval_ms: -1\n").is_err());
+        assert!(parse("trace:\n  gauge_cap: 0\n").is_err());
+        assert!(parse("trace:\n  max_spans: 0\n").is_err());
+        assert!(parse("trace:\n  out: 42\n").is_err());
+        assert!(parse("trace:\n  verbose: true\n").is_err(), "unknown trace key");
+        // Only the three engine tasks take the block.
+        assert!(JobSpec::parse_yaml("task: serving_sim\ntrace:\n  sample: all\n").is_err());
+        assert!(JobSpec::parse_yaml(
+            "task: hardware_sweep\nmodel: resnet50\ntrace:\n  sample: all\n"
+        )
+        .is_err());
+        assert!(
+            JobSpec::parse_yaml("task: sleep\nseconds: 1\ntrace:\n  sample: all\n").is_err()
+        );
+    }
+
+    #[test]
+    fn trace_block_is_observational_and_exports_perfetto() {
+        let base = "task: cluster_sim\nmodel: resnet50\nplatform: G1\nsoftware: tris\n\
+                    replicas: 2\nworkload:\n  rate: 120.0\n  duration_s: 5\n\
+                    batching:\n  max_size: 8\n  max_wait_ms: 2\n";
+        let path =
+            std::env::temp_dir().join(format!("inferbench_job_trace_{}.json", std::process::id()));
+        let traced_yaml = format!(
+            "{base}trace:\n  sample: all\n  detail: full\n  gauge_interval_ms: 100\n  out: {}\n",
+            path.display()
+        );
+        let plain = execute(&JobSpec::parse_yaml(base).unwrap(), 7, 1.0, 1).unwrap();
+        let traced = execute(&JobSpec::parse_yaml(&traced_yaml).unwrap(), 7, 1.0, 1).unwrap();
+        // Tracing is observational: every record metric is bit-identical.
+        assert_eq!(plain.len(), traced.len());
+        for (a, b) in plain.iter().zip(&traced) {
+            for key in ["p50_ms", "p99_ms", "throughput_rps", "issued", "dropped"] {
+                assert_eq!(
+                    a.metric(key).map(f64::to_bits),
+                    b.metric(key).map(f64::to_bits),
+                    "{key} must not move when tracing is on"
+                );
+            }
+        }
+        // And the export is a well-formed, non-empty Chrome-trace doc.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        match doc.get("traceEvents") {
+            Some(Json::Arr(events)) => assert!(!events.is_empty(), "empty trace export"),
+            other => panic!("traceEvents missing: {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

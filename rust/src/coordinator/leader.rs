@@ -9,6 +9,7 @@
 
 use super::job::{self, JobSpec};
 use super::scheduler::{LoadBalance, LocalOrder, SchedulerPolicy};
+use crate::obs::{self, Attr};
 use crate::perfdb::{PerfDb, Record};
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
@@ -44,6 +45,11 @@ pub struct Completed {
     /// exhausting its retries.
     pub attempts: u32,
     pub ok: bool,
+    /// Completion instant on the leader's wall clock, seconds since
+    /// `Leader::start`. Together with `waited_s`/`ran_s` this anchors the
+    /// job's queue→run intervals on one shared timeline
+    /// ([`Leader::job_spans`]).
+    pub finished_s: f64,
 }
 
 impl Completed {
@@ -201,6 +207,7 @@ impl Leader {
             Arc::new(CompletionLog { entries: Mutex::new(Vec::new()), cv: Condvar::new() });
         let mut shared = Vec::new();
         let mut handles = Vec::new();
+        let epoch = Instant::now();
         for w in 0..config.workers {
             let ws = Arc::new(WorkerShared {
                 queue: Mutex::new(VecDeque::new()),
@@ -218,7 +225,7 @@ impl Leader {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("inferbench-worker-{w}"))
-                    .spawn(move || worker_loop(w, ws, db, done, cfg))
+                    .spawn(move || worker_loop(w, ws, db, done, cfg, epoch))
                     .expect("spawn worker"),
             );
         }
@@ -345,6 +352,60 @@ impl Leader {
         self.completions.entries.lock().unwrap().clone()
     }
 
+    /// Coordinator job spans from the completion log: one `job` root per
+    /// completed job (track = job id, sorted by id) with `queued` and
+    /// `run` children on the leader's wall-clock timeline, carrying
+    /// name/worker/attempts/outcome as attributes. Export through
+    /// [`crate::obs::perfetto::trace_json`] like any engine trace.
+    ///
+    /// Wall-clock, not sim time: this is the one tracing pillar that is
+    /// **not** byte-stable across runs — the engine-side spans and gauges
+    /// are, and the bit-identity tests cover only those.
+    pub fn job_spans(&self) -> obs::TraceOutput {
+        let mut entries = self.completions();
+        entries.sort_by_key(|c| c.id);
+        let mut spans = Vec::with_capacity(entries.len() * 3);
+        for c in &entries {
+            let run_start = (c.finished_s - c.ran_s).max(0.0);
+            let queue_start = (run_start - c.waited_s).max(0.0);
+            let outcome = if c.ok { "completed" } else { "failed" };
+            let root = spans.len() as u32;
+            spans.push(obs::Span {
+                id: root,
+                parent: None,
+                name: "job".to_string(),
+                track: c.id,
+                start_s: queue_start,
+                end_s: c.finished_s,
+                attrs: vec![
+                    ("name".to_string(), Attr::S(c.name.clone())),
+                    ("worker".to_string(), Attr::U(c.worker as u64)),
+                    ("attempts".to_string(), Attr::U(c.attempts as u64)),
+                    ("outcome".to_string(), Attr::S(outcome.to_string())),
+                ],
+            });
+            spans.push(obs::Span {
+                id: root + 1,
+                parent: Some(root),
+                name: "queued".to_string(),
+                track: c.id,
+                start_s: queue_start,
+                end_s: run_start,
+                attrs: Vec::new(),
+            });
+            spans.push(obs::Span {
+                id: root + 2,
+                parent: Some(root),
+                name: "run".to_string(),
+                track: c.id,
+                start_s: run_start,
+                end_s: c.finished_s,
+                attrs: Vec::new(),
+            });
+        }
+        obs::TraceOutput { spans, gauges: Vec::new(), truncated: 0 }
+    }
+
     /// Stop workers (drains nothing; call after wait_for).
     pub fn shutdown(mut self) {
         for ws in &self.shared {
@@ -363,6 +424,7 @@ fn worker_loop(
     db: Arc<Mutex<PerfDb>>,
     done: Arc<CompletionLog>,
     cfg: LeaderConfig,
+    epoch: Instant,
 ) {
     loop {
         // Tier-2 ordering: pick the next job from the local queue.
@@ -480,6 +542,7 @@ fn worker_loop(
                 ran_s,
                 attempts: pending.attempts + 1,
                 ok,
+                finished_s: epoch.elapsed().as_secs_f64(),
             });
         }
         // Wake every `wait_for` caller; each re-checks its own target.
@@ -576,6 +639,39 @@ mod tests {
         assert_eq!(recs.len(), 4, "2 fleet sizes x 2 routers");
         assert!(recs.iter().any(|r| r.label("router") == Some("least-outstanding")));
         drop(db);
+        leader.shutdown();
+    }
+
+    #[test]
+    fn job_spans_cover_the_completion_log() {
+        let leader = Leader::start(LeaderConfig {
+            workers: 2,
+            time_scale: 100.0,
+            ..Default::default()
+        });
+        for i in 0..4 {
+            leader.submit(sleep_spec(&format!("job{i}"), 0.5)).unwrap();
+        }
+        leader.wait_for(4, std::time::Duration::from_secs(10)).unwrap();
+        let trace = leader.job_spans();
+        assert_eq!(trace.spans.len(), 12, "a root + queued + run triple per job");
+        for chunk in trace.spans.chunks(3) {
+            let (root, queued, run) = (&chunk[0], &chunk[1], &chunk[2]);
+            assert_eq!(root.name, "job");
+            assert_eq!((queued.name.as_str(), run.name.as_str()), ("queued", "run"));
+            assert_eq!(queued.parent, Some(root.id));
+            assert_eq!(run.parent, Some(root.id));
+            // The children tile the root exactly on one timeline.
+            assert_eq!(root.start_s, queued.start_s);
+            assert_eq!(queued.end_s, run.start_s);
+            assert_eq!(run.end_s, root.end_s);
+            assert!(root.end_s >= root.start_s);
+            assert!(root.attrs.iter().any(|(k, v)| k == "outcome" && v.render() == "completed"));
+        }
+        // Roots are sorted by job id — a deterministic export order even
+        // though completion order is scheduling-dependent.
+        let tracks: Vec<u64> = trace.spans.iter().step_by(3).map(|s| s.track).collect();
+        assert_eq!(tracks, vec![0, 1, 2, 3]);
         leader.shutdown();
     }
 

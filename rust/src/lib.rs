@@ -39,6 +39,15 @@
 //! straggler re-queue from per-cell seeds, bit-identical to serial at
 //! any follower count.
 //!
+//! Observability: [`obs`] adds a determinism-preserving tracing and
+//! telemetry layer — head-sampled request span trees through admit →
+//! hold → route → batch → serve → retry, gauge timelines of engine
+//! internals on a fixed sim-time grid in bounded rings, and
+//! coordinator job/shard spans — exported as Chrome-trace/Perfetto
+//! JSON or line-delimited [`codec`] frames. Enabling it never touches
+//! an RNG stream or the event heap, so traced runs are bit-identical
+//! to untraced ones (gated by `tests/obs.rs`).
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! regenerated paper results.
 
@@ -48,6 +57,7 @@ pub mod coordinator;
 pub mod hardware;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod perfdb;
 pub mod pipeline;
 pub mod runtime;

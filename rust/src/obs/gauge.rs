@@ -1,0 +1,260 @@
+//! Gauge timelines: engine internals sampled on a fixed sim-time grid
+//! into bounded ring buffers.
+//!
+//! The recorder follows the DES invariant that state only changes at
+//! events: when the engine pops an event at `now`, every grid point in
+//! `(last_sampled, now]` saw the *current* (pre-event) state, so the
+//! engine calls [`GaugeRecorder::begin`] at the top of its loop and, if
+//! it returns `n > 0`, records each gauge value `n` times. Rings keep
+//! the most recent `cap` samples per series (the sketch-mode
+//! bounded-memory discipline from PR 6): memory is
+//! `O(series x cap)` regardless of run length, and the overwritten
+//! prefix is accounted in [`GaugeSeries::dropped`] rather than
+//! silently lost.
+//!
+//! Determinism: sampling reads engine state, never mutates it, and
+//! draws no randomness — grid times are a pure function of the
+//! configured interval, so two runs of the same seed produce identical
+//! series byte-for-byte.
+
+use std::collections::BTreeMap;
+
+/// One exported gauge timeline on the fixed grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaugeSeries {
+    /// Series name, e.g. `queue_depth/2` or `heap_depth`.
+    pub name: String,
+    /// Sim time of `samples[0]` (grid-aligned).
+    pub t0: f64,
+    /// Grid interval in sim seconds.
+    pub dt: f64,
+    /// Most recent samples in time order (ring-bounded).
+    pub samples: Vec<f64>,
+    /// Samples overwritten because the ring wrapped.
+    pub dropped: u64,
+}
+
+/// Ring of the last `cap` samples plus the count of everything older.
+#[derive(Debug, Clone)]
+struct Ring {
+    /// Global grid tick at which this series first recorded.
+    start_tick: u64,
+    /// Total samples ever pushed.
+    total: u64,
+    buf: Vec<f64>,
+}
+
+impl Ring {
+    fn push(&mut self, v: f64, cap: usize) {
+        if self.buf.len() < cap {
+            self.buf.push(v);
+        } else {
+            let idx = (self.total % cap as u64) as usize;
+            self.buf[idx] = v;
+        }
+        self.total += 1;
+    }
+
+    /// Samples in time order (oldest first).
+    fn ordered(&self, cap: usize) -> Vec<f64> {
+        if self.total <= cap as u64 {
+            return self.buf.clone();
+        }
+        let head = (self.total % cap as u64) as usize;
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[head..]);
+        out.extend_from_slice(&self.buf[..head]);
+        out
+    }
+}
+
+/// Samples named gauges on a fixed sim-time grid into bounded rings.
+#[derive(Debug, Clone)]
+pub struct GaugeRecorder {
+    dt: f64,
+    cap: usize,
+    /// Next grid tick to emit (tick `k` is sim time `k * dt`).
+    next_tick: u64,
+    series: BTreeMap<String, Ring>,
+    enabled: bool,
+}
+
+impl GaugeRecorder {
+    /// Recorder sampling every `interval_s` sim seconds, keeping the
+    /// last `cap` samples per series.
+    pub fn new(interval_s: f64, cap: usize) -> Self {
+        assert!(interval_s > 0.0, "gauge interval must be positive");
+        assert!(cap > 0, "gauge ring capacity must be positive");
+        GaugeRecorder {
+            dt: interval_s,
+            cap,
+            next_tick: 0,
+            series: BTreeMap::new(),
+            enabled: true,
+        }
+    }
+
+    /// Disabled recorder: `begin` always returns 0, `record` is a no-op.
+    pub fn off() -> Self {
+        GaugeRecorder { dt: 1.0, cap: 1, next_tick: 0, series: BTreeMap::new(), enabled: false }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Cheap guard for the engine hot loop.
+    #[inline]
+    pub fn due(&self, now: f64) -> bool {
+        self.enabled && now >= self.next_tick as f64 * self.dt
+    }
+
+    /// Advance the grid past `now`, returning how many grid points were
+    /// crossed (each pending `record` call should push that many
+    /// copies — the state was constant between events).
+    pub fn begin(&mut self, now: f64) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let mut n = 0u64;
+        while self.next_tick as f64 * self.dt <= now {
+            self.next_tick += 1;
+            n += 1;
+        }
+        n
+    }
+
+    /// Record `value` for `n` grid points on series `name` (created on
+    /// first use, aligned to the tick of its first sample).
+    pub fn record(&mut self, name: &str, value: f64, n: u64) {
+        if !self.enabled || n == 0 {
+            return;
+        }
+        let cap = self.cap;
+        let first_tick = self.next_tick - n;
+        let ring = self.series.entry(name.to_string()).or_insert_with(|| Ring {
+            start_tick: first_tick,
+            total: 0,
+            buf: Vec::new(),
+        });
+        // Pushing more than `cap` copies of one value is pure overwrite
+        // churn: account the excess as dropped and push at most `cap`.
+        let pushes = n.min(cap as u64);
+        ring.total += n - pushes;
+        for _ in 0..pushes {
+            ring.push(value, cap);
+        }
+    }
+
+    /// Indexed series helper (`name/idx`), e.g. per-replica gauges.
+    pub fn record_indexed(&mut self, name: &str, idx: usize, value: f64, n: u64) {
+        if !self.enabled || n == 0 {
+            return;
+        }
+        self.record(&format!("{name}/{idx}"), value, n);
+    }
+
+    /// Export all series in name order (BTreeMap iteration is sorted,
+    /// so the output is deterministic).
+    pub fn into_series(self) -> Vec<GaugeSeries> {
+        let (dt, cap) = (self.dt, self.cap);
+        self.series
+            .into_iter()
+            .map(|(name, ring)| {
+                let samples = ring.ordered(cap);
+                let dropped = ring.total - samples.len() as u64;
+                GaugeSeries {
+                    name,
+                    t0: (ring.start_tick + dropped) as f64 * dt,
+                    dt,
+                    samples,
+                    dropped,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_recorder_records_nothing() {
+        let mut g = GaugeRecorder::off();
+        assert!(!g.due(100.0));
+        assert_eq!(g.begin(100.0), 0);
+        g.record("x", 1.0, 5);
+        assert!(g.into_series().is_empty());
+    }
+
+    #[test]
+    fn grid_fills_every_point_between_events() {
+        let mut g = GaugeRecorder::new(0.5, 64);
+        // First event at t=0: one grid point (t=0.0).
+        let n = g.begin(0.0);
+        assert_eq!(n, 1);
+        g.record("q", 3.0, n);
+        // Next event at t=2.2: grid points 0.5, 1.0, 1.5, 2.0.
+        let n = g.begin(2.2);
+        assert_eq!(n, 4);
+        g.record("q", 7.0, n);
+        assert!(!g.due(2.3), "next grid point is 2.5");
+        let s = g.into_series();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].samples, vec![3.0, 7.0, 7.0, 7.0, 7.0]);
+        assert_eq!(s[0].t0, 0.0);
+        assert_eq!(s[0].dropped, 0);
+    }
+
+    #[test]
+    fn ring_stays_bounded_and_accounts_drops() {
+        let mut g = GaugeRecorder::new(1.0, 4);
+        for t in 0..100 {
+            let n = g.begin(t as f64);
+            g.record("depth", t as f64, n);
+        }
+        let s = g.into_series();
+        assert_eq!(s[0].samples.len(), 4, "ring capped");
+        assert_eq!(s[0].samples, vec![96.0, 97.0, 98.0, 99.0]);
+        assert_eq!(s[0].dropped, 96);
+        assert_eq!(s[0].t0, 96.0);
+    }
+
+    #[test]
+    fn giant_gap_is_accounted_not_materialized() {
+        let mut g = GaugeRecorder::new(0.001, 8);
+        let n = g.begin(10_000.0);
+        assert!(n > 1_000_000);
+        g.record("q", 1.0, n);
+        let s = g.into_series();
+        assert_eq!(s[0].samples.len(), 8);
+        assert_eq!(s[0].dropped, n - 8);
+    }
+
+    #[test]
+    fn late_series_keeps_its_own_origin() {
+        let mut g = GaugeRecorder::new(1.0, 16);
+        let n = g.begin(0.0);
+        g.record("a", 1.0, n);
+        let n = g.begin(5.0);
+        g.record("a", 2.0, n);
+        g.record("b", 9.0, n); // first seen at the same batch
+        let s = g.into_series();
+        assert_eq!(s[0].name, "a");
+        assert_eq!(s[0].t0, 0.0);
+        assert_eq!(s[1].name, "b");
+        assert_eq!(s[1].t0, 1.0, "b's first sample covers ticks 1..=5");
+        assert_eq!(s[1].samples.len(), 5);
+    }
+
+    #[test]
+    fn indexed_series_sort_deterministically() {
+        let mut g = GaugeRecorder::new(1.0, 8);
+        let n = g.begin(0.0);
+        g.record_indexed("q", 2, 1.0, n);
+        g.record_indexed("q", 0, 2.0, n);
+        let names: Vec<String> = g.into_series().into_iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["q/0".to_string(), "q/2".to_string()]);
+    }
+}

@@ -1,0 +1,587 @@
+//! Deterministic tracing & telemetry for the serving engines and the
+//! coordinator.
+//!
+//! Three pillars, one export path:
+//!
+//! 1. **Request spans** — [`TraceRecorder`] records, for head-sampled
+//!    requests, a span tree of lifecycle stages: arrival, the
+//!    admission/token-bucket verdict, held-at-routing, the route
+//!    decision and chosen replica, batch membership and size, service,
+//!    and completion or drop with its `DropReason`; retry and hedge
+//!    attempts are linked as child spans. Sampling is a pure function
+//!    of the request id ([`SampleSpec::sampled`] — a splitmix64 hash,
+//!    no RNG stream is consulted), so the sampled set is identical
+//!    across runs and thread counts.
+//! 2. **Gauge timelines** — [`GaugeRecorder`] samples engine internals
+//!    (per-replica queue depth and outstanding, batcher occupancy,
+//!    token-bucket levels, routable-set size, DES heap depth,
+//!    warming/draining counts) on a fixed sim-time grid into bounded
+//!    rings (see [`gauge`]).
+//! 3. **Job spans** — the coordinator leader exports submit → queue →
+//!    run → complete/fail spans per job, and distributed sweeps export
+//!    shard → cell spans with `DistStats` attached as attributes
+//!    (wall-clock for the leader, sim-time for cells; only the
+//!    sim-time spans are covered by the byte-stability guarantee).
+//!
+//! Everything exports through [`TraceSink`]: Chrome-trace/Perfetto
+//! JSON (loadable in `ui.perfetto.dev`, built on [`crate::util::json`])
+//! or line-delimited [`crate::codec`] `Span` frames (follower spans
+//! ride the distributed-sweep wire alongside `CellResult`s).
+//!
+//! # The determinism contract
+//!
+//! Recording is strictly passive: hooks read engine state at existing
+//! decision points, never push events, never draw randomness, and
+//! never reorder the heap. `TraceConfig::off()` and a fully-enabled
+//! run therefore produce bit-identical `Collector::fingerprint()`s,
+//! event counts, and percentile bits — gated by `tests/obs.rs` at
+//! 1/2/8 sweep threads, the same bar as the PR 3/6/8 refactors. For a
+//! fixed seed the exported trace itself is byte-stable: spans are
+//! emitted in deterministic event order and gauge series iterate a
+//! `BTreeMap`.
+//!
+//! # Memory bounds
+//!
+//! Span count is capped by [`TraceConfig::max_spans`] (applied to
+//! request roots in deterministic arrival order; overflow is counted
+//! in [`TraceOutput::truncated`], never silently lost). Gauge memory
+//! is `O(series x ring capacity)` regardless of run length.
+
+pub mod gauge;
+pub mod perfetto;
+
+pub use gauge::{GaugeRecorder, GaugeSeries};
+
+use std::io::Write as _;
+
+/// Which requests get span trees. Sampling is a pure function of the
+/// request id — deciding it consumes no randomness from any PCG
+/// stream, so enabling tracing cannot perturb the simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SampleSpec {
+    /// No request spans.
+    Off,
+    /// Every request.
+    All,
+    /// Requests whose id is divisible by `n`.
+    EveryNth(u64),
+    /// Pseudo-random fraction `p` of requests, chosen by hashing the
+    /// request id (splitmix64) — deterministic head-sampling.
+    Rate(f64),
+}
+
+/// splitmix64 finalizer: a well-mixed pure hash of the request id.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl SampleSpec {
+    /// Is request `id` sampled? Pure — no state, no RNG.
+    pub fn sampled(&self, id: u64) -> bool {
+        match *self {
+            SampleSpec::Off => false,
+            SampleSpec::All => true,
+            SampleSpec::EveryNth(n) => n > 0 && id % n == 0,
+            SampleSpec::Rate(p) => {
+                // Top 53 bits as a uniform fraction in [0, 1).
+                let frac = (splitmix64(id) >> 11) as f64 / (1u64 << 53) as f64;
+                frac < p
+            }
+        }
+    }
+}
+
+/// How much detail sampled spans carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Detail {
+    /// Lifecycle stage spans only.
+    Stages,
+    /// Stages plus batch-membership attributes and retry/hedge links.
+    Full,
+}
+
+/// Tracing knobs for one engine run. Constructed `off()` by default;
+/// engines take it by reference so the config is engine-agnostic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    pub sample: SampleSpec,
+    pub detail: Detail,
+    /// Gauge grid interval in sim seconds (`None` = no gauges).
+    pub gauge_interval_s: Option<f64>,
+    /// Ring capacity per gauge series.
+    pub gauge_cap: usize,
+    /// Maximum sampled request roots kept (arrival order).
+    pub max_spans: usize,
+}
+
+impl TraceConfig {
+    /// Tracing fully disabled — the zero-cost path.
+    pub fn off() -> Self {
+        TraceConfig {
+            sample: SampleSpec::Off,
+            detail: Detail::Stages,
+            gauge_interval_s: None,
+            gauge_cap: 4096,
+            max_spans: 0,
+        }
+    }
+
+    /// Everything on: all requests sampled at full detail, gauges on a
+    /// 100 ms grid. The configuration the bit-identity tests run.
+    pub fn full() -> Self {
+        TraceConfig {
+            sample: SampleSpec::All,
+            detail: Detail::Full,
+            gauge_interval_s: Some(0.1),
+            gauge_cap: 4096,
+            max_spans: 65_536,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self.sample, SampleSpec::Off) || self.gauge_interval_s.is_some()
+    }
+
+    /// Gauge recorder matching this config.
+    pub fn gauge_recorder(&self) -> GaugeRecorder {
+        match self.gauge_interval_s {
+            Some(dt) => GaugeRecorder::new(dt, self.gauge_cap),
+            None => GaugeRecorder::off(),
+        }
+    }
+}
+
+/// A span attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl Attr {
+    /// Stringify for wire frames / Perfetto args (deterministic).
+    pub fn render(&self) -> String {
+        match self {
+            Attr::U(v) => v.to_string(),
+            Attr::F(v) => format!("{v:?}"),
+            Attr::S(v) => v.clone(),
+        }
+    }
+}
+
+/// One span: a named interval on a track, optionally parented to form
+/// a tree. Request spans use the request id as the track; job spans
+/// use a worker/shard index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Index into the owning `spans` vec.
+    pub id: u32,
+    /// Parent span id (tree edge), if any.
+    pub parent: Option<u32>,
+    pub name: String,
+    /// Grouping key for display: request id, worker index, shard index.
+    pub track: u64,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub attrs: Vec<(String, Attr)>,
+}
+
+/// Everything one traced run produced.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceOutput {
+    pub spans: Vec<Span>,
+    pub gauges: Vec<GaugeSeries>,
+    /// Sampled roots refused because `max_spans` was reached.
+    pub truncated: u64,
+}
+
+/// Per-slab-slot recorder state. The metrics `TraceStore` slab reuses
+/// slots via a free list, so the mapping is installed at arrival and
+/// torn down at the terminal event.
+#[derive(Debug, Clone, Copy)]
+struct SlotState {
+    root: u32,
+    /// Currently open lifecycle-phase child span.
+    phase: Option<u32>,
+}
+
+/// Records request span trees for one engine run. Every method is an
+/// early-return no-op when the request (or the whole recorder) is not
+/// sampled, so the disabled path costs one branch per hook.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    sample: SampleSpec,
+    detail: Detail,
+    max_spans: usize,
+    spans: Vec<Span>,
+    slots: Vec<Option<SlotState>>,
+    truncated: u64,
+    on: bool,
+}
+
+impl TraceRecorder {
+    pub fn new(cfg: &TraceConfig) -> Self {
+        TraceRecorder {
+            sample: cfg.sample,
+            detail: cfg.detail,
+            max_spans: cfg.max_spans,
+            spans: Vec::new(),
+            slots: Vec::new(),
+            truncated: 0,
+            on: !matches!(cfg.sample, SampleSpec::Off),
+        }
+    }
+
+    /// Whether any request could be sampled (hot-loop guard).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Whether batch/retry detail is requested.
+    #[inline]
+    pub fn full_detail(&self) -> bool {
+        self.on && self.detail == Detail::Full
+    }
+
+    /// Is this slot currently mapped to a sampled request?
+    #[inline]
+    pub fn is_traced(&self, slot: usize) -> bool {
+        self.on && self.slots.get(slot).map_or(false, |s| s.is_some())
+    }
+
+    fn push_span(
+        &mut self,
+        parent: Option<u32>,
+        name: &str,
+        track: u64,
+        start_s: f64,
+    ) -> u32 {
+        let id = self.spans.len() as u32;
+        self.spans.push(Span {
+            id,
+            parent,
+            name: name.to_string(),
+            track,
+            start_s,
+            end_s: start_s,
+            attrs: Vec::new(),
+        });
+        id
+    }
+
+    /// A request arrived: open its root span if sampled and under the
+    /// root cap (checked in arrival order, so truncation is
+    /// deterministic too).
+    pub fn arrival(&mut self, slot: usize, req_id: u64, now: f64) {
+        if !self.on || !self.sample.sampled(req_id) {
+            return;
+        }
+        if self.spans.len() >= self.max_spans {
+            self.truncated += 1;
+            return;
+        }
+        let root = self.push_span(None, "request", req_id, now);
+        self.spans[root as usize].attrs.push(("id".to_string(), Attr::U(req_id)));
+        if self.slots.len() <= slot {
+            self.slots.resize(slot + 1, None);
+        }
+        self.slots[slot] = Some(SlotState { root, phase: None });
+    }
+
+    /// Enter a lifecycle phase: closes the open phase (if any) at
+    /// `now` and opens a child span of the request root.
+    pub fn phase(&mut self, slot: usize, name: &str, now: f64) {
+        let Some(st) = self.slot(slot) else { return };
+        if let Some(p) = st.phase {
+            self.spans[p as usize].end_s = now;
+        }
+        let id = self.push_span(Some(st.root), name, self.spans[st.root as usize].track, now);
+        if let Some(Some(st)) = self.slots.get_mut(slot) {
+            st.phase = Some(id);
+        }
+    }
+
+    /// Instantaneous child event (admission verdict, route decision).
+    pub fn event(&mut self, slot: usize, name: &str, now: f64, attrs: Vec<(&str, Attr)>) {
+        let Some(st) = self.slot(slot) else { return };
+        let id = self.push_span(Some(st.root), name, self.spans[st.root as usize].track, now);
+        let span = &mut self.spans[id as usize];
+        span.attrs.extend(attrs.into_iter().map(|(k, v)| (k.to_string(), v)));
+    }
+
+    /// Attach an attribute to the request's root span.
+    pub fn attr(&mut self, slot: usize, key: &str, val: Attr) {
+        let Some(st) = self.slot(slot) else { return };
+        self.spans[st.root as usize].attrs.push((key.to_string(), val));
+    }
+
+    /// Attach an attribute to the currently open phase span.
+    pub fn phase_attr(&mut self, slot: usize, key: &str, val: Attr) {
+        let Some(st) = self.slot(slot) else { return };
+        if let Some(p) = st.phase {
+            self.spans[p as usize].attrs.push((key.to_string(), val));
+        }
+    }
+
+    /// Link a retry/hedge attempt (`child_slot`) under the span tree of
+    /// the attempt that spawned it (`parent_slot`).
+    pub fn link(&mut self, parent_slot: usize, child_slot: usize) {
+        let (Some(parent), Some(child)) = (self.slot(parent_slot), self.slot(child_slot)) else {
+            return;
+        };
+        self.spans[child.root as usize].parent = Some(parent.root);
+    }
+
+    /// Terminal event: closes the open phase and the root, stamps the
+    /// outcome, and unmaps the slab slot (it will be reused).
+    pub fn terminal(&mut self, slot: usize, now: f64, outcome: &str) {
+        let Some(st) = self.slot(slot) else { return };
+        if let Some(p) = st.phase {
+            self.spans[p as usize].end_s = now;
+        }
+        let root = &mut self.spans[st.root as usize];
+        root.end_s = now;
+        root.attrs.push(("outcome".to_string(), Attr::S(outcome.to_string())));
+        self.slots[slot] = None;
+    }
+
+    #[inline]
+    fn slot(&self, slot: usize) -> Option<SlotState> {
+        if !self.on {
+            return None;
+        }
+        self.slots.get(slot).copied().flatten()
+    }
+
+    /// Close out the run, absorbing the gauge recorder. Returns `None`
+    /// when nothing was enabled, so results stay `trace: None` on the
+    /// untraced path.
+    pub fn finish(self, gauges: GaugeRecorder) -> Option<TraceOutput> {
+        if !self.on && !gauges.enabled() {
+            return None;
+        }
+        Some(TraceOutput {
+            spans: self.spans,
+            gauges: gauges.into_series(),
+            truncated: self.truncated,
+        })
+    }
+}
+
+/// Builder for coordinator job spans (leader submit/queue/run and
+/// distributed shard/cell spans). Same `Span` vocabulary as request
+/// traces so everything shares one export path.
+#[derive(Debug, Clone, Default)]
+pub struct JobSpans {
+    pub spans: Vec<Span>,
+}
+
+impl JobSpans {
+    pub fn new() -> Self {
+        JobSpans::default()
+    }
+
+    /// Add a span; returns its id for parenting children.
+    pub fn add(
+        &mut self,
+        parent: Option<u32>,
+        name: &str,
+        track: u64,
+        start_s: f64,
+        end_s: f64,
+        attrs: Vec<(String, Attr)>,
+    ) -> u32 {
+        let id = self.spans.len() as u32;
+        self.spans.push(Span {
+            id,
+            parent,
+            name: name.to_string(),
+            track,
+            start_s,
+            end_s,
+            attrs,
+        });
+        id
+    }
+
+    pub fn into_output(self) -> TraceOutput {
+        TraceOutput { spans: self.spans, gauges: Vec::new(), truncated: 0 }
+    }
+}
+
+/// One export path for all three pillars: Perfetto JSON or
+/// line-delimited codec frames.
+pub struct TraceSink;
+
+impl TraceSink {
+    /// Chrome-trace/Perfetto JSON document (see [`perfetto`]).
+    pub fn to_perfetto(out: &TraceOutput) -> crate::util::json::Json {
+        perfetto::trace_json(out)
+    }
+
+    /// Serialize the Perfetto document compactly (byte-stable for a
+    /// fixed seed: span order and gauge order are deterministic).
+    pub fn perfetto_string(out: &TraceOutput) -> String {
+        Self::to_perfetto(out).to_string_compact()
+    }
+
+    /// Write the Perfetto JSON to `path`.
+    pub fn write_perfetto(path: &str, out: &TraceOutput) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(Self::perfetto_string(out).as_bytes())
+    }
+
+    /// Map spans onto wire frames (`Frame::Span`), one per span —
+    /// the same frames follower shards stream to the leader.
+    pub fn to_frames(track_name: &str, out: &TraceOutput) -> Vec<crate::codec::Frame> {
+        out.spans
+            .iter()
+            .map(|s| {
+                crate::codec::Frame::Span(crate::codec::SpanFrame {
+                    track: track_name.to_string(),
+                    id: s.id as u64,
+                    parent: s.parent.map_or(-1, |p| p as i64),
+                    name: s.name.clone(),
+                    start_s: s.start_s,
+                    end_s: s.end_s,
+                    attrs: s
+                        .attrs
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.render()))
+                        .collect(),
+                })
+            })
+            .collect()
+    }
+
+    /// Write spans as line-delimited codec frames to `path`.
+    pub fn write_frames(path: &str, track_name: &str, out: &TraceOutput) -> std::io::Result<()> {
+        use crate::codec::Codec as _;
+        let codec = crate::codec::JsonLinesCodec;
+        let mut buf = Vec::new();
+        for frame in Self::to_frames(track_name, out) {
+            codec.encode(&frame, &mut buf);
+        }
+        std::fs::write(path, buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_pure_and_stable() {
+        let every = SampleSpec::EveryNth(10);
+        for id in 0..100 {
+            assert_eq!(every.sampled(id), id % 10 == 0);
+        }
+        let rate = SampleSpec::Rate(0.25);
+        let first: Vec<bool> = (0..1000).map(|id| rate.sampled(id)).collect();
+        let second: Vec<bool> = (0..1000).map(|id| rate.sampled(id)).collect();
+        assert_eq!(first, second, "hash sampling must be pure");
+        let hits = first.iter().filter(|&&b| b).count();
+        assert!((150..350).contains(&hits), "rate 0.25 over 1000 ids hit {hits}");
+        assert!((0..1000).all(|id| SampleSpec::All.sampled(id)));
+        assert!(!(0..1000).any(|id| SampleSpec::Off.sampled(id)));
+        assert!((0.0..1.0).contains(&0.5)); // guard against typo'd ranges above
+    }
+
+    #[test]
+    fn off_config_disables_everything() {
+        let cfg = TraceConfig::off();
+        assert!(!cfg.enabled());
+        let mut rec = TraceRecorder::new(&cfg);
+        assert!(!rec.enabled());
+        rec.arrival(0, 7, 1.0);
+        rec.phase(0, "held", 2.0);
+        rec.terminal(0, 3.0, "completed");
+        assert!(rec.finish(cfg.gauge_recorder()).is_none());
+    }
+
+    #[test]
+    fn span_tree_records_phases_and_outcome() {
+        let cfg = TraceConfig::full();
+        let mut rec = TraceRecorder::new(&cfg);
+        rec.arrival(3, 42, 1.0);
+        assert!(rec.is_traced(3));
+        rec.event(3, "admission", 1.0, vec![("verdict", Attr::S("admitted".into()))]);
+        rec.phase(3, "held", 1.0);
+        rec.phase(3, "batch_wait", 1.5);
+        rec.phase_attr(3, "replica", Attr::U(2));
+        rec.phase(3, "service", 2.0);
+        rec.terminal(3, 2.5, "completed");
+        assert!(!rec.is_traced(3), "slot unmapped at terminal");
+        let out = rec.finish(GaugeRecorder::off()).unwrap();
+        assert_eq!(out.spans.len(), 5, "root + admission + 3 phases");
+        let root = &out.spans[0];
+        assert_eq!(root.name, "request");
+        assert_eq!(root.track, 42);
+        assert_eq!(root.end_s, 2.5);
+        assert!(root.attrs.iter().any(|(k, v)| k == "outcome" && *v == Attr::S("completed".into())));
+        let held = out.spans.iter().find(|s| s.name == "held").unwrap();
+        assert_eq!(held.parent, Some(root.id));
+        assert_eq!((held.start_s, held.end_s), (1.0, 1.5));
+        let service = out.spans.iter().find(|s| s.name == "service").unwrap();
+        assert_eq!((service.start_s, service.end_s), (2.0, 2.5));
+    }
+
+    #[test]
+    fn slot_reuse_does_not_cross_wires() {
+        let cfg = TraceConfig { sample: SampleSpec::EveryNth(2), ..TraceConfig::full() };
+        let mut rec = TraceRecorder::new(&cfg);
+        rec.arrival(0, 4, 1.0); // sampled
+        rec.terminal(0, 2.0, "completed");
+        rec.arrival(0, 5, 3.0); // slot reused, NOT sampled
+        assert!(!rec.is_traced(0));
+        rec.phase(0, "held", 3.0); // must be a no-op
+        let out = rec.finish(GaugeRecorder::off()).unwrap();
+        assert_eq!(out.spans.len(), 1);
+        assert_eq!(out.spans[0].track, 4);
+    }
+
+    #[test]
+    fn root_cap_truncates_deterministically() {
+        let cfg = TraceConfig { max_spans: 2, ..TraceConfig::full() };
+        let mut rec = TraceRecorder::new(&cfg);
+        for id in 0..10u64 {
+            rec.arrival(id as usize, id, id as f64);
+        }
+        let out = rec.finish(GaugeRecorder::off()).unwrap();
+        assert_eq!(out.spans.len(), 2, "first two arrivals kept");
+        assert_eq!(out.truncated, 8);
+        assert_eq!(out.spans[0].track, 0);
+        assert_eq!(out.spans[1].track, 1);
+    }
+
+    #[test]
+    fn retry_links_nest_attempts() {
+        let cfg = TraceConfig::full();
+        let mut rec = TraceRecorder::new(&cfg);
+        rec.arrival(0, 1, 0.0);
+        rec.arrival(1, 2, 5.0); // the retry attempt, separate slot
+        rec.link(0, 1);
+        let out = rec.finish(GaugeRecorder::off()).unwrap();
+        let child = out.spans.iter().find(|s| s.track == 2).unwrap();
+        let parent = out.spans.iter().find(|s| s.track == 1).unwrap();
+        assert_eq!(child.parent, Some(parent.id));
+    }
+
+    #[test]
+    fn job_spans_share_the_export_path() {
+        let mut js = JobSpans::new();
+        let root = js.add(None, "job:sweep", 0, 0.0, 2.0, vec![("attempts".into(), Attr::U(1))]);
+        js.add(Some(root), "queued", 0, 0.0, 0.5, Vec::new());
+        js.add(Some(root), "run", 0, 0.5, 2.0, Vec::new());
+        let out = js.into_output();
+        assert_eq!(out.spans.len(), 3);
+        let doc = TraceSink::perfetto_string(&out);
+        assert!(doc.contains("traceEvents"));
+        assert!(doc.contains("job:sweep"));
+    }
+}

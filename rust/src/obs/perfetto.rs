@@ -1,0 +1,156 @@
+//! Chrome-trace / Perfetto JSON export.
+//!
+//! Emits the classic Chrome trace-event document (`{"traceEvents":
+//! [...], "displayTimeUnit": "ms"}`) that `ui.perfetto.dev` and
+//! `chrome://tracing` both load:
+//!
+//! - spans become complete events (`"ph": "X"`) with microsecond
+//!   `ts`/`dur` (sim seconds x 1e6), grouped `pid`/`tid` by pillar and
+//!   track so each sampled request, worker, or shard renders as its
+//!   own lane;
+//! - gauge series become counter events (`"ph": "C"`), one per grid
+//!   sample, so queue depths and token-bucket levels draw as
+//!   staircase timelines under the spans.
+//!
+//! Determinism: events are emitted in span order then gauge order
+//! (both deterministic), objects serialize through
+//! [`crate::util::json::Json`] whose `BTreeMap` keys are sorted, and
+//! floats render through the crate's canonical writer — so the byte
+//! stream for a fixed seed never varies.
+
+use super::{Span, TraceOutput};
+use crate::util::json::Json;
+
+/// `pid` for request/job span lanes.
+const PID_SPANS: i64 = 1;
+/// `pid` for gauge counter lanes.
+const PID_GAUGES: i64 = 2;
+
+fn micros(s: f64) -> Json {
+    Json::Num(s * 1e6)
+}
+
+fn span_event(span: &Span) -> Json {
+    let mut args = Json::obj();
+    for (k, v) in &span.attrs {
+        args.set(k, Json::Str(v.render()));
+    }
+    if let Some(p) = span.parent {
+        args.set("parent", Json::Int(p as i64));
+    }
+    let mut ev = Json::obj();
+    ev.set("name", Json::Str(span.name.clone()))
+        .set("ph", Json::Str("X".to_string()))
+        .set("ts", micros(span.start_s))
+        .set("dur", micros((span.end_s - span.start_s).max(0.0)))
+        .set("pid", Json::Int(PID_SPANS))
+        .set("tid", Json::Int(span.track as i64))
+        .set("args", args);
+    ev
+}
+
+fn counter_event(name: &str, t: f64, value: f64) -> Json {
+    let mut args = Json::obj();
+    args.set("value", Json::Num(value));
+    let mut ev = Json::obj();
+    ev.set("name", Json::Str(name.to_string()))
+        .set("ph", Json::Str("C".to_string()))
+        .set("ts", micros(t))
+        .set("pid", Json::Int(PID_GAUGES))
+        .set("args", args);
+    ev
+}
+
+/// Build the full trace-event document for one run.
+pub fn trace_json(out: &TraceOutput) -> Json {
+    let mut events = Vec::new();
+    for span in &out.spans {
+        events.push(span_event(span));
+    }
+    for series in &out.gauges {
+        for (i, v) in series.samples.iter().enumerate() {
+            events.push(counter_event(&series.name, series.t0 + i as f64 * series.dt, *v));
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", Json::Str("ms".to_string()));
+    if out.truncated > 0 {
+        doc.set("truncatedSpans", Json::Int(out.truncated as i64));
+    }
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Attr, GaugeSeries};
+    use crate::util::json::parse;
+
+    fn sample_output() -> TraceOutput {
+        TraceOutput {
+            spans: vec![
+                Span {
+                    id: 0,
+                    parent: None,
+                    name: "request".to_string(),
+                    track: 42,
+                    start_s: 1.0,
+                    end_s: 2.5,
+                    attrs: vec![("outcome".to_string(), Attr::S("completed".to_string()))],
+                },
+                Span {
+                    id: 1,
+                    parent: Some(0),
+                    name: "service".to_string(),
+                    track: 42,
+                    start_s: 2.0,
+                    end_s: 2.5,
+                    attrs: vec![("replica".to_string(), Attr::U(1))],
+                },
+            ],
+            gauges: vec![GaugeSeries {
+                name: "heap_depth".to_string(),
+                t0: 0.0,
+                dt: 0.5,
+                samples: vec![3.0, 5.0],
+                dropped: 0,
+            }],
+            truncated: 0,
+        }
+    }
+
+    #[test]
+    fn document_shape_is_chrome_trace() {
+        let doc = trace_json(&sample_output());
+        let text = doc.to_string_compact();
+        let back = parse(&text).unwrap();
+        let events = match back.get("traceEvents") {
+            Some(Json::Arr(evs)) => evs.clone(),
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert_eq!(events.len(), 4, "2 spans + 2 counter samples");
+        assert_eq!(events[0].get("ph").unwrap(), &Json::Str("X".to_string()));
+        assert_eq!(events[0].get("ts").and_then(Json::as_f64), Some(1.0e6));
+        assert_eq!(events[0].get("dur").and_then(Json::as_f64), Some(1.5e6));
+        assert_eq!(events[2].get("ph").unwrap(), &Json::Str("C".to_string()));
+        let args = events[2].get("args").unwrap();
+        assert_eq!(args.get("value").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(back.get("displayTimeUnit").unwrap(), &Json::Str("ms".to_string()));
+    }
+
+    #[test]
+    fn export_bytes_are_stable() {
+        let a = trace_json(&sample_output()).to_string_compact();
+        let b = trace_json(&sample_output()).to_string_compact();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn truncation_is_visible_not_silent() {
+        let mut out = sample_output();
+        out.truncated = 9;
+        let doc = trace_json(&out);
+        assert_eq!(doc.get("truncatedSpans").and_then(Json::as_i64), Some(9));
+    }
+}

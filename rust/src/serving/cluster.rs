@@ -72,6 +72,7 @@ use crate::metrics::{
     ClassMetrics, Collector, DropReason, MetricsMode, ReplicaMetrics, RequestTrace,
     ScaleEventKind, ScaleTimeline, Stage, TraceStore,
 };
+use crate::obs::{Attr, TraceConfig, TraceOutput, TraceRecorder};
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
 use crate::workload::{MergedSource, Pattern, SourceIter, Workload};
@@ -194,6 +195,11 @@ pub struct ClusterResult {
     /// Discrete events processed by the simulation loop (the events/sec
     /// numerator for the `l4_des_throughput` bench).
     pub events: u64,
+    /// Span trees and gauge timelines when the run was traced
+    /// ([`run_traced`] with an enabled [`TraceConfig`]); `None` on the
+    /// untraced path. Purely observational: present or absent, every
+    /// other field of the result is bit-identical (`tests/obs.rs`).
+    pub trace: Option<TraceOutput>,
 }
 
 impl ClusterResult {
@@ -352,6 +358,7 @@ fn start_batch(
     now: f64,
     heap: &mut Heap,
     seq: &mut u64,
+    tr: &mut TraceRecorder,
     traces: &mut TraceStore,
 ) {
     let batch = r.batcher.ready();
@@ -372,6 +379,11 @@ fn start_batch(
         let trace = traces.get_mut(q.id as u32);
         // Batching stage: enqueue -> service start.
         trace.record_stage(Stage::Batching, now - q.enqueue_s);
+        tr.phase(q.id as usize, "service", now);
+        if tr.full_detail() && tr.is_traced(q.id as usize) {
+            tr.phase_attr(q.id as usize, "replica", Attr::U(ri as u64));
+            tr.phase_attr(q.id as usize, "batch_size", Attr::U(b as u64));
+        }
         r.in_flight.push((q.id as u32, now, q.enqueue_s));
     }
     r.busy = true;
@@ -524,6 +536,7 @@ fn drain_held(
     classes: &mut [ClassMetrics],
     heap: &mut Heap,
     seq: &mut u64,
+    tr: &mut TraceRecorder,
 ) {
     while !held.is_empty() {
         if routable.is_empty() {
@@ -531,6 +544,7 @@ fn drain_held(
                 return; // capacity is on the way; keep holding
             }
             while let Some((slot, _tenant)) = held.pop_wfq(admission) {
+                tr.terminal(slot as usize, now, DropReason::RejectedPlacement.label());
                 let mut trace = traces.remove(slot);
                 ingress::drop_trace(&mut trace, DropReason::RejectedPlacement, [&mut *collector]);
                 class_ingest(classes, &trace);
@@ -542,21 +556,37 @@ fn drain_held(
             return; // backpressure: hold until the queue frees up
         }
         let Some((slot, _tenant)) = held.pop_wfq(admission) else { return };
+        if tr.is_traced(slot as usize) {
+            tr.event(slot as usize, "route", now, vec![("replica", Attr::U(ri as u64))]);
+        }
+        tr.phase(slot as usize, "batch_wait", now);
         let r = &mut replicas[ri];
         let d = ingress::stage_into_batcher(traces.get_mut(slot), &mut r.batcher, slot, now, r.busy);
         r.queued += 1;
         outstanding[ri] += 1;
         match d {
-            Decision::Dispatch(_) => start_batch(ri, &mut replicas[ri], now, heap, seq, traces),
+            Decision::Dispatch(_) => start_batch(ri, &mut replicas[ri], now, heap, seq, tr, traces),
             Decision::WakeAt(t) => push(heap, t, Event::Wake { replica: ri, scheduled_for: t }, seq),
             Decision::Wait => {}
         }
     }
 }
 
-/// Run the cluster simulation.
+/// Run the cluster simulation (untraced — the historical entry point).
 pub fn run(config: &ClusterConfig) -> ClusterResult {
+    run_traced(config, &TraceConfig::off())
+}
+
+/// Run the cluster simulation with tracing/telemetry. With
+/// [`TraceConfig::off()`] this IS [`run`] — every hook early-returns on
+/// a boolean — and with tracing enabled the hooks are purely passive
+/// (they read state at existing decision points, never push events and
+/// never draw randomness), so the simulation outcome is bit-identical
+/// either way.
+pub fn run_traced(config: &ClusterConfig, tcfg: &TraceConfig) -> ClusterResult {
     assert!(!config.replicas.is_empty(), "cluster needs at least one replica");
+    let mut tr = TraceRecorder::new(tcfg);
+    let mut gauges = tcfg.gauge_recorder();
     let closed_loop = config.workload.closed_loop_clients();
     if let Some(streams) = config.workload.stream_specs() {
         for s in streams {
@@ -700,6 +730,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                      tenant_of: &mut Vec<u32>,
                      classes: &mut [ClassMetrics],
                      side: &mut RetrySide,
+                     tr: &mut TraceRecorder,
                      rng: &mut Pcg64,
                      seq: &mut u64| {
         let id = next_id;
@@ -715,6 +746,8 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         let enqueue_at = trace.completed_s;
         let slot = traces.insert(trace);
         side.reset(slot);
+        tr.arrival(slot as usize, id, arrival_s);
+        tr.phase(slot as usize, "pre_tx", arrival_s);
         if !classes.is_empty() {
             if slot as usize >= tenant_of.len() {
                 tenant_of.resize(slot as usize + 1, 0);
@@ -782,6 +815,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 &mut tenant_of,
                 &mut classes,
                 &mut side,
+                &mut tr,
                 &mut rng_issue,
                 &mut arrival_seq,
             );
@@ -789,6 +823,29 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         }
         let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() else { break };
         events += 1;
+        // Gauge sampling: engine state only changes at events, so the
+        // pre-event state holds at every grid point crossed since the
+        // last event. One cheap branch when gauges are off.
+        if gauges.due(now) {
+            let n = gauges.begin(now);
+            gauges.record("heap_depth", heap.len() as f64, n);
+            gauges.record("held", held.len() as f64, n);
+            gauges.record("routable", routable.len() as f64, n);
+            gauges.record("warming", count_state(&replicas, ReplicaState::Warming) as f64, n);
+            gauges.record("draining", count_state(&replicas, ReplicaState::Draining) as f64, n);
+            for (i, r) in replicas.iter().enumerate() {
+                gauges.record_indexed("queued", i, r.queued as f64, n);
+                gauges.record_indexed("outstanding", i, r.outstanding() as f64, n);
+            }
+            if let Some(adm) = &admission {
+                for t in 0..adm.n_tenants() {
+                    let level = adm.bucket_level(t, now);
+                    if level.is_finite() {
+                        gauges.record_indexed("bucket_level", t, level, n);
+                    }
+                }
+            }
+        }
         match event {
             Event::Enqueue { slot } => {
                 if let Some(adm) = admission.as_mut() {
@@ -799,15 +856,28 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // admission (asserted above), so no reissue here.
                     let tenant = tenant_of[slot as usize] as usize;
                     if let Some(reason) = adm.admit(now, tenant, traces.len() - 1) {
+                        tr.terminal(slot as usize, now, reason.label());
                         let mut trace = traces.remove(slot);
                         ingress::drop_trace(&mut trace, reason, [&mut collector]);
                         class_ingest(&mut classes, &trace);
                     } else {
+                        if tr.is_traced(slot as usize) {
+                            tr.event(
+                                slot as usize,
+                                "admission",
+                                now,
+                                vec![
+                                    ("verdict", Attr::S("admitted".to_string())),
+                                    ("tenant", Attr::U(tenant as u64)),
+                                ],
+                            );
+                        }
+                        tr.phase(slot as usize, "held", now);
                         held.push_wfq(adm, tenant, slot);
                         drain_held(
                             now, &mut held, adm, &mut router, &routable, &mut outstanding,
                             &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
-                            &mut heap, &mut seq,
+                            &mut heap, &mut seq, &mut tr,
                         );
                     }
                     continue;
@@ -818,8 +888,10 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // to the router. Hold while capacity is on the way;
                     // reject if nothing will ever become routable.
                     if capacity_pending(&replicas, &upcoming_recovers) {
+                        tr.phase(slot as usize, "held", now);
                         held.push_fifo(slot);
                     } else {
+                        tr.terminal(slot as usize, now, DropReason::RejectedPlacement.label());
                         let mut trace = traces.remove(slot);
                         ingress::drop_trace(
                             &mut trace,
@@ -835,6 +907,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                 &mut tenant_of,
                                 &mut classes,
                                 &mut side,
+                                &mut tr,
                                 &mut rng_loop,
                                 &mut seq,
                             );
@@ -847,6 +920,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     // Overloaded replica: reject. The trace leaves the slab
                     // (no leak) and a closed-loop client re-issues after a
                     // short retry backoff instead of silently dying.
+                    tr.terminal(slot as usize, now, DropReason::QueueFull.label());
                     let mut trace = traces.remove(slot);
                     ingress::drop_trace(
                         &mut trace,
@@ -862,6 +936,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             &mut tenant_of,
                             &mut classes,
                             &mut side,
+                            &mut tr,
                             &mut rng_loop,
                             &mut seq,
                         );
@@ -870,6 +945,10 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 }
                 // Shared ingress tail: routing-tier hold time (cold-start
                 // window) charged to queueing, batcher enqueue, idle poll.
+                if tr.is_traced(slot as usize) {
+                    tr.event(slot as usize, "route", now, vec![("replica", Attr::U(ri as u64))]);
+                }
+                tr.phase(slot as usize, "batch_wait", now);
                 let r = &mut replicas[ri];
                 let d = ingress::stage_into_batcher(
                     traces.get_mut(slot),
@@ -882,7 +961,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 outstanding[ri] += 1;
                 match d {
                     Decision::Dispatch(_) => {
-                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut tr, &mut traces)
                     }
                     Decision::WakeAt(t) => {
                         push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
@@ -899,7 +978,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 }
                 match replicas[ri].batcher.on_wake(now) {
                     Decision::Dispatch(_) => {
-                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut tr, &mut traces)
                     }
                     // Stale wake (its batch already dispatched): re-arm for
                     // the oldest queued request's true deadline.
@@ -913,7 +992,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
                         &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
-                        &mut heap, &mut seq,
+                        &mut heap, &mut seq, &mut tr,
                     );
                 }
             }
@@ -941,6 +1020,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             // drained silently — it was never issued, so
                             // no ledger may see it.
                             ORPHAN => {
+                                tr.terminal(slot as usize, now, "hedge-lost");
                                 traces.remove(slot);
                                 continue;
                             }
@@ -957,6 +1037,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     trace.record_stage(Stage::Inference, now - started + overhead);
                     let (_, _, post) = config.path.sample(&mut rng_loop);
                     trace.record_stage(Stage::PostProcess, post);
+                    tr.terminal(slot as usize, trace.completed_s, "completed");
                     // Latency-aware routing signal: replica residence time
                     // (queue wait + service + overhead), what a
                     // response-time probe at the routing tier would see.
@@ -975,6 +1056,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             &mut tenant_of,
                             &mut classes,
                             &mut side,
+                            &mut tr,
                             &mut rng_loop,
                             &mut seq,
                         );
@@ -985,7 +1067,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 // Drain this replica's backlog.
                 match replicas[ri].batcher.poll(now) {
                     Decision::Dispatch(_) => {
-                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut tr, &mut traces)
                     }
                     Decision::WakeAt(t) => {
                         push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
@@ -1009,7 +1091,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
                         &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
-                        &mut heap, &mut seq,
+                        &mut heap, &mut seq, &mut tr,
                     );
                 }
             }
@@ -1036,7 +1118,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     Some(adm) => drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
                         &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
-                        &mut heap, &mut seq,
+                        &mut heap, &mut seq, &mut tr,
                     ),
                 }
             }
@@ -1130,7 +1212,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     drain_held(
                         now, &mut held, adm, &mut router, &routable, &mut outstanding,
                         &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
-                        &mut heap, &mut seq,
+                        &mut heap, &mut seq, &mut tr,
                     );
                 }
             }
@@ -1208,10 +1290,12 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             // itself lives or dies elsewhere.
                             match side.role(slot) {
                                 ORPHAN => {
+                                    tr.terminal(slot as usize, now, "hedge-lost");
                                     traces.remove(slot);
                                     continue;
                                 }
                                 GHOST => {
+                                    tr.terminal(slot as usize, now, "hedge-lost");
                                     side.detach_partner(slot, false);
                                     traces.remove(slot);
                                     continue;
@@ -1224,6 +1308,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                     // The primary died but its hedged shadow
                                     // is alive on another replica: the shadow
                                     // becomes the request.
+                                    tr.terminal(slot as usize, now, "failed-over");
                                     side.promote(g, side.attempts[slot as usize]);
                                     side.links[slot as usize] = NO_LINK;
                                     traces.remove(slot);
@@ -1240,6 +1325,18 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                         traces.get_mut(slot).arrival_s + pol.deadline_s;
                                     if now + delay <= deadline {
                                         side.attempts[slot as usize] = made + 1;
+                                        if tr.is_traced(slot as usize) {
+                                            tr.event(
+                                                slot as usize,
+                                                "retry_scheduled",
+                                                now,
+                                                vec![
+                                                    ("attempt", Attr::U(made as u64 + 1)),
+                                                    ("delay_s", Attr::F(delay)),
+                                                ],
+                                            );
+                                        }
+                                        tr.phase(slot as usize, "retry_wait", now);
                                         push(&mut heap, now + delay, Event::Retry { slot }, &mut seq);
                                         terminal = None;
                                     } else {
@@ -1248,6 +1345,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                 }
                             }
                             if let Some(reason) = terminal {
+                                tr.terminal(slot as usize, now, reason.label());
                                 let mut trace = traces.remove(slot);
                                 ingress::drop_trace(
                                     &mut trace,
@@ -1264,6 +1362,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                         &mut tenant_of,
                                         &mut classes,
                                         &mut side,
+                                        &mut tr,
                                         &mut rng_loop,
                                         &mut seq,
                                     );
@@ -1277,7 +1376,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             Some(adm) => drain_held(
                                 now, &mut held, adm, &mut router, &routable, &mut outstanding,
                                 &mut replicas, &upcoming_recovers, &mut traces, &mut collector, &mut classes,
-                                &mut heap, &mut seq,
+                                &mut heap, &mut seq, &mut tr,
                             ),
                             None => {
                                 if routable.is_empty()
@@ -1286,6 +1385,11 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                 {
                                     let stranded: Vec<u32> = held.drain_fifo().collect();
                                     for slot in stranded {
+                                        tr.terminal(
+                                            slot as usize,
+                                            now,
+                                            DropReason::RejectedPlacement.label(),
+                                        );
                                         let mut trace = traces.remove(slot);
                                         ingress::drop_trace(
                                             &mut trace,
@@ -1301,6 +1405,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                                 &mut tenant_of,
                                                 &mut classes,
                                                 &mut side,
+                                                &mut tr,
                                                 &mut rng_loop,
                                                 &mut seq,
                                             );
@@ -1319,6 +1424,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 // retried e2e latency keeps the original arrival.
                 if routable.is_empty() {
                     if capacity_pending(&replicas, &upcoming_recovers) {
+                        tr.phase(slot as usize, "held", now);
                         match admission.as_mut() {
                             None => held.push_fifo(slot),
                             Some(adm) => {
@@ -1328,6 +1434,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             }
                         }
                     } else {
+                        tr.terminal(slot as usize, now, DropReason::RejectedPlacement.label());
                         let mut trace = traces.remove(slot);
                         ingress::drop_trace(
                             &mut trace,
@@ -1344,6 +1451,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                                 &mut tenant_of,
                                 &mut classes,
                                 &mut side,
+                                &mut tr,
                                 &mut rng_loop,
                                 &mut seq,
                             );
@@ -1353,6 +1461,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 }
                 let ri = router.route_among(now, &routable, &outstanding);
                 if replicas[ri].queued >= replicas[ri].max_queue {
+                    tr.terminal(slot as usize, now, DropReason::QueueFull.label());
                     let mut trace = traces.remove(slot);
                     ingress::drop_trace(
                         &mut trace,
@@ -1369,6 +1478,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                             &mut tenant_of,
                             &mut classes,
                             &mut side,
+                            &mut tr,
                             &mut rng_loop,
                             &mut seq,
                         );
@@ -1376,6 +1486,10 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     continue;
                 }
                 let pol = config.retry.expect("Retry events exist only with a retry policy");
+                if tr.is_traced(slot as usize) {
+                    tr.event(slot as usize, "route", now, vec![("replica", Attr::U(ri as u64))]);
+                }
+                tr.phase(slot as usize, "batch_wait", now);
                 // Hedge: snapshot the trace before staging so both copies
                 // charge their own arrival→now gap.
                 let ghost =
@@ -1392,7 +1506,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                 outstanding[ri] += 1;
                 match d {
                     Decision::Dispatch(_) => {
-                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut traces)
+                        start_batch(ri, &mut replicas[ri], now, &mut heap, &mut seq, &mut tr, &mut traces)
                     }
                     Decision::WakeAt(t) => {
                         push(&mut heap, t, Event::Wake { replica: ri, scheduled_for: t }, &mut seq)
@@ -1416,6 +1530,23 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                     if let Some(gi) = second {
                         let gslot = traces.insert(g);
                         side.make_ghost(gslot, slot);
+                        if tr.full_detail() && tr.is_traced(slot as usize) {
+                            // The hedged shadow gets its own span tree,
+                            // linked under the primary attempt's root.
+                            let rid = traces.get_mut(gslot).id;
+                            tr.arrival(gslot as usize, rid, now);
+                            tr.link(slot as usize, gslot as usize);
+                            tr.attr(gslot as usize, "hedge", Attr::U(1));
+                            if tr.is_traced(gslot as usize) {
+                                tr.event(
+                                    gslot as usize,
+                                    "route",
+                                    now,
+                                    vec![("replica", Attr::U(gi as u64))],
+                                );
+                            }
+                            tr.phase(gslot as usize, "batch_wait", now);
+                        }
                         let r = &mut replicas[gi];
                         let d = ingress::stage_into_batcher(
                             traces.get_mut(gslot),
@@ -1428,7 +1559,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
                         outstanding[gi] += 1;
                         match d {
                             Decision::Dispatch(_) => start_batch(
-                                gi, &mut replicas[gi], now, &mut heap, &mut seq, &mut traces,
+                                gi, &mut replicas[gi], now, &mut heap, &mut seq, &mut tr, &mut traces,
                             ),
                             Decision::WakeAt(t) => push(
                                 &mut heap,
@@ -1487,6 +1618,7 @@ pub fn run(config: &ClusterConfig) -> ClusterResult {
         issued: next_id,
         downtime_s,
         events,
+        trace: tr.finish(gauges),
     }
 }
 

@@ -273,6 +273,18 @@ impl TokenBucket {
         TokenBucket { tokens: burst, last_s: 0.0, rate, burst }
     }
 
+    /// Current token level at `now` — a pure read for the gauge
+    /// timelines (`obs`): same refill arithmetic as `admit`, but the
+    /// bucket state is untouched, so observing a level can never
+    /// change a later admission verdict. Unlimited buckets read as
+    /// infinite (the gauge layer skips them).
+    fn level(&self, now: f64) -> f64 {
+        if self.rate.is_infinite() {
+            return f64::INFINITY;
+        }
+        (self.tokens + (now - self.last_s) * self.rate).min(self.burst)
+    }
+
     /// Spend one token at `now` if available.
     fn admit(&mut self, now: f64) -> bool {
         if self.rate.is_infinite() {
@@ -334,6 +346,17 @@ impl Admission {
 
     pub(super) fn class_of(&self, tenant: usize) -> u8 {
         self.classes[tenant]
+    }
+
+    /// Tenant count — the gauge timeline's iteration bound.
+    pub(super) fn n_tenants(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Pure read of tenant `tenant`'s token-bucket level at `now` (see
+    /// [`TokenBucket::level`]). Infinite for unlimited tenants.
+    pub(super) fn bucket_level(&self, tenant: usize, now: f64) -> f64 {
+        self.buckets[tenant].level(now)
     }
 
     /// Admit or shed a class-tagged arrival. `in_system` is the live
@@ -616,6 +639,30 @@ mod tests {
         assert_eq!(adm.admit(100.0, 0, 0), None);
         assert_eq!(adm.admit(100.0, 0, 0), None);
         assert_eq!(adm.admit(100.0, 0, 0), Some(DropReason::Shed));
+    }
+
+    #[test]
+    fn bucket_level_is_a_pure_read() {
+        let cfg = AdmissionConfig {
+            tenants: vec![
+                TenantSpec::new("limited").with_rate(10.0, 2.0),
+                TenantSpec::new("unlimited"),
+            ],
+            shed_depth: vec![1000],
+        };
+        let mut adm = Admission::new(&cfg);
+        assert_eq!(adm.n_tenants(), 2);
+        assert_eq!(adm.bucket_level(0, 0.0), 2.0, "bucket starts full");
+        assert!(adm.bucket_level(1, 0.0).is_infinite());
+        // Observing the level must never change a later verdict.
+        for _ in 0..10 {
+            let _ = adm.bucket_level(0, 0.0);
+        }
+        assert_eq!(adm.admit(0.0, 0, 0), None);
+        assert_eq!(adm.admit(0.0, 0, 0), None);
+        assert_eq!(adm.admit(0.0, 0, 0), Some(DropReason::Shed));
+        // And the level tracks refill between observations.
+        assert_eq!(adm.bucket_level(0, 0.05), 0.5);
     }
 
     #[test]

@@ -92,6 +92,7 @@ use crate::metrics::{
     ClassMetrics, Collector, DropReason, MetricsMode, ModelMetrics, PlacementEventKind,
     PlacementTimeline, ReplicaMetrics, RequestTrace, Stage, TraceStore,
 };
+use crate::obs::{Attr, TraceConfig, TraceOutput, TraceRecorder};
 use crate::pipeline::RequestPath;
 use crate::util::rng::Pcg64;
 use crate::workload::{MergedSource, Pattern, StreamSpec};
@@ -250,6 +251,11 @@ pub struct MultiModelResult {
     pub downtime_s: f64,
     /// Discrete events processed by the simulation loop.
     pub events: u64,
+    /// Span trees and gauge timelines when the run was traced
+    /// ([`run_traced`] with an enabled [`TraceConfig`]); `None` on the
+    /// untraced path. Purely observational: present or absent, every
+    /// other field of the result is bit-identical (`tests/obs.rs`).
+    pub trace: Option<TraceOutput>,
 }
 
 impl MultiModelResult {
@@ -374,12 +380,15 @@ fn drop_slot(
     slot: u32,
     model: usize,
     reason: DropReason,
+    now: f64,
+    tr: &mut TraceRecorder,
     replica: Option<&mut ReplicaMetrics>,
     traces: &mut TraceStore,
     model_metrics: &mut [ModelMetrics],
     classes: &mut [ClassMetrics],
     collector: &mut Collector,
 ) {
+    tr.terminal(slot as usize, now, reason.label());
     let mut trace = traces.remove(slot);
     match replica {
         Some(r) => ingress::drop_trace(
@@ -465,6 +474,7 @@ fn start_batch(
     now: f64,
     heap: &mut Heap,
     seq: &mut u64,
+    tr: &mut TraceRecorder,
     traces: &mut TraceStore,
 ) {
     let b = r.hosted[hi].batcher.ready().len();
@@ -509,6 +519,11 @@ fn start_batch(
         // Batching stage: enqueue -> service start.
         trace.record_stage(Stage::Batching, now - q.enqueue_s);
         h.in_flight.push((q.id as u32, now, q.enqueue_s));
+        tr.phase(q.id as usize, "service", now);
+        if tr.full_detail() && tr.is_traced(q.id as usize) {
+            tr.phase_attr(q.id as usize, "replica", Attr::U(ri as u64));
+            tr.phase_attr(q.id as usize, "batch_size", Attr::U(b as u64));
+        }
     }
     h.busy = true;
     let epoch = h.epoch;
@@ -535,6 +550,7 @@ fn evict_model(
     routable: &mut [Vec<usize>],
     outstanding: &mut [Vec<usize>],
     held: &mut [HeldQueue],
+    tr: &mut TraceRecorder,
     traces: &mut TraceStore,
     model_metrics: &mut [ModelMetrics],
     classes: &mut [ClassMetrics],
@@ -548,6 +564,8 @@ fn evict_model(
             q.id as u32,
             m,
             DropReason::EvictedBacklog,
+            now,
+            tr,
             Some(&mut replicas[ri].metrics),
             traces,
             model_metrics,
@@ -575,6 +593,8 @@ fn evict_model(
                 slot,
                 m,
                 DropReason::EvictedBacklog,
+                now,
+                tr,
                 None,
                 traces,
                 model_metrics,
@@ -612,6 +632,7 @@ fn route_and_stage(
     routable: &[Vec<usize>],
     outstanding: &mut [Vec<usize>],
     replicas: &mut [Replica],
+    tr: &mut TraceRecorder,
     traces: &mut TraceStore,
     model_metrics: &mut [ModelMetrics],
     classes: &mut [ClassMetrics],
@@ -627,6 +648,8 @@ fn route_and_stage(
             slot,
             m,
             DropReason::QueueFull,
+            now,
+            tr,
             Some(&mut replicas[ri].metrics),
             traces,
             model_metrics,
@@ -635,6 +658,10 @@ fn route_and_stage(
         );
         return;
     }
+    if tr.is_traced(slot as usize) {
+        tr.event(slot as usize, "route", now, vec![("replica", Attr::U(ri as u64))]);
+    }
+    tr.phase(slot as usize, "batch_wait", now);
     let r = &mut replicas[ri];
     let decision = {
         let h = &mut r.hosted[hi];
@@ -653,6 +680,7 @@ fn route_and_stage(
             now,
             heap,
             seq,
+            tr,
             traces,
         ),
         Decision::WakeAt(t) => push(
@@ -667,6 +695,15 @@ fn route_and_stage(
 
 /// Run the multi-model cluster simulation.
 pub fn run(config: &MultiModelConfig) -> MultiModelResult {
+    run_traced(config, &TraceConfig::off())
+}
+
+/// Run the multi-model cluster simulation with tracing. With
+/// `TraceConfig::off()` this is exactly [`run`]; with tracing enabled
+/// every field of the result except `trace` is bit-identical — the
+/// recorder only observes state at existing decision points and never
+/// touches an RNG stream or the event heap (`tests/obs.rs`).
+pub fn run_traced(config: &MultiModelConfig, tcfg: &TraceConfig) -> MultiModelResult {
     assert!(!config.models.is_empty(), "multimodel needs at least one model");
     assert!(!config.replicas.is_empty(), "multimodel needs at least one replica");
     assert!(config.contention.window_s > 0.0, "contention window must be positive");
@@ -830,6 +867,13 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
     let mut attempts: Vec<u32> = Vec::new();
     let mut downtime_s = 0.0f64;
 
+    // Observability (obs): passive span/gauge recorders. Every hook
+    // below reads engine state at an existing decision point — nothing
+    // here pushes events, consumes sequence numbers, or draws
+    // randomness, so the traced run replays bit-identically.
+    let mut tr = TraceRecorder::new(tcfg);
+    let mut gauges = tcfg.gauge_recorder();
+
     let mut events = 0u64;
     loop {
         // Inject every merged arrival due at or before the next event (all
@@ -857,6 +901,8 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
             trace.record_stage(Stage::Transmission, tx);
             let enqueue_at = trace.completed_s;
             let slot = traces.insert(trace);
+            tr.arrival(slot as usize, a.id, a.time_s);
+            tr.phase(slot as usize, "pre_tx", a.time_s);
             if retry_on {
                 // The single point where a slot becomes a fresh request:
                 // reset its attempt count here, nowhere else, so held or
@@ -878,6 +924,27 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
         }
         let Some(Reverse((Key(now, _), EventBox(event)))) = heap.pop() else { break };
         events += 1;
+        if gauges.due(now) {
+            let n = gauges.begin(now);
+            gauges.record("heap_depth", heap.len() as f64, n);
+            for m in 0..n_models {
+                gauges.record_indexed("held", m, held[m].len() as f64, n);
+                gauges.record_indexed("routable", m, routable[m].len() as f64, n);
+            }
+            for (i, r) in replicas.iter().enumerate() {
+                let queued: usize = r.hosted.iter().map(|h| h.queued).sum();
+                gauges.record_indexed("queued", i, queued as f64, n);
+                gauges.record_indexed("used_bytes", i, r.used_bytes as f64, n);
+            }
+            if let Some(adm) = &admission {
+                for t in 0..adm.n_tenants() {
+                    let level = adm.bucket_level(t, now);
+                    if level.is_finite() {
+                        gauges.record_indexed("bucket_level", t, level, n);
+                    }
+                }
+            }
+        }
         match event {
             Event::Enqueue { slot, model } => {
                 let m = model as usize;
@@ -893,6 +960,8 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                             slot,
                             m,
                             reason,
+                            now,
+                            &mut tr,
                             None,
                             &mut traces,
                             &mut model_metrics,
@@ -901,18 +970,32 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                         );
                         continue;
                     }
+                    if tr.is_traced(slot as usize) {
+                        tr.event(
+                            slot as usize,
+                            "admission",
+                            now,
+                            vec![
+                                ("verdict", Attr::S("admitted".to_string())),
+                                ("tenant", Attr::U(m as u64)),
+                            ],
+                        );
+                    }
                 }
                 if routable[m].is_empty() {
                     // No replica hosts this model right now: hold while a
                     // load (or a crashed host's recovery) is in progress,
                     // otherwise reject — nothing will ever serve it.
                     if capacity_pending_for(m, &replicas, &upcoming_recovers) {
+                        tr.phase(slot as usize, "held", now);
                         held[m].push_fifo(slot);
                     } else {
                         drop_slot(
                             slot,
                             m,
                             DropReason::RejectedPlacement,
+                            now,
+                            &mut tr,
                             None,
                             &mut traces,
                             &mut model_metrics,
@@ -931,6 +1014,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     &routable,
                     &mut outstanding,
                     &mut replicas,
+                    &mut tr,
                     &mut traces,
                     &mut model_metrics,
                     &mut classes,
@@ -958,6 +1042,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                         now,
                         &mut heap,
                         &mut seq,
+                        &mut tr,
                         &mut traces,
                     ),
                     Decision::WakeAt(t) => push(
@@ -987,6 +1072,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     trace.record_stage(Stage::Inference, now - started + overhead);
                     let (_, _, post) = config.path.sample(&mut rng_loop);
                     trace.record_stage(Stage::PostProcess, post);
+                    tr.terminal(slot as usize, trace.completed_s, "completed");
                     router.observe(m, ri, now - enqueued + overhead);
                     replicas[ri].metrics.collector.ingest(&trace);
                     model_metrics[m].collector.ingest(&trace);
@@ -1008,6 +1094,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                             now,
                             &mut heap,
                             &mut seq,
+                            &mut tr,
                             &mut traces,
                         ),
                         Decision::WakeAt(t) => push(
@@ -1059,6 +1146,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                 &routable,
                                 &mut outstanding,
                                 &mut replicas,
+                                &mut tr,
                                 &mut traces,
                                 &mut model_metrics,
                                 &mut classes,
@@ -1123,6 +1211,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                     &mut routable,
                                     &mut outstanding,
                                     &mut held,
+                                    &mut tr,
                                     &mut traces,
                                     &mut model_metrics,
                                     &mut classes,
@@ -1181,6 +1270,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                 &mut routable,
                                 &mut outstanding,
                                 &mut held,
+                                &mut tr,
                                 &mut traces,
                                 &mut model_metrics,
                                 &mut classes,
@@ -1296,6 +1386,18 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                             Event::Retry { slot, model: m as u32 },
                                             &mut seq,
                                         );
+                                        if tr.is_traced(slot as usize) {
+                                            tr.event(
+                                                slot as usize,
+                                                "retry_scheduled",
+                                                now,
+                                                vec![
+                                                    ("attempt", Attr::U((made + 1) as u64)),
+                                                    ("delay_s", Attr::F(delay)),
+                                                ],
+                                            );
+                                        }
+                                        tr.phase(slot as usize, "retry_wait", now);
                                         terminal = None;
                                     } else {
                                         terminal = Some(DropReason::TimedOut);
@@ -1307,6 +1409,8 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                     slot,
                                     m,
                                     reason,
+                                    now,
+                                    &mut tr,
                                     Some(&mut replicas[ri].metrics),
                                     &mut traces,
                                     &mut model_metrics,
@@ -1328,6 +1432,8 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                                         slot,
                                         m,
                                         DropReason::ReplicaFailed,
+                                        now,
+                                        &mut tr,
                                         None,
                                         &mut traces,
                                         &mut model_metrics,
@@ -1348,12 +1454,15 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                 // latency keeps the original arrival.
                 if routable[m].is_empty() {
                     if capacity_pending_for(m, &replicas, &upcoming_recovers) {
+                        tr.phase(slot as usize, "held", now);
                         held[m].push_fifo(slot);
                     } else {
                         drop_slot(
                             slot,
                             m,
                             DropReason::RejectedPlacement,
+                            now,
+                            &mut tr,
                             None,
                             &mut traces,
                             &mut model_metrics,
@@ -1372,6 +1481,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
                     &routable,
                     &mut outstanding,
                     &mut replicas,
+                    &mut tr,
                     &mut traces,
                     &mut model_metrics,
                     &mut classes,
@@ -1445,6 +1555,7 @@ pub fn run(config: &MultiModelConfig) -> MultiModelResult {
         issued,
         downtime_s,
         events,
+        trace: tr.finish(gauges),
     }
 }
 

@@ -34,6 +34,7 @@
 //! paper's two-tier scheduler extended down to intra-job parallelism.
 
 use crate::metrics::{ClassMetrics, Collector};
+use crate::obs::TraceConfig;
 use crate::serving::cluster::{self, ClusterConfig, ClusterResult};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -175,11 +176,28 @@ impl SweepCell {
 pub struct SweepPlan {
     seed: u64,
     cells: Vec<SweepCell>,
+    /// Per-cell tracing (obs). Observational only: every cell's
+    /// non-`trace` result fields are bit-identical with tracing on or
+    /// off, at any thread count (`tests/obs.rs`).
+    trace: TraceConfig,
 }
 
 impl SweepPlan {
     pub fn new(seed: u64) -> SweepPlan {
-        SweepPlan { seed, cells: Vec::new() }
+        SweepPlan { seed, cells: Vec::new(), trace: TraceConfig::off() }
+    }
+
+    /// Enable per-cell tracing: every cell runs through
+    /// [`cluster::run_traced`] with this config. Plan construction and
+    /// cell seeds are unaffected.
+    pub fn with_trace(mut self, trace: TraceConfig) -> SweepPlan {
+        self.trace = trace;
+        self
+    }
+
+    /// Set per-cell tracing in place (for plans built behind `&mut`).
+    pub fn set_trace(&mut self, trace: TraceConfig) {
+        self.trace = trace;
     }
 
     /// Append a cell. Plan order is execution-independent result order.
@@ -222,11 +240,13 @@ impl SweepPlan {
     /// crash — sharding is invisible in the output.
     pub fn run_indices(&self, indices: &[usize], threads: usize) -> Vec<(usize, CellOutcome)> {
         let base = self.seed;
+        let tcfg = &self.trace;
         map_indexed(indices, threads, |_, &i| {
             let cell = &self.cells[i];
             let seed = cell_seed(base, i as u64);
             let config = (cell.build)(seed);
-            (i, CellOutcome { label: cell.label.clone(), seed, result: cluster::run(&config) })
+            let result = cluster::run_traced(&config, tcfg);
+            (i, CellOutcome { label: cell.label.clone(), seed, result })
         })
     }
 
@@ -234,9 +254,10 @@ impl SweepPlan {
     /// in plan order and are bit-identical at any thread count.
     pub fn run(&self, threads: usize) -> SweepOutcome {
         let base = self.seed;
+        let tcfg = &self.trace;
         let results = map_indexed(&self.cells, threads, |i, cell| {
             let config = (cell.build)(cell_seed(base, i as u64));
-            cluster::run(&config)
+            cluster::run_traced(&config, tcfg)
         });
         SweepOutcome {
             cells: results

@@ -65,6 +65,13 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Shared `--trace-out <path>` option: benches that support trace
+    /// export (`obs::TraceSink`) write a Perfetto JSON trace of one
+    /// representative run here. `None` means tracing stays off.
+    pub fn trace_out(&self) -> Option<&str> {
+        self.get("trace-out")
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +108,13 @@ mod tests {
         let a = parse(&["--dry-run", "--out", "x.json"], &[]);
         assert!(a.has_flag("dry-run"));
         assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trace_out_option() {
+        let a = parse(&["--smoke", "--trace-out", "fig17.trace.json"], &["smoke"]);
+        assert_eq!(a.trace_out(), Some("fig17.trace.json"));
+        assert_eq!(parse(&["--smoke"], &["smoke"]).trace_out(), None);
     }
 
     #[test]

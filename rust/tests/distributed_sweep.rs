@@ -146,6 +146,7 @@ fn crashed_follower_cells_are_requeued_bit_identically() {
         codec: CodecKind::Binary,
         chunk_bytes: 97, // deliberately frame-misaligned
         duplicate_first: 0,
+        trace: false,
     };
     let dist = run_sharded(&kind, SEED, &cfg).expect("run survives the crash");
     assert_bit_identical(&serial, &dist.outcome, "crash + re-queue");

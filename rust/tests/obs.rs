@@ -1,0 +1,431 @@
+//! Observability acceptance suite: tracing must be a pure observer.
+//!
+//! The contract (PERF.md §Observability): enabling request spans, gauge
+//! timelines, or both must not perturb a single simulated event — the
+//! traced run's `Collector::fingerprint()` is bit-identical to the
+//! untraced run's, in both DES engines, across the golden scenarios,
+//! under fault injection with hedged retries, and under QoS admission
+//! shedding. On top of invisibility: traced sweeps stay bit-identical
+//! at 1/2/8 threads, span exports are byte-stable across repeated runs
+//! (Perfetto JSON and line-delimited codec frames), and gauge rings
+//! stay bounded under high-rate streaming.
+//!
+//! Complements `tests/golden_determinism.rs` (untraced goldens vs the
+//! preserved reference engine) and the unit suites in `obs::*`.
+
+use inferbench::codec::{Codec as _, CodecKind};
+use inferbench::metrics::MetricsMode;
+use inferbench::obs::{Detail, SampleSpec, TraceConfig, TraceSink};
+use inferbench::pipeline::{Processors, RequestPath};
+use inferbench::serving::autoscale::ScalePolicy;
+use inferbench::serving::cluster::{self, AutoscaleConfig, ClusterConfig, ReplicaConfig};
+use inferbench::serving::multimodel::{
+    self, ContentionModel, ModelSpec, MultiModelConfig, MultiReplicaConfig,
+};
+use inferbench::serving::{
+    backends, AdmissionConfig, FaultOp, FaultPlan, Policy, RetryPolicy, RouterPolicy,
+    ServiceModel, Software, TenantSpec,
+};
+use inferbench::sweep::SweepPlan;
+use inferbench::workload::{Pattern, StreamSpec, Workload};
+
+fn replica(per_req_ms: f64, policy: Policy, software: &'static Software) -> ReplicaConfig {
+    ReplicaConfig {
+        software,
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3), (8, per_req_ms * 2.2 / 1e3)],
+            utilization: 0.6,
+        },
+        policy,
+        max_queue: 100_000,
+    }
+}
+
+fn base(workload: Workload, seed: u64) -> ClusterConfig {
+    let dynamic = Policy::Dynamic { max_size: 8, max_wait_s: 0.003 };
+    ClusterConfig {
+        workload,
+        duration_s: 12.0,
+        replicas: vec![
+            replica(3.0, dynamic, &backends::TRIS),
+            replica(5.0, dynamic, &backends::TFS),
+        ],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: None,
+        cold_start: None,
+        path: RequestPath::local(Processors::image()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: None,
+        retry: None,
+        seed,
+    }
+}
+
+/// The four golden scenarios from `tests/golden_determinism.rs`, minus
+/// the router loop: fixed heterogeneous fleet, autoscale spike,
+/// closed-loop rejections, fixed-batch with image pipeline.
+fn golden_scenarios() -> Vec<(&'static str, ClusterConfig)> {
+    let dynamic = Policy::Dynamic { max_size: 8, max_wait_s: 0.003 };
+    let mut fleet = base(
+        Workload::Stream { pattern: Pattern::Poisson { rate: 300.0 }, seed: 31 },
+        31,
+    );
+    fleet.duration_s = 20.0;
+    fleet.replicas = vec![
+        replica(3.0, dynamic, &backends::TRIS),
+        replica(5.0, dynamic, &backends::TFS),
+        replica(9.0, dynamic, &backends::ONNX_FASTAPI),
+    ];
+
+    let spike = ClusterConfig {
+        workload: Workload::Stream {
+            pattern: Pattern::Spike {
+                base_rate: 80.0,
+                burst_rate: 500.0,
+                start_s: 10.0,
+                duration_s: 8.0,
+            },
+            seed: 77,
+        },
+        duration_s: 40.0,
+        replicas: vec![replica(5.0, Policy::Single, &backends::TFS)],
+        router: RouterPolicy::LeastOutstanding,
+        autoscale: Some(AutoscaleConfig {
+            policy: ScalePolicy::QueueDepth {
+                up_per_replica: 6.0,
+                down_per_replica: 0.5,
+                cooldown_s: 1.0,
+            },
+            min_replicas: 1,
+            max_replicas: 6,
+            template: replica(5.0, Policy::Single, &backends::TFS),
+            weight_bytes: 50_000_000,
+            eval_interval_s: 0.5,
+        }),
+        cold_start: None,
+        path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: None,
+        retry: None,
+        seed: 77,
+    };
+
+    let mut closed = base(Workload::ClosedLoop { clients: 6 }, 13);
+    closed.duration_s = 8.0;
+    closed.replicas = vec![
+        ReplicaConfig { max_queue: 2, ..replica(4.0, Policy::Single, &backends::TRIS) },
+        ReplicaConfig { max_queue: 2, ..replica(4.0, Policy::Single, &backends::TRIS) },
+    ];
+    closed.path = RequestPath::local(Processors::none());
+
+    let mut fixed = base(
+        Workload::Stream { pattern: Pattern::Uniform { rate: 120.0 }, seed: 5 },
+        9,
+    );
+    fixed.duration_s = 15.0;
+    fixed.replicas = vec![replica(6.0, Policy::Fixed { size: 4, timeout_s: 0.02 }, &backends::TFS)];
+    fixed.router = RouterPolicy::RoundRobin;
+
+    vec![
+        ("fixed-fleet", fleet),
+        ("autoscale-spike", spike),
+        ("closed-loop-rejections", closed),
+        ("fixed-batch-image", fixed),
+    ]
+}
+
+/// Crash-heavy scripted faults plus hedged retries (the hardest tracing
+/// surface: retry/hedge child spans, failover terminals, held phases).
+fn faulty_config(seed: u64) -> ClusterConfig {
+    let mut cfg = base(
+        Workload::Stream { pattern: Pattern::Poisson { rate: 600.0 }, seed },
+        seed,
+    );
+    cfg.faults = Some(FaultPlan::scripted(vec![
+        FaultOp::Crash { replica: 0, at_s: 2.0 },
+        FaultOp::Recover { replica: 0, at_s: 3.5 },
+        FaultOp::Crash { replica: 1, at_s: 4.0 },
+        FaultOp::Recover { replica: 1, at_s: 5.0 },
+        FaultOp::Degrade { replica: 0, at_s: 6.0, until_s: 9.0, factor: 3.0 },
+    ]));
+    cfg.retry = Some(RetryPolicy::new(4, 5.0, 0.05).with_hedge());
+    cfg
+}
+
+/// Two-class QoS scenario where admission sheds bronze mid-run (mirrors
+/// `tests/qos.rs`): tracing must not perturb the shed decisions either.
+fn qos_config(seed: u64) -> ClusterConfig {
+    let streams = vec![
+        StreamSpec::new("gold", Pattern::Poisson { rate: 120.0 }).with_qos(0, 2.0),
+        StreamSpec::new(
+            "bronze",
+            Pattern::Spike { base_rate: 40.0, burst_rate: 700.0, start_s: 4.0, duration_s: 8.0 },
+        )
+        .with_qos(1, 1.0),
+    ];
+    let mut cfg = base(Workload::Streams { streams, seed }, seed);
+    cfg.admission = Some(AdmissionConfig {
+        tenants: vec![
+            TenantSpec::new("gold").with_class(0).with_weight(2.0),
+            TenantSpec::new("bronze").with_class(1).with_rate(60.0, 12.0),
+        ],
+        shed_depth: vec![5_000, 60],
+    });
+    cfg
+}
+
+fn mm_config(seed: u64) -> MultiModelConfig {
+    let model = |name: &str, per_req_ms: f64, rate: f64| ModelSpec {
+        name: name.into(),
+        service: ServiceModel::Measured {
+            per_batch: vec![(1, per_req_ms / 1e3)],
+            utilization: 0.6,
+        },
+        policy: Policy::Single,
+        weight_bytes: 400_000_000,
+        max_queue: 200_000,
+        pattern: Pattern::Poisson { rate },
+    };
+    MultiModelConfig {
+        models: vec![model("a", 5.0, 120.0), model("b", 3.0, 90.0)],
+        replicas: (0..2)
+            .map(|_| MultiReplicaConfig {
+                software: &backends::TRIS,
+                mem_bytes: 2_000_000_000,
+                hosted: vec![0, 1],
+            })
+            .collect(),
+        router: RouterPolicy::LeastOutstanding,
+        duration_s: 12.0,
+        placement_ops: vec![],
+        contention: ContentionModel::default(),
+        path: RequestPath::local(Processors::none()),
+        metrics: MetricsMode::Exact,
+        admission: None,
+        faults: None,
+        retry: None,
+        seed,
+    }
+}
+
+fn assert_invisible(label: &str, cfg: &ClusterConfig) {
+    let plain = cluster::run(cfg);
+    let traced = cluster::run_traced(cfg, &TraceConfig::full());
+    assert!(plain.trace.is_none(), "{label}: untraced run must carry no trace");
+    assert_eq!(
+        plain.collector.fingerprint(),
+        traced.collector.fingerprint(),
+        "{label}: tracing perturbed the simulation"
+    );
+    assert_eq!(plain.events, traced.events, "{label}: event count diverged");
+    assert_eq!(plain.issued, traced.issued, "{label}");
+    assert_eq!(plain.dropped, traced.dropped, "{label}");
+    assert_eq!(plain.replicas.len(), traced.replicas.len(), "{label}");
+    let out = traced.trace.expect("full tracing must produce output");
+    assert!(!out.spans.is_empty(), "{label}: no spans recorded");
+    assert!(!out.gauges.is_empty(), "{label}: no gauge series recorded");
+    // Every root is a request span with a terminal outcome; every child
+    // points at a live parent.
+    for s in &out.spans {
+        match s.parent {
+            None => {
+                assert_eq!(s.name, "request", "{label}: unexpected root {}", s.name);
+                assert!(
+                    s.attrs.iter().any(|(k, _)| k == "outcome"),
+                    "{label}: request span without outcome"
+                );
+                assert!(s.end_s >= s.start_s, "{label}: inverted span");
+            }
+            Some(p) => assert!((p as usize) < out.spans.len(), "{label}: dangling parent"),
+        }
+    }
+}
+
+/// Pillar 1+2, cluster engine: full tracing (all requests, full detail,
+/// gauges) is bit-invisible on every golden scenario.
+#[test]
+fn tracing_is_invisible_on_the_golden_scenarios() {
+    for (label, cfg) in golden_scenarios() {
+        assert_invisible(label, &cfg);
+    }
+}
+
+/// Tracing invisibility must survive the hardest request-path surfaces:
+/// crash scripts with hedged retries, and QoS admission shedding.
+#[test]
+fn tracing_is_invisible_under_faults_retries_and_qos_admission() {
+    assert_invisible("faults-hedged-retry", &faulty_config(902));
+    assert_invisible("qos-shedding", &qos_config(903));
+
+    // The fault scenario must actually exercise retry/hedge span trees:
+    // with full detail some request roots are re-parented under the
+    // attempt that spawned them.
+    let traced = cluster::run_traced(&faulty_config(902), &TraceConfig::full());
+    let out = traced.trace.unwrap();
+    let linked = out
+        .spans
+        .iter()
+        .filter(|s| s.name == "request" && s.parent.is_some())
+        .count();
+    assert!(linked > 0, "crash+hedge run produced no linked attempt spans");
+}
+
+/// Pillar 1+2, multimodel engine: same invisibility contract.
+#[test]
+fn multimodel_tracing_is_invisible() {
+    let cfg = mm_config(44);
+    let plain = multimodel::run(&cfg);
+    let traced = multimodel::run_traced(&cfg, &TraceConfig::full());
+    assert!(plain.trace.is_none());
+    assert_eq!(plain.collector.fingerprint(), traced.collector.fingerprint());
+    assert_eq!(plain.events, traced.events);
+    assert_eq!(plain.issued, traced.issued);
+    assert_eq!(plain.dropped, traced.dropped);
+    assert_eq!(plain.downtime_s.to_bits(), traced.downtime_s.to_bits());
+    for (a, b) in plain.models.iter().zip(&traced.models) {
+        assert_eq!(a.issued, b.issued, "{}", a.name);
+        assert_eq!(a.collector.fingerprint(), b.collector.fingerprint(), "{}", a.name);
+    }
+    let out = traced.trace.expect("full tracing must produce output");
+    assert!(!out.spans.is_empty());
+    assert!(!out.gauges.is_empty());
+}
+
+/// A traced sweep (goldens + faults in one grid) is bit-identical at
+/// 1/2/8 threads AND bit-identical to the untraced sweep of the same
+/// grid — tracing adds no thread-sensitive or cross-cell state.
+#[test]
+fn traced_sweep_bit_identical_at_1_2_8_threads_and_to_untraced() {
+    fn make_plan() -> SweepPlan {
+        let mut plan = SweepPlan::new(6100);
+        plan.push("golden-fleet", |seed| {
+            let mut cfg = golden_scenarios().remove(0).1;
+            cfg.duration_s = 8.0;
+            cfg.seed = seed;
+            cfg
+        });
+        plan.push("faulty-hedged", faulty_config);
+        plan.push("qos-shed", qos_config);
+        plan
+    }
+    let untraced = make_plan().run(1);
+    let plan = make_plan().with_trace(TraceConfig::full());
+    let serial = plan.run(1);
+    assert_eq!(serial.cells.len(), untraced.cells.len());
+    for (a, b) in serial.cells.iter().zip(&untraced.cells) {
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(
+            a.result.collector.fingerprint(),
+            b.result.collector.fingerprint(),
+            "{}: tracing perturbed the sweep cell",
+            a.label
+        );
+        assert_eq!(a.result.events, b.result.events, "{}", a.label);
+        assert!(a.result.trace.is_some(), "{}: traced sweep cell lost its trace", a.label);
+        assert!(b.result.trace.is_none(), "{}: untraced sweep cell grew a trace", a.label);
+    }
+    for threads in [2, 8] {
+        let parallel = plan.run(threads);
+        for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(
+                a.result.collector.fingerprint(),
+                b.result.collector.fingerprint(),
+                "{}: fingerprint diverged at {threads} threads",
+                a.label
+            );
+            assert_eq!(a.result.events, b.result.events, "{}", a.label);
+            let (ta, tb) = (a.result.trace.as_ref().unwrap(), b.result.trace.as_ref().unwrap());
+            assert_eq!(ta.spans.len(), tb.spans.len(), "{}", a.label);
+            assert_eq!(
+                TraceSink::perfetto_string(ta),
+                TraceSink::perfetto_string(tb),
+                "{}: trace export diverged at {threads} threads",
+                a.label
+            );
+        }
+    }
+}
+
+/// Span export is byte-stable: two identical traced runs serialize to
+/// the same Perfetto JSON bytes and the same line-delimited codec
+/// frames, under both head-sampling modes.
+#[test]
+fn span_export_is_byte_stable_across_runs() {
+    for sample in [SampleSpec::EveryNth(7), SampleSpec::Rate(0.2)] {
+        let tcfg = TraceConfig {
+            sample,
+            detail: Detail::Full,
+            gauge_interval_s: Some(0.05),
+            gauge_cap: 512,
+            max_spans: 65_536,
+        };
+        let cfg = faulty_config(314);
+        let a = cluster::run_traced(&cfg, &tcfg).trace.unwrap();
+        let b = cluster::run_traced(&cfg, &tcfg).trace.unwrap();
+        assert!(!a.spans.is_empty(), "{sample:?}: sampling produced no spans");
+        let (ja, jb) = (TraceSink::perfetto_string(&a), TraceSink::perfetto_string(&b));
+        assert_eq!(ja, jb, "{sample:?}: Perfetto export not byte-stable");
+        assert!(ja.contains("traceEvents"));
+
+        let codec = CodecKind::JsonLines.codec();
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        for f in TraceSink::to_frames("requests", &a) {
+            codec.encode(&f, &mut ba);
+        }
+        for f in TraceSink::to_frames("requests", &b) {
+            codec.encode(&f, &mut bb);
+        }
+        assert!(!ba.is_empty());
+        assert_eq!(ba, bb, "{sample:?}: codec frame export not byte-stable");
+        assert_eq!(ba.iter().filter(|&&c| c == b'\n').count(), a.spans.len());
+    }
+    // Sampling prunes: EveryNth(7) keeps strictly fewer roots than All.
+    let cfg = faulty_config(314);
+    let all = cluster::run_traced(&cfg, &TraceConfig::full()).trace.unwrap();
+    let nth = TraceConfig { sample: SampleSpec::EveryNth(7), ..TraceConfig::full() };
+    let sampled = cluster::run_traced(&cfg, &nth).trace.unwrap();
+    let roots = |o: &inferbench::obs::TraceOutput| {
+        o.spans.iter().filter(|s| s.name == "request").count()
+    };
+    assert!(roots(&sampled) > 0);
+    assert!(roots(&sampled) < roots(&all), "EveryNth(7) did not prune the span set");
+}
+
+/// Gauge rings hold the *last* `cap` grid samples under a high-rate
+/// streaming workload: memory stays bounded, older samples are counted
+/// in `dropped`, and the retained window is grid-aligned at the tail.
+#[test]
+fn gauge_rings_stay_bounded_under_high_rate_streaming() {
+    let mut cfg = base(
+        Workload::Stream { pattern: Pattern::Poisson { rate: 2_000.0 }, seed: 55 },
+        55,
+    );
+    cfg.duration_s = 20.0;
+    cfg.path = RequestPath::local(Processors::none());
+    let tcfg = TraceConfig {
+        sample: SampleSpec::Off,
+        detail: Detail::Stages,
+        gauge_interval_s: Some(0.001),
+        gauge_cap: 256,
+        max_spans: 0,
+    };
+    let out = cluster::run_traced(&cfg, &tcfg).trace.expect("gauges alone enable a trace");
+    assert!(out.spans.is_empty(), "SampleSpec::Off must record no request spans");
+    assert!(!out.gauges.is_empty());
+    // ~20_000 grid points against a 256-slot ring: every series is
+    // bounded, the long-lived ones wrapped, and t0 reflects the drop.
+    let mut wrapped = 0;
+    for g in &out.gauges {
+        assert!(g.samples.len() <= 256, "{}: ring overflowed ({})", g.name, g.samples.len());
+        assert_eq!(g.dt.to_bits(), 0.001f64.to_bits(), "{}", g.name);
+        if g.dropped > 0 {
+            wrapped += 1;
+            assert_eq!(g.samples.len(), 256, "{}: wrapped ring must be full", g.name);
+            assert!(g.t0 > 0.0, "{}: wrapped ring must start past the origin", g.name);
+        }
+    }
+    assert!(wrapped > 0, "20s at 1ms grid must wrap a 256-slot ring");
+}
